@@ -1,0 +1,111 @@
+//! CIFAR convergence comparison — Table 3 / Figure 4 in miniature:
+//! sequential SGD (one minibatch = one communication round) vs FedSGD vs
+//! FedAvg(E=5, B=50), with the paper's per-round learning-rate decays.
+//!
+//! ```bash
+//! cargo run --release --example cifar_convergence -- --rounds 40
+//! ```
+
+use fedavg::baselines::sgd::{self, SgdConfig};
+use fedavg::config::{BatchSize, FedConfig};
+use fedavg::exper::cifar_fed;
+use fedavg::federated::{self, ServerOptions};
+use fedavg::runtime::Engine;
+use fedavg::util::args::Args;
+
+fn main() -> fedavg::Result<()> {
+    let args = Args::from_env()?;
+    args.check_known(&["rounds", "scale", "seed", "lr", "target"])?;
+    let rounds = args.usize_or("rounds", 30)?;
+    let scale = args.f64_or("scale", 0.04)?;
+    let seed = args.u64_or("seed", 3)?;
+    let lr = args.f64_or("lr", 0.1)?;
+    let target = args.f64_or("target", 0.5)?;
+
+    let engine = Engine::load(Engine::default_dir())?;
+    let fed = cifar_fed(scale, seed);
+    println!(
+        "== cifar_convergence: {} clients x {} examples ==",
+        fed.num_clients(),
+        fed.total_examples() / fed.num_clients()
+    );
+
+    // sequential SGD baseline: B=100, each update is a "round"
+    let sgd_res = sgd::run(
+        &engine,
+        &fed.train,
+        &fed.test,
+        &SgdConfig {
+            model: "cifar_cnn".into(),
+            batch: 100,
+            lr,
+            lr_decay: 0.9995,
+            updates: rounds * 10,
+            eval_every: rounds.max(4) / 4,
+            target_accuracy: Some(target),
+            seed,
+        },
+        Some(500),
+    )?;
+    println!(
+        "SGD      : best acc {:.3} in {} updates; rounds to {:.0}%: {}",
+        sgd_res.accuracy.best_value().unwrap_or(0.0),
+        sgd_res.updates_run,
+        target * 100.0,
+        fmt(sgd_res.accuracy.rounds_to_target(target)),
+    );
+
+    for (name, cfg) in [
+        (
+            "FedSGD",
+            FedConfig {
+                model: "cifar_cnn".into(),
+                c: 0.1,
+                lr,
+                lr_decay: 0.9934,
+                rounds,
+                target_accuracy: Some(target),
+                seed,
+                ..Default::default()
+            }
+            .fedsgd(),
+        ),
+        (
+            "FedAvg",
+            FedConfig {
+                model: "cifar_cnn".into(),
+                c: 0.1,
+                e: 5,
+                b: BatchSize::Fixed(50),
+                lr,
+                lr_decay: 0.99,
+                rounds,
+                target_accuracy: Some(target),
+                seed,
+                ..Default::default()
+            },
+        ),
+    ] {
+        let opts = ServerOptions {
+            telemetry: Some(fedavg::telemetry::RunWriter::create(
+                "runs",
+                &format!("cifar-{name}"),
+            )?),
+            eval_cap: Some(500),
+            ..Default::default()
+        };
+        let res = federated::run(&engine, &fed, &cfg, opts)?;
+        println!(
+            "{name:<9}: best acc {:.3} in {} rounds; rounds to {:.0}%: {}",
+            res.accuracy.best_value().unwrap_or(0.0),
+            res.rounds_run,
+            target * 100.0,
+            fmt(res.accuracy.rounds_to_target(target)),
+        );
+    }
+    Ok(())
+}
+
+fn fmt(v: Option<f64>) -> String {
+    v.map(|r| format!("{r:.0}")).unwrap_or_else(|| "—".into())
+}

@@ -1,0 +1,67 @@
+//! Learning-rate grid search — the paper's tuning methodology (§3):
+//! multiplicative grid at resolution 10^(1/3), best rate selected by
+//! rounds-to-target, with the interior-optimum sanity check.
+//!
+//! ```bash
+//! cargo run --release --example lr_sweep -- --center 0.3 --points 5
+//! ```
+
+use fedavg::config::{BatchSize, FedConfig, Partition};
+use fedavg::exper::mnist_fed;
+use fedavg::federated::ServerOptions;
+use fedavg::runtime::Engine;
+use fedavg::sweep::{sweep_lr, LrGrid};
+use fedavg::util::args::Args;
+
+fn main() -> fedavg::Result<()> {
+    let args = Args::from_env()?;
+    args.check_known(&["center", "points", "rounds", "scale", "seed", "target", "model"])?;
+    let center = args.f64_or("center", 0.1)?;
+    let points = args.usize_or("points", 5)?;
+    let rounds = args.usize_or("rounds", 20)?;
+    let scale = args.f64_or("scale", 0.05)?;
+    let seed = args.u64_or("seed", 9)?;
+    let target = args.f64_or("target", 0.75)?;
+    let model = args.str_or("model", "mnist_2nn");
+
+    let engine = Engine::load(Engine::default_dir())?;
+    let fed = mnist_fed(scale, Partition::Iid, seed);
+    let base = FedConfig {
+        model,
+        c: 0.1,
+        e: 1,
+        b: BatchSize::Fixed(10),
+        rounds,
+        target_accuracy: Some(target),
+        seed,
+        ..Default::default()
+    };
+    let grid = LrGrid::new(center, 3, points);
+    println!(
+        "sweeping η over {:?} (10^(1/3) grid, paper methodology)",
+        grid.values
+            .iter()
+            .map(|v| format!("{v:.3}"))
+            .collect::<Vec<_>>()
+    );
+
+    let result = sweep_lr(&engine, &fed, &base, &grid, |_lr| ServerOptions {
+        eval_cap: Some(600),
+        ..Default::default()
+    })?;
+
+    println!("\n   η        rounds→{target:.0}%   final acc");
+    for (lr, rtt, fin) in &result.table {
+        println!(
+            "   {lr:<8.4} {:<14} {fin:.4}",
+            rtt.map(|r| format!("{r:.1}")).unwrap_or_else(|| "—".into())
+        );
+    }
+    println!(
+        "\nbest η = {:.4} (final acc {:.4}); optimum interior to grid: {}",
+        result.best_lr,
+        result.best.final_accuracy(),
+        if result.interior { "yes ✓" } else { "NO — widen the grid" }
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: federated-train the MNIST 2NN with FedAvg in ~a minute.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the full public API surface: build a federated dataset,
+//! configure FedAvg (Algorithm 1), run rounds, inspect the learning curve
+//! and communication totals.
+
+use fedavg::config::{BatchSize, FedConfig, Partition};
+use fedavg::exper::mnist_fed;
+use fedavg::federated::{self, ServerOptions};
+use fedavg::runtime::Engine;
+
+fn main() -> fedavg::Result<()> {
+    // 1. runtime: load + compile the AOT artifacts (L2 JAX + L1 Pallas)
+    let engine = Engine::load(Engine::default_dir())?;
+
+    // 2. data: synthetic MNIST, 10 clients x 120 examples, IID partition
+    let fed = mnist_fed(0.05, Partition::Iid, 7);
+    println!(
+        "dataset: {} — {} clients, {} train / {} test examples",
+        fed.train.name,
+        fed.num_clients(),
+        fed.train.len(),
+        fed.test.len()
+    );
+
+    // 3. algorithm: FedAvg with C=0.5, E=5 local epochs, B=10
+    let cfg = FedConfig {
+        model: "mnist_2nn".into(),
+        c: 0.5,
+        e: 5,
+        b: BatchSize::Fixed(10),
+        lr: 0.1,
+        rounds: 30,
+        seed: 7,
+        ..Default::default()
+    };
+
+    // 4. run, with telemetry under runs/quickstart/
+    let opts = ServerOptions {
+        telemetry: Some(fedavg::telemetry::RunWriter::create("runs", "quickstart")?),
+        eval_cap: Some(600),
+        ..Default::default()
+    };
+    let res = federated::run(&engine, &fed, &cfg, opts)?;
+
+    // 5. results
+    println!("\nfinal test accuracy: {:.3}", res.final_accuracy());
+    println!(
+        "communication: {:.1} MB up, simulated {:.0}s at 1MB/s uplinks",
+        res.comm.bytes_up as f64 / 1e6,
+        res.comm.sim_seconds
+    );
+    if let Some(r) = res.accuracy.rounds_to_target(0.7) {
+        println!("rounds to 70% accuracy: {r:.1}");
+    }
+    Ok(())
+}

@@ -1,0 +1,104 @@
+"""AOT compiler: lower every model entry point to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` —
+the rust side's xla_extension 0.5.1 rejects jax>=0.5 serialized protos
+(64-bit instruction ids); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs, per model M / entry E:  ``<outdir>/M.E.hlo.txt``
+plus ``<outdir>/manifest.json`` describing shapes/dtypes/param counts for
+the rust runtime, and ``<outdir>/.stamp`` for Makefile freshness.
+
+Usage:  python -m compile.aot --outdir ../artifacts [--models a,b,...]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import MODELS, batch_specs, build_entries
+
+# word_lstm is heavy to lower/compile; excluded from the default set and
+# pulled in by `make artifacts-full` / --models word_lstm when needed.
+DEFAULT_MODELS = ["mnist_2nn", "mnist_cnn", "shakespeare_lstm", "cifar_cnn"]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, outdir: str) -> dict:
+    spec = MODELS[name]
+    param_count, entries = build_entries(spec)
+    meta = {
+        "name": name,
+        "param_count": param_count,
+        "kind": spec.kind,
+        "x_dim": spec.x_dim,
+        "num_classes": spec.num_classes,
+        "step_batches": list(spec.step_batches),
+        "acc_batch": spec.acc_batch,
+        "entries": {},
+    }
+    for entry, (fn, args) in entries.items():
+        t0 = time.time()
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        fname = f"{name}.{entry}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        meta["entries"][entry] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "bytes": len(text),
+        }
+        print(
+            f"  {name}.{entry}: {len(text) / 1e6:.2f} MB "
+            f"({time.time() - t0:.1f}s)"
+        )
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default=",".join(DEFAULT_MODELS),
+        help="comma-separated subset of: " + ",".join(MODELS),
+    )
+    # kept for Makefile compatibility with single-file invocations
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    outdir = os.path.dirname(args.out) if args.out else args.outdir
+    os.makedirs(outdir, exist_ok=True)
+
+    names = [n.strip() for n in args.models.split(",") if n.strip()]
+    manifest = {"models": {}}
+    # merge with any existing manifest so subsets don't clobber other models
+    mpath = os.path.join(outdir, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+    for name in names:
+        print(f"lowering {name} ...")
+        manifest["models"][name] = lower_model(name, outdir)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    with open(os.path.join(outdir, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+    print(f"manifest: {mpath}")
+
+
+if __name__ == "__main__":
+    main()

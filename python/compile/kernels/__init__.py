@@ -1,0 +1,15 @@
+"""L1 Pallas kernels — the compute hot-spot of every model in the zoo.
+
+All kernels are authored for the TPU memory hierarchy (VMEM blocks, MXU-
+shaped tiles) but lowered with ``interpret=True`` so the resulting HLO is
+plain ops executable by the CPU PJRT client the rust runtime uses.  Each
+kernel has a pure-jnp oracle in :mod:`compile.kernels.ref` and is verified
+against it by ``python/tests/test_kernels.py``.
+"""
+
+from compile.kernels.matmul import matmul_fused
+from compile.kernels.elementwise import sgd_update
+from compile.kernels.lstm import lstm_cell
+from compile.kernels.softmax import softmax_xent
+
+__all__ = ["matmul_fused", "sgd_update", "lstm_cell", "softmax_xent"]

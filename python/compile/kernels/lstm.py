@@ -1,0 +1,119 @@
+"""Fused LSTM cell Pallas kernel with custom VJP.
+
+Given the pre-projected gate activations ``z = [x, h] @ W + b`` (computed
+by :func:`compile.kernels.matmul.matmul_fused`), this kernel fuses the
+four gate nonlinearities and the state update into one VMEM pass:
+
+    i = sigmoid(z[:,   0:H])      f = sigmoid(z[:,  H:2H])
+    g = tanh   (z[:, 2H:3H])      o = sigmoid(z[:, 3H:4H])
+    c' = f * c + i * g            h' = o * tanh(c')
+
+Gate layout is [i | f | g | o] along the feature axis (columns of W).
+
+The backward pass recomputes the (cheap, elementwise) gates from the saved
+``(z, c)`` residuals in plain jnp — recompute-over-store, the same trade
+the fused-cell kernels in cuDNN make.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SUBLANE = 8
+
+
+def _rup(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _cell_kernel(z_ref, c_ref, h_ref, cn_ref, *, hidden: int):
+    z = z_ref[...]
+    c = c_ref[...]
+    i = jax.nn.sigmoid(z[:, 0 * hidden : 1 * hidden])
+    f = jax.nn.sigmoid(z[:, 1 * hidden : 2 * hidden])
+    g = jnp.tanh(z[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(z[:, 3 * hidden : 4 * hidden])
+    cn = f * c + i * g
+    h_ref[...] = o * jnp.tanh(cn)
+    cn_ref[...] = cn
+
+
+def _gates(z, c, hidden):
+    i = jax.nn.sigmoid(z[:, 0 * hidden : 1 * hidden])
+    f = jax.nn.sigmoid(z[:, 1 * hidden : 2 * hidden])
+    g = jnp.tanh(z[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(z[:, 3 * hidden : 4 * hidden])
+    cn = f * c + i * g
+    return i, f, g, o, cn
+
+
+@jax.custom_vjp
+def lstm_cell(z, c):
+    """(h', c') from pre-activations z: f32[B, 4H] and cell state c: f32[B, H]."""
+    return _cell_pallas(z, c)
+
+
+def _cell_pallas(z, c):
+    b, h4 = z.shape
+    hidden = h4 // 4
+    assert h4 == 4 * hidden and c.shape == (b, hidden)
+    # Block over batch rows only: each block sees all 4H gate columns so the
+    # i/f/g/o split happens entirely in VMEM.  4H=1024 f32 rows are 4 KiB —
+    # 8-row blocks keep the working set tiny.
+    bb = min(_rup(b, _SUBLANE), 64)
+    bp = _rup(b, bb)
+    zp = jnp.pad(z, ((0, bp - b), (0, 0)))
+    cp = jnp.pad(c, ((0, bp - b), (0, 0)))
+
+    import functools
+
+    h_out, c_out = pl.pallas_call(
+        functools.partial(_cell_kernel, hidden=hidden),
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, h4), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, hidden), jnp.float32),
+            jax.ShapeDtypeStruct((bp, hidden), jnp.float32),
+        ],
+        interpret=True,
+    )(zp, cp)
+    return h_out[:b], c_out[:b]
+
+
+def _cell_fwd(z, c):
+    out = _cell_pallas(z, c)
+    return out, (z, c)
+
+
+def _cell_bwd(res, grads):
+    z, c = res
+    gh, gc = grads
+    hidden = z.shape[1] // 4
+    i, f, g, o, cn = _gates(z, c, hidden)
+    tc = jnp.tanh(cn)
+    do = gh * tc
+    dcn = gc + gh * o * (1.0 - tc * tc)
+    di = dcn * g
+    df = dcn * c
+    dg = dcn * i
+    dc = dcn * f
+    dz = jnp.concatenate(
+        [
+            di * i * (1.0 - i),
+            df * f * (1.0 - f),
+            dg * (1.0 - g * g),
+            do * o * (1.0 - o),
+        ],
+        axis=1,
+    )
+    return dz, dc
+
+
+lstm_cell.defvjp(_cell_fwd, _cell_bwd)

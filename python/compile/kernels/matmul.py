@@ -1,0 +1,158 @@
+"""Fused tiled matmul + bias + activation Pallas kernel with custom VJP.
+
+This is the hot-spot kernel of the whole model zoo: every fully-connected
+layer, every LSTM gate projection, and (via im2col) every convolution in
+the paper's five architectures bottoms out here.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the
+output into ``(bm, bn)`` VMEM blocks with a sequential reduction over
+``bk``-sized K panels — the classic MXU-systolic schedule.  Block sizes
+are capped at 128 (the MXU edge) and adapt downward for small problem
+sizes so the interpret-mode CPU path does not pay padding flops.  The
+K-accumulation happens in the f32 output block itself (revolving in VMEM),
+so no extra scratch is required.
+
+Backward pass is expressed with the *same* kernel (two more tiled matmuls
+for dx and dW), wired up through ``jax.custom_vjp`` because
+``pallas_call`` is not differentiable on its own.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Activation registry: name -> (apply, grad-from-activated-output).
+# The grad form is chosen so the backward pass only needs the *activated*
+# output as residual (never the pre-activation), halving residual memory.
+_ACTS = {
+    "none": (lambda z: z, lambda y: jnp.ones_like(y)),
+    "relu": (lambda z: jnp.maximum(z, 0.0), lambda y: (y > 0.0).astype(y.dtype)),
+    "tanh": (jnp.tanh, lambda y: 1.0 - y * y),
+    "sigmoid": (jax.nn.sigmoid, lambda y: y * (1.0 - y)),
+}
+
+# MXU edge length; tiled blocks never exceed this in any dimension.
+_MXU = 128
+# Sublane quantum: block rows are padded to a multiple of this.
+_SUBLANE = 8
+# Single-block budget: if the whole (padded) problem fits in this many
+# bytes of VMEM (x + w + out blocks, f32), run it as ONE grid step — no
+# K-loop, no revolving output. 12 MiB of a 16 MiB/core VMEM leaves room
+# for the bias row and control. This is the §Perf L1 fix: small matmuls
+# (conv im2col panels, LSTM gate projections) previously paid up to 20x
+# padding waste from forcing 128-edge tiles.
+_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _rup(x: int, m: int) -> int:
+    """Round ``x`` up to a multiple of ``m``."""
+    return ((x + m - 1) // m) * m
+
+
+def _block_shape(m: int, k: int, n: int):
+    """Pick (bm, bk, bn): the largest blocks that fit the VMEM budget.
+
+    Whole-problem single block when it fits (padded to sublane quanta);
+    otherwise repeatedly halve the largest dimension (never below the MXU
+    edge) until the x/w/out working set fits. Maximizing block volume
+    minimizes grid steps — which on TPU means fewer HBM<->VMEM round
+    trips, and on the interpret-mode CPU path means fewer dynamic-slice
+    loop iterations (the §Perf L1 fix).
+    """
+    dims = [_rup(m, _SUBLANE), _rup(k, _SUBLANE), _rup(n, _SUBLANE)]
+
+    def fits(d):
+        return 4 * (d[0] * d[1] + d[1] * d[2] + d[0] * d[2]) <= _VMEM_BUDGET
+
+    while not fits(dims):
+        i = max(range(3), key=lambda j: dims[j])
+        if dims[i] <= _MXU:
+            break  # 3 MXU-edge blocks always fit
+        dims[i] = max(_rup(dims[i] // 2, _SUBLANE), _MXU)
+    return dims[0], dims[1], dims[2]
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, k_steps: int, act: str):
+    """One (i, j, k) grid step: accumulate an MXU panel into the out block."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        apply, _ = _ACTS[act]
+        o_ref[...] = apply(o_ref[...] + b_ref[...])
+
+
+def _matmul_pallas(x, w, b, act: str):
+    """Raw (non-differentiable) fused matmul: act(x @ w + b).
+
+    x: f32[M, K]   w: f32[K, N]   b: f32[N]   ->   f32[M, N]
+    Arbitrary shapes; inputs are zero-padded to block multiples and the
+    output is sliced back.  Zero padding is exact for matmul (rows/cols of
+    zeros contribute nothing) and the bias/activation epilogue only ever
+    lands in the sliced-away region.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul_fused: inner dims {k} != {k2}"
+    assert b.shape == (n,), f"matmul_fused: bias {b.shape} != ({n},)"
+    bm, bk, bn = _block_shape(m, k, n)
+    mp, kp, np_ = _rup(m, bm), _rup(k, bk), _rup(n, bn)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, k_steps=k_steps, act=act),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def matmul_fused(x, w, b, act: str = "none"):
+    """``act(x @ w + b)`` as a single fused Pallas kernel.
+
+    Differentiable w.r.t. ``x``, ``w`` and ``b``; the backward pass reuses
+    the same tiled kernel for the two transposed matmuls.
+    """
+    return _matmul_pallas(x, w, b, act)
+
+
+def _mm_fwd(x, w, b, act):
+    y = _matmul_pallas(x, w, b, act)
+    # Residuals: inputs + *activated* output (enough for every act's grad).
+    return y, (x, w, y)
+
+
+def _mm_bwd(act, res, g):
+    x, w, y = res
+    _, dact = _ACTS[act]
+    dz = g * dact(y)
+    zeros_k = jnp.zeros((x.shape[1],), dtype=x.dtype)
+    zeros_n = jnp.zeros((w.shape[1],), dtype=w.dtype)
+    dx = _matmul_pallas(dz, w.T, zeros_k, "none")
+    dw = _matmul_pallas(x.T, dz, zeros_n, "none")
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+matmul_fused.defvjp(_mm_fwd, _mm_bwd)

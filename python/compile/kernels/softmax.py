@@ -1,0 +1,81 @@
+"""Fused numerically-stable softmax cross-entropy Pallas kernel + VJP.
+
+Per row: ``loss = logsumexp(logits) - logits[label]``, computed in one
+VMEM pass (max, exp-sum, gather fused).  Labels ride along as an int32
+column; out-of-vocab padding labels (-1 or any negative) produce loss 0,
+letting callers express padded batches purely through labels/weights.
+
+Backward: ``d logits = g * (softmax(logits) - onehot(label))`` recomputed
+from the (logits, labels) residuals in plain jnp.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SUBLANE = 8
+_NEG = -1e30
+
+
+def _rup(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _xent_kernel(l_ref, y_ref, o_ref, *, vocab: int):
+    logits = l_ref[...]  # (bb, Vp) — padded cols already hold _NEG
+    y = y_ref[...]  # (bb,)
+    m = jnp.max(logits, axis=1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[:, None]), axis=1))
+    safe_y = jnp.clip(y, 0, vocab - 1)
+    picked = jnp.take_along_axis(logits, safe_y[:, None], axis=1)[:, 0]
+    loss = lse - picked
+    o_ref[...] = jnp.where(y >= 0, loss, 0.0)
+
+
+@jax.custom_vjp
+def softmax_xent(logits, labels):
+    """Per-row cross-entropy loss: f32[R, V], int32[R] -> f32[R]."""
+    return _xent_pallas(logits, labels)
+
+
+def _xent_pallas(logits, labels):
+    r, v = logits.shape
+    assert labels.shape == (r,)
+    bb = min(_rup(r, _SUBLANE), 128)
+    rp = _rup(r, bb)
+    vp = _rup(v, 128)
+    lp = jnp.pad(logits, ((0, rp - r), (0, vp - v)), constant_values=_NEG)
+    # Padded rows get label -1 => loss 0.
+    yp = jnp.pad(labels.astype(jnp.int32), (0, rp - r), constant_values=-1)
+
+    out = pl.pallas_call(
+        functools.partial(_xent_kernel, vocab=v),
+        grid=(rp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, vp), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rp,), jnp.float32),
+        interpret=True,
+    )(lp, yp)
+    return out[:r]
+
+
+def _xent_fwd(logits, labels):
+    return _xent_pallas(logits, labels), (logits, labels)
+
+
+def _xent_bwd(res, g):
+    logits, labels = res
+    v = logits.shape[1]
+    p = jax.nn.softmax(logits, axis=1)
+    valid = labels >= 0
+    onehot = jax.nn.one_hot(jnp.clip(labels, 0, v - 1), v, dtype=logits.dtype)
+    dlogits = (g * valid)[:, None] * (p - onehot)
+    return dlogits, None
+
+
+softmax_xent.defvjp(_xent_fwd, _xent_bwd)

@@ -1,0 +1,134 @@
+"""L2 entry-point builders: model zoo -> the four AOT executables.
+
+For every model the rust coordinator gets:
+
+    init    : (seed i32[])                  -> theta f32[P]
+    step_bB : (theta, x, y, w, lr f32[])    -> theta'            (one SGD step
+              on the weighted-mean loss; padding rows carry w=0)
+    gradacc : (theta, x, y, w)              -> sum_i w_i * grad_i  f32[P]
+              (linear in examples => rust chunk-sums reproduce exact full-
+              batch B=inf gradients for FedSGD at any client size)
+    apply   : (theta, g, lr)                -> theta - lr * g    (Pallas axpy)
+    eval_bB : (theta, x, y, w)              -> f32[3] = (sum w*loss,
+                                                sum w*correct, sum w)
+
+Parameters cross the boundary as ONE flat f32 vector (ravel_pytree), so
+the rust server's averaging math is shape-oblivious.
+"""
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from compile.kernels import sgd_update
+from compile.models import cifar, cnn, lstm_models, mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static description of one model family + its AOT batch capacities."""
+
+    name: str
+    init_fn: Callable
+    loss_fn: Callable  # (params, x, y, w) -> (wloss, wcorrect, wsum)
+    kind: str  # "image" | "tokens"
+    x_dim: int  # feature dim (image) or unroll length T (tokens)
+    num_classes: int  # classes (image) or vocab (tokens)
+    step_batches: Tuple[int, ...]
+    acc_batch: int  # capacity used by gradacc + eval
+
+
+MODELS: Dict[str, ModelSpec] = {
+    "mnist_2nn": ModelSpec(
+        "mnist_2nn", mlp.init, mlp.loss_and_metrics,
+        "image", mlp.INPUT_DIM, 10, (10, 50), 64,
+    ),
+    "mnist_cnn": ModelSpec(
+        "mnist_cnn", cnn.init, cnn.loss_and_metrics,
+        "image", 784, 10, (10, 50), 64,
+    ),
+    "shakespeare_lstm": ModelSpec(
+        "shakespeare_lstm",
+        lstm_models.shakespeare_init,
+        lstm_models.shakespeare_loss_and_metrics,
+        "tokens", lstm_models.CHAR_UNROLL, lstm_models.CHAR_VOCAB, (10, 50), 32,
+    ),
+    "cifar_cnn": ModelSpec(
+        "cifar_cnn", cifar.init, cifar.loss_and_metrics,
+        "image", cifar.INPUT_DIM, 10, (50, 100), 50,
+    ),
+    "word_lstm": ModelSpec(
+        "word_lstm",
+        lstm_models.word_init,
+        lstm_models.word_loss_and_metrics,
+        "tokens", lstm_models.WORD_UNROLL, lstm_models.WORD_VOCAB, (8,), 16,
+    ),
+}
+
+
+def unraveler(spec: ModelSpec):
+    """(param_count, unravel_fn) for a model, built from a throwaway init."""
+    params = spec.init_fn(jax.random.PRNGKey(0))
+    flat, unravel = ravel_pytree(params)
+    return int(flat.size), unravel
+
+
+def batch_specs(spec: ModelSpec, batch: int):
+    """ShapeDtypeStructs for (x, y, w) at a given batch capacity."""
+    if spec.kind == "image":
+        x = jax.ShapeDtypeStruct((batch, spec.x_dim), jnp.float32)
+        y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        w = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    else:
+        t = spec.x_dim
+        x = jax.ShapeDtypeStruct((batch, t), jnp.int32)
+        y = jax.ShapeDtypeStruct((batch, t), jnp.int32)
+        w = jax.ShapeDtypeStruct((batch, t), jnp.float32)
+    return x, y, w
+
+
+def build_entries(spec: ModelSpec):
+    """name -> (fn, example_args) for everything aot.py must lower."""
+    param_count, unravel = unraveler(spec)
+    theta_spec = jax.ShapeDtypeStruct((param_count,), jnp.float32)
+    scalar_f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    scalar_i32 = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def init_fn(seed):
+        params = spec.init_fn(jax.random.PRNGKey(seed))
+        return (ravel_pytree(params)[0],)
+
+    def mean_loss(theta, x, y, w):
+        wloss, _, wsum = spec.loss_fn(unravel(theta), x, y, w)
+        return wloss / jnp.maximum(wsum, 1e-9)
+
+    def sum_loss(theta, x, y, w):
+        wloss, _, _ = spec.loss_fn(unravel(theta), x, y, w)
+        return wloss
+
+    def step_fn(theta, x, y, w, lr):
+        g = jax.grad(mean_loss)(theta, x, y, w)
+        return (sgd_update(theta, g, lr),)
+
+    def gradacc_fn(theta, x, y, w):
+        return (jax.grad(sum_loss)(theta, x, y, w),)
+
+    def apply_fn(theta, g, lr):
+        return (sgd_update(theta, g, lr),)
+
+    def eval_fn(theta, x, y, w):
+        wloss, wcorrect, wsum = spec.loss_fn(unravel(theta), x, y, w)
+        return (jnp.stack([wloss, wcorrect, wsum]),)
+
+    entries = {"init": (init_fn, (scalar_i32,))}
+    for b in spec.step_batches:
+        x, y, w = batch_specs(spec, b)
+        entries[f"step_b{b}"] = (step_fn, (theta_spec, x, y, w, scalar_f32))
+    xa, ya, wa = batch_specs(spec, spec.acc_batch)
+    entries[f"gradacc_b{spec.acc_batch}"] = (gradacc_fn, (theta_spec, xa, ya, wa))
+    entries["apply"] = (apply_fn, (theta_spec, theta_spec, scalar_f32))
+    entries[f"eval_b{spec.acc_batch}"] = (eval_fn, (theta_spec, xa, ya, wa))
+    return param_count, entries

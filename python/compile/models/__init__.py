@@ -1,0 +1,15 @@
+"""L2 model zoo — the paper's five architectures (McMahan et al. §3).
+
+Every model is a pair of pure functions over a parameter pytree:
+
+    init(rng)                 -> params
+    loss_and_metrics(params, x, y, w) -> (weighted_loss_sum, weighted_correct_sum, weight_sum)
+
+with all dense compute routed through the L1 Pallas kernels.  The AOT
+entry-point builders in :mod:`compile.model` wrap these into the four HLO
+executables (init / step / gradacc / eval) the rust coordinator drives.
+"""
+
+from compile.models import cifar, cnn, lstm_models, mlp
+
+__all__ = ["mlp", "cnn", "lstm_models", "cifar"]

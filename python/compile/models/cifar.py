@@ -1,0 +1,51 @@
+"""CIFAR CNN — the TensorFlow-tutorial architecture the paper uses (§3).
+
+Two 5x5x64 conv layers (each + 2x2 max pool), FC-384, FC-192, linear-10:
+1,068,298 parameters ("about 10^6" in the paper).  We omit the tutorial's
+local-response-normalization layers (deprecated even by 2016 and absent
+from the paper's description); documented in DESIGN.md.
+
+Input is the paper's preprocessed 24x24x3 crop, flattened to f32[B, 1728].
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import softmax_xent
+from compile.models import common
+
+NUM_CLASSES = 10
+SIDE = 24
+INPUT_DIM = SIDE * SIDE * 3
+PARAM_COUNT = 1_068_298
+
+
+def init(key):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "conv1": common.conv_params(k1, 5, 5, 3, 64),
+        "conv2": common.conv_params(k2, 5, 5, 64, 64),
+        "fc1": common.dense_params(k3, 6 * 6 * 64, 384),
+        "fc2": common.dense_params(k4, 384, 192),
+        "out": common.dense_params(k5, 192, NUM_CLASSES),
+    }
+
+
+def apply(params, x):
+    b = x.shape[0]
+    img = x.reshape(b, SIDE, SIDE, 3)
+    h = common.conv2d(params["conv1"], img, "relu")
+    h = common.maxpool2(h)  # 12x12x64
+    h = common.conv2d(params["conv2"], h, "relu")
+    h = common.maxpool2(h)  # 6x6x64
+    h = h.reshape(b, 6 * 6 * 64)
+    h = common.dense(params["fc1"], h, "relu")
+    h = common.dense(params["fc2"], h, "relu")
+    return common.dense(params["out"], h, "none")
+
+
+def loss_and_metrics(params, x, y, w):
+    logits = apply(params, x)
+    losses = softmax_xent(logits, y)
+    correct = (jnp.argmax(logits, axis=1) == y).astype(jnp.float32)
+    return jnp.sum(w * losses), jnp.sum(w * correct), jnp.sum(w)

@@ -1,0 +1,47 @@
+"""MNIST CNN — the paper's convolutional model (§3).
+
+Two 5x5 conv layers (32 then 64 channels, each followed by 2x2 max pool),
+an FC layer with 512 units + ReLU, and a softmax output layer:
+1,663,370 parameters, matching the paper exactly.
+
+Input arrives flattened (f32[B, 784]) and is reshaped to NHWC here so the
+rust data plane stays shape-oblivious across the MNIST models.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import softmax_xent
+from compile.models import common
+
+NUM_CLASSES = 10
+PARAM_COUNT = 1_663_370
+
+
+def init(key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "conv1": common.conv_params(k1, 5, 5, 1, 32),
+        "conv2": common.conv_params(k2, 5, 5, 32, 64),
+        "fc": common.dense_params(k3, 7 * 7 * 64, 512),
+        "out": common.dense_params(k4, 512, NUM_CLASSES),
+    }
+
+
+def apply(params, x):
+    b = x.shape[0]
+    img = x.reshape(b, 28, 28, 1)
+    h = common.conv2d(params["conv1"], img, "relu")
+    h = common.maxpool2(h)  # 14x14x32
+    h = common.conv2d(params["conv2"], h, "relu")
+    h = common.maxpool2(h)  # 7x7x64
+    h = h.reshape(b, 7 * 7 * 64)
+    h = common.dense(params["fc"], h, "relu")
+    return common.dense(params["out"], h, "none")
+
+
+def loss_and_metrics(params, x, y, w):
+    logits = apply(params, x)
+    losses = softmax_xent(logits, y)
+    correct = (jnp.argmax(logits, axis=1) == y).astype(jnp.float32)
+    return jnp.sum(w * losses), jnp.sum(w * correct), jnp.sum(w)

@@ -1,0 +1,100 @@
+"""Shared layers and initializers for the model zoo.
+
+Conventions
+-----------
+* Parameters are plain dicts of f32 arrays; the AOT layer flattens them
+  with ``jax.flatten_util.ravel_pytree`` so the rust coordinator only ever
+  sees one flat f32 vector.
+* Convolutions are expressed as im2col (``conv_general_dilated_patches``,
+  whose feature axis is **channel-major**: (cin, kh, kw)) followed by the
+  fused Pallas matmul, so the L1 kernel sits on the conv hot path too.
+  Conv weights are therefore stored already-reshaped as
+  ``[cin*kh*kw, cout]`` with channel-major row order.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul_fused
+
+
+def glorot(key, shape, fan_in, fan_out):
+    """Glorot/Xavier uniform — TF-era default, matching the paper's stack."""
+    limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -limit, limit)
+
+
+def dense_params(key, d_in, d_out):
+    return {
+        "w": glorot(key, (d_in, d_out), d_in, d_out),
+        "b": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def dense(p, x, act="none"):
+    return matmul_fused(x, p["w"], p["b"], act)
+
+
+def conv_params(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    fan_out = kh * kw * cout
+    return {
+        # channel-major row order to match conv_general_dilated_patches.
+        "w": glorot(key, (cin * kh * kw, cout), fan_in, fan_out),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def conv2d(p, x, act="relu", kh=5, kw=5):
+    """SAME conv via im2col + fused Pallas matmul.  x: f32[B,H,W,Cin]."""
+    b, h, w_, cin = x.shape
+    cout = p["w"].shape[1]
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )  # [B,H,W,cin*kh*kw], channel-major
+    mat = patches.reshape(b * h * w_, cin * kh * kw)
+    out = matmul_fused(mat, p["w"], p["b"], act)
+    return out.reshape(b, h, w_, cout)
+
+
+def maxpool2(x):
+    """2x2 max pool, stride 2 (paper's pooling everywhere)."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def lstm_params(key, d_in, hidden):
+    """One LSTM layer: combined [x|h] -> 4H projection, gate order [i|f|g|o].
+
+    Forget-gate bias starts at 1.0 (standard practice the paper's TF stack
+    used by default) so gradients flow at init.
+    """
+    w = glorot(key, (d_in + hidden, 4 * hidden), d_in + hidden, 4 * hidden)
+    b = jnp.zeros((4 * hidden,), jnp.float32)
+    b = b.at[hidden : 2 * hidden].set(1.0)
+    return {"w": w, "b": b}
+
+
+def lstm_layer(p, xs):
+    """Scan an LSTM over time.  xs: f32[T,B,D] -> hs: f32[T,B,H]."""
+    from compile.kernels import lstm_cell
+
+    hidden = p["w"].shape[1] // 4
+    batch = xs.shape[1]
+    h0 = jnp.zeros((batch, hidden), jnp.float32)
+    c0 = jnp.zeros((batch, hidden), jnp.float32)
+
+    def step(carry, x_t):
+        h, c = carry
+        z = matmul_fused(jnp.concatenate([x_t, h], axis=1), p["w"], p["b"], "none")
+        h2, c2 = lstm_cell(z, c)
+        return (h2, c2), h2
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), xs)
+    return hs
+
+
+def count_params(params) -> int:
+    leaves = [x for x in jax.tree_util.tree_leaves(params) if hasattr(x, "size")]
+    return int(sum(x.size for x in leaves if x.dtype == jnp.float32))

@@ -1,0 +1,116 @@
+"""The paper's two recurrent models (§3).
+
+``shakespeare_lstm`` — character-level: embed-8 → 2 x LSTM-256 → softmax
+over the character vocabulary, unroll length 80.  With our 90-symbol
+synthetic-playwright vocabulary this is 820,522 parameters (the paper's
+866,578 implies a slightly larger vocab it never states; documented in
+DESIGN.md).
+
+``word_lstm`` — the large-scale next-word model: 10k-word vocabulary,
+input and output embeddings of dimension 192 (co-trained, untied),
+LSTM-256, unroll length 10.  4,359,120 parameters vs the paper's
+4,950,544 (exact head wiring unstated; documented).
+
+Both take ``x:int32[B,T]`` token ids, ``y:int32[B,T]`` next-token targets
+and ``w:f32[B,T]`` per-token weights (0 on padding), and report per-token
+weighted CE / accuracy — exactly the paper's accuracy metric ("fraction
+of the data where the highest predicted probability was on the correct
+next word").
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul_fused, softmax_xent
+from compile.models import common
+
+CHAR_VOCAB = 90
+CHAR_EMBED = 8
+CHAR_HIDDEN = 256
+CHAR_UNROLL = 80
+SHAKESPEARE_PARAM_COUNT = 820_522
+
+WORD_VOCAB = 10_000
+WORD_EMBED = 192
+WORD_HIDDEN = 256
+WORD_UNROLL = 10
+WORD_PARAM_COUNT = 4_359_120
+
+
+def _embed_params(key, vocab, dim):
+    return {"e": jax.random.normal(key, (vocab, dim), jnp.float32) * 0.1}
+
+
+def _lm_metrics(logits_flat, y, w):
+    yf = y.reshape(-1)
+    wf = w.reshape(-1)
+    losses = softmax_xent(logits_flat, yf)
+    correct = (jnp.argmax(logits_flat, axis=1) == yf).astype(jnp.float32)
+    return jnp.sum(wf * losses), jnp.sum(wf * correct), jnp.sum(wf)
+
+
+# ---------------------------------------------------------------- char LSTM
+
+
+def shakespeare_init(key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "embed": _embed_params(k1, CHAR_VOCAB, CHAR_EMBED),
+        "lstm1": common.lstm_params(k2, CHAR_EMBED, CHAR_HIDDEN),
+        "lstm2": common.lstm_params(k3, CHAR_HIDDEN, CHAR_HIDDEN),
+        "out": common.dense_params(k4, CHAR_HIDDEN, CHAR_VOCAB),
+    }
+
+
+def shakespeare_apply(params, x):
+    """x: int32[B,T] -> logits f32[B*T, V] (time-major flattening)."""
+    b, t = x.shape
+    emb = params["embed"]["e"][x]  # [B,T,E]
+    xs = jnp.transpose(emb, (1, 0, 2))  # [T,B,E]
+    hs = common.lstm_layer(params["lstm1"], xs)
+    hs = common.lstm_layer(params["lstm2"], hs)
+    flat = hs.reshape(t * b, CHAR_HIDDEN)
+    logits = matmul_fused(flat, params["out"]["w"], params["out"]["b"], "none")
+    return logits, (b, t)
+
+
+def shakespeare_loss_and_metrics(params, x, y, w):
+    logits, (b, t) = shakespeare_apply(params, x)
+    # logits are [T*B, V]; reorder targets to match time-major flattening.
+    yt = jnp.transpose(y, (1, 0))
+    wt = jnp.transpose(w, (1, 0))
+    return _lm_metrics(logits, yt, wt)
+
+
+# ---------------------------------------------------------------- word LSTM
+
+
+def word_init(key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "embed_in": _embed_params(k1, WORD_VOCAB, WORD_EMBED),
+        "lstm": common.lstm_params(k2, WORD_EMBED, WORD_HIDDEN),
+        "proj": common.dense_params(k3, WORD_HIDDEN, WORD_EMBED),
+        "embed_out": _embed_params(k4, WORD_VOCAB, WORD_EMBED),
+        "out_bias": {"b": jnp.zeros((WORD_VOCAB,), jnp.float32)},
+    }
+
+
+def word_apply(params, x):
+    b, t = x.shape
+    emb = params["embed_in"]["e"][x]
+    xs = jnp.transpose(emb, (1, 0, 2))
+    hs = common.lstm_layer(params["lstm"], xs)
+    flat = hs.reshape(t * b, WORD_HIDDEN)
+    proj = matmul_fused(flat, params["proj"]["w"], params["proj"]["b"], "tanh")
+    logits = matmul_fused(
+        proj, params["embed_out"]["e"].T, params["out_bias"]["b"], "none"
+    )
+    return logits, (b, t)
+
+
+def word_loss_and_metrics(params, x, y, w):
+    logits, (b, t) = word_apply(params, x)
+    yt = jnp.transpose(y, (1, 0))
+    wt = jnp.transpose(w, (1, 0))
+    return _lm_metrics(logits, yt, wt)

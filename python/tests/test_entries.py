@@ -1,0 +1,150 @@
+"""AOT entry-point semantics: the contract the rust coordinator relies on.
+
+These tests exercise the exact functions aot.py lowers (not the artifacts
+themselves — the rust integration tests execute those) and pin down:
+
+* ``step`` == theta - lr * grad(weighted-mean loss)
+* ``gradacc`` is linear in examples  =>  chunked full-batch grads are exact
+* ``apply(theta, gradacc_sum / n, lr)`` == one full-batch SGD step
+* ``init`` is deterministic per seed, distinct across seeds
+* ``eval`` returns (sum w*loss, sum w*correct, sum w)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import MODELS, build_entries
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPEC = MODELS["mnist_2nn"]
+PC, ENTRIES = build_entries(SPEC)
+
+
+def _batch(seed, n):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (n, 784))
+    y = jax.random.randint(k, (n,), 0, 10).astype(jnp.int32)
+    w = jnp.ones((n,))
+    return x, y, w
+
+
+def _theta(seed=0):
+    init_fn, _ = ENTRIES["init"]
+    return init_fn(jnp.int32(seed))[0]
+
+
+def test_init_deterministic_and_seed_sensitive():
+    init_fn, _ = ENTRIES["init"]
+    a = init_fn(jnp.int32(7))[0]
+    b = init_fn(jnp.int32(7))[0]
+    c = init_fn(jnp.int32(8))[0]
+    assert a.shape == (PC,)
+    np.testing.assert_array_equal(a, b)
+    assert float(jnp.abs(a - c).max()) > 0.0
+
+
+def test_init_scale_reasonable():
+    theta = _theta()
+    # glorot-init network: weights bounded, biases zero -> modest norm
+    assert 0.1 < float(jnp.linalg.norm(theta)) < 100.0
+    assert float(jnp.abs(theta).max()) < 1.0
+
+
+def test_step_is_sgd_on_weighted_mean_loss():
+    step_fn, _ = ENTRIES["step_b10"]
+    theta = _theta()
+    x, y, w = _batch(1, 10)
+    lr = jnp.float32(0.5)
+    got = step_fn(theta, x, y, w, lr)[0]
+
+    gradacc_fn, _ = ENTRIES["gradacc_b64"]
+    xp = jnp.pad(x, ((0, 54), (0, 0)))
+    yp = jnp.pad(y, (0, 54))
+    wp = jnp.pad(w, (0, 54))
+    g = gradacc_fn(theta, xp, yp, wp)[0] / 10.0
+    np.testing.assert_allclose(got, theta - 0.5 * g, rtol=1e-4, atol=1e-6)
+
+
+def test_step_ignores_padding_rows():
+    step_fn, _ = ENTRIES["step_b10"]
+    theta = _theta()
+    x, y, w = _batch(2, 10)
+    w = w.at[7:].set(0.0)
+    base = step_fn(theta, x, y, w, jnp.float32(0.1))[0]
+    x2 = x.at[7:].set(99.0)
+    y2 = y.at[7:].set(0)
+    pad = step_fn(theta, x2, y2, w, jnp.float32(0.1))[0]
+    np.testing.assert_allclose(base, pad, rtol=1e-5, atol=1e-7)
+
+
+def test_gradacc_linear_in_examples():
+    """gradacc(A ∪ B) == gradacc(A) + gradacc(B) — the chunking identity."""
+    gradacc_fn, _ = ENTRIES["gradacc_b64"]
+    theta = _theta()
+    x, y, w = _batch(3, 64)
+    full = gradacc_fn(theta, x, y, w)[0]
+    wa = w.at[32:].set(0.0)
+    wb = w.at[:32].set(0.0)
+    a = gradacc_fn(theta, x, y, wa)[0]
+    b = gradacc_fn(theta, x, y, wb)[0]
+    np.testing.assert_allclose(full, a + b, rtol=1e-4, atol=1e-6)
+
+
+def test_apply_matches_axpy():
+    apply_fn, _ = ENTRIES["apply"]
+    theta = _theta()
+    g = jax.random.normal(jax.random.PRNGKey(5), (PC,))
+    out = apply_fn(theta, g, jnp.float32(0.25))[0]
+    np.testing.assert_allclose(out, theta - 0.25 * g, rtol=1e-5, atol=1e-6)
+
+
+def test_full_batch_step_via_gradacc_chunks_matches_big_step():
+    """B=inf semantics: chunked gradacc + apply == single-shot step."""
+    step_fn, _ = ENTRIES["step_b50"]
+    gradacc_fn, _ = ENTRIES["gradacc_b64"]
+    apply_fn, _ = ENTRIES["apply"]
+    theta = _theta()
+    x, y, w = _batch(6, 50)
+    lr = jnp.float32(0.3)
+    direct = step_fn(theta, x, y, w, lr)[0]
+
+    # two chunks of 25 through the 64-capacity gradacc
+    def chunk(lo, hi):
+        n = hi - lo
+        xp = jnp.pad(x[lo:hi], ((0, 64 - n), (0, 0)))
+        yp = jnp.pad(y[lo:hi], (0, 64 - n))
+        wp = jnp.pad(w[lo:hi], (0, 64 - n))
+        return gradacc_fn(theta, xp, yp, wp)[0]
+
+    g = (chunk(0, 25) + chunk(25, 50)) / 50.0
+    via_chunks = apply_fn(theta, g, lr)[0]
+    np.testing.assert_allclose(direct, via_chunks, rtol=1e-4, atol=1e-6)
+
+
+def test_eval_semantics():
+    eval_fn, _ = ENTRIES["eval_b64"]
+    theta = _theta()
+    x, y, w = _batch(8, 64)
+    w = w.at[50:].set(0.0)
+    out = eval_fn(theta, x, y, w)[0]
+    assert out.shape == (3,)
+    wloss, wcorrect, wsum = (float(v) for v in out)
+    assert wsum == 50.0
+    assert 0.0 <= wcorrect <= 50.0
+    assert wloss > 0.0
+    # random init, 10 classes: loss/example near ln(10)
+    assert 1.0 < wloss / wsum < 4.0
+
+
+def test_all_models_have_required_entries():
+    for name, spec in MODELS.items():
+        if name == "word_lstm":
+            continue  # heavy; covered by artifacts-full path
+        pc, entries = build_entries(spec)
+        assert pc > 0
+        assert "init" in entries and "apply" in entries
+        assert any(e.startswith("step_b") for e in entries)
+        assert any(e.startswith("gradacc_b") for e in entries)
+        assert any(e.startswith("eval_b") for e in entries)

@@ -1,0 +1,190 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including awkward non-multiple-of-block sizes)
+and both forward values and custom-VJP gradients are checked against the
+reference implementations in ``compile.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lstm_cell, matmul_fused, sgd_update, softmax_xent
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+ACTS = ["none", "relu", "tanh", "sigmoid"]
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ----------------------------------------------------------------- matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 200),
+    n=st.integers(1, 150),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_fused_forward(m, k, n, act, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+    got = matmul_fused(x, w, b, act)
+    want = ref.matmul_fused_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_matmul_fused_grad(act):
+    x = _rand(0, (9, 33))
+    w = _rand(1, (33, 17))
+    b = _rand(2, (17,))
+
+    def f(fn):
+        return lambda x, w, b: jnp.sum(jnp.sin(fn(x, w, b, act)))
+
+    g1 = jax.grad(f(matmul_fused), argnums=(0, 1, 2))(x, w, b)
+    g2 = jax.grad(f(ref.matmul_fused_ref), argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(g1, g2):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_mxu_sized_blocks():
+    """Shapes that exactly tile the 128-edge MXU blocks (no padding path)."""
+    x = _rand(0, (128, 256))
+    w = _rand(1, (256, 384))
+    b = _rand(2, (384,))
+    np.testing.assert_allclose(
+        matmul_fused(x, w, b, "relu"),
+        ref.matmul_fused_ref(x, w, b, "relu"),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_matmul_under_jit_and_vmap_free():
+    x = _rand(0, (5, 7))
+    w = _rand(1, (7, 3))
+    b = jnp.zeros((3,))
+    jitted = jax.jit(lambda x: matmul_fused(x, w, b, "none"))
+    np.testing.assert_allclose(jitted(x), x @ w, rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------------------- sgd axpy
+
+
+@settings(max_examples=20, deadline=None)
+@given(p=st.integers(1, 300_000), lr=st.floats(0.0, 10.0), seed=st.integers(0, 99))
+def test_sgd_update(p, lr, seed):
+    t = _rand(seed, (p,))
+    g = _rand(seed + 1, (p,))
+    np.testing.assert_allclose(
+        sgd_update(t, g, lr), ref.sgd_update_ref(t, g, lr), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_sgd_update_zero_lr_identity():
+    t = _rand(3, (1234,))
+    g = _rand(4, (1234,))
+    np.testing.assert_allclose(sgd_update(t, g, 0.0), t, rtol=0, atol=0)
+
+
+# ----------------------------------------------------------------- lstm cell
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 33), h=st.integers(1, 96), seed=st.integers(0, 99))
+def test_lstm_cell_forward(b, h, seed):
+    z = _rand(seed, (b, 4 * h))
+    c = _rand(seed + 1, (b, h))
+    h1, c1 = lstm_cell(z, c)
+    h2, c2 = ref.lstm_cell_ref(z, c)
+    np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-6)
+
+
+def test_lstm_cell_grad():
+    z = _rand(0, (6, 64))
+    c = _rand(1, (6, 16))
+
+    def f(fn):
+        return lambda z, c: jnp.sum(fn(z, c)[0] * jnp.cos(fn(z, c)[1]))
+
+    g1 = jax.grad(f(lstm_cell), argnums=(0, 1))(z, c)
+    g2 = jax.grad(f(ref.lstm_cell_ref), argnums=(0, 1))(z, c)
+    for a, e in zip(g1, g2):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-5)
+
+
+def test_lstm_cell_forget_gate_semantics():
+    """With saturated forget gate and closed input gate, c' == c."""
+    h = 8
+    z = jnp.concatenate(
+        [
+            jnp.full((2, h), -50.0),  # i -> 0
+            jnp.full((2, h), 50.0),  # f -> 1
+            jnp.zeros((2, h)),  # g
+            jnp.zeros((2, h)),  # o
+        ],
+        axis=1,
+    )
+    c = _rand(5, (2, h))
+    _, cn = lstm_cell(z, c)
+    np.testing.assert_allclose(cn, c, rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------------------- xent
+
+
+@settings(max_examples=25, deadline=None)
+@given(r=st.integers(1, 80), v=st.integers(2, 300), seed=st.integers(0, 99))
+def test_softmax_xent_forward(r, v, seed):
+    logits = _rand(seed, (r, v), scale=3.0)
+    y = jax.random.randint(jax.random.PRNGKey(seed + 7), (r,), 0, v).astype(jnp.int32)
+    np.testing.assert_allclose(
+        softmax_xent(logits, y),
+        ref.softmax_xent_ref(logits, y),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_softmax_xent_padding_rows_are_zero():
+    logits = _rand(0, (4, 11))
+    y = jnp.array([3, -1, 5, -1], dtype=jnp.int32)
+    out = softmax_xent(logits, y)
+    assert out[1] == 0.0 and out[3] == 0.0
+    assert out[0] > 0.0 and out[2] > 0.0
+
+
+def test_softmax_xent_grad():
+    logits = _rand(0, (7, 13), scale=2.0)
+    y = jnp.array([0, 1, 2, -1, 4, 5, 12], dtype=jnp.int32)
+    wvec = jnp.arange(7.0)
+
+    def f(fn):
+        return lambda l: jnp.sum(fn(l, y) * wvec)
+
+    np.testing.assert_allclose(
+        jax.grad(f(softmax_xent))(logits),
+        jax.grad(f(ref.softmax_xent_ref))(logits),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_softmax_xent_numerical_stability():
+    """Huge logits must not overflow (logsumexp path)."""
+    logits = jnp.array([[1e4, 0.0, -1e4]], dtype=jnp.float32)
+    y = jnp.array([0], dtype=jnp.int32)
+    out = softmax_xent(logits, y)
+    assert bool(jnp.isfinite(out[0])) and float(out[0]) < 1e-3

@@ -1,0 +1,25 @@
+//! Bench: communication-simulator overhead. The simulator must be
+//! negligible next to a round's real work (it runs once per round).
+
+use fedavg::comms::{model_bytes, Availability, CommModel, CommSim};
+use fedavg::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::default();
+    println!("comms_sim — accounting overhead per round\n");
+
+    for m in [1usize, 10, 100, 1000] {
+        let mut sim = CommSim::new(CommModel::default(), 7);
+        let bytes = model_bytes(1_663_370);
+        b.bench(&format!("round_accounting/m={m}"), || {
+            std::hint::black_box(sim.round(m, bytes));
+        });
+    }
+
+    for k in [100usize, 1000, 100_000] {
+        let mut av = Availability::new(0.7, 9);
+        b.bench(&format!("availability/k={k}"), || {
+            std::hint::black_box(av.online(k));
+        });
+    }
+}

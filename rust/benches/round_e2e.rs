@@ -1,0 +1,81 @@
+//! Bench: full FedAvg round latency vs client fraction C — the end-to-end
+//! number behind every table (one round = sample, m ClientUpdates,
+//! weighted average, comm accounting). Also reports the coordinator-only
+//! overhead (everything but executable execution), which §Perf requires
+//! to stay <5% of a round.
+
+use fedavg::config::{BatchSize, FedConfig, Partition};
+use fedavg::exper::mnist_fed;
+use fedavg::federated::{self, ServerOptions};
+use fedavg::runtime::Engine;
+use fedavg::util::bench::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        return;
+    }
+    let engine = Engine::load(dir).expect("engine");
+    let fed = mnist_fed(0.05, Partition::Iid, 3);
+    println!(
+        "round_e2e — {} clients x {} examples (mnist_2nn)\n",
+        fed.num_clients(),
+        fed.total_examples() / fed.num_clients()
+    );
+    let mut b = Bencher::new(Duration::from_millis(100), Duration::from_secs(3));
+
+    for c in [0.1, 0.5, 1.0] {
+        let cfg = FedConfig {
+            model: "mnist_2nn".into(),
+            c,
+            e: 1,
+            b: BatchSize::Fixed(10),
+            lr: 0.05,
+            rounds: 1, // bench one round at a time
+            eval_every: 10_000, // no eval inside the timed round
+            seed: 11,
+            ..Default::default()
+        };
+        b.bench(&format!("fedavg_round/C={c}"), || {
+            let opts = ServerOptions {
+                eval_cap: Some(1),
+                ..Default::default()
+            };
+            std::hint::black_box(federated::run(&engine, &fed, &cfg, opts).unwrap());
+        });
+    }
+
+    // coordinator overhead: total wall minus engine execute time
+    let before = engine.stats();
+    let cfg = FedConfig {
+        model: "mnist_2nn".into(),
+        c: 1.0,
+        e: 1,
+        b: BatchSize::Fixed(10),
+        lr: 0.05,
+        rounds: 5,
+        eval_every: 10_000,
+        seed: 13,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    federated::run(
+        &engine,
+        &fed,
+        &cfg,
+        ServerOptions {
+            eval_cap: Some(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let exec = (engine.stats().execute_ms - before.execute_ms) as f64 / 1e3;
+    println!(
+        "\ncoordinator overhead: wall {wall:.2}s, executable time {exec:.2}s, \
+         overhead {:.1}% (§Perf target <5%)",
+        100.0 * (wall - exec).max(0.0) / wall
+    );
+}

@@ -1,0 +1,10 @@
+//! Baselines the paper evaluates against.
+//!
+//! * [`sgd`] — standard sequential minibatch SGD on the pooled training
+//!   set, "each minibatch update requires a communication round in the
+//!   federated setting" (§3, CIFAR experiments / Table 3 / Figure 9).
+//! * [`oneshot`] — one-shot averaging: train each client to (near)
+//!   convergence once, average once (§1 related work endpoint).
+
+pub mod oneshot;
+pub mod sgd;

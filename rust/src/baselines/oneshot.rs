@@ -1,0 +1,71 @@
+//! One-shot averaging — the related-work endpoint (§1): each client
+//! trains to (approximate) convergence on its local data once, the server
+//! averages once. Known to be no better than a single client's model in
+//! the worst case; we reproduce it as the contrast to iterative FedAvg.
+
+use crate::config::BatchSize;
+use crate::data::Federated;
+use crate::federated::client::{local_update, LocalSpec};
+use crate::params::weighted_mean;
+use crate::runtime::{Engine, EvalSums};
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct OneShotConfig {
+    pub model: String,
+    /// local epochs each client trains before the single average.
+    pub epochs: usize,
+    pub batch: BatchSize,
+    pub lr: f64,
+    pub seed: u64,
+}
+
+pub struct OneShotResult {
+    /// test metrics of the averaged model.
+    pub averaged: EvalSums,
+    /// test metrics of the best *individual* client model.
+    pub best_single: EvalSums,
+}
+
+/// Train every client once from the shared init, average once, evaluate.
+pub fn run(
+    engine: &Engine,
+    fed: &Federated,
+    cfg: &OneShotConfig,
+    eval_cap: Option<usize>,
+) -> Result<OneShotResult> {
+    let model = engine.model(&cfg.model)?;
+    let theta0 = model.init(cfg.seed as i32)?;
+    let eval_idxs: Option<Vec<usize>> =
+        eval_cap.map(|c| (0..fed.test.len().min(c)).collect());
+
+    let mut updates = Vec::new();
+    let mut best_single: Option<EvalSums> = None;
+    for (ck, idxs) in fed.clients.iter().enumerate() {
+        if idxs.is_empty() {
+            continue;
+        }
+        let spec = LocalSpec {
+            epochs: cfg.epochs,
+            batch: cfg.batch,
+            lr: cfg.lr as f32,
+            shuffle_seed: cfg.seed ^ (ck as u64).wrapping_mul(0xD1B54A32D192ED03),
+        };
+        let res = local_update(&model, &fed.train, idxs, &theta0, &spec)?;
+        let sums = model.eval_dataset(&res.theta, &fed.test, eval_idxs.as_deref())?;
+        if best_single
+            .map(|b| sums.accuracy() > b.accuracy())
+            .unwrap_or(true)
+        {
+            best_single = Some(sums);
+        }
+        updates.push((res.weight as f32, res.theta));
+    }
+    let refs: Vec<(f32, &[f32])> = updates.iter().map(|(w, t)| (*w, t.as_slice())).collect();
+    let avg = weighted_mean(&refs);
+    let averaged = model.eval_dataset(&avg, &fed.test, eval_idxs.as_deref())?;
+    Ok(OneShotResult {
+        averaged,
+        best_single: best_single.expect("no non-empty clients"),
+    })
+}

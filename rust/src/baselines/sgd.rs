@@ -1,0 +1,108 @@
+//! Sequential minibatch SGD on the pooled (un-partitioned) training set.
+//!
+//! The paper's CIFAR baseline: "standard SGD training on the full training
+//! set, using minibatches of size 100" — each minibatch update counts as
+//! one communication round when compared against the federated runs.
+
+use crate::data::rng::Rng;
+use crate::data::Dataset;
+use crate::metrics::LearningCurve;
+use crate::params::ParamVec;
+use crate::runtime::Engine;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct SgdConfig {
+    pub model: String,
+    pub batch: usize,
+    pub lr: f64,
+    pub lr_decay: f64,
+    /// total minibatch updates (== "rounds" in the paper's comparison).
+    pub updates: usize,
+    pub eval_every: usize,
+    pub target_accuracy: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        Self {
+            model: "cifar_cnn".into(),
+            batch: 100,
+            lr: 0.1,
+            lr_decay: 1.0,
+            updates: 1000,
+            eval_every: 50,
+            target_accuracy: None,
+            seed: 23,
+        }
+    }
+}
+
+pub struct SgdResult {
+    pub accuracy: LearningCurve,
+    pub test_loss: LearningCurve,
+    pub final_theta: ParamVec,
+    pub updates_run: u64,
+}
+
+/// Run sequential SGD; the learning curve is keyed by minibatch updates.
+pub fn run(
+    engine: &Engine,
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &SgdConfig,
+    eval_cap: Option<usize>,
+) -> Result<SgdResult> {
+    let model = engine.model(&cfg.model)?;
+    let cap = model
+        .meta()
+        .step_capacity_for(cfg.batch)
+        .ok_or_else(|| anyhow::anyhow!(
+            "no step executable for B={} on {}",
+            cfg.batch,
+            cfg.model
+        ))?;
+    let mut theta = model.init(cfg.seed as i32)?;
+    let mut rng = Rng::new(cfg.seed ^ 0x56D);
+    let n = train.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut cursor = 0usize;
+
+    let eval_idxs: Option<Vec<usize>> = eval_cap.map(|c| (0..test.len().min(c)).collect());
+    let mut accuracy = LearningCurve::new();
+    let mut test_loss = LearningCurve::new();
+    let mut updates_run = 0u64;
+
+    for u in 1..=cfg.updates as u64 {
+        updates_run = u;
+        // epoch boundary: reshuffle
+        if cursor + cfg.batch > n {
+            rng.shuffle(&mut order);
+            cursor = 0;
+        }
+        let chunk = &order[cursor..cursor + cfg.batch.min(n)];
+        cursor += cfg.batch;
+        let lr = (cfg.lr * cfg.lr_decay.powi(u as i32 - 1)) as f32;
+        let batch = train.padded_batch(chunk, cap);
+        theta = model.step(&theta, &batch, lr)?;
+
+        if u % cfg.eval_every as u64 == 0 || u == cfg.updates as u64 {
+            let sums = model.eval_dataset(&theta, test, eval_idxs.as_deref())?;
+            accuracy.push(u, sums.accuracy());
+            test_loss.push(u, sums.mean_loss());
+            if let Some(t) = cfg.target_accuracy {
+                if sums.accuracy() >= t {
+                    break;
+                }
+            }
+        }
+    }
+    Ok(SgdResult {
+        accuracy,
+        test_loss,
+        final_theta: theta,
+        updates_run,
+    })
+}

@@ -1,0 +1,214 @@
+//! Communication-cost simulator — the constraint the paper optimizes for.
+//!
+//! The paper's premise: federated clients sit behind ~1 MB/s uplinks, so
+//! *rounds of communication* dominate cost and wall-clock. The rust
+//! coordinator counts every byte that would cross the network (full model
+//! down + full model up per selected client per round) and converts it to
+//! simulated wall-clock under a bandwidth model, so every experiment can
+//! report "communication" alongside rounds.
+//!
+//! This is the substrate substitution for the paper's hypothetical mobile
+//! fleet (DESIGN.md §2): availability traces and per-client bandwidth
+//! jitter model the "clients are slow/offline" reality the paper assumes
+//! away via synchronous rounds.
+
+use crate::data::rng::Rng;
+
+/// Network model for the synchronous-round protocol.
+#[derive(Debug, Clone)]
+pub struct CommModel {
+    /// Client uplink bytes/second (paper: "1 MB/s or less").
+    pub up_bps: f64,
+    /// Client downlink bytes/second.
+    pub down_bps: f64,
+    /// Per-transfer fixed latency (seconds).
+    pub latency_s: f64,
+    /// Multiplicative per-client bandwidth jitter: each transfer's rate is
+    /// scaled by a factor drawn uniformly from `[1 - jitter, 1.0]`.
+    pub jitter: f64,
+}
+
+impl Default for CommModel {
+    fn default() -> Self {
+        Self {
+            up_bps: 1.0e6,    // the paper's 1 MB/s uplink
+            down_bps: 8.0e6,  // typical asymmetric mobile link
+            latency_s: 0.1,
+            jitter: 0.5,
+        }
+    }
+}
+
+/// Running totals over a training run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CommTotals {
+    pub rounds: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    /// Simulated wall-clock (s): Σ per-round max over participating
+    /// clients (synchronous protocol waits for the straggler).
+    pub sim_seconds: f64,
+}
+
+impl CommTotals {
+    pub fn gigabytes(&self) -> f64 {
+        (self.bytes_up + self.bytes_down) as f64 / 1e9
+    }
+}
+
+/// Per-round accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundComm {
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    /// Straggler-bound transfer time for this round (s).
+    pub transfer_s: f64,
+}
+
+pub struct CommSim {
+    model: CommModel,
+    totals: CommTotals,
+    rng: Rng,
+}
+
+impl CommSim {
+    pub fn new(model: CommModel, seed: u64) -> Self {
+        Self {
+            model,
+            totals: CommTotals::default(),
+            rng: Rng::new(seed ^ 0xC0111_5EED),
+        }
+    }
+
+    /// Account one synchronous round: `m` clients each download and upload
+    /// the full `model_bytes` model. Returns this round's accounting and
+    /// folds it into the running totals.
+    pub fn round(&mut self, m: usize, model_bytes: u64) -> RoundComm {
+        self.round_asym(m, model_bytes, model_bytes)
+    }
+
+    /// Asymmetric variant: compressed uplinks upload fewer bytes than the
+    /// full model the server broadcasts down.
+    pub fn round_asym(&mut self, m: usize, down_bytes: u64, up_bytes: u64) -> RoundComm {
+        let mut worst = 0.0f64;
+        for _ in 0..m {
+            let scale = 1.0 - self.model.jitter * self.rng.f64();
+            let down = down_bytes as f64 / (self.model.down_bps * scale);
+            let up = up_bytes as f64 / (self.model.up_bps * scale);
+            let t = 2.0 * self.model.latency_s + down + up;
+            worst = worst.max(t);
+        }
+        let rc = RoundComm {
+            bytes_up: up_bytes * m as u64,
+            bytes_down: down_bytes * m as u64,
+            transfer_s: worst,
+        };
+        self.totals.rounds += 1;
+        self.totals.bytes_up += rc.bytes_up;
+        self.totals.bytes_down += rc.bytes_down;
+        self.totals.sim_seconds += rc.transfer_s;
+        rc
+    }
+
+    pub fn totals(&self) -> CommTotals {
+        self.totals
+    }
+}
+
+/// Bytes on the wire for a model of `param_count` f32 parameters.
+pub fn model_bytes(param_count: usize) -> u64 {
+    (param_count * std::mem::size_of::<f32>()) as u64
+}
+
+/// Client-availability trace: each client is online with probability
+/// `p_online` each round (round-independent Bernoulli, seeded). The
+/// sampler draws only from online clients, modelling the paper's
+/// "clients ... frequently offline" constraint.
+pub struct Availability {
+    p_online: f64,
+    rng: Rng,
+}
+
+impl Availability {
+    pub fn new(p_online: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&p_online));
+        Self {
+            p_online,
+            rng: Rng::new(seed ^ 0xA7A11AB1E),
+        }
+    }
+
+    /// Which of `k` clients are reachable this round. Guarantees at least
+    /// one (re-rolls the round otherwise, like a production scheduler
+    /// waiting for a device to check in).
+    pub fn online(&mut self, k: usize) -> Vec<usize> {
+        loop {
+            let up: Vec<usize> =
+                (0..k).filter(|_| self.rng.f64() < self.p_online).collect();
+            if !up.is_empty() {
+                return up;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_accounting_accumulates() {
+        let mut sim = CommSim::new(CommModel::default(), 1);
+        let mb = model_bytes(1_000_000); // 4 MB model
+        let rc = sim.round(10, mb);
+        assert_eq!(rc.bytes_up, 40_000_000);
+        assert_eq!(rc.bytes_down, 40_000_000);
+        // uplink at <=1MB/s: 4MB upload takes >= 4s
+        assert!(rc.transfer_s >= 4.0, "{}", rc.transfer_s);
+        let t = sim.totals();
+        assert_eq!(t.rounds, 1);
+        assert!((t.gigabytes() - 0.08).abs() < 1e-9);
+    }
+
+    #[test]
+    fn straggler_bound_grows_with_clients() {
+        // more clients -> worse straggler (max over more draws)
+        let mut a = CommSim::new(CommModel::default(), 7);
+        let mut b = CommSim::new(CommModel::default(), 7);
+        let mb = model_bytes(100_000);
+        let mut sum_small = 0.0;
+        let mut sum_big = 0.0;
+        for _ in 0..50 {
+            sum_small += a.round(2, mb).transfer_s;
+            sum_big += b.round(64, mb).transfer_s;
+        }
+        assert!(sum_big > sum_small);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = CommSim::new(CommModel::default(), 42);
+        let mut b = CommSim::new(CommModel::default(), 42);
+        for _ in 0..10 {
+            let (x, y) = (a.round(5, 1000).transfer_s, b.round(5, 1000).transfer_s);
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn availability_subset_and_nonempty() {
+        let mut av = Availability::new(0.3, 9);
+        for _ in 0..20 {
+            let up = av.online(40);
+            assert!(!up.is_empty());
+            assert!(up.iter().all(|&c| c < 40));
+        }
+        let mut never = Availability::new(0.0001, 11);
+        assert!(!never.online(3).is_empty()); // re-rolls until someone shows
+    }
+
+    #[test]
+    fn model_bytes_f32() {
+        assert_eq!(model_bytes(199_210), 796_840);
+    }
+}

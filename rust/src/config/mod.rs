@@ -1,0 +1,282 @@
+//! Experiment configuration: typed configs plus a small key=value config
+//! file format (`configs/*.cfg`; offline image — no toml crate).
+//!
+//! The same [`FedConfig`] drives FedAvg, FedSGD (a fixed point of the
+//! family: `E=1, B=∞`), and the experiment harnesses. `ScaleProfile`
+//! shrinks the paper-scale workloads to this single-core testbed while
+//! preserving their structure (client counts scale, partition shapes and
+//! algorithm knobs do not).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::Result;
+
+/// Local batch-size knob `B` — `Full` is the paper's `B = ∞`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchSize {
+    Fixed(usize),
+    Full,
+}
+
+impl BatchSize {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "inf" | "full" | "∞" => Ok(BatchSize::Full),
+            _ => Ok(BatchSize::Fixed(
+                s.parse().map_err(|_| anyhow!("bad batch size {s:?}"))?,
+            )),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            BatchSize::Full => "inf".to_string(),
+            BatchSize::Fixed(b) => b.to_string(),
+        }
+    }
+}
+
+/// How the training data is spread over clients (paper §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partition {
+    Iid,
+    /// sort-by-label shards; the field is shards per client (2 = paper's
+    /// pathological MNIST split).
+    Pathological(usize),
+    /// Zipf-unbalanced IID-content shards.
+    Unbalanced,
+    /// the dataset's natural grouping (Shakespeare roles, social authors).
+    Natural,
+}
+
+impl Partition {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "iid" => Ok(Partition::Iid),
+            "noniid" | "pathological" => Ok(Partition::Pathological(2)),
+            "unbalanced" => Ok(Partition::Unbalanced),
+            "natural" => Ok(Partition::Natural),
+            _ => bail!("unknown partition {s:?} (iid|noniid|unbalanced|natural)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Partition::Iid => "iid",
+            Partition::Pathological(_) => "noniid",
+            Partition::Unbalanced => "unbalanced",
+            Partition::Natural => "natural",
+        }
+    }
+}
+
+/// One federated training configuration (Algorithm 1's knobs + harness).
+#[derive(Debug, Clone)]
+pub struct FedConfig {
+    pub model: String,
+    /// client fraction per round (C); 0.0 means "one client per round".
+    pub c: f64,
+    /// local epochs (E).
+    pub e: usize,
+    /// local minibatch size (B).
+    pub b: BatchSize,
+    /// learning rate η.
+    pub lr: f64,
+    /// multiplicative per-round lr decay (1.0 = none; Table 3 uses 0.99…).
+    pub lr_decay: f64,
+    /// max communication rounds.
+    pub rounds: usize,
+    /// evaluate every this many rounds (1 = every round).
+    pub eval_every: usize,
+    /// stop early once test accuracy reaches this (None = run all rounds).
+    pub target_accuracy: Option<f64>,
+    /// also record training loss each eval (Figures 6/8).
+    pub track_train_loss: bool,
+    pub seed: u64,
+}
+
+impl Default for FedConfig {
+    fn default() -> Self {
+        Self {
+            model: "mnist_2nn".into(),
+            c: 0.1,
+            e: 1,
+            b: BatchSize::Fixed(10),
+            lr: 0.1,
+            lr_decay: 1.0,
+            rounds: 100,
+            eval_every: 1,
+            target_accuracy: None,
+            track_train_loss: false,
+            seed: 17,
+        }
+    }
+}
+
+impl FedConfig {
+    /// FedSGD is the `E=1, B=∞` endpoint of the FedAvg family (paper §2).
+    pub fn fedsgd(mut self) -> Self {
+        self.e = 1;
+        self.b = BatchSize::Full;
+        self
+    }
+
+    /// `m = max(C·K, 1)` — Algorithm 1's per-round client count.
+    pub fn clients_per_round(&self, k: usize) -> usize {
+        ((self.c * k as f64) as usize).max(1).min(k)
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{} C={} E={} B={} lr={}",
+            self.model,
+            self.c,
+            self.e,
+            self.b.label(),
+            self.lr
+        )
+    }
+}
+
+/// Scales paper-sized workloads down to the testbed. `scale=1.0` is the
+/// paper's configuration; the experiment harnesses default lower.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleProfile {
+    pub scale: f64,
+}
+
+impl ScaleProfile {
+    pub fn new(scale: f64) -> Self {
+        assert!(scale > 0.0 && scale <= 1.0, "scale in (0,1]: {scale}");
+        Self { scale }
+    }
+
+    /// Scaled count with a floor.
+    pub fn count(&self, paper: usize, min: usize) -> usize {
+        ((paper as f64 * self.scale) as usize).max(min)
+    }
+}
+
+/// Flat key=value config files (sections via `a.b.c = v`), `#` comments.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigFile {
+    values: BTreeMap<String, String>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", ln + 1))?;
+            values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn fed_config(&self) -> Result<FedConfig> {
+        let mut cfg = FedConfig::default();
+        for (k, v) in &self.values {
+            match k.as_str() {
+                "model" => cfg.model = v.clone(),
+                "c" => cfg.c = v.parse()?,
+                "e" => cfg.e = v.parse()?,
+                "b" => cfg.b = BatchSize::parse(v)?,
+                "lr" => cfg.lr = v.parse()?,
+                "lr_decay" => cfg.lr_decay = v.parse()?,
+                "rounds" => cfg.rounds = v.parse()?,
+                "eval_every" => cfg.eval_every = v.parse()?,
+                "target_accuracy" => cfg.target_accuracy = Some(v.parse()?),
+                "track_train_loss" => cfg.track_train_loss = v.parse()?,
+                "seed" => cfg.seed = v.parse()?,
+                _ => {} // dataset keys handled by the harness
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_size_parse() {
+        assert_eq!(BatchSize::parse("10").unwrap(), BatchSize::Fixed(10));
+        assert_eq!(BatchSize::parse("inf").unwrap(), BatchSize::Full);
+        assert!(BatchSize::parse("ten").is_err());
+    }
+
+    #[test]
+    fn clients_per_round_matches_algorithm1() {
+        let mut cfg = FedConfig::default();
+        for (c, k, want) in [
+            (0.0, 100, 1),  // paper: C=0 means one client
+            (0.1, 100, 10),
+            (0.2, 100, 20),
+            (1.0, 100, 100),
+            (0.5, 3, 1),
+            (1.0, 1, 1),
+        ] {
+            cfg.c = c;
+            assert_eq!(cfg.clients_per_round(k), want, "C={c} K={k}");
+        }
+    }
+
+    #[test]
+    fn fedsgd_is_family_endpoint() {
+        let cfg = FedConfig {
+            e: 20,
+            b: BatchSize::Fixed(10),
+            ..Default::default()
+        }
+        .fedsgd();
+        assert_eq!(cfg.e, 1);
+        assert_eq!(cfg.b, BatchSize::Full);
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let cf = ConfigFile::parse(
+            "# experiment\nmodel = mnist_cnn\nc = 0.2\ne=5\nb = inf\nlr = 0.05 # swept\nrounds = 42\ntarget_accuracy = 0.97\n",
+        )
+        .unwrap();
+        let fc = cf.fed_config().unwrap();
+        assert_eq!(fc.model, "mnist_cnn");
+        assert_eq!(fc.c, 0.2);
+        assert_eq!(fc.e, 5);
+        assert_eq!(fc.b, BatchSize::Full);
+        assert_eq!(fc.rounds, 42);
+        assert_eq!(fc.target_accuracy, Some(0.97));
+    }
+
+    #[test]
+    fn config_file_rejects_bad_lines() {
+        assert!(ConfigFile::parse("model mnist").is_err());
+    }
+
+    #[test]
+    fn scale_profile() {
+        let s = ScaleProfile::new(0.2);
+        assert_eq!(s.count(100, 10), 20);
+        assert_eq!(s.count(20, 10), 10); // floor
+    }
+}

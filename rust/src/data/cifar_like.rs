@@ -1,0 +1,130 @@
+//! Synthetic CIFAR-10 stand-in (DESIGN.md §2 substitution note).
+//!
+//! Ten classes of 24x24 RGB images (the paper's preprocessed crop size).
+//! Each class pairs a color palette with a textural signature (sinusoidal
+//! gratings at class-specific frequency/orientation plus blob structure),
+//! so classes are separable by a conv net but not by mean color alone.
+
+use crate::data::rng::Rng;
+use crate::data::{Dataset, Examples};
+
+pub const SIDE: usize = 24;
+pub const DIM: usize = SIDE * SIDE * 3;
+pub const CLASSES: usize = 10;
+
+struct ClassSpec {
+    base: [f32; 3],
+    freq: f32,
+    orient: f32,
+    blob_cx: f32,
+    blob_cy: f32,
+    blob_s: f32,
+    blob_color: [f32; 3],
+}
+
+pub struct CifarLike {
+    specs: Vec<ClassSpec>,
+    seed: u64,
+}
+
+impl CifarLike {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xC1FA5);
+        let specs = (0..CLASSES)
+            .map(|c| ClassSpec {
+                base: [rng.f32() * 0.6, rng.f32() * 0.6, rng.f32() * 0.6],
+                freq: 0.3 + 0.25 * (c as f32) + 0.2 * rng.f32(),
+                orient: std::f32::consts::PI * rng.f32(),
+                blob_cx: 4.0 + 16.0 * rng.f32(),
+                blob_cy: 4.0 + 16.0 * rng.f32(),
+                blob_s: 2.0 + 4.0 * rng.f32(),
+                blob_color: [rng.f32(), rng.f32(), rng.f32()],
+            })
+            .collect();
+        Self { specs, seed }
+    }
+
+    pub fn dataset(&self, n: usize, stream: u64) -> Dataset {
+        let mut rng = Rng::new(self.seed ^ stream.wrapping_mul(0x51CF7));
+        let mut x = vec![0.0f32; n * DIM];
+        let mut y = vec![0i32; n];
+        for i in 0..n {
+            let class = i % CLASSES;
+            let s = &self.specs[class];
+            let phase = 2.0 * std::f32::consts::PI * rng.f32();
+            let bright = 0.8 + 0.4 * rng.f32();
+            let (dx, dy) = (4.0 * rng.f32() - 2.0, 4.0 * rng.f32() - 2.0);
+            let flip = rng.f32() < 0.5; // paper's pipeline randomly flips
+            let dst = &mut x[i * DIM..(i + 1) * DIM];
+            let (so, co) = s.orient.sin_cos();
+            for py in 0..SIDE {
+                for px_ in 0..SIDE {
+                    let px = if flip { SIDE - 1 - px_ } else { px_ };
+                    let u = co * px as f32 + so * py as f32;
+                    let grating = 0.5 + 0.5 * (s.freq * u + phase).sin();
+                    let bx = px as f32 - (s.blob_cx + dx);
+                    let by = py as f32 - (s.blob_cy + dy);
+                    let blob = (-(bx * bx + by * by) / (2.0 * s.blob_s * s.blob_s)).exp();
+                    for ch in 0..3 {
+                        let v = bright
+                            * (s.base[ch] + 0.35 * grating + 0.5 * blob * s.blob_color[ch])
+                            + 0.1 * rng.gauss_f32();
+                        dst[(py * SIDE + px_) * 3 + ch] = v.clamp(0.0, 1.0);
+                    }
+                }
+            }
+            y[i] = class as i32;
+        }
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let mut xs = vec![0.0f32; n * DIM];
+        let mut ys = vec![0i32; n];
+        for (new, &old) in perm.iter().enumerate() {
+            xs[new * DIM..(new + 1) * DIM].copy_from_slice(&x[old * DIM..(old + 1) * DIM]);
+            ys[new] = y[old];
+        }
+        Dataset {
+            name: format!("cifar_like(seed={}, n={n}, stream={stream})", self.seed),
+            examples: Examples::Image {
+                x: xs,
+                y: ys,
+                dim: DIM,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_range_balance() {
+        let g = CifarLike::new(1);
+        let d = g.dataset(100, 0);
+        let Examples::Image { x, y, dim } = &d.examples else {
+            unreachable!()
+        };
+        assert_eq!(*dim, 1728);
+        assert_eq!(x.len(), 100 * 1728);
+        assert!(x.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        let mut counts = [0usize; 10];
+        for &l in y {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = CifarLike::new(2);
+        let a = g.dataset(20, 0);
+        let b = g.dataset(20, 0);
+        match (&a.examples, &b.examples) {
+            (Examples::Image { x: xa, .. }, Examples::Image { x: xb, .. }) => {
+                assert_eq!(xa, xb)
+            }
+            _ => unreachable!(),
+        }
+    }
+}

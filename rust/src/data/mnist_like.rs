@@ -1,0 +1,203 @@
+//! Synthetic MNIST stand-in (no network access in this image — DESIGN.md
+//! §2 substitution note).
+//!
+//! Ten classes of 28x28 grayscale "digits": each class is a fixed template
+//! built from seeded Gaussian strokes; each example is its class template
+//! under a random sub-pixel shift, intensity scale, elastic wobble and
+//! additive noise. The result is linearly non-trivial but comfortably
+//! learnable by the paper's 2NN and CNN — what the MNIST experiments need
+//! (relative round counts, not absolute accuracy, are the reproduction
+//! target).
+
+use crate::data::rng::Rng;
+use crate::data::{Dataset, Examples};
+
+pub const SIDE: usize = 28;
+pub const DIM: usize = SIDE * SIDE;
+pub const CLASSES: usize = 10;
+
+/// Class template: sum of a few oriented Gaussian strokes.
+struct Template {
+    // stroke params: (cx, cy, sx, sy, angle, amplitude)
+    strokes: Vec<(f32, f32, f32, f32, f32, f32)>,
+}
+
+impl Template {
+    fn new(rng: &mut Rng) -> Self {
+        // 4-7 strokes per digit-ish glyph
+        let n = 4 + rng.below(4);
+        let strokes = (0..n)
+            .map(|_| {
+                let cx = 6.0 + 16.0 * rng.f32();
+                let cy = 6.0 + 16.0 * rng.f32();
+                let sx = 1.2 + 3.5 * rng.f32();
+                let sy = 0.8 + 1.6 * rng.f32();
+                let angle = std::f32::consts::PI * rng.f32();
+                let amp = 0.6 + 0.4 * rng.f32();
+                (cx, cy, sx, sy, angle, amp)
+            })
+            .collect();
+        Template { strokes }
+    }
+
+    /// Render at sub-pixel offset (dx, dy) with elastic wobble `wob`.
+    fn render(&self, dx: f32, dy: f32, wob: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), DIM);
+        for (i, px) in out.iter_mut().enumerate() {
+            let x = (i % SIDE) as f32;
+            let y = (i / SIDE) as f32;
+            let mut v = 0.0f32;
+            for &(cx, cy, sx, sy, a, amp) in &self.strokes {
+                // wobble bends stroke centers slightly, varying per example
+                let wx = cx + dx + wob * (0.35 * y).sin();
+                let wy = cy + dy + wob * (0.35 * x).cos();
+                let (sa, ca) = a.sin_cos();
+                let rx = ca * (x - wx) + sa * (y - wy);
+                let ry = -sa * (x - wx) + ca * (y - wy);
+                let d = (rx / sx) * (rx / sx) + (ry / sy) * (ry / sy);
+                v += amp * (-0.5 * d).exp();
+            }
+            *px = v.min(1.0);
+        }
+    }
+}
+
+/// Deterministic generator for train+test splits sharing class templates.
+pub struct MnistLike {
+    templates: Vec<Template>,
+    seed: u64,
+}
+
+impl MnistLike {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x13371);
+        // Confusable structure: classes c and c+5 share a base glyph and
+        // differ only by two extra strokes — like 3/8 or 4/9 in MNIST.
+        // This keeps the task hard enough that round counts spread out.
+        let bases: Vec<Template> = (0..CLASSES / 2).map(|_| Template::new(&mut rng)).collect();
+        let templates = (0..CLASSES)
+            .map(|c| {
+                let mut t = Template {
+                    strokes: bases[c % (CLASSES / 2)].strokes.clone(),
+                };
+                for _ in 0..2 {
+                    let cx = 6.0 + 16.0 * rng.f32();
+                    let cy = 6.0 + 16.0 * rng.f32();
+                    let sx = 1.0 + 2.5 * rng.f32();
+                    let sy = 0.8 + 1.2 * rng.f32();
+                    let angle = std::f32::consts::PI * rng.f32();
+                    let amp = 0.5 + 0.3 * rng.f32();
+                    t.strokes.push((cx, cy, sx, sy, angle, amp));
+                }
+                t
+            })
+            .collect();
+        Self { templates, seed }
+    }
+
+    /// Generate `n` examples with balanced labels. `stream` separates
+    /// train (0) from test (1) draws.
+    pub fn dataset(&self, n: usize, stream: u64) -> Dataset {
+        let mut rng = Rng::new(self.seed ^ stream.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut x = vec![0.0f32; n * DIM];
+        let mut y = vec![0i32; n];
+        let mut buf = vec![0.0f32; DIM];
+        for i in 0..n {
+            let class = i % CLASSES; // balanced
+            let dx = 5.0 * rng.f32() - 2.5;
+            let dy = 5.0 * rng.f32() - 2.5;
+            let wob = 2.0 * rng.f32();
+            let gain = 0.6 + 0.7 * rng.f32();
+            self.templates[class].render(dx, dy, wob, &mut buf);
+            let dst = &mut x[i * DIM..(i + 1) * DIM];
+            for (d, &s) in dst.iter_mut().zip(&buf) {
+                let noise = 0.18 * rng.gauss_f32();
+                *d = (gain * s + noise).clamp(0.0, 1.0);
+            }
+            y[i] = class as i32;
+        }
+        // shuffle example order so "sorted by label" is a real operation
+        // for the pathological partitioner (mirrors the real MNIST layout)
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let mut xs = vec![0.0f32; n * DIM];
+        let mut ys = vec![0i32; n];
+        for (new, &old) in perm.iter().enumerate() {
+            xs[new * DIM..(new + 1) * DIM].copy_from_slice(&x[old * DIM..(old + 1) * DIM]);
+            ys[new] = y[old];
+        }
+        Dataset {
+            name: format!("mnist_like(seed={}, n={n}, stream={stream})", self.seed),
+            examples: Examples::Image {
+                x: xs,
+                y: ys,
+                dim: DIM,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_stream_separated() {
+        let g = MnistLike::new(5);
+        let a = g.dataset(50, 0);
+        let b = g.dataset(50, 0);
+        let t = g.dataset(50, 1);
+        match (&a.examples, &b.examples, &t.examples) {
+            (
+                Examples::Image { x: xa, .. },
+                Examples::Image { x: xb, .. },
+                Examples::Image { x: xt, .. },
+            ) => {
+                assert_eq!(xa, xb);
+                assert_ne!(xa, xt, "test stream must differ from train");
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn labels_balanced_and_pixels_in_range() {
+        let g = MnistLike::new(6);
+        let d = g.dataset(200, 0);
+        let Examples::Image { x, y, dim } = &d.examples else {
+            unreachable!()
+        };
+        assert_eq!(*dim, 784);
+        let mut counts = [0usize; 10];
+        for &l in y {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 20), "{counts:?}");
+        assert!(x.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        // images are not blank
+        let mean: f32 = x.iter().sum::<f32>() / x.len() as f32;
+        assert!(mean > 0.02 && mean < 0.8, "mean pixel {mean}");
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // within-class distance should be smaller than between-class
+        let g = MnistLike::new(7);
+        let d = g.dataset(100, 0);
+        let Examples::Image { x, y, dim } = &d.examples else {
+            unreachable!()
+        };
+        let ex = |i: usize| &x[i * dim..(i + 1) * dim];
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum()
+        };
+        let c0: Vec<usize> = (0..100).filter(|&i| y[i] == 0).collect();
+        let c1: Vec<usize> = (0..100).filter(|&i| y[i] == 1).collect();
+        let within = dist(ex(c0[0]), ex(c0[1]));
+        let between = dist(ex(c0[0]), ex(c1[0]));
+        assert!(
+            between > 1.2 * within,
+            "classes not separable: within {within} between {between}"
+        );
+    }
+}

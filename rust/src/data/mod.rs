@@ -1,0 +1,234 @@
+//! Datasets, client partitions, and batch assembly.
+//!
+//! The paper's four data sources are rebuilt as deterministic synthetic
+//! generators (see DESIGN.md §2 — substitution note): [`mnist_like`],
+//! [`cifar_like`], [`shakespeare_like`], [`social_like`]. Partitioning
+//! schemes (IID / pathological non-IID / unbalanced / natural) live in
+//! [`partition`].
+
+pub mod cifar_like;
+pub mod mnist_like;
+pub mod partition;
+pub mod rng;
+pub mod shakespeare_like;
+pub mod social_like;
+
+/// Raw example storage — images carry dense f32 features, token datasets
+/// carry fixed-unroll id sequences with per-token weights (0 on padding).
+#[derive(Debug, Clone)]
+pub enum Examples {
+    Image {
+        /// Row-major features, `n * dim` long.
+        x: Vec<f32>,
+        /// Labels, `n` long.
+        y: Vec<i32>,
+        dim: usize,
+    },
+    Tokens {
+        /// Input ids, `n * t` long.
+        x: Vec<i32>,
+        /// Next-token targets, `n * t` long.
+        y: Vec<i32>,
+        /// Per-token weights (0.0 marks padding), `n * t` long.
+        w: Vec<f32>,
+        /// Unroll length.
+        t: usize,
+    },
+}
+
+/// A dataset: examples plus a human-readable provenance tag.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub examples: Examples,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        match &self.examples {
+            Examples::Image { y, .. } => y.len(),
+            Examples::Tokens { y, t, .. } => y.len() / t,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_tokens(&self) -> bool {
+        matches!(self.examples, Examples::Tokens { .. })
+    }
+
+    /// Label of example `i` (image datasets only).
+    pub fn label(&self, i: usize) -> i32 {
+        match &self.examples {
+            Examples::Image { y, .. } => y[i],
+            Examples::Tokens { .. } => panic!("label() on token dataset"),
+        }
+    }
+
+    /// Gather rows `idxs` into a zero-padded batch of capacity `cap`.
+    ///
+    /// Rows beyond `idxs.len()` have weight 0 everywhere, which the L2
+    /// entry points are contractually required to ignore (verified by
+    /// `python/tests/test_entries.py` and the rust integration tests).
+    pub fn padded_batch(&self, idxs: &[usize], cap: usize) -> PaddedBatch {
+        assert!(idxs.len() <= cap, "batch {} > capacity {cap}", idxs.len());
+        match &self.examples {
+            Examples::Image { x, y, dim } => {
+                let mut xf = vec![0.0f32; cap * dim];
+                let mut yb = vec![0i32; cap];
+                let mut wb = vec![0.0f32; cap];
+                for (row, &i) in idxs.iter().enumerate() {
+                    xf[row * dim..(row + 1) * dim]
+                        .copy_from_slice(&x[i * dim..(i + 1) * dim]);
+                    yb[row] = y[i];
+                    wb[row] = 1.0;
+                }
+                PaddedBatch {
+                    xf,
+                    xi: Vec::new(),
+                    y: yb,
+                    w: wb,
+                    cap,
+                    row_dim: *dim,
+                    tokens: false,
+                    logical: idxs.len(),
+                }
+            }
+            Examples::Tokens { x, y, w, t } => {
+                let mut xb = vec![0i32; cap * t];
+                let mut yb = vec![0i32; cap * t];
+                let mut wb = vec![0.0f32; cap * t];
+                for (row, &i) in idxs.iter().enumerate() {
+                    xb[row * t..(row + 1) * t].copy_from_slice(&x[i * t..(i + 1) * t]);
+                    yb[row * t..(row + 1) * t].copy_from_slice(&y[i * t..(i + 1) * t]);
+                    wb[row * t..(row + 1) * t].copy_from_slice(&w[i * t..(i + 1) * t]);
+                }
+                PaddedBatch {
+                    xf: Vec::new(),
+                    xi: xb,
+                    y: yb,
+                    w: wb,
+                    cap,
+                    row_dim: *t,
+                    tokens: true,
+                    logical: idxs.len(),
+                }
+            }
+        }
+    }
+
+    /// Total example weight of rows `idxs` (tokens: sum of token weights;
+    /// images: count). This is the `n_k` FedAvg weighs clients by.
+    pub fn weight_of(&self, idxs: &[usize]) -> f64 {
+        match &self.examples {
+            Examples::Image { .. } => idxs.len() as f64,
+            Examples::Tokens { w, t, .. } => idxs
+                .iter()
+                .map(|&i| w[i * t..(i + 1) * t].iter().map(|&v| v as f64).sum::<f64>())
+                .sum(),
+        }
+    }
+}
+
+/// A capacity-padded batch ready for literal construction.
+#[derive(Debug, Clone)]
+pub struct PaddedBatch {
+    pub xf: Vec<f32>,
+    pub xi: Vec<i32>,
+    pub y: Vec<i32>,
+    pub w: Vec<f32>,
+    pub cap: usize,
+    pub row_dim: usize,
+    pub tokens: bool,
+    pub logical: usize,
+}
+
+impl PaddedBatch {
+    /// Sum of example weights (denominator of the weighted-mean loss).
+    pub fn weight_sum(&self) -> f64 {
+        self.w.iter().map(|&v| v as f64).sum()
+    }
+}
+
+/// A federated dataset: shared example store + per-client index sets +
+/// a held-out test set, as in the paper's experimental setup.
+#[derive(Debug, Clone)]
+pub struct Federated {
+    pub train: Dataset,
+    pub test: Dataset,
+    /// `clients[k]` = indices into `train` owned by client `k`.
+    pub clients: Vec<Vec<usize>>,
+}
+
+impl Federated {
+    pub fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Total training examples across clients (the paper's `n`).
+    pub fn total_examples(&self) -> usize {
+        self.clients.iter().map(|c| c.len()).sum()
+    }
+
+    /// `n_k` for every client.
+    pub fn client_sizes(&self) -> Vec<usize> {
+        self.clients.iter().map(|c| c.len()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_image() -> Dataset {
+        Dataset {
+            name: "t".into(),
+            examples: Examples::Image {
+                x: (0..12).map(|v| v as f32).collect(),
+                y: vec![0, 1, 2],
+                dim: 4,
+            },
+        }
+    }
+
+    #[test]
+    fn padded_batch_layout_and_weights() {
+        let d = tiny_image();
+        let b = d.padded_batch(&[2, 0], 4);
+        assert_eq!(b.logical, 2);
+        assert_eq!(b.xf.len(), 16);
+        assert_eq!(&b.xf[0..4], &[8.0, 9.0, 10.0, 11.0]); // row 0 = example 2
+        assert_eq!(&b.xf[4..8], &[0.0, 1.0, 2.0, 3.0]); // row 1 = example 0
+        assert_eq!(&b.xf[8..], &[0.0; 8]); // padding zeroed
+        assert_eq!(b.y, vec![2, 0, 0, 0]);
+        assert_eq!(b.w, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(b.weight_sum(), 2.0);
+    }
+
+    #[test]
+    fn token_batch_and_weight_of() {
+        let d = Dataset {
+            name: "tok".into(),
+            examples: Examples::Tokens {
+                x: vec![1, 2, 3, 4, 5, 6],
+                y: vec![2, 3, 0, 5, 6, 0],
+                w: vec![1.0, 1.0, 0.0, 1.0, 1.0, 1.0],
+                t: 3,
+            },
+        };
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.weight_of(&[0]), 2.0);
+        assert_eq!(d.weight_of(&[0, 1]), 5.0);
+        let b = d.padded_batch(&[1], 2);
+        assert_eq!(b.xi, vec![4, 5, 6, 0, 0, 0]);
+        assert_eq!(b.weight_sum(), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn padded_batch_overflow_panics() {
+        tiny_image().padded_batch(&[0, 1, 2], 2);
+    }
+}

@@ -1,0 +1,175 @@
+//! Client partitioning schemes — §3 of the paper.
+//!
+//! * **IID**: shuffle, then split into `k` equal shards.
+//! * **Pathological non-IID**: sort by label, cut into `k * s` shards,
+//!   deal each client `s` shards — "most clients will only have examples
+//!   of two digits" for s=2 on MNIST.
+//! * **Unbalanced**: Zipf-sized client datasets (footnote 4).
+
+use crate::data::rng::Rng;
+
+/// IID: shuffle and deal `n` examples into `k` equal(±1) shards.
+pub fn iid(n: usize, k: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(k >= 1 && n >= k, "iid: n={n} k={k}");
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    split_even(idx, k)
+}
+
+/// Pathological non-IID: sort by label, `k*shards_per_client` contiguous
+/// shards, assign each client `shards_per_client` shards at random.
+/// With `shards_per_client = 2` on MNIST this is the paper's
+/// 2-digits-per-client partition.
+pub fn pathological(
+    labels: &[i32],
+    k: usize,
+    shards_per_client: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let n = labels.len();
+    let total_shards = k * shards_per_client;
+    assert!(total_shards <= n, "pathological: {total_shards} shards > {n} examples");
+    let mut idx: Vec<usize> = (0..n).collect();
+    // stable sort by label keeps determinism
+    idx.sort_by_key(|&i| labels[i]);
+    let shard_size = n / total_shards;
+    let mut shard_ids: Vec<usize> = (0..total_shards).collect();
+    rng.shuffle(&mut shard_ids);
+    let mut clients = vec![Vec::new(); k];
+    for (pos, &shard) in shard_ids.iter().enumerate() {
+        let client = pos / shards_per_client;
+        let lo = shard * shard_size;
+        let hi = if shard == total_shards - 1 { n } else { lo + shard_size };
+        clients[client].extend_from_slice(&idx[lo..hi]);
+    }
+    clients
+}
+
+/// Unbalanced: Zipf-distributed client sizes over a shuffled pool
+/// (every example assigned exactly once; every client gets >= 1).
+pub fn unbalanced_zipf(n: usize, k: usize, s: f64, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(n >= k);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    // raw Zipf weights, normalized to sizes summing to n with min 1
+    let raw: Vec<f64> = (1..=k).map(|r| 1.0 / (r as f64).powf(s)).collect();
+    let total: f64 = raw.iter().sum();
+    let mut sizes: Vec<usize> = raw
+        .iter()
+        .map(|w| ((w / total) * n as f64).floor().max(1.0) as usize)
+        .collect();
+    // fix rounding drift
+    let mut assigned: usize = sizes.iter().sum();
+    let mut i = 0;
+    while assigned < n {
+        sizes[i % k] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    while assigned > n {
+        let j = sizes.iter().position(|&s| s > 1).expect("shrinkable");
+        sizes[j] -= 1;
+        assigned -= 1;
+    }
+    // deal in shuffled-client order so size rank isn't tied to client id
+    let mut order: Vec<usize> = (0..k).collect();
+    rng.shuffle(&mut order);
+    let mut clients = vec![Vec::new(); k];
+    let mut cursor = 0;
+    for (&client, &size) in order.iter().zip(&sizes) {
+        clients[client] = idx[cursor..cursor + size].to_vec();
+        cursor += size;
+    }
+    clients
+}
+
+fn split_even(idx: Vec<usize>, k: usize) -> Vec<Vec<usize>> {
+    let n = idx.len();
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut cursor = 0;
+    for c in 0..k {
+        let size = base + usize::from(c < extra);
+        out.push(idx[cursor..cursor + size].to_vec());
+        cursor += size;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_exact_partition(clients: &[Vec<usize>], n: usize) {
+        let mut all: Vec<usize> = clients.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "not an exact partition");
+    }
+
+    #[test]
+    fn iid_partition_exact_and_even() {
+        let mut rng = Rng::new(1);
+        let c = iid(1000, 100, &mut rng);
+        is_exact_partition(&c, 1000);
+        assert!(c.iter().all(|cl| cl.len() == 10));
+    }
+
+    #[test]
+    fn iid_uneven_remainder() {
+        let mut rng = Rng::new(2);
+        let c = iid(103, 10, &mut rng);
+        is_exact_partition(&c, 103);
+        let sizes: Vec<usize> = c.iter().map(|v| v.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        assert!(sizes.iter().all(|&s| s == 10 || s == 11));
+    }
+
+    #[test]
+    fn pathological_two_digits_per_client() {
+        // 600 examples, 10 labels, 20 clients x 2 shards of 15
+        let labels: Vec<i32> = (0..600).map(|i| (i / 60) as i32).collect();
+        let mut rng = Rng::new(3);
+        let clients = pathological(&labels, 20, 2, &mut rng);
+        is_exact_partition(&clients, 600);
+        for cl in &clients {
+            let mut ls: Vec<i32> = cl.iter().map(|&i| labels[i]).collect();
+            ls.sort_unstable();
+            ls.dedup();
+            // each client holds at most 2 distinct labels + shard boundaries
+            // can straddle a label change, so allow <= 4 but typical 1-2
+            assert!(ls.len() <= 4, "client sees {} labels", ls.len());
+        }
+        // crucially: the vast majority see <= 2 labels (paper's "most
+        // clients will only have examples of two digits")
+        let le2 = clients
+            .iter()
+            .filter(|cl| {
+                let mut ls: Vec<i32> = cl.iter().map(|&i| labels[i]).collect();
+                ls.sort_unstable();
+                ls.dedup();
+                ls.len() <= 2
+            })
+            .count();
+        assert!(le2 >= 15, "only {le2}/20 clients are <=2-label");
+    }
+
+    #[test]
+    fn unbalanced_sizes_are_zipfy() {
+        let mut rng = Rng::new(4);
+        let clients = unbalanced_zipf(10_000, 100, 1.2, &mut rng);
+        is_exact_partition(&clients, 10_000);
+        let mut sizes: Vec<usize> = clients.iter().map(|c| c.len()).collect();
+        assert!(sizes.iter().all(|&s| s >= 1));
+        sizes.sort_unstable();
+        // heavy head: biggest client much bigger than median
+        assert!(sizes[99] > 5 * sizes[50], "{:?}", &sizes[90..]);
+    }
+
+    #[test]
+    fn partitions_deterministic() {
+        let a = iid(100, 7, &mut Rng::new(9));
+        let b = iid(100, 7, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,312 @@
+//! Synthetic playwright — the Shakespeare corpus stand-in (DESIGN.md §2).
+//!
+//! The paper builds a client per *speaking role* (1146 clients), with
+//! heavily unbalanced line counts and a temporal 80/20 train/test split
+//! per role. We reproduce those *structural* properties with a seeded
+//! generative process:
+//!
+//! * a global order-1 character Markov model (shared linguistic core — a
+//!   global next-char model is learnable across clients),
+//! * per-role style: each role interpolates toward its own private
+//!   successor preferences (non-IID: a role's local distribution is a
+//!   biased, narrow slice of the global one),
+//! * Zipf-distributed lines-per-role (unbalanced),
+//! * per-role 80/20 temporal split (test = last 20% of lines, >=1).
+//!
+//! Characters are ids in `[0, VOCAB)`; lines become next-char LM rows of
+//! unroll `T` with per-token weights (0 = padding).
+
+use crate::data::rng::Rng;
+use crate::data::{Dataset, Examples, Federated};
+
+pub const VOCAB: usize = 90;
+pub const UNROLL: usize = 80;
+
+/// Global + per-role character transition structure.
+struct Style {
+    /// For each prev char: a few strongly preferred successors.
+    global: Vec<[u8; 4]>,
+}
+
+impl Style {
+    fn new(rng: &mut Rng) -> Self {
+        let global = (0..VOCAB)
+            .map(|_| {
+                let mut succ = [0u8; 4];
+                for s in succ.iter_mut() {
+                    *s = rng.below(VOCAB) as u8;
+                }
+                succ
+            })
+            .collect();
+        Style { global }
+    }
+
+    /// Sample the next char: global preference (60%), role preference
+    /// (25%), uniform exploration (15%).
+    fn next(&self, prev: usize, role_pref: &[u8], rng: &mut Rng) -> usize {
+        let r = rng.f64();
+        if r < 0.60 {
+            self.global[prev][rng.below(4)] as usize
+        } else if r < 0.85 {
+            role_pref[(prev + rng.below(3)) % role_pref.len()] as usize
+        } else {
+            rng.below(VOCAB)
+        }
+    }
+}
+
+/// Configuration for corpus synthesis.
+#[derive(Debug, Clone)]
+pub struct PlayConfig {
+    pub roles: usize,
+    /// Mean lines per role (actual counts are Zipf-skewed around this).
+    pub mean_lines: usize,
+    /// Zipf exponent for the lines-per-role distribution.
+    pub zipf_s: f64,
+    pub seed: u64,
+}
+
+impl Default for PlayConfig {
+    fn default() -> Self {
+        // paper scale: 1146 roles; our scaled default keeps the shape
+        Self {
+            roles: 1146,
+            mean_lines: 60,
+            zipf_s: 1.1,
+            seed: 0,
+        }
+    }
+}
+
+/// Build the by-role (natural, unbalanced, non-IID) federated corpus.
+pub fn by_role(cfg: &PlayConfig) -> Federated {
+    let (train_rows, test_rows, clients) = synthesize(cfg);
+    pack(train_rows, test_rows, clients, cfg, "by_role")
+}
+
+/// Build the balanced IID counterpart: same lines, shuffled and dealt
+/// evenly over the same number of clients (paper §3).
+pub fn iid(cfg: &PlayConfig) -> Federated {
+    let (train_rows, test_rows, _) = synthesize(cfg);
+    let n = train_rows.len();
+    let mut rng = Rng::new(cfg.seed ^ 0x11D);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let k = cfg.roles;
+    let mut clients = vec![Vec::new(); k];
+    for (pos, &row) in idx.iter().enumerate() {
+        clients[pos % k].push(row);
+    }
+    pack(train_rows, test_rows, clients, cfg, "iid")
+}
+
+type Row = (Vec<i32>, Vec<i32>, Vec<f32>); // (x, y, w) each UNROLL long
+
+fn synthesize(cfg: &PlayConfig) -> (Vec<Row>, Vec<Row>, Vec<Vec<usize>>) {
+    let mut rng = Rng::new(cfg.seed ^ 0x5A4E5);
+    let style = Style::new(&mut rng);
+
+    let mut train_rows: Vec<Row> = Vec::new();
+    let mut test_rows: Vec<Row> = Vec::new();
+    let mut clients: Vec<Vec<usize>> = Vec::with_capacity(cfg.roles);
+
+    for role in 0..cfg.roles {
+        let mut role_rng = rng.child(role as u64 + 1);
+        // role style: private preferred-successor table
+        let role_pref: Vec<u8> = (0..16).map(|_| role_rng.below(VOCAB) as u8).collect();
+        // Zipf line count, always >= 2 (paper: roles with >= 2 lines)
+        let z = role_rng.zipf(50, cfg.zipf_s); // 1..=50, mean ~ small
+        let lines = 2 + (cfg.mean_lines * z) / 8;
+
+        let mut role_train = Vec::new();
+        let n_test = ((lines as f64 * 0.2).ceil() as usize).max(1);
+        let n_train = lines - n_test;
+        for line_i in 0..lines {
+            // a line: random start char then Markov walk
+            let len = 12 + role_rng.below(UNROLL - 12); // 12..80 chars
+            let mut chars = Vec::with_capacity(len + 1);
+            chars.push(role_rng.below(VOCAB));
+            for _ in 0..len {
+                let prev = *chars.last().unwrap();
+                chars.push(style.next(prev, &role_pref, &mut role_rng));
+            }
+            let mut x = vec![0i32; UNROLL];
+            let mut y = vec![0i32; UNROLL];
+            let mut w = vec![0.0f32; UNROLL];
+            for i in 0..len.min(UNROLL) {
+                x[i] = chars[i] as i32;
+                y[i] = chars[i + 1] as i32;
+                w[i] = 1.0;
+            }
+            let row = (x, y, w);
+            if line_i < n_train {
+                role_train.push(row);
+            } else {
+                test_rows.push(row); // temporal split: last 20% per role
+            }
+        }
+        let base = train_rows.len();
+        let idxs: Vec<usize> = (0..role_train.len()).map(|i| base + i).collect();
+        train_rows.extend(role_train);
+        clients.push(idxs);
+    }
+    (train_rows, test_rows, clients)
+}
+
+fn pack(
+    train_rows: Vec<Row>,
+    test_rows: Vec<Row>,
+    clients: Vec<Vec<usize>>,
+    cfg: &PlayConfig,
+    tag: &str,
+) -> Federated {
+    Federated {
+        train: rows_to_dataset(train_rows, format!("shakespeare_like/{tag}/train(seed={})", cfg.seed)),
+        test: rows_to_dataset(test_rows, format!("shakespeare_like/{tag}/test(seed={})", cfg.seed)),
+        clients,
+    }
+}
+
+fn rows_to_dataset(rows: Vec<Row>, name: String) -> Dataset {
+    let n = rows.len();
+    let mut x = Vec::with_capacity(n * UNROLL);
+    let mut y = Vec::with_capacity(n * UNROLL);
+    let mut w = Vec::with_capacity(n * UNROLL);
+    for (rx, ry, rw) in rows {
+        x.extend(rx);
+        y.extend(ry);
+        w.extend(rw);
+    }
+    Dataset {
+        name,
+        examples: Examples::Tokens {
+            x,
+            y,
+            w,
+            t: UNROLL,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> PlayConfig {
+        PlayConfig {
+            roles: 40,
+            mean_lines: 20,
+            zipf_s: 1.1,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn by_role_structure() {
+        let fed = by_role(&small_cfg());
+        assert_eq!(fed.num_clients(), 40);
+        // every client holds >= 1 train line; every index valid & unique
+        let mut seen = vec![false; fed.train.len()];
+        for c in &fed.clients {
+            assert!(!c.is_empty());
+            for &i in c {
+                assert!(!seen[i], "index {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "orphan training rows");
+        assert!(fed.test.len() > 0);
+    }
+
+    #[test]
+    fn unbalanced_line_counts() {
+        let fed = by_role(&PlayConfig {
+            roles: 200,
+            ..small_cfg()
+        });
+        let mut sizes = fed.client_sizes();
+        sizes.sort_unstable();
+        // Zipf: the head must dominate the median
+        assert!(
+            sizes[199] >= 4 * sizes[100].max(1),
+            "not unbalanced: max {} median {}",
+            sizes[199],
+            sizes[100]
+        );
+    }
+
+    #[test]
+    fn iid_is_balanced_same_rows() {
+        let cfg = small_cfg();
+        let nat = by_role(&cfg);
+        let flat = iid(&cfg);
+        assert_eq!(nat.train.len(), flat.train.len());
+        let sizes = flat.client_sizes();
+        let (min, max) = (
+            *sizes.iter().min().unwrap(),
+            *sizes.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1, "iid not balanced: {min}..{max}");
+    }
+
+    #[test]
+    fn rows_are_valid_next_char_pairs() {
+        let fed = by_role(&small_cfg());
+        let Examples::Tokens { x, y, w, t } = &fed.train.examples else {
+            unreachable!()
+        };
+        assert_eq!(*t, UNROLL);
+        for r in 0..fed.train.len().min(50) {
+            let row = r * t;
+            let mut in_pad = false;
+            for i in 0..*t {
+                let wi = w[row + i];
+                assert!(wi == 0.0 || wi == 1.0);
+                if wi == 0.0 {
+                    in_pad = true;
+                } else {
+                    assert!(!in_pad, "weight rises after padding at row {r}");
+                    assert!((0..VOCAB as i32).contains(&x[row + i]));
+                    assert!((0..VOCAB as i32).contains(&y[row + i]));
+                }
+                // x shifted by one equals y where both valid
+                if i + 1 < *t && w[row + i] == 1.0 && w[row + i + 1] == 1.0 {
+                    assert_eq!(x[row + i + 1], y[row + i], "not a next-char row");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roles_have_distinct_styles() {
+        // role-conditional successor histograms should differ across roles
+        let fed = by_role(&PlayConfig {
+            roles: 2,
+            mean_lines: 400,
+            zipf_s: 0.01, // near-equal sizes: isolate style difference
+            seed: 9,
+        });
+        let Examples::Tokens { x, y, w, t } = &fed.train.examples else {
+            unreachable!()
+        };
+        let mut hist = [[0f64; VOCAB]; 2];
+        for (cl, idxs) in fed.clients.iter().enumerate() {
+            for &r in idxs {
+                for i in 0..*t {
+                    if w[r * t + i] == 1.0 && x[r * t + i] == 7 {
+                        hist[cl][y[r * t + i] as usize] += 1.0;
+                    }
+                }
+            }
+        }
+        for h in hist.iter_mut() {
+            let s: f64 = h.iter().sum();
+            if s > 0.0 {
+                h.iter_mut().for_each(|v| *v /= s);
+            }
+        }
+        let l1: f64 = (0..VOCAB).map(|v| (hist[0][v] - hist[1][v]).abs()).sum();
+        assert!(l1 > 0.15, "roles statistically identical: L1 {l1}");
+    }
+}

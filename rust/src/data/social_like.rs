@@ -1,0 +1,207 @@
+//! Synthetic social-network post corpus — the large-scale word-LM data
+//! (paper §3 "Large-scale LSTM experiments"; proprietary, so synthesized —
+//! DESIGN.md §2).
+//!
+//! Structural properties preserved: posts grouped by author (clients),
+//! 10k-word vocabulary, unroll 10, per-author topic skew (non-IID), author
+//! dataset size capped (paper: 5000 words), and a test set drawn from
+//! *held-out authors* (paper: "a test set of 1e5 posts from different
+//! (non-training) authors").
+//!
+//! Generative process: a handful of topics, each a permutation-successor
+//! bigram model over a Zipf unigram; authors mix 1-2 topics.
+
+use crate::data::rng::Rng;
+use crate::data::{Dataset, Examples, Federated};
+
+pub const VOCAB: usize = 10_000;
+pub const UNROLL: usize = 10;
+pub const TOPICS: usize = 8;
+
+#[derive(Debug, Clone)]
+pub struct SocialConfig {
+    pub authors: usize,
+    /// Mean posts per author (Zipf-skewed).
+    pub mean_posts: usize,
+    /// Held-out authors for the test set.
+    pub test_authors: usize,
+    pub seed: u64,
+}
+
+impl Default for SocialConfig {
+    fn default() -> Self {
+        // paper scale is 500k authors / 10M posts; scaled default keeps
+        // the shape (hundreds of authors) — configs can raise it.
+        Self {
+            authors: 400,
+            mean_posts: 30,
+            test_authors: 60,
+            seed: 0,
+        }
+    }
+}
+
+struct Topic {
+    /// successor word for strong-bigram draws
+    next: Vec<u32>,
+    /// Zipf skew for unigram draws
+    zipf_s: f64,
+    /// topic's vocabulary offset (rotates the Zipf head per topic)
+    offset: u32,
+}
+
+impl Topic {
+    fn new(rng: &mut Rng) -> Self {
+        // a pseudo-random permutation via affine map (a odd => bijection
+        // mod 2^k not vocab; use mul-mod with prime vocab-close modulus)
+        let a = 2 * (1 + rng.below(4999)) as u32 + 1;
+        let b = rng.below(VOCAB) as u32;
+        let next = (0..VOCAB as u32)
+            .map(|w| (w.wrapping_mul(a).wrapping_add(b)) % VOCAB as u32)
+            .collect();
+        Topic {
+            next,
+            zipf_s: 1.05 + 0.2 * rng.f64(),
+            offset: rng.below(VOCAB) as u32,
+        }
+    }
+
+    fn unigram(&self, rng: &mut Rng) -> u32 {
+        let r = rng.zipf(2000, self.zipf_s) as u32; // head of 2000 words
+        (r - 1 + self.offset) % VOCAB as u32
+    }
+
+    fn step(&self, prev: u32, rng: &mut Rng) -> u32 {
+        if rng.f64() < 0.65 {
+            self.next[prev as usize]
+        } else {
+            self.unigram(rng)
+        }
+    }
+}
+
+/// Build the by-author federated corpus plus held-out-author test set.
+pub fn by_author(cfg: &SocialConfig) -> Federated {
+    let mut rng = Rng::new(cfg.seed ^ 0x50C1A1);
+    let topics: Vec<Topic> = (0..TOPICS).map(|_| Topic::new(&mut rng)).collect();
+
+    let gen_author_rows = |author: u64, rng: &mut Rng, out: &mut Vec<(Vec<i32>, Vec<i32>, Vec<f32>)>| {
+        let mut arng = rng.child(author + 1);
+        let t_main = arng.below(TOPICS);
+        let t_alt = arng.below(TOPICS);
+        let z = arng.zipf(40, 1.1);
+        let posts = 1 + (cfg.mean_posts * z) / 8;
+        // cap: paper limits each client to 5000 words
+        let posts = posts.min(5000 / (UNROLL + 1));
+        for _ in 0..posts {
+            let topic = if arng.f64() < 0.8 { t_main } else { t_alt };
+            let tp = &topics[topic];
+            let mut words = Vec::with_capacity(UNROLL + 1);
+            words.push(tp.unigram(&mut arng));
+            for _ in 0..UNROLL {
+                let prev = *words.last().unwrap();
+                words.push(tp.step(prev, &mut arng));
+            }
+            let x: Vec<i32> = words[..UNROLL].iter().map(|&w| w as i32).collect();
+            let y: Vec<i32> = words[1..].iter().map(|&w| w as i32).collect();
+            let w = vec![1.0f32; UNROLL];
+            out.push((x, y, w));
+        }
+    };
+
+    let mut train_rows = Vec::new();
+    let mut clients = Vec::with_capacity(cfg.authors);
+    for a in 0..cfg.authors {
+        let base = train_rows.len();
+        gen_author_rows(a as u64, &mut rng, &mut train_rows);
+        clients.push((base..train_rows.len()).collect());
+    }
+    // held-out authors (ids beyond the training range) form the test set
+    let mut test_rows = Vec::new();
+    for a in 0..cfg.test_authors {
+        gen_author_rows((cfg.authors + a) as u64, &mut rng, &mut test_rows);
+    }
+
+    Federated {
+        train: rows_to_dataset(train_rows, format!("social_like/train(seed={})", cfg.seed)),
+        test: rows_to_dataset(test_rows, format!("social_like/test(seed={})", cfg.seed)),
+        clients,
+    }
+}
+
+fn rows_to_dataset(rows: Vec<(Vec<i32>, Vec<i32>, Vec<f32>)>, name: String) -> Dataset {
+    let n = rows.len();
+    let mut x = Vec::with_capacity(n * UNROLL);
+    let mut y = Vec::with_capacity(n * UNROLL);
+    let mut w = Vec::with_capacity(n * UNROLL);
+    for (rx, ry, rw) in rows {
+        x.extend(rx);
+        y.extend(ry);
+        w.extend(rw);
+    }
+    Dataset {
+        name,
+        examples: Examples::Tokens {
+            x,
+            y,
+            w,
+            t: UNROLL,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SocialConfig {
+        SocialConfig {
+            authors: 50,
+            mean_posts: 10,
+            test_authors: 10,
+            seed: 4,
+        }
+    }
+
+    #[test]
+    fn structure_and_caps() {
+        let fed = by_author(&cfg());
+        assert_eq!(fed.num_clients(), 50);
+        assert!(fed.test.len() > 0);
+        for c in &fed.clients {
+            assert!(!c.is_empty());
+            // word cap per client (paper: 5000)
+            assert!(c.len() * (UNROLL + 1) <= 5000 + UNROLL);
+        }
+    }
+
+    #[test]
+    fn vocab_in_range_and_bigram_structure() {
+        let fed = by_author(&cfg());
+        let Examples::Tokens { x, y, w, t } = &fed.train.examples else {
+            unreachable!()
+        };
+        assert_eq!(*t, UNROLL);
+        assert!(x.iter().all(|&v| (0..VOCAB as i32).contains(&v)));
+        assert!(y.iter().all(|&v| (0..VOCAB as i32).contains(&v)));
+        assert!(w.iter().all(|&v| v == 1.0));
+        // shifted alignment within rows
+        for r in 0..fed.train.len().min(30) {
+            for i in 0..*t - 1 {
+                assert_eq!(x[r * t + i + 1], y[r * t + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = by_author(&cfg());
+        let b = by_author(&cfg());
+        match (&a.train.examples, &b.train.examples) {
+            (Examples::Tokens { x: xa, .. }, Examples::Tokens { x: xb, .. }) => {
+                assert_eq!(xa, xb)
+            }
+            _ => unreachable!(),
+        }
+    }
+}

@@ -1,0 +1,466 @@
+//! Figure drivers — regenerate the data series behind every figure in the
+//! paper (1-10). Each writes CSVs under `runs/figN-*/` and prints a
+//! compact summary; DESIGN.md §3 maps figure → experiment.
+
+use crate::baselines::sgd::{self, SgdConfig};
+use crate::config::{BatchSize, FedConfig, Partition};
+use crate::data::Federated;
+use crate::federated::{self, updates_per_round, LocalSpec};
+use crate::params::interpolate;
+use crate::runtime::Engine;
+use crate::util::args::Args;
+use crate::Result;
+
+use super::{
+    cifar_fed, mnist_fed, run_one, shakespeare_fed, social_fed, ExpOptions, COMMON_FLAGS,
+};
+
+pub fn run(engine: &Engine, args: &Args) -> Result<()> {
+    args.check_known(&[COMMON_FLAGS, &["e-values"]].concat())?;
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let opts = ExpOptions::from_args(args)?;
+    let figs: Vec<u32> = if which == "all" {
+        vec![1, 2, 3, 4, 6, 7, 8, 9] // 5 & 10 need word_lstm artifacts
+    } else {
+        vec![which.parse()?]
+    };
+    for f in figs {
+        match f {
+            1 => figure1(engine, &opts)?,
+            2 => figure2(engine, &opts)?,
+            3 => figure3(engine, &opts, args)?,
+            4 => figure4(engine, &opts)?,
+            5 => figure5(engine, &opts)?,
+            6 => figure6(engine, &opts)?,
+            7 => figure7(engine, &opts)?,
+            8 => figure8(engine, &opts, args)?,
+            9 => figure9(engine, &opts)?,
+            10 => figure10(engine, &opts)?,
+            other => anyhow::bail!("no figure {other}"),
+        }
+    }
+    Ok(())
+}
+
+fn curve_csv(opts: &ExpOptions, name: &str, header: &str, rows: &[String]) -> Result<()> {
+    let dir = std::path::Path::new(&opts.out_root).join(name);
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("series.csv");
+    let mut out = String::from(header);
+    out.push('\n');
+    for r in rows {
+        out.push_str(r);
+        out.push('\n');
+    }
+    std::fs::write(&path, out)?;
+    println!("  -> {}", path.display());
+    Ok(())
+}
+
+/// Figure 1 — loss of θ·w + (1−θ)·w' for models trained from shared vs
+/// independent initialization (the averaging-works phenomenon).
+pub fn figure1(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+    println!("\n== Figure 1 — parameter-averaging interpolation ==");
+    let model = engine.model("mnist_2nn")?;
+    let fed = mnist_fed(opts.scale.max(0.02), Partition::Iid, opts.seed);
+    // two disjoint "clients": paper trained on 600-example IID shards
+    let a_idx = &fed.clients[0];
+    let b_idx = &fed.clients[1 % fed.num_clients()];
+    // paper: SGD lr=0.1, 240 updates of batch 50 (E=20 over 600 examples)
+    let train = |theta0: &[f32], idxs: &[usize], seed: u64| -> Result<Vec<f32>> {
+        let spec = LocalSpec {
+            epochs: (240 * 50 / idxs.len().max(1)).max(1),
+            batch: BatchSize::Fixed(50),
+            lr: 0.1,
+            shuffle_seed: seed,
+        };
+        Ok(federated::local_update(&model, &fed.train, idxs, theta0, &spec)?.theta)
+    };
+    // loss over the *full* training set, as in the paper
+    let full: Vec<usize> = (0..fed.train.len()).collect();
+    let loss_of = |theta: &[f32]| -> Result<f64> {
+        Ok(model
+            .eval_dataset(theta, &fed.train, Some(&full))?
+            .mean_loss())
+    };
+
+    let mut rows = Vec::new();
+    for (tag, seed_a, seed_b) in [("independent", 100, 200), ("shared", 300, 300)] {
+        let wa = train(&model.init(seed_a)?, a_idx, 1)?;
+        let wb = train(&model.init(seed_b)?, b_idx, 2)?;
+        let parent_best = loss_of(&wa)?.min(loss_of(&wb)?);
+        let mut min_mix = f64::INFINITY;
+        for i in 0..50 {
+            let theta = -0.2 + 1.4 * (i as f64 / 49.0);
+            let mixed = interpolate(&wb, &wa, theta as f32); // θ on w (=wa)
+            let l = loss_of(&mixed)?;
+            min_mix = min_mix.min(l);
+            rows.push(format!("{tag},{theta:.4},{l:.6}"));
+        }
+        println!(
+            "  {tag:<12} parents' best loss {parent_best:.4}; best mixture {min_mix:.4} {}",
+            if min_mix < parent_best {
+                "(averaging helps ✓)"
+            } else {
+                "(averaging hurts)"
+            }
+        );
+    }
+    curve_csv(opts, "fig1-interpolation", "init,theta,train_loss", &rows)
+}
+
+/// Figure 2 — test accuracy vs rounds, MNIST CNN (IID + non-IID) and
+/// Shakespeare LSTM (IID + by-role), C=0.1.
+pub fn figure2(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+    println!("\n== Figure 2 — accuracy vs communication rounds ==");
+    let mut runs: Vec<(&str, Federated, FedConfig)> = Vec::new();
+    for (pname, part) in [("iid", Partition::Iid), ("noniid", Partition::Pathological(2))] {
+        for (e, b, label) in [
+            (1usize, BatchSize::Full, "fedsgd"),
+            (5, BatchSize::Fixed(10), "fedavg-E5-B10"),
+        ] {
+            runs.push((
+                Box::leak(format!("cnn-{pname}-{label}").into_boxed_str()),
+                mnist_fed(opts.scale, part, opts.seed),
+                FedConfig {
+                    model: "mnist_cnn".into(),
+                    c: 0.1,
+                    e,
+                    b,
+                    lr: 0.1,
+                    rounds: opts.rounds,
+                    seed: opts.seed,
+                    ..Default::default()
+                },
+            ));
+        }
+    }
+    for (natural, pname) in [(false, "iid"), (true, "role")] {
+        for (e, b, label) in [
+            (1usize, BatchSize::Full, "fedsgd"),
+            (5, BatchSize::Fixed(10), "fedavg-E5-B10"),
+        ] {
+            runs.push((
+                Box::leak(format!("lstm-{pname}-{label}").into_boxed_str()),
+                shakespeare_fed(opts.scale, natural, opts.seed),
+                FedConfig {
+                    model: "shakespeare_lstm".into(),
+                    c: 0.1,
+                    e,
+                    b,
+                    lr: 1.0,
+                    rounds: opts.rounds,
+                    seed: opts.seed,
+                    ..Default::default()
+                },
+            ));
+        }
+    }
+    for (name, fed, cfg) in &runs {
+        let (res, _) = run_one(engine, fed, cfg, opts, &format!("fig2-{name}"))?;
+        println!(
+            "  {name:<24} final acc {:.3} (best {:.3})",
+            res.final_accuracy(),
+            res.accuracy.best_value().unwrap_or(0.0)
+        );
+    }
+    Ok(())
+}
+
+/// Figure 3 — many local epochs on the Shakespeare LSTM (B=10, C=0.1,
+/// fixed η): large E can plateau or diverge.
+pub fn figure3(engine: &Engine, opts: &ExpOptions, args: &Args) -> Result<()> {
+    println!("\n== Figure 3 — effect of large E (Shakespeare LSTM) ==");
+    let evals = args.str_or("e-values", "1,5,20,50");
+    let fed = shakespeare_fed(opts.scale, true, opts.seed);
+    let mut rows = Vec::new();
+    for e in evals.split(',') {
+        let e: usize = e.parse()?;
+        let cfg = FedConfig {
+            model: "shakespeare_lstm".into(),
+            c: 0.1,
+            e,
+            b: BatchSize::Fixed(10),
+            lr: 1.47, // the paper's fixed rate for this figure
+            rounds: opts.rounds,
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let (res, _) = run_one(engine, &fed, &cfg, opts, &format!("fig3-E{e}"))?;
+        for &(r, v) in res.accuracy.points() {
+            rows.push(format!("{e},{r},{v:.5}"));
+        }
+        println!("  E={e:<4} final acc {:.3}", res.final_accuracy());
+    }
+    curve_csv(opts, "fig3-large-E", "E,round,test_accuracy", &rows)
+}
+
+/// Figure 4 — CIFAR accuracy vs rounds: FedAvg(E=5,B=50,decay .99) vs
+/// FedSGD(decay .9934).
+pub fn figure4(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+    println!("\n== Figure 4 — CIFAR FedAvg vs FedSGD ==");
+    let fed = cifar_fed(opts.scale, opts.seed);
+    let fedsgd = FedConfig {
+        model: "cifar_cnn".into(),
+        c: 0.1,
+        lr: 0.1,
+        lr_decay: 0.9934,
+        rounds: opts.rounds,
+        seed: opts.seed,
+        ..Default::default()
+    }
+    .fedsgd();
+    let fedavg = FedConfig {
+        model: "cifar_cnn".into(),
+        c: 0.1,
+        e: 5,
+        b: BatchSize::Fixed(50),
+        lr: 0.1,
+        lr_decay: 0.99,
+        rounds: opts.rounds,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let (r1, _) = run_one(engine, &fed, &fedsgd, opts, "fig4-fedsgd")?;
+    let (r2, _) = run_one(engine, &fed, &fedavg, opts, "fig4-fedavg")?;
+    println!(
+        "  FedSGD final {:.3}; FedAvg final {:.3}",
+        r1.final_accuracy(),
+        r2.final_accuracy()
+    );
+    Ok(())
+}
+
+/// Figure 5 — large-scale word LM: FedAvg vs FedSGD at their best rates
+/// (paper: FedSGD η=18, FedAvg η=9, 200 clients/round, E=1, B=8).
+pub fn figure5(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+    println!("\n== Figure 5 — large-scale word-LSTM ==");
+    if engine.manifest().model("word_lstm").is_err() {
+        println!("  SKIP: word_lstm artifacts missing — run `make artifacts-full`");
+        return Ok(());
+    }
+    let fed = social_fed(opts.scale, opts.seed);
+    let k = fed.num_clients();
+    let c = (200.0 / k as f64).min(1.0); // paper: 200 clients/round
+    let fedsgd = FedConfig {
+        model: "word_lstm".into(),
+        c,
+        lr: 18.0,
+        rounds: opts.rounds,
+        eval_every: 2,
+        seed: opts.seed,
+        ..Default::default()
+    }
+    .fedsgd();
+    let fedavg = FedConfig {
+        model: "word_lstm".into(),
+        c,
+        e: 1,
+        b: BatchSize::Fixed(8),
+        lr: 9.0,
+        rounds: opts.rounds,
+        eval_every: 2,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let (r1, _) = run_one(engine, &fed, &fedsgd, opts, "fig5-fedsgd")?;
+    let (r2, _) = run_one(engine, &fed, &fedavg, opts, "fig5-fedavg")?;
+    println!(
+        "  FedSGD final {:.4}; FedAvg final {:.4}",
+        r1.final_accuracy(),
+        r2.final_accuracy()
+    );
+    Ok(())
+}
+
+/// Figure 6 — MNIST CNN *training loss* vs rounds (log-y in the paper).
+pub fn figure6(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+    println!("\n== Figure 6 — training-loss convergence (MNIST CNN) ==");
+    let mut rows = Vec::new();
+    for (pname, part) in [("iid", Partition::Iid), ("noniid", Partition::Pathological(2))] {
+        for (e, b, label) in [
+            (1usize, BatchSize::Full, "fedsgd"),
+            (5, BatchSize::Fixed(10), "fedavg-E5-B10"),
+        ] {
+            let fed = mnist_fed(opts.scale, part, opts.seed);
+            let cfg = FedConfig {
+                model: "mnist_cnn".into(),
+                c: 0.1,
+                e,
+                b,
+                lr: 0.1,
+                rounds: opts.rounds,
+                track_train_loss: true,
+                seed: opts.seed,
+                ..Default::default()
+            };
+            let (res, _) = run_one(engine, &fed, &cfg, opts, &format!("fig6-{pname}-{label}"))?;
+            let tl = res.train_loss.as_ref().expect("tracked");
+            for &(r, v) in tl.points() {
+                rows.push(format!("{pname}-{label},{r},{v:.6}"));
+            }
+            println!(
+                "  {pname}-{label:<14} final train loss {:.4}",
+                tl.last_value().unwrap_or(f64::NAN)
+            );
+        }
+    }
+    curve_csv(opts, "fig6-train-loss", "series,round,train_loss", &rows)
+}
+
+/// Figure 7 — 2NN accuracy curves, IID and non-IID (appendix).
+pub fn figure7(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+    println!("\n== Figure 7 — MNIST 2NN curves ==");
+    for (pname, part) in [("iid", Partition::Iid), ("noniid", Partition::Pathological(2))] {
+        for (e, b, label) in [
+            (1usize, BatchSize::Full, "fedsgd"),
+            (10, BatchSize::Fixed(10), "fedavg-E10-B10"),
+        ] {
+            let fed = mnist_fed(opts.scale, part, opts.seed);
+            let cfg = FedConfig {
+                model: "mnist_2nn".into(),
+                c: 0.1,
+                e,
+                b,
+                lr: 0.1,
+                rounds: opts.rounds,
+                seed: opts.seed,
+                ..Default::default()
+            };
+            let (res, _) = run_one(engine, &fed, &cfg, opts, &format!("fig7-{pname}-{label}"))?;
+            println!("  {pname}-{label:<15} final acc {:.3}", res.final_accuracy());
+        }
+    }
+    Ok(())
+}
+
+/// Figure 8 — large-E training loss for the MNIST CNN (appendix).
+pub fn figure8(engine: &Engine, opts: &ExpOptions, args: &Args) -> Result<()> {
+    println!("\n== Figure 8 — effect of large E (MNIST CNN, train loss) ==");
+    let evals = args.str_or("e-values", "1,5,20,50");
+    let mut rows = Vec::new();
+    for (pname, part) in [("iid", Partition::Iid), ("noniid", Partition::Pathological(2))] {
+        let fed = mnist_fed(opts.scale, part, opts.seed);
+        for e in evals.split(',') {
+            let e: usize = e.parse()?;
+            let cfg = FedConfig {
+                model: "mnist_cnn".into(),
+                c: 0.1,
+                e,
+                b: BatchSize::Fixed(10),
+                lr: 0.1,
+                rounds: opts.rounds,
+                track_train_loss: true,
+                seed: opts.seed,
+                ..Default::default()
+            };
+            let (res, _) =
+                run_one(engine, &fed, &cfg, opts, &format!("fig8-{pname}-E{e}"))?;
+            let tl = res.train_loss.as_ref().expect("tracked");
+            for &(r, v) in tl.points() {
+                rows.push(format!("{pname},{e},{r},{v:.6}"));
+            }
+            println!(
+                "  {pname} E={e:<4} final train loss {:.4}",
+                tl.last_value().unwrap_or(f64::NAN)
+            );
+        }
+    }
+    curve_csv(opts, "fig8-large-E-cnn", "partition,E,round,train_loss", &rows)
+}
+
+/// Figure 9 — accuracy vs number of minibatch gradient computations
+/// (B=50): sequential SGD vs FedAvg at various (C, E).
+pub fn figure9(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+    println!("\n== Figure 9 — progress per minibatch computation (CIFAR) ==");
+    let fed = cifar_fed(opts.scale, opts.seed);
+    let mut rows = Vec::new();
+
+    let sgd_cfg = SgdConfig {
+        model: "cifar_cnn".into(),
+        batch: 50,
+        lr: 0.1,
+        lr_decay: 1.0,
+        updates: opts.rounds * 10,
+        eval_every: (opts.rounds / 4).max(1),
+        target_accuracy: None,
+        seed: opts.seed,
+    };
+    let sgd_res = sgd::run(engine, &fed.train, &fed.test, &sgd_cfg, Some(opts.eval_cap))?;
+    for &(u, v) in sgd_res.accuracy.points() {
+        rows.push(format!("sgd,{u},{v:.5}"));
+    }
+    println!(
+        "  SGD: final acc {:.3} after {} updates",
+        sgd_res.accuracy.last_value().unwrap_or(0.0),
+        sgd_res.updates_run
+    );
+
+    let nk = fed.total_examples() / fed.num_clients();
+    for (c, e) in [(0.0, 1usize), (0.1, 1), (0.1, 5)] {
+        let cfg = FedConfig {
+            model: "cifar_cnn".into(),
+            c,
+            e,
+            b: BatchSize::Fixed(50),
+            lr: 0.1,
+            rounds: opts.rounds,
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let (res, _) = run_one(engine, &fed, &cfg, opts, &format!("fig9-C{c}-E{e}"))?;
+        // x-axis: minibatch grads = round * m * u_k
+        let m = cfg.clients_per_round(fed.num_clients());
+        let per_round = updates_per_round(e, nk, cfg.b) * m as f64;
+        for &(r, v) in res.accuracy.points() {
+            rows.push(format!("fedavg-C{c}-E{e},{:.0},{v:.5}", r as f64 * per_round));
+        }
+        println!(
+            "  FedAvg C={c} E={e}: final acc {:.3} ({:.0} grads/round)",
+            res.final_accuracy(),
+            per_round
+        );
+    }
+    curve_csv(opts, "fig9-minibatch-grads", "series,minibatch_grads,test_accuracy", &rows)
+}
+
+/// Figure 10 — word-LSTM: E=1 vs E=5 and accuracy variance over rounds.
+pub fn figure10(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+    println!("\n== Figure 10 — word-LSTM E=1 vs E=5 ==");
+    if engine.manifest().model("word_lstm").is_err() {
+        println!("  SKIP: word_lstm artifacts missing — run `make artifacts-full`");
+        return Ok(());
+    }
+    let fed = social_fed(opts.scale, opts.seed);
+    let k = fed.num_clients();
+    let mut rows = Vec::new();
+    for e in [1usize, 5] {
+        let cfg = FedConfig {
+            model: "word_lstm".into(),
+            c: (200.0 / k as f64).min(1.0),
+            e,
+            b: BatchSize::Fixed(8),
+            lr: 9.0,
+            rounds: opts.rounds,
+            eval_every: 2, // paper evaluates every 20 rounds at full scale
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let (res, _) = run_one(engine, &fed, &cfg, opts, &format!("fig10-E{e}"))?;
+        // variance of accuracy across eval points after warmup
+        let pts: Vec<f64> = res.accuracy.points().iter().map(|&(_, v)| v).collect();
+        let tail = &pts[pts.len() / 2..];
+        let mean = tail.iter().sum::<f64>() / tail.len().max(1) as f64;
+        let var = tail.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+            / tail.len().max(1) as f64;
+        for &(r, v) in res.accuracy.points() {
+            rows.push(format!("E{e},{r},{v:.5}"));
+        }
+        println!("  E={e}: final acc {:.4}, tail var {var:.2e}", res.final_accuracy());
+    }
+    curve_csv(opts, "fig10-word-lstm", "series,round,test_accuracy", &rows)
+}

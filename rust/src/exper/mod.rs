@@ -1,0 +1,258 @@
+//! Experiment harnesses: one driver per table/figure in the paper's
+//! evaluation (DESIGN.md §3 maps them). Shared here: scaled workload
+//! builders and run helpers.
+//!
+//! Every driver accepts `--scale` (default well below 1.0 — this testbed
+//! is a single CPU core; `--scale 1.0` is the paper-sized configuration)
+//! plus `--rounds`, `--target`, `--eval-cap` overrides, and prints a
+//! paper-formatted table/series while persisting curves under `runs/`.
+
+pub mod figures;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+
+use crate::config::{FedConfig, Partition, ScaleProfile};
+use crate::data::rng::Rng;
+use crate::data::{cifar_like, mnist_like, partition, shakespeare_like, social_like, Federated};
+use crate::federated::{self, RunResult, ServerOptions};
+use crate::runtime::Engine;
+use crate::Result;
+
+/// Harness-wide options parsed from the CLI.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub scale: f64,
+    /// hard cap on rounds per run (on top of config's own).
+    pub rounds: usize,
+    /// test-set eval cap (examples) for speed.
+    pub eval_cap: usize,
+    /// override the accuracy target (fraction).
+    pub target: Option<f64>,
+    pub seed: u64,
+    pub out_root: String,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        Self {
+            scale: 0.05,
+            rounds: 60,
+            eval_cap: 600,
+            target: None,
+            seed: 42,
+            out_root: "runs".into(),
+        }
+    }
+}
+
+impl ExpOptions {
+    pub fn from_args(args: &crate::util::args::Args) -> Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            scale: args.f64_or("scale", d.scale)?,
+            rounds: args.usize_or("rounds", d.rounds)?,
+            eval_cap: args.usize_or("eval-cap", d.eval_cap)?,
+            target: match args.str_opt("target") {
+                Some(t) => Some(t.parse()?),
+                None => None,
+            },
+            seed: args.u64_or("seed", d.seed)?,
+            out_root: args.str_or("out", &d.out_root),
+        })
+    }
+
+    pub fn server_options(&self) -> ServerOptions {
+        ServerOptions {
+            eval_cap: Some(self.eval_cap),
+            ..Default::default()
+        }
+    }
+}
+
+/// Flags shared by the table/figure drivers.
+pub const COMMON_FLAGS: &[&str] = &[
+    "scale", "rounds", "eval-cap", "target", "seed", "out", "rows", "lr", "quiet",
+];
+
+// ---------------------------------------------------------------- workloads
+
+/// MNIST-like federated workload (paper: K=100 clients x 600 examples).
+pub fn mnist_fed(scale: f64, part: Partition, seed: u64) -> Federated {
+    let sp = ScaleProfile::new(scale);
+    // floor K at 20 so C=0.1 still selects m=2 clients — with m=1 the
+    // pathological partition degenerates (each round sees 2 digits only),
+    // which the paper's K=100 never exhibits.
+    let k = sp.count(100, 20);
+    let per_client = sp.count(600, 60);
+    let n = k * per_client;
+    let test_n = sp.count(10_000, 600);
+    let gen = mnist_like::MnistLike::new(seed);
+    let train = gen.dataset(n, 0);
+    let test = gen.dataset(test_n, 1);
+    let mut rng = Rng::new(seed ^ 0x9A27);
+    let labels: Vec<i32> = (0..n).map(|i| train.label(i)).collect();
+    let clients = match part {
+        Partition::Iid => partition::iid(n, k, &mut rng),
+        Partition::Pathological(s) => partition::pathological(&labels, k, s, &mut rng),
+        Partition::Unbalanced => partition::unbalanced_zipf(n, k, 1.2, &mut rng),
+        Partition::Natural => panic!("mnist has no natural partition"),
+    };
+    Federated {
+        train,
+        test,
+        clients,
+    }
+}
+
+/// CIFAR-like federated workload (paper: 100 clients x 500, IID only).
+pub fn cifar_fed(scale: f64, seed: u64) -> Federated {
+    let sp = ScaleProfile::new(scale);
+    let k = sp.count(100, 10);
+    let per_client = sp.count(500, 50);
+    let n = k * per_client;
+    let test_n = sp.count(10_000, 500);
+    let gen = cifar_like::CifarLike::new(seed);
+    let train = gen.dataset(n, 0);
+    let test = gen.dataset(test_n, 1);
+    let mut rng = Rng::new(seed ^ 0xC1F);
+    let clients = partition::iid(n, k, &mut rng);
+    Federated {
+        train,
+        test,
+        clients,
+    }
+}
+
+/// Shakespeare-like workload; `natural=true` = by-role (unbalanced,
+/// non-IID), else the balanced IID re-deal (paper §3).
+pub fn shakespeare_fed(scale: f64, natural: bool, seed: u64) -> Federated {
+    let sp = ScaleProfile::new(scale);
+    let cfg = shakespeare_like::PlayConfig {
+        roles: sp.count(1146, 24),
+        mean_lines: 24,
+        zipf_s: 1.1,
+        seed,
+    };
+    if natural {
+        shakespeare_like::by_role(&cfg)
+    } else {
+        shakespeare_like::iid(&cfg)
+    }
+}
+
+/// Social-post word-LM workload (paper: 500k authors; structurally scaled).
+pub fn social_fed(scale: f64, seed: u64) -> Federated {
+    let sp = ScaleProfile::new(scale);
+    let cfg = social_like::SocialConfig {
+        authors: sp.count(4000, 60),
+        mean_posts: 24,
+        test_authors: sp.count(400, 20),
+        seed,
+    };
+    social_like::by_author(&cfg)
+}
+
+// ------------------------------------------------------------------ helpers
+
+/// Run one config (with harness caps applied) and return the result plus
+/// its rounds-to-target under `target`.
+pub fn run_one(
+    engine: &Engine,
+    fed: &Federated,
+    cfg: &FedConfig,
+    opts: &ExpOptions,
+    run_name: &str,
+) -> Result<(RunResult, Option<f64>)> {
+    let mut cfg = cfg.clone();
+    cfg.rounds = cfg.rounds.min(opts.rounds);
+    if let Some(t) = cfg.target_accuracy {
+        // keep running past target only if eval cadence might overshoot
+        cfg.target_accuracy = Some(t);
+    }
+    let mut sopts = opts.server_options();
+    sopts.telemetry = Some(crate::telemetry::RunWriter::create(
+        &opts.out_root,
+        run_name,
+    )?);
+    let res = federated::run(engine, fed, &cfg, sopts)?;
+    let rtt = cfg
+        .target_accuracy
+        .and_then(|t| res.accuracy.rounds_to_target(t));
+    Ok((res, rtt))
+}
+
+/// Render a markdown-ish table row list with an aligned header.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_fed_scales_and_partitions() {
+        let fed = mnist_fed(0.05, Partition::Iid, 1);
+        assert_eq!(fed.num_clients(), 20); // floored so C=0.1 keeps m>=2
+        assert_eq!(fed.total_examples(), fed.train.len());
+        let noniid = mnist_fed(0.05, Partition::Pathological(2), 1);
+        // pathological: most clients see <= 2 labels
+        let mut le2 = 0;
+        for c in &noniid.clients {
+            let mut ls: Vec<i32> = c.iter().map(|&i| noniid.train.label(i)).collect();
+            ls.sort_unstable();
+            ls.dedup();
+            if ls.len() <= 2 {
+                le2 += 1;
+            }
+        }
+        assert!(le2 * 2 >= noniid.num_clients(), "{le2}");
+    }
+
+    #[test]
+    fn shakespeare_fed_shapes() {
+        let nat = shakespeare_fed(0.02, true, 3);
+        let iid = shakespeare_fed(0.02, false, 3);
+        assert_eq!(nat.num_clients(), iid.num_clients());
+        assert_eq!(nat.train.len(), iid.train.len());
+        assert!(nat.test.len() > 0);
+    }
+
+    #[test]
+    fn exp_options_parse() {
+        let args = crate::util::args::Args::parse_from(
+            ["--scale", "0.1", "--rounds", "9", "--target", "0.5"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let o = ExpOptions::from_args(&args).unwrap();
+        assert_eq!(o.scale, 0.1);
+        assert_eq!(o.rounds, 9);
+        assert_eq!(o.target, Some(0.5));
+    }
+}

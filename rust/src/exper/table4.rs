@@ -1,0 +1,36 @@
+//! Table 4 (appendix) — the 2NN (E, B) grid at C=0.1, same methodology
+//! as Table 2 but for the MNIST 2NN at its own target accuracy.
+
+use crate::config::BatchSize;
+use crate::runtime::Engine;
+use crate::util::args::Args;
+use crate::Result;
+
+use super::table2::{run_grid, GridSpec};
+use super::{ExpOptions, COMMON_FLAGS};
+
+/// Paper Table 4 rows (E, B); first row is FedSGD.
+pub const ROWS_2NN: [(usize, BatchSize); 9] = [
+    (1, BatchSize::Full), // FedSGD
+    (10, BatchSize::Full),
+    (1, BatchSize::Fixed(50)),
+    (20, BatchSize::Full),
+    (1, BatchSize::Fixed(10)),
+    (10, BatchSize::Fixed(50)),
+    (20, BatchSize::Fixed(50)),
+    (10, BatchSize::Fixed(10)),
+    (20, BatchSize::Fixed(10)),
+];
+
+pub fn run(engine: &Engine, args: &Args) -> Result<()> {
+    args.check_known(&[COMMON_FLAGS, &["lr", "target-noniid"]].concat())?;
+    let opts = ExpOptions::from_args(args)?;
+    let spec = GridSpec {
+        model: "mnist_2nn",
+        rows: &ROWS_2NN,
+        target: opts.target.unwrap_or(0.80),
+        target_noniid: args.f64_or("target-noniid", 0.55)?,
+        lr: args.f64_or("lr", 0.1)?,
+    };
+    run_grid(engine, &opts, &spec)
+}

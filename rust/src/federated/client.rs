@@ -1,0 +1,115 @@
+//! ClientUpdate — the on-device half of Algorithm 1.
+//!
+//! ```text
+//! ClientUpdate(k, w):
+//!   B ← split P_k into batches of size B
+//!   for each local epoch i from 1 to E:
+//!     for batch b ∈ B:  w ← w − η ∇ℓ(w; b)
+//!   return w
+//! ```
+//!
+//! `B = ∞` (the paper's full-batch setting, and all of FedSGD) is executed
+//! exactly via chunked gradient accumulation + a fused apply: per-example
+//! gradients are linear, so summing fixed-capacity `gradacc` chunks and
+//! dividing by `n_k` reproduces the full-batch gradient bit-for-bit up to
+//! f32 addition order (verified by the integration tests).
+
+use crate::config::BatchSize;
+use crate::data::rng::Rng;
+use crate::data::Dataset;
+use crate::params::ParamVec;
+use crate::runtime::Model;
+use crate::Result;
+
+/// Specification of one client's local work in one round.
+#[derive(Debug, Clone)]
+pub struct LocalSpec {
+    pub epochs: usize,
+    pub batch: BatchSize,
+    pub lr: f32,
+    /// seed domain-separating (run, round, client).
+    pub shuffle_seed: u64,
+}
+
+/// Result of a local update: new parameters + the client's example weight
+/// (`n_k`) + how many SGD steps it took (the paper's `u_k` accounting).
+#[derive(Debug, Clone)]
+pub struct LocalResult {
+    pub theta: ParamVec,
+    pub weight: f64,
+    pub steps: u64,
+}
+
+/// Run ClientUpdate for client data `idxs` starting from `theta0`.
+pub fn local_update(
+    model: &Model<'_>,
+    data: &Dataset,
+    idxs: &[usize],
+    theta0: &[f32],
+    spec: &LocalSpec,
+) -> Result<LocalResult> {
+    assert!(!idxs.is_empty(), "client with no data");
+    let mut theta = theta0.to_vec();
+    let mut steps = 0u64;
+    let weight = data.weight_of(idxs);
+
+    match spec.batch {
+        BatchSize::Full => {
+            // E epochs of exact full-batch gradient descent
+            for _ in 0..spec.epochs {
+                let (g, _) = model.full_gradient(&theta, data, idxs)?;
+                theta = model.apply(&theta, &g, spec.lr)?;
+                steps += 1;
+            }
+        }
+        BatchSize::Fixed(b) => {
+            let cap = model
+                .meta()
+                .step_capacity_for(b)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "no step executable for B={b} on {} (capacities {:?})",
+                    model.meta().name,
+                    model.meta().step_batches
+                ))?;
+            let mut order = idxs.to_vec();
+            let mut rng = Rng::new(spec.shuffle_seed);
+            for _ in 0..spec.epochs {
+                rng.shuffle(&mut order);
+                for chunk in order.chunks(b) {
+                    let batch = data.padded_batch(chunk, cap);
+                    theta = model.step(&theta, &batch, spec.lr)?;
+                    steps += 1;
+                }
+            }
+        }
+    }
+    Ok(LocalResult {
+        theta,
+        weight,
+        steps,
+    })
+}
+
+/// Expected local updates per round for a client of size `n_k` —
+/// the paper's `u_k = E · n_k / B` statistic (Table 2's `u` column).
+pub fn updates_per_round(e: usize, n_k: usize, b: BatchSize) -> f64 {
+    match b {
+        BatchSize::Full => e as f64,
+        BatchSize::Fixed(b) => e as f64 * (n_k as f64 / b as f64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u_statistic_matches_paper() {
+        // paper Table 2: MNIST CNN n/K=600: (E,B)=(1,50) -> u=12;
+        // (5,10) -> u=300 ; (E,B)=(5,inf) -> 5; (20, inf) -> 20
+        assert_eq!(updates_per_round(1, 600, BatchSize::Fixed(50)), 12.0);
+        assert_eq!(updates_per_round(5, 600, BatchSize::Fixed(10)), 300.0);
+        assert_eq!(updates_per_round(5, 600, BatchSize::Full), 5.0);
+        assert_eq!(updates_per_round(20, 600, BatchSize::Full), 20.0);
+    }
+}

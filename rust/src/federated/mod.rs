@@ -1,0 +1,19 @@
+//! FederatedAveraging (Algorithm 1) and its machinery.
+//!
+//! * [`server`] — the round loop + weighted model averaging (the paper's
+//!   contribution).
+//! * [`client`] — ClientUpdate: E local epochs of B-sized SGD, with the
+//!   exact `B = ∞` path via gradient accumulation.
+//! * [`sampler`] — per-round client selection (`m = max(C·K, 1)`),
+//!   optionally availability-filtered.
+//!
+//! FedSGD is not a separate implementation: it is the `E=1, B=∞` point of
+//! the family (`FedConfig::fedsgd()`), exactly as the paper defines it.
+
+pub mod client;
+pub mod sampler;
+pub mod server;
+
+pub use client::{local_update, updates_per_round, LocalResult, LocalSpec};
+pub use sampler::ClientSampler;
+pub use server::{run, RunResult, ServerOptions};

@@ -1,0 +1,97 @@
+//! Per-round client sampling — `S_t ← (random set of m clients)`.
+//!
+//! Uniform without replacement over the (optionally availability-filtered)
+//! client population, with a deterministic per-round stream so runs are
+//! reproducible and rounds are independent of evaluation cadence.
+
+use crate::comms::Availability;
+use crate::data::rng::Rng;
+
+pub struct ClientSampler {
+    root: Rng,
+    availability: Option<Availability>,
+}
+
+impl ClientSampler {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            root: Rng::new(seed ^ 0x5A3B1E),
+            availability: None,
+        }
+    }
+
+    /// Enable the availability trace (clients online w.p. `p` per round).
+    pub fn with_availability(mut self, p_online: f64, seed: u64) -> Self {
+        self.availability = Some(Availability::new(p_online, seed));
+        self
+    }
+
+    /// Sample `m` distinct clients out of `k` for `round`.
+    /// If fewer than `m` clients are online, all online clients are used
+    /// (the synchronous protocol proceeds with who showed up).
+    pub fn sample(&mut self, round: u64, k: usize, m: usize) -> Vec<usize> {
+        let mut rng = self.root.child(round.wrapping_add(1));
+        match &mut self.availability {
+            None => rng.sample_indices(k, m.min(k)),
+            Some(av) => {
+                let online = av.online(k);
+                let take = m.min(online.len());
+                let picks = rng.sample_indices(online.len(), take);
+                picks.into_iter().map(|i| online[i]).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_and_in_range() {
+        let mut s = ClientSampler::new(1);
+        for round in 0..20 {
+            let picks = s.sample(round, 100, 10);
+            assert_eq!(picks.len(), 10);
+            let mut p = picks.clone();
+            p.sort_unstable();
+            p.dedup();
+            assert_eq!(p.len(), 10);
+            assert!(p.iter().all(|&c| c < 100));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_round_independent_of_history() {
+        let mut a = ClientSampler::new(7);
+        let mut b = ClientSampler::new(7);
+        // advance `a` through extra rounds first — round 5 must not change
+        for r in 0..5 {
+            a.sample(r, 50, 5);
+        }
+        assert_eq!(a.sample(5, 50, 5), b.sample(5, 50, 5));
+    }
+
+    #[test]
+    fn covers_population_over_time() {
+        let mut s = ClientSampler::new(3);
+        let mut seen = vec![false; 20];
+        for round in 0..200 {
+            for c in s.sample(round, 20, 2) {
+                seen[c] = true;
+            }
+        }
+        assert!(seen.iter().all(|&v| v), "some client never sampled");
+    }
+
+    #[test]
+    fn availability_limits_sample() {
+        let mut s = ClientSampler::new(5).with_availability(0.2, 9);
+        for round in 0..10 {
+            let picks = s.sample(round, 30, 30);
+            // with p=0.2 it's (astronomically) unlikely all 30 are online
+            assert!(picks.len() < 30);
+            assert!(!picks.is_empty());
+        }
+    }
+}

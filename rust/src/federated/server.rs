@@ -1,0 +1,307 @@
+//! The FedAvg server — Algorithm 1 of the paper.
+//!
+//! ```text
+//! initialize w_0
+//! for each round t = 1, 2, ...:
+//!   m ← max(C·K, 1)
+//!   S_t ← (random set of m clients)
+//!   for each client k ∈ S_t in parallel:
+//!     w_{t+1}^k ← ClientUpdate(k, w_t)
+//!   w_{t+1} ← Σ_k (n_k/n) · w_{t+1}^k
+//! ```
+//!
+//! The averaging weights use `n` = total examples across the *selected*
+//! clients (the standard reading of Algorithm 1, since unselected clients
+//! produce no update). FedSGD is exactly this loop with `E=1, B=∞`.
+
+use crate::comms::{CommModel, CommSim, CommTotals};
+use crate::compression::{dequantize, quantize, top_k, ErrorFeedback};
+use crate::config::FedConfig;
+use crate::data::rng::Rng;
+use crate::data::Federated;
+use crate::federated::client::{local_update, LocalSpec};
+use crate::federated::sampler::ClientSampler;
+use crate::metrics::LearningCurve;
+use crate::params::{weighted_mean, ParamVec};
+use crate::privacy::{clip, GaussianMechanism, SecureAggregator};
+use crate::runtime::Engine;
+use crate::telemetry::{RoundRecord, RunWriter};
+use crate::Result;
+
+/// Differential-privacy knobs (paper §4 future work; Abadi et al. recipe).
+#[derive(Debug, Clone, Copy)]
+pub struct DpConfig {
+    /// per-client update L2 clip bound.
+    pub clip_norm: f64,
+    /// Gaussian noise multiplier σ.
+    pub sigma: f64,
+}
+
+/// Uplink compression knobs (Konečný et al. follow-up).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompressionConfig {
+    /// keep this fraction of coordinates by magnitude (with server-side
+    /// error feedback), e.g. 0.01.
+    pub top_k_frac: Option<f64>,
+    /// quantize kept values to this many bits (1..=8), stochastic.
+    pub quant_bits: Option<u8>,
+}
+
+/// Harness options orthogonal to the algorithm itself.
+pub struct ServerOptions {
+    pub telemetry: Option<RunWriter>,
+    pub comm_model: CommModel,
+    /// client online-probability per round (None = always available).
+    pub availability: Option<f64>,
+    /// evaluate on at most this many test examples (None = all).
+    pub eval_cap: Option<usize>,
+    /// evaluate training loss on at most this many examples.
+    pub train_eval_cap: usize,
+    /// differentially-private aggregation (clip + Gaussian noise).
+    pub dp: Option<DpConfig>,
+    /// aggregate via pairwise-mask secure aggregation (server never sees
+    /// an individual update).
+    pub secure_agg: bool,
+    /// compress client uplinks (exact byte accounting in `comm`).
+    pub compression: Option<CompressionConfig>,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        Self {
+            telemetry: None,
+            comm_model: CommModel::default(),
+            availability: None,
+            eval_cap: None,
+            train_eval_cap: 2000,
+            dp: None,
+            secure_agg: false,
+            compression: None,
+        }
+    }
+}
+
+/// Everything a finished run reports.
+pub struct RunResult {
+    /// (ε, δ=1e-5) consumed, if DP was enabled.
+    pub epsilon: Option<f64>,
+    /// test accuracy by round (at eval cadence).
+    pub accuracy: LearningCurve,
+    /// test mean loss by round.
+    pub test_loss: LearningCurve,
+    /// training-set mean loss by round (if tracked).
+    pub train_loss: Option<LearningCurve>,
+    pub comm: CommTotals,
+    pub final_theta: ParamVec,
+    /// total client-side SGD steps executed (all rounds, all clients).
+    pub client_steps: u64,
+    /// rounds actually run (early stop shortens this).
+    pub rounds_run: u64,
+}
+
+impl RunResult {
+    pub fn final_accuracy(&self) -> f64 {
+        self.accuracy.last_value().unwrap_or(0.0)
+    }
+}
+
+/// Run FederatedAveraging (or FedSGD via `cfg.fedsgd()`).
+pub fn run(
+    engine: &Engine,
+    fed: &Federated,
+    cfg: &FedConfig,
+    mut opts: ServerOptions,
+) -> Result<RunResult> {
+    let model = engine.model(&cfg.model)?;
+    anyhow::ensure!(
+        fed.train.is_tokens() == model.meta().is_tokens(),
+        "dataset kind {:?} does not match model {} kind {:?}",
+        fed.train.name,
+        cfg.model,
+        model.meta().kind
+    );
+    let k = fed.num_clients();
+    let mut theta: ParamVec = model.init(cfg.seed as i32)?;
+    let mut sampler = ClientSampler::new(cfg.seed);
+    if let Some(p) = opts.availability {
+        sampler = sampler.with_availability(p, cfg.seed ^ 0xAB1E);
+    }
+    let mut comms = CommSim::new(opts.comm_model.clone(), cfg.seed);
+    let model_bytes = crate::comms::model_bytes(model.param_count());
+
+    let mut accuracy = LearningCurve::new();
+    let mut test_loss = LearningCurve::new();
+    let mut train_loss_curve = if cfg.track_train_loss {
+        Some(LearningCurve::new())
+    } else {
+        None
+    };
+    let mut client_steps = 0u64;
+    let mut rounds_run = 0u64;
+    let mut mech = opts
+        .dp
+        .map(|d| GaussianMechanism::new(d.clip_norm, d.sigma, cfg.seed ^ 0xD11F));
+    let sec_agg = opts.secure_agg.then(|| SecureAggregator::new(cfg.seed ^ 0x5EC));
+    // per-client error feedback for top-k sparsification
+    let mut feedback: Vec<ErrorFeedback> = vec![ErrorFeedback::default(); k];
+    let mut qrng = Rng::new(cfg.seed ^ 0x0_B175);
+
+    let eval_idxs: Option<Vec<usize>> = opts
+        .eval_cap
+        .map(|cap| (0..fed.test.len().min(cap)).collect());
+    // training-loss eval subset: spread across clients
+    let train_eval_idxs: Vec<usize> = {
+        let total = fed.total_examples();
+        let stride = (total / opts.train_eval_cap.max(1)).max(1);
+        fed.clients
+            .iter()
+            .flatten()
+            .copied()
+            .step_by(stride)
+            .take(opts.train_eval_cap)
+            .collect()
+    };
+
+    for round in 1..=cfg.rounds as u64 {
+        rounds_run = round;
+        let m = cfg.clients_per_round(k);
+        let picks = sampler.sample(round, k, m);
+        let lr = (cfg.lr * cfg.lr_decay.powi(round as i32 - 1)) as f32;
+
+        // ClientUpdate for each selected client (sequential on this
+        // single-core testbed; the pool topology is exercised in tests).
+        // Updates travel as DELTAS (θ_k − θ_t): identical average, and the
+        // natural unit for clipping / compression / secure aggregation.
+        let mut deltas: Vec<(f32, ParamVec)> = Vec::with_capacity(picks.len());
+        let mut wire_up_bytes = 0u64;
+        for &ck in &picks {
+            let spec = LocalSpec {
+                epochs: cfg.e,
+                batch: cfg.b,
+                lr,
+                shuffle_seed: cfg.seed
+                    ^ round.wrapping_mul(0x9E3779B97F4A7C15)
+                    ^ (ck as u64).wrapping_mul(0xD1B54A32D192ED03),
+            };
+            let res = local_update(&model, &fed.train, &fed.clients[ck], &theta, &spec)?;
+            client_steps += res.steps;
+            let mut delta = res.theta;
+            for (d, t) in delta.iter_mut().zip(&theta) {
+                *d -= *t;
+            }
+            if let Some(dp) = &opts.dp {
+                clip(&mut delta, dp.clip_norm);
+            }
+            if let Some(cmp) = &opts.compression {
+                let mut bytes = model_bytes;
+                if let Some(frac) = cmp.top_k_frac {
+                    let kk = ((delta.len() as f64 * frac).ceil() as usize).max(1);
+                    feedback[ck].fold_in(&mut delta);
+                    let sparse = top_k(&delta, kk);
+                    feedback[ck].record(&delta, &sparse);
+                    bytes = sparse.wire_bytes();
+                    delta = sparse.densify();
+                }
+                if let Some(bits) = cmp.quant_bits {
+                    let q = quantize(&delta, bits, &mut qrng);
+                    // top-k already paid index bytes; quantization shrinks
+                    // the value payload
+                    bytes = bytes.min(q.wire_bytes());
+                    delta = dequantize(&q);
+                }
+                wire_up_bytes += bytes;
+            } else {
+                wire_up_bytes += model_bytes;
+            }
+            deltas.push((res.weight as f32, delta));
+        }
+
+        // w_{t+1} ← w_t + Σ (n_k / n) Δ^k
+        let mut avg_delta: ParamVec = if let Some(agg) = &sec_agg {
+            // clients upload masked fixed-point (w·Δ ‖ w); server only
+            // ever sees the modular sum
+            let total_w: f64 = deltas.iter().map(|(w, _)| *w as f64).sum();
+            let masked: Vec<Vec<u32>> = deltas
+                .iter()
+                .enumerate()
+                .map(|(i, (w, d))| {
+                    let mut payload: Vec<f32> = d.iter().map(|v| v * *w / total_w as f32).collect();
+                    payload.push(*w);
+                    agg.mask(picks[i], &picks, &payload)
+                })
+                .collect();
+            let mut summed = agg.aggregate(&masked);
+            summed.pop(); // total weight slot (available to the server)
+            summed
+        } else {
+            let refs: Vec<(f32, &[f32])> = deltas
+                .iter()
+                .map(|(w, d)| (*w, d.as_slice()))
+                .collect();
+            weighted_mean(&refs)
+        };
+        if let Some(mech) = mech.as_mut() {
+            mech.apply(&mut avg_delta, picks.len());
+        }
+        crate::params::axpy(&mut theta, 1.0, &avg_delta);
+        let rc = comms.round_asym(
+            picks.len(),
+            model_bytes,
+            wire_up_bytes / picks.len().max(1) as u64,
+        );
+
+        if round % cfg.eval_every as u64 == 0 || round == cfg.rounds as u64 {
+            let sums = model.eval_dataset(&theta, &fed.test, eval_idxs.as_deref())?;
+            accuracy.push(round, sums.accuracy());
+            test_loss.push(round, sums.mean_loss());
+            let tl = if let Some(curve) = train_loss_curve.as_mut() {
+                let ts = model.eval_dataset(&theta, &fed.train, Some(&train_eval_idxs))?;
+                curve.push(round, ts.mean_loss());
+                Some(ts.mean_loss())
+            } else {
+                None
+            };
+            if let Some(w) = opts.telemetry.as_mut() {
+                w.record(&RoundRecord {
+                    round,
+                    test_accuracy: sums.accuracy(),
+                    test_loss: sums.mean_loss(),
+                    train_loss: tl,
+                    clients: picks.len(),
+                    lr: lr as f64,
+                    bytes_up: rc.bytes_up,
+                    sim_seconds: comms.totals().sim_seconds,
+                })?;
+            }
+            if let Some(target) = cfg.target_accuracy {
+                if sums.accuracy() >= target {
+                    break;
+                }
+            }
+        }
+    }
+
+    if let Some(w) = opts.telemetry.take() {
+        let totals = comms.totals();
+        w.finish(&[
+            ("model", cfg.model.clone()),
+            ("label", cfg.label()),
+            ("rounds_run", rounds_run.to_string()),
+            ("client_steps", client_steps.to_string()),
+            ("final_accuracy", format!("{:.6}", accuracy.last_value().unwrap_or(0.0))),
+            ("bytes_up", totals.bytes_up.to_string()),
+            ("sim_seconds", format!("{:.1}", totals.sim_seconds)),
+        ])?;
+    }
+
+    Ok(RunResult {
+        epsilon: mech.as_ref().map(|m| m.epsilon(1e-5)),
+        accuracy,
+        test_loss,
+        train_loss: train_loss_curve,
+        comm: comms.totals(),
+        final_theta: theta,
+        client_steps,
+        rounds_run,
+    })
+}

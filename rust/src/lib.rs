@@ -1,0 +1,41 @@
+//! # fedavg-rs
+//!
+//! A rust + JAX + Pallas reproduction of *"Communication-Efficient Learning
+//! of Deep Networks from Decentralized Data"* (McMahan, Moore, Ramage,
+//! Hampson, Agüera y Arcas — AISTATS 2017): the **FederatedAveraging**
+//! paper.
+//!
+//! Architecture (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the federated coordinator: round loop, client
+//!   sampling, weighted model averaging, data partitioning, communication
+//!   accounting, LR sweeps, and every experiment harness in the paper's
+//!   evaluation. Python never runs at this layer.
+//! * **L2/L1 (build time)** — the paper's five model families written in
+//!   JAX with Pallas kernels on the hot path, AOT-lowered to HLO text in
+//!   `artifacts/` by `make artifacts` and executed here via PJRT
+//!   ([`runtime`]).
+//!
+//! The public API is organised so a downstream user can assemble a custom
+//! federated experiment from parts: pick a [`data`] source + partition,
+//! a model bundle from [`runtime`], an algorithm from [`federated`] or
+//! [`baselines`], and drive it with [`metrics`]/[`telemetry`] attached.
+
+pub mod baselines;
+pub mod comms;
+pub mod compression;
+pub mod config;
+pub mod data;
+pub mod federated;
+pub mod metrics;
+pub mod params;
+pub mod privacy;
+pub mod runtime;
+pub mod sweep;
+pub mod telemetry;
+pub mod util;
+
+pub mod exper;
+
+/// Crate-wide result type (eyre for rich error context).
+pub type Result<T> = anyhow::Result<T>;

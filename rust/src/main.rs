@@ -1,0 +1,224 @@
+//! `fedavg` — CLI launcher for the FedAvg reproduction.
+//!
+//! ```text
+//! fedavg table1|table2|table3|table4 [--scale F] [--rounds N] ...
+//! fedavg figure <1..10|all>          [--scale F] [--rounds N] ...
+//! fedavg run --config configs/xxx.cfg [overrides]
+//! fedavg oneshot [--model M] [--scale F]
+//! fedavg info
+//! ```
+//!
+//! All experiments print paper-formatted tables/series and persist curves
+//! under `runs/`. `--scale 1.0` is the paper-sized configuration; defaults
+//! are scaled for this single-core testbed.
+
+use anyhow::bail;
+
+use fedavg::baselines::oneshot;
+use fedavg::config::{BatchSize, ConfigFile, FedConfig, Partition};
+use fedavg::exper::{self};
+use fedavg::runtime::Engine;
+use fedavg::util::args::Args;
+use fedavg::Result;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "table1" => exper::table1::run(&engine()?, &args),
+        "table2" => exper::table2::run(&engine()?, &args),
+        "table3" => exper::table3::run(&engine()?, &args),
+        "table4" => exper::table4::run(&engine()?, &args),
+        "figure" | "figures" => exper::figures::run(&engine()?, &args),
+        "run" => cmd_run(&args),
+        "oneshot" => cmd_oneshot(&args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+fn engine() -> Result<Engine> {
+    Engine::load(Engine::default_dir())
+}
+
+/// `fedavg run` — a single federated training run, fully configurable.
+fn cmd_run(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "config", "model", "c", "e", "b", "lr", "lr-decay", "rounds", "eval-every",
+        "target", "partition", "scale", "eval-cap", "seed", "out", "availability",
+        "track-train-loss", "name", "dp-clip", "dp-sigma", "secure-agg", "topk",
+        "quant-bits",
+    ])?;
+    let mut cfg = match args.str_opt("config") {
+        Some(path) => ConfigFile::load(std::path::Path::new(path))?.fed_config()?,
+        None => FedConfig::default(),
+    };
+    if let Some(m) = args.str_opt("model") {
+        cfg.model = m.to_string();
+    }
+    cfg.c = args.f64_or("c", cfg.c)?;
+    cfg.e = args.usize_or("e", cfg.e)?;
+    if let Some(b) = args.str_opt("b") {
+        cfg.b = BatchSize::parse(b)?;
+    }
+    cfg.lr = args.f64_or("lr", cfg.lr)?;
+    cfg.lr_decay = args.f64_or("lr-decay", cfg.lr_decay)?;
+    cfg.rounds = args.usize_or("rounds", cfg.rounds)?;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
+    if let Some(t) = args.str_opt("target") {
+        cfg.target_accuracy = Some(t.parse()?);
+    }
+    cfg.track_train_loss = args.has("track-train-loss") || cfg.track_train_loss;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+
+    let scale = args.f64_or("scale", 0.05)?;
+    let part = Partition::parse(&args.str_or("partition", "iid"))?;
+    let fed = build_fed(&cfg.model, scale, part, cfg.seed)?;
+
+    let engine = engine()?;
+    let mut opts = fedavg::federated::ServerOptions {
+        eval_cap: Some(args.usize_or("eval-cap", 1000)?),
+        ..Default::default()
+    };
+    if let Some(p) = args.str_opt("availability") {
+        opts.availability = Some(p.parse()?);
+    }
+    if let Some(sigma) = args.str_opt("dp-sigma") {
+        opts.dp = Some(fedavg::federated::server::DpConfig {
+            clip_norm: args.f64_or("dp-clip", 1.0)?,
+            sigma: sigma.parse()?,
+        });
+    }
+    opts.secure_agg = args.has("secure-agg");
+    let topk = args.str_opt("topk").map(|v| v.parse::<f64>()).transpose()?;
+    let qbits = args
+        .str_opt("quant-bits")
+        .map(|v| v.parse::<u8>())
+        .transpose()?;
+    if topk.is_some() || qbits.is_some() {
+        opts.compression = Some(fedavg::federated::server::CompressionConfig {
+            top_k_frac: topk,
+            quant_bits: qbits,
+        });
+    }
+    let name = args.str_or("name", &format!("run-{}", cfg.label().replace(' ', "_")));
+    opts.telemetry = Some(fedavg::telemetry::RunWriter::create(
+        args.str_or("out", "runs"),
+        &name,
+    )?);
+
+    println!(
+        "run: {} on {} ({} clients, {} train / {} test examples)",
+        cfg.label(),
+        fed.train.name,
+        fed.num_clients(),
+        fed.train.len(),
+        fed.test.len()
+    );
+    let res = fedavg::federated::run(&engine, &fed, &cfg, opts)?;
+    println!(
+        "done: {} rounds, final acc {:.4}, best {:.4}, {:.3} GB comm, sim {:.0}s",
+        res.rounds_run,
+        res.final_accuracy(),
+        res.accuracy.best_value().unwrap_or(0.0),
+        res.comm.gigabytes(),
+        res.comm.sim_seconds,
+    );
+    if let Some(t) = cfg.target_accuracy {
+        match res.accuracy.rounds_to_target(t) {
+            Some(r) => println!("rounds to {:.1}%: {:.1}", t * 100.0, r),
+            None => println!("target {:.1}% not reached", t * 100.0),
+        }
+    }
+    if let Some(eps) = res.epsilon {
+        println!("differential privacy: ({eps:.2}, 1e-5)-DP consumed");
+    }
+    Ok(())
+}
+
+fn cmd_oneshot(args: &Args) -> Result<()> {
+    args.check_known(&["model", "scale", "e", "lr", "seed", "eval-cap"])?;
+    let model = args.str_or("model", "mnist_2nn");
+    let scale = args.f64_or("scale", 0.05)?;
+    let seed = args.u64_or("seed", 42)?;
+    let fed = build_fed(&model, scale, Partition::Iid, seed)?;
+    let engine = engine()?;
+    let cfg = oneshot::OneShotConfig {
+        model: model.clone(),
+        epochs: args.usize_or("e", 20)?,
+        batch: BatchSize::Fixed(10),
+        lr: args.f64_or("lr", 0.1)?,
+        seed,
+    };
+    let res = oneshot::run(&engine, &fed, &cfg, Some(args.usize_or("eval-cap", 1000)?))?;
+    println!(
+        "one-shot averaging on {model}: averaged acc {:.4}, best single-client acc {:.4}",
+        res.averaged.accuracy(),
+        res.best_single.accuracy()
+    );
+    Ok(())
+}
+
+fn build_fed(
+    model: &str,
+    scale: f64,
+    part: Partition,
+    seed: u64,
+) -> Result<fedavg::data::Federated> {
+    Ok(match model {
+        "mnist_2nn" | "mnist_cnn" => exper::mnist_fed(scale, part, seed),
+        "cifar_cnn" => exper::cifar_fed(scale, seed),
+        "shakespeare_lstm" => {
+            exper::shakespeare_fed(scale, part == Partition::Natural, seed)
+        }
+        "word_lstm" => exper::social_fed(scale, seed),
+        other => bail!("unknown model {other}"),
+    })
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = Engine::default_dir();
+    println!("artifacts dir: {}", dir.display());
+    let engine = Engine::load(&dir)?;
+    println!("platform: PJRT CPU");
+    for (name, m) in &engine.manifest().models {
+        println!(
+            "  {name:<18} {:>9} params  kind={:<6} steps@{:?} acc@{}",
+            m.param_count, m.kind, m.step_batches, m.acc_batch
+        );
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+fedavg — Communication-Efficient Learning of Deep Networks from
+Decentralized Data (McMahan et al., AISTATS 2017) reproduction.
+
+USAGE:
+  fedavg table1 [--scale F] [--rounds N] [--target A] [--models m1,m2]
+  fedavg table2 [--scale F] [--rounds N] [--models mnist_cnn,shakespeare_lstm]
+  fedavg table3 [--scale F] [--rounds N] [--targets a,b,c]
+  fedavg table4 [--scale F] [--rounds N]
+  fedavg figure <N|all> [--scale F] [--rounds N]
+  fedavg run [--config FILE] [--model M] [--c F] [--e N] [--b N|inf]
+             [--lr F] [--rounds N] [--partition iid|noniid|unbalanced|natural]
+             [--availability P] [--target A] [--track-train-loss]
+             [--dp-sigma S --dp-clip C] [--secure-agg]
+             [--topk FRAC] [--quant-bits B]
+  fedavg oneshot [--model M] [--e N]
+  fedavg info
+
+Defaults are scaled to this single-core testbed (--scale 0.05);
+--scale 1.0 reproduces the paper-sized workloads. Curves land in runs/.
+";

@@ -1,0 +1,165 @@
+//! Learning-curve machinery — the paper's evaluation methodology.
+//!
+//! §3: *"we construct a learning curve ..., then make the curve
+//! monotonically improving by taking the best value of test-set accuracy
+//! achieved over all prior rounds, and then calculate the number of rounds
+//! where the curve crosses the target accuracy, using linear interpolation
+//! between the discrete points forming the curve."*
+//!
+//! [`LearningCurve::rounds_to_target`] implements exactly that.
+
+/// A (round, value) learning curve. Rounds must be pushed in increasing
+/// order; values are arbitrary (accuracy, loss, ...).
+#[derive(Debug, Clone, Default)]
+pub struct LearningCurve {
+    points: Vec<(u64, f64)>,
+}
+
+impl LearningCurve {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, round: u64, value: f64) {
+        if let Some(&(last, _)) = self.points.last() {
+            assert!(round > last, "rounds must increase: {round} after {last}");
+        }
+        self.points.push((round, value));
+    }
+
+    pub fn points(&self) -> &[(u64, f64)] {
+        &self.points
+    }
+
+    pub fn last_value(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    pub fn best_value(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// The paper's monotone transform: value at round r becomes the best
+    /// value achieved at any round <= r.
+    pub fn monotone(&self) -> LearningCurve {
+        let mut best = f64::NEG_INFINITY;
+        let points = self
+            .points
+            .iter()
+            .map(|&(r, v)| {
+                best = best.max(v);
+                (r, best)
+            })
+            .collect();
+        LearningCurve { points }
+    }
+
+    /// First (fractional) round where the *monotone* curve crosses
+    /// `target`, by linear interpolation between curve points — the
+    /// paper's Table 1/2/3/4 statistic. `None` if never reached.
+    pub fn rounds_to_target(&self, target: f64) -> Option<f64> {
+        let mono = self.monotone();
+        let pts = &mono.points;
+        if pts.is_empty() {
+            return None;
+        }
+        if pts[0].1 >= target {
+            return Some(pts[0].0 as f64);
+        }
+        for w in pts.windows(2) {
+            let (r0, v0) = w[0];
+            let (r1, v1) = w[1];
+            if v0 < target && v1 >= target {
+                let frac = (target - v0) / (v1 - v0);
+                return Some(r0 as f64 + frac * (r1 - r0) as f64);
+            }
+        }
+        None
+    }
+}
+
+/// Speedup of `ours` vs `baseline` in rounds-to-target (paper's "(N×)"
+/// annotations). `None` if either never reached the target.
+pub fn speedup(baseline: Option<f64>, ours: Option<f64>) -> Option<f64> {
+    match (baseline, ours) {
+        (Some(b), Some(o)) if o > 0.0 => Some(b / o),
+        _ => None,
+    }
+}
+
+/// Format a rounds-to-target cell the way the paper prints them:
+/// rounded rounds plus speedup vs baseline, or "—" for not reached.
+pub fn format_cell(rounds: Option<f64>, base: Option<f64>) -> String {
+    match rounds {
+        None => "— (—)".to_string(),
+        Some(r) => match speedup(base, Some(r)) {
+            Some(s) => format!("{:.0} ({:.1}x)", r.ceil(), s),
+            None => format!("{:.0} (—)", r.ceil()),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(points: &[(u64, f64)]) -> LearningCurve {
+        let mut c = LearningCurve::new();
+        for &(r, v) in points {
+            c.push(r, v);
+        }
+        c
+    }
+
+    #[test]
+    fn monotone_takes_running_best() {
+        let c = curve(&[(1, 0.5), (2, 0.7), (3, 0.6), (4, 0.8)]);
+        let m = c.monotone();
+        assert_eq!(m.points(), &[(1, 0.5), (2, 0.7), (3, 0.7), (4, 0.8)]);
+    }
+
+    #[test]
+    fn rounds_to_target_interpolates() {
+        let c = curve(&[(10, 0.50), (20, 0.90)]);
+        // crosses 0.70 exactly halfway between rounds 10 and 20
+        assert!((c.rounds_to_target(0.70).unwrap() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rounds_to_target_uses_monotone_curve() {
+        // dips below target after first crossing must not matter
+        let c = curve(&[(1, 0.2), (2, 0.8), (3, 0.1), (4, 0.9)]);
+        assert!((c.rounds_to_target(0.5).unwrap() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rounds_to_target_never_reached() {
+        let c = curve(&[(1, 0.2), (2, 0.3)]);
+        assert_eq!(c.rounds_to_target(0.5), None);
+    }
+
+    #[test]
+    fn target_met_at_first_point() {
+        let c = curve(&[(5, 0.99)]);
+        assert_eq!(c.rounds_to_target(0.9), Some(5.0));
+    }
+
+    #[test]
+    fn speedup_and_formatting() {
+        assert_eq!(speedup(Some(100.0), Some(25.0)), Some(4.0));
+        assert_eq!(speedup(None, Some(25.0)), None);
+        assert_eq!(format_cell(Some(25.0), Some(100.0)), "25 (4.0x)");
+        assert_eq!(format_cell(None, Some(100.0)), "— (—)");
+    }
+
+    #[test]
+    #[should_panic(expected = "rounds must increase")]
+    fn push_rejects_nonmonotone_rounds() {
+        let mut c = LearningCurve::new();
+        c.push(5, 0.1);
+        c.push(5, 0.2);
+    }
+}

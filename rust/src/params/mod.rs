@@ -1,0 +1,148 @@
+//! Flat parameter-vector math — the coordinator's numeric hot path.
+//!
+//! Model parameters cross the rust/XLA boundary as a single flat `f32`
+//! vector (L2 ravels the pytree), so the server-side FedAvg update
+//! `w_{t+1} = Σ_k (n_k/n) w^k` is a weighted mean of plain vectors.
+//! These routines are written to stay memory-bandwidth-bound: single
+//! pass, chunk-unrolled so LLVM auto-vectorizes them.
+
+/// A model's parameters (or a gradient) as a flat dense vector.
+pub type ParamVec = Vec<f32>;
+
+/// Weighted mean of parameter vectors: `Σ w_i · x_i / Σ w_i`.
+///
+/// This is Algorithm 1's server update with `w_i = n_k` over the selected
+/// clients. Panics if inputs are empty, lengths mismatch, or `Σ w_i <= 0`.
+pub fn weighted_mean(items: &[(f32, &[f32])]) -> ParamVec {
+    assert!(!items.is_empty(), "weighted_mean of nothing");
+    let dim = items[0].1.len();
+    let total: f64 = items.iter().map(|(w, _)| *w as f64).sum();
+    assert!(total > 0.0, "weighted_mean: non-positive total weight");
+    let mut out = vec![0.0f32; dim];
+    for (w, x) in items {
+        assert_eq!(x.len(), dim, "weighted_mean: length mismatch");
+        let scale = (*w as f64 / total) as f32;
+        axpy(&mut out, scale, x);
+    }
+    out
+}
+
+/// `y += a * x`, the fused accumulate used by the averaging loop.
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    // 8-wide unroll: keeps LLVM on the autovectorized path.
+    let n = y.len();
+    let chunks = n / 8;
+    let (yc, yr) = y.split_at_mut(chunks * 8);
+    let (xc, xr) = x.split_at(chunks * 8);
+    for (yv, xv) in yc.chunks_exact_mut(8).zip(xc.chunks_exact(8)) {
+        for i in 0..8 {
+            yv[i] += a * xv[i];
+        }
+    }
+    for (yv, xv) in yr.iter_mut().zip(xr) {
+        *yv += a * xv;
+    }
+}
+
+/// `θ(λ) = (1-λ)·a + λ·b` — the Figure-1 interpolation path.
+pub fn interpolate(a: &[f32], b: &[f32], lambda: f32) -> ParamVec {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&av, &bv)| (1.0 - lambda) * av + lambda * bv)
+        .collect()
+}
+
+/// Euclidean norm (f64 accumulation for stability).
+pub fn l2_norm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// Euclidean distance between two parameter vectors.
+pub fn l2_dist(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// In-place scale: `x *= a`.
+pub fn scale(x: &mut [f32], a: f32) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Mean of unweighted vectors (convenience for one-shot averaging).
+pub fn mean(items: &[&[f32]]) -> ParamVec {
+    let weighted: Vec<(f32, &[f32])> = items.iter().map(|x| (1.0, *x)).collect();
+    weighted_mean(&weighted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_mean_two_vectors() {
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![5.0, 6.0, 7.0];
+        // weights 1:3 -> 0.25*a + 0.75*b
+        let m = weighted_mean(&[(1.0, &a[..]), (3.0, &b[..])]);
+        assert_eq!(m, vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn weighted_mean_identity_single() {
+        let a = vec![0.5f32; 100];
+        let m = weighted_mean(&[(42.0, &a[..])]);
+        for (got, want) in m.iter().zip(&a) {
+            assert!((got - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn weighted_mean_rejects_mismatch() {
+        let a = vec![1.0; 3];
+        let b = vec![1.0; 4];
+        weighted_mean(&[(1.0, &a[..]), (1.0, &b[..])]);
+    }
+
+    #[test]
+    fn axpy_matches_scalar_loop() {
+        let x: Vec<f32> = (0..1001).map(|i| i as f32 * 0.01).collect();
+        let mut y: Vec<f32> = (0..1001).map(|i| (1000 - i) as f32 * 0.02).collect();
+        let mut y2 = y.clone();
+        axpy(&mut y, 0.3, &x);
+        for (yv, xv) in y2.iter_mut().zip(&x) {
+            *yv += 0.3 * xv;
+        }
+        assert_eq!(y, y2);
+    }
+
+    #[test]
+    fn interpolate_endpoints_and_outside() {
+        let a = vec![0.0f32, 10.0];
+        let b = vec![1.0f32, 20.0];
+        assert_eq!(interpolate(&a, &b, 0.0), a);
+        assert_eq!(interpolate(&a, &b, 1.0), b);
+        // Figure 1 sweeps θ ∈ [-0.2, 1.2] — outside the hull must work
+        let out = interpolate(&a, &b, 1.2);
+        assert!((out[0] - 1.2).abs() < 1e-6);
+        assert!((out[1] - 22.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+        assert!((l2_dist(&[1.0, 1.0], &[4.0, 5.0]) - 5.0).abs() < 1e-9);
+    }
+}

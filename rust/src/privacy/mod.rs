@@ -1,0 +1,257 @@
+//! Privacy extensions — the paper's §4 future-work direction, built out:
+//!
+//! * [`clip`]/[`GaussianMechanism`] — differentially-private FedAvg:
+//!   per-client update L2-clipping followed by Gaussian noise on the
+//!   *aggregate*, the (ε, δ)-DP recipe of Abadi et al. [1] the paper
+//!   cites. Accounting uses basic composition over rounds (documented —
+//!   a moments accountant would be tighter).
+//! * [`SecureAggregator`] — pairwise additive masking in fixed point
+//!   (the Bonawitz et al. protocol the paper's footnote 7 anticipates):
+//!   each pair of clients shares a seeded mask that cancels in the sum,
+//!   so the server learns only Σ updates, never an individual update.
+//!
+//! Both compose with the plain FedAvg loop: they transform client deltas
+//! before averaging (see `federated::ServerOptions` wiring and the
+//! `fedavg run --dp-*` / `--secure-agg` flags).
+
+use crate::data::rng::Rng;
+use crate::params::ParamVec;
+
+/// L2-clip an update in place; returns the pre-clip norm.
+pub fn clip(update: &mut [f32], max_norm: f64) -> f64 {
+    let norm = crate::params::l2_norm(update);
+    if norm > max_norm && norm > 0.0 {
+        let s = (max_norm / norm) as f32;
+        for v in update.iter_mut() {
+            *v *= s;
+        }
+    }
+    norm
+}
+
+/// Gaussian mechanism over the averaged update.
+#[derive(Debug, Clone)]
+pub struct GaussianMechanism {
+    /// per-client clip bound (L2) — the sensitivity unit.
+    pub clip_norm: f64,
+    /// noise multiplier σ (std = σ · clip / m for an m-client average).
+    pub sigma: f64,
+    rng: Rng,
+    rounds_applied: u64,
+}
+
+impl GaussianMechanism {
+    pub fn new(clip_norm: f64, sigma: f64, seed: u64) -> Self {
+        assert!(clip_norm > 0.0 && sigma >= 0.0);
+        Self {
+            clip_norm,
+            sigma,
+            rng: Rng::new(seed ^ 0xD9),
+            rounds_applied: 0,
+        }
+    }
+
+    /// Noise the m-client *average* update in place.
+    /// Sensitivity of the average to one client is `clip_norm / m`
+    /// (weights equal; weighted averages bound similarly by max wᵢ/Σw).
+    pub fn apply(&mut self, avg_update: &mut [f32], m: usize) {
+        let std = (self.sigma * self.clip_norm / m.max(1) as f64) as f32;
+        for v in avg_update.iter_mut() {
+            *v += std * self.rng.gauss_f32();
+        }
+        self.rounds_applied += 1;
+    }
+
+    /// (ε, δ) after `rounds_applied` rounds under *basic* composition of
+    /// the analytic single-shot Gaussian bound ε₀ = √(2 ln(1.25/δ))/σ.
+    /// (Simplification documented in DESIGN.md; a moments accountant
+    /// gives ~√T scaling instead of T.)
+    pub fn epsilon(&self, delta: f64) -> f64 {
+        if self.sigma == 0.0 {
+            return f64::INFINITY;
+        }
+        let eps0 = (2.0 * (1.25 / delta).ln()).sqrt() / self.sigma;
+        eps0 * self.rounds_applied as f64
+    }
+
+    pub fn rounds_applied(&self) -> u64 {
+        self.rounds_applied
+    }
+}
+
+/// Pairwise-mask secure aggregation (semi-honest, no dropouts — the
+/// dropout-recovery shares of the full Bonawitz protocol are out of
+/// scope; DESIGN.md notes the simplification).
+///
+/// Values are encoded in fixed point mod 2^32; for every client pair
+/// (i, j), i<j, a shared seeded mask Mᵢⱼ is added by i and subtracted by
+/// j. Individual masked updates are (computationally) independent of the
+/// plaintexts; the modular sum telescopes the masks away exactly.
+pub struct SecureAggregator {
+    /// fixed-point scale: value = round(x * SCALE) mod 2^32.
+    scale: f64,
+    session_seed: u64,
+}
+
+impl SecureAggregator {
+    pub fn new(session_seed: u64) -> Self {
+        Self {
+            scale: (1u64 << 20) as f64, // ~1e-6 resolution, ±2k range
+            session_seed,
+        }
+    }
+
+    fn mask_rng(&self, i: usize, j: usize) -> Rng {
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        Rng::new(
+            self.session_seed
+                ^ (lo as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (hi as u64).wrapping_mul(0xD1B54A32D192ED03),
+        )
+    }
+
+    /// Client `id`'s masked, fixed-point encoding of `update`, given the
+    /// participating client set.
+    pub fn mask(&self, id: usize, participants: &[usize], update: &[f32]) -> Vec<u32> {
+        let mut out: Vec<u32> = update
+            .iter()
+            .map(|&v| (v as f64 * self.scale).round() as i64 as u32)
+            .collect();
+        for &other in participants {
+            if other == id {
+                continue;
+            }
+            let mut rng = self.mask_rng(id, other);
+            let sign_add = id < other; // lower id adds, higher subtracts
+            for slot in out.iter_mut() {
+                let m = rng.next_u64() as u32;
+                *slot = if sign_add {
+                    slot.wrapping_add(m)
+                } else {
+                    slot.wrapping_sub(m)
+                };
+            }
+        }
+        out
+    }
+
+    /// Server-side: sum masked vectors (masks cancel), decode to floats.
+    pub fn aggregate(&self, masked: &[Vec<u32>]) -> ParamVec {
+        assert!(!masked.is_empty());
+        let dim = masked[0].len();
+        let mut acc = vec![0u32; dim];
+        for v in masked {
+            assert_eq!(v.len(), dim);
+            for (a, &x) in acc.iter_mut().zip(v) {
+                *a = a.wrapping_add(x);
+            }
+        }
+        acc.into_iter()
+            .map(|u| (u as i32) as f64 / self.scale)
+            .map(|v| v as f32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_preserves_small_and_bounds_large() {
+        let mut small = vec![0.1f32, 0.2];
+        let n = clip(&mut small, 10.0);
+        assert!(n < 10.0);
+        assert_eq!(small, vec![0.1, 0.2]);
+
+        let mut large = vec![30.0f32, 40.0]; // norm 50
+        clip(&mut large, 5.0);
+        let norm = crate::params::l2_norm(&large);
+        assert!((norm - 5.0).abs() < 1e-4);
+        // direction preserved
+        assert!((large[0] / large[1] - 0.75).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gaussian_mechanism_noise_scale_and_accounting() {
+        let mut mech = GaussianMechanism::new(1.0, 2.0, 7);
+        let mut zeros = vec![0.0f32; 40_000];
+        mech.apply(&mut zeros, 10);
+        let std_emp = (zeros.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()
+            / zeros.len() as f64)
+            .sqrt();
+        let want = 2.0 * 1.0 / 10.0;
+        assert!(
+            (std_emp - want).abs() / want < 0.05,
+            "std {std_emp} vs {want}"
+        );
+        assert_eq!(mech.rounds_applied(), 1);
+        let e1 = mech.epsilon(1e-5);
+        mech.apply(&mut zeros, 10);
+        assert!((mech.epsilon(1e-5) - 2.0 * e1).abs() < 1e-9, "linear comp");
+        assert!(e1 > 0.0 && e1.is_finite());
+    }
+
+    #[test]
+    fn sigma_zero_is_infinite_epsilon_and_noiseless() {
+        let mut mech = GaussianMechanism::new(1.0, 0.0, 1);
+        let mut v = vec![1.0f32; 8];
+        mech.apply(&mut v, 4);
+        assert_eq!(v, vec![1.0f32; 8]);
+        assert_eq!(mech.epsilon(1e-5), f64::INFINITY);
+    }
+
+    #[test]
+    fn secure_aggregation_sum_exact_and_masking_hides() {
+        let agg = SecureAggregator::new(99);
+        let participants = vec![0, 1, 2, 3];
+        let updates: Vec<Vec<f32>> = vec![
+            vec![0.5, -1.25, 3.0],
+            vec![-0.5, 0.25, 1.0],
+            vec![2.0, 2.0, -4.0],
+            vec![0.0, -1.0, 0.5],
+        ];
+        let masked: Vec<Vec<u32>> = participants
+            .iter()
+            .map(|&id| agg.mask(id, &participants, &updates[id]))
+            .collect();
+        // masked vector differs wildly from plain encoding (hides value)
+        let plain0: Vec<u32> = updates[0]
+            .iter()
+            .map(|&v| (v as f64 * (1u64 << 20) as f64).round() as i64 as u32)
+            .collect();
+        assert_ne!(masked[0], plain0);
+
+        let sum = agg.aggregate(&masked);
+        for d in 0..3 {
+            let want: f32 = updates.iter().map(|u| u[d]).sum();
+            assert!(
+                (sum[d] - want).abs() < 1e-4,
+                "dim {d}: {} vs {want}",
+                sum[d]
+            );
+        }
+    }
+
+    #[test]
+    fn secure_aggregation_two_clients_and_negative_values() {
+        let agg = SecureAggregator::new(3);
+        let ps = vec![7, 11];
+        let a = vec![-2.5f32, 0.0];
+        let b = vec![2.5f32, -0.125];
+        let sum = agg.aggregate(&[agg.mask(7, &ps, &a), agg.mask(11, &ps, &b)]);
+        assert!((sum[0] - 0.0).abs() < 1e-4);
+        assert!((sum[1] + 0.125).abs() < 1e-4);
+    }
+
+    #[test]
+    fn masks_are_pair_symmetric() {
+        // i's add-mask against j equals j's subtract-mask against i,
+        // so a 2-party sum is exactly unmasked
+        let agg = SecureAggregator::new(5);
+        let ps = vec![1, 2];
+        let zero = vec![0.0f32; 16];
+        let sum = agg.aggregate(&[agg.mask(1, &ps, &zero), agg.mask(2, &ps, &zero)]);
+        assert!(sum.iter().all(|&v| v.abs() < 1e-6), "{sum:?}");
+    }
+}

@@ -1,0 +1,158 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime: which models exist, their parameter counts, input
+//! kinds/shapes, and which HLO-text file implements each entry point.
+//! Parsed with the in-tree JSON reader (offline image: no serde).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub param_count: usize,
+    /// "image" (x: f32[B, x_dim], y/w: [B]) or "tokens" (x/y/w: [B, x_dim]).
+    pub kind: String,
+    /// Feature dim for images, unroll length T for token models.
+    pub x_dim: usize,
+    /// Classes (image) or vocabulary size (tokens).
+    pub num_classes: usize,
+    /// Batch capacities with a dedicated `step_b{B}` executable.
+    pub step_batches: Vec<usize>,
+    /// Capacity of the `gradacc`/`eval` executables.
+    pub acc_batch: usize,
+    pub entries: BTreeMap<String, EntryMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub file: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text).context("parsing manifest.json")
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in root.get("models")?.as_obj()? {
+            let mut entries = BTreeMap::new();
+            for (ename, e) in m.get("entries")?.as_obj()? {
+                entries.insert(
+                    ename.clone(),
+                    EntryMeta {
+                        file: e.get("file")?.as_str()?.to_string(),
+                    },
+                );
+            }
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: m.get("name")?.as_str()?.to_string(),
+                    param_count: m.get("param_count")?.as_usize()?,
+                    kind: m.get("kind")?.as_str()?.to_string(),
+                    x_dim: m.get("x_dim")?.as_usize()?,
+                    num_classes: m.get("num_classes")?.as_usize()?,
+                    step_batches: m
+                        .get("step_batches")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_usize())
+                        .collect::<Result<_>>()?,
+                    acc_batch: m.get("acc_batch")?.as_usize()?,
+                    entries,
+                },
+            );
+        }
+        Ok(Manifest { models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model {name:?} not in manifest (have: {:?}) — \
+                 run `make artifacts` (or artifacts-full for word_lstm)",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+impl ModelMeta {
+    pub fn is_tokens(&self) -> bool {
+        self.kind == "tokens"
+    }
+
+    /// Smallest step capacity >= the logical batch, if any.
+    pub fn step_capacity_for(&self, logical: usize) -> Option<usize> {
+        self.step_batches
+            .iter()
+            .copied()
+            .filter(|&c| c >= logical)
+            .min()
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryMeta> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("model {} has no entry {name:?}", self.name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"models":{"m":{"name":"m","param_count":3,"kind":"image",
+        "x_dim":4,"num_classes":10,"step_batches":[10,50],"acc_batch":64,
+        "entries":{"init":{"file":"m.init.hlo.txt","sha256":"ab","bytes":12}}}}}"#;
+
+    #[test]
+    fn step_capacity_selection() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let m = m.model("m").unwrap();
+        assert_eq!(m.step_capacity_for(1), Some(10));
+        assert_eq!(m.step_capacity_for(10), Some(10));
+        assert_eq!(m.step_capacity_for(11), Some(50));
+        assert_eq!(m.step_capacity_for(50), Some(50));
+        assert_eq!(m.step_capacity_for(51), None);
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model("m").unwrap().param_count, 3);
+        assert!(m.model("nope").is_err());
+        assert_eq!(m.models["m"].entry("init").unwrap().file, "m.init.hlo.txt");
+        assert!(m.models["m"].entry("step_b10").is_err());
+        assert!(!m.models["m"].is_tokens());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // exercised against the actual artifacts when they exist
+        for dir in ["artifacts", "../artifacts"] {
+            let p = Path::new(dir);
+            if p.join("manifest.json").exists() {
+                let m = Manifest::load(p).unwrap();
+                assert!(m.model("mnist_2nn").is_ok());
+                let meta = m.model("mnist_2nn").unwrap();
+                assert_eq!(meta.param_count, 199_210);
+            }
+        }
+    }
+}

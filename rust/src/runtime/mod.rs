@@ -1,0 +1,327 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts and executes them.
+//!
+//! Pattern follows `/opt/xla-example/load_hlo/`: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled lazily on first use and cached for the life
+//! of the [`Engine`]; after construction the request path is pure rust +
+//! XLA (no python anywhere).
+
+pub mod manifest;
+pub mod pool;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::anyhow;
+
+use crate::data::PaddedBatch;
+use crate::params::ParamVec;
+use crate::Result;
+
+pub use manifest::{Manifest, ModelMeta};
+
+/// Aggregate eval statistics returned by the `eval` entry point.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EvalSums {
+    pub loss_sum: f64,
+    pub correct_sum: f64,
+    pub weight_sum: f64,
+}
+
+impl EvalSums {
+    pub fn accumulate(&mut self, other: EvalSums) {
+        self.loss_sum += other.loss_sum;
+        self.correct_sum += other.correct_sum;
+        self.weight_sum += other.weight_sum;
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        self.loss_sum / self.weight_sum.max(1e-12)
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        self.correct_sum / self.weight_sum.max(1e-12)
+    }
+}
+
+/// Counters for everything the engine has executed — feeds the §Perf
+/// benches and the computation accounting in experiment reports.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub steps: u64,
+    pub gradaccs: u64,
+    pub applies: u64,
+    pub evals: u64,
+    pub inits: u64,
+    pub compile_ms: u64,
+    pub execute_ms: u64,
+}
+
+/// One PJRT CPU client plus a lazily-compiled executable cache.
+///
+/// Not `Send`/`Sync` (the underlying crate types hold raw pointers);
+/// for multi-worker setups each worker thread owns its own `Engine`
+/// (see [`pool`]).
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<ExecStats>,
+}
+
+impl Engine {
+    /// Load the manifest from `dir` (usually `artifacts/`) and connect to
+    /// the PJRT CPU platform.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(ExecStats::default()),
+        })
+    }
+
+    /// Locate the artifacts directory: `$FEDAVG_ARTIFACTS`, else
+    /// `./artifacts`, else `../artifacts` (for `cargo test` from subdirs).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("FEDAVG_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        for cand in ["artifacts", "../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.json").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+
+    /// Handle for one model family's entry points.
+    pub fn model(&self, name: &str) -> Result<Model<'_>> {
+        let meta = self.manifest.model(name)?.clone();
+        Ok(Model { engine: self, meta })
+    }
+
+    fn executable(
+        &self,
+        model: &ModelMeta,
+        entry: &str,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{}.{}", model.name, entry);
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let file = self.dir.join(&model.entry(entry)?.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {file:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {key}: {e}"))?;
+        self.stats.borrow_mut().compile_ms += t0.elapsed().as_millis() as u64;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of entries (so timed runs exclude compile cost).
+    pub fn warmup(&self, model_name: &str, entries: &[&str]) -> Result<()> {
+        let meta = self.manifest.model(model_name)?.clone();
+        for e in entries {
+            self.executable(&meta, e)?;
+        }
+        Ok(())
+    }
+
+    fn run1(&self, exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let t0 = std::time::Instant::now();
+        let bufs = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        self.stats.borrow_mut().execute_ms += t0.elapsed().as_millis() as u64;
+        // aot.py lowers with return_tuple=True → single-element tuple.
+        lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))
+    }
+}
+
+// ------------------------------------------------------- literal helpers
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let v = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(v);
+    }
+    v.reshape(dims).map_err(|e| anyhow!("reshape f32: {e}"))
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let v = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(v);
+    }
+    v.reshape(dims).map_err(|e| anyhow!("reshape i32: {e}"))
+}
+
+/// One model family's typed entry points.
+pub struct Model<'e> {
+    engine: &'e Engine,
+    meta: ModelMeta,
+}
+
+impl<'e> Model<'e> {
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.meta.param_count
+    }
+
+    fn batch_literals(&self, b: &PaddedBatch) -> Result<[xla::Literal; 3]> {
+        let cap = b.cap as i64;
+        let rd = b.row_dim as i64;
+        if b.tokens {
+            Ok([
+                lit_i32(&b.xi, &[cap, rd])?,
+                lit_i32(&b.y, &[cap, rd])?,
+                lit_f32(&b.w, &[cap, rd])?,
+            ])
+        } else {
+            Ok([
+                lit_f32(&b.xf, &[cap, rd])?,
+                lit_i32(&b.y, &[cap])?,
+                lit_f32(&b.w, &[cap])?,
+            ])
+        }
+    }
+
+    /// `init(seed) -> θ` — paper-faithful random initialization.
+    pub fn init(&self, seed: i32) -> Result<ParamVec> {
+        let exe = self.engine.executable(&self.meta, "init")?;
+        let out = self.engine.run1(&exe, &[xla::Literal::scalar(seed)])?;
+        self.engine.stats.borrow_mut().inits += 1;
+        out.to_vec::<f32>().map_err(|e| anyhow!("init out: {e}"))
+    }
+
+    /// One local SGD step on a (weight-padded) minibatch.
+    pub fn step(&self, theta: &[f32], batch: &PaddedBatch, lr: f32) -> Result<ParamVec> {
+        let entry = format!("step_b{}", batch.cap);
+        let exe = self.engine.executable(&self.meta, &entry)?;
+        let [x, y, w] = self.batch_literals(batch)?;
+        let t = lit_f32(theta, &[theta.len() as i64])?;
+        let out = self
+            .engine
+            .run1(&exe, &[t, x, y, w, xla::Literal::scalar(lr)])?;
+        self.engine.stats.borrow_mut().steps += 1;
+        out.to_vec::<f32>().map_err(|e| anyhow!("step out: {e}"))
+    }
+
+    /// Σᵢ wᵢ∇ℓᵢ over a batch (unnormalized; linear in examples).
+    pub fn gradacc(&self, theta: &[f32], batch: &PaddedBatch) -> Result<ParamVec> {
+        let entry = format!("gradacc_b{}", batch.cap);
+        let exe = self.engine.executable(&self.meta, &entry)?;
+        let [x, y, w] = self.batch_literals(batch)?;
+        let t = lit_f32(theta, &[theta.len() as i64])?;
+        let out = self.engine.run1(&exe, &[t, x, y, w])?;
+        self.engine.stats.borrow_mut().gradaccs += 1;
+        out.to_vec::<f32>().map_err(|e| anyhow!("gradacc out: {e}"))
+    }
+
+    /// `θ - lr·g` via the fused Pallas axpy.
+    pub fn apply(&self, theta: &[f32], grad: &[f32], lr: f32) -> Result<ParamVec> {
+        let exe = self.engine.executable(&self.meta, "apply")?;
+        let t = lit_f32(theta, &[theta.len() as i64])?;
+        let g = lit_f32(grad, &[grad.len() as i64])?;
+        let out = self.engine.run1(&exe, &[t, g, xla::Literal::scalar(lr)])?;
+        self.engine.stats.borrow_mut().applies += 1;
+        out.to_vec::<f32>().map_err(|e| anyhow!("apply out: {e}"))
+    }
+
+    /// Weighted eval sums over one batch.
+    pub fn eval_batch(&self, theta: &[f32], batch: &PaddedBatch) -> Result<EvalSums> {
+        let entry = format!("eval_b{}", batch.cap);
+        let exe = self.engine.executable(&self.meta, &entry)?;
+        let [x, y, w] = self.batch_literals(batch)?;
+        let t = lit_f32(theta, &[theta.len() as i64])?;
+        let out = self.engine.run1(&exe, &[t, x, y, w])?;
+        self.engine.stats.borrow_mut().evals += 1;
+        let v = out.to_vec::<f32>().map_err(|e| anyhow!("eval out: {e}"))?;
+        anyhow::ensure!(v.len() == 3, "eval returned {} values", v.len());
+        Ok(EvalSums {
+            loss_sum: v[0] as f64,
+            correct_sum: v[1] as f64,
+            weight_sum: v[2] as f64,
+        })
+    }
+
+    /// Evaluate θ over an entire dataset (or an index subset), chunked
+    /// through the fixed-capacity eval executable.
+    pub fn eval_dataset(
+        &self,
+        theta: &[f32],
+        data: &crate::data::Dataset,
+        idxs: Option<&[usize]>,
+    ) -> Result<EvalSums> {
+        let cap = self.meta.acc_batch;
+        let all: Vec<usize>;
+        let idxs = match idxs {
+            Some(i) => i,
+            None => {
+                all = (0..data.len()).collect();
+                &all
+            }
+        };
+        let mut sums = EvalSums::default();
+        for chunk in idxs.chunks(cap) {
+            let b = data.padded_batch(chunk, cap);
+            sums.accumulate(self.eval_batch(theta, &b)?);
+        }
+        Ok(sums)
+    }
+
+    /// Exact full-batch gradient of the *mean* loss over `idxs`, chunked
+    /// through the gradacc executable (exact because per-example gradients
+    /// sum linearly — verified by test_entries.py + integration tests).
+    /// Returns the gradient and the total example weight it averaged over.
+    pub fn full_gradient(
+        &self,
+        theta: &[f32],
+        data: &crate::data::Dataset,
+        idxs: &[usize],
+    ) -> Result<(ParamVec, f64)> {
+        let cap = self.meta.acc_batch;
+        let mut g = vec![0.0f32; theta.len()];
+        let mut wsum = 0.0f64;
+        for chunk in idxs.chunks(cap) {
+            let b = data.padded_batch(chunk, cap);
+            wsum += b.weight_sum();
+            let part = self.gradacc(theta, &b)?;
+            crate::params::axpy(&mut g, 1.0, &part);
+        }
+        let inv = 1.0 / wsum.max(1e-12);
+        crate::params::scale(&mut g, inv as f32);
+        Ok((g, wsum))
+    }
+}

@@ -1,0 +1,147 @@
+//! Generic worker pool over non-`Send` engines.
+//!
+//! The `xla` crate's client/executable types hold raw pointers and are not
+//! `Send`, so parallel client updates cannot share one [`super::Engine`].
+//! Instead each worker *thread* constructs its own engine via a factory
+//! closure that runs inside the thread; jobs and results are plain `Send`
+//! values moved over channels.
+//!
+//! On a single-core testbed this degenerates gracefully to one worker
+//! (the default), but the topology is the same one a multi-socket
+//! deployment would use — Algorithm 1's "for each client k ∈ S_t **in
+//! parallel**".
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::anyhow;
+
+use crate::Result;
+
+/// A pool of `n` workers, each owning worker-local state of type `W`
+/// (constructed in-thread by the factory, so `W` need not be `Send`).
+pub struct WorkerPool<J: Send + 'static, O: Send + 'static> {
+    job_tx: Option<mpsc::Sender<J>>,
+    out_rx: mpsc::Receiver<O>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl<J: Send + 'static, O: Send + 'static> WorkerPool<J, O> {
+    /// Spawn `workers` threads. `factory(worker_id)` builds the local
+    /// state; `run(&mut state, job)` handles one job.
+    pub fn new<W, F, R>(workers: usize, factory: F, run: R) -> Result<Self>
+    where
+        F: Fn(usize) -> Result<W> + Send + Sync + Clone + 'static,
+        R: Fn(&mut W, J) -> O + Send + Sync + Clone + 'static,
+    {
+        anyhow::ensure!(workers >= 1, "pool needs >= 1 worker");
+        let (job_tx, job_rx) = mpsc::channel::<J>();
+        let job_rx = std::sync::Arc::new(std::sync::Mutex::new(job_rx));
+        let (out_tx, out_rx) = mpsc::channel::<O>();
+        let mut handles = Vec::new();
+        for id in 0..workers {
+            let job_rx = job_rx.clone();
+            let out_tx = out_tx.clone();
+            let factory = factory.clone();
+            let run = run.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut state = match factory(id) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("worker {id}: factory failed: {e:#}");
+                        return;
+                    }
+                };
+                loop {
+                    let job = match job_rx.lock().expect("pool queue poisoned").recv() {
+                        Ok(j) => j,
+                        Err(_) => return, // all senders dropped — shut down
+                    };
+                    if out_tx.send(run(&mut state, job)).is_err() {
+                        return;
+                    }
+                }
+            }));
+        }
+        Ok(Self {
+            job_tx: Some(job_tx),
+            out_rx,
+            handles,
+            workers,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Submit a job (non-blocking).
+    pub fn submit(&self, job: J) -> Result<()> {
+        self.job_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("pool already shut down"))?
+            .send(job)
+            .map_err(|_| anyhow!("pool workers gone"))
+    }
+
+    /// Receive one result (blocking).
+    pub fn recv(&self) -> Result<O> {
+        self.out_rx.recv().map_err(|_| anyhow!("pool workers gone"))
+    }
+
+    /// Submit all jobs, then collect exactly as many results.
+    pub fn map(&self, jobs: impl IntoIterator<Item = J>) -> Result<Vec<O>> {
+        let mut n = 0usize;
+        for j in jobs {
+            self.submit(j)?;
+            n += 1;
+        }
+        (0..n).map(|_| self.recv()).collect()
+    }
+}
+
+impl<J: Send + 'static, O: Send + 'static> Drop for WorkerPool<J, O> {
+    fn drop(&mut self) {
+        self.job_tx.take(); // close the queue
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_runs_jobs_with_thread_local_state() {
+        // worker state is a non-trivial accumulator built in-thread
+        let pool: WorkerPool<u64, u64> =
+            WorkerPool::new(3, |id| Ok(id as u64 * 1000), |state, j| {
+                *state += 1; // worker-local mutation
+                j * 2
+            })
+            .unwrap();
+        let mut out = pool.map(1..=50u64).unwrap();
+        out.sort_unstable();
+        assert_eq!(out, (1..=50u64).map(|v| v * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_single_worker_ordering() {
+        let pool: WorkerPool<u32, u32> =
+            WorkerPool::new(1, |_| Ok(()), |_, j| j + 1).unwrap();
+        let out = pool.map([1, 2, 3]).unwrap();
+        assert_eq!(out, vec![2, 3, 4]); // single worker preserves order
+    }
+
+    #[test]
+    fn pool_shutdown_on_drop_is_clean() {
+        let pool: WorkerPool<u32, u32> =
+            WorkerPool::new(2, |_| Ok(()), |_, j| j).unwrap();
+        pool.submit(9).unwrap();
+        let _ = pool.recv().unwrap();
+        drop(pool); // must not hang or panic
+    }
+}

@@ -1,0 +1,142 @@
+//! Learning-rate grid search — the paper's tuning methodology (§3):
+//! "a sufficiently wide grid of learning rates (typically 11-13 values
+//! for η on a multiplicative grid of resolution 10^(1/3) or 10^(1/6))",
+//! picking the best rate per configuration and *checking the optimum is
+//! interior to the grid*.
+
+use crate::config::FedConfig;
+use crate::data::Federated;
+use crate::federated::{self, RunResult, ServerOptions};
+use crate::runtime::Engine;
+use crate::Result;
+
+/// A multiplicative learning-rate grid centered at `center`.
+#[derive(Debug, Clone)]
+pub struct LrGrid {
+    pub values: Vec<f64>,
+}
+
+impl LrGrid {
+    /// `count` points at resolution `10^(1/res_den)` around `center`
+    /// (paper: res_den = 3 or 6, count 11-13).
+    pub fn new(center: f64, res_den: u32, count: usize) -> Self {
+        assert!(count >= 1 && res_den >= 1);
+        let step = 10f64.powf(1.0 / res_den as f64);
+        let half = (count / 2) as i32;
+        let values = (-half..=(count as i32 - half - 1))
+            .map(|i| center * step.powi(i))
+            .collect();
+        Self { values }
+    }
+
+    /// The quick 5-point grid the scaled harnesses default to.
+    pub fn quick(center: f64) -> Self {
+        Self::new(center, 3, 5)
+    }
+}
+
+/// Outcome of a sweep: best run + diagnostics.
+pub struct SweepResult {
+    pub best_lr: f64,
+    pub best: RunResult,
+    /// (lr, rounds_to_target or None, final_accuracy) per grid point.
+    pub table: Vec<(f64, Option<f64>, f64)>,
+    /// true iff the best lr is strictly interior to the grid (the paper's
+    /// sanity check that the grid was wide enough).
+    pub interior: bool,
+}
+
+/// Score used for selection: fewest rounds to target if a target is set
+/// (ties → higher final accuracy), else highest final accuracy.
+fn better(
+    a: (Option<f64>, f64),
+    b: (Option<f64>, f64),
+) -> bool {
+    match (a.0, b.0) {
+        (Some(x), Some(y)) if x != y => x < y,
+        (Some(_), None) => true,
+        (None, Some(_)) => false,
+        _ => a.1 > b.1,
+    }
+}
+
+/// Run `cfg` once per grid value (all other knobs fixed), return the best.
+pub fn sweep_lr<F>(
+    engine: &Engine,
+    fed: &Federated,
+    base: &FedConfig,
+    grid: &LrGrid,
+    mut opts_for: F,
+) -> Result<SweepResult>
+where
+    F: FnMut(f64) -> ServerOptions,
+{
+    anyhow::ensure!(!grid.values.is_empty(), "empty lr grid");
+    let mut best: Option<(usize, RunResult)> = None;
+    let mut table = Vec::new();
+    for (i, &lr) in grid.values.iter().enumerate() {
+        let cfg = FedConfig {
+            lr,
+            ..base.clone()
+        };
+        let run = federated::run(engine, fed, &cfg, opts_for(lr))?;
+        let rtt = base
+            .target_accuracy
+            .and_then(|t| run.accuracy.rounds_to_target(t));
+        let fin = run.final_accuracy();
+        table.push((lr, rtt, fin));
+        let is_better = match &best {
+            None => true,
+            Some((bi, brun)) => {
+                let b_rtt = base
+                    .target_accuracy
+                    .and_then(|t| brun.accuracy.rounds_to_target(t));
+                let _ = bi;
+                better((rtt, fin), (b_rtt, brun.final_accuracy()))
+            }
+        };
+        if is_better {
+            best = Some((i, run));
+        }
+    }
+    let (bi, best_run) = best.unwrap();
+    Ok(SweepResult {
+        best_lr: grid.values[bi],
+        best: best_run,
+        interior: bi > 0 && bi + 1 < grid.values.len(),
+        table,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_multiplicative_and_centered() {
+        let g = LrGrid::new(0.1, 3, 5);
+        assert_eq!(g.values.len(), 5);
+        let step = 10f64.powf(1.0 / 3.0);
+        assert!((g.values[2] - 0.1).abs() < 1e-12, "{:?}", g.values);
+        for w in g.values.windows(2) {
+            assert!((w[1] / w[0] - step).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn grid_resolution_matches_paper() {
+        // 13 points at 10^(1/6) spans 10^2 = two decades
+        let g = LrGrid::new(1.0, 6, 13);
+        let span = g.values.last().unwrap() / g.values.first().unwrap();
+        assert!((span - 100.0).abs() / 100.0 < 1e-9);
+    }
+
+    #[test]
+    fn selection_prefers_fewer_rounds_then_accuracy() {
+        assert!(better((Some(10.0), 0.9), (Some(20.0), 0.99)));
+        assert!(better((Some(10.0), 0.9), (None, 0.99)));
+        assert!(!better((None, 0.9), (Some(500.0), 0.2)));
+        assert!(better((None, 0.95), (None, 0.9)));
+        assert!(better((Some(10.0), 0.95), (Some(10.0), 0.9)));
+    }
+}

@@ -1,0 +1,165 @@
+//! Run telemetry: per-round CSV curves + JSON run summaries under
+//! `runs/<name>/`, plus a console progress logger. Everything the
+//! experiment harnesses print is also persisted so figures can be
+//! re-plotted without re-running.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::Context;
+
+use crate::util::json::escape;
+use crate::Result;
+
+/// Writer for one training run's outputs.
+pub struct RunWriter {
+    dir: PathBuf,
+    curve: BufWriter<File>,
+    started: Instant,
+    quiet: bool,
+}
+
+/// One evaluated round's record.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundRecord {
+    pub round: u64,
+    pub test_accuracy: f64,
+    pub test_loss: f64,
+    pub train_loss: Option<f64>,
+    pub clients: usize,
+    pub lr: f64,
+    pub bytes_up: u64,
+    pub sim_seconds: f64,
+}
+
+impl RunWriter {
+    /// Create `runs/<name>/` (name sanitized) and open curve.csv.
+    pub fn create(root: impl AsRef<Path>, name: &str) -> Result<Self> {
+        let safe: String = name
+            .chars()
+            .map(|c| if c.is_alphanumeric() || c == '-' || c == '_' || c == '.' { c } else { '_' })
+            .collect();
+        let dir = root.as_ref().join(safe);
+        std::fs::create_dir_all(&dir).with_context(|| format!("mkdir {dir:?}"))?;
+        let curve = BufWriter::new(File::create(dir.join("curve.csv"))?);
+        let mut w = Self {
+            dir,
+            curve,
+            started: Instant::now(),
+            quiet: std::env::var("FEDAVG_QUIET").is_ok(),
+        };
+        writeln!(
+            w.curve,
+            "round,test_accuracy,test_loss,train_loss,clients,lr,bytes_up,sim_seconds"
+        )?;
+        Ok(w)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn record(&mut self, r: &RoundRecord) -> Result<()> {
+        writeln!(
+            self.curve,
+            "{},{:.6},{:.6},{},{},{:.6},{},{:.3}",
+            r.round,
+            r.test_accuracy,
+            r.test_loss,
+            r.train_loss.map(|v| format!("{v:.6}")).unwrap_or_default(),
+            r.clients,
+            r.lr,
+            r.bytes_up,
+            r.sim_seconds
+        )?;
+        if !self.quiet {
+            let tl = r
+                .train_loss
+                .map(|v| format!(" train_loss={v:.4}"))
+                .unwrap_or_default();
+            println!(
+                "[{:>7.1}s] round {:>5}  acc={:.4} loss={:.4}{tl}  (m={}, lr={:.4})",
+                self.started.elapsed().as_secs_f64(),
+                r.round,
+                r.test_accuracy,
+                r.test_loss,
+                r.clients,
+                r.lr
+            );
+        }
+        Ok(())
+    }
+
+    /// Write the final summary JSON (flat string→string map + numbers).
+    pub fn finish(mut self, fields: &[(&str, String)]) -> Result<PathBuf> {
+        self.curve.flush()?;
+        let mut out = String::from("{\n");
+        for (i, (k, v)) in fields.iter().enumerate() {
+            let comma = if i + 1 == fields.len() { "" } else { "," };
+            // numbers pass through bare if they parse; strings escaped
+            if v.parse::<f64>().is_ok() || v == "true" || v == "false" || v == "null" {
+                out.push_str(&format!("  {}: {v}{comma}\n", escape(k)));
+            } else {
+                out.push_str(&format!("  {}: {}{comma}\n", escape(k), escape(v)));
+            }
+        }
+        out.push_str("}\n");
+        let path = self.dir.join("summary.json");
+        std::fs::write(&path, out)?;
+        Ok(path)
+    }
+}
+
+/// Null telemetry sink for benches/tests (writes to a temp-ish dir under
+/// target/).
+pub fn scratch_writer(tag: &str) -> Result<RunWriter> {
+    let pid = std::process::id();
+    RunWriter::create("target/test-runs", &format!("{tag}-{pid}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_curve_and_summary() {
+        let mut w = scratch_writer("telemetry-test").unwrap();
+        let dir = w.dir().to_path_buf();
+        w.record(&RoundRecord {
+            round: 1,
+            test_accuracy: 0.5,
+            test_loss: 1.2,
+            train_loss: Some(1.1),
+            clients: 10,
+            lr: 0.1,
+            bytes_up: 123,
+            sim_seconds: 4.5,
+        })
+        .unwrap();
+        w.record(&RoundRecord {
+            round: 2,
+            test_accuracy: 0.6,
+            test_loss: 1.0,
+            train_loss: None,
+            clients: 10,
+            lr: 0.1,
+            bytes_up: 456,
+            sim_seconds: 9.0,
+        })
+        .unwrap();
+        let summary = w
+            .finish(&[("rounds", "2".into()), ("model", "mnist_2nn".into())])
+            .unwrap();
+        let csv = std::fs::read_to_string(dir.join("curve.csv")).unwrap();
+        assert!(csv.starts_with("round,"));
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.contains("2,0.600000"));
+        let json = std::fs::read_to_string(summary).unwrap();
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("rounds").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(parsed.get("model").unwrap().as_str().unwrap(), "mnist_2nn");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

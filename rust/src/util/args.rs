@@ -1,0 +1,126 @@
+//! Tiny CLI argument helper (offline image: no clap).
+//!
+//! Parses `--key value`, `--key=value` and `--flag` forms plus positional
+//! arguments, with typed getters and an unknown-flag check.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail};
+
+use crate::Result;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `--key v`, `--key=v`,
+    /// bare `--flag` (value "true"), positionals otherwise.
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse process args (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad number {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad integer {v:?}")),
+        }
+    }
+
+    /// Error out on flags not in `known` (catches typos in experiment
+    /// invocations, where a silently-ignored flag wastes a long run).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn forms() {
+        let a = parse("table1 --scale 0.1 --model=mnist_2nn --verbose --rounds 20");
+        assert_eq!(a.positional, vec!["table1"]);
+        assert_eq!(a.f64_or("scale", 1.0).unwrap(), 0.1);
+        assert_eq!(a.str_or("model", "x"), "mnist_2nn");
+        assert!(a.has("verbose"));
+        assert_eq!(a.usize_or("rounds", 5).unwrap(), 20);
+        assert_eq!(a.usize_or("absent", 5).unwrap(), 5);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse("--scal 0.1");
+        assert!(a.check_known(&["scale"]).is_err());
+        assert!(a.check_known(&["scal"]).is_ok());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("--rounds ten");
+        assert!(a.usize_or("rounds", 1).is_err());
+    }
+}

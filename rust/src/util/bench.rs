@@ -1,0 +1,177 @@
+//! Micro-bench harness (offline image: no criterion).
+//!
+//! Criterion-style methodology, hand-rolled: warmup, then timed batches
+//! until a wall-clock budget is spent; reports mean / p50 / p95 per
+//! iteration with simple jackknife-free robustness (median over batches).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    /// throughput hint: elements (or bytes) per iteration, if set
+    pub elems_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<42} {:>10} it  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        );
+        if let Some(e) = self.elems_per_iter {
+            let per_s = e / (self.mean_ns / 1e9);
+            s.push_str(&format!("  ({} elem/s)", fmt_rate(per_s)));
+        }
+        s
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.1}k", r / 1e3)
+    } else {
+        format!("{r:.1}")
+    }
+}
+
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(Duration::from_millis(300), Duration::from_secs(2))
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: Duration, budget: Duration) -> Self {
+        Self {
+            warmup,
+            budget,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Self::new(Duration::from_millis(50), Duration::from_millis(700))
+    }
+
+    /// Time `f`, which performs ONE iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_with_elems(name, None, &mut f)
+    }
+
+    /// Like [`bench`], reporting `elems` units of work per iteration.
+    pub fn bench_elems<F: FnMut()>(&mut self, name: &str, elems: f64, mut f: F) -> &BenchResult {
+        self.bench_with_elems(name, Some(elems), &mut f)
+    }
+
+    fn bench_with_elems(
+        &mut self,
+        name: &str,
+        elems: Option<f64>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        // warmup
+        let t0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while t0.elapsed() < self.warmup || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+        }
+        // estimate per-iter cost from warmup to choose batch size
+        let per_iter = t0.elapsed().as_nanos() as f64 / warm_iters as f64;
+        let batch = ((5e6 / per_iter).ceil() as u64).clamp(1, 10_000);
+
+        let mut samples: Vec<f64> = Vec::new(); // per-iteration ns, per batch
+        let mut iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.budget || samples.is_empty() {
+            let b0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(b0.elapsed().as_nanos() as f64 / batch as f64);
+            iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p50 = samples[samples.len() / 2];
+        let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+        let p95 = samples[p95_idx];
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: p50,
+            p95_ns: p95,
+            elems_per_iter: elems,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::new(Duration::from_millis(5), Duration::from_millis(30));
+        let mut acc = 0u64;
+        let r = b
+            .bench("spin", || {
+                for i in 0..100u64 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                std::hint::black_box(acc);
+            })
+            .clone();
+        assert!(r.iters > 0);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn format_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

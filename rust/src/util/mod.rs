@@ -1,0 +1,6 @@
+//! In-tree utilities replacing crates unavailable in this offline image
+//! (serde → [`json`], clap → [`args`], criterion → [`bench`]).
+
+pub mod args;
+pub mod bench;
+pub mod json;

@@ -1,0 +1,307 @@
+//! Integration: the full FedAvg stack (Algorithm 1) over real artifacts.
+//!
+//! Requires `make artifacts` (skips with a message otherwise). Covers:
+//! learning progress, FedSGD-equivalence, determinism, non-IID behaviour,
+//! availability injection, one-shot baseline, and the sweep driver.
+
+use fedavg::baselines::oneshot;
+use fedavg::config::{BatchSize, FedConfig, Partition};
+use fedavg::exper::mnist_fed;
+use fedavg::federated::{self, ServerOptions};
+use fedavg::runtime::Engine;
+use fedavg::sweep::{sweep_lr, LrGrid};
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine"))
+}
+
+fn base_cfg() -> FedConfig {
+    FedConfig {
+        model: "mnist_2nn".into(),
+        c: 0.5,
+        e: 2,
+        b: BatchSize::Fixed(10),
+        lr: 0.1,
+        rounds: 6,
+        eval_every: 2,
+        seed: 77,
+        ..Default::default()
+    }
+}
+
+fn opts() -> ServerOptions {
+    ServerOptions {
+        eval_cap: Some(300),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fedavg_improves_over_rounds() {
+    let Some(eng) = engine() else { return };
+    let fed = mnist_fed(0.05, Partition::Iid, 1);
+    let mut cfg = base_cfg();
+    cfg.rounds = 10;
+    let res = federated::run(&eng, &fed, &cfg, opts()).unwrap();
+    let pts = res.accuracy.points();
+    let first = pts.first().unwrap().1;
+    let best = res.accuracy.best_value().unwrap();
+    assert!(
+        best > first + 0.1 || best > 0.9,
+        "no learning: first {first:.3}, best {best:.3}"
+    );
+    // communication accounting matches rounds x clients x model bytes
+    let m = cfg.clients_per_round(fed.num_clients()) as u64;
+    let expect_up = res.comm.rounds * m * fedavg::comms::model_bytes(199_210);
+    assert_eq!(res.comm.bytes_up, expect_up);
+}
+
+#[test]
+fn runs_are_deterministic_given_seed() {
+    let Some(eng) = engine() else { return };
+    let fed = mnist_fed(0.05, Partition::Iid, 2);
+    let cfg = base_cfg();
+    let a = federated::run(&eng, &fed, &cfg, opts()).unwrap();
+    let b = federated::run(&eng, &fed, &cfg, opts()).unwrap();
+    assert_eq!(a.final_theta, b.final_theta, "non-deterministic run");
+    assert_eq!(a.accuracy.points(), b.accuracy.points());
+}
+
+#[test]
+fn fedsgd_equals_fedavg_e1_full_batch() {
+    // The paper's §2 equivalence: one full-batch local step then average
+    // == gradient-averaged step. Our FedSGD IS FedAvg(E=1, B=inf); verify
+    // the update direction against a manually computed global gradient.
+    let Some(eng) = engine() else { return };
+    let fed = mnist_fed(0.05, Partition::Iid, 3);
+    let model = eng.model("mnist_2nn").unwrap();
+    let mut cfg = base_cfg().fedsgd();
+    cfg.c = 1.0; // all clients
+    cfg.rounds = 1;
+    cfg.eval_every = 1;
+    cfg.lr = 0.2;
+    let res = federated::run(&eng, &fed, &cfg, opts()).unwrap();
+
+    // manual: theta0 - lr * grad(f) over the whole training set
+    let theta0 = model.init(cfg.seed as i32).unwrap();
+    let all: Vec<usize> = (0..fed.train.len()).collect();
+    let (g, _) = model.full_gradient(&theta0, &fed.train, &all).unwrap();
+    let manual = model.apply(&theta0, &g, cfg.lr as f32).unwrap();
+
+    let dist = fedavg::params::l2_dist(&res.final_theta, &manual);
+    let norm = fedavg::params::l2_norm(&manual);
+    assert!(
+        dist / norm < 1e-4,
+        "FedSGD round != global gradient step: rel {}",
+        dist / norm
+    );
+}
+
+#[test]
+fn c_zero_means_single_client() {
+    let Some(eng) = engine() else { return };
+    let fed = mnist_fed(0.05, Partition::Iid, 4);
+    let mut cfg = base_cfg();
+    cfg.c = 0.0;
+    cfg.rounds = 2;
+    let res = federated::run(&eng, &fed, &cfg, opts()).unwrap();
+    // bytes_up = rounds x ONE client x model bytes
+    assert_eq!(
+        res.comm.bytes_up,
+        2 * fedavg::comms::model_bytes(199_210),
+        "C=0 must select exactly one client per round"
+    );
+}
+
+#[test]
+fn noniid_partition_converges_slower_or_noisier() {
+    let Some(eng) = engine() else { return };
+    let mut cfg = base_cfg();
+    cfg.rounds = 8;
+    cfg.c = 0.2;
+    let iid = federated::run(&eng, &mnist_fed(0.05, Partition::Iid, 5), &cfg, opts()).unwrap();
+    let non = federated::run(
+        &eng,
+        &mnist_fed(0.05, Partition::Pathological(2), 5),
+        &cfg,
+        opts(),
+    )
+    .unwrap();
+    // the paper's qualitative claim: at equal round budget, pathological
+    // non-IID is no better than IID (almost always strictly worse)
+    let iid_best = iid.accuracy.best_value().unwrap();
+    let non_best = non.accuracy.best_value().unwrap();
+    assert!(
+        non_best <= iid_best + 0.05,
+        "non-IID ({non_best:.3}) unexpectedly beats IID ({iid_best:.3})"
+    );
+}
+
+#[test]
+fn availability_trace_reduces_round_size() {
+    let Some(eng) = engine() else { return };
+    let fed = mnist_fed(0.05, Partition::Iid, 6);
+    let mut cfg = base_cfg();
+    cfg.c = 1.0;
+    cfg.rounds = 3;
+    let mut o = opts();
+    o.availability = Some(0.3); // most clients offline
+    let res = federated::run(&eng, &fed, &cfg, o).unwrap();
+    let full = res.comm.rounds * fed.num_clients() as u64
+        * fedavg::comms::model_bytes(199_210);
+    assert!(
+        res.comm.bytes_up < full,
+        "availability filter had no effect on participation"
+    );
+    assert!(res.comm.bytes_up > 0);
+}
+
+#[test]
+fn early_stop_on_target() {
+    let Some(eng) = engine() else { return };
+    let fed = mnist_fed(0.05, Partition::Iid, 7);
+    let mut cfg = base_cfg();
+    cfg.rounds = 50;
+    cfg.eval_every = 1;
+    cfg.target_accuracy = Some(0.3); // trivially reachable
+    let res = federated::run(&eng, &fed, &cfg, opts()).unwrap();
+    assert!(
+        res.rounds_run < 50,
+        "did not stop early at target ({} rounds)",
+        res.rounds_run
+    );
+}
+
+#[test]
+fn oneshot_averaging_runs_and_reports_both_models() {
+    let Some(eng) = engine() else { return };
+    let fed = mnist_fed(0.05, Partition::Iid, 8);
+    let cfg = oneshot::OneShotConfig {
+        model: "mnist_2nn".into(),
+        epochs: 2,
+        batch: BatchSize::Fixed(10),
+        lr: 0.1,
+        seed: 9,
+    };
+    let res = oneshot::run(&eng, &fed, &cfg, Some(200)).unwrap();
+    assert!(res.averaged.accuracy() > 0.05);
+    assert!(res.best_single.accuracy() > 0.05);
+}
+
+#[test]
+fn lr_sweep_selects_and_flags_interior() {
+    let Some(eng) = engine() else { return };
+    let fed = mnist_fed(0.05, Partition::Iid, 9);
+    let mut cfg = base_cfg();
+    cfg.rounds = 4;
+    cfg.target_accuracy = Some(0.5);
+    let grid = LrGrid::new(0.1, 3, 3);
+    let res = sweep_lr(&eng, &fed, &cfg, &grid, |_| opts()).unwrap();
+    assert_eq!(res.table.len(), 3);
+    assert!(grid.values.contains(&res.best_lr));
+}
+
+#[test]
+fn token_model_federated_round_runs() {
+    let Some(eng) = engine() else { return };
+    let fed = fedavg::exper::shakespeare_fed(0.02, true, 10);
+    let cfg = FedConfig {
+        model: "shakespeare_lstm".into(),
+        c: 0.1,
+        e: 1,
+        b: BatchSize::Fixed(10),
+        lr: 1.0,
+        rounds: 2,
+        eval_every: 1,
+        seed: 11,
+        ..Default::default()
+    };
+    let mut o = opts();
+    o.eval_cap = Some(60);
+    let res = federated::run(&eng, &fed, &cfg, o).unwrap();
+    assert_eq!(res.rounds_run, 2);
+    assert!(res.accuracy.last_value().unwrap() >= 0.0);
+}
+
+#[test]
+fn mismatched_model_and_dataset_rejected() {
+    let Some(eng) = engine() else { return };
+    let fed = mnist_fed(0.05, Partition::Iid, 12);
+    let cfg = FedConfig {
+        model: "shakespeare_lstm".into(), // token model on image data
+        rounds: 1,
+        ..base_cfg()
+    };
+    assert!(federated::run(&eng, &fed, &cfg, opts()).is_err());
+}
+
+#[test]
+fn dp_secure_agg_and_compression_paths() {
+    let Some(eng) = engine() else { return };
+    let fed = mnist_fed(0.05, Partition::Iid, 20);
+    let mut cfg = base_cfg();
+    cfg.rounds = 3;
+    cfg.c = 0.2;
+
+    // plain baseline
+    let plain = federated::run(&eng, &fed, &cfg, opts()).unwrap();
+    assert!(plain.epsilon.is_none());
+
+    // secure aggregation: same algorithm, near-identical ONE-round result
+    // (fixed-point masking adds <=2^-20/coord; multi-round comparisons
+    // amplify chaotically through training, so compare a single round)
+    let mut one = cfg.clone();
+    one.rounds = 1;
+    let plain1 = federated::run(&eng, &fed, &one, opts()).unwrap();
+    let mut o = opts();
+    o.secure_agg = true;
+    let sec = federated::run(&eng, &fed, &one, o).unwrap();
+    let dist = fedavg::params::l2_dist(&plain1.final_theta, &sec.final_theta);
+    assert!(
+        dist < 5e-3,
+        "secure agg diverged from plain FedAvg in one round: {dist}"
+    );
+
+    // DP: noise applied, epsilon reported and positive
+    let mut o = opts();
+    o.dp = Some(fedavg::federated::server::DpConfig {
+        clip_norm: 1.0,
+        sigma: 0.5,
+    });
+    let dp = federated::run(&eng, &fed, &cfg, o).unwrap();
+    let eps = dp.epsilon.expect("epsilon reported");
+    assert!(eps > 0.0 && eps.is_finite());
+    assert_ne!(dp.final_theta, plain.final_theta);
+
+    // compression: uplink bytes shrink by ~the sparsity factor
+    let mut o = opts();
+    o.compression = Some(fedavg::federated::server::CompressionConfig {
+        top_k_frac: Some(0.01),
+        quant_bits: None,
+    });
+    let comp = federated::run(&eng, &fed, &cfg, o).unwrap();
+    assert!(
+        comp.comm.bytes_up * 20 < plain.comm.bytes_up,
+        "top-1% did not shrink uplink: {} vs {}",
+        comp.comm.bytes_up,
+        plain.comm.bytes_up
+    );
+    // downlink unchanged (server still broadcasts the full model)
+    assert_eq!(comp.comm.bytes_down, plain.comm.bytes_down);
+    // still learns (error feedback keeps signal flowing)
+    assert!(comp.accuracy.best_value().unwrap() > 0.2);
+
+    // quantization-only: ~4x uplink shrink at 8 bits
+    let mut o = opts();
+    o.compression = Some(fedavg::federated::server::CompressionConfig {
+        top_k_frac: None,
+        quant_bits: Some(8),
+    });
+    let q = federated::run(&eng, &fed, &cfg, o).unwrap();
+    assert!(q.comm.bytes_up * 3 < plain.comm.bytes_up);
+}

@@ -1,0 +1,250 @@
+//! Property-based tests on coordinator invariants (offline image: no
+//! proptest crate — randomized cases are generated with the in-tree
+//! seeded RNG, 100+ cases per property, failures print the case seed).
+
+use fedavg::config::{BatchSize, FedConfig};
+use fedavg::data::rng::Rng;
+use fedavg::data::{partition, Dataset, Examples};
+use fedavg::metrics::LearningCurve;
+use fedavg::params;
+
+const CASES: u64 = 120;
+
+fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.gauss_f32() * scale).collect()
+}
+
+// ------------------------------------------------------- params invariants
+
+#[test]
+fn prop_weighted_mean_convexity_and_identity() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case);
+        let dim = 1 + rng.below(200);
+        let k = 1 + rng.below(8);
+        let vecs: Vec<Vec<f32>> = (0..k).map(|_| rand_vec(&mut rng, dim, 2.0)).collect();
+        let ws: Vec<f32> = (0..k).map(|_| 0.5 + rng.f32() * 9.5).collect();
+        let items: Vec<(f32, &[f32])> =
+            ws.iter().zip(&vecs).map(|(w, v)| (*w, v.as_slice())).collect();
+        let mean = params::weighted_mean(&items);
+        // convexity: each coordinate within [min, max] of inputs
+        for d in 0..dim {
+            let lo = vecs.iter().map(|v| v[d]).fold(f32::INFINITY, f32::min);
+            let hi = vecs.iter().map(|v| v[d]).fold(f32::NEG_INFINITY, f32::max);
+            assert!(
+                mean[d] >= lo - 1e-4 && mean[d] <= hi + 1e-4,
+                "case {case}: coord {d} out of hull"
+            );
+        }
+        // identity: averaging k copies of the same vector returns it
+        let same: Vec<(f32, &[f32])> =
+            ws.iter().map(|w| (*w, vecs[0].as_slice())).collect();
+        let m2 = params::weighted_mean(&same);
+        for d in 0..dim {
+            assert!((m2[d] - vecs[0][d]).abs() < 1e-4, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_weighted_mean_scale_invariant_in_weights() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(1000 + case);
+        let dim = 1 + rng.below(64);
+        let a = rand_vec(&mut rng, dim, 1.0);
+        let b = rand_vec(&mut rng, dim, 1.0);
+        let (w1, w2) = (1.0 + rng.f32() * 5.0, 1.0 + rng.f32() * 5.0);
+        let s = 1.0 + rng.f32() * 99.0;
+        let m1 = params::weighted_mean(&[(w1, &a[..]), (w2, &b[..])]);
+        let m2 = params::weighted_mean(&[(w1 * s, &a[..]), (w2 * s, &b[..])]);
+        for d in 0..dim {
+            assert!((m1[d] - m2[d]).abs() < 1e-4, "case {case} coord {d}");
+        }
+    }
+}
+
+#[test]
+fn prop_interpolate_linearity() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(2000 + case);
+        let dim = 1 + rng.below(100);
+        let a = rand_vec(&mut rng, dim, 3.0);
+        let b = rand_vec(&mut rng, dim, 3.0);
+        let l = rng.f32() * 1.4 - 0.2; // the Figure-1 range
+        let mix = params::interpolate(&a, &b, l);
+        for d in 0..dim {
+            let want = (1.0 - l) * a[d] + l * b[d];
+            assert!((mix[d] - want).abs() < 1e-4, "case {case}");
+        }
+    }
+}
+
+// ---------------------------------------------------- partition invariants
+
+#[test]
+fn prop_partitions_are_exact() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(3000 + case);
+        let k = 2 + rng.below(30);
+        let n = k * (2 + rng.below(50)) + rng.below(k); // any n >= 2k
+        for (tag, clients) in [
+            ("iid", partition::iid(n, k, &mut rng)),
+            ("zipf", partition::unbalanced_zipf(n, k, 1.0 + rng.f64(), &mut rng)),
+        ] {
+            let mut all: Vec<usize> = clients.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(
+                all,
+                (0..n).collect::<Vec<_>>(),
+                "case {case} {tag}: not an exact partition (n={n}, k={k})"
+            );
+            assert!(clients.iter().all(|c| !c.is_empty()), "case {case} {tag}");
+        }
+    }
+}
+
+#[test]
+fn prop_pathological_label_concentration() {
+    for case in 0..40 {
+        let mut rng = Rng::new(4000 + case);
+        let classes = 2 + rng.below(12);
+        let per_class = 20 + rng.below(40);
+        let n = classes * per_class;
+        let labels: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
+        let k = 2 + rng.below(10);
+        let spc = 2;
+        if k * spc * 2 > n {
+            continue;
+        }
+        // the paper's regime: shard_size <= examples-per-class, so one
+        // shard straddles at most 2 labels (MNIST: shards of 300, 6000
+        // per digit). Outside that regime the concentration bound is
+        // necessarily weaker, so skip those cases.
+        if n / (k * spc) > per_class {
+            continue;
+        }
+        let clients = partition::pathological(&labels, k, spc, &mut rng);
+        // each client's label set is tiny relative to the label universe
+        for (ci, c) in clients.iter().enumerate() {
+            let mut ls: Vec<i32> = c.iter().map(|&i| labels[i]).collect();
+            ls.sort_unstable();
+            ls.dedup();
+            assert!(
+                ls.len() <= spc + 2,
+                "case {case}: client {ci} sees {} of {classes} labels",
+                ls.len()
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------ metrics invariants
+
+#[test]
+fn prop_monotone_curve_dominates_and_is_monotone() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(5000 + case);
+        let mut curve = LearningCurve::new();
+        let mut round = 0u64;
+        for _ in 0..(2 + rng.below(40)) {
+            round += 1 + rng.below(5) as u64;
+            curve.push(round, rng.f64());
+        }
+        let mono = curve.monotone();
+        let mut prev = f64::NEG_INFINITY;
+        for (&(r0, raw), &(r1, m)) in curve.points().iter().zip(mono.points()) {
+            assert_eq!(r0, r1);
+            assert!(m >= raw, "case {case}: monotone below raw");
+            assert!(m >= prev, "case {case}: not monotone");
+            prev = m;
+        }
+    }
+}
+
+#[test]
+fn prop_rounds_to_target_consistent_with_curve() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(6000 + case);
+        let mut curve = LearningCurve::new();
+        let mut round = 0u64;
+        for _ in 0..(2 + rng.below(30)) {
+            round += 1 + rng.below(4) as u64;
+            curve.push(round, rng.f64());
+        }
+        let target = rng.f64();
+        let best = curve.best_value().unwrap();
+        match curve.rounds_to_target(target) {
+            None => assert!(best < target, "case {case}: target reachable but None"),
+            Some(r) => {
+                assert!(best >= target, "case {case}: unreachable target got Some");
+                let (first, _) = curve.points()[0];
+                let (last, _) = *curve.points().last().unwrap();
+                assert!(
+                    r >= first as f64 && r <= last as f64,
+                    "case {case}: crossing {r} outside [{first}, {last}]"
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- config invariants
+
+#[test]
+fn prop_clients_per_round_bounds() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(7000 + case);
+        let k = 1 + rng.below(5000);
+        let cfg = FedConfig {
+            c: rng.f64(),
+            ..Default::default()
+        };
+        let m = cfg.clients_per_round(k);
+        assert!((1..=k).contains(&m), "case {case}: m={m} k={k} C={}", cfg.c);
+    }
+}
+
+#[test]
+fn prop_updates_per_round_positive_and_scales() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(8000 + case);
+        let e = 1 + rng.below(30);
+        let nk = 1 + rng.below(5000);
+        let b = 1 + rng.below(nk);
+        let u_fixed = fedavg::federated::updates_per_round(e, nk, BatchSize::Fixed(b));
+        let u_full = fedavg::federated::updates_per_round(e, nk, BatchSize::Full);
+        assert!(u_fixed > 0.0 && u_full > 0.0);
+        assert_eq!(u_full, e as f64, "case {case}");
+        // B=n_k does exactly E updates; smaller B only does more
+        assert!(
+            u_fixed >= e as f64 - 1e-9,
+            "case {case}: u {u_fixed} < E {e}"
+        );
+    }
+}
+
+// ------------------------------------------------------ dataset invariants
+
+#[test]
+fn prop_padded_batch_weight_sums() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(9000 + case);
+        let n = 2 + rng.below(60);
+        let dim = 1 + rng.below(20);
+        let data = Dataset {
+            name: "prop".into(),
+            examples: Examples::Image {
+                x: rand_vec(&mut rng, n * dim, 1.0),
+                y: (0..n).map(|_| rng.below(10) as i32).collect(),
+                dim,
+            },
+        };
+        let take = 1 + rng.below(n);
+        let idxs: Vec<usize> = rng.sample_indices(n, take);
+        let cap = take + rng.below(16);
+        let b = data.padded_batch(&idxs, cap);
+        assert_eq!(b.weight_sum(), take as f64, "case {case}");
+        assert_eq!(b.logical, take);
+        assert_eq!(data.weight_of(&idxs), take as f64);
+    }
+}

@@ -1,0 +1,257 @@
+//! Integration: rust PJRT runtime executing the real AOT artifacts.
+//!
+//! These tests require `make artifacts` to have run (skipped with a clear
+//! message otherwise). They verify the rust-side view of the L2 entry
+//! contract using *native* invariants (determinism, axpy identity, grad
+//! linearity, chunked-full-batch equivalence) — no python in the loop.
+
+use fedavg::data::{Dataset, Examples};
+use fedavg::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine"))
+}
+
+fn toy_mnist(n: usize, seed: u64) -> Dataset {
+    let mut rng = fedavg::data::rng::Rng::new(seed);
+    let x: Vec<f32> = (0..n * 784).map(|_| rng.gauss_f32() * 0.5).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+    Dataset {
+        name: "toy".into(),
+        examples: Examples::Image { x, y, dim: 784 },
+    }
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let Some(eng) = engine() else { return };
+    let model = eng.model("mnist_2nn").unwrap();
+    let a = model.init(7).unwrap();
+    let b = model.init(7).unwrap();
+    let c = model.init(8).unwrap();
+    assert_eq!(a.len(), 199_210);
+    assert_eq!(a, b, "same seed must give identical params");
+    assert_ne!(a, c, "different seeds must differ");
+    let norm = fedavg::params::l2_norm(&a);
+    assert!(norm > 1.0 && norm < 100.0, "init norm {norm}");
+}
+
+#[test]
+fn apply_matches_native_axpy() {
+    let Some(eng) = engine() else { return };
+    let model = eng.model("mnist_2nn").unwrap();
+    let theta = model.init(1).unwrap();
+    let g: Vec<f32> = (0..theta.len()).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect();
+    let out = model.apply(&theta, &g, 0.25).unwrap();
+    for i in (0..theta.len()).step_by(9973) {
+        let want = theta[i] - 0.25 * g[i];
+        assert!(
+            (out[i] - want).abs() < 1e-6,
+            "apply[{i}]: {} vs {want}",
+            out[i]
+        );
+    }
+}
+
+#[test]
+fn step_changes_params_and_respects_lr_zero() {
+    let Some(eng) = engine() else { return };
+    let model = eng.model("mnist_2nn").unwrap();
+    let theta = model.init(2).unwrap();
+    let data = toy_mnist(10, 3);
+    let idxs: Vec<usize> = (0..10).collect();
+    let batch = data.padded_batch(&idxs, 10);
+
+    let frozen = model.step(&theta, &batch, 0.0).unwrap();
+    assert_eq!(frozen, theta, "lr=0 step must be identity");
+
+    let moved = model.step(&theta, &batch, 0.1).unwrap();
+    let dist = fedavg::params::l2_dist(&theta, &moved);
+    assert!(dist > 1e-4, "lr=0.1 step moved {dist}");
+}
+
+#[test]
+fn gradacc_is_linear_in_examples() {
+    let Some(eng) = engine() else { return };
+    let model = eng.model("mnist_2nn").unwrap();
+    let theta = model.init(4).unwrap();
+    let data = toy_mnist(64, 5);
+    let all: Vec<usize> = (0..64).collect();
+    let full = model.gradacc(&theta, &data.padded_batch(&all, 64)).unwrap();
+    let a = model
+        .gradacc(&theta, &data.padded_batch(&all[..32], 64))
+        .unwrap();
+    let b = model
+        .gradacc(&theta, &data.padded_batch(&all[32..], 64))
+        .unwrap();
+    let mut sum = a;
+    fedavg::params::axpy(&mut sum, 1.0, &b);
+    let err = full
+        .iter()
+        .zip(&sum)
+        .map(|(x, y)| (x - y).abs() as f64)
+        .fold(0.0, f64::max);
+    let scale = fedavg::params::l2_norm(&full) / (full.len() as f64).sqrt();
+    assert!(err < 1e-4 + 1e-3 * scale, "linearity violated: {err}");
+}
+
+#[test]
+fn chunked_full_batch_equals_direct_step() {
+    // the B=inf path: gradacc chunks + apply == step over the same batch
+    let Some(eng) = engine() else { return };
+    let model = eng.model("mnist_2nn").unwrap();
+    let theta = model.init(6).unwrap();
+    let data = toy_mnist(50, 7);
+    let idxs: Vec<usize> = (0..50).collect();
+    let lr = 0.2f32;
+
+    let direct = model
+        .step(&theta, &data.padded_batch(&idxs, 50), lr)
+        .unwrap();
+
+    let (g, wsum) = model.full_gradient(&theta, &data, &idxs).unwrap();
+    assert!((wsum - 50.0).abs() < 1e-9);
+    let via_chunks = model.apply(&theta, &g, lr).unwrap();
+
+    let dist = fedavg::params::l2_dist(&direct, &via_chunks);
+    let base = fedavg::params::l2_norm(&direct);
+    assert!(dist / base < 1e-5, "chunked vs direct: rel {}", dist / base);
+}
+
+#[test]
+fn eval_reports_sane_random_init_metrics() {
+    let Some(eng) = engine() else { return };
+    let model = eng.model("mnist_2nn").unwrap();
+    let theta = model.init(9).unwrap();
+    let data = toy_mnist(200, 11);
+    let sums = model.eval_dataset(&theta, &data, None).unwrap();
+    assert!((sums.weight_sum - 200.0).abs() < 1e-6);
+    // random 10-class task at random init: loss ~ ln 10, acc ~ 0.1
+    assert!(sums.mean_loss() > 1.5 && sums.mean_loss() < 4.0, "{}", sums.mean_loss());
+    assert!(sums.accuracy() < 0.5, "{}", sums.accuracy());
+}
+
+#[test]
+fn training_reduces_loss_on_toy_data() {
+    let Some(eng) = engine() else { return };
+    let model = eng.model("mnist_2nn").unwrap();
+    let mut theta = model.init(10).unwrap();
+    let data = toy_mnist(60, 13);
+    let idxs: Vec<usize> = (0..60).collect();
+    let before = model.eval_dataset(&theta, &data, None).unwrap().mean_loss();
+    let mut rng = fedavg::data::rng::Rng::new(99);
+    let mut order = idxs.clone();
+    for _epoch in 0..8 {
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(10) {
+            let b = data.padded_batch(chunk, 10);
+            theta = model.step(&theta, &b, 0.1).unwrap();
+        }
+    }
+    let after = model.eval_dataset(&theta, &data, None).unwrap().mean_loss();
+    assert!(
+        after < 0.6 * before,
+        "loss did not drop: {before} -> {after}"
+    );
+}
+
+#[test]
+fn token_model_eval_and_step_run() {
+    let Some(eng) = engine() else { return };
+    let model = eng.model("shakespeare_lstm").unwrap();
+    let meta = model.meta().clone();
+    assert!(meta.is_tokens());
+    let t = meta.x_dim;
+    let mut rng = fedavg::data::rng::Rng::new(21);
+    let n = 12;
+    let mut x = vec![0i32; n * t];
+    let mut y = vec![0i32; n * t];
+    let mut w = vec![0.0f32; n * t];
+    for r in 0..n {
+        let len = 20 + rng.below(t - 20);
+        for i in 0..len {
+            x[r * t + i] = rng.below(90) as i32;
+            y[r * t + i] = rng.below(90) as i32;
+            w[r * t + i] = 1.0;
+        }
+    }
+    let data = Dataset {
+        name: "toy-tokens".into(),
+        examples: Examples::Tokens { x, y, w, t },
+    };
+    let theta = model.init(3).unwrap();
+    let sums = model
+        .eval_dataset(&theta, &data, None)
+        .unwrap();
+    assert!(sums.weight_sum > 0.0);
+    // ~uniform over 90 chars -> loss near ln(90) ≈ 4.5
+    assert!(sums.mean_loss() > 3.0 && sums.mean_loss() < 6.0, "{}", sums.mean_loss());
+    let idxs: Vec<usize> = (0..n).collect();
+    let b = data.padded_batch(&idxs[..10], 10);
+    let theta2 = model.step(&theta, &b, 0.5).unwrap();
+    assert_ne!(theta, theta2);
+}
+
+#[test]
+fn worker_pool_runs_client_updates_with_per_thread_engines() {
+    // Algorithm 1's "in parallel": each worker thread owns its own PJRT
+    // engine (the xla types are not Send); jobs are (client, theta) pairs.
+    if !Engine::default_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    use fedavg::config::BatchSize;
+    use fedavg::federated::{local_update, LocalSpec};
+    use fedavg::runtime::pool::WorkerPool;
+    use std::sync::Arc;
+
+    let data = Arc::new(toy_mnist(40, 31));
+    let theta0 = {
+        let eng = Engine::load(Engine::default_dir()).unwrap();
+        Arc::new(eng.model("mnist_2nn").unwrap().init(5).unwrap())
+    };
+
+    type Job = (usize, Vec<usize>);
+    type Out = (usize, Vec<f32>, f64);
+    let data2 = data.clone();
+    let theta2 = theta0.clone();
+    let pool: WorkerPool<Job, Out> = WorkerPool::new(
+        2,
+        move |_id| {
+            let eng = Engine::load(Engine::default_dir())?;
+            eng.warmup("mnist_2nn", &["step_b10"])?;
+            Ok(eng)
+        },
+        move |eng, (client, idxs): Job| {
+            let model = eng.model("mnist_2nn").unwrap();
+            let spec = LocalSpec {
+                epochs: 1,
+                batch: BatchSize::Fixed(10),
+                lr: 0.05,
+                shuffle_seed: client as u64,
+            };
+            let res = local_update(&model, &data2, &idxs, &theta2, &spec).unwrap();
+            (client, res.theta, res.weight)
+        },
+    )
+    .unwrap();
+
+    let jobs: Vec<Job> = (0..4)
+        .map(|c| (c, (c * 10..(c + 1) * 10).collect()))
+        .collect();
+    let mut outs = pool.map(jobs).unwrap();
+    outs.sort_by_key(|(c, _, _)| *c);
+    assert_eq!(outs.len(), 4);
+    for (c, theta, w) in &outs {
+        assert_eq!(*w, 10.0, "client {c}");
+        assert_ne!(theta, theta0.as_ref(), "client {c} did not train");
+    }
+    // deterministic per client: two pool runs give identical results —
+    // exercised implicitly by seeding; check clients differ from each other
+    assert_ne!(outs[0].1, outs[1].1);
+}
