@@ -17,9 +17,11 @@ fn main() {
     }
 
     for k in [100usize, 1000, 100_000] {
-        let mut av = Availability::new(0.7, 9);
+        let av = Availability::new(0.7, 9);
+        let mut round = 0u64;
         b.bench(&format!("availability/k={k}"), || {
-            std::hint::black_box(av.online(k));
+            round += 1;
+            std::hint::black_box(av.online(round, k));
         });
     }
 }

@@ -12,7 +12,7 @@
 //! jitter model the "clients are slow/offline" reality the paper assumes
 //! away via synchronous rounds.
 
-use crate::data::rng::Rng;
+use crate::data::rng::{hash3_unit, Rng};
 
 /// Network model for the synchronous-round protocol.
 #[derive(Debug, Clone)]
@@ -110,6 +110,23 @@ impl CommSim {
         rc
     }
 
+    /// Fold an externally-simulated round into the running totals. The
+    /// fleet coordinator computes its own per-client transfer times from
+    /// persistent device profiles (see `coordinator::fleet`), so it hands
+    /// the finished accounting here instead of using the jitter model.
+    pub fn ingest(&mut self, bytes_up: u64, bytes_down: u64, transfer_s: f64) -> RoundComm {
+        let rc = RoundComm {
+            bytes_up,
+            bytes_down,
+            transfer_s,
+        };
+        self.totals.rounds += 1;
+        self.totals.bytes_up += rc.bytes_up;
+        self.totals.bytes_down += rc.bytes_down;
+        self.totals.sim_seconds += rc.transfer_s;
+        rc
+    }
+
     pub fn totals(&self) -> CommTotals {
         self.totals
     }
@@ -120,36 +137,63 @@ pub fn model_bytes(param_count: usize) -> u64 {
     (param_count * std::mem::size_of::<f32>()) as u64
 }
 
-/// Client-availability trace: each client is online with probability
-/// `p_online` each round (round-independent Bernoulli, seeded). The
-/// sampler draws only from online clients, modelling the paper's
+/// Client-availability trace: client `c` is online in round `r` with
+/// probability `p_online`, decided by a stateless `hash3(seed, r, c)`
+/// coin — a pure function of its coordinates, NOT a sequential RNG
+/// stream. This makes online status independent of query order, so
+/// changing the evaluation cadence (or any other consumer of randomness)
+/// cannot desync which clients a given round sees. Models the paper's
 /// "clients ... frequently offline" constraint.
 pub struct Availability {
     p_online: f64,
-    rng: Rng,
+    seed: u64,
 }
 
 impl Availability {
     pub fn new(p_online: f64, seed: u64) -> Self {
-        assert!((0.0..=1.0).contains(&p_online));
+        // p = 0 would make the non-empty guarantee unsatisfiable
+        assert!(
+            p_online > 0.0 && p_online <= 1.0,
+            "p_online must be in (0, 1], got {p_online}"
+        );
         Self {
             p_online,
-            rng: Rng::new(seed ^ 0xA7A11AB1E),
+            seed: seed ^ 0xA7A11AB1E,
         }
     }
 
-    /// Which of `k` clients are reachable this round. Guarantees at least
-    /// one (re-rolls the round otherwise, like a production scheduler
-    /// waiting for a device to check in).
-    pub fn online(&mut self, k: usize) -> Vec<usize> {
-        loop {
-            let up: Vec<usize> =
-                (0..k).filter(|_| self.rng.f64() < self.p_online).collect();
-            if !up.is_empty() {
-                return up;
-            }
+    /// Which of `k` clients are reachable in `round`. Guarantees at least
+    /// one (deterministic salted re-roll otherwise, like a production
+    /// scheduler waiting for some device to check in).
+    pub fn online(&self, round: u64, k: usize) -> Vec<usize> {
+        salted_online_set(self.seed, round, k, |_| self.p_online)
+    }
+}
+
+/// Clients of `0..k` online in `round` under per-client probability
+/// `p_online(c)`, decided by the stateless hash coin and guaranteed
+/// non-empty via a deterministic salted re-roll (salt 0 is the plain
+/// coin). Shared by [`Availability`] and the fleet coordinator so this
+/// reproducibility-affecting salt scheme has exactly one definition.
+pub fn salted_online_set(
+    seed: u64,
+    round: u64,
+    k: usize,
+    p_online: impl Fn(usize) -> f64,
+) -> Vec<usize> {
+    // expected salts until non-empty ≈ 1/(k·p̄); this bound covers
+    // k·p̄ down to ~1e-6 and turns a zero-probability configuration
+    // into a diagnosable panic instead of an infinite spin
+    for salt in 0..10_000_000u64 {
+        let s = seed ^ salt.wrapping_mul(0xA0B428DB);
+        let up: Vec<usize> = (0..k)
+            .filter(|&c| hash3_unit(s, round, c as u64) < p_online(c))
+            .collect();
+        if !up.is_empty() {
+            return up;
         }
     }
+    panic!("no client ever online in round {round}: availability is ~zero across all {k} clients");
 }
 
 #[cfg(test)]
@@ -197,14 +241,42 @@ mod tests {
 
     #[test]
     fn availability_subset_and_nonempty() {
-        let mut av = Availability::new(0.3, 9);
-        for _ in 0..20 {
-            let up = av.online(40);
+        let av = Availability::new(0.3, 9);
+        for round in 0..20 {
+            let up = av.online(round, 40);
             assert!(!up.is_empty());
             assert!(up.iter().all(|&c| c < 40));
         }
-        let mut never = Availability::new(0.0001, 11);
-        assert!(!never.online(3).is_empty()); // re-rolls until someone shows
+        let never = Availability::new(0.0001, 11);
+        assert!(!never.online(0, 3).is_empty()); // re-rolls until someone shows
+    }
+
+    #[test]
+    fn availability_is_independent_of_query_order() {
+        // the old sequential-RNG coin desynced when rounds were queried in
+        // a different order (e.g. under a different eval cadence); the
+        // hash coin is a pure function of (seed, round, client)
+        let a = Availability::new(0.5, 21);
+        let b = Availability::new(0.5, 21);
+        let forward: Vec<Vec<usize>> = (0..10).map(|r| a.online(r, 64)).collect();
+        let backward: Vec<Vec<usize>> = (0..10).rev().map(|r| b.online(r, 64)).collect();
+        for (r, got) in backward.into_iter().rev().enumerate() {
+            assert_eq!(forward[r], got, "round {r} depends on query order");
+        }
+        // and rounds actually differ from each other
+        assert_ne!(forward[0], forward[1]);
+    }
+
+    #[test]
+    fn ingest_folds_external_round() {
+        let mut sim = CommSim::new(CommModel::default(), 1);
+        sim.ingest(1000, 4000, 2.5);
+        sim.ingest(500, 2000, 1.5);
+        let t = sim.totals();
+        assert_eq!(t.rounds, 2);
+        assert_eq!(t.bytes_up, 1500);
+        assert_eq!(t.bytes_down, 6000);
+        assert!((t.sim_seconds - 4.0).abs() < 1e-12);
     }
 
     #[test]

@@ -23,10 +23,26 @@ pub struct SparseUpdate {
     pub val: Vec<f32>,
 }
 
+/// Wire size of a `k`-coordinate sparse update without materializing it
+/// — the fleet scheduler prices uplinks with this before any training
+/// runs. Single source of truth with [`SparseUpdate::wire_bytes`].
+pub fn sparse_wire_bytes(k: usize) -> u64 {
+    (k * 8 + 16) as u64
+}
+
+/// Wire size of a `dim`-coordinate `bits`-bit quantized update without
+/// materializing it. Single source of truth with
+/// [`QuantizedUpdate::wire_bytes`].
+pub fn quantized_wire_bytes(dim: usize, bits: u8) -> u64 {
+    let codes = (dim * bits as usize + 7) / 8;
+    let scales = (dim + QCHUNK - 1) / QCHUNK;
+    (codes + scales * 8 + 16) as u64
+}
+
 impl SparseUpdate {
     /// Wire size: 4 bytes per index + 4 per value (+16 header).
     pub fn wire_bytes(&self) -> u64 {
-        (self.idx.len() * 8 + 16) as u64
+        sparse_wire_bytes(self.idx.len())
     }
 
     pub fn densify(&self) -> Vec<f32> {
@@ -109,6 +125,14 @@ pub struct QuantizedUpdate {
 
 impl QuantizedUpdate {
     pub fn wire_bytes(&self) -> u64 {
+        // truthful for any chunk size; the planning formula must agree
+        // for the standard QCHUNK layout [`quantize`] produces
+        if self.chunk == QCHUNK {
+            debug_assert_eq!(
+                (self.codes.len() + self.scales.len() * 8 + 16) as u64,
+                quantized_wire_bytes(self.dim, self.bits)
+            );
+        }
         (self.codes.len() + self.scales.len() * 8 + 16) as u64
     }
 }

@@ -1,0 +1,108 @@
+//! Parallel ClientUpdate dispatch — Algorithm 1's "for each client k ∈
+//! S_t **in parallel**", for real.
+//!
+//! PJRT engines are not `Send`, so parallelism runs over
+//! [`WorkerPool`]: each worker thread constructs its own [`Engine`] from
+//! the artifacts directory and keeps its executable cache warm across
+//! rounds. Jobs carry `(slot, client, θ_t, spec)`; results come back
+//! tagged with their dispatch slot and are **reduced in slot order**, so
+//! the aggregation consumes updates in exactly the sequence the
+//! sequential path would — `--workers N` is bit-identical to
+//! `--workers 1` (each ClientUpdate is deterministic given `(θ_t, spec)`
+//! and f32 accumulation order is fixed by the slot sort).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::anyhow;
+
+use crate::data::Dataset;
+use crate::federated::client::{local_update, LocalResult, LocalSpec};
+use crate::params::ParamVec;
+use crate::runtime::pool::WorkerPool;
+use crate::runtime::Engine;
+use crate::Result;
+
+/// One client's work order for a round.
+pub struct ClientJob {
+    /// Dispatch slot — the reduction position of this result.
+    pub slot: usize,
+    /// Client index into the federated partition.
+    pub client: usize,
+    /// Global parameters at the start of the round.
+    pub theta: Arc<ParamVec>,
+    pub spec: LocalSpec,
+}
+
+type Out = (usize, std::result::Result<LocalResult, String>);
+
+/// A persistent pool of ClientUpdate workers, one engine per thread.
+pub struct ParallelExec {
+    pool: WorkerPool<ClientJob, Out>,
+}
+
+impl ParallelExec {
+    /// Spawn `workers` threads, each loading its own engine from
+    /// `artifacts_dir` and serving `model` over the shared `train` set
+    /// and client partition.
+    pub fn new(
+        workers: usize,
+        artifacts_dir: PathBuf,
+        model: String,
+        train: Arc<Dataset>,
+        clients: Arc<Vec<Vec<usize>>>,
+    ) -> Result<Self> {
+        anyhow::ensure!(workers >= 1, "exec pool needs >= 1 worker");
+        // Fail fast with the real error: a worker thread's factory
+        // failure only logs to stderr (the pool reports it later as an
+        // opaque "workers gone"), so validate the load here first.
+        Engine::load(&artifacts_dir)
+            .map(drop)
+            .map_err(|e| e.context(format!("exec pool cannot load engine from {artifacts_dir:?}")))?;
+        let pool = WorkerPool::new(
+            workers,
+            move |_id| Engine::load(&artifacts_dir),
+            move |eng: &mut Engine, job: ClientJob| {
+                // A panic here would unwind one worker while the rest keep
+                // the pool alive, deadlocking map()'s result count — catch
+                // it and report as a failed round instead.
+                let slot = job.slot;
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || -> Result<LocalResult> {
+                        let model = eng.model(&model)?;
+                        local_update(&model, &train, &clients[job.client], &job.theta, &job.spec)
+                    },
+                ));
+                let out = match out {
+                    Ok(r) => r.map_err(|e| format!("{e:#}")),
+                    Err(panic) => Err(match panic.downcast_ref::<&str>() {
+                        Some(s) => format!("client update panicked: {s}"),
+                        None => match panic.downcast_ref::<String>() {
+                            Some(s) => format!("client update panicked: {s}"),
+                            None => "client update panicked".to_string(),
+                        },
+                    }),
+                };
+                (slot, out)
+            },
+        )?;
+        Ok(Self { pool })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Run all jobs across the pool and return results **sorted by
+    /// dispatch slot** (the deterministic reduction order). Any worker
+    /// failure fails the round.
+    pub fn run_round(&self, jobs: Vec<ClientJob>) -> Result<Vec<LocalResult>> {
+        let n = jobs.len();
+        let mut outs = self.pool.map(jobs)?;
+        anyhow::ensure!(outs.len() == n, "pool returned {} of {n} results", outs.len());
+        outs.sort_by_key(|(slot, _)| *slot);
+        outs.into_iter()
+            .map(|(slot, r)| r.map_err(|e| anyhow!("client update (slot {slot}): {e}")))
+            .collect()
+    }
+}

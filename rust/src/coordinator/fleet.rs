@@ -1,0 +1,293 @@
+//! Persistent per-client device profiles — the simulated fleet.
+//!
+//! Each client gets a [`DeviceProfile`] drawn once per run from a seeded
+//! distribution keyed by `hash3(seed, client, ·)`, so profiles are stable
+//! across rounds, independent of construction order, and unchanged for
+//! existing clients when the fleet grows. This replaces two memoryless
+//! mechanisms from the seed implementation:
+//!
+//! * the per-round Bernoulli availability coin (`comms::Availability`) —
+//!   here a device's reachability follows a **diurnal cycle** with a
+//!   per-device phase (phones charge at night in their own timezone);
+//! * the per-transfer uniform bandwidth jitter (`CommSim`) — here a slow
+//!   uplink belongs to a specific device and stays slow, which is what
+//!   makes straggler handling (over-selection, deadlines) meaningful.
+
+use crate::data::rng::{hash3, hash3_unit, Rng};
+use crate::Result;
+
+use super::FleetConfig;
+
+/// Device-population shapes for [`Fleet::build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetProfile {
+    /// No fleet: the seed's sequential, always-available round loop.
+    Legacy,
+    /// Identical reference devices (paper's 1 MB/s uplink), always online.
+    Uniform,
+    /// Heterogeneous phone fleet: log-uniform bandwidth spread, 2–8×
+    /// compute spread, diurnal availability. The default for `fedavg
+    /// fleet`.
+    Mobile,
+    /// Mobile bandwidth/compute spread but rarely reachable — stresses
+    /// over-selection with tiny online pools.
+    Flaky,
+}
+
+impl FleetProfile {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "legacy" => Ok(FleetProfile::Legacy),
+            "uniform" => Ok(FleetProfile::Uniform),
+            "mobile" => Ok(FleetProfile::Mobile),
+            "flaky" => Ok(FleetProfile::Flaky),
+            _ => anyhow::bail!("unknown fleet profile {s:?} (legacy|uniform|mobile|flaky)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FleetProfile::Legacy => "legacy",
+            FleetProfile::Uniform => "uniform",
+            FleetProfile::Mobile => "mobile",
+            FleetProfile::Flaky => "flaky",
+        }
+    }
+}
+
+/// One client's fixed hardware + connectivity characteristics.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceProfile {
+    /// Uplink bytes/second.
+    pub up_bps: f64,
+    /// Downlink bytes/second.
+    pub down_bps: f64,
+    /// Compute-time multiplier (1.0 = reference device, 4.0 = 4× slower).
+    pub compute_mult: f64,
+    /// Reachability probability at the device's diurnal peak.
+    pub p_online_peak: f64,
+    /// Phase offset of the diurnal cycle in [0, 1) — the device's
+    /// "timezone".
+    pub diurnal_phase: f64,
+}
+
+impl DeviceProfile {
+    /// Reference device: the paper's 1 MB/s uplink, asymmetric downlink.
+    fn reference() -> Self {
+        Self {
+            up_bps: 1.0e6,
+            down_bps: 8.0e6,
+            compute_mult: 1.0,
+            p_online_peak: 1.0,
+            diurnal_phase: 0.0,
+        }
+    }
+
+    fn draw(kind: FleetProfile, rng: &mut Rng) -> Self {
+        match kind {
+            FleetProfile::Legacy | FleetProfile::Uniform => Self::reference(),
+            FleetProfile::Mobile | FleetProfile::Flaky => {
+                // log-uniform uplink in [0.05, 2.0] MB/s: the paper's
+                // "1 MB/s or less", with a heavy slow tail
+                let up_bps = 5.0e4 * 40.0f64.powf(rng.f64());
+                // log-uniform compute multiplier in [0.5, 4.0]
+                let compute_mult = 0.5 * 8.0f64.powf(rng.f64());
+                let p_online_peak = match kind {
+                    FleetProfile::Flaky => 0.10 + 0.20 * rng.f64(),
+                    _ => 0.60 + 0.35 * rng.f64(),
+                };
+                Self {
+                    up_bps,
+                    down_bps: 8.0 * up_bps,
+                    compute_mult,
+                    p_online_peak,
+                    diurnal_phase: rng.f64(),
+                }
+            }
+        }
+    }
+}
+
+/// The simulated device population for one run.
+pub struct Fleet {
+    kind: FleetProfile,
+    profiles: Vec<DeviceProfile>,
+    seed: u64,
+    diurnal_period: f64,
+    latency_s: f64,
+    step_cost_s: f64,
+}
+
+impl Fleet {
+    /// Draw `k` device profiles from `cfg.profile`'s distribution. Each
+    /// client's profile is a pure function of `(seed, client)`.
+    pub fn build(cfg: &FleetConfig, k: usize, seed: u64) -> Fleet {
+        let profiles = (0..k)
+            .map(|c| {
+                let mut rng = Rng::new(hash3(seed, c as u64, 0xD5F11E));
+                DeviceProfile::draw(cfg.profile, &mut rng)
+            })
+            .collect();
+        Fleet {
+            kind: cfg.profile,
+            profiles,
+            seed: seed ^ 0xF1EE7,
+            diurnal_period: cfg.diurnal_period.max(1.0),
+            latency_s: cfg.latency_s,
+            step_cost_s: cfg.step_cost_s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    pub fn kind(&self) -> FleetProfile {
+        self.kind
+    }
+
+    pub fn profile(&self, client: usize) -> &DeviceProfile {
+        &self.profiles[client]
+    }
+
+    /// Reachability probability of `client` in `round` under its diurnal
+    /// cycle: the peak probability scaled by a sinusoidal daylight factor
+    /// that bottoms out at 25% of peak on the device's night side.
+    pub fn p_online(&self, round: u64, client: usize) -> f64 {
+        let p = &self.profiles[client];
+        if p.p_online_peak >= 1.0 {
+            return 1.0;
+        }
+        let angle = (round as f64 / self.diurnal_period + p.diurnal_phase)
+            * std::f64::consts::TAU;
+        let daylight = 0.25 + 0.75 * (0.5 + 0.5 * angle.sin());
+        (p.p_online_peak * daylight).clamp(0.0, 1.0)
+    }
+
+    /// Stateless online coin for `(round, client)` — same hash-coin
+    /// construction as `comms::Availability`, so reachability is
+    /// independent of query order and evaluation cadence.
+    pub fn is_online(&self, round: u64, client: usize) -> bool {
+        hash3_unit(self.seed, round, client as u64) < self.p_online(round, client)
+    }
+
+    /// All clients reachable in `round`. Guarantees at least one via the
+    /// shared deterministic salted re-roll (salt 0 agrees with
+    /// [`is_online`](Self::is_online)).
+    pub fn online_set(&self, round: u64) -> Vec<usize> {
+        crate::comms::salted_online_set(self.seed, round, self.profiles.len(), |c| {
+            self.p_online(round, c)
+        })
+    }
+
+    /// Simulated seconds for `client` to complete one round: model down,
+    /// `local_steps` SGD steps at its compute speed, model (or compressed
+    /// update) up, plus fixed latency each way.
+    pub fn client_seconds(
+        &self,
+        client: usize,
+        down_bytes: u64,
+        up_bytes: u64,
+        local_steps: f64,
+    ) -> f64 {
+        let p = &self.profiles[client];
+        2.0 * self.latency_s
+            + down_bytes as f64 / p.down_bps
+            + local_steps * self.step_cost_s * p.compute_mult
+            + up_bytes as f64 / p.up_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mobile_cfg() -> FleetConfig {
+        FleetConfig {
+            profile: FleetProfile::Mobile,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn profiles_are_persistent_and_heterogeneous() {
+        let cfg = mobile_cfg();
+        let a = Fleet::build(&cfg, 200, 7);
+        let b = Fleet::build(&cfg, 200, 7);
+        for c in 0..200 {
+            assert_eq!(a.profile(c).up_bps, b.profile(c).up_bps, "client {c}");
+        }
+        // growing the fleet must not reshuffle existing clients
+        let bigger = Fleet::build(&cfg, 400, 7);
+        for c in 0..200 {
+            assert_eq!(a.profile(c).up_bps, bigger.profile(c).up_bps);
+        }
+        // heterogeneous: bandwidths spread over more than one order
+        let ups: Vec<f64> = (0..200).map(|c| a.profile(c).up_bps).collect();
+        let min = ups.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = ups.iter().cloned().fold(0.0, f64::max);
+        assert!(max / min > 5.0, "no bandwidth spread: {min}..{max}");
+        // within the documented envelope
+        assert!(min >= 5.0e4 && max <= 2.0e6, "{min}..{max}");
+    }
+
+    #[test]
+    fn uniform_fleet_is_reference_and_always_online() {
+        let cfg = FleetConfig {
+            profile: FleetProfile::Uniform,
+            ..Default::default()
+        };
+        let f = Fleet::build(&cfg, 50, 3);
+        for round in 0..20 {
+            assert_eq!(f.online_set(round).len(), 50);
+        }
+        assert_eq!(f.profile(0).up_bps, 1.0e6);
+        assert_eq!(f.p_online(5, 0), 1.0);
+    }
+
+    #[test]
+    fn diurnal_cycle_moves_availability() {
+        let cfg = mobile_cfg();
+        let f = Fleet::build(&cfg, 1, 11);
+        let period = cfg.diurnal_period as u64;
+        let ps: Vec<f64> = (0..period).map(|r| f.p_online(r, 0)).collect();
+        let peak = ps.iter().cloned().fold(0.0, f64::max);
+        let trough = ps.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(peak > 2.0 * trough, "no diurnal swing: {trough}..{peak}");
+        // and the cycle repeats
+        assert!((f.p_online(0, 0) - f.p_online(period * 3, 0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn online_set_order_independent_and_nonempty() {
+        let cfg = FleetConfig {
+            profile: FleetProfile::Flaky,
+            ..Default::default()
+        };
+        let f = Fleet::build(&cfg, 30, 5);
+        let forward: Vec<Vec<usize>> = (0..10).map(|r| f.online_set(r)).collect();
+        for r in (0..10).rev() {
+            assert_eq!(f.online_set(r), forward[r as usize]);
+            assert!(!forward[r as usize].is_empty());
+        }
+    }
+
+    #[test]
+    fn client_seconds_composes_link_and_compute() {
+        let cfg = FleetConfig {
+            profile: FleetProfile::Uniform,
+            latency_s: 0.1,
+            step_cost_s: 0.02,
+            ..Default::default()
+        };
+        let f = Fleet::build(&cfg, 1, 1);
+        // 8 MB down at 8 MB/s (1s) + 10 steps (0.2s) + 1 MB up at 1 MB/s
+        // (1s) + 2x latency (0.2s)
+        let t = f.client_seconds(0, 8_000_000, 1_000_000, 10.0);
+        assert!((t - 2.4).abs() < 1e-9, "{t}");
+    }
+}

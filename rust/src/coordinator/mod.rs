@@ -1,1 +1,101 @@
-// paper's L3 coordination contribution
+//! The fleet coordinator — the paper's L3 systems contribution, grown
+//! into a subsystem (DESIGN.md §4).
+//!
+//! The paper's premise is that federated clients are slow, heterogeneous,
+//! and frequently offline, yet Algorithm 1 abstracts all of that behind a
+//! synchronous round. This module owns the systems half the paper assumes
+//! away:
+//!
+//! * [`fleet`] — persistent per-client **device profiles** (uplink /
+//!   downlink bandwidth, compute speed, diurnal availability phase) drawn
+//!   once per run from seeded distributions. Replaces the order-dependent
+//!   per-round Bernoulli coin and the memoryless bandwidth jitter with a
+//!   fleet whose slow devices stay slow and whose night-side devices stay
+//!   offline.
+//! * [`scheduler`] — discrete-event **round execution**: the server
+//!   over-selects `⌈m·(1+ρ)⌉` clients, aggregates the first `m`
+//!   finishers from the event queue, and drops stragglers past a round
+//!   deadline — the production FedAvg recipe (Bonawitz et al.,
+//!   "Towards Federated Learning at Scale"). Also hosts [`FleetSim`],
+//!   the training-free fleet simulator behind `fedavg fleet --sim-only`,
+//!   `examples/fleet_stress.rs`, and `benches/fleet_round.rs`.
+//! * [`exec`] — **parallel ClientUpdate dispatch** over
+//!   [`runtime::pool::WorkerPool`](crate::runtime::pool::WorkerPool)
+//!   (one PJRT engine per worker thread, since engines are not `Send`),
+//!   with reduction in dispatch-slot order so `--workers N` is
+//!   bit-identical to sequential execution.
+//!
+//! [`federated::server::run`](crate::federated::server::run) is wired
+//! through this module: the default [`FleetConfig`] (`Legacy` profile,
+//! one worker) reproduces the original sequential, always-available
+//! round loop bit-for-bit.
+
+pub mod exec;
+pub mod fleet;
+pub mod scheduler;
+
+pub use exec::{ClientJob, ParallelExec};
+pub use fleet::{DeviceProfile, Fleet, FleetProfile};
+pub use scheduler::{
+    overselect_count, plan_round, schedule_round, FleetSim, RoundPlan, SimRound, SimTotals,
+};
+
+/// Knobs for fleet-aware round execution, carried in
+/// [`ServerOptions`](crate::federated::ServerOptions). The default is the
+/// legacy path: no device profiles, no over-selection, no deadline, one
+/// inline worker.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Device-population shape; `Legacy` bypasses the coordinator.
+    pub profile: FleetProfile,
+    /// Over-selection factor ρ: dispatch `⌈m·(1+ρ)⌉`, aggregate `m`.
+    pub overselect: f64,
+    /// Round deadline (simulated seconds); stragglers past it are dropped.
+    pub deadline_s: Option<f64>,
+    /// ClientUpdate worker threads (1 = inline sequential execution).
+    pub workers: usize,
+    /// Simulated seconds per local SGD step on a reference device
+    /// (`compute_mult = 1.0`); per-client cost scales by the profile.
+    pub step_cost_s: f64,
+    /// Rounds per diurnal availability cycle.
+    pub diurnal_period: f64,
+    /// Fixed per-transfer latency (seconds), as in `CommModel`.
+    pub latency_s: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            profile: FleetProfile::Legacy,
+            overselect: 0.0,
+            deadline_s: None,
+            workers: 1,
+            step_cost_s: 0.02,
+            diurnal_period: 48.0,
+            latency_s: 0.1,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// True when the coordinator fleet path is active (any non-legacy
+    /// device profile).
+    pub fn fleet_active(&self) -> bool {
+        self.profile != FleetProfile::Legacy
+    }
+}
+
+/// Run-level fleet accounting, reported in
+/// [`RunResult`](crate::federated::RunResult) and the run summary.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FleetTotals {
+    /// Clients the server dispatched the model to (incl. over-selection).
+    pub dispatched: u64,
+    /// Client updates that made it into an aggregate.
+    pub completed: u64,
+    /// Dispatched clients whose updates were discarded (over-selection
+    /// surplus or past-deadline stragglers).
+    pub dropped_stragglers: u64,
+    /// Rounds where the deadline fired before `m` finishers arrived.
+    pub deadline_misses: u64,
+}

@@ -1,0 +1,406 @@
+//! Event-queue round execution: over-selection, straggler drops, and
+//! deadlines.
+//!
+//! The synchronous protocol's wall-clock is bound by its slowest
+//! participant, so production FedAvg over-selects — dispatch
+//! `⌈m·(1+ρ)⌉` clients, aggregate the first `m` to finish, discard the
+//! stragglers — and bounds each round with a deadline. [`schedule_round`]
+//! simulates exactly that over a discrete-event queue of client finish
+//! times; [`FleetSim`] drives it for thousands of rounds with no training
+//! attached (the `fedavg fleet --sim-only` / bench / stress-example
+//! path).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::federated::sampler::ClientSampler;
+use crate::Result;
+
+use super::fleet::{Fleet, FleetProfile};
+use super::{FleetConfig, FleetTotals};
+
+/// Over-selection count: `⌈m·(1+ρ)⌉`, capped at the candidate pool.
+pub fn overselect_count(m: usize, rho: f64, pool: usize) -> usize {
+    let sel = (m as f64 * (1.0 + rho.max(0.0))).ceil() as usize;
+    sel.max(m).min(pool)
+}
+
+/// One simulated round's outcome.
+#[derive(Debug, Clone)]
+pub struct RoundPlan {
+    /// Clients the server sent the model to, in selection order.
+    pub dispatched: Vec<usize>,
+    /// Clients whose updates are aggregated (first `m` finishers inside
+    /// the deadline), in dispatch order — the deterministic reduction
+    /// order.
+    pub completed: Vec<usize>,
+    /// Dispatched clients whose updates were discarded.
+    pub dropped: Vec<usize>,
+    /// True when the deadline fired before `m` finishers arrived.
+    pub deadline_miss: bool,
+    /// Straggler-bound simulated wall-clock of the round: the `m`-th
+    /// finish time, or the deadline when it fired first.
+    pub round_seconds: f64,
+}
+
+/// A client-finished event in the round's event queue.
+#[derive(Debug, PartialEq)]
+struct Finish {
+    t: f64,
+    slot: usize,
+}
+
+impl Eq for Finish {}
+
+impl Ord for Finish {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // finish times are finite by construction; tie-break on dispatch
+        // slot for a total, deterministic order
+        self.t
+            .partial_cmp(&other.t)
+            .expect("non-finite finish time")
+            .then(self.slot.cmp(&other.slot))
+            .reverse() // BinaryHeap is a max-heap; we pop earliest first
+    }
+}
+
+impl PartialOrd for Finish {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Simulate one synchronous round over `durations` — `(client, seconds)`
+/// pairs in dispatch order. Aggregates the first `m` finishers, drops the
+/// rest, and cuts at `deadline_s` if set. If nobody meets the deadline
+/// the server waits for the single earliest finisher (the protocol cannot
+/// proceed with zero updates), still flagged as a deadline miss.
+pub fn schedule_round(
+    m: usize,
+    deadline_s: Option<f64>,
+    durations: &[(usize, f64)],
+) -> RoundPlan {
+    assert!(!durations.is_empty(), "scheduling an empty dispatch set");
+    assert!(m >= 1, "round must aggregate at least one update");
+    if let Some(d) = deadline_s {
+        // NaN would silently never fire (`t > NaN` is false); negative
+        // would make every round a guaranteed miss
+        assert!(d.is_finite() && d > 0.0, "bad deadline {d}");
+    }
+    let mut queue: BinaryHeap<Finish> = durations
+        .iter()
+        .enumerate()
+        .map(|(slot, &(_, t))| {
+            assert!(t.is_finite() && t >= 0.0, "bad duration {t}");
+            Finish { t, slot }
+        })
+        .collect();
+
+    let mut done = vec![false; durations.len()];
+    let mut n_done = 0usize;
+    let mut round_seconds = 0.0f64;
+    let mut deadline_miss = false;
+    while let Some(ev) = queue.pop() {
+        if let Some(d) = deadline_s {
+            if ev.t > d {
+                if n_done == 0 {
+                    // nobody made it: wait for the earliest straggler
+                    done[ev.slot] = true;
+                    n_done = 1;
+                    round_seconds = ev.t;
+                } else {
+                    round_seconds = d;
+                }
+                deadline_miss = true;
+                break;
+            }
+        }
+        done[ev.slot] = true;
+        n_done += 1;
+        round_seconds = ev.t;
+        if n_done == m {
+            break;
+        }
+    }
+
+    let dispatched: Vec<usize> = durations.iter().map(|&(c, _)| c).collect();
+    let completed: Vec<usize> = durations
+        .iter()
+        .enumerate()
+        .filter(|(slot, _)| done[*slot])
+        .map(|(_, &(c, _))| c)
+        .collect();
+    let dropped: Vec<usize> = durations
+        .iter()
+        .enumerate()
+        .filter(|(slot, _)| !done[*slot])
+        .map(|(_, &(c, _))| c)
+        .collect();
+    RoundPlan {
+        dispatched,
+        completed,
+        dropped,
+        deadline_miss,
+        round_seconds,
+    }
+}
+
+/// One round of the fleet protocol — diurnal online scan, over-selected
+/// sample, per-client durations, event-queue schedule. The single
+/// implementation behind both the training server and [`FleetSim`]: at
+/// equal seeds the two build the same fleet and select the same clients;
+/// the resulting plans coincide exactly when the duration inputs match
+/// too (uncompressed uplinks, uniform per-client step counts), and
+/// otherwise differ only through `up_bytes`/`steps_of`. Returns the
+/// online-pool size alongside the plan.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_round(
+    fleet: &Fleet,
+    sampler: &mut ClientSampler,
+    round: u64,
+    m: usize,
+    overselect: f64,
+    deadline_s: Option<f64>,
+    down_bytes: u64,
+    up_bytes: u64,
+    steps_of: impl Fn(usize) -> f64,
+) -> (usize, RoundPlan) {
+    let online = fleet.online_set(round);
+    let n_sel = overselect_count(m, overselect, online.len());
+    let dispatched = sampler.sample_from(round, &online, n_sel);
+    let durations: Vec<(usize, f64)> = dispatched
+        .iter()
+        .map(|&c| (c, fleet.client_seconds(c, down_bytes, up_bytes, steps_of(c))))
+        .collect();
+    (online.len(), schedule_round(m, deadline_s, &durations))
+}
+
+// ------------------------------------------------------------- fleet sim
+
+/// Run-level totals for a training-free fleet simulation: the same
+/// [`FleetTotals`] counters a training run reports, plus wire/wall-clock
+/// sums.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimTotals {
+    pub rounds: u64,
+    pub fleet: FleetTotals,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub sim_seconds: f64,
+}
+
+/// One simulated round's report.
+#[derive(Debug, Clone)]
+pub struct SimRound {
+    pub round: u64,
+    /// Size of the online pool this round.
+    pub online: usize,
+    pub plan: RoundPlan,
+}
+
+/// Training-free fleet simulator: select → schedule → account, round
+/// after round, over a [`Fleet`] of any size. This is the event-queue
+/// subsystem isolated from learning, so 10k–100k-client scenarios run in
+/// milliseconds per round with no artifacts or engine.
+pub struct FleetSim {
+    fleet: Fleet,
+    cfg: FleetConfig,
+    m: usize,
+    model_bytes: u64,
+    steps_per_client: f64,
+    sampler: ClientSampler,
+    round: u64,
+    totals: SimTotals,
+}
+
+impl FleetSim {
+    /// `m` updates aggregated per round out of `k` simulated clients,
+    /// each running `steps_per_client` local SGD steps on a
+    /// `model_bytes`-sized model.
+    pub fn new(
+        cfg: &FleetConfig,
+        k: usize,
+        m: usize,
+        model_bytes: u64,
+        steps_per_client: f64,
+        seed: u64,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            cfg.profile != FleetProfile::Legacy,
+            "fleet sim needs a device profile (uniform|mobile|flaky)"
+        );
+        anyhow::ensure!(k >= 1 && m >= 1 && m <= k, "bad fleet shape k={k} m={m}");
+        Ok(Self {
+            fleet: Fleet::build(cfg, k, seed),
+            cfg: cfg.clone(),
+            m,
+            model_bytes,
+            steps_per_client,
+            sampler: ClientSampler::new(seed),
+            round: 0,
+            totals: SimTotals::default(),
+        })
+    }
+
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    /// Advance one round and fold it into the totals.
+    pub fn step(&mut self) -> SimRound {
+        self.round += 1;
+        let round = self.round;
+        let steps = self.steps_per_client;
+        let (online, plan) = plan_round(
+            &self.fleet,
+            &mut self.sampler,
+            round,
+            self.m,
+            self.cfg.overselect,
+            self.cfg.deadline_s,
+            self.model_bytes,
+            self.model_bytes,
+            |_| steps,
+        );
+
+        self.totals.rounds += 1;
+        self.totals.fleet.dispatched += plan.dispatched.len() as u64;
+        self.totals.fleet.completed += plan.completed.len() as u64;
+        self.totals.fleet.dropped_stragglers += plan.dropped.len() as u64;
+        self.totals.fleet.deadline_misses += plan.deadline_miss as u64;
+        self.totals.bytes_up += self.model_bytes * plan.completed.len() as u64;
+        self.totals.bytes_down += self.model_bytes * plan.dispatched.len() as u64;
+        self.totals.sim_seconds += plan.round_seconds;
+
+        SimRound {
+            round,
+            online,
+            plan,
+        }
+    }
+
+    pub fn totals(&self) -> SimTotals {
+        self.totals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn durs(ts: &[f64]) -> Vec<(usize, f64)> {
+        ts.iter().enumerate().map(|(c, &t)| (c * 10, t)).collect()
+    }
+
+    #[test]
+    fn overselect_count_rounds_up_and_caps() {
+        assert_eq!(overselect_count(10, 0.0, 100), 10);
+        assert_eq!(overselect_count(10, 0.3, 100), 13);
+        assert_eq!(overselect_count(10, 0.01, 100), 11); // ceil
+        assert_eq!(overselect_count(10, 0.3, 11), 11); // pool cap
+        assert_eq!(overselect_count(10, 0.3, 4), 4); // tiny pool
+        assert_eq!(overselect_count(1, 2.0, 50), 3);
+    }
+
+    #[test]
+    fn first_m_finishers_aggregate_rest_drop() {
+        // finish order: slot2 (1s), slot0 (2s), slot3 (3s), slot1 (9s)
+        let p = schedule_round(2, None, &durs(&[2.0, 9.0, 1.0, 3.0]));
+        assert_eq!(p.completed, vec![0, 20]); // dispatch order, clients 0 & 20
+        assert_eq!(p.dropped, vec![10, 30]);
+        assert!(!p.deadline_miss);
+        assert!((p.round_seconds - 2.0).abs() < 1e-12); // 2nd finisher bound
+        assert_eq!(p.dispatched.len(), 4);
+    }
+
+    #[test]
+    fn never_aggregates_more_than_m() {
+        let mut rng = crate::data::rng::Rng::new(5);
+        for case in 0..200 {
+            let n = 1 + rng.below(40);
+            let m = 1 + rng.below(n);
+            let ts: Vec<f64> = (0..n).map(|_| rng.f64() * 100.0).collect();
+            let deadline = if case % 2 == 0 {
+                Some(0.01 + rng.f64() * 100.0)
+            } else {
+                None
+            };
+            let p = schedule_round(m, deadline, &durs(&ts));
+            assert!(p.completed.len() <= m, "case {case}");
+            assert!(!p.completed.is_empty(), "case {case}");
+            assert_eq!(
+                p.completed.len() + p.dropped.len(),
+                p.dispatched.len(),
+                "case {case}"
+            );
+        }
+    }
+
+    #[test]
+    fn deadline_drops_stragglers_and_flags_miss() {
+        // want 3, deadline at 4s: only 1s and 3s make it
+        let p = schedule_round(3, Some(4.0), &durs(&[1.0, 8.0, 3.0, 9.0]));
+        assert_eq!(p.completed, vec![0, 20]);
+        assert_eq!(p.dropped, vec![10, 30]);
+        assert!(p.deadline_miss);
+        assert!((p.round_seconds - 4.0).abs() < 1e-12); // server waited out the deadline
+    }
+
+    #[test]
+    fn deadline_met_is_not_a_miss() {
+        // m finishers arrive before the deadline: surplus drop, no miss
+        let p = schedule_round(2, Some(100.0), &durs(&[1.0, 2.0, 3.0]));
+        assert_eq!(p.completed.len(), 2);
+        assert_eq!(p.dropped, vec![20]);
+        assert!(!p.deadline_miss);
+        assert!((p.round_seconds - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_deadline_waits_for_first_finisher() {
+        let p = schedule_round(2, Some(0.5), &durs(&[7.0, 3.0, 5.0]));
+        assert_eq!(p.completed, vec![10]); // earliest straggler only
+        assert!(p.deadline_miss);
+        assert!((p.round_seconds - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ties_resolve_by_dispatch_slot() {
+        let p = schedule_round(1, None, &durs(&[2.0, 2.0, 2.0]));
+        assert_eq!(p.completed, vec![0]); // lowest slot wins the tie
+    }
+
+    #[test]
+    fn fleet_sim_is_deterministic_and_accounts() {
+        let cfg = FleetConfig {
+            profile: FleetProfile::Mobile,
+            overselect: 0.3,
+            deadline_s: Some(30.0),
+            ..Default::default()
+        };
+        let mut a = FleetSim::new(&cfg, 500, 20, 800_000, 60.0, 9).unwrap();
+        let mut b = FleetSim::new(&cfg, 500, 20, 800_000, 60.0, 9).unwrap();
+        for _ in 0..20 {
+            let ra = a.step();
+            let rb = b.step();
+            assert_eq!(ra.plan.dispatched, rb.plan.dispatched);
+            assert_eq!(ra.plan.completed, rb.plan.completed);
+            assert!(ra.plan.completed.len() <= 20);
+            // over-selection actually dispatches extras when the pool allows
+            if ra.online >= 26 {
+                assert_eq!(ra.plan.dispatched.len(), 26);
+            }
+        }
+        let t = a.totals();
+        assert_eq!(t.rounds, 20);
+        assert_eq!(t.fleet.completed + t.fleet.dropped_stragglers, t.fleet.dispatched);
+        assert_eq!(t.bytes_up, 800_000 * t.fleet.completed);
+        assert_eq!(t.bytes_down, 800_000 * t.fleet.dispatched);
+        assert!(t.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn sim_rejects_legacy_profile() {
+        assert!(FleetSim::new(&FleetConfig::default(), 10, 2, 1000, 1.0, 1).is_err());
+    }
+}

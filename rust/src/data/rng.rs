@@ -8,6 +8,27 @@
 //! `SplitMix64` seeds `Xoshiro256**` (the reference construction from
 //! Blackman & Vigna); normal deviates via Box–Muller.
 
+/// Stateless 3-input mix (SplitMix64 finalizer over a golden-ratio
+/// combine). Used wherever a decision must be a *pure function* of its
+/// coordinates — e.g. "is client `c` online in round `r`?" — so the
+/// answer cannot depend on how many other draws happened first.
+#[inline]
+pub fn hash3(seed: u64, a: u64, b: u64) -> u64 {
+    let mut z = seed
+        ^ a.wrapping_mul(0x9E3779B97F4A7C15)
+        ^ b.wrapping_mul(0xD1B54A32D192ED03);
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// [`hash3`] mapped to a uniform f64 in [0, 1).
+#[inline]
+pub fn hash3_unit(seed: u64, a: u64, b: u64) -> f64 {
+    (hash3(seed, a, b) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
 /// SplitMix64 — used to expand a single `u64` seed into generator state.
 #[derive(Clone, Debug)]
 pub struct SplitMix64 {
@@ -163,6 +184,19 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn hash3_is_pure_and_sensitive() {
+        assert_eq!(hash3(1, 2, 3), hash3(1, 2, 3));
+        assert_ne!(hash3(1, 2, 3), hash3(1, 3, 2));
+        assert_ne!(hash3(1, 2, 3), hash3(2, 2, 3));
+        let u = hash3_unit(7, 8, 9);
+        assert!((0.0..1.0).contains(&u));
+        // roughly uniform: mean of many draws near 0.5
+        let n = 10_000;
+        let mean: f64 = (0..n).map(|i| hash3_unit(42, i, 0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "{mean}");
+    }
 
     #[test]
     fn deterministic_across_instances() {

@@ -2,7 +2,11 @@
 //!
 //! Uniform without replacement over the (optionally availability-filtered)
 //! client population, with a deterministic per-round stream so runs are
-//! reproducible and rounds are independent of evaluation cadence.
+//! reproducible and rounds are independent of evaluation cadence. Both the
+//! selection stream (`root.child(round)`) and the availability coin
+//! (`hash3(seed, round, client)`) are pure functions of the round, so this
+//! independence holds end to end. The fleet coordinator selects from an
+//! explicit online pool via [`ClientSampler::sample_from`].
 
 use crate::comms::Availability;
 use crate::data::rng::Rng;
@@ -31,15 +35,27 @@ impl ClientSampler {
     /// (the synchronous protocol proceeds with who showed up).
     pub fn sample(&mut self, round: u64, k: usize, m: usize) -> Vec<usize> {
         let mut rng = self.root.child(round.wrapping_add(1));
-        match &mut self.availability {
+        match &self.availability {
             None => rng.sample_indices(k, m.min(k)),
             Some(av) => {
-                let online = av.online(k);
+                let online = av.online(round, k);
                 let take = m.min(online.len());
                 let picks = rng.sample_indices(online.len(), take);
                 picks.into_iter().map(|i| online[i]).collect()
             }
         }
+    }
+
+    /// Sample up to `m` distinct clients from an explicit candidate pool
+    /// (the fleet coordinator's online set for `round`). Uses the same
+    /// per-round stream as [`sample`](Self::sample).
+    pub fn sample_from(&mut self, round: u64, pool: &[usize], m: usize) -> Vec<usize> {
+        let mut rng = self.root.child(round.wrapping_add(1));
+        let take = m.min(pool.len());
+        rng.sample_indices(pool.len(), take)
+            .into_iter()
+            .map(|i| pool[i])
+            .collect()
     }
 }
 
@@ -93,5 +109,34 @@ mod tests {
             assert!(picks.len() < 30);
             assert!(!picks.is_empty());
         }
+    }
+
+    #[test]
+    fn availability_rounds_independent_of_history() {
+        // regression: the old Bernoulli coin advanced a sequential RNG per
+        // call, so skipping rounds changed later rounds' online sets
+        let mut a = ClientSampler::new(7).with_availability(0.4, 3);
+        let mut b = ClientSampler::new(7).with_availability(0.4, 3);
+        for r in 0..5 {
+            a.sample(r, 50, 5); // advance `a` through extra history
+        }
+        assert_eq!(a.sample(9, 50, 5), b.sample(9, 50, 5));
+    }
+
+    #[test]
+    fn sample_from_pool_distinct_and_deterministic() {
+        let pool: Vec<usize> = (0..40).map(|i| i * 3).collect();
+        let mut a = ClientSampler::new(11);
+        let mut b = ClientSampler::new(11);
+        let x = a.sample_from(4, &pool, 12);
+        assert_eq!(x, b.sample_from(4, &pool, 12));
+        assert_eq!(x.len(), 12);
+        let mut d = x.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 12, "duplicates in pool sample");
+        assert!(x.iter().all(|c| pool.contains(c)));
+        // asking for more than the pool returns the whole pool
+        assert_eq!(a.sample_from(5, &pool[..3], 10).len(), 3);
     }
 }

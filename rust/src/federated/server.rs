@@ -14,12 +14,17 @@
 //! clients (the standard reading of Algorithm 1, since unselected clients
 //! produce no update). FedSGD is exactly this loop with `E=1, B=∞`.
 
+use std::sync::Arc;
+
 use crate::comms::{CommModel, CommSim, CommTotals};
 use crate::compression::{dequantize, quantize, top_k, ErrorFeedback};
 use crate::config::FedConfig;
+use crate::coordinator::{
+    plan_round, ClientJob, Fleet, FleetConfig, FleetTotals, ParallelExec, RoundPlan,
+};
 use crate::data::rng::Rng;
 use crate::data::Federated;
-use crate::federated::client::{local_update, LocalSpec};
+use crate::federated::client::{local_update, updates_per_round, LocalResult, LocalSpec};
 use crate::federated::sampler::ClientSampler;
 use crate::metrics::LearningCurve;
 use crate::params::{weighted_mean, ParamVec};
@@ -50,6 +55,10 @@ pub struct CompressionConfig {
 /// Harness options orthogonal to the algorithm itself.
 pub struct ServerOptions {
     pub telemetry: Option<RunWriter>,
+    /// network model for the legacy comm simulator. A fleet profile
+    /// supersedes it: round timing then comes from per-device profiles
+    /// and `FleetConfig`'s latency/step-cost, and this model only labels
+    /// the byte totals.
     pub comm_model: CommModel,
     /// client online-probability per round (None = always available).
     pub availability: Option<f64>,
@@ -64,6 +73,10 @@ pub struct ServerOptions {
     pub secure_agg: bool,
     /// compress client uplinks (exact byte accounting in `comm`).
     pub compression: Option<CompressionConfig>,
+    /// fleet coordinator: device profiles, over-selection, deadlines,
+    /// worker parallelism. The default is the legacy sequential,
+    /// always-available path.
+    pub fleet: FleetConfig,
 }
 
 impl Default for ServerOptions {
@@ -77,6 +90,7 @@ impl Default for ServerOptions {
             dp: None,
             secure_agg: false,
             compression: None,
+            fleet: FleetConfig::default(),
         }
     }
 }
@@ -97,6 +111,8 @@ pub struct RunResult {
     pub client_steps: u64,
     /// rounds actually run (early stop shortens this).
     pub rounds_run: u64,
+    /// fleet accounting (all zeros on the legacy path).
+    pub fleet: FleetTotals,
 }
 
 impl RunResult {
@@ -128,6 +144,58 @@ pub fn run(
     }
     let mut comms = CommSim::new(opts.comm_model.clone(), cfg.seed);
     let model_bytes = crate::comms::model_bytes(model.param_count());
+
+    // fleet coordinator state (None on the legacy path, which keeps the
+    // seed's sequential, always-available round loop bit-for-bit).
+    // Fleet::build does its own domain separation from cfg.seed, so a
+    // `fleet --sim-only` run with the same seed builds the same fleet.
+    anyhow::ensure!(
+        !(opts.fleet.fleet_active() && opts.availability.is_some()),
+        "ServerOptions.availability conflicts with fleet profile {:?}: device \
+         reachability comes from the fleet's diurnal model",
+        opts.fleet.profile
+    );
+    let fleet = opts
+        .fleet
+        .fleet_active()
+        .then(|| Fleet::build(&opts.fleet, k, cfg.seed));
+    // Uplink-bytes estimate for fleet round *timing* — the same wire
+    // formulas the byte accounting uses, so simulated durations agree
+    // with reported bytes when uplinks are compressed.
+    let est_up_bytes = {
+        let dim = model.param_count();
+        let mut est = model_bytes;
+        if let Some(cmp) = &opts.compression {
+            if let Some(frac) = cmp.top_k_frac {
+                let kk = ((dim as f64 * frac).ceil() as usize).max(1);
+                est = crate::compression::sparse_wire_bytes(kk);
+            }
+            if let Some(bits) = cmp.quant_bits {
+                est = est.min(crate::compression::quantized_wire_bytes(dim, bits));
+            }
+        }
+        est
+    };
+    // NB: the pool needs 'static data, so requesting workers > 1 pays a
+    // one-time copy of the training set + partition into an Arc for the
+    // run (sharing at zero copy needs Arc inside `Federated` itself — a
+    // wider refactor than this subsystem).
+    let exec = if opts.fleet.workers > 1 {
+        Some(ParallelExec::new(
+            opts.fleet.workers,
+            engine.dir().to_path_buf(),
+            cfg.model.clone(),
+            Arc::new(fed.train.clone()),
+            Arc::new(fed.clients.clone()),
+        )?)
+    } else {
+        None
+    };
+    let mut fleet_totals = FleetTotals::default();
+    // fleet events accumulated since the last telemetry record (the
+    // curve is written at eval cadence, drops happen every round)
+    let mut dropped_since_eval = 0usize;
+    let mut misses_since_eval = 0usize;
 
     let mut accuracy = LearningCurve::new();
     let mut test_loss = LearningCurve::new();
@@ -165,25 +233,75 @@ pub fn run(
     for round in 1..=cfg.rounds as u64 {
         rounds_run = round;
         let m = cfg.clients_per_round(k);
-        let picks = sampler.sample(round, k, m);
+
+        // Selection. Fleet path: over-select from the diurnal online
+        // pool, run the event-queue schedule, and aggregate only the
+        // first `m` finishers inside the deadline. Legacy path: uniform
+        // sample over the (optionally availability-filtered) population.
+        let (picks, plan): (Vec<usize>, Option<RoundPlan>) = match &fleet {
+            None => (sampler.sample(round, k, m), None),
+            Some(fl) => {
+                let (_online, plan) = plan_round(
+                    fl,
+                    &mut sampler,
+                    round,
+                    m,
+                    opts.fleet.overselect,
+                    opts.fleet.deadline_s,
+                    model_bytes,
+                    est_up_bytes,
+                    |c| updates_per_round(cfg.e, fed.clients[c].len(), cfg.b),
+                );
+                (plan.completed.clone(), Some(plan))
+            }
+        };
         let lr = (cfg.lr * cfg.lr_decay.powi(round as i32 - 1)) as f32;
 
-        // ClientUpdate for each selected client (sequential on this
-        // single-core testbed; the pool topology is exercised in tests).
-        // Updates travel as DELTAS (θ_k − θ_t): identical average, and the
-        // natural unit for clipping / compression / secure aggregation.
-        let mut deltas: Vec<(f32, ParamVec)> = Vec::with_capacity(picks.len());
-        let mut wire_up_bytes = 0u64;
-        for &ck in &picks {
-            let spec = LocalSpec {
+        // ClientUpdate for every aggregating client — inline, or fanned
+        // out over the worker pool (per-thread engines; reduction in
+        // dispatch-slot order keeps parallel runs bit-identical to
+        // sequential). Dropped stragglers never execute: their simulated
+        // work is wasted, not ours.
+        let specs: Vec<LocalSpec> = picks
+            .iter()
+            .map(|&ck| LocalSpec {
                 epochs: cfg.e,
                 batch: cfg.b,
                 lr,
                 shuffle_seed: cfg.seed
                     ^ round.wrapping_mul(0x9E3779B97F4A7C15)
                     ^ (ck as u64).wrapping_mul(0xD1B54A32D192ED03),
-            };
-            let res = local_update(&model, &fed.train, &fed.clients[ck], &theta, &spec)?;
+            })
+            .collect();
+        let results: Vec<LocalResult> = match &exec {
+            Some(pool) => {
+                let theta0 = Arc::new(theta.clone());
+                let jobs: Vec<ClientJob> = picks
+                    .iter()
+                    .zip(&specs)
+                    .enumerate()
+                    .map(|(slot, (&client, spec))| ClientJob {
+                        slot,
+                        client,
+                        theta: theta0.clone(),
+                        spec: spec.clone(),
+                    })
+                    .collect();
+                pool.run_round(jobs)?
+            }
+            None => picks
+                .iter()
+                .zip(&specs)
+                .map(|(&ck, spec)| local_update(&model, &fed.train, &fed.clients[ck], &theta, spec))
+                .collect::<Result<_>>()?,
+        };
+
+        // Server-side post-processing per update, in slot order.
+        // Updates travel as DELTAS (θ_k − θ_t): identical average, and the
+        // natural unit for clipping / compression / secure aggregation.
+        let mut deltas: Vec<(f32, ParamVec)> = Vec::with_capacity(picks.len());
+        let mut wire_up_bytes = 0u64;
+        for (&ck, res) in picks.iter().zip(results) {
             client_steps += res.steps;
             let mut delta = res.theta;
             for (d, t) in delta.iter_mut().zip(&theta) {
@@ -244,11 +362,28 @@ pub fn run(
             mech.apply(&mut avg_delta, picks.len());
         }
         crate::params::axpy(&mut theta, 1.0, &avg_delta);
-        let rc = comms.round_asym(
-            picks.len(),
-            model_bytes,
-            wire_up_bytes / picks.len().max(1) as u64,
-        );
+        let rc = match &plan {
+            None => comms.round_asym(
+                picks.len(),
+                model_bytes,
+                wire_up_bytes / picks.len().max(1) as u64,
+            ),
+            Some(p) => {
+                fleet_totals.dispatched += p.dispatched.len() as u64;
+                fleet_totals.completed += p.completed.len() as u64;
+                fleet_totals.dropped_stragglers += p.dropped.len() as u64;
+                fleet_totals.deadline_misses += p.deadline_miss as u64;
+                dropped_since_eval += p.dropped.len();
+                misses_since_eval += p.deadline_miss as usize;
+                // every dispatched client downloaded the model (dropped
+                // stragglers waste downlink); only completed uplinks land
+                comms.ingest(
+                    wire_up_bytes,
+                    model_bytes * p.dispatched.len() as u64,
+                    p.round_seconds,
+                )
+            }
+        };
 
         if round % cfg.eval_every as u64 == 0 || round == cfg.rounds as u64 {
             let sums = model.eval_dataset(&theta, &fed.test, eval_idxs.as_deref())?;
@@ -271,7 +406,11 @@ pub fn run(
                     lr: lr as f64,
                     bytes_up: rc.bytes_up,
                     sim_seconds: comms.totals().sim_seconds,
+                    dropped: dropped_since_eval,
+                    deadline_misses: misses_since_eval,
                 })?;
+                dropped_since_eval = 0;
+                misses_since_eval = 0;
             }
             if let Some(target) = cfg.target_accuracy {
                 if sums.accuracy() >= target {
@@ -283,7 +422,7 @@ pub fn run(
 
     if let Some(w) = opts.telemetry.take() {
         let totals = comms.totals();
-        w.finish(&[
+        let mut fields = vec![
             ("model", cfg.model.clone()),
             ("label", cfg.label()),
             ("rounds_run", rounds_run.to_string()),
@@ -291,7 +430,15 @@ pub fn run(
             ("final_accuracy", format!("{:.6}", accuracy.last_value().unwrap_or(0.0))),
             ("bytes_up", totals.bytes_up.to_string()),
             ("sim_seconds", format!("{:.1}", totals.sim_seconds)),
-        ])?;
+        ];
+        if fleet.is_some() {
+            fields.push(("fleet_profile", opts.fleet.profile.label().to_string()));
+            fields.push(("dispatched", fleet_totals.dispatched.to_string()));
+            fields.push(("completed", fleet_totals.completed.to_string()));
+            fields.push(("dropped_stragglers", fleet_totals.dropped_stragglers.to_string()));
+            fields.push(("deadline_misses", fleet_totals.deadline_misses.to_string()));
+        }
+        w.finish(&fields)?;
     }
 
     Ok(RunResult {
@@ -303,5 +450,6 @@ pub fn run(
         final_theta: theta,
         client_steps,
         rounds_run,
+        fleet: fleet_totals,
     })
 }

@@ -19,12 +19,30 @@
 //! The public API is organised so a downstream user can assemble a custom
 //! federated experiment from parts: pick a [`data`] source + partition,
 //! a model bundle from [`runtime`], an algorithm from [`federated`] or
-//! [`baselines`], and drive it with [`metrics`]/[`telemetry`] attached.
+//! [`baselines`], a fleet scenario from [`coordinator`], and drive it
+//! with [`metrics`]/[`telemetry`] attached.
+//!
+//! Module map:
+//!
+//! * [`federated`] — Algorithm 1: server round loop, ClientUpdate,
+//!   per-round sampling.
+//! * [`coordinator`] — the simulated device fleet: per-client profiles,
+//!   event-queue scheduling (over-selection, deadlines, straggler
+//!   drops), parallel ClientUpdate dispatch.
+//! * [`baselines`] — one-shot averaging and centralized SGD.
+//! * [`data`] — synthetic datasets + client partitions.
+//! * [`comms`] — byte/wall-clock accounting and availability traces.
+//! * [`compression`], [`privacy`] — uplink compression, DP + secure
+//!   aggregation.
+//! * [`runtime`] — PJRT engine over the AOT artifacts + worker pool.
+//! * [`config`], [`metrics`], [`telemetry`], [`sweep`], [`util`] —
+//!   harness plumbing; [`exper`] — the paper's tables and figures.
 
 pub mod baselines;
 pub mod comms;
 pub mod compression;
 pub mod config;
+pub mod coordinator;
 pub mod data;
 pub mod federated;
 pub mod metrics;

@@ -16,8 +16,10 @@ use anyhow::bail;
 
 use fedavg::baselines::oneshot;
 use fedavg::config::{BatchSize, ConfigFile, FedConfig, Partition};
+use fedavg::coordinator::{FleetConfig, FleetProfile, FleetSim};
 use fedavg::exper::{self};
 use fedavg::runtime::Engine;
+use fedavg::telemetry::{FleetRoundRecord, FleetWriter};
 use fedavg::util::args::Args;
 use fedavg::Result;
 
@@ -38,6 +40,7 @@ fn real_main() -> Result<()> {
         "table4" => exper::table4::run(&engine()?, &args),
         "figure" | "figures" => exper::figures::run(&engine()?, &args),
         "run" => cmd_run(&args),
+        "fleet" => cmd_fleet(&args),
         "oneshot" => cmd_oneshot(&args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
@@ -60,27 +63,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         "track-train-loss", "name", "dp-clip", "dp-sigma", "secure-agg", "topk",
         "quant-bits",
     ])?;
-    let mut cfg = match args.str_opt("config") {
-        Some(path) => ConfigFile::load(std::path::Path::new(path))?.fed_config()?,
-        None => FedConfig::default(),
-    };
-    if let Some(m) = args.str_opt("model") {
-        cfg.model = m.to_string();
-    }
-    cfg.c = args.f64_or("c", cfg.c)?;
-    cfg.e = args.usize_or("e", cfg.e)?;
-    if let Some(b) = args.str_opt("b") {
-        cfg.b = BatchSize::parse(b)?;
-    }
-    cfg.lr = args.f64_or("lr", cfg.lr)?;
-    cfg.lr_decay = args.f64_or("lr-decay", cfg.lr_decay)?;
-    cfg.rounds = args.usize_or("rounds", cfg.rounds)?;
-    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
-    if let Some(t) = args.str_opt("target") {
-        cfg.target_accuracy = Some(t.parse()?);
-    }
-    cfg.track_train_loss = args.has("track-train-loss") || cfg.track_train_loss;
-    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    let cfg = fed_config_from_args(args)?;
 
     let scale = args.f64_or("scale", 0.05)?;
     let part = Partition::parse(&args.str_or("partition", "iid"))?;
@@ -92,7 +75,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         ..Default::default()
     };
     if let Some(p) = args.str_opt("availability") {
-        opts.availability = Some(p.parse()?);
+        let p: f64 = p.parse()?;
+        if !p.is_finite() || p <= 0.0 || p > 1.0 {
+            bail!("--availability must be an online probability in (0, 1], got {p}");
+        }
+        opts.availability = Some(p);
     }
     if let Some(sigma) = args.str_opt("dp-sigma") {
         opts.dp = Some(fedavg::federated::server::DpConfig {
@@ -144,6 +131,216 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(eps) = res.epsilon {
         println!("differential privacy: ({eps:.2}, 1e-5)-DP consumed");
     }
+    Ok(())
+}
+
+/// Parse the FedConfig-shaped flags shared by `run` and `fleet`.
+fn fed_config_from_args(args: &Args) -> Result<FedConfig> {
+    let mut cfg = match args.str_opt("config") {
+        Some(path) => ConfigFile::load(std::path::Path::new(path))?.fed_config()?,
+        None => FedConfig::default(),
+    };
+    if let Some(m) = args.str_opt("model") {
+        cfg.model = m.to_string();
+    }
+    cfg.c = args.f64_or("c", cfg.c)?;
+    cfg.e = args.usize_or("e", cfg.e)?;
+    if let Some(b) = args.str_opt("b") {
+        cfg.b = BatchSize::parse(b)?;
+    }
+    cfg.lr = args.f64_or("lr", cfg.lr)?;
+    cfg.lr_decay = args.f64_or("lr-decay", cfg.lr_decay)?;
+    cfg.rounds = args.usize_or("rounds", cfg.rounds)?;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
+    if let Some(t) = args.str_opt("target") {
+        cfg.target_accuracy = Some(t.parse()?);
+    }
+    cfg.track_train_loss = args.has("track-train-loss") || cfg.track_train_loss;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    Ok(cfg)
+}
+
+/// `fedavg fleet` — fleet-aware federated training (device profiles,
+/// over-selection, deadlines, worker parallelism). Without artifacts —
+/// or with `--sim-only` — runs the training-free event-queue simulation,
+/// which scales to 100k+ clients.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "config", "model", "c", "e", "b", "lr", "lr-decay", "rounds", "eval-every",
+        "target", "partition", "scale", "eval-cap", "seed", "out", "name",
+        "track-train-loss", "fleet-profile", "overselect", "deadline", "workers",
+        "step-cost", "clients", "sim-only", "model-bytes", "steps",
+    ])?;
+    let cfg = fed_config_from_args(args)?;
+    let fleet = FleetConfig {
+        profile: FleetProfile::parse(&args.str_or("fleet-profile", "mobile"))?,
+        overselect: args.f64_or("overselect", 0.0)?,
+        deadline_s: match args.str_opt("deadline") {
+            None => None,
+            Some(v) => {
+                let d: f64 = v.parse()?;
+                if !d.is_finite() || d <= 0.0 {
+                    bail!("--deadline must be a positive number of seconds, got {v:?}");
+                }
+                Some(d)
+            }
+        },
+        workers: args.usize_or("workers", 1)?,
+        step_cost_s: args.f64_or("step-cost", FleetConfig::default().step_cost_s)?,
+        ..FleetConfig::default()
+    };
+    if !fleet.step_cost_s.is_finite() || fleet.step_cost_s < 0.0 {
+        bail!("--step-cost must be a non-negative number of seconds");
+    }
+    if !fleet.overselect.is_finite() || fleet.overselect < 0.0 {
+        bail!("--overselect must be a non-negative factor (e.g. 0.3)");
+    }
+
+    let have_artifacts = Engine::default_dir().join("manifest.json").exists();
+    if args.has("sim-only") || !have_artifacts {
+        if !args.has("sim-only") {
+            println!(
+                "no artifacts at {:?} — running the fleet simulation without training \
+                 (event-queue schedule + accounting only)",
+                Engine::default_dir()
+            );
+        }
+        return cmd_fleet_sim(args, &cfg, &fleet);
+    }
+
+    for f in ["clients", "model-bytes", "steps"] {
+        if args.has(f) {
+            println!(
+                "note: --{f} only applies to the training-free simulation \
+                 (--sim-only); the training run derives it from the dataset"
+            );
+        }
+    }
+    let scale = args.f64_or("scale", 0.05)?;
+    let part = Partition::parse(&args.str_or("partition", "iid"))?;
+    let fed = build_fed(&cfg.model, scale, part, cfg.seed)?;
+    let engine = engine()?;
+    let mut opts = fedavg::federated::ServerOptions {
+        eval_cap: Some(args.usize_or("eval-cap", 1000)?),
+        fleet: fleet.clone(),
+        ..Default::default()
+    };
+    let name = args.str_or("name", &format!("fleet-{}", cfg.label().replace(' ', "_")));
+    opts.telemetry = Some(fedavg::telemetry::RunWriter::create(
+        args.str_or("out", "runs"),
+        &name,
+    )?);
+
+    println!(
+        "fleet run: {} on {} — {} clients, profile {}, overselect {:.0}%, deadline {}, workers {}",
+        cfg.label(),
+        fed.train.name,
+        fed.num_clients(),
+        fleet.profile.label(),
+        fleet.overselect * 100.0,
+        fleet
+            .deadline_s
+            .map(|d| format!("{d}s"))
+            .unwrap_or_else(|| "none".into()),
+        fleet.workers,
+    );
+    let res = fedavg::federated::run(&engine, &fed, &cfg, opts)?;
+    println!(
+        "done: {} rounds, final acc {:.4}, dispatched {}, aggregated {}, \
+         dropped stragglers {}, deadline misses {}, sim {:.0}s",
+        res.rounds_run,
+        res.final_accuracy(),
+        res.fleet.dispatched,
+        res.fleet.completed,
+        res.fleet.dropped_stragglers,
+        res.fleet.deadline_misses,
+        res.comm.sim_seconds,
+    );
+    Ok(())
+}
+
+/// Training-free fleet simulation — scales to fleets far beyond what
+/// training can touch (10k clients by default, 100k+ fine).
+fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()> {
+    let k = args.usize_or("clients", 10_000)?;
+    let m = cfg.clients_per_round(k);
+    // default model: the MNIST CNN (1,663,370 params), the paper's
+    // heavyweight image model — ~6.7 MB on the wire
+    let model_bytes = args.u64_or("model-bytes", fedavg::comms::model_bytes(1_663_370))?;
+    // default local work: u = E·(n/K)/B with the paper's 600 examples per
+    // client
+    let steps = args.f64_or(
+        "steps",
+        fedavg::federated::updates_per_round(cfg.e, 600, cfg.b),
+    )?;
+    if !steps.is_finite() || steps < 0.0 {
+        bail!("--steps must be a non-negative local step count");
+    }
+    let mut sim = FleetSim::new(fleet, k, m, model_bytes, steps, cfg.seed)?;
+    let name = args.str_or("name", &format!("fleet-sim-{}-k{k}", fleet.profile.label()));
+    let mut w = FleetWriter::create(args.str_or("out", "runs"), &name)?;
+    println!(
+        "fleet sim: {} clients ({} profile), m={m} +{:.0}% over-selection, deadline {}, \
+         model {:.1} MB, {} local steps, {} rounds",
+        k,
+        fleet.profile.label(),
+        fleet.overselect * 100.0,
+        fleet
+            .deadline_s
+            .map(|d| format!("{d}s"))
+            .unwrap_or_else(|| "none".into()),
+        model_bytes as f64 / 1e6,
+        steps,
+        cfg.rounds,
+    );
+    for _ in 0..cfg.rounds {
+        let r = sim.step();
+        w.record(&FleetRoundRecord {
+            round: r.round,
+            online: r.online,
+            dispatched: r.plan.dispatched.len(),
+            completed: r.plan.completed.len(),
+            dropped: r.plan.dropped.len(),
+            deadline_miss: r.plan.deadline_miss,
+            round_seconds: r.plan.round_seconds,
+        })?;
+        if r.round % cfg.eval_every as u64 == 0 || r.round == cfg.rounds as u64 {
+            println!(
+                "round {:>5}: online {:>6}  dispatched {:>5}  aggregated {:>5}  \
+                 dropped {:>4}{}  t={:.1}s",
+                r.round,
+                r.online,
+                r.plan.dispatched.len(),
+                r.plan.completed.len(),
+                r.plan.dropped.len(),
+                if r.plan.deadline_miss { "  DEADLINE MISS" } else { "" },
+                r.plan.round_seconds,
+            );
+        }
+    }
+    let t = sim.totals();
+    w.finish(&[
+        ("fleet_profile", fleet.profile.label().to_string()),
+        ("clients", k.to_string()),
+        ("rounds", t.rounds.to_string()),
+        ("dispatched", t.fleet.dispatched.to_string()),
+        ("completed", t.fleet.completed.to_string()),
+        ("dropped_stragglers", t.fleet.dropped_stragglers.to_string()),
+        ("deadline_misses", t.fleet.deadline_misses.to_string()),
+        ("bytes_up", t.bytes_up.to_string()),
+        ("sim_seconds", format!("{:.1}", t.sim_seconds)),
+    ])?;
+    println!(
+        "done: {} rounds — {} dispatched, {} aggregated, {} stragglers dropped, \
+         {} deadline misses, {:.2} GB up, sim {:.1}h",
+        t.rounds,
+        t.fleet.dispatched,
+        t.fleet.completed,
+        t.fleet.dropped_stragglers,
+        t.fleet.deadline_misses,
+        t.bytes_up as f64 / 1e9,
+        t.sim_seconds / 3600.0,
+    );
     Ok(())
 }
 
@@ -216,8 +413,17 @@ USAGE:
              [--availability P] [--target A] [--track-train-loss]
              [--dp-sigma S --dp-clip C] [--secure-agg]
              [--topk FRAC] [--quant-bits B]
+  fedavg fleet [--fleet-profile uniform|mobile|flaky] [--overselect RHO]
+             [--deadline SECONDS] [--workers N] [--clients K] [--sim-only]
+             [--step-cost S] [--model-bytes B] [--steps U] [+ run flags]
   fedavg oneshot [--model M] [--e N]
   fedavg info
+
+`fleet` trains through the fleet coordinator: persistent device profiles
+(bandwidth/compute/diurnal availability), over-selection with straggler
+drops, round deadlines, and parallel client updates. Without artifacts
+(or with --sim-only) it runs the training-free event-queue simulation —
+10k clients by default, 100k+ fine.
 
 Defaults are scaled to this single-core testbed (--scale 0.05);
 --scale 1.0 reproduces the paper-sized workloads. Curves land in runs/.

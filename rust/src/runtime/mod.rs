@@ -103,6 +103,12 @@ impl Engine {
         PathBuf::from("artifacts")
     }
 
+    /// The artifacts directory this engine loaded from — worker pools
+    /// construct their per-thread sibling engines from it.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

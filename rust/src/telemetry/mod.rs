@@ -32,17 +32,28 @@ pub struct RoundRecord {
     pub lr: f64,
     pub bytes_up: u64,
     pub sim_seconds: f64,
+    /// Straggler updates dropped since the previous record (fleet runs;
+    /// 0 on the legacy path).
+    pub dropped: usize,
+    /// Round deadlines missed since the previous record.
+    pub deadline_misses: usize,
+}
+
+/// Sanitize `name` and create `<root>/<name>/`. Shared by both writers.
+fn run_dir(root: impl AsRef<Path>, name: &str) -> Result<PathBuf> {
+    let safe: String = name
+        .chars()
+        .map(|c| if c.is_alphanumeric() || c == '-' || c == '_' || c == '.' { c } else { '_' })
+        .collect();
+    let dir = root.as_ref().join(safe);
+    std::fs::create_dir_all(&dir).with_context(|| format!("mkdir {dir:?}"))?;
+    Ok(dir)
 }
 
 impl RunWriter {
     /// Create `runs/<name>/` (name sanitized) and open curve.csv.
     pub fn create(root: impl AsRef<Path>, name: &str) -> Result<Self> {
-        let safe: String = name
-            .chars()
-            .map(|c| if c.is_alphanumeric() || c == '-' || c == '_' || c == '.' { c } else { '_' })
-            .collect();
-        let dir = root.as_ref().join(safe);
-        std::fs::create_dir_all(&dir).with_context(|| format!("mkdir {dir:?}"))?;
+        let dir = run_dir(root, name)?;
         let curve = BufWriter::new(File::create(dir.join("curve.csv"))?);
         let mut w = Self {
             dir,
@@ -52,7 +63,7 @@ impl RunWriter {
         };
         writeln!(
             w.curve,
-            "round,test_accuracy,test_loss,train_loss,clients,lr,bytes_up,sim_seconds"
+            "round,test_accuracy,test_loss,train_loss,clients,lr,bytes_up,sim_seconds,dropped,deadline_misses"
         )?;
         Ok(w)
     }
@@ -64,7 +75,7 @@ impl RunWriter {
     pub fn record(&mut self, r: &RoundRecord) -> Result<()> {
         writeln!(
             self.curve,
-            "{},{:.6},{:.6},{},{},{:.6},{},{:.3}",
+            "{},{:.6},{:.6},{},{},{:.6},{},{:.3},{},{}",
             r.round,
             r.test_accuracy,
             r.test_loss,
@@ -72,15 +83,22 @@ impl RunWriter {
             r.clients,
             r.lr,
             r.bytes_up,
-            r.sim_seconds
+            r.sim_seconds,
+            r.dropped,
+            r.deadline_misses
         )?;
         if !self.quiet {
             let tl = r
                 .train_loss
                 .map(|v| format!(" train_loss={v:.4}"))
                 .unwrap_or_default();
+            let fleet = if r.dropped > 0 || r.deadline_misses > 0 {
+                format!(" dropped={} misses={}", r.dropped, r.deadline_misses)
+            } else {
+                String::new()
+            };
             println!(
-                "[{:>7.1}s] round {:>5}  acc={:.4} loss={:.4}{tl}  (m={}, lr={:.4})",
+                "[{:>7.1}s] round {:>5}  acc={:.4} loss={:.4}{tl}  (m={}, lr={:.4}){fleet}",
                 self.started.elapsed().as_secs_f64(),
                 r.round,
                 r.test_accuracy,
@@ -95,20 +113,77 @@ impl RunWriter {
     /// Write the final summary JSON (flat string→string map + numbers).
     pub fn finish(mut self, fields: &[(&str, String)]) -> Result<PathBuf> {
         self.curve.flush()?;
-        let mut out = String::from("{\n");
-        for (i, (k, v)) in fields.iter().enumerate() {
-            let comma = if i + 1 == fields.len() { "" } else { "," };
-            // numbers pass through bare if they parse; strings escaped
-            if v.parse::<f64>().is_ok() || v == "true" || v == "false" || v == "null" {
-                out.push_str(&format!("  {}: {v}{comma}\n", escape(k)));
-            } else {
-                out.push_str(&format!("  {}: {}{comma}\n", escape(k), escape(v)));
-            }
+        write_summary(&self.dir, fields)
+    }
+}
+
+/// Write `<dir>/summary.json` as a flat map (numbers pass through bare
+/// if they parse; strings escaped). Shared by [`RunWriter`] and
+/// [`FleetWriter`].
+pub fn write_summary(dir: &Path, fields: &[(&str, String)]) -> Result<PathBuf> {
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        let comma = if i + 1 == fields.len() { "" } else { "," };
+        if v.parse::<f64>().is_ok() || v == "true" || v == "false" || v == "null" {
+            out.push_str(&format!("  {}: {v}{comma}\n", escape(k)));
+        } else {
+            out.push_str(&format!("  {}: {}{comma}\n", escape(k), escape(v)));
         }
-        out.push_str("}\n");
-        let path = self.dir.join("summary.json");
-        std::fs::write(&path, out)?;
-        Ok(path)
+    }
+    out.push_str("}\n");
+    let path = dir.join("summary.json");
+    std::fs::write(&path, out)?;
+    Ok(path)
+}
+
+/// Per-round record of a training-free fleet simulation
+/// (`fedavg fleet --sim-only`, `examples/fleet_stress.rs`).
+#[derive(Debug, Clone, Copy)]
+pub struct FleetRoundRecord {
+    pub round: u64,
+    pub online: usize,
+    pub dispatched: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub deadline_miss: bool,
+    pub round_seconds: f64,
+}
+
+/// Writer for fleet-simulation runs: `runs/<name>/fleet.csv` + the same
+/// summary JSON as [`RunWriter`].
+pub struct FleetWriter {
+    dir: PathBuf,
+    csv: BufWriter<File>,
+}
+
+impl FleetWriter {
+    pub fn create(root: impl AsRef<Path>, name: &str) -> Result<Self> {
+        let dir = run_dir(root, name)?;
+        let mut csv = BufWriter::new(File::create(dir.join("fleet.csv"))?);
+        writeln!(
+            csv,
+            "round,online,dispatched,completed,dropped,deadline_miss,round_seconds"
+        )?;
+        Ok(Self { dir, csv })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn record(&mut self, r: &FleetRoundRecord) -> Result<()> {
+        writeln!(
+            self.csv,
+            "{},{},{},{},{},{},{:.3}",
+            r.round, r.online, r.dispatched, r.completed, r.dropped, r.deadline_miss as u8,
+            r.round_seconds
+        )?;
+        Ok(())
+    }
+
+    pub fn finish(mut self, fields: &[(&str, String)]) -> Result<PathBuf> {
+        self.csv.flush()?;
+        write_summary(&self.dir, fields)
     }
 }
 
@@ -136,6 +211,8 @@ mod tests {
             lr: 0.1,
             bytes_up: 123,
             sim_seconds: 4.5,
+            dropped: 0,
+            deadline_misses: 0,
         })
         .unwrap();
         w.record(&RoundRecord {
@@ -147,6 +224,8 @@ mod tests {
             lr: 0.1,
             bytes_up: 456,
             sim_seconds: 9.0,
+            dropped: 3,
+            deadline_misses: 1,
         })
         .unwrap();
         let summary = w
@@ -154,12 +233,40 @@ mod tests {
             .unwrap();
         let csv = std::fs::read_to_string(dir.join("curve.csv")).unwrap();
         assert!(csv.starts_with("round,"));
+        assert!(csv.lines().next().unwrap().ends_with("dropped,deadline_misses"));
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.contains("2,0.600000"));
+        assert!(csv.lines().nth(2).unwrap().ends_with(",3,1"));
         let json = std::fs::read_to_string(summary).unwrap();
         let parsed = crate::util::json::Json::parse(&json).unwrap();
         assert_eq!(parsed.get("rounds").unwrap().as_usize().unwrap(), 2);
         assert_eq!(parsed.get("model").unwrap().as_str().unwrap(), "mnist_2nn");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn fleet_writer_csv_and_summary() {
+        let pid = std::process::id();
+        let mut w =
+            FleetWriter::create("target/test-runs", &format!("fleet-test-{pid}")).unwrap();
+        let dir = w.dir().to_path_buf();
+        w.record(&FleetRoundRecord {
+            round: 1,
+            online: 900,
+            dispatched: 130,
+            completed: 100,
+            dropped: 30,
+            deadline_miss: false,
+            round_seconds: 41.5,
+        })
+        .unwrap();
+        let summary = w.finish(&[("rounds", "1".into())]).unwrap();
+        let csv = std::fs::read_to_string(dir.join("fleet.csv")).unwrap();
+        assert!(csv.starts_with("round,online,dispatched,"));
+        assert!(csv.contains("1,900,130,100,30,0,41.500"));
+        let parsed =
+            crate::util::json::Json::parse(&std::fs::read_to_string(summary).unwrap()).unwrap();
+        assert_eq!(parsed.get("rounds").unwrap().as_usize().unwrap(), 1);
         std::fs::remove_dir_all(dir).ok();
     }
 }

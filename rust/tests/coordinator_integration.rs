@@ -1,0 +1,220 @@
+//! Integration: the fleet coordinator — scheduler invariants without
+//! artifacts (always run), and the parallel-vs-sequential bit-identity
+//! over real artifacts (skipped, like the other artifact-gated tests,
+//! when `make artifacts` has not run).
+
+use fedavg::config::{BatchSize, FedConfig, Partition};
+use fedavg::coordinator::{FleetConfig, FleetProfile, FleetSim};
+use fedavg::exper::mnist_fed;
+use fedavg::federated::{self, ServerOptions};
+use fedavg::params;
+use fedavg::runtime::Engine;
+
+fn mobile(overselect: f64, deadline_s: Option<f64>) -> FleetConfig {
+    FleetConfig {
+        profile: FleetProfile::Mobile,
+        overselect,
+        deadline_s,
+        ..Default::default()
+    }
+}
+
+// ------------------------------------------------- simulation invariants
+
+#[test]
+fn overselection_never_aggregates_more_than_m() {
+    let m = 40;
+    let mut sim = FleetSim::new(&mobile(0.5, Some(60.0)), 2000, m, 800_000, 60.0, 3).unwrap();
+    let mut saw_overselection = false;
+    let mut saw_drop = false;
+    for _ in 0..100 {
+        let r = sim.step();
+        assert!(r.plan.completed.len() <= m, "round {}", r.round);
+        assert!(!r.plan.completed.is_empty(), "round {}", r.round);
+        assert!(r.plan.dispatched.len() <= (m as f64 * 1.5).ceil() as usize);
+        saw_overselection |= r.plan.dispatched.len() > m;
+        saw_drop |= !r.plan.dropped.is_empty();
+        // conservation: every dispatched client either completed or dropped
+        assert_eq!(
+            r.plan.completed.len() + r.plan.dropped.len(),
+            r.plan.dispatched.len()
+        );
+        let mut all: Vec<usize> = r.plan.completed.iter().chain(&r.plan.dropped).copied().collect();
+        all.sort_unstable();
+        let mut disp = r.plan.dispatched.clone();
+        disp.sort_unstable();
+        assert_eq!(all, disp);
+    }
+    assert!(saw_overselection, "over-selection never dispatched extras");
+    assert!(saw_drop, "over-selection never dropped a straggler");
+}
+
+#[test]
+fn dropped_straggler_rounds_keep_weights_normalized() {
+    // aggregation weights are n_k / Σ n_k over the COMPLETED set, so they
+    // must sum to 1 no matter how many stragglers were dropped
+    let mut sim = FleetSim::new(&mobile(0.4, Some(45.0)), 1000, 25, 800_000, 120.0, 9).unwrap();
+    // heterogeneous client sizes, like an unbalanced partition
+    let sizes: Vec<usize> = (0..1000).map(|c| 100 + (c * 37) % 900).collect();
+    for _ in 0..50 {
+        let r = sim.step();
+        if r.plan.dropped.is_empty() {
+            continue;
+        }
+        let ones = vec![1.0f32; 8];
+        let weighted: Vec<(f32, &[f32])> = r
+            .plan
+            .completed
+            .iter()
+            .map(|&c| (sizes[c] as f32, ones.as_slice()))
+            .collect();
+        // weighted_mean normalizes by the completed set's total weight:
+        // averaging all-ones must return ones (i.e. the weights sum to 1)
+        let mean = params::weighted_mean(&weighted);
+        for v in mean {
+            assert!((v - 1.0).abs() < 1e-6, "weights did not normalize: {v}");
+        }
+    }
+    let t = sim.totals();
+    assert!(t.fleet.dropped_stragglers > 0, "scenario produced no straggler drops");
+    assert_eq!(t.fleet.completed + t.fleet.dropped_stragglers, t.fleet.dispatched);
+}
+
+#[test]
+fn sim_rounds_are_deterministic_and_cadence_independent() {
+    let cfg = mobile(0.3, Some(90.0));
+    let mut a = FleetSim::new(&cfg, 5000, 100, 6_653_480, 60.0, 42).unwrap();
+    let mut b = FleetSim::new(&cfg, 5000, 100, 6_653_480, 60.0, 42).unwrap();
+    for _ in 0..30 {
+        let ra = a.step();
+        let rb = b.step();
+        assert_eq!(ra.plan.dispatched, rb.plan.dispatched);
+        assert_eq!(ra.plan.completed, rb.plan.completed);
+        assert_eq!(ra.plan.dropped, rb.plan.dropped);
+        assert!(ra.plan.round_seconds.is_finite() && ra.plan.round_seconds > 0.0);
+    }
+}
+
+#[test]
+fn deadlines_bound_round_wall_clock() {
+    let deadline = 30.0;
+    let mut tight = FleetSim::new(&mobile(0.2, Some(deadline)), 3000, 50, 6_653_480, 300.0, 7)
+        .unwrap();
+    let mut open = FleetSim::new(&mobile(0.2, None), 3000, 50, 6_653_480, 300.0, 7).unwrap();
+    for _ in 0..40 {
+        let r = tight.step();
+        // a round never waits past the deadline unless nobody finished
+        if r.plan.completed.len() > 1 {
+            assert!(
+                r.plan.round_seconds <= deadline + 1e-9,
+                "round {} ran {}s past a {}s deadline",
+                r.round,
+                r.plan.round_seconds,
+                deadline
+            );
+        }
+        open.step();
+    }
+    let (t, o) = (tight.totals(), open.totals());
+    assert!(t.fleet.deadline_misses > 0, "slow fleet never missed a 30s deadline");
+    assert!(
+        t.sim_seconds < o.sim_seconds,
+        "deadline did not shorten wall-clock: {} vs {}",
+        t.sim_seconds,
+        o.sim_seconds
+    );
+}
+
+#[test]
+fn fleet_scales_to_100k_clients() {
+    let mut sim = FleetSim::new(&mobile(0.3, Some(90.0)), 100_000, 1000, 800_000, 60.0, 1)
+        .unwrap();
+    for _ in 0..3 {
+        let r = sim.step();
+        assert!(r.online > 1000, "diurnal mobile fleet mostly offline: {}", r.online);
+        assert_eq!(r.plan.dispatched.len(), 1300);
+        assert!(r.plan.completed.len() <= 1000);
+    }
+}
+
+// --------------------------------------------- artifact-gated (training)
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine"))
+}
+
+fn fleet_cfg() -> FedConfig {
+    FedConfig {
+        model: "mnist_2nn".into(),
+        c: 0.5,
+        e: 1,
+        b: BatchSize::Fixed(10),
+        lr: 0.1,
+        rounds: 3,
+        eval_every: 3,
+        seed: 123,
+        ..Default::default()
+    }
+}
+
+fn fleet_opts(workers: usize) -> ServerOptions {
+    ServerOptions {
+        eval_cap: Some(200),
+        fleet: FleetConfig {
+            workers,
+            ..mobile(0.3, Some(600.0))
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn parallel_workers_bit_identical_to_sequential() {
+    let Some(eng) = engine() else { return };
+    let fed = mnist_fed(0.05, Partition::Iid, 31);
+    let cfg = fleet_cfg();
+    let seq = federated::run(&eng, &fed, &cfg, fleet_opts(1)).unwrap();
+    let par = federated::run(&eng, &fed, &cfg, fleet_opts(3)).unwrap();
+    assert_eq!(
+        seq.final_theta, par.final_theta,
+        "--workers 3 diverged from sequential execution"
+    );
+    assert_eq!(seq.accuracy.points(), par.accuracy.points());
+    assert_eq!(seq.fleet, par.fleet, "fleet accounting diverged");
+    assert!(seq.fleet.dispatched > 0);
+}
+
+#[test]
+fn fleet_run_reports_drops_and_differs_from_legacy() {
+    let Some(eng) = engine() else { return };
+    let fed = mnist_fed(0.05, Partition::Iid, 32);
+    let cfg = fleet_cfg();
+    let legacy = federated::run(
+        &eng,
+        &fed,
+        &cfg,
+        ServerOptions {
+            eval_cap: Some(200),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(legacy.fleet, Default::default(), "legacy path touched fleet state");
+
+    let fleet = federated::run(&eng, &fed, &cfg, fleet_opts(1)).unwrap();
+    // over-selection dispatched more than it aggregated
+    assert!(fleet.fleet.dispatched > fleet.fleet.completed);
+    assert_eq!(
+        fleet.fleet.completed + fleet.fleet.dropped_stragglers,
+        fleet.fleet.dispatched
+    );
+    // dropped clients waste downlink: down bytes exceed up bytes / asym
+    assert!(fleet.comm.bytes_down > fleet.comm.bytes_up);
+    // it still learns
+    assert!(fleet.accuracy.last_value().unwrap() > 0.1);
+}
