@@ -5,6 +5,10 @@
 //!   federated setting" (§3, CIFAR experiments / Table 3 / Figure 9).
 //! * [`oneshot`] — one-shot averaging: train each client to (near)
 //!   convergence once, average once (§1 related work endpoint).
+//!
+//! Both run over the same engine/artifact stack as
+//! [`federated`](crate::federated) (DESIGN.md §1), so baseline-vs-FedAvg
+//! comparisons differ only in the algorithm, never the substrate.
 
 pub mod oneshot;
 pub mod sgd;

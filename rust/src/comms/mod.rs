@@ -1,16 +1,26 @@
-//! Communication-cost simulator — the constraint the paper optimizes for.
+//! The transport subsystem — the constraint the paper optimizes for.
 //!
 //! The paper's premise: federated clients sit behind ~1 MB/s uplinks, so
-//! *rounds of communication* dominate cost and wall-clock. The rust
-//! coordinator counts every byte that would cross the network (full model
-//! down + full model up per selected client per round) and converts it to
-//! simulated wall-clock under a bandwidth model, so every experiment can
-//! report "communication" alongside rounds.
+//! *rounds of communication* dominate cost and wall-clock. This module
+//! owns everything that crosses the simulated network:
 //!
-//! This is the substrate substitution for the paper's hypothetical mobile
-//! fleet (DESIGN.md §2): availability traces and per-client bandwidth
-//! jitter model the "clients are slow/offline" reality the paper assumes
-//! away via synchronous rounds.
+//! * [`wire`] — framed wire messages and the composable codec pipeline
+//!   (`Codec` trait, stage registry, `--codec "topk:1000|q8"` parsing),
+//!   with one `wire_bytes` formula shared by planning, encoding, and
+//!   serialization (DESIGN.md §6).
+//! * [`transport`] — the server endpoint: versioned model store, delta
+//!   downlink with dense fallback, uplink error feedback, and the byte
+//!   metering both the scheduler and telemetry read.
+//! * this file — the bandwidth/latency cost model ([`CommSim`]) that
+//!   converts wire bytes into simulated wall-clock, plus availability
+//!   traces (the "clients are frequently offline" reality, DESIGN.md §2,
+//!   which the fleet coordinator deepens with per-device profiles).
+
+pub mod transport;
+pub mod wire;
+
+pub use transport::{ModelStore, Transport, TransportConfig};
+pub use wire::Pipeline;
 
 use crate::data::rng::{hash3_unit, Rng};
 
@@ -90,17 +100,29 @@ impl CommSim {
     /// Asymmetric variant: compressed uplinks upload fewer bytes than the
     /// full model the server broadcasts down.
     pub fn round_asym(&mut self, m: usize, down_bytes: u64, up_bytes: u64) -> RoundComm {
+        self.round_links(&vec![(down_bytes, up_bytes); m])
+    }
+
+    /// Per-link variant: one `(down, up)` byte pair per participating
+    /// client, as produced by the transport layer (delta downlinks give
+    /// every client a different byte count). `round_asym(m, d, u)` is
+    /// exactly `round_links(&[(d, u); m])` — same jitter draws, same
+    /// totals.
+    pub fn round_links(&mut self, links: &[(u64, u64)]) -> RoundComm {
         let mut worst = 0.0f64;
-        for _ in 0..m {
+        let (mut bytes_up, mut bytes_down) = (0u64, 0u64);
+        for &(down_bytes, up_bytes) in links {
             let scale = 1.0 - self.model.jitter * self.rng.f64();
             let down = down_bytes as f64 / (self.model.down_bps * scale);
             let up = up_bytes as f64 / (self.model.up_bps * scale);
             let t = 2.0 * self.model.latency_s + down + up;
             worst = worst.max(t);
+            bytes_up += up_bytes;
+            bytes_down += down_bytes;
         }
         let rc = RoundComm {
-            bytes_up: up_bytes * m as u64,
-            bytes_down: down_bytes * m as u64,
+            bytes_up,
+            bytes_down,
             transfer_s: worst,
         };
         self.totals.rounds += 1;
@@ -265,6 +287,23 @@ mod tests {
         }
         // and rounds actually differ from each other
         assert_ne!(forward[0], forward[1]);
+    }
+
+    #[test]
+    fn round_links_matches_round_asym_bit_for_bit() {
+        let mut a = CommSim::new(CommModel::default(), 33);
+        let mut b = CommSim::new(CommModel::default(), 33);
+        for _ in 0..10 {
+            let ra = a.round_asym(7, 4_000_000, 800_000);
+            let rb = b.round_links(&[(4_000_000, 800_000); 7]);
+            assert_eq!(ra.bytes_up, rb.bytes_up);
+            assert_eq!(ra.bytes_down, rb.bytes_down);
+            assert_eq!(ra.transfer_s, rb.transfer_s);
+        }
+        // heterogeneous links sum their own bytes
+        let rc = a.round_links(&[(100, 10), (200, 20), (300, 30)]);
+        assert_eq!(rc.bytes_down, 600);
+        assert_eq!(rc.bytes_up, 60);
     }
 
     #[test]

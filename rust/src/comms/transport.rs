@@ -1,0 +1,460 @@
+//! The server's transport endpoint: versioned model store, delta
+//! downlink, uplink codec with error feedback — and the **single source
+//! of wire-byte truth** (DESIGN.md §6).
+//!
+//! Every byte the federated server meters flows through [`Transport`]:
+//!
+//! * **Downlink** — [`Transport::downlink`] prices the broadcast to one
+//!   client. With a `delta` downlink codec, the server consults the
+//!   [`ModelStore`] for the last version that client acked and ships an
+//!   overwrite patch against it; when the ack aged out of the store (or
+//!   the patch would not be smaller) it falls back to a dense frame.
+//!   Downlink bytes therefore scale with round-to-round model change,
+//!   not model size.
+//! * **Uplink** — [`Transport::up_plan_bytes`] prices a client upload
+//!   *before* training (the fleet scheduler needs durations up front)
+//!   and [`Transport::encode_up`] later encodes the real update through
+//!   the same pipeline, producing exactly the priced byte count: the
+//!   scheduler's estimate and the telemetry-reported wire bytes cannot
+//!   drift apart.
+//!
+//! Error feedback for sparsifying uplink codecs is keyed per client and
+//! advances **only** in [`Transport::encode_up`] — which the server
+//! calls only for updates that are actually aggregated. A client whose
+//! update was straggler-dropped by the scheduler never reaches the wire,
+//! so its residual must not change: the dropped mass was never
+//! delivered, and folding it in anyway would double-count once the
+//! client retrains from a newer model (regression-tested in
+//! `rust/tests/transport_wire.rs`).
+
+use std::collections::VecDeque;
+
+use crate::comms::wire::Pipeline;
+use crate::compression::ErrorFeedback;
+use crate::data::rng::Rng;
+use crate::params::ParamVec;
+use crate::Result;
+
+/// Ring of recently published model versions plus per-client ack state —
+/// what makes the delta downlink possible.
+pub struct ModelStore {
+    cap: usize,
+    versions: VecDeque<(u64, ParamVec)>,
+    acked: Vec<u64>,
+}
+
+impl ModelStore {
+    /// Store retaining at most `cap` versions for `num_clients` clients
+    /// (ack version 0 = "never received anything").
+    pub fn new(num_clients: usize, cap: usize) -> ModelStore {
+        assert!(cap >= 1, "model store needs at least one version slot");
+        ModelStore {
+            cap,
+            versions: VecDeque::new(),
+            acked: vec![0; num_clients],
+        }
+    }
+
+    /// Publish `theta` as `version` (strictly increasing), evicting the
+    /// oldest retained version beyond capacity.
+    pub fn publish(&mut self, version: u64, theta: &[f32]) {
+        assert!(
+            version > self.latest_version(),
+            "model versions must increase: {} after {}",
+            version,
+            self.latest_version()
+        );
+        self.versions.push_back((version, theta.to_vec()));
+        while self.versions.len() > self.cap {
+            self.versions.pop_front();
+        }
+    }
+
+    /// Most recently published version (0 when empty).
+    pub fn latest_version(&self) -> u64 {
+        self.versions.back().map(|(v, _)| *v).unwrap_or(0)
+    }
+
+    /// The retained model for `version`, unless it aged out.
+    pub fn get(&self, version: u64) -> Option<&[f32]> {
+        self.versions
+            .iter()
+            .find(|(v, _)| *v == version)
+            .map(|(_, t)| t.as_slice())
+    }
+
+    /// Last version `client` received (0 = never).
+    pub fn acked(&self, client: usize) -> u64 {
+        self.acked[client]
+    }
+
+    pub fn ack(&mut self, client: usize, version: u64) {
+        self.acked[client] = version;
+    }
+
+    /// Number of versions currently retained.
+    pub fn retained(&self) -> usize {
+        self.versions.len()
+    }
+}
+
+/// Codec configuration for a run, carried in
+/// [`ServerOptions`](crate::federated::ServerOptions). The default (no
+/// pipelines) is the legacy unframed-dense path, bit-identical to the
+/// pre-transport byte accounting.
+#[derive(Debug, Clone)]
+pub struct TransportConfig {
+    /// Uplink codec (client update → server); `None` = unframed dense.
+    pub up: Option<Pipeline>,
+    /// Downlink codec (server model → client); `None` = unframed dense.
+    pub down: Option<Pipeline>,
+    /// Model versions the store retains for delta downlinks; clients
+    /// whose ack aged out get a dense fallback broadcast.
+    pub store_cap: usize,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        Self {
+            up: None,
+            down: None,
+            store_cap: 8,
+        }
+    }
+}
+
+impl TransportConfig {
+    /// Parse CLI specs: `--codec` (uplink) and `--down-codec` (downlink).
+    pub fn parse(up: Option<&str>, down: Option<&str>) -> Result<TransportConfig> {
+        let up = up.map(Pipeline::parse).transpose()?;
+        let down = down.map(Pipeline::parse).transpose()?;
+        if let Some(p) = &up {
+            anyhow::ensure!(
+                !p.has_delta(),
+                "uplink codec {p:?}: client updates already travel as deltas \
+                 against the broadcast model; `delta` is a downlink stage"
+            );
+        }
+        if let Some(p) = &down {
+            anyhow::ensure!(
+                !p.has_topk() || p.has_delta(),
+                "downlink codec {p:?}: `topk` needs a `delta` base — sparsifying \
+                 a full model broadcast would zero every unsent coordinate"
+            );
+        }
+        Ok(TransportConfig {
+            up,
+            down,
+            ..Default::default()
+        })
+    }
+
+    /// True when any codec is configured (the transport replaces the
+    /// legacy byte accounting).
+    pub fn active(&self) -> bool {
+        self.up.is_some() || self.down.is_some()
+    }
+}
+
+/// Per-run transport endpoint: owns the codec pipelines, the model
+/// store, the per-client error feedback, and the quantizer's
+/// stochastic-rounding stream.
+pub struct Transport {
+    cfg: TransportConfig,
+    dim: usize,
+    /// Legacy unframed-dense size (`4·dim`), used whenever a direction
+    /// has no codec.
+    dense_bytes: u64,
+    store: ModelStore,
+    feedback: Vec<ErrorFeedback>,
+    rng: Rng,
+    /// Per-client base version of this round's downlink frame
+    /// (0 = dense broadcast), recorded by [`downlink`](Self::downlink)
+    /// for [`downlink_model`](Self::downlink_model).
+    pending_base: Vec<u64>,
+    /// Round the memo below is valid for.
+    cache_version: u64,
+    /// Per-round memo of delta-frame sizes keyed by base version: the
+    /// patch depends only on `(theta, base)`, so clients sharing an
+    /// acked version share one O(dim) scan (at most `store_cap` distinct
+    /// bases exist per round).
+    measure_cache: Vec<(u64, u64)>,
+}
+
+impl Transport {
+    pub fn new(cfg: TransportConfig, num_clients: usize, dim: usize, seed: u64) -> Transport {
+        let store = ModelStore::new(num_clients, cfg.store_cap.max(1));
+        Transport {
+            dense_bytes: 4 * dim as u64,
+            store,
+            feedback: vec![ErrorFeedback::default(); num_clients],
+            // same domain separation as the seed implementation's
+            // quantizer stream
+            rng: Rng::new(seed ^ 0x0_B175),
+            pending_base: vec![0; num_clients],
+            cache_version: 0,
+            measure_cache: Vec::new(),
+            cfg,
+            dim,
+        }
+    }
+
+    pub fn config(&self) -> &TransportConfig {
+        &self.cfg
+    }
+
+    pub fn store(&self) -> &ModelStore {
+        &self.store
+    }
+
+    /// Telemetry label: `"<up>/<down>"` specs, `dense/dense` when unset.
+    pub fn codec_label(&self) -> String {
+        let name = |p: &Option<Pipeline>| {
+            p.as_ref().map(|p| p.spec().to_string()).unwrap_or_else(|| "dense".into())
+        };
+        format!("{}/{}", name(&self.cfg.up), name(&self.cfg.down))
+    }
+
+    /// Publish this round's model as `version` so later rounds can delta
+    /// against it. No-op unless the downlink codec has a `delta` stage.
+    pub fn publish(&mut self, version: u64, theta: &[f32]) {
+        if self.cfg.down.as_ref().map_or(false, |d| d.has_delta()) {
+            debug_assert_eq!(theta.len(), self.dim);
+            self.store.publish(version, theta);
+        }
+    }
+
+    /// Downlink wire bytes for `client` receiving `theta` (published as
+    /// `version`), choosing delta vs dense fallback and recording the
+    /// ack. This one number is both what the scheduler prices and what
+    /// telemetry reports.
+    pub fn downlink(&mut self, client: usize, version: u64, theta: &[f32]) -> u64 {
+        debug_assert_eq!(theta.len(), self.dim);
+        let Some(down) = &self.cfg.down else {
+            self.pending_base[client] = 0;
+            return self.dense_bytes;
+        };
+        let fallback = down.fallback_bytes(self.dim);
+        let mut base_v = 0u64;
+        let mut bytes = fallback;
+        if down.has_delta() {
+            if self.cache_version != version {
+                self.cache_version = version;
+                self.measure_cache.clear();
+            }
+            let acked = self.store.acked(client);
+            if acked > 0 && acked < version {
+                if let Some(base) = self.store.get(acked) {
+                    let cached: Option<u64> = self
+                        .measure_cache
+                        .iter()
+                        .find(|(v, _)| *v == acked)
+                        .map(|&(_, b)| b);
+                    let delta_bytes = match cached {
+                        Some(b) => b,
+                        None => {
+                            let b = down
+                                .measure(theta, Some(base))
+                                .expect("transport invariant: store dims match the model");
+                            self.measure_cache.push((acked, b));
+                            b
+                        }
+                    };
+                    if delta_bytes < fallback {
+                        bytes = delta_bytes;
+                        base_v = acked;
+                    }
+                }
+            }
+        }
+        self.pending_base[client] = base_v;
+        self.store.ack(client, version);
+        bytes
+    }
+
+    /// The model `client` reconstructs from this round's downlink
+    /// (decided by the preceding [`downlink`](Self::downlink) call) —
+    /// `None` when it is bit-identical to `theta` (no downlink codec, or
+    /// a lossless one: dense frames and pure `delta` patches reproduce
+    /// the broadcast exactly), else the decoded approximation the client
+    /// actually trains from.
+    pub fn downlink_model(&mut self, client: usize, theta: &[f32]) -> Result<Option<ParamVec>> {
+        let Some(down) = &self.cfg.down else {
+            return Ok(None);
+        };
+        if down.lossless() {
+            return Ok(None);
+        }
+        let base_v = self.pending_base[client];
+        let decoded = if base_v == 0 {
+            let repr = down.run_fallback(theta, &mut self.rng)?;
+            repr.decode(None)?
+        } else {
+            let base = self
+                .store
+                .get(base_v)
+                .ok_or_else(|| anyhow::anyhow!("base version {base_v} evicted mid-round"))?;
+            let repr = down.run(theta, Some((base_v, base)), &mut self.rng)?;
+            repr.decode(Some(base))?
+        };
+        Ok(Some(decoded))
+    }
+
+    /// Uplink planning size — what the scheduler prices a client upload
+    /// at *before* it trains. Exactly equals the byte count
+    /// [`encode_up`](Self::encode_up) later returns for the real payload.
+    pub fn up_plan_bytes(&self) -> u64 {
+        match &self.cfg.up {
+            None => self.dense_bytes,
+            Some(p) => p.plan_bytes(self.dim),
+        }
+    }
+
+    /// Encode one **aggregated** client's update through the uplink
+    /// codec: fold in the client's error-feedback residual (sparsifying
+    /// pipelines only), run the stages, and replace `delta` with what
+    /// the server decodes — i.e. what actually lands in the aggregate.
+    /// Returns the exact wire bytes.
+    ///
+    /// Must only be called for updates that are aggregated this round:
+    /// straggler-dropped updates never reach the wire, so their
+    /// residuals must not advance (see the module docs).
+    pub fn encode_up(&mut self, client: usize, delta: &mut ParamVec) -> Result<u64> {
+        let Some(up) = &self.cfg.up else {
+            return Ok(self.dense_bytes);
+        };
+        // error feedback corrects sparsification bias; quantization alone
+        // is unbiased and gets none (matching the seed implementation)
+        let use_ef = up.has_topk();
+        if use_ef {
+            self.feedback[client].fold_in(delta);
+        }
+        let repr = up.run(delta, None, &mut self.rng)?;
+        let bytes = repr.wire_bytes();
+        debug_assert_eq!(bytes, up.plan_bytes(self.dim), "estimate/actual drift");
+        if !up.lossless() {
+            let decoded = repr.decode(None)?;
+            if use_ef {
+                self.feedback[client].record_dense(delta, &decoded);
+            }
+            *delta = decoded;
+        }
+        Ok(bytes)
+    }
+
+    /// L2 norm of `client`'s error-feedback residual (diagnostics, and
+    /// the straggler-drop regression tests).
+    pub fn residual_norm(&self, client: usize) -> f64 {
+        self.feedback[client].residual_norm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn theta(dim: usize, round: u64) -> Vec<f32> {
+        // model that drifts a little every round: 5% of coords change
+        (0..dim)
+            .map(|i| {
+                let changed = (i as u64 + round) % 20 == 0;
+                i as f32 * 0.01 + if changed { round as f32 * 0.1 } else { 0.0 }
+            })
+            .collect()
+    }
+
+    fn delta_transport(store_cap: usize) -> Transport {
+        let cfg = TransportConfig {
+            up: None,
+            down: Some(Pipeline::parse("delta").unwrap()),
+            store_cap,
+        };
+        Transport::new(cfg, 4, 400, 1)
+    }
+
+    #[test]
+    fn store_retains_cap_versions_and_evicts_oldest() {
+        let mut s = ModelStore::new(2, 3);
+        for v in 1..=5u64 {
+            s.publish(v, &[v as f32; 4]);
+        }
+        assert_eq!(s.retained(), 3);
+        assert_eq!(s.latest_version(), 5);
+        assert!(s.get(2).is_none(), "evicted version still retained");
+        assert_eq!(s.get(3).unwrap()[0], 3.0);
+        s.ack(1, 5);
+        assert_eq!(s.acked(1), 5);
+        assert_eq!(s.acked(0), 0);
+    }
+
+    #[test]
+    fn first_contact_is_dense_then_delta_shrinks() {
+        let mut t = delta_transport(8);
+        let t1 = theta(400, 1);
+        t.publish(1, &t1);
+        let dense = t.downlink(0, 1, &t1);
+        assert_eq!(dense, 24 + 4 * 400, "first contact must be a dense frame");
+        let t2 = theta(400, 2);
+        t.publish(2, &t2);
+        let delta = t.downlink(0, 2, &t2);
+        assert!(delta < dense / 2, "delta downlink did not shrink: {delta} vs {dense}");
+        // a client that never acked still gets dense
+        assert_eq!(t.downlink(1, 2, &t2), dense);
+    }
+
+    #[test]
+    fn aged_out_ack_falls_back_to_dense() {
+        let mut t = delta_transport(2);
+        let t1 = theta(400, 1);
+        t.publish(1, &t1);
+        t.downlink(0, 1, &t1); // client 0 acks v1
+        for v in 2..=4u64 {
+            let tv = theta(400, v);
+            t.publish(v, &tv); // cap 2: v1 evicted once v3 lands
+        }
+        let t4 = theta(400, 4);
+        assert_eq!(t.store().get(1), None);
+        let bytes = t.downlink(0, 4, &t4);
+        assert_eq!(bytes, 24 + 4 * 400, "aged-out ack must fall back to dense");
+    }
+
+    #[test]
+    fn legacy_directions_price_unframed_dense() {
+        let mut t = Transport::new(TransportConfig::default(), 2, 100, 3);
+        let x = theta(100, 1);
+        assert_eq!(t.downlink(0, 1, &x), 400);
+        assert_eq!(t.up_plan_bytes(), 400);
+        let mut d = x.clone();
+        assert_eq!(t.encode_up(0, &mut d).unwrap(), 400);
+        assert_eq!(d, x, "legacy uplink must not transform the update");
+        assert_eq!(t.codec_label(), "dense/dense");
+    }
+
+    #[test]
+    fn uplink_delta_stage_rejected() {
+        assert!(TransportConfig::parse(Some("delta|q8"), None).is_err());
+        assert!(TransportConfig::parse(Some("topk:0.01|q8"), Some("delta")).is_ok());
+    }
+
+    #[test]
+    fn encode_up_matches_plan_and_feeds_back() {
+        let cfg = TransportConfig::parse(Some("topk:10|q8"), None).unwrap();
+        let mut t = Transport::new(cfg, 2, 500, 7);
+        let plan = t.up_plan_bytes();
+        let mut d: Vec<f32> = (0..500).map(|i| (i as f32 * 0.37).sin()).collect();
+        let orig = d.clone();
+        let bytes = t.encode_up(0, &mut d).unwrap();
+        assert_eq!(bytes, plan, "scheduler-priced bytes != encoded bytes");
+        assert!(t.residual_norm(0) > 0.0, "sparsification left no residual");
+        assert_eq!(t.residual_norm(1), 0.0, "untouched client's residual moved");
+        // delivered + residual ≈ folded update (conservation)
+        let resid = t.residual_norm(0);
+        let delivered_err: f64 = orig
+            .iter()
+            .zip(&d)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!((delivered_err - resid).abs() < 1e-3, "{delivered_err} vs {resid}");
+    }
+}

@@ -1,0 +1,1112 @@
+//! Framed wire messages + the composable codec pipeline (DESIGN.md §6).
+//!
+//! Every model or update that crosses the simulated network is priced —
+//! and, in tests, actually serialized — as a self-describing **frame**:
+//! a fixed 24-byte header followed by the payload a codec [`Pipeline`]
+//! produced. A pipeline is a `|`-separated composition of registry-named
+//! stages, e.g. `--codec "topk:1000|q8"`:
+//!
+//! | stage          | role |
+//! |----------------|------|
+//! | `dense`        | identity: full f32 payload |
+//! | `delta`        | overwrite patch vs the receiver's acked model version (downlink) |
+//! | `topk:<k\|f>`  | magnitude sparsification to `k` coords (or fraction `f` of dim) |
+//! | `q<bits>`      | stochastic uniform quantization (1..=8 bits) |
+//!
+//! Stage order is enforced (`delta` first, `topk` next, `q<b>` last).
+//! Three views of a frame's size share one formula and are pinned
+//! together by tests: [`SizePlan::wire_bytes`] (pre-encode pricing),
+//! [`Repr::wire_bytes`] (post-stage accounting), and the serialized
+//! [`Frame`]'s actual length. The scheduler prices a transfer from the
+//! same pipeline that later encodes it, so estimate and actual can never
+//! drift.
+//!
+//! Decoding needs no pipeline object: frames are self-describing, and
+//! [`decode_frame`] inverts any stage composition from the header alone
+//! (plus the base model for delta frames).
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::compression::{dequantize, quantize, quantized_value_bytes, QuantizedUpdate, QCHUNK};
+use crate::data::rng::Rng;
+use crate::Result;
+
+/// Frame magic: `b"FWIR"` read as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"FWIR");
+/// Current wire-format version.
+pub const WIRE_VERSION: u8 = 1;
+/// Fixed frame-header size (layout documented in DESIGN.md §6).
+pub const HEADER_BYTES: u64 = 24;
+
+const FLAG_DELTA: u8 = 0b001;
+const FLAG_SPARSE: u8 = 0b010;
+const FLAG_QUANT: u8 = 0b100;
+
+// ----------------------------------------------------------------- repr
+
+/// Value payload of an in-flight [`Repr`]: raw f32s, or the packed
+/// output of the quantize stage.
+#[derive(Debug, Clone)]
+pub enum Vals {
+    F32(Vec<f32>),
+    Quantized(QuantizedUpdate),
+}
+
+impl Vals {
+    fn payload_bytes(&self) -> u64 {
+        match self {
+            Vals::F32(v) => 4 * v.len() as u64,
+            Vals::Quantized(q) => quantized_value_bytes(q.dim, q.bits),
+        }
+    }
+
+    fn to_f32(&self) -> Vec<f32> {
+        match self {
+            Vals::F32(v) => v.clone(),
+            Vals::Quantized(q) => dequantize(q),
+        }
+    }
+}
+
+/// Coordinate layout of a [`Repr`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReprKind {
+    /// All `dim` coordinates, in order.
+    Dense,
+    /// Additive sparse: listed coordinates carry values, the rest are
+    /// zero (uplink top-k).
+    Sparse,
+    /// Overwrite patch vs a base model version: listed coordinates carry
+    /// replacement values, the rest keep the base's (delta downlink).
+    Patch,
+}
+
+/// The in-flight representation [`Codec`] stages transform, between the
+/// dense vector and the serialized [`Frame`].
+#[derive(Debug, Clone)]
+pub struct Repr {
+    /// Decoded dimensionality.
+    pub dim: usize,
+    pub kind: ReprKind,
+    /// Sorted coordinate indices; empty when `kind == Dense`.
+    pub idx: Vec<u32>,
+    pub vals: Vals,
+    /// Base model version (`kind == Patch` only, else 0).
+    pub base_version: u64,
+}
+
+impl Repr {
+    /// The start of every encode: the dense vector itself.
+    pub fn dense(x: &[f32]) -> Repr {
+        Repr {
+            dim: x.len(),
+            kind: ReprKind::Dense,
+            idx: Vec::new(),
+            vals: Vals::F32(x.to_vec()),
+            base_version: 0,
+        }
+    }
+
+    fn flags(&self) -> u8 {
+        let mut f = match self.kind {
+            ReprKind::Dense => 0,
+            ReprKind::Sparse => FLAG_SPARSE,
+            ReprKind::Patch => FLAG_DELTA,
+        };
+        if matches!(self.vals, Vals::Quantized(_)) {
+            f |= FLAG_QUANT;
+        }
+        f
+    }
+
+    /// Exact length of [`to_frame`](Self::to_frame)'s output.
+    pub fn wire_bytes(&self) -> u64 {
+        let idx_bytes = if self.kind == ReprKind::Dense {
+            0
+        } else {
+            4 * self.idx.len() as u64
+        };
+        HEADER_BYTES + idx_bytes + self.vals.payload_bytes()
+    }
+
+    /// Serialize to the frame layout (DESIGN.md §6).
+    pub fn to_frame(&self) -> Frame {
+        let mut b = Vec::with_capacity(self.wire_bytes() as usize);
+        b.extend_from_slice(&MAGIC.to_le_bytes());
+        b.push(WIRE_VERSION);
+        b.push(self.flags());
+        b.push(match &self.vals {
+            Vals::Quantized(q) => q.bits,
+            Vals::F32(_) => 0,
+        });
+        b.push(0); // reserved
+        b.extend_from_slice(&(self.dim as u32).to_le_bytes());
+        let k = if self.kind == ReprKind::Dense {
+            self.dim
+        } else {
+            self.idx.len()
+        };
+        b.extend_from_slice(&(k as u32).to_le_bytes());
+        b.extend_from_slice(&self.base_version.to_le_bytes());
+        if self.kind != ReprKind::Dense {
+            for &i in &self.idx {
+                b.extend_from_slice(&i.to_le_bytes());
+            }
+        }
+        match &self.vals {
+            Vals::F32(v) => {
+                for &x in v {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Vals::Quantized(q) => {
+                debug_assert_eq!(q.chunk, QCHUNK, "wire format fixes the quant chunk");
+                for &(lo, step) in &q.scales {
+                    b.extend_from_slice(&lo.to_le_bytes());
+                    b.extend_from_slice(&step.to_le_bytes());
+                }
+                b.extend_from_slice(&q.codes);
+            }
+        }
+        debug_assert_eq!(b.len() as u64, self.wire_bytes());
+        Frame { bytes: b }
+    }
+
+    /// Recover the dense vector this repr describes. `base` is required
+    /// for (and only used by) `Patch` reprs.
+    pub fn decode(&self, base: Option<&[f32]>) -> Result<Vec<f32>> {
+        let vals = self.vals.to_f32();
+        match self.kind {
+            ReprKind::Dense => {
+                anyhow::ensure!(vals.len() == self.dim, "dense repr with {} of {} values", vals.len(), self.dim);
+                Ok(vals)
+            }
+            ReprKind::Sparse => {
+                let mut out = vec![0.0f32; self.dim];
+                for (&i, &v) in self.idx.iter().zip(&vals) {
+                    out[i as usize] = v;
+                }
+                Ok(out)
+            }
+            ReprKind::Patch => {
+                let base = base.ok_or_else(|| {
+                    anyhow::anyhow!("patch repr (base version {}) needs the base model", self.base_version)
+                })?;
+                anyhow::ensure!(base.len() == self.dim, "base dim {} != repr dim {}", base.len(), self.dim);
+                let mut out = base.to_vec();
+                for (&i, &v) in self.idx.iter().zip(&vals) {
+                    out[i as usize] = v;
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- frame
+
+/// A serialized wire message: self-describing 24-byte header + payload.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub bytes: Vec<u8>,
+}
+
+impl Frame {
+    pub fn wire_bytes(&self) -> u64 {
+        self.bytes.len() as u64
+    }
+
+    pub fn header(&self) -> Result<FrameHeader> {
+        FrameHeader::parse(&self.bytes)
+    }
+
+    /// Decode back to the dense vector (`base` for delta frames).
+    pub fn decode(&self, base: Option<&[f32]>) -> Result<Vec<f32>> {
+        decode_frame(&self.bytes, base)
+    }
+}
+
+/// Parsed frame header.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameHeader {
+    /// Payload is an overwrite patch vs `base_version`.
+    pub delta: bool,
+    /// Payload is additive sparse (zeros elsewhere).
+    pub sparse: bool,
+    /// 0 = raw f32 values.
+    pub quant_bits: u8,
+    /// Decoded dimensionality.
+    pub dim: usize,
+    /// Coordinates on the wire (== `dim` for dense frames).
+    pub k: usize,
+    /// Delta base version (0 when `!delta`).
+    pub base_version: u64,
+}
+
+fn rd_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+fn rd_f32(b: &[u8], off: usize) -> f32 {
+    f32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+impl FrameHeader {
+    pub fn parse(bytes: &[u8]) -> Result<FrameHeader> {
+        anyhow::ensure!(
+            bytes.len() >= HEADER_BYTES as usize,
+            "frame shorter than its header: {} bytes",
+            bytes.len()
+        );
+        let magic = rd_u32(bytes, 0);
+        anyhow::ensure!(magic == MAGIC, "bad frame magic {magic:#010x}");
+        anyhow::ensure!(bytes[4] == WIRE_VERSION, "unsupported wire version {}", bytes[4]);
+        let flags = bytes[5];
+        let delta = flags & FLAG_DELTA != 0;
+        let sparse = flags & FLAG_SPARSE != 0;
+        anyhow::ensure!(!(delta && sparse), "frame flags {flags:#04x}: delta and sparse are exclusive");
+        let quant = flags & FLAG_QUANT != 0;
+        let bits = bytes[6];
+        anyhow::ensure!(
+            quant == (bits > 0) && bits <= 8,
+            "inconsistent quant bits {bits} for flags {flags:#04x}"
+        );
+        let dim = rd_u32(bytes, 8) as usize;
+        let k = rd_u32(bytes, 12) as usize;
+        anyhow::ensure!(k <= dim, "frame k {k} exceeds dim {dim}");
+        anyhow::ensure!(delta || sparse || k == dim, "dense frame with k {k} != dim {dim}");
+        let base_version = u64::from_le_bytes([
+            bytes[16], bytes[17], bytes[18], bytes[19], bytes[20], bytes[21], bytes[22], bytes[23],
+        ]);
+        anyhow::ensure!(
+            delta == (base_version != 0),
+            "base version {base_version} inconsistent with flags {flags:#04x}"
+        );
+        Ok(FrameHeader {
+            delta,
+            sparse,
+            quant_bits: bits,
+            dim,
+            k,
+            base_version,
+        })
+    }
+
+    /// The exact frame length this header implies — the same formula as
+    /// [`SizePlan::wire_bytes`] and [`Repr::wire_bytes`].
+    pub fn expect_bytes(&self) -> u64 {
+        let idx = if self.delta || self.sparse { 4 * self.k as u64 } else { 0 };
+        let vals = if self.quant_bits > 0 {
+            quantized_value_bytes(self.k, self.quant_bits)
+        } else {
+            4 * self.k as u64
+        };
+        HEADER_BYTES + idx + vals
+    }
+}
+
+/// Decode a serialized frame back to its dense vector. Frames are
+/// self-describing: no pipeline object is needed, only the base model
+/// for delta frames (caller matches [`FrameHeader::base_version`]).
+pub fn decode_frame(bytes: &[u8], base: Option<&[f32]>) -> Result<Vec<f32>> {
+    let h = FrameHeader::parse(bytes)?;
+    anyhow::ensure!(
+        bytes.len() as u64 == h.expect_bytes(),
+        "frame length {} != header-implied {}",
+        bytes.len(),
+        h.expect_bytes()
+    );
+    let mut off = HEADER_BYTES as usize;
+    let mut idx: Vec<u32> = Vec::new();
+    if h.delta || h.sparse {
+        idx.reserve(h.k);
+        for i in 0..h.k {
+            let v = rd_u32(bytes, off + 4 * i);
+            anyhow::ensure!((v as usize) < h.dim, "frame index {v} out of range for dim {}", h.dim);
+            idx.push(v);
+        }
+        off += 4 * h.k;
+    }
+    let vals: Vec<f32> = if h.quant_bits > 0 {
+        let n_chunks = (h.k + QCHUNK - 1) / QCHUNK;
+        let mut scales = Vec::with_capacity(n_chunks);
+        for c in 0..n_chunks {
+            scales.push((rd_f32(bytes, off + 8 * c), rd_f32(bytes, off + 8 * c + 4)));
+        }
+        off += 8 * n_chunks;
+        dequantize(&QuantizedUpdate {
+            dim: h.k,
+            bits: h.quant_bits,
+            chunk: QCHUNK,
+            scales,
+            codes: bytes[off..].to_vec(),
+        })
+    } else {
+        (0..h.k).map(|i| rd_f32(bytes, off + 4 * i)).collect()
+    };
+    if h.delta {
+        let base = base.ok_or_else(|| {
+            anyhow::anyhow!("delta frame (base version {}) needs the base model", h.base_version)
+        })?;
+        anyhow::ensure!(base.len() == h.dim, "base dim {} != frame dim {}", base.len(), h.dim);
+        let mut out = base.to_vec();
+        for (&i, &v) in idx.iter().zip(&vals) {
+            out[i as usize] = v;
+        }
+        Ok(out)
+    } else if h.sparse {
+        let mut out = vec![0.0f32; h.dim];
+        for (&i, &v) in idx.iter().zip(&vals) {
+            out[i as usize] = v;
+        }
+        Ok(out)
+    } else {
+        Ok(vals)
+    }
+}
+
+// ------------------------------------------------------------ size plan
+
+/// Wire-size plan a pipeline folds through its stages (one
+/// [`Codec::plan`] call per stage) to price a payload before encoding.
+#[derive(Debug, Clone, Copy)]
+pub struct SizePlan {
+    pub dim: usize,
+    /// Coordinates on the wire after the stages so far.
+    pub coords: usize,
+    /// Whether indices accompany the values.
+    pub sparse: bool,
+    /// 0 = raw f32 values.
+    pub quant_bits: u8,
+}
+
+impl SizePlan {
+    pub fn dense(dim: usize) -> SizePlan {
+        SizePlan {
+            dim,
+            coords: dim,
+            sparse: false,
+            quant_bits: 0,
+        }
+    }
+
+    /// Exact frame length the plan implies — the same formula
+    /// [`Repr::wire_bytes`] and [`FrameHeader::expect_bytes`] use.
+    pub fn wire_bytes(&self) -> u64 {
+        let idx = if self.sparse { 4 * self.coords as u64 } else { 0 };
+        let vals = if self.quant_bits > 0 {
+            quantized_value_bytes(self.coords, self.quant_bits)
+        } else {
+            4 * self.coords as u64
+        };
+        HEADER_BYTES + idx + vals
+    }
+}
+
+// ---------------------------------------------------------- codec trait
+
+/// Encode-time context: the delta base (version + model) for `delta`
+/// pipelines, and the stochastic-rounding stream for `q<b>` stages.
+pub struct EncodeCtx<'a> {
+    pub base: Option<(u64, &'a [f32])>,
+    pub rng: &'a mut Rng,
+}
+
+/// One registry-named stage of a codec [`Pipeline`].
+///
+/// Stages transform the in-flight [`Repr`] at encode time and fold a
+/// [`SizePlan`] for pre-encode pricing. Decoding needs no trait method:
+/// frames are self-describing, and [`decode_frame`] inverts any stage
+/// composition from the header alone.
+pub trait Codec: Send + Sync {
+    /// The stage's label exactly as written in a pipeline spec.
+    fn label(&self) -> String;
+
+    /// Transform the representation at encode time.
+    fn encode(&self, repr: Repr, ctx: &mut EncodeCtx<'_>) -> Result<Repr>;
+
+    /// Fold the wire-size plan. `delta_coords` carries the pre-counted
+    /// patch size for the `delta` stage (data-dependent, so the caller
+    /// counts it; `None` plans a non-delta pipeline).
+    fn plan(&self, plan: SizePlan, delta_coords: Option<usize>) -> SizePlan;
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StageKind {
+    Dense,
+    Delta,
+    TopK,
+    Quant,
+}
+
+/// `dense` — explicit identity: the full f32 vector in a frame.
+struct DenseCodec;
+
+impl Codec for DenseCodec {
+    fn label(&self) -> String {
+        "dense".into()
+    }
+
+    fn encode(&self, repr: Repr, _ctx: &mut EncodeCtx<'_>) -> Result<Repr> {
+        Ok(repr)
+    }
+
+    fn plan(&self, plan: SizePlan, _delta_coords: Option<usize>) -> SizePlan {
+        plan
+    }
+}
+
+/// `delta` — overwrite patch vs the receiver's acked base version: ships
+/// only coordinates whose bit patterns differ, so reconstruction is
+/// bit-exact and downlink bytes scale with round-to-round change.
+struct DeltaCodec;
+
+impl Codec for DeltaCodec {
+    fn label(&self) -> String {
+        "delta".into()
+    }
+
+    fn encode(&self, repr: Repr, ctx: &mut EncodeCtx<'_>) -> Result<Repr> {
+        anyhow::ensure!(repr.kind == ReprKind::Dense, "delta must be the first stage");
+        let (version, base) = ctx
+            .base
+            .ok_or_else(|| anyhow::anyhow!("delta stage needs a base model version"))?;
+        anyhow::ensure!(version != 0, "delta base version must be nonzero");
+        anyhow::ensure!(
+            base.len() == repr.dim,
+            "delta base dim {} != payload dim {}",
+            base.len(),
+            repr.dim
+        );
+        let x = match &repr.vals {
+            Vals::F32(v) => v,
+            Vals::Quantized(_) => anyhow::bail!("delta cannot follow quantization"),
+        };
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        for (i, (&a, &b)) in x.iter().zip(base.iter()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                idx.push(i as u32);
+                vals.push(a);
+            }
+        }
+        Ok(Repr {
+            dim: repr.dim,
+            kind: ReprKind::Patch,
+            idx,
+            vals: Vals::F32(vals),
+            base_version: version,
+        })
+    }
+
+    fn plan(&self, mut plan: SizePlan, delta_coords: Option<usize>) -> SizePlan {
+        plan.coords = delta_coords.expect("planning a delta pipeline needs the counted patch size");
+        plan.sparse = true;
+        plan
+    }
+}
+
+/// `topk:<count|frac>` argument.
+#[derive(Debug, Clone, Copy)]
+pub enum TopKSpec {
+    Count(usize),
+    /// Fraction of the decoded dimensionality.
+    Frac(f64),
+}
+
+impl TopKSpec {
+    /// Kept-coordinate budget for a `dim`-vector (always ≥ 1, ≤ dim).
+    pub fn k(&self, dim: usize) -> usize {
+        let raw = match *self {
+            TopKSpec::Count(k) => k,
+            TopKSpec::Frac(f) => (dim as f64 * f).ceil() as usize,
+        };
+        raw.max(1).min(dim.max(1))
+    }
+}
+
+/// `topk:<k|f>` — magnitude sparsification: on a dense update, keep the
+/// k largest-|coordinate|s; on a delta patch, keep the k
+/// largest-|change| entries.
+struct TopKCodec {
+    spec: TopKSpec,
+}
+
+impl Codec for TopKCodec {
+    fn label(&self) -> String {
+        match self.spec {
+            TopKSpec::Count(k) => format!("topk:{k}"),
+            TopKSpec::Frac(f) => format!("topk:{f}"),
+        }
+    }
+
+    fn encode(&self, repr: Repr, ctx: &mut EncodeCtx<'_>) -> Result<Repr> {
+        match repr.kind {
+            ReprKind::Dense => {
+                let x = match &repr.vals {
+                    Vals::F32(v) => v,
+                    Vals::Quantized(_) => anyhow::bail!("topk cannot follow quantization"),
+                };
+                let s = crate::compression::top_k(x, self.spec.k(repr.dim));
+                Ok(Repr {
+                    dim: repr.dim,
+                    kind: ReprKind::Sparse,
+                    idx: s.idx,
+                    vals: Vals::F32(s.val),
+                    base_version: 0,
+                })
+            }
+            ReprKind::Patch => {
+                let vals = match &repr.vals {
+                    Vals::F32(v) => v,
+                    Vals::Quantized(_) => anyhow::bail!("topk cannot follow quantization"),
+                };
+                let (_, base) = ctx
+                    .base
+                    .ok_or_else(|| anyhow::anyhow!("topk over a delta patch needs the base model"))?;
+                let k = self.spec.k(repr.dim).min(repr.idx.len());
+                if k == repr.idx.len() {
+                    return Ok(repr);
+                }
+                // rank patch entries by |new - base| (the change magnitude)
+                let change = |e: usize| (vals[e] - base[repr.idx[e] as usize]).abs();
+                let mut order: Vec<usize> = (0..repr.idx.len()).collect();
+                order.select_nth_unstable_by(k - 1, |&a, &b| {
+                    change(b).partial_cmp(&change(a)).expect("non-finite change")
+                });
+                let mut keep = order[..k].to_vec();
+                keep.sort_unstable();
+                Ok(Repr {
+                    dim: repr.dim,
+                    kind: ReprKind::Patch,
+                    idx: keep.iter().map(|&e| repr.idx[e]).collect(),
+                    vals: Vals::F32(keep.iter().map(|&e| vals[e]).collect()),
+                    base_version: repr.base_version,
+                })
+            }
+            ReprKind::Sparse => anyhow::bail!("at most one topk stage"),
+        }
+    }
+
+    fn plan(&self, mut plan: SizePlan, _delta_coords: Option<usize>) -> SizePlan {
+        plan.coords = self.spec.k(plan.dim).min(plan.coords);
+        plan.sparse = true;
+        plan
+    }
+}
+
+/// `q<bits>` — unbiased stochastic uniform quantization of the value
+/// payload (whatever the earlier stages left of it).
+struct QuantCodec {
+    bits: u8,
+}
+
+impl Codec for QuantCodec {
+    fn label(&self) -> String {
+        format!("q{}", self.bits)
+    }
+
+    fn encode(&self, repr: Repr, ctx: &mut EncodeCtx<'_>) -> Result<Repr> {
+        let q = match &repr.vals {
+            Vals::F32(v) => quantize(v, self.bits, ctx.rng),
+            Vals::Quantized(_) => anyhow::bail!("at most one quantize stage"),
+        };
+        Ok(Repr {
+            vals: Vals::Quantized(q),
+            ..repr
+        })
+    }
+
+    fn plan(&self, mut plan: SizePlan, _delta_coords: Option<usize>) -> SizePlan {
+        plan.quant_bits = self.bits;
+        plan
+    }
+}
+
+// ------------------------------------------------------------- registry
+
+/// One row of the codec registry: the stage's name, argument syntax, and
+/// a parser that claims matching spec tokens.
+pub struct CodecEntry {
+    pub name: &'static str,
+    pub syntax: &'static str,
+    pub help: &'static str,
+    parse: fn(&str) -> Result<Option<(Arc<dyn Codec>, StageKind)>>,
+}
+
+fn parse_dense(tok: &str) -> Result<Option<(Arc<dyn Codec>, StageKind)>> {
+    Ok((tok == "dense").then(|| (Arc::new(DenseCodec) as Arc<dyn Codec>, StageKind::Dense)))
+}
+
+fn parse_delta(tok: &str) -> Result<Option<(Arc<dyn Codec>, StageKind)>> {
+    Ok((tok == "delta").then(|| (Arc::new(DeltaCodec) as Arc<dyn Codec>, StageKind::Delta)))
+}
+
+fn parse_topk(tok: &str) -> Result<Option<(Arc<dyn Codec>, StageKind)>> {
+    let Some(arg) = tok.strip_prefix("topk:") else {
+        return Ok(None);
+    };
+    let v: f64 = arg
+        .parse()
+        .map_err(|_| anyhow::anyhow!("topk: bad argument {arg:?}"))?;
+    anyhow::ensure!(v.is_finite() && v > 0.0, "topk: argument must be positive, got {arg}");
+    let spec = if v < 1.0 {
+        TopKSpec::Frac(v)
+    } else {
+        anyhow::ensure!(v.fract() == 0.0, "topk: count must be an integer, got {arg}");
+        TopKSpec::Count(v as usize)
+    };
+    Ok(Some((Arc::new(TopKCodec { spec }) as Arc<dyn Codec>, StageKind::TopK)))
+}
+
+fn parse_quant(tok: &str) -> Result<Option<(Arc<dyn Codec>, StageKind)>> {
+    let arg = match tok.strip_prefix("quant:") {
+        Some(a) => a,
+        None => match tok.strip_prefix('q') {
+            Some(rest) if !rest.is_empty() && rest.chars().all(|c| c.is_ascii_digit()) => rest,
+            _ => return Ok(None),
+        },
+    };
+    let bits: u8 = arg
+        .parse()
+        .map_err(|_| anyhow::anyhow!("quant: bad bit count {arg:?}"))?;
+    anyhow::ensure!((1..=8).contains(&bits), "quant: bits must be in 1..=8, got {bits}");
+    Ok(Some((Arc::new(QuantCodec { bits }) as Arc<dyn Codec>, StageKind::Quant)))
+}
+
+/// The stage registry `--codec` specs resolve against.
+pub static REGISTRY: &[CodecEntry] = &[
+    CodecEntry {
+        name: "dense",
+        syntax: "dense",
+        help: "identity: full f32 payload in a frame",
+        parse: parse_dense,
+    },
+    CodecEntry {
+        name: "delta",
+        syntax: "delta",
+        help: "overwrite patch vs the receiver's acked model version (downlink)",
+        parse: parse_delta,
+    },
+    CodecEntry {
+        name: "topk",
+        syntax: "topk:<count|frac>",
+        help: "keep the k largest-magnitude coordinates (count, or fraction of dim)",
+        parse: parse_topk,
+    },
+    CodecEntry {
+        name: "q",
+        syntax: "q<bits>",
+        help: "stochastic uniform quantization to 1..=8 bits",
+        parse: parse_quant,
+    },
+];
+
+/// Human-readable registry listing for CLI help and parse errors.
+pub fn registry_help() -> String {
+    REGISTRY
+        .iter()
+        .map(|e| format!("  {:<18} {}", e.syntax, e.help))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn parse_stage(token: &str) -> Result<(Arc<dyn Codec>, StageKind)> {
+    for entry in REGISTRY {
+        if let Some(hit) = (entry.parse)(token)? {
+            return Ok(hit);
+        }
+    }
+    anyhow::bail!("unknown codec stage {token:?}; known stages:\n{}", registry_help())
+}
+
+// ------------------------------------------------------------- pipeline
+
+/// A composable codec pipeline: zero or more registry stages applied in
+/// order at encode time. Parsed from a `|`-separated spec
+/// (`"delta|topk:1000|q8"`); `"dense"` is the explicit identity.
+#[derive(Clone)]
+pub struct Pipeline {
+    stages: Vec<(StageKind, Arc<dyn Codec>)>,
+    spec: String,
+    has_delta: bool,
+    has_topk: bool,
+    has_quant: bool,
+}
+
+impl fmt::Debug for Pipeline {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Pipeline({})", self.spec)
+    }
+}
+
+impl fmt::Display for Pipeline {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.spec)
+    }
+}
+
+impl Pipeline {
+    /// Parse a `|`-separated pipeline spec. Stage order is enforced:
+    /// `delta` first, at most one `topk` (before any `q<b>`), at most
+    /// one `q<b>`; `dense` only stands alone.
+    pub fn parse(spec: &str) -> Result<Pipeline> {
+        let tokens: Vec<&str> = spec.split('|').map(str::trim).collect();
+        let mut stages: Vec<(StageKind, Arc<dyn Codec>)> = Vec::new();
+        let (mut has_delta, mut has_topk, mut has_quant) = (false, false, false);
+        for token in &tokens {
+            anyhow::ensure!(!token.is_empty(), "empty stage in codec spec {spec:?}");
+            let (stage, kind) = parse_stage(token)?;
+            match kind {
+                StageKind::Dense => {
+                    anyhow::ensure!(
+                        tokens.len() == 1,
+                        "`dense` is the identity pipeline and cannot compose ({spec:?})"
+                    );
+                }
+                StageKind::Delta => {
+                    anyhow::ensure!(
+                        stages.is_empty() && !has_delta,
+                        "`delta` must be the first stage ({spec:?})"
+                    );
+                    has_delta = true;
+                    stages.push((kind, stage));
+                }
+                StageKind::TopK => {
+                    anyhow::ensure!(!has_topk, "at most one `topk` stage ({spec:?})");
+                    anyhow::ensure!(!has_quant, "`topk` must precede `q<bits>` ({spec:?})");
+                    has_topk = true;
+                    stages.push((kind, stage));
+                }
+                StageKind::Quant => {
+                    anyhow::ensure!(!has_quant, "at most one `q<bits>` stage ({spec:?})");
+                    has_quant = true;
+                    stages.push((kind, stage));
+                }
+            }
+        }
+        let spec = if stages.is_empty() {
+            "dense".to_string()
+        } else {
+            stages.iter().map(|(_, s)| s.label()).collect::<Vec<_>>().join("|")
+        };
+        Ok(Pipeline {
+            stages,
+            spec,
+            has_delta,
+            has_topk,
+            has_quant,
+        })
+    }
+
+    /// The explicit identity pipeline (`"dense"`).
+    pub fn identity() -> Pipeline {
+        Pipeline::parse("dense").expect("identity pipeline")
+    }
+
+    /// Canonical spec string (stage labels joined with `|`).
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    pub fn has_delta(&self) -> bool {
+        self.has_delta
+    }
+
+    pub fn has_topk(&self) -> bool {
+        self.has_topk
+    }
+
+    /// True when `decode(encode(x))` reproduces `x` bit-for-bit for every
+    /// input (no lossy stage).
+    pub fn lossless(&self) -> bool {
+        !self.has_topk && !self.has_quant
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// In fallback mode the broadcast must stay *dense*: `delta` has no
+    /// base to patch against, and `topk` without a base would zero the
+    /// unsent coordinates of a full model. Only value-space stages
+    /// (`q<b>`) still apply.
+    fn fallback_keeps(kind: StageKind) -> bool {
+        !matches!(kind, StageKind::Delta | StageKind::TopK)
+    }
+
+    fn run_stages(
+        &self,
+        x: &[f32],
+        base: Option<(u64, &[f32])>,
+        rng: &mut Rng,
+        fallback: bool,
+    ) -> Result<Repr> {
+        let mut ctx = EncodeCtx { base, rng };
+        let mut repr = Repr::dense(x);
+        for (kind, s) in &self.stages {
+            if fallback && !Self::fallback_keeps(*kind) {
+                continue;
+            }
+            repr = s.encode(repr, &mut ctx)?;
+        }
+        Ok(repr)
+    }
+
+    /// Run the stages over `x` and return the final in-flight repr
+    /// (serialize with [`Repr::to_frame`]; the server's hot path uses the
+    /// repr directly and only prices the frame).
+    pub fn run(&self, x: &[f32], base: Option<(u64, &[f32])>, rng: &mut Rng) -> Result<Repr> {
+        self.run_stages(x, base, rng, false)
+    }
+
+    /// As [`run`](Self::run) in dense-fallback mode — the broadcast when
+    /// the receiver's acked version aged out. Structural stages (`delta`,
+    /// `topk`) are skipped so every coordinate ships; `q<b>` still
+    /// applies.
+    pub fn run_fallback(&self, x: &[f32], rng: &mut Rng) -> Result<Repr> {
+        self.run_stages(x, None, rng, true)
+    }
+
+    /// Encode `x` into a serialized frame.
+    pub fn encode(&self, x: &[f32], base: Option<(u64, &[f32])>, rng: &mut Rng) -> Result<Frame> {
+        Ok(self.run(x, base, rng)?.to_frame())
+    }
+
+    fn fold_plan(&self, dim: usize, delta_coords: Option<usize>, fallback: bool) -> SizePlan {
+        let mut p = SizePlan::dense(dim);
+        for (kind, s) in &self.stages {
+            if fallback && !Self::fallback_keeps(*kind) {
+                continue;
+            }
+            p = s.plan(p, delta_coords);
+        }
+        p
+    }
+
+    /// Deterministic wire size for any `dim`-vector. Only valid for
+    /// non-delta pipelines (a delta frame's size depends on the payload —
+    /// use [`measure`](Self::measure)). The transport prices uplinks with
+    /// this *before* any client trains; the later encode of the real
+    /// payload produces exactly this many bytes.
+    pub fn plan_bytes(&self, dim: usize) -> u64 {
+        assert!(
+            !self.has_delta,
+            "plan_bytes on delta pipeline {}: size is payload-dependent, use measure()",
+            self.spec
+        );
+        self.fold_plan(dim, None, false).wire_bytes()
+    }
+
+    /// Wire size of the dense fallback frame
+    /// ([`run_fallback`](Self::run_fallback)'s output).
+    pub fn fallback_bytes(&self, dim: usize) -> u64 {
+        self.fold_plan(dim, None, true).wire_bytes()
+    }
+
+    /// Exact wire size of encoding `x` (vs `base` for delta pipelines)
+    /// without materializing the frame.
+    pub fn measure(&self, x: &[f32], base: Option<&[f32]>) -> Result<u64> {
+        let delta_coords = if self.has_delta {
+            let base = base
+                .ok_or_else(|| anyhow::anyhow!("measuring a delta pipeline needs the base model"))?;
+            anyhow::ensure!(
+                base.len() == x.len(),
+                "base dim {} != payload dim {}",
+                base.len(),
+                x.len()
+            );
+            Some(
+                x.iter()
+                    .zip(base.iter())
+                    .filter(|(a, b)| a.to_bits() != b.to_bits())
+                    .count(),
+            )
+        } else {
+            None
+        };
+        Ok(self.fold_plan(x.len(), delta_coords, false).wire_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rngs() -> (Rng, Rng) {
+        (Rng::new(7), Rng::new(7))
+    }
+
+    fn gauss(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.gauss_f32()).collect()
+    }
+
+    #[test]
+    fn parse_canonicalizes_and_enforces_order() {
+        assert_eq!(Pipeline::parse("dense").unwrap().spec(), "dense");
+        assert_eq!(Pipeline::parse("topk:1000|q8").unwrap().spec(), "topk:1000|q8");
+        assert_eq!(Pipeline::parse("quant:4").unwrap().spec(), "q4");
+        assert_eq!(Pipeline::parse(" delta | topk:0.01 ").unwrap().spec(), "delta|topk:0.01");
+        assert!(Pipeline::parse("q8|topk:10").is_err(), "topk after quant");
+        assert!(Pipeline::parse("topk:10|delta").is_err(), "delta not first");
+        assert!(Pipeline::parse("q8|q4").is_err(), "two quant stages");
+        assert!(Pipeline::parse("topk:0").is_err());
+        assert!(Pipeline::parse("topk:1.5").is_err());
+        assert!(Pipeline::parse("q0").is_err());
+        assert!(Pipeline::parse("q9").is_err());
+        assert!(Pipeline::parse("gzip").is_err());
+        assert!(Pipeline::parse("dense|q8").is_err(), "dense composes");
+        assert!(Pipeline::parse("").is_err());
+        assert!(Pipeline::identity().is_identity());
+        assert!(Pipeline::parse("delta").unwrap().lossless());
+        assert!(!Pipeline::parse("delta|q8").unwrap().lossless());
+    }
+
+    #[test]
+    fn frame_sizes_agree_across_all_three_views() {
+        // every non-delta registry pipeline: plan == repr == frame length
+        let x = gauss(5000, 1);
+        for spec in ["dense", "q8", "q1", "topk:100", "topk:0.05", "topk:100|q4"] {
+            let p = Pipeline::parse(spec).unwrap();
+            let (mut r1, _) = rngs();
+            let repr = p.run(&x, None, &mut r1).unwrap();
+            let frame = repr.to_frame();
+            assert_eq!(repr.wire_bytes(), frame.wire_bytes(), "{spec}");
+            assert_eq!(p.plan_bytes(x.len()), frame.wire_bytes(), "{spec}");
+            assert_eq!(p.measure(&x, None).unwrap(), frame.wire_bytes(), "{spec}");
+            assert_eq!(frame.header().unwrap().expect_bytes(), frame.wire_bytes(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn delta_pipeline_sizes_agree_and_scale_with_change() {
+        let base = gauss(4000, 2);
+        let mut x = base.clone();
+        for i in (0..x.len()).step_by(40) {
+            x[i] += 1.0; // 100 changed coords
+        }
+        for spec in ["delta", "delta|q8", "delta|topk:50", "delta|topk:50|q4"] {
+            let p = Pipeline::parse(spec).unwrap();
+            let mut rng = Rng::new(3);
+            let frame = p.encode(&x, Some((9, &base)), &mut rng).unwrap();
+            assert_eq!(p.measure(&x, Some(&base)).unwrap(), frame.wire_bytes(), "{spec}");
+            assert!(
+                frame.wire_bytes() < 4 * x.len() as u64,
+                "{spec}: patch no smaller than dense"
+            );
+            assert_eq!(frame.header().unwrap().base_version, 9);
+        }
+        // pure delta: bytes track the number of changed coordinates
+        let p = Pipeline::parse("delta").unwrap();
+        assert_eq!(
+            p.measure(&x, Some(&base)).unwrap(),
+            HEADER_BYTES + 100 * 8
+        );
+        assert_eq!(p.measure(&base, Some(&base)).unwrap(), HEADER_BYTES);
+    }
+
+    #[test]
+    fn lossless_pipelines_roundtrip_bit_for_bit() {
+        let base = gauss(3000, 4);
+        let mut x = base.clone();
+        x[7] = 12.5;
+        x[2999] = -3.25;
+        let p = Pipeline::parse("delta").unwrap();
+        let mut rng = Rng::new(5);
+        let frame = p.encode(&x, Some((3, &base)), &mut rng).unwrap();
+        let back = frame.decode(Some(&base)).unwrap();
+        assert_eq!(back.len(), x.len());
+        for (a, b) in x.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // dense identity likewise
+        let d = Pipeline::identity();
+        let back = d.encode(&x, None, &mut rng).unwrap().decode(None).unwrap();
+        for (a, b) in x.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn lossy_pipelines_bounded_per_delivered_coordinate() {
+        let x = gauss(6000, 6);
+        let (lo, hi) = x
+            .iter()
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| (l.min(v), h.max(v)));
+        for (spec, bits) in [("q8", 8u8), ("topk:200", 0), ("topk:200|q8", 8)] {
+            let p = Pipeline::parse(spec).unwrap();
+            let mut rng = Rng::new(8);
+            let frame = p.encode(&x, None, &mut rng).unwrap();
+            let back = frame.decode(None).unwrap();
+            let bound = if bits > 0 {
+                (hi - lo) / ((1u32 << bits) - 1) as f32 * 1.01
+            } else {
+                0.0
+            };
+            for (i, (&a, &b)) in x.iter().zip(&back).enumerate() {
+                // delivered coords are within the quantization bound;
+                // sparsified-away coords decode to exactly zero
+                assert!(
+                    (a - b).abs() <= bound || b == 0.0,
+                    "{spec} coord {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quant_after_topk_quantizes_only_kept_values() {
+        let x = gauss(10_000, 9);
+        let p = Pipeline::parse("topk:100|q8").unwrap();
+        // 100 idx (400B) + 100 codes + 1 chunk scale (8B) + header
+        assert_eq!(p.plan_bytes(x.len()), HEADER_BYTES + 400 + 100 + 8);
+    }
+
+    #[test]
+    fn fallback_broadcast_is_dense_even_for_structural_pipelines() {
+        // the dense fallback must ship every coordinate: delta has no
+        // base and topk would zero what it drops — only q<b> survives
+        let x = gauss(3000, 12);
+        for spec in ["delta", "delta|topk:50", "delta|topk:50|q8"] {
+            let p = Pipeline::parse(spec).unwrap();
+            let mut rng = Rng::new(13);
+            let repr = p.run_fallback(&x, &mut rng).unwrap();
+            assert_eq!(repr.kind, ReprKind::Dense, "{spec}");
+            assert_eq!(repr.to_frame().wire_bytes(), p.fallback_bytes(x.len()), "{spec}");
+            let back = repr.to_frame().decode(None).unwrap();
+            let bound = if spec.ends_with("q8") { 1.0 } else { 0.0 };
+            for (a, b) in x.iter().zip(&back) {
+                assert!((a - b).abs() <= bound, "{spec}: fallback dropped a coordinate");
+            }
+        }
+        // quant still applies in fallback mode
+        let p = Pipeline::parse("delta|q4").unwrap();
+        assert!(p.fallback_bytes(3000) < 4 * 3000, "fallback lost its quant stage");
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_frames() {
+        let x = gauss(100, 10);
+        let p = Pipeline::parse("q8").unwrap();
+        let mut rng = Rng::new(11);
+        let mut frame = p.encode(&x, None, &mut rng).unwrap();
+        assert!(decode_frame(&frame.bytes[..10], None).is_err(), "truncated header");
+        assert!(decode_frame(&frame.bytes[..30], None).is_err(), "truncated payload");
+        frame.bytes[0] ^= 0xFF;
+        assert!(decode_frame(&frame.bytes, None).is_err(), "bad magic");
+        // delta frame without a base
+        let q = Pipeline::parse("delta").unwrap();
+        let f = q.encode(&x, Some((1, &x)), &mut rng).unwrap();
+        assert!(f.decode(None).is_err());
+    }
+
+    #[test]
+    fn registry_lists_every_stage() {
+        let help = registry_help();
+        for name in ["dense", "delta", "topk", "q<bits>"] {
+            assert!(help.contains(name), "{name} missing from:\n{help}");
+        }
+    }
+}

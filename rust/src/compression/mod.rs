@@ -1,10 +1,9 @@
-//! Update compression — the follow-up direction the paper's footnote 7
-//! cites (Konečný et al., "Federated Learning: Strategies for Improving
-//! Communication Efficiency"): clients upload *compressed* model deltas,
-//! trading accuracy-per-round for bytes-per-round.
+//! Compression primitives — the follow-up direction the paper's footnote
+//! 7 cites (Konečný et al., "Federated Learning: Strategies for
+//! Improving Communication Efficiency"): clients upload *compressed*
+//! model deltas, trading accuracy-per-round for bytes-per-round.
 //!
-//! Two composable schemes, both with exact byte accounting so the comm
-//! simulator reports true uplink savings:
+//! Two schemes, both with exact byte accounting:
 //!
 //! * [`top_k`] — magnitude sparsification: keep the k largest-|·|
 //!   coordinates (indices + values on the wire). With server-side
@@ -12,6 +11,11 @@
 //!   next round's delta, the standard fix for sparsification bias.
 //! * [`quantize`] — uniform stochastic quantization to b bits with
 //!   per-chunk scale (unbiased: E[deq(q(x))] = x).
+//!
+//! These are the *primitives*; composition, framing, and wire pricing
+//! live one layer up in [`comms::wire`](crate::comms::wire), where a
+//! registry-named codec pipeline (`topk:1000|q8`, `delta|q8`, …) chains
+//! them behind one `wire_bytes` source of truth (DESIGN.md §6).
 
 use crate::data::rng::Rng;
 
@@ -34,9 +38,16 @@ pub fn sparse_wire_bytes(k: usize) -> u64 {
 /// materializing it. Single source of truth with
 /// [`QuantizedUpdate::wire_bytes`].
 pub fn quantized_wire_bytes(dim: usize, bits: u8) -> u64 {
-    let codes = (dim * bits as usize + 7) / 8;
-    let scales = (dim + QCHUNK - 1) / QCHUNK;
-    (codes + scales * 8 + 16) as u64
+    quantized_value_bytes(dim, bits) + 16
+}
+
+/// Bare value-payload size of `n` quantized coordinates (packed `bits`
+/// codes + per-chunk scales), with no header — the frame layer in
+/// [`comms::wire`](crate::comms::wire) adds its own.
+pub fn quantized_value_bytes(n: usize, bits: u8) -> u64 {
+    let codes = (n * bits as usize + 7) / 8;
+    let scales = (n + QCHUNK - 1) / QCHUNK;
+    (codes + scales * 8) as u64
 }
 
 impl SparseUpdate {
@@ -106,6 +117,20 @@ impl ErrorFeedback {
         }
     }
 
+    /// Record `full - delivered` as the new residual — the general form
+    /// of [`record`](Self::record) for any lossy codec output (the
+    /// residual then also carries quantization error, not just the
+    /// sparsified-away mass).
+    pub fn record_dense(&mut self, full: &[f32], delivered: &[f32]) {
+        assert_eq!(full.len(), delivered.len());
+        if self.residual.len() != full.len() {
+            self.residual = vec![0.0; full.len()];
+        }
+        for ((r, f), d) in self.residual.iter_mut().zip(full).zip(delivered) {
+            *r = *f - *d;
+        }
+    }
+
     pub fn residual_norm(&self) -> f64 {
         crate::params::l2_norm(&self.residual)
     }
@@ -137,7 +162,9 @@ impl QuantizedUpdate {
     }
 }
 
-const QCHUNK: usize = 2048;
+/// Coordinates per quantization chunk (one `(min, step)` scale pair
+/// each). Fixed by the wire format: frames do not carry it.
+pub const QCHUNK: usize = 2048;
 
 /// Unbiased stochastic uniform quantization to `bits` (1..=8).
 pub fn quantize(update: &[f32], bits: u8, rng: &mut Rng) -> QuantizedUpdate {

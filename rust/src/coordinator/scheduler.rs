@@ -150,9 +150,15 @@ pub fn schedule_round(
 /// implementation behind both the training server and [`FleetSim`]: at
 /// equal seeds the two build the same fleet and select the same clients;
 /// the resulting plans coincide exactly when the duration inputs match
-/// too (uncompressed uplinks, uniform per-client step counts), and
-/// otherwise differ only through `up_bytes`/`steps_of`. Returns the
-/// online-pool size alongside the plan.
+/// too (uncompressed links, uniform per-client step counts), and
+/// otherwise differ only through `link_bytes`/`steps_of`.
+///
+/// `link_bytes(client) -> (down, up)` prices both link directions per
+/// dispatched client. The training server passes the transport layer's
+/// metering here, so the scheduler prices a transfer from the *same
+/// codec* that later encodes it — per-client delta downlinks included —
+/// and the estimate can never drift from the telemetry-reported bytes.
+/// Returns the online-pool size alongside the plan.
 #[allow(clippy::too_many_arguments)]
 pub fn plan_round(
     fleet: &Fleet,
@@ -161,8 +167,7 @@ pub fn plan_round(
     m: usize,
     overselect: f64,
     deadline_s: Option<f64>,
-    down_bytes: u64,
-    up_bytes: u64,
+    mut link_bytes: impl FnMut(usize) -> (u64, u64),
     steps_of: impl Fn(usize) -> f64,
 ) -> (usize, RoundPlan) {
     let online = fleet.online_set(round);
@@ -170,7 +175,10 @@ pub fn plan_round(
     let dispatched = sampler.sample_from(round, &online, n_sel);
     let durations: Vec<(usize, f64)> = dispatched
         .iter()
-        .map(|&c| (c, fleet.client_seconds(c, down_bytes, up_bytes, steps_of(c))))
+        .map(|&c| {
+            let (down, up) = link_bytes(c);
+            (c, fleet.client_seconds(c, down, up, steps_of(c)))
+        })
         .collect();
     (online.len(), schedule_round(m, deadline_s, &durations))
 }
@@ -251,6 +259,7 @@ impl FleetSim {
         self.round += 1;
         let round = self.round;
         let steps = self.steps_per_client;
+        let mb = self.model_bytes;
         let (online, plan) = plan_round(
             &self.fleet,
             &mut self.sampler,
@@ -258,8 +267,7 @@ impl FleetSim {
             self.m,
             self.cfg.overselect,
             self.cfg.deadline_s,
-            self.model_bytes,
-            self.model_bytes,
+            |_| (mb, mb),
             |_| steps,
         );
 

@@ -1,6 +1,8 @@
 //! Experiment harnesses: one driver per table/figure in the paper's
-//! evaluation (DESIGN.md §3 maps them). Shared here: scaled workload
-//! builders and run helpers.
+//! evaluation (DESIGN.md §3 maps them), plus [`table_comm`] — the codec
+//! sweep behind `fedavg comm` (the communication-efficiency framing the
+//! paper's footnote 7 points at). Shared here: scaled workload builders
+//! and run helpers.
 //!
 //! Every driver accepts `--scale` (default well below 1.0 — this testbed
 //! is a single CPU core; `--scale 1.0` is the paper-sized configuration)
@@ -12,6 +14,7 @@ pub mod table1;
 pub mod table2;
 pub mod table3;
 pub mod table4;
+pub mod table_comm;
 
 use crate::config::{FedConfig, Partition, ScaleProfile};
 use crate::data::rng::Rng;

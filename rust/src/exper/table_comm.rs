@@ -1,0 +1,150 @@
+//! `fedavg comm` — the communication-efficiency sweep: codec pipelines ×
+//! rounds-to-target-accuracy × wire bytes per round.
+//!
+//! This reproduces the paper's headline framing from the communication
+//! side: FedAvg already buys a 10–100× reduction in *rounds*; the codec
+//! pipelines (footnote 7's compressed-updates direction, Konečný et al.)
+//! multiply in a per-round byte reduction on top — sparsified/quantized
+//! uplinks and delta downlinks — while the table tracks what that costs
+//! in rounds to the accuracy target. Every row runs the same federated
+//! workload through `federated::run` with a different
+//! [`TransportConfig`]; bytes come from the transport's single metering
+//! path, so the table's numbers equal the telemetry CSVs under `runs/`.
+
+use crate::comms::transport::TransportConfig;
+use crate::comms::wire::registry_help;
+use crate::config::{BatchSize, FedConfig, Partition};
+use crate::federated::{self, ServerOptions};
+use crate::runtime::Engine;
+use crate::util::args::Args;
+use crate::Result;
+
+use super::{mnist_fed, print_table, shakespeare_fed, ExpOptions, COMMON_FLAGS};
+
+/// Default codec sweep: the legacy dense baseline, framed dense, then
+/// increasingly aggressive uplink pipelines.
+pub const DEFAULT_CODECS: &str = "legacy,dense,q8,topk:0.05,topk:0.01|q8";
+
+pub fn run(engine: &Engine, args: &Args) -> Result<()> {
+    args.check_known(
+        &[COMMON_FLAGS, &["model", "codecs", "down", "c", "e", "b", "partition"]].concat(),
+    )?;
+    let opts = ExpOptions::from_args(args)?;
+    let model = args.str_or("model", "mnist_2nn");
+    let codecs = args.str_or("codecs", DEFAULT_CODECS);
+    let down_spec = args.str_or("down", "delta");
+    let part = Partition::parse(&args.str_or("partition", "iid"))?;
+
+    let fed = match model.as_str() {
+        "mnist_2nn" | "mnist_cnn" => mnist_fed(opts.scale, part, opts.seed),
+        "shakespeare_lstm" => shakespeare_fed(opts.scale, part == Partition::Natural, opts.seed),
+        other => anyhow::bail!("comm: unsupported model {other} (mnist_2nn|mnist_cnn|shakespeare_lstm)"),
+    };
+    let cfg = FedConfig {
+        model: model.clone(),
+        c: args.f64_or("c", 0.1)?,
+        e: args.usize_or("e", 5)?,
+        b: BatchSize::parse(&args.str_or("b", "10"))?,
+        lr: args.f64_or("lr", 0.1)?,
+        rounds: opts.rounds,
+        target_accuracy: opts.target,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    println!(
+        "comm sweep: {} on {} ({} clients), downlink codec {:?}, codecs: {}\nregistry stages:\n{}",
+        cfg.label(),
+        fed.train.name,
+        fed.num_clients(),
+        down_spec,
+        codecs,
+        registry_help(),
+    );
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut baseline_per_round: Option<f64> = None;
+    for spec in codecs.split(',') {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            continue;
+        }
+        let (tcfg, label) = if spec == "legacy" {
+            (TransportConfig::default(), "legacy".to_string())
+        } else {
+            // parse() owns direction validation (delta is downlink-only,
+            // downlink topk needs a delta base, ...)
+            let down = (down_spec != "legacy").then_some(down_spec.as_str());
+            (TransportConfig::parse(Some(spec), down)?, spec.to_string())
+        };
+        let mut sopts = ServerOptions {
+            transport: tcfg,
+            ..opts.server_options()
+        };
+        sopts.telemetry = Some(crate::telemetry::RunWriter::create(
+            &opts.out_root,
+            &format!("comm-{label}"),
+        )?);
+        let res = federated::run(engine, &fed, &cfg, sopts)?;
+
+        let rounds = res.rounds_run.max(1);
+        let up_pr = res.comm.bytes_up as f64 / rounds as f64;
+        let down_pr = res.comm.bytes_down as f64 / rounds as f64;
+        let per_round = up_pr + down_pr;
+        let reduction = match baseline_per_round {
+            None => {
+                baseline_per_round = Some(per_round);
+                1.0
+            }
+            Some(base) => base / per_round.max(1.0),
+        };
+        let rtt = opts
+            .target
+            .and_then(|t| res.accuracy.rounds_to_target(t))
+            .map(|r| format!("{r:.0}"))
+            .unwrap_or_else(|| "-".into());
+        rows.push(vec![
+            label,
+            format!("{:.1}", up_pr / 1e3),
+            format!("{:.1}", down_pr / 1e3),
+            format!("{reduction:.1}x"),
+            rtt,
+            format!("{:.4}", res.final_accuracy()),
+            format!("{:.4}", res.comm.gigabytes()),
+        ]);
+    }
+    print_table(
+        &format!(
+            "Communication — codec sweep on {} (target {}, scale {})",
+            model,
+            opts.target.map(|t| format!("{:.0}%", t * 100.0)).unwrap_or_else(|| "none".into()),
+            opts.scale
+        ),
+        &["codec", "up KB/rd", "down KB/rd", "reduction", "rds-to-target", "final acc", "total GB"],
+        &rows,
+    );
+    println!(
+        "(uplink codec per row; downlink {} for all non-legacy rows — \
+         per-round details in {}/comm-*/curve.csv)",
+        down_spec, opts.out_root
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_sweep_specs_all_parse_as_uplinks() {
+        for spec in DEFAULT_CODECS.split(',') {
+            if spec == "legacy" {
+                continue;
+            }
+            // the same validation path run() uses, default downlink
+            let t = TransportConfig::parse(Some(spec), Some("delta")).unwrap();
+            assert!(t.active(), "{spec}");
+        }
+        // delta stays downlink-only
+        assert!(TransportConfig::parse(Some("delta"), None).is_err());
+    }
+}

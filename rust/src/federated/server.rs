@@ -16,13 +16,11 @@
 
 use std::sync::Arc;
 
-use crate::comms::{CommModel, CommSim, CommTotals};
-use crate::compression::{dequantize, quantize, top_k, ErrorFeedback};
+use crate::comms::{CommModel, CommSim, CommTotals, Transport, TransportConfig};
 use crate::config::FedConfig;
 use crate::coordinator::{
     plan_round, ClientJob, Fleet, FleetConfig, FleetTotals, ParallelExec, RoundPlan,
 };
-use crate::data::rng::Rng;
 use crate::data::Federated;
 use crate::federated::client::{local_update, updates_per_round, LocalResult, LocalSpec};
 use crate::federated::sampler::ClientSampler;
@@ -40,16 +38,6 @@ pub struct DpConfig {
     pub clip_norm: f64,
     /// Gaussian noise multiplier σ.
     pub sigma: f64,
-}
-
-/// Uplink compression knobs (Konečný et al. follow-up).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct CompressionConfig {
-    /// keep this fraction of coordinates by magnitude (with server-side
-    /// error feedback), e.g. 0.01.
-    pub top_k_frac: Option<f64>,
-    /// quantize kept values to this many bits (1..=8), stochastic.
-    pub quant_bits: Option<u8>,
 }
 
 /// Harness options orthogonal to the algorithm itself.
@@ -71,8 +59,10 @@ pub struct ServerOptions {
     /// aggregate via pairwise-mask secure aggregation (server never sees
     /// an individual update).
     pub secure_agg: bool,
-    /// compress client uplinks (exact byte accounting in `comm`).
-    pub compression: Option<CompressionConfig>,
+    /// codec pipelines for both link directions (uplink compression,
+    /// delta downlink). The default routes bytes exactly like the
+    /// pre-transport legacy path (unframed dense both ways).
+    pub transport: TransportConfig,
     /// fleet coordinator: device profiles, over-selection, deadlines,
     /// worker parallelism. The default is the legacy sequential,
     /// always-available path.
@@ -89,7 +79,7 @@ impl Default for ServerOptions {
             train_eval_cap: 2000,
             dp: None,
             secure_agg: false,
-            compression: None,
+            transport: TransportConfig::default(),
             fleet: FleetConfig::default(),
         }
     }
@@ -143,7 +133,6 @@ pub fn run(
         sampler = sampler.with_availability(p, cfg.seed ^ 0xAB1E);
     }
     let mut comms = CommSim::new(opts.comm_model.clone(), cfg.seed);
-    let model_bytes = crate::comms::model_bytes(model.param_count());
 
     // fleet coordinator state (None on the legacy path, which keeps the
     // seed's sequential, always-available round loop bit-for-bit).
@@ -159,23 +148,14 @@ pub fn run(
         .fleet
         .fleet_active()
         .then(|| Fleet::build(&opts.fleet, k, cfg.seed));
-    // Uplink-bytes estimate for fleet round *timing* — the same wire
-    // formulas the byte accounting uses, so simulated durations agree
-    // with reported bytes when uplinks are compressed.
-    let est_up_bytes = {
-        let dim = model.param_count();
-        let mut est = model_bytes;
-        if let Some(cmp) = &opts.compression {
-            if let Some(frac) = cmp.top_k_frac {
-                let kk = ((dim as f64 * frac).ceil() as usize).max(1);
-                est = crate::compression::sparse_wire_bytes(kk);
-            }
-            if let Some(bits) = cmp.quant_bits {
-                est = est.min(crate::compression::quantized_wire_bytes(dim, bits));
-            }
-        }
-        est
-    };
+    // All byte metering routes through the transport: the scheduler
+    // prices each link direction from the same codec pipeline that later
+    // encodes the real payload, so estimates and telemetry-reported wire
+    // bytes cannot drift. The default TransportConfig reproduces the
+    // legacy unframed-dense accounting bit-for-bit.
+    let mut transport = Transport::new(opts.transport.clone(), k, model.param_count(), cfg.seed);
+    let codec_label = transport.codec_label();
+    let est_up_bytes = transport.up_plan_bytes();
     // NB: the pool needs 'static data, so requesting workers > 1 pays a
     // one-time copy of the training set + partition into an Arc for the
     // run (sharing at zero copy needs Arc inside `Federated` itself — a
@@ -210,9 +190,6 @@ pub fn run(
         .dp
         .map(|d| GaussianMechanism::new(d.clip_norm, d.sigma, cfg.seed ^ 0xD11F));
     let sec_agg = opts.secure_agg.then(|| SecureAggregator::new(cfg.seed ^ 0x5EC));
-    // per-client error feedback for top-k sparsification
-    let mut feedback: Vec<ErrorFeedback> = vec![ErrorFeedback::default(); k];
-    let mut qrng = Rng::new(cfg.seed ^ 0x0_B175);
 
     let eval_idxs: Option<Vec<usize>> = opts
         .eval_cap
@@ -233,13 +210,30 @@ pub fn run(
     for round in 1..=cfg.rounds as u64 {
         rounds_run = round;
         let m = cfg.clients_per_round(k);
+        // Publish this round's model to the version store (no-op without
+        // a delta downlink codec) before any client is priced against it.
+        transport.publish(round, &theta);
+        // Fleet path: Σ downlink bytes over every client the model is
+        // sent to (dispatched, incl. stragglers later dropped).
+        let mut down_bytes_round = 0u64;
+        // Legacy path: per-pick (down, up) wire bytes for the jitter
+        // model (which sums its own totals).
+        let mut links: Vec<(u64, u64)> = Vec::new();
 
         // Selection. Fleet path: over-select from the diurnal online
         // pool, run the event-queue schedule, and aggregate only the
-        // first `m` finishers inside the deadline. Legacy path: uniform
-        // sample over the (optionally availability-filtered) population.
+        // first `m` finishers inside the deadline; every dispatched
+        // client's links are priced by the transport (delta downlinks
+        // differ per client). Legacy path: uniform sample over the
+        // (optionally availability-filtered) population.
         let (picks, plan): (Vec<usize>, Option<RoundPlan>) = match &fleet {
-            None => (sampler.sample(round, k, m), None),
+            None => {
+                let picks = sampler.sample(round, k, m);
+                for &c in &picks {
+                    links.push((transport.downlink(c, round, &theta), est_up_bytes));
+                }
+                (picks, None)
+            }
             Some(fl) => {
                 let (_online, plan) = plan_round(
                     fl,
@@ -248,14 +242,25 @@ pub fn run(
                     m,
                     opts.fleet.overselect,
                     opts.fleet.deadline_s,
-                    model_bytes,
-                    est_up_bytes,
+                    |c| {
+                        let down = transport.downlink(c, round, &theta);
+                        down_bytes_round += down;
+                        (down, est_up_bytes)
+                    },
                     |c| updates_per_round(cfg.e, fed.clients[c].len(), cfg.b),
                 );
                 (plan.completed.clone(), Some(plan))
             }
         };
         let lr = (cfg.lr * cfg.lr_decay.powi(round as i32 - 1)) as f32;
+
+        // The model each aggregated client actually starts from: `None`
+        // (= theta, zero copies) unless a lossy downlink codec means the
+        // client reconstructs an approximation.
+        let mut start_models: Vec<Option<ParamVec>> = picks
+            .iter()
+            .map(|&c| transport.downlink_model(c, &theta))
+            .collect::<Result<_>>()?;
 
         // ClientUpdate for every aggregating client — inline, or fanned
         // out over the worker pool (per-thread engines; reduction in
@@ -283,7 +288,10 @@ pub fn run(
                     .map(|(slot, (&client, spec))| ClientJob {
                         slot,
                         client,
-                        theta: theta0.clone(),
+                        theta: match start_models[slot].take() {
+                            Some(start) => Arc::new(start),
+                            None => theta0.clone(),
+                        },
                         spec: spec.clone(),
                     })
                     .collect();
@@ -292,13 +300,21 @@ pub fn run(
             None => picks
                 .iter()
                 .zip(&specs)
-                .map(|(&ck, spec)| local_update(&model, &fed.train, &fed.clients[ck], &theta, spec))
+                .enumerate()
+                .map(|(slot, (&ck, spec))| {
+                    let start = start_models[slot].as_deref().unwrap_or(&theta);
+                    local_update(&model, &fed.train, &fed.clients[ck], start, spec)
+                })
                 .collect::<Result<_>>()?,
         };
 
         // Server-side post-processing per update, in slot order.
         // Updates travel as DELTAS (θ_k − θ_t): identical average, and the
-        // natural unit for clipping / compression / secure aggregation.
+        // natural unit for clipping / codecs / secure aggregation. Only
+        // aggregated updates reach the uplink codec: straggler-dropped
+        // clients never encode, so their error-feedback residuals stay
+        // put (the dropped mass was never delivered — re-injecting it
+        // later would double-count).
         let mut deltas: Vec<(f32, ParamVec)> = Vec::with_capacity(picks.len());
         let mut wire_up_bytes = 0u64;
         for (&ck, res) in picks.iter().zip(results) {
@@ -310,27 +326,7 @@ pub fn run(
             if let Some(dp) = &opts.dp {
                 clip(&mut delta, dp.clip_norm);
             }
-            if let Some(cmp) = &opts.compression {
-                let mut bytes = model_bytes;
-                if let Some(frac) = cmp.top_k_frac {
-                    let kk = ((delta.len() as f64 * frac).ceil() as usize).max(1);
-                    feedback[ck].fold_in(&mut delta);
-                    let sparse = top_k(&delta, kk);
-                    feedback[ck].record(&delta, &sparse);
-                    bytes = sparse.wire_bytes();
-                    delta = sparse.densify();
-                }
-                if let Some(bits) = cmp.quant_bits {
-                    let q = quantize(&delta, bits, &mut qrng);
-                    // top-k already paid index bytes; quantization shrinks
-                    // the value payload
-                    bytes = bytes.min(q.wire_bytes());
-                    delta = dequantize(&q);
-                }
-                wire_up_bytes += bytes;
-            } else {
-                wire_up_bytes += model_bytes;
-            }
+            wire_up_bytes += transport.encode_up(ck, &mut delta)?;
             deltas.push((res.weight as f32, delta));
         }
 
@@ -363,11 +359,7 @@ pub fn run(
         }
         crate::params::axpy(&mut theta, 1.0, &avg_delta);
         let rc = match &plan {
-            None => comms.round_asym(
-                picks.len(),
-                model_bytes,
-                wire_up_bytes / picks.len().max(1) as u64,
-            ),
+            None => comms.round_links(&links),
             Some(p) => {
                 fleet_totals.dispatched += p.dispatched.len() as u64;
                 fleet_totals.completed += p.completed.len() as u64;
@@ -377,11 +369,7 @@ pub fn run(
                 misses_since_eval += p.deadline_miss as usize;
                 // every dispatched client downloaded the model (dropped
                 // stragglers waste downlink); only completed uplinks land
-                comms.ingest(
-                    wire_up_bytes,
-                    model_bytes * p.dispatched.len() as u64,
-                    p.round_seconds,
-                )
+                comms.ingest(wire_up_bytes, down_bytes_round, p.round_seconds)
             }
         };
 
@@ -404,7 +392,9 @@ pub fn run(
                     train_loss: tl,
                     clients: picks.len(),
                     lr: lr as f64,
-                    bytes_up: rc.bytes_up,
+                    up_bytes: rc.bytes_up,
+                    down_bytes: rc.bytes_down,
+                    codec: &codec_label,
                     sim_seconds: comms.totals().sim_seconds,
                     dropped: dropped_since_eval,
                     deadline_misses: misses_since_eval,
@@ -429,6 +419,8 @@ pub fn run(
             ("client_steps", client_steps.to_string()),
             ("final_accuracy", format!("{:.6}", accuracy.last_value().unwrap_or(0.0))),
             ("bytes_up", totals.bytes_up.to_string()),
+            ("bytes_down", totals.bytes_down.to_string()),
+            ("codec", codec_label.clone()),
             ("sim_seconds", format!("{:.1}", totals.sim_seconds)),
         ];
         if fleet.is_some() {

@@ -31,9 +31,12 @@
 //!   drops), parallel ClientUpdate dispatch.
 //! * [`baselines`] — one-shot averaging and centralized SGD.
 //! * [`data`] — synthetic datasets + client partitions.
-//! * [`comms`] — byte/wall-clock accounting and availability traces.
-//! * [`compression`], [`privacy`] — uplink compression, DP + secure
-//!   aggregation.
+//! * [`comms`] — the transport subsystem: framed wire messages + the
+//!   composable codec pipeline ([`comms::wire`]), the versioned model
+//!   store with delta downlink ([`comms::transport`]), and the
+//!   byte/wall-clock cost model with availability traces.
+//! * [`compression`], [`privacy`] — sparsification/quantization
+//!   primitives under the codecs, DP + secure aggregation.
 //! * [`runtime`] — PJRT engine over the AOT artifacts + worker pool.
 //! * [`config`], [`metrics`], [`telemetry`], [`sweep`], [`util`] —
 //!   harness plumbing; [`exper`] — the paper's tables and figures.

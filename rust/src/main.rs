@@ -38,6 +38,7 @@ fn real_main() -> Result<()> {
         "table2" => exper::table2::run(&engine()?, &args),
         "table3" => exper::table3::run(&engine()?, &args),
         "table4" => exper::table4::run(&engine()?, &args),
+        "comm" => exper::table_comm::run(&engine()?, &args),
         "figure" | "figures" => exper::figures::run(&engine()?, &args),
         "run" => cmd_run(&args),
         "fleet" => cmd_fleet(&args),
@@ -61,7 +62,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         "config", "model", "c", "e", "b", "lr", "lr-decay", "rounds", "eval-every",
         "target", "partition", "scale", "eval-cap", "seed", "out", "availability",
         "track-train-loss", "name", "dp-clip", "dp-sigma", "secure-agg", "topk",
-        "quant-bits",
+        "quant-bits", "codec", "down-codec",
     ])?;
     let cfg = fed_config_from_args(args)?;
 
@@ -88,17 +89,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         });
     }
     opts.secure_agg = args.has("secure-agg");
-    let topk = args.str_opt("topk").map(|v| v.parse::<f64>()).transpose()?;
-    let qbits = args
-        .str_opt("quant-bits")
-        .map(|v| v.parse::<u8>())
-        .transpose()?;
-    if topk.is_some() || qbits.is_some() {
-        opts.compression = Some(fedavg::federated::server::CompressionConfig {
-            top_k_frac: topk,
-            quant_bits: qbits,
-        });
-    }
+    opts.transport = transport_from_args(args)?;
     let name = args.str_or("name", &format!("run-{}", cfg.label().replace(' ', "_")));
     opts.telemetry = Some(fedavg::telemetry::RunWriter::create(
         args.str_or("out", "runs"),
@@ -132,6 +123,35 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("differential privacy: ({eps:.2}, 1e-5)-DP consumed");
     }
     Ok(())
+}
+
+/// Parse the transport flags shared by `run` and `fleet`: `--codec`
+/// (uplink pipeline spec, see the registry in `comms::wire`) and
+/// `--down-codec` (downlink, e.g. `delta`). The pre-pipeline flags
+/// `--topk FRAC` / `--quant-bits B` are kept as shorthands that map onto
+/// the same registry (`topk:FRAC|qB`).
+fn transport_from_args(args: &Args) -> Result<fedavg::comms::TransportConfig> {
+    let mut up = args.str_opt("codec").map(str::to_string);
+    if up.is_some() && (args.has("topk") || args.has("quant-bits")) {
+        bail!("--codec conflicts with the --topk/--quant-bits shorthands; fold them into the --codec spec");
+    }
+    if up.is_none() {
+        if let Some(f) = args.str_opt("topk") {
+            let v: f64 = f.parse()?;
+            if !v.is_finite() || v <= 0.0 || v >= 1.0 {
+                bail!("--topk must be a fraction in (0, 1), got {f:?}");
+            }
+            up = Some(format!("topk:{f}"));
+        }
+        if let Some(b) = args.str_opt("quant-bits") {
+            let _: u8 = b.parse()?;
+            up = Some(match up {
+                Some(spec) => format!("{spec}|q{b}"),
+                None => format!("q{b}"),
+            });
+        }
+    }
+    fedavg::comms::TransportConfig::parse(up.as_deref(), args.str_opt("down-codec"))
 }
 
 /// Parse the FedConfig-shaped flags shared by `run` and `fleet`.
@@ -169,7 +189,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "config", "model", "c", "e", "b", "lr", "lr-decay", "rounds", "eval-every",
         "target", "partition", "scale", "eval-cap", "seed", "out", "name",
         "track-train-loss", "fleet-profile", "overselect", "deadline", "workers",
-        "step-cost", "clients", "sim-only", "model-bytes", "steps",
+        "step-cost", "clients", "sim-only", "model-bytes", "steps", "codec",
+        "down-codec", "topk", "quant-bits",
     ])?;
     let cfg = fed_config_from_args(args)?;
     let fleet = FleetConfig {
@@ -223,6 +244,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let mut opts = fedavg::federated::ServerOptions {
         eval_cap: Some(args.usize_or("eval-cap", 1000)?),
         fleet: fleet.clone(),
+        transport: transport_from_args(args)?,
         ..Default::default()
     };
     let name = args.str_or("name", &format!("fleet-{}", cfg.label().replace(' ', "_")));
@@ -407,17 +429,27 @@ USAGE:
   fedavg table2 [--scale F] [--rounds N] [--models mnist_cnn,shakespeare_lstm]
   fedavg table3 [--scale F] [--rounds N] [--targets a,b,c]
   fedavg table4 [--scale F] [--rounds N]
+  fedavg comm   [--codecs c1,c2,..] [--down delta|dense|legacy] [--target A]
+             [--model M] [--scale F] [--rounds N]
   fedavg figure <N|all> [--scale F] [--rounds N]
   fedavg run [--config FILE] [--model M] [--c F] [--e N] [--b N|inf]
              [--lr F] [--rounds N] [--partition iid|noniid|unbalanced|natural]
              [--availability P] [--target A] [--track-train-loss]
              [--dp-sigma S --dp-clip C] [--secure-agg]
+             [--codec SPEC] [--down-codec SPEC]
              [--topk FRAC] [--quant-bits B]
   fedavg fleet [--fleet-profile uniform|mobile|flaky] [--overselect RHO]
              [--deadline SECONDS] [--workers N] [--clients K] [--sim-only]
              [--step-cost S] [--model-bytes B] [--steps U] [+ run flags]
   fedavg oneshot [--model M] [--e N]
   fedavg info
+
+Codec SPECs compose registry stages with `|`: `dense`, `delta` (downlink
+overwrite patch vs the client's acked model version), `topk:<count|frac>`,
+`q<bits>` — e.g. --codec "topk:1000|q8" --down-codec delta. The scheduler
+prices every link from the same pipeline that encodes it; per-round
+up_bytes/down_bytes/codec land in runs/<name>/curve.csv. `comm` sweeps
+codecs and prints rounds-to-target x bytes-per-round.
 
 `fleet` trains through the fleet coordinator: persistent device profiles
 (bandwidth/compute/diurnal availability), over-selection with straggler

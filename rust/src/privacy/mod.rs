@@ -11,8 +11,10 @@
 //!   so the server learns only Σ updates, never an individual update.
 //!
 //! Both compose with the plain FedAvg loop: they transform client deltas
-//! before averaging (see `federated::ServerOptions` wiring and the
-//! `fedavg run --dp-*` / `--secure-agg` flags).
+//! before averaging (see [`ServerOptions`](crate::federated::ServerOptions)
+//! wiring and the `fedavg run --dp-*` / `--secure-agg` flags). In the
+//! server's per-update order, clipping runs *before* the uplink codec
+//! pipeline (DESIGN.md §6) — codecs see already-clipped deltas.
 
 use crate::data::rng::Rng;
 use crate::params::ParamVec;

@@ -3,6 +3,11 @@
 //! for η on a multiplicative grid of resolution 10^(1/3) or 10^(1/6))",
 //! picking the best rate per configuration and *checking the optimum is
 //! interior to the grid*.
+//!
+//! Used standalone (`examples/lr_sweep.rs`) or under the experiment
+//! drivers in [`exper`](crate::exper); each grid point is a full
+//! [`federated::run`](crate::federated::run), so sweeps inherit every
+//! harness feature (telemetry, fleet, transport codecs).
 
 use crate::config::FedConfig;
 use crate::data::Federated;

@@ -23,14 +23,20 @@ pub struct RunWriter {
 
 /// One evaluated round's record.
 #[derive(Debug, Clone, Copy)]
-pub struct RoundRecord {
+pub struct RoundRecord<'a> {
     pub round: u64,
     pub test_accuracy: f64,
     pub test_loss: f64,
     pub train_loss: Option<f64>,
     pub clients: usize,
     pub lr: f64,
-    pub bytes_up: u64,
+    /// Wire bytes uploaded this round (transport-metered).
+    pub up_bytes: u64,
+    /// Wire bytes broadcast this round, incl. to dropped stragglers.
+    pub down_bytes: u64,
+    /// Active codec label, `"<up>/<down>"` (e.g. `topk:0.01|q8/delta`;
+    /// `dense/dense` on the legacy path).
+    pub codec: &'a str,
     pub sim_seconds: f64,
     /// Straggler updates dropped since the previous record (fleet runs;
     /// 0 on the legacy path).
@@ -63,7 +69,7 @@ impl RunWriter {
         };
         writeln!(
             w.curve,
-            "round,test_accuracy,test_loss,train_loss,clients,lr,bytes_up,sim_seconds,dropped,deadline_misses"
+            "round,test_accuracy,test_loss,train_loss,clients,lr,up_bytes,down_bytes,codec,sim_seconds,dropped,deadline_misses"
         )?;
         Ok(w)
     }
@@ -72,17 +78,19 @@ impl RunWriter {
         &self.dir
     }
 
-    pub fn record(&mut self, r: &RoundRecord) -> Result<()> {
+    pub fn record(&mut self, r: &RoundRecord<'_>) -> Result<()> {
         writeln!(
             self.curve,
-            "{},{:.6},{:.6},{},{},{:.6},{},{:.3},{},{}",
+            "{},{:.6},{:.6},{},{},{:.6},{},{},{},{:.3},{},{}",
             r.round,
             r.test_accuracy,
             r.test_loss,
             r.train_loss.map(|v| format!("{v:.6}")).unwrap_or_default(),
             r.clients,
             r.lr,
-            r.bytes_up,
+            r.up_bytes,
+            r.down_bytes,
+            r.codec,
             r.sim_seconds,
             r.dropped,
             r.deadline_misses
@@ -209,7 +217,9 @@ mod tests {
             train_loss: Some(1.1),
             clients: 10,
             lr: 0.1,
-            bytes_up: 123,
+            up_bytes: 123,
+            down_bytes: 999,
+            codec: "dense/dense",
             sim_seconds: 4.5,
             dropped: 0,
             deadline_misses: 0,
@@ -222,7 +232,9 @@ mod tests {
             train_loss: None,
             clients: 10,
             lr: 0.1,
-            bytes_up: 456,
+            up_bytes: 456,
+            down_bytes: 888,
+            codec: "topk:0.01|q8/delta",
             sim_seconds: 9.0,
             dropped: 3,
             deadline_misses: 1,
@@ -233,9 +245,12 @@ mod tests {
             .unwrap();
         let csv = std::fs::read_to_string(dir.join("curve.csv")).unwrap();
         assert!(csv.starts_with("round,"));
+        assert!(csv.lines().next().unwrap().contains("up_bytes,down_bytes,codec"));
         assert!(csv.lines().next().unwrap().ends_with("dropped,deadline_misses"));
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.contains("2,0.600000"));
+        assert!(csv.contains("123,999,dense/dense"));
+        assert!(csv.contains("456,888,topk:0.01|q8/delta"));
         assert!(csv.lines().nth(2).unwrap().ends_with(",3,1"));
         let json = std::fs::read_to_string(summary).unwrap();
         let parsed = crate::util::json::Json::parse(&json).unwrap();

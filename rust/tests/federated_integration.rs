@@ -5,6 +5,7 @@
 //! availability injection, one-shot baseline, and the sweep driver.
 
 use fedavg::baselines::oneshot;
+use fedavg::comms::TransportConfig;
 use fedavg::config::{BatchSize, FedConfig, Partition};
 use fedavg::exper::mnist_fed;
 use fedavg::federated::{self, ServerOptions};
@@ -278,12 +279,9 @@ fn dp_secure_agg_and_compression_paths() {
     assert!(eps > 0.0 && eps.is_finite());
     assert_ne!(dp.final_theta, plain.final_theta);
 
-    // compression: uplink bytes shrink by ~the sparsity factor
+    // uplink codec: bytes shrink by ~the sparsity factor
     let mut o = opts();
-    o.compression = Some(fedavg::federated::server::CompressionConfig {
-        top_k_frac: Some(0.01),
-        quant_bits: None,
-    });
+    o.transport = TransportConfig::parse(Some("topk:0.01"), None).unwrap();
     let comp = federated::run(&eng, &fed, &cfg, o).unwrap();
     assert!(
         comp.comm.bytes_up * 20 < plain.comm.bytes_up,
@@ -291,17 +289,41 @@ fn dp_secure_agg_and_compression_paths() {
         comp.comm.bytes_up,
         plain.comm.bytes_up
     );
-    // downlink unchanged (server still broadcasts the full model)
+    // downlink unchanged (no downlink codec: full dense broadcast)
     assert_eq!(comp.comm.bytes_down, plain.comm.bytes_down);
     // still learns (error feedback keeps signal flowing)
     assert!(comp.accuracy.best_value().unwrap() > 0.2);
 
     // quantization-only: ~4x uplink shrink at 8 bits
     let mut o = opts();
-    o.compression = Some(fedavg::federated::server::CompressionConfig {
-        top_k_frac: None,
-        quant_bits: Some(8),
-    });
+    o.transport = TransportConfig::parse(Some("q8"), None).unwrap();
     let q = federated::run(&eng, &fed, &cfg, o).unwrap();
     assert!(q.comm.bytes_up * 3 < plain.comm.bytes_up);
+
+    // composed pipeline + delta downlink: scheduler-priced uplink bytes
+    // equal the telemetry-reported wire bytes, and the delta downlink
+    // undercuts a dense broadcast once clients are repeat contacts
+    let mut o = opts();
+    o.transport = TransportConfig::parse(Some("topk:0.01|q8"), Some("delta")).unwrap();
+    let pipe = o.transport.up.clone().unwrap();
+    let mut cfg6 = cfg.clone();
+    // 6 rounds x 4 picks over 20 clients: pigeonhole guarantees repeat
+    // contacts, which is when the delta downlink pays off
+    cfg6.rounds = 6;
+    let both = federated::run(&eng, &fed, &cfg6, o).unwrap();
+    let m = cfg6.clients_per_round(fed.num_clients()) as u64;
+    let dim = both.final_theta.len();
+    assert_eq!(
+        both.comm.bytes_up,
+        both.comm.rounds * m * pipe.plan_bytes(dim),
+        "scheduler-priced uplink bytes != reported wire bytes"
+    );
+    let dense_equiv = both.comm.rounds * m * fedavg::comms::model_bytes(dim);
+    assert!(
+        both.comm.bytes_down < dense_equiv,
+        "delta downlink no smaller than dense: {} vs {}",
+        both.comm.bytes_down,
+        dense_equiv
+    );
+    assert!(both.accuracy.best_value().unwrap() > 0.2);
 }

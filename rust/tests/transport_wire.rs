@@ -1,0 +1,252 @@
+//! Integration: the transport subsystem without artifacts (always runs).
+//!
+//! Covers the DESIGN.md §6 invariants: for every registry pipeline the
+//! planned wire size, the in-flight repr size, and the serialized frame
+//! length agree and round-trip within the codec's error bound; the delta
+//! downlink protocol (ack → patch → dense fallback → re-ack) reproduces
+//! the server model bit-for-bit through its lossless path; and
+//! error-feedback residuals advance only for clients whose updates were
+//! actually aggregated — never for straggler drops.
+
+use fedavg::comms::transport::{Transport, TransportConfig};
+use fedavg::comms::wire::{decode_frame, Pipeline, HEADER_BYTES};
+use fedavg::coordinator::schedule_round;
+use fedavg::data::rng::Rng;
+
+fn gauss(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.gauss_f32()).collect()
+}
+
+/// Every pipeline shape the registry can express (delta and non-delta).
+const ALL_PIPELINES: &[&str] = &[
+    "dense",
+    "q8",
+    "q4",
+    "q1",
+    "topk:500",
+    "topk:0.02",
+    "topk:500|q8",
+    "topk:0.02|q4",
+    "delta",
+    "delta|q8",
+    "delta|topk:200",
+    "delta|topk:200|q6",
+];
+
+#[test]
+fn every_registry_pipeline_roundtrips_with_matching_wire_bytes() {
+    let dim = 10_000;
+    let base = gauss(dim, 1);
+    let mut x = base.clone();
+    // a realistic round-to-round change: ~5% of coords move
+    for i in (0..dim).step_by(20) {
+        x[i] += 0.5 + (i as f32) * 1e-4;
+    }
+    let (lo, hi) = x
+        .iter()
+        .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| (l.min(v), h.max(v)));
+
+    for spec in ALL_PIPELINES {
+        let p = Pipeline::parse(spec).unwrap();
+        let mut rng = Rng::new(9);
+        let b = p.has_delta().then_some((7u64, base.as_slice()));
+        let frame = p.encode(&x, b, &mut rng).unwrap();
+
+        // wire_bytes() exactly matches the encoded frame length, via
+        // every route that computes it
+        assert_eq!(
+            p.measure(&x, b.map(|(_, m)| m)).unwrap(),
+            frame.wire_bytes(),
+            "{spec}: measure != frame length"
+        );
+        if !p.has_delta() {
+            assert_eq!(p.plan_bytes(dim), frame.wire_bytes(), "{spec}: plan != frame length");
+        }
+        assert_eq!(
+            frame.header().unwrap().expect_bytes(),
+            frame.wire_bytes(),
+            "{spec}: header-implied length mismatch"
+        );
+
+        // decode(encode(x)): dequantization error bounded per delivered
+        // coordinate; undelivered coords fall back to 0 (sparse) or the
+        // base (patch)
+        let decoded = decode_frame(&frame.bytes, b.map(|(_, m)| m)).unwrap();
+        assert_eq!(decoded.len(), dim, "{spec}");
+        let bits = frame.header().unwrap().quant_bits;
+        let bound = if bits > 0 {
+            (hi - lo) / ((1u32 << bits) - 1) as f32 * 1.01
+        } else {
+            0.0
+        };
+        for i in 0..dim {
+            let (a, d) = (x[i], decoded[i]);
+            let delivered_ok = (a - d).abs() <= bound;
+            let skipped_ok = if p.has_delta() {
+                d.to_bits() == base[i].to_bits()
+            } else {
+                d == 0.0
+            };
+            assert!(
+                delivered_ok || skipped_ok,
+                "{spec} coord {i}: {a} decoded to {d} (bound {bound})"
+            );
+        }
+        if p.lossless() {
+            for i in 0..dim {
+                assert_eq!(x[i].to_bits(), decoded[i].to_bits(), "{spec}: lossless drifted");
+            }
+        }
+    }
+}
+
+#[test]
+fn delta_downlink_after_dense_fallback_is_bit_exact() {
+    // protocol walk: dense first contact → delta → store eviction →
+    // dense fallback → delta again; the client-side reconstruction must
+    // equal the server model bit-for-bit at every step
+    let dim = 2000;
+    let cfg = TransportConfig {
+        up: None,
+        down: Some(Pipeline::parse("delta").unwrap()),
+        store_cap: 2,
+    };
+    let mut t = Transport::new(cfg, 2, dim, 5);
+    let down = Pipeline::parse("delta").unwrap();
+    let mut client_model: Option<Vec<f32>> = None; // client 0's cache
+    let mut rng = Rng::new(11);
+
+    let mut theta = gauss(dim, 3);
+    let mut last_acked: Option<(u64, Vec<f32>)> = None;
+    for round in 1..=8u64 {
+        // model drifts sparsely each round
+        for i in (0..dim).step_by(17) {
+            theta[i] += (round as f32) * 0.01;
+        }
+        t.publish(round, &theta);
+        // client 0 participates in rounds 1, 2, 6, 7, 8; rounds 3-5 of
+        // absence age its ack (v2) out of the cap-2 store => round 6 must
+        // be a dense fallback
+        let participates = matches!(round, 1 | 2 | 6 | 7 | 8);
+        if !participates {
+            continue;
+        }
+        let bytes = t.downlink(0, round, &theta);
+        let dense_frame = HEADER_BYTES + 4 * dim as u64;
+        let expect_dense = matches!(round, 1 | 6);
+        if expect_dense {
+            assert_eq!(bytes, dense_frame, "round {round}: expected dense fallback");
+        } else {
+            assert!(bytes < dense_frame, "round {round}: expected a delta frame");
+        }
+
+        // simulate the client actually applying the frame
+        let frame = if expect_dense {
+            down.run_fallback(&theta, &mut rng).unwrap().to_frame()
+        } else {
+            let (v, base) = last_acked.as_ref().unwrap();
+            down.encode(&theta, Some((*v, base.as_slice())), &mut rng).unwrap()
+        };
+        assert_eq!(frame.wire_bytes(), bytes, "round {round}: priced != encoded");
+        let reconstructed = frame
+            .decode(client_model.as_deref())
+            .unwrap();
+        for i in 0..dim {
+            assert_eq!(
+                reconstructed[i].to_bits(),
+                theta[i].to_bits(),
+                "round {round}: client model drifted at coord {i}"
+            );
+        }
+        client_model = Some(reconstructed);
+        last_acked = Some((round, theta.clone()));
+    }
+}
+
+#[test]
+fn straggler_dropped_clients_keep_their_residuals() {
+    // the scheduler drops stragglers AFTER dispatch; their updates never
+    // reach the uplink codec, so their error-feedback residuals must not
+    // advance (the dropped mass was never aggregated — re-injecting it
+    // next round would double-count)
+    let dim = 300;
+    let cfg = TransportConfig::parse(Some("topk:10"), None).unwrap();
+    let mut t = Transport::new(cfg, 4, dim, 13);
+
+    let update = |c: usize, r: u64| -> Vec<f32> {
+        (0..dim).map(|i| ((i + c) as f32 * 0.1).sin() + r as f32 * 0.01).collect()
+    };
+
+    // round 1: dispatch 4, client 3 is the straggler (slowest), m=3
+    let plan = schedule_round(3, None, &[(0, 1.0), (1, 2.0), (2, 3.0), (3, 50.0)]);
+    assert_eq!(plan.completed, vec![0, 1, 2]);
+    assert_eq!(plan.dropped, vec![3]);
+    for &c in &plan.completed {
+        let mut d = update(c, 1);
+        t.encode_up(c, &mut d).unwrap();
+    }
+    let r3_after_1 = t.residual_norm(3);
+    assert_eq!(r3_after_1, 0.0, "straggler-dropped client accumulated residual");
+    let r0_after_1 = t.residual_norm(0);
+    assert!(r0_after_1 > 0.0, "aggregated client has no residual");
+
+    // round 2: client 3 straggles again — still untouched
+    let plan = schedule_round(2, Some(4.0), &[(0, 1.0), (3, 9.0), (2, 2.0)]);
+    assert!(plan.dropped.contains(&3));
+    for &c in &plan.completed {
+        let mut d = update(c, 2);
+        t.encode_up(c, &mut d).unwrap();
+    }
+    assert_eq!(t.residual_norm(3), 0.0);
+
+    // round 3: client 3 finally completes; only now does its residual
+    // move, and exactly once
+    let mut d = update(3, 3);
+    let folded = d.clone(); // residual was zero, so fold_in adds nothing
+    t.encode_up(3, &mut d).unwrap();
+    let resid = t.residual_norm(3);
+    assert!(resid > 0.0);
+    // conservation: ||folded - delivered|| == residual norm
+    let err: f64 = folded
+        .iter()
+        .zip(&d)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    assert!((err - resid).abs() < 1e-3, "{err} vs {resid}");
+}
+
+#[test]
+fn scheduler_pricing_equals_encoded_bytes_for_every_pipeline() {
+    // the no-drift acceptance invariant, pipeline by pipeline: what the
+    // scheduler would price an uplink at before training equals what the
+    // encoder later produces
+    let dim = 5000;
+    for spec in ALL_PIPELINES {
+        let p = Pipeline::parse(spec).unwrap();
+        if p.has_delta() {
+            continue; // delta is downlink-only; priced at encode time
+        }
+        let cfg = TransportConfig::parse(Some(spec), None).unwrap();
+        let mut t = Transport::new(cfg, 1, dim, 21);
+        let priced = t.up_plan_bytes();
+        let mut d = gauss(dim, 22);
+        let encoded = t.encode_up(0, &mut d).unwrap();
+        assert_eq!(priced, encoded, "{spec}: estimate/actual drift");
+    }
+}
+
+#[test]
+fn transport_config_parse_validates_directions() {
+    assert!(TransportConfig::parse(Some("delta"), None).is_err(), "delta uplink");
+    assert!(TransportConfig::parse(None, Some("delta|q8")).is_ok());
+    assert!(TransportConfig::parse(Some("nope"), None).is_err());
+    // a sparsifying downlink without a delta base would zero every
+    // unsent coordinate of the broadcast model
+    assert!(TransportConfig::parse(None, Some("topk:0.01")).is_err(), "topk downlink sans delta");
+    assert!(TransportConfig::parse(None, Some("delta|topk:0.01")).is_ok());
+    let t = TransportConfig::parse(Some("topk:0.01|q8"), Some("delta")).unwrap();
+    assert!(t.active());
+    assert!(!TransportConfig::default().active());
+}

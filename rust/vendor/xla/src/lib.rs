@@ -2,7 +2,7 @@
 //!
 //! The testbed image carries neither crates.io access nor a PJRT shared
 //! library, so this crate provides the exact type/function surface the
-//! [`fedavg`] runtime uses — enough to *compile and link* the whole
+//! `fedavg` runtime uses — enough to *compile and link* the whole
 //! workspace. Host-side [`Literal`] plumbing is fully functional (it is
 //! plain data); anything that would need a real XLA backend
 //! ([`PjRtClient::compile`], [`PjRtLoadedExecutable::execute`]) returns
