@@ -1,0 +1,95 @@
+//! Aggregation-rule walkthrough — no artifacts needed.
+//!
+//! Simulates the server side of Algorithm 1 on a toy quadratic
+//! `f(w) = ½‖w − w*‖²`: each round, honest clients report the descent
+//! delta `η·(w* − w)` plus client noise, while a few corrupted clients
+//! report large garbage. Every rule in the `federated::aggregate`
+//! registry drives its own copy of the model; the table shows who
+//! reaches the optimum and who is dragged away — and what the server
+//! optimizers' internal state looks like along the way.
+//!
+//! ```text
+//! cargo run --release --example agg_rules
+//! ```
+
+use fedavg::data::rng::Rng;
+use fedavg::federated::aggregate::{fmt_state_norms, registry_help, AggConfig, Aggregator as _};
+use fedavg::params;
+
+fn main() -> fedavg::Result<()> {
+    let dim = 10_000;
+    let rounds = 40u64;
+    let m = 20; // cohort size per round
+    let corrupted = 4; // Byzantine clients per round
+    let client_lr = 0.3f32;
+
+    let mut rng = Rng::new(7);
+    let target: Vec<f32> = (0..dim).map(|_| rng.gauss_f32()).collect();
+    let w0: Vec<f32> = vec![0.0; dim];
+
+    println!("aggregator registry:\n{}\n", registry_help());
+    println!(
+        "toy quadratic, dim {dim}: {m} clients/round, {corrupted} corrupted \
+         (reporting pure noise at 100x the honest signal, with a lied-about \
+         40x weight), {rounds} rounds\n"
+    );
+    println!(
+        "{:<14} {:>12} {:>14}  {}",
+        "rule", "‖w − w*‖", "vs round 0", "server state"
+    );
+
+    let start_dist = params::l2_dist(&w0, &target);
+    for spec in ["fedavg", "fedavgm", "fedadam", "trimmed:0.2", "median"] {
+        let cfg = AggConfig {
+            spec: spec.into(),
+            // Adam normalizes the step to ~η_s per coordinate; this toy
+            // problem's scale wants a bit more than the 0.01 rule default
+            server_lr: (spec == "fedadam").then_some(0.05),
+            ..Default::default()
+        };
+        let mut agg = cfg.build()?;
+        let mut w = w0.clone();
+        let mut rng = Rng::new(99); // same client noise for every rule
+        for round in 1..=rounds {
+            let deltas: Vec<(f32, Vec<f32>)> = (0..m)
+                .map(|k| {
+                    let honest = k >= corrupted;
+                    let d: Vec<f32> = w
+                        .iter()
+                        .zip(&target)
+                        .map(|(wi, ti)| {
+                            if honest {
+                                client_lr * (ti - wi) + 0.05 * rng.gauss_f32()
+                            } else {
+                                // garbage: pure large-amplitude noise
+                                100.0 * rng.gauss_f32()
+                            }
+                        })
+                        .collect();
+                    // corrupted clients also claim a huge n_k
+                    (if honest { 1.0 } else { 40.0 }, d)
+                })
+                .collect();
+            let refs: Vec<(f32, &[f32])> =
+                deltas.iter().map(|(wt, d)| (*wt, d.as_slice())).collect();
+            let combined = agg.combine(&refs)?;
+            let step = agg.step(round, combined)?;
+            params::axpy(&mut w, 1.0, &step);
+        }
+        let dist = params::l2_dist(&w, &target);
+        println!(
+            "{:<14} {:>12.4} {:>13.1}x  {}",
+            agg.label(),
+            dist,
+            start_dist / dist.max(1e-12),
+            fmt_state_norms(&agg.state_norms()),
+        );
+    }
+    println!(
+        "\nthe robust order statistics (trimmed, median) ignore both the \
+         corrupted values and the lied-about weights; plain fedavg follows \
+         the garbage. `fedavg agg --corrupt 0.2` runs the same comparison \
+         with real training."
+    );
+    Ok(())
+}

@@ -63,6 +63,7 @@ fn main() {
             epochs: 1,
             batch: BatchSize::Fixed(10),
             lr: 0.05,
+            prox_mu: 0.0,
             shuffle_seed: 3,
         };
         b.bench(&format!("{mname}/client_update_E1_B10_n60"), || {

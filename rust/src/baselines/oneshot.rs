@@ -49,6 +49,7 @@ pub fn run(
             epochs: cfg.epochs,
             batch: cfg.batch,
             lr: cfg.lr as f32,
+            prox_mu: 0.0,
             shuffle_seed: cfg.seed ^ (ck as u64).wrapping_mul(0xD1B54A32D192ED03),
         };
         let res = local_update(&model, &fed.train, idxs, &theta0, &spec)?;

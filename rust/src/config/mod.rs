@@ -192,6 +192,21 @@ impl ConfigFile {
         self.values.get(key).map(|s| s.as_str())
     }
 
+    /// Typed getter: parse `key`'s value if present (`Ok(None)` when the
+    /// key is absent, an error naming the key on a malformed value).
+    /// Used by config consumers outside [`FedConfig`] — e.g. the
+    /// aggregation keys (`agg`, `server_lr`, `server_momentum`,
+    /// `prox_mu`) read by `federated::aggregate::AggConfig::from_config`.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow!("config key {key}: bad value {v:?}")),
+        }
+    }
+
     pub fn fed_config(&self) -> Result<FedConfig> {
         let mut cfg = FedConfig::default();
         for (k, v) in &self.values {
@@ -271,6 +286,15 @@ mod tests {
     #[test]
     fn config_file_rejects_bad_lines() {
         assert!(ConfigFile::parse("model mnist").is_err());
+    }
+
+    #[test]
+    fn config_file_typed_getter() {
+        let cf = ConfigFile::parse("server_lr = 0.5\nrounds = 40\n").unwrap();
+        assert_eq!(cf.get_parse::<f64>("server_lr").unwrap(), Some(0.5));
+        assert_eq!(cf.get_parse::<usize>("rounds").unwrap(), Some(40));
+        assert_eq!(cf.get_parse::<f64>("absent").unwrap(), None);
+        assert!(cf.get_parse::<usize>("server_lr").is_err());
     }
 
     #[test]

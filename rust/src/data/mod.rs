@@ -178,6 +178,48 @@ impl Federated {
     }
 }
 
+/// Deterministically corrupt a `frac`-fraction of clients for
+/// robustness experiments (`fedavg agg`, DESIGN.md §7): every training
+/// example of `⌊frac·K⌋` seed-sampled clients has its label replaced by
+/// a uniformly random **wrong** label — the classic label-flipping
+/// adversary robust aggregators are built to survive. Returns the
+/// corrupted client ids, sorted.
+///
+/// Image datasets only (token datasets have no single label to flip);
+/// panics otherwise, or when the label universe has fewer than two
+/// classes (no wrong label exists).
+pub fn corrupt_clients(fed: &mut Federated, frac: f64, seed: u64) -> Vec<usize> {
+    assert!(
+        (0.0..=1.0).contains(&frac),
+        "corrupt fraction must be in [0, 1], got {frac}"
+    );
+    let k = fed.num_clients();
+    let n_bad = (k as f64 * frac) as usize;
+    if n_bad == 0 {
+        return Vec::new();
+    }
+    let mut r = rng::Rng::new(seed ^ 0xBAD1ABE1);
+    let mut bad = r.sample_indices(k, n_bad);
+    bad.sort_unstable();
+    let clients = &fed.clients;
+    match &mut fed.train.examples {
+        Examples::Image { y, .. } => {
+            let classes = y.iter().copied().max().unwrap_or(-1) + 1;
+            assert!(classes >= 2, "corrupt_clients needs >= 2 classes, got {classes}");
+            for &c in &bad {
+                for &i in &clients[c] {
+                    let shift = 1 + r.below(classes as usize - 1) as i32;
+                    y[i] = (y[i] + shift) % classes;
+                }
+            }
+        }
+        Examples::Tokens { .. } => {
+            panic!("corrupt_clients needs labeled image data (token datasets have no label to flip)")
+        }
+    }
+    bad
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,5 +272,46 @@ mod tests {
     #[should_panic(expected = "capacity")]
     fn padded_batch_overflow_panics() {
         tiny_image().padded_batch(&[0, 1, 2], 2);
+    }
+
+    fn four_client_fed() -> Federated {
+        // 8 examples, labels 0..=3 twice, 4 clients x 2 examples
+        let n = 8;
+        Federated {
+            train: Dataset {
+                name: "corrupt-test".into(),
+                examples: Examples::Image {
+                    x: vec![0.0; n],
+                    y: (0..n).map(|i| (i % 4) as i32).collect(),
+                    dim: 1,
+                },
+            },
+            test: tiny_image(),
+            clients: (0..4).map(|c| vec![2 * c, 2 * c + 1]).collect(),
+        }
+    }
+
+    #[test]
+    fn corrupt_clients_flips_only_the_sampled_clients() {
+        let mut fed = four_client_fed();
+        let clean: Vec<i32> = (0..fed.train.len()).map(|i| fed.train.label(i)).collect();
+        let bad = corrupt_clients(&mut fed, 0.5, 7);
+        assert_eq!(bad.len(), 2);
+        assert!(bad.windows(2).all(|w| w[0] < w[1]), "ids sorted");
+        let bad_idx: Vec<usize> = bad.iter().flat_map(|&c| fed.clients[c].clone()).collect();
+        for i in 0..fed.train.len() {
+            let (was, now) = (clean[i], fed.train.label(i));
+            assert!((0..4).contains(&now), "label {now} out of range");
+            if bad_idx.contains(&i) {
+                assert_ne!(was, now, "corrupted example {i} kept its label");
+            } else {
+                assert_eq!(was, now, "honest example {i} changed");
+            }
+        }
+        // deterministic in the seed; frac=0 is a no-op
+        let mut fed2 = four_client_fed();
+        assert_eq!(corrupt_clients(&mut fed2, 0.5, 7), bad);
+        let mut fed3 = four_client_fed();
+        assert!(corrupt_clients(&mut fed3, 0.0, 7).is_empty());
     }
 }

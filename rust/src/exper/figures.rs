@@ -76,6 +76,7 @@ pub fn figure1(engine: &Engine, opts: &ExpOptions) -> Result<()> {
             epochs: (240 * 50 / idxs.len().max(1)).max(1),
             batch: BatchSize::Fixed(50),
             lr: 0.1,
+            prox_mu: 0.0,
             shuffle_seed: seed,
         };
         Ok(federated::local_update(&model, &fed.train, idxs, theta0, &spec)?.theta)

@@ -1,8 +1,10 @@
 //! Experiment harnesses: one driver per table/figure in the paper's
-//! evaluation (DESIGN.md §3 maps them), plus [`table_comm`] — the codec
-//! sweep behind `fedavg comm` (the communication-efficiency framing the
-//! paper's footnote 7 points at). Shared here: scaled workload builders
-//! and run helpers.
+//! evaluation (DESIGN.md §3 maps them), plus the subsystem sweeps —
+//! [`table_comm`], the codec sweep behind `fedavg comm` (the
+//! communication-efficiency framing the paper's footnote 7 points at),
+//! and [`table_agg`], the aggregation-rule sweep behind `fedavg agg`
+//! (server optimizers + robust rules, DESIGN.md §7). Shared here:
+//! scaled workload builders and run helpers.
 //!
 //! Every driver accepts `--scale` (default well below 1.0 — this testbed
 //! is a single CPU core; `--scale 1.0` is the paper-sized configuration)
@@ -14,6 +16,7 @@ pub mod table1;
 pub mod table2;
 pub mod table3;
 pub mod table4;
+pub mod table_agg;
 pub mod table_comm;
 
 use crate::config::{FedConfig, Partition, ScaleProfile};

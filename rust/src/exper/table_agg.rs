@@ -1,0 +1,172 @@
+//! `fedavg agg` — the aggregation-rule sweep: server optimizers +
+//! robust aggregators × IID vs pathological non-IID partitions × a
+//! configurable fraction of label-corrupted clients.
+//!
+//! The scenario complement to [`super::table_comm`]: where the codec
+//! sweep varies *what crosses the wire*, this sweep varies *what the
+//! server does with it* (DESIGN.md §7). Each row runs the same federated
+//! workload through [`federated::run`] with a different `--agg` registry
+//! rule; with `--corrupt F`, `⌊F·K⌋` clients flip every label
+//! ([`crate::data::corrupt_clients`]) — the regime where plain FedAvg
+//! degrades and the coordinate-wise trimmed mean / median hold, while on
+//! clean partitions the server optimizers (FedAvgM, FedAdam) chase
+//! fewer rounds-to-target per communication round.
+
+use crate::config::{BatchSize, FedConfig, Partition};
+use crate::data::corrupt_clients;
+use crate::federated::aggregate::{registry_help, AggConfig};
+use crate::federated::{self, ServerOptions};
+use crate::runtime::Engine;
+use crate::util::args::Args;
+use crate::Result;
+
+use super::{mnist_fed, print_table, ExpOptions, COMMON_FLAGS};
+
+/// Default rule sweep: the paper's baseline, both server optimizers,
+/// then the robust order statistics. The trim fraction must exceed the
+/// corrupted-client fraction to actually shield the mean — and at the
+/// sweep's default cohort (`m = 4`) the realized trim count is
+/// `⌊β·m⌋`, so `β` must also clear `1/m` before anything is trimmed at
+/// all; `trimmed:0.3` trims one client per tail there, covering the
+/// default `--corrupt 0.2`.
+pub const DEFAULT_AGGS: &str = "fedavg,fedavgm,fedadam,trimmed:0.3,median";
+
+pub fn run(engine: &Engine, args: &Args) -> Result<()> {
+    args.check_known(
+        &[
+            COMMON_FLAGS,
+            &[
+                "model", "aggs", "partitions", "corrupt", "c", "e", "b",
+                "server-lr", "server-momentum", "prox-mu",
+            ],
+        ]
+        .concat(),
+    )?;
+    let opts = ExpOptions::from_args(args)?;
+    let model = args.str_or("model", "mnist_2nn");
+    anyhow::ensure!(
+        matches!(model.as_str(), "mnist_2nn" | "mnist_cnn"),
+        "agg: label corruption needs a labeled image workload (mnist_2nn|mnist_cnn), got {model}"
+    );
+    let aggs = args.str_or("aggs", DEFAULT_AGGS);
+    let corrupt = args.f64_or("corrupt", 0.2)?;
+    anyhow::ensure!(
+        (0.0..1.0).contains(&corrupt),
+        "--corrupt must be a client fraction in [0, 1), got {corrupt}"
+    );
+    let parts: Vec<Partition> = args
+        .str_or("partitions", "iid,noniid")
+        .split(',')
+        .map(Partition::parse)
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(
+        !parts.iter().any(|p| *p == Partition::Natural),
+        "agg: mnist has no natural partition (iid|noniid|unbalanced)"
+    );
+
+    let base_agg = AggConfig {
+        // unset η_s resolves per rule inside AggConfig (1.0; 0.01 for
+        // fedadam, whose Adam-normalized step diverges at η_s = 1)
+        server_lr: args.f64_opt("server-lr")?,
+        server_momentum: args.f64_or("server-momentum", 0.9)?,
+        prox_mu: args.f64_or("prox-mu", 0.0)?,
+        ..Default::default()
+    };
+    let rule_cfg = |spec: &str| AggConfig {
+        spec: spec.to_string(),
+        ..base_agg.clone()
+    };
+    // resolve every spec up front so a bad --aggs entry fails before any
+    // training happens
+    let specs: Vec<&str> = aggs
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!specs.is_empty(), "--aggs lists no rules");
+    for spec in &specs {
+        rule_cfg(spec).validate()?;
+    }
+    let cfg = FedConfig {
+        model: model.clone(),
+        c: args.f64_or("c", 0.2)?,
+        e: args.usize_or("e", 5)?,
+        b: BatchSize::parse(&args.str_or("b", "10"))?,
+        lr: args.f64_or("lr", 0.1)?,
+        rounds: opts.rounds,
+        target_accuracy: opts.target,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    println!(
+        "agg sweep: {} — {:.0}% of clients label-corrupted, rules: {}\nregistry rules:\n{}",
+        cfg.label(),
+        corrupt * 100.0,
+        aggs,
+        registry_help(),
+    );
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for part in &parts {
+        let mut fed = mnist_fed(opts.scale, *part, opts.seed);
+        let bad = corrupt_clients(&mut fed, corrupt, opts.seed ^ 0xC0881);
+        for spec in &specs {
+            let mut sopts = ServerOptions {
+                agg: rule_cfg(spec),
+                ..opts.server_options()
+            };
+            sopts.telemetry = Some(crate::telemetry::RunWriter::create(
+                &opts.out_root,
+                &format!("agg-{}-{spec}", part.label()),
+            )?);
+            let res = federated::run(engine, &fed, &cfg, sopts)?;
+            let rtt = opts
+                .target
+                .and_then(|t| res.accuracy.rounds_to_target(t))
+                .map(|r| format!("{r:.0}"))
+                .unwrap_or_else(|| "-".into());
+            rows.push(vec![
+                spec.to_string(),
+                part.label().to_string(),
+                format!("{}/{}", bad.len(), fed.num_clients()),
+                rtt,
+                format!("{:.4}", res.final_accuracy()),
+                format!("{:.4}", res.accuracy.best_value().unwrap_or(0.0)),
+            ]);
+        }
+    }
+    print_table(
+        &format!(
+            "Aggregation — rule sweep on {} (target {}, scale {})",
+            model,
+            opts.target
+                .map(|t| format!("{:.0}%", t * 100.0))
+                .unwrap_or_else(|| "none".into()),
+            opts.scale
+        ),
+        &["agg", "partition", "corrupted", "rds-to-target", "final acc", "best acc"],
+        &rows,
+    );
+    println!(
+        "(rules resolved by the federated::aggregate registry; per-round \
+         agg/server_state in {}/agg-*/curve.csv)",
+        opts.out_root
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_sweep_specs_all_resolve() {
+        for spec in DEFAULT_AGGS.split(',') {
+            let cfg = AggConfig {
+                spec: spec.into(),
+                ..Default::default()
+            };
+            assert!(cfg.validate().is_ok(), "{spec}");
+        }
+    }
+}

@@ -1,0 +1,626 @@
+//! Pluggable server-side aggregation — the update rule of Algorithm 1,
+//! generalized (DESIGN.md §7).
+//!
+//! The paper hardcodes one rule: `w_{t+1} ← Σ_k (n_k/n)·w_{t+1}^k`,
+//! equivalently `w_{t+1} ← w_t + Δ̄_t` with the weighted mean delta
+//! `Δ̄_t = Σ_k (n_k/n)·(w_{t+1}^k − w_t)`. This module factors that rule
+//! behind the [`Aggregator`] trait and a registry (parallel to the codec
+//! registry in [`crate::comms::wire`]) so the server loop can swap in:
+//!
+//! | rule (`--agg`)    | update |
+//! |-------------------|--------|
+//! | `fedavg`          | `w_{t+1} = w_t + η_s·Δ̄_t` (the paper's rule at `η_s = 1`) |
+//! | `fedavgm[:β]`     | `v_t = β·v_{t-1} + Δ̄_t`; `w_{t+1} = w_t + η_s·v_t` (server momentum, Hsu et al.) |
+//! | `fedadam[:τ]`     | `m_t = β₁·m_{t-1} + (1−β₁)·Δ̄_t`; `u_t = β₂·u_{t-1} + (1−β₂)·Δ̄_t²`; `w_{t+1} = w_t + η_s·m_t/(√u_t + τ)` (Reddi et al.) |
+//! | `trimmed:<β>`     | coordinate-wise β-trimmed mean of the `Δ_t^k` (unweighted) |
+//! | `median`          | coordinate-wise median of the `Δ_t^k` (unweighted) |
+//!
+//! Every rule decomposes as **combine ∘ step**: [`Aggregator::combine`]
+//! reduces the cohort's weighted deltas `(n_k, Δ_t^k)` to one aggregate
+//! delta (weighted mean for the server optimizers, an order statistic
+//! for the robust rules), and [`Aggregator::step`] turns that delta into
+//! the increment actually added to `w_t` (identity by default; the
+//! stateful server optimizers treat the aggregate delta as a
+//! pseudo-gradient here). The split is what lets DP noise land between
+//! the two stages and secure aggregation replace the combine
+//! (see DESIGN.md §7 for the interaction rules).
+//!
+//! The default [`AggConfig`] builds `fedavg` with `η_s = 1`, which
+//! reproduces the seed's inlined `weighted_mean` + `axpy` trajectory
+//! **bit-for-bit** (regression-tested in `rust/tests/aggregate.rs`).
+//!
+//! The client-side half of this subsystem is the FedProx proximal term
+//! ([`AggConfig::prox_mu`], Li et al.), applied inside
+//! [`crate::federated::client::local_update`].
+
+use crate::config::ConfigFile;
+use crate::params::{self, ParamVec};
+use crate::Result;
+
+// ---------------------------------------------------------------- trait
+
+/// One server-side aggregation rule: how a round's client updates become
+/// the increment applied to the global model.
+///
+/// Implementations receive the cohort as weighted **deltas**
+/// `(n_k, Δ_t^k = w_{t+1}^k − w_t)` — the natural unit after clipping,
+/// codecs, and secure aggregation — and return the vector the server
+/// adds to `w_t`. Custom rules only need [`label`](Self::label) and
+/// [`combine`](Self::combine):
+///
+/// ```
+/// use fedavg::federated::aggregate::Aggregator;
+/// use fedavg::params::{weighted_mean, ParamVec};
+///
+/// /// A toy robust rule: the weighted mean, clamped to ±1 per coordinate.
+/// struct ClampedMean;
+///
+/// impl Aggregator for ClampedMean {
+///     fn label(&self) -> String {
+///         "clamped".into()
+///     }
+///     fn combine(&self, deltas: &[(f32, &[f32])]) -> fedavg::Result<ParamVec> {
+///         let mut d = weighted_mean(deltas);
+///         for v in &mut d {
+///             *v = v.clamp(-1.0, 1.0);
+///         }
+///         Ok(d)
+///     }
+/// }
+///
+/// let mut agg = ClampedMean;
+/// let (a, b) = ([2.0f32, -0.5], [4.0f32, 0.5]);
+/// let combined = agg.combine(&[(1.0, &a[..]), (1.0, &b[..])]).unwrap();
+/// assert_eq!(combined, vec![1.0, 0.0]); // mean [3.0, 0.0], clamped
+/// // the default server step is the identity:
+/// assert_eq!(agg.step(1, combined).unwrap(), vec![1.0, 0.0]);
+/// ```
+pub trait Aggregator {
+    /// Canonical rule id, resolved arguments included (`"fedavgm:0.9"`).
+    /// This is what telemetry records in curve.csv's `agg` column.
+    fn label(&self) -> String;
+
+    /// Stage 1 — reduce the cohort's weighted deltas to one aggregate
+    /// delta `Δ̄_t`. Must not depend on internal state (it may run on a
+    /// secure-aggregation mean instead; see
+    /// [`mean_combine`](Self::mean_combine)).
+    fn combine(&self, deltas: &[(f32, &[f32])]) -> Result<ParamVec>;
+
+    /// Stage 2 — turn the (possibly DP-noised) aggregate delta into the
+    /// increment added to `w_t`. Stateful server optimizers update their
+    /// moments here, keyed by `round` only for labeling/debugging — the
+    /// rules themselves are cadence-free. Default: identity.
+    fn step(&mut self, round: u64, delta: ParamVec) -> Result<ParamVec> {
+        let _ = round;
+        Ok(delta)
+    }
+
+    /// True iff [`combine`](Self::combine) is exactly the weighted mean
+    /// `Σ n_k·Δ_t^k / Σ n_k`. Only such rules compose with secure
+    /// aggregation (which hands the server the masked mean and nothing
+    /// else) or with DP noise (whose σ is calibrated to the mean's
+    /// `clip/m` sensitivity). Default `false` (conservative for custom
+    /// rules).
+    fn mean_combine(&self) -> bool {
+        false
+    }
+
+    /// `(name, ‖state‖₂)` of each internal optimizer moment, for
+    /// telemetry (empty when stateless, and before the first step).
+    fn state_norms(&self) -> Vec<(&'static str, f64)> {
+        Vec::new()
+    }
+}
+
+/// Render [`Aggregator::state_norms`] for the telemetry CSV:
+/// `;`-joined `name=norm` pairs (comma-free), empty for stateless rules.
+pub fn fmt_state_norms(norms: &[(&'static str, f64)]) -> String {
+    norms
+        .iter()
+        .map(|(n, v)| format!("{n}={v:.6e}"))
+        .collect::<Vec<_>>()
+        .join(";")
+}
+
+// ----------------------------------------------------------------- rules
+
+/// Shared stateless server step: scale the combined delta by `η_s`.
+/// `η_s = 1` must return the input unchanged (the bit-identity guard
+/// every stateless rule relies on).
+fn lr_step(server_lr: f64, mut delta: ParamVec) -> ParamVec {
+    if server_lr != 1.0 {
+        params::scale(&mut delta, server_lr as f32);
+    }
+    delta
+}
+
+/// `fedavg` — the paper's rule: weighted mean delta, scaled by the
+/// server learning rate (`η_s = 1` reproduces Algorithm 1 bit-for-bit).
+struct FedAvg {
+    server_lr: f64,
+}
+
+impl Aggregator for FedAvg {
+    fn label(&self) -> String {
+        "fedavg".into()
+    }
+
+    fn combine(&self, deltas: &[(f32, &[f32])]) -> Result<ParamVec> {
+        Ok(params::weighted_mean(deltas))
+    }
+
+    fn step(&mut self, _round: u64, delta: ParamVec) -> Result<ParamVec> {
+        Ok(lr_step(self.server_lr, delta))
+    }
+
+    fn mean_combine(&self) -> bool {
+        true
+    }
+}
+
+/// `fedavgm[:β]` — server momentum (Hsu et al., arXiv:1909.06335):
+/// `v_t = β·v_{t-1} + Δ̄_t`, `w_{t+1} = w_t + η_s·v_t`. `β = 0, η_s = 1`
+/// degenerates to `fedavg`.
+struct FedAvgM {
+    server_lr: f64,
+    beta: f64,
+    /// momentum buffer `v` (lazily sized on the first step).
+    v: ParamVec,
+}
+
+impl Aggregator for FedAvgM {
+    fn label(&self) -> String {
+        format!("fedavgm:{}", self.beta)
+    }
+
+    fn combine(&self, deltas: &[(f32, &[f32])]) -> Result<ParamVec> {
+        Ok(params::weighted_mean(deltas))
+    }
+
+    fn step(&mut self, _round: u64, delta: ParamVec) -> Result<ParamVec> {
+        if self.v.is_empty() {
+            self.v = vec![0.0; delta.len()];
+        }
+        anyhow::ensure!(self.v.len() == delta.len(), "momentum dim changed mid-run");
+        let (beta, lr) = (self.beta as f32, self.server_lr as f32);
+        let mut out = delta;
+        for (v, d) in self.v.iter_mut().zip(out.iter_mut()) {
+            *v = beta * *v + *d;
+            *d = lr * *v;
+        }
+        Ok(out)
+    }
+
+    fn mean_combine(&self) -> bool {
+        true
+    }
+
+    fn state_norms(&self) -> Vec<(&'static str, f64)> {
+        if self.v.is_empty() {
+            Vec::new()
+        } else {
+            vec![("momentum", params::l2_norm(&self.v))]
+        }
+    }
+}
+
+/// `fedadam[:τ]` — server Adam (Reddi et al., arXiv:2003.00295),
+/// treating the aggregate delta as a pseudo-gradient:
+/// `m_t = β₁·m_{t-1} + (1−β₁)·Δ̄_t`, `u_t = β₂·u_{t-1} + (1−β₂)·Δ̄_t²`,
+/// `w_{t+1} = w_t + η_s·m_t/(√u_t + τ)`. No bias correction, matching
+/// the reference recipe; β₁ comes from `--server-momentum`, β₂ = 0.99.
+struct FedAdam {
+    server_lr: f64,
+    beta1: f64,
+    beta2: f64,
+    tau: f64,
+    m: ParamVec,
+    u: ParamVec,
+}
+
+impl Aggregator for FedAdam {
+    fn label(&self) -> String {
+        if self.tau == 1e-3 {
+            "fedadam".into()
+        } else {
+            format!("fedadam:{}", self.tau)
+        }
+    }
+
+    fn combine(&self, deltas: &[(f32, &[f32])]) -> Result<ParamVec> {
+        Ok(params::weighted_mean(deltas))
+    }
+
+    fn step(&mut self, _round: u64, delta: ParamVec) -> Result<ParamVec> {
+        if self.m.is_empty() {
+            self.m = vec![0.0; delta.len()];
+            self.u = vec![0.0; delta.len()];
+        }
+        anyhow::ensure!(self.m.len() == delta.len(), "adam moment dim changed mid-run");
+        let (b1, b2) = (self.beta1 as f32, self.beta2 as f32);
+        let (lr, tau) = (self.server_lr as f32, self.tau as f32);
+        let mut out = delta;
+        for ((m, u), d) in self.m.iter_mut().zip(self.u.iter_mut()).zip(out.iter_mut()) {
+            *m = b1 * *m + (1.0 - b1) * *d;
+            *u = b2 * *u + (1.0 - b2) * *d * *d;
+            *d = lr * *m / (u.sqrt() + tau);
+        }
+        Ok(out)
+    }
+
+    fn mean_combine(&self) -> bool {
+        true
+    }
+
+    fn state_norms(&self) -> Vec<(&'static str, f64)> {
+        if self.m.is_empty() {
+            Vec::new()
+        } else {
+            vec![("m", params::l2_norm(&self.m)), ("u", params::l2_norm(&self.u))]
+        }
+    }
+}
+
+/// `trimmed:<β>` — coordinate-wise β-trimmed mean
+/// ([`params::trimmed_mean`]), scaled by `η_s`. Unweighted: a corrupted
+/// client could lie about `n_k`, so robust rules count every client
+/// once. Tolerates up to `⌊β·m⌋` arbitrary clients per coordinate.
+struct TrimmedMean {
+    server_lr: f64,
+    frac: f64,
+}
+
+impl Aggregator for TrimmedMean {
+    fn label(&self) -> String {
+        format!("trimmed:{}", self.frac)
+    }
+
+    fn combine(&self, deltas: &[(f32, &[f32])]) -> Result<ParamVec> {
+        let vecs: Vec<&[f32]> = deltas.iter().map(|(_, d)| *d).collect();
+        Ok(params::trimmed_mean(&vecs, self.frac))
+    }
+
+    fn step(&mut self, _round: u64, delta: ParamVec) -> Result<ParamVec> {
+        Ok(lr_step(self.server_lr, delta))
+    }
+}
+
+/// `median` — coordinate-wise median ([`params::median`]), scaled by
+/// `η_s`: the maximal trim, robust to just under half the cohort.
+struct Median {
+    server_lr: f64,
+}
+
+impl Aggregator for Median {
+    fn label(&self) -> String {
+        "median".into()
+    }
+
+    fn combine(&self, deltas: &[(f32, &[f32])]) -> Result<ParamVec> {
+        let vecs: Vec<&[f32]> = deltas.iter().map(|(_, d)| *d).collect();
+        Ok(params::median(&vecs))
+    }
+
+    fn step(&mut self, _round: u64, delta: ParamVec) -> Result<ParamVec> {
+        Ok(lr_step(self.server_lr, delta))
+    }
+}
+
+// -------------------------------------------------------------- registry
+
+/// One row of the aggregator registry: rule name, argument syntax, and a
+/// parser that claims matching `--agg` tokens (mirrors
+/// [`crate::comms::wire::CodecEntry`]).
+pub struct AggEntry {
+    pub name: &'static str,
+    pub syntax: &'static str,
+    pub help: &'static str,
+    parse: fn(&str, &AggConfig) -> Result<Option<Box<dyn Aggregator>>>,
+}
+
+fn parse_fedavg(tok: &str, cfg: &AggConfig) -> Result<Option<Box<dyn Aggregator>>> {
+    Ok((tok == "fedavg").then(|| {
+        Box::new(FedAvg {
+            server_lr: cfg.lr_or(1.0),
+        }) as Box<dyn Aggregator>
+    }))
+}
+
+fn parse_fedavgm(tok: &str, cfg: &AggConfig) -> Result<Option<Box<dyn Aggregator>>> {
+    let beta = if tok == "fedavgm" {
+        cfg.server_momentum
+    } else if let Some(arg) = tok.strip_prefix("fedavgm:") {
+        let b: f64 = arg
+            .parse()
+            .map_err(|_| anyhow::anyhow!("fedavgm: bad momentum {arg:?}"))?;
+        anyhow::ensure!(
+            b.is_finite() && (0.0..1.0).contains(&b),
+            "fedavgm: momentum must be in [0, 1), got {arg}"
+        );
+        b
+    } else {
+        return Ok(None);
+    };
+    Ok(Some(Box::new(FedAvgM {
+        server_lr: cfg.lr_or(1.0),
+        beta,
+        v: Vec::new(),
+    })))
+}
+
+fn parse_fedadam(tok: &str, cfg: &AggConfig) -> Result<Option<Box<dyn Aggregator>>> {
+    let tau = if tok == "fedadam" {
+        1e-3
+    } else if let Some(arg) = tok.strip_prefix("fedadam:") {
+        let t: f64 = arg
+            .parse()
+            .map_err(|_| anyhow::anyhow!("fedadam: bad adaptivity τ {arg:?}"))?;
+        anyhow::ensure!(t.is_finite() && t > 0.0, "fedadam: τ must be positive, got {arg}");
+        t
+    } else {
+        return Ok(None);
+    };
+    Ok(Some(Box::new(FedAdam {
+        server_lr: cfg.lr_or(0.01),
+        beta1: cfg.server_momentum,
+        beta2: 0.99,
+        tau,
+        m: Vec::new(),
+        u: Vec::new(),
+    })))
+}
+
+fn parse_trimmed(tok: &str, cfg: &AggConfig) -> Result<Option<Box<dyn Aggregator>>> {
+    let Some(arg) = tok.strip_prefix("trimmed:") else {
+        return Ok(None);
+    };
+    let frac: f64 = arg
+        .parse()
+        .map_err(|_| anyhow::anyhow!("trimmed: bad trim fraction {arg:?}"))?;
+    anyhow::ensure!(
+        frac.is_finite() && frac > 0.0 && frac < 0.5,
+        "trimmed: trim fraction must be in (0, 0.5), got {arg}"
+    );
+    Ok(Some(Box::new(TrimmedMean {
+        server_lr: cfg.lr_or(1.0),
+        frac,
+    })))
+}
+
+fn parse_median(tok: &str, cfg: &AggConfig) -> Result<Option<Box<dyn Aggregator>>> {
+    Ok((tok == "median").then(|| {
+        Box::new(Median {
+            server_lr: cfg.lr_or(1.0),
+        }) as Box<dyn Aggregator>
+    }))
+}
+
+/// The rule registry `--agg` specs resolve against.
+pub static REGISTRY: &[AggEntry] = &[
+    AggEntry {
+        name: "fedavg",
+        syntax: "fedavg",
+        help: "the paper's weighted mean of client models (default; η_s=1 is Algorithm 1)",
+        parse: parse_fedavg,
+    },
+    AggEntry {
+        name: "fedavgm",
+        syntax: "fedavgm[:<beta>]",
+        help: "server momentum on the mean delta (beta from --server-momentum when omitted)",
+        parse: parse_fedavgm,
+    },
+    AggEntry {
+        name: "fedadam",
+        syntax: "fedadam[:<tau>]",
+        help: "server Adam over the mean delta as pseudo-gradient (β1=--server-momentum, β2=0.99, unset η_s=0.01)",
+        parse: parse_fedadam,
+    },
+    AggEntry {
+        name: "trimmed",
+        syntax: "trimmed:<frac>",
+        help: "coordinate-wise trimmed mean, dropping frac of each tail (robust, unweighted)",
+        parse: parse_trimmed,
+    },
+    AggEntry {
+        name: "median",
+        syntax: "median",
+        help: "coordinate-wise median (robust to just under half the cohort, unweighted)",
+        parse: parse_median,
+    },
+];
+
+/// Human-readable registry listing for CLI help and parse errors.
+pub fn registry_help() -> String {
+    REGISTRY
+        .iter()
+        .map(|e| format!("  {:<18} {}", e.syntax, e.help))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+// --------------------------------------------------------------- config
+
+/// The aggregation subsystem's knobs, CLI-shaped (`--agg`, `--server-lr`,
+/// `--server-momentum`, `--prox-mu`). The default is Algorithm 1
+/// verbatim: `fedavg` at `η_s = 1`, no proximal term — bit-identical to
+/// the pre-subsystem server loop.
+#[derive(Debug, Clone)]
+pub struct AggConfig {
+    /// Rule spec resolved against [`REGISTRY`] (e.g. `"trimmed:0.1"`).
+    pub spec: String,
+    /// Server learning rate η_s scaling the applied increment. `None`
+    /// resolves per rule: 1.0 everywhere (Algorithm 1), **except 0.01
+    /// for `fedadam`** — its step is Adam-normalized to ~±η_s per
+    /// coordinate, so η_s = 1 diverges where the mean-delta rules
+    /// expect exactly 1.
+    pub server_lr: Option<f64>,
+    /// Server momentum: β for bare `fedavgm`, β₁ for `fedadam`.
+    pub server_momentum: f64,
+    /// FedProx proximal coefficient μ added to every client's local
+    /// objective: `ℓ_k(w) + (μ/2)·‖w − w_t‖²` (0 = plain ClientUpdate).
+    pub prox_mu: f64,
+}
+
+impl Default for AggConfig {
+    fn default() -> Self {
+        Self {
+            spec: "fedavg".into(),
+            server_lr: None,
+            server_momentum: 0.9,
+            prox_mu: 0.0,
+        }
+    }
+}
+
+impl AggConfig {
+    /// η_s for a rule whose unset-default is `rule_default`
+    /// (1.0 for every rule except `fedadam`'s 0.01).
+    fn lr_or(&self, rule_default: f64) -> f64 {
+        self.server_lr.unwrap_or(rule_default)
+    }
+
+    /// Resolve the spec against the registry and build a fresh (state at
+    /// zero) aggregator. Errors on unknown rules or out-of-range knobs.
+    pub fn build(&self) -> Result<Box<dyn Aggregator>> {
+        if let Some(lr) = self.server_lr {
+            anyhow::ensure!(
+                lr.is_finite() && lr > 0.0,
+                "--server-lr must be positive, got {lr}"
+            );
+        }
+        anyhow::ensure!(
+            self.server_momentum.is_finite() && (0.0..1.0).contains(&self.server_momentum),
+            "--server-momentum must be in [0, 1), got {}",
+            self.server_momentum
+        );
+        anyhow::ensure!(
+            self.prox_mu.is_finite() && self.prox_mu >= 0.0,
+            "--prox-mu must be non-negative, got {}",
+            self.prox_mu
+        );
+        let tok = self.spec.trim();
+        for entry in REGISTRY {
+            if let Some(agg) = (entry.parse)(tok, self)? {
+                return Ok(agg);
+            }
+        }
+        anyhow::bail!("unknown aggregator {tok:?}; known rules:\n{}", registry_help())
+    }
+
+    /// Cheap validation (build and discard) for CLI parse time, so a bad
+    /// `--agg` fails before any dataset is synthesized.
+    pub fn validate(&self) -> Result<()> {
+        self.build().map(drop)
+    }
+
+    /// Layer the `agg`, `server_lr`, `server_momentum`, `prox_mu` keys of
+    /// a [`ConfigFile`] over the defaults (CLI flags override on top; see
+    /// `fedavg run --config`).
+    pub fn from_config(cf: &ConfigFile) -> Result<AggConfig> {
+        let d = AggConfig::default();
+        Ok(AggConfig {
+            spec: cf.get("agg").unwrap_or(&d.spec).to_string(),
+            server_lr: cf.get_parse("server_lr")?.or(d.server_lr),
+            server_momentum: cf.get_parse("server_momentum")?.unwrap_or(d.server_momentum),
+            prox_mu: cf.get_parse("prox_mu")?.unwrap_or(d.prox_mu),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_every_rule_and_canonicalizes_labels() {
+        for (spec, label) in [
+            ("fedavg", "fedavg"),
+            ("fedavgm", "fedavgm:0.9"),
+            ("fedavgm:0.5", "fedavgm:0.5"),
+            ("fedadam", "fedadam"),
+            ("fedadam:0.01", "fedadam:0.01"),
+            ("trimmed:0.1", "trimmed:0.1"),
+            ("median", "median"),
+        ] {
+            let agg = AggConfig {
+                spec: spec.into(),
+                ..Default::default()
+            }
+            .build()
+            .unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(agg.label(), label, "{spec}");
+        }
+    }
+
+    #[test]
+    fn registry_rejects_bad_specs_and_knobs() {
+        for bad in [
+            "", "magic", "trimmed", "trimmed:0", "trimmed:0.5", "trimmed:x",
+            "fedavgm:1.0", "fedavgm:-0.1", "fedadam:0", "fedadam:-1",
+        ] {
+            let cfg = AggConfig {
+                spec: bad.into(),
+                ..Default::default()
+            };
+            assert!(cfg.validate().is_err(), "{bad:?} accepted");
+        }
+        for (lr, mom, mu) in [(0.0, 0.9, 0.0), (1.0, 1.0, 0.0), (1.0, 0.9, -1.0)] {
+            let cfg = AggConfig {
+                server_lr: Some(lr),
+                server_momentum: mom,
+                prox_mu: mu,
+                ..Default::default()
+            };
+            assert!(cfg.validate().is_err(), "lr={lr} mom={mom} mu={mu} accepted");
+        }
+        assert!(AggConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn registry_help_lists_every_rule() {
+        let help = registry_help();
+        for e in REGISTRY {
+            assert!(help.contains(e.name), "{} missing from:\n{help}", e.name);
+        }
+    }
+
+    #[test]
+    fn secure_agg_compatibility_flags() {
+        for (spec, ok) in [
+            ("fedavg", true),
+            ("fedavgm", true),
+            ("fedadam", true),
+            ("trimmed:0.2", false),
+            ("median", false),
+        ] {
+            let agg = AggConfig {
+                spec: spec.into(),
+                ..Default::default()
+            }
+            .build()
+            .unwrap();
+            assert_eq!(agg.mean_combine(), ok, "{spec}");
+        }
+    }
+
+    #[test]
+    fn state_norm_formatting() {
+        assert_eq!(fmt_state_norms(&[]), "");
+        let s = fmt_state_norms(&[("momentum", 0.25), ("u", 1.0)]);
+        assert_eq!(s, "momentum=2.500000e-1;u=1.000000e0");
+        assert!(!s.contains(','), "must stay CSV-safe");
+    }
+
+    #[test]
+    fn config_file_keys_layer_over_defaults() {
+        let cf = ConfigFile::parse("agg = trimmed:0.2\nserver_lr = 0.5\nprox_mu = 0.01\n").unwrap();
+        let cfg = AggConfig::from_config(&cf).unwrap();
+        assert_eq!(cfg.spec, "trimmed:0.2");
+        assert_eq!(cfg.server_lr, Some(0.5));
+        assert_eq!(cfg.server_momentum, 0.9); // untouched default
+        assert_eq!(cfg.prox_mu, 0.01);
+        assert!(cfg.validate().is_ok());
+        let bad = ConfigFile::parse("server_lr = fast\n").unwrap();
+        assert!(AggConfig::from_config(&bad).is_err());
+    }
+}

@@ -13,6 +13,12 @@
 //! gradients are linear, so summing fixed-capacity `gradacc` chunks and
 //! dividing by `n_k` reproduces the full-batch gradient bit-for-bit up to
 //! f32 addition order (verified by the integration tests).
+//!
+//! With [`LocalSpec::prox_mu`] > 0 the local objective gains FedProx's
+//! proximal term (Li et al., arXiv:1812.06127) anchoring the client to
+//! the broadcast model: `ℓ_k(w) + (μ/2)·‖w − w_t‖²`. Its gradient
+//! contribution `μ·(w − w_t)` is applied by [`prox_step`] after every
+//! SGD step; `μ = 0` leaves ClientUpdate bit-identical to the paper's.
 
 use crate::config::BatchSize;
 use crate::data::rng::Rng;
@@ -27,6 +33,9 @@ pub struct LocalSpec {
     pub epochs: usize,
     pub batch: BatchSize,
     pub lr: f32,
+    /// FedProx proximal coefficient μ (0 = the paper's ClientUpdate,
+    /// bit-identical; see [`prox_step`]).
+    pub prox_mu: f32,
     /// seed domain-separating (run, round, client).
     pub shuffle_seed: u64,
 }
@@ -59,6 +68,7 @@ pub fn local_update(
             for _ in 0..spec.epochs {
                 let (g, _) = model.full_gradient(&theta, data, idxs)?;
                 theta = model.apply(&theta, &g, spec.lr)?;
+                prox_step(&mut theta, theta0, spec.lr, spec.prox_mu);
                 steps += 1;
             }
         }
@@ -78,6 +88,7 @@ pub fn local_update(
                 for chunk in order.chunks(b) {
                     let batch = data.padded_batch(chunk, cap);
                     theta = model.step(&theta, &batch, spec.lr)?;
+                    prox_step(&mut theta, theta0, spec.lr, spec.prox_mu);
                     steps += 1;
                 }
             }
@@ -88,6 +99,28 @@ pub fn local_update(
         weight,
         steps,
     })
+}
+
+/// FedProx's proximal correction, folded into the SGD step: after the
+/// model's gradient step `w ← w − η·∇ℓ(w; b)`, pull toward the round's
+/// broadcast anchor `w_t` with the proximal gradient `μ·(w − w_t)`:
+///
+/// ```text
+/// w ← w − η·μ·(w − w_t)
+/// ```
+///
+/// (The standard first-order treatment: the proximal gradient is
+/// evaluated at the post-step iterate.) `μ = 0` returns without touching
+/// `theta`, keeping the default path bit-identical.
+pub fn prox_step(theta: &mut [f32], anchor: &[f32], lr: f32, mu: f32) {
+    if mu == 0.0 {
+        return;
+    }
+    debug_assert_eq!(theta.len(), anchor.len());
+    let c = lr * mu;
+    for (w, a) in theta.iter_mut().zip(anchor) {
+        *w -= c * (*w - *a);
+    }
 }
 
 /// Expected local updates per round for a client of size `n_k` —
@@ -111,5 +144,24 @@ mod tests {
         assert_eq!(updates_per_round(5, 600, BatchSize::Fixed(10)), 300.0);
         assert_eq!(updates_per_round(5, 600, BatchSize::Full), 5.0);
         assert_eq!(updates_per_round(20, 600, BatchSize::Full), 20.0);
+    }
+
+    #[test]
+    fn prox_step_math_and_mu_zero_noop() {
+        let anchor = vec![1.0f32, -2.0, 0.0];
+        let mut w = vec![2.0f32, -2.0, -4.0];
+        let before = w.clone();
+        prox_step(&mut w, &anchor, 0.1, 0.0);
+        assert_eq!(w, before, "μ=0 must not touch the iterate");
+        // w ← w − η·μ·(w − w_t), η·μ = 0.5
+        prox_step(&mut w, &anchor, 0.5, 1.0);
+        assert_eq!(w, vec![1.5, -2.0, -2.0]);
+        // repeated application converges toward the anchor
+        for _ in 0..200 {
+            prox_step(&mut w, &anchor, 0.5, 1.0);
+        }
+        for (a, b) in w.iter().zip(&anchor) {
+            assert!((a - b).abs() < 1e-5);
+        }
     }
 }

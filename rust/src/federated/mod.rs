@@ -1,19 +1,28 @@
 //! FederatedAveraging (Algorithm 1) and its machinery.
 //!
-//! * [`server`] — the round loop + weighted model averaging (the paper's
-//!   contribution).
+//! * [`server`] — the round loop: client selection, ClientUpdate
+//!   fan-out, then the round's updates flow through the pluggable
+//!   aggregation subsystem (the paper's weighted model averaging is the
+//!   default rule).
+//! * [`aggregate`] — the [`Aggregator`] trait + registry behind
+//!   `--agg`: weighted FedAvg, stateful server optimizers (FedAvgM,
+//!   FedAdam), and robust rules (coordinate-wise trimmed mean, median);
+//!   DESIGN.md §7.
 //! * [`client`] — ClientUpdate: E local epochs of B-sized SGD, with the
-//!   exact `B = ∞` path via gradient accumulation.
+//!   exact `B = ∞` path via gradient accumulation and an optional
+//!   FedProx proximal term ([`client::prox_step`]).
 //! * [`sampler`] — per-round client selection (`m = max(C·K, 1)`),
 //!   optionally availability-filtered.
 //!
 //! FedSGD is not a separate implementation: it is the `E=1, B=∞` point of
 //! the family (`FedConfig::fedsgd()`), exactly as the paper defines it.
 
+pub mod aggregate;
 pub mod client;
 pub mod sampler;
 pub mod server;
 
+pub use aggregate::{AggConfig, Aggregator};
 pub use client::{local_update, updates_per_round, LocalResult, LocalSpec};
 pub use sampler::ClientSampler;
 pub use server::{run, RunResult, ServerOptions};

@@ -13,6 +13,11 @@
 //! The averaging weights use `n` = total examples across the *selected*
 //! clients (the standard reading of Algorithm 1, since unselected clients
 //! produce no update). FedSGD is exactly this loop with `E=1, B=∞`.
+//!
+//! The last line — the server update rule — is pluggable: every round's
+//! updates flow through an [`Aggregator`](crate::federated::aggregate)
+//! selected by [`ServerOptions::agg`]. The default `fedavg` rule at
+//! `η_s = 1` is the paper's rule, bit-for-bit.
 
 use std::sync::Arc;
 
@@ -22,10 +27,11 @@ use crate::coordinator::{
     plan_round, ClientJob, Fleet, FleetConfig, FleetTotals, ParallelExec, RoundPlan,
 };
 use crate::data::Federated;
+use crate::federated::aggregate::{fmt_state_norms, AggConfig, Aggregator as _};
 use crate::federated::client::{local_update, updates_per_round, LocalResult, LocalSpec};
 use crate::federated::sampler::ClientSampler;
 use crate::metrics::LearningCurve;
-use crate::params::{weighted_mean, ParamVec};
+use crate::params::ParamVec;
 use crate::privacy::{clip, GaussianMechanism, SecureAggregator};
 use crate::runtime::Engine;
 use crate::telemetry::{RoundRecord, RunWriter};
@@ -67,6 +73,10 @@ pub struct ServerOptions {
     /// worker parallelism. The default is the legacy sequential,
     /// always-available path.
     pub fleet: FleetConfig,
+    /// server update rule (`--agg` registry spec + server-optimizer
+    /// knobs + client-side FedProx μ). The default is Algorithm 1's
+    /// weighted averaging, bit-for-bit.
+    pub agg: AggConfig,
 }
 
 impl Default for ServerOptions {
@@ -81,6 +91,7 @@ impl Default for ServerOptions {
             secure_agg: false,
             transport: TransportConfig::default(),
             fleet: FleetConfig::default(),
+            agg: AggConfig::default(),
         }
     }
 }
@@ -118,6 +129,32 @@ pub fn run(
     cfg: &FedConfig,
     mut opts: ServerOptions,
 ) -> Result<RunResult> {
+    // Build the aggregation rule first: a bad --agg spec (or a robust
+    // rule under secure aggregation, which hides the individual updates
+    // the order statistics need) must fail before any work happens.
+    let mut aggregator = opts.agg.build()?;
+    let agg_label = aggregator.label();
+    if opts.secure_agg {
+        anyhow::ensure!(
+            aggregator.mean_combine(),
+            "--agg {agg_label} needs individual client updates, which secure \
+             aggregation withholds from the server (DESIGN.md §7)"
+        );
+    }
+    // The Gaussian mechanism's noise is calibrated to the weighted
+    // mean's sensitivity (clip/m). An order-statistic combine has
+    // per-client sensitivity O(clip) — adding mean-calibrated noise
+    // would report an ε the mechanism does not provide, so refuse.
+    if opts.dp.is_some() {
+        anyhow::ensure!(
+            aggregator.mean_combine(),
+            "--agg {agg_label}: DP noise is calibrated for the weighted-mean \
+             combine; robust order statistics need their own sensitivity \
+             analysis (DESIGN.md §7)"
+        );
+    }
+    let prox_mu = opts.agg.prox_mu as f32;
+
     let model = engine.model(&cfg.model)?;
     anyhow::ensure!(
         fed.train.is_tokens() == model.meta().is_tokens(),
@@ -273,6 +310,7 @@ pub fn run(
                 epochs: cfg.e,
                 batch: cfg.b,
                 lr,
+                prox_mu,
                 shuffle_seed: cfg.seed
                     ^ round.wrapping_mul(0x9E3779B97F4A7C15)
                     ^ (ck as u64).wrapping_mul(0xD1B54A32D192ED03),
@@ -330,10 +368,14 @@ pub fn run(
             deltas.push((res.weight as f32, delta));
         }
 
-        // w_{t+1} ← w_t + Σ (n_k / n) Δ^k
-        let mut avg_delta: ParamVec = if let Some(agg) = &sec_agg {
+        // w_{t+1} ← w_t + step(combine({(n_k, Δ^k)})) — the pluggable
+        // server update (DESIGN.md §7). Default: combine = weighted mean
+        // Σ (n_k/n) Δ^k, step = identity — Algorithm 1 bit-for-bit.
+        let mut agg_delta: ParamVec = if let Some(agg) = &sec_agg {
             // clients upload masked fixed-point (w·Δ ‖ w); server only
-            // ever sees the modular sum
+            // ever sees the modular sum — i.e. the weighted mean. Only
+            // mean-combine rules reach here (checked at startup); their
+            // server-optimizer step still applies below.
             let total_w: f64 = deltas.iter().map(|(w, _)| *w as f64).sum();
             let masked: Vec<Vec<u32>> = deltas
                 .iter()
@@ -352,12 +394,16 @@ pub fn run(
                 .iter()
                 .map(|(w, d)| (*w, d.as_slice()))
                 .collect();
-            weighted_mean(&refs)
+            aggregator.combine(&refs)?
         };
+        // DP noise lands on the combined delta, *before* the stateful
+        // server step: the optimizer moments then only ever see the
+        // privatized aggregate (post-processing preserves the guarantee).
         if let Some(mech) = mech.as_mut() {
-            mech.apply(&mut avg_delta, picks.len());
+            mech.apply(&mut agg_delta, picks.len());
         }
-        crate::params::axpy(&mut theta, 1.0, &avg_delta);
+        let step = aggregator.step(round, agg_delta)?;
+        crate::params::axpy(&mut theta, 1.0, &step);
         let rc = match &plan {
             None => comms.round_links(&links),
             Some(p) => {
@@ -385,6 +431,7 @@ pub fn run(
                 None
             };
             if let Some(w) = opts.telemetry.as_mut() {
+                let server_state = fmt_state_norms(&aggregator.state_norms());
                 w.record(&RoundRecord {
                     round,
                     test_accuracy: sums.accuracy(),
@@ -398,6 +445,8 @@ pub fn run(
                     sim_seconds: comms.totals().sim_seconds,
                     dropped: dropped_since_eval,
                     deadline_misses: misses_since_eval,
+                    agg: &agg_label,
+                    server_state: &server_state,
                 })?;
                 dropped_since_eval = 0;
                 misses_since_eval = 0;
@@ -422,7 +471,12 @@ pub fn run(
             ("bytes_down", totals.bytes_down.to_string()),
             ("codec", codec_label.clone()),
             ("sim_seconds", format!("{:.1}", totals.sim_seconds)),
+            ("agg", agg_label.clone()),
         ];
+        let server_state = fmt_state_norms(&aggregator.state_norms());
+        if !server_state.is_empty() {
+            fields.push(("server_state", server_state));
+        }
         if fleet.is_some() {
             fields.push(("fleet_profile", opts.fleet.profile.label().to_string()));
             fields.push(("dispatched", fleet_totals.dispatched.to_string()));

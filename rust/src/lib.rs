@@ -8,9 +8,9 @@
 //! Architecture (see `DESIGN.md`):
 //!
 //! * **L3 (this crate)** — the federated coordinator: round loop, client
-//!   sampling, weighted model averaging, data partitioning, communication
-//!   accounting, LR sweeps, and every experiment harness in the paper's
-//!   evaluation. Python never runs at this layer.
+//!   sampling, pluggable server-side aggregation, data partitioning,
+//!   communication accounting, LR sweeps, and every experiment harness in
+//!   the paper's evaluation. Python never runs at this layer.
 //! * **L2/L1 (build time)** — the paper's five model families written in
 //!   JAX with Pallas kernels on the hot path, AOT-lowered to HLO text in
 //!   `artifacts/` by `make artifacts` and executed here via PJRT
@@ -25,7 +25,8 @@
 //! Module map:
 //!
 //! * [`federated`] — Algorithm 1: server round loop, ClientUpdate,
-//!   per-round sampling.
+//!   per-round sampling, and the pluggable aggregation registry
+//!   ([`federated::aggregate`]: server optimizers + robust rules).
 //! * [`coordinator`] — the simulated device fleet: per-client profiles,
 //!   event-queue scheduling (over-selection, deadlines, straggler
 //!   drops), parallel ClientUpdate dispatch.

@@ -17,6 +17,7 @@ use anyhow::bail;
 use fedavg::baselines::oneshot;
 use fedavg::config::{BatchSize, ConfigFile, FedConfig, Partition};
 use fedavg::coordinator::{FleetConfig, FleetProfile, FleetSim};
+use fedavg::federated::AggConfig;
 use fedavg::exper::{self};
 use fedavg::runtime::Engine;
 use fedavg::telemetry::{FleetRoundRecord, FleetWriter};
@@ -39,6 +40,7 @@ fn real_main() -> Result<()> {
         "table3" => exper::table3::run(&engine()?, &args),
         "table4" => exper::table4::run(&engine()?, &args),
         "comm" => exper::table_comm::run(&engine()?, &args),
+        "agg" => exper::table_agg::run(&engine()?, &args),
         "figure" | "figures" => exper::figures::run(&engine()?, &args),
         "run" => cmd_run(&args),
         "fleet" => cmd_fleet(&args),
@@ -62,9 +64,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         "config", "model", "c", "e", "b", "lr", "lr-decay", "rounds", "eval-every",
         "target", "partition", "scale", "eval-cap", "seed", "out", "availability",
         "track-train-loss", "name", "dp-clip", "dp-sigma", "secure-agg", "topk",
-        "quant-bits", "codec", "down-codec",
+        "quant-bits", "codec", "down-codec", "agg", "server-lr", "server-momentum",
+        "prox-mu",
     ])?;
-    let cfg = fed_config_from_args(args)?;
+    let file = config_file_from_args(args)?;
+    let cfg = fed_config_from(file.as_ref(), args)?;
 
     let scale = args.f64_or("scale", 0.05)?;
     let part = Partition::parse(&args.str_or("partition", "iid"))?;
@@ -90,6 +94,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     opts.secure_agg = args.has("secure-agg");
     opts.transport = transport_from_args(args)?;
+    opts.agg = agg_config_from(file.as_ref(), args)?;
     let name = args.str_or("name", &format!("run-{}", cfg.label().replace(' ', "_")));
     opts.telemetry = Some(fedavg::telemetry::RunWriter::create(
         args.str_or("out", "runs"),
@@ -154,10 +159,39 @@ fn transport_from_args(args: &Args) -> Result<fedavg::comms::TransportConfig> {
     fedavg::comms::TransportConfig::parse(up.as_deref(), args.str_opt("down-codec"))
 }
 
+/// Load `--config FILE` once; `run`/`fleet` layer both the FedConfig
+/// and the aggregation keys out of it.
+fn config_file_from_args(args: &Args) -> Result<Option<ConfigFile>> {
+    match args.str_opt("config") {
+        Some(path) => Ok(Some(ConfigFile::load(std::path::Path::new(path))?)),
+        None => Ok(None),
+    }
+}
+
+/// Aggregation knobs shared by `run` and `fleet`: defaults ← config-file
+/// keys (`agg`, `server_lr`, …) ← CLI flags, validated against the
+/// `federated::aggregate` registry so a bad `--agg` fails fast.
+fn agg_config_from(file: Option<&ConfigFile>, args: &Args) -> Result<AggConfig> {
+    let base = match file {
+        Some(cf) => AggConfig::from_config(cf)?,
+        None => AggConfig::default(),
+    };
+    let cfg = AggConfig {
+        spec: args.str_or("agg", &base.spec),
+        // unset resolves per rule (1.0; 0.01 for fedadam, whose
+        // Adam-normalized step diverges at η_s = 1)
+        server_lr: args.f64_opt("server-lr")?.or(base.server_lr),
+        server_momentum: args.f64_or("server-momentum", base.server_momentum)?,
+        prox_mu: args.f64_or("prox-mu", base.prox_mu)?,
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
 /// Parse the FedConfig-shaped flags shared by `run` and `fleet`.
-fn fed_config_from_args(args: &Args) -> Result<FedConfig> {
-    let mut cfg = match args.str_opt("config") {
-        Some(path) => ConfigFile::load(std::path::Path::new(path))?.fed_config()?,
+fn fed_config_from(file: Option<&ConfigFile>, args: &Args) -> Result<FedConfig> {
+    let mut cfg = match file {
+        Some(cf) => cf.fed_config()?,
         None => FedConfig::default(),
     };
     if let Some(m) = args.str_opt("model") {
@@ -190,9 +224,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "target", "partition", "scale", "eval-cap", "seed", "out", "name",
         "track-train-loss", "fleet-profile", "overselect", "deadline", "workers",
         "step-cost", "clients", "sim-only", "model-bytes", "steps", "codec",
-        "down-codec", "topk", "quant-bits",
+        "down-codec", "topk", "quant-bits", "agg", "server-lr", "server-momentum",
+        "prox-mu",
     ])?;
-    let cfg = fed_config_from_args(args)?;
+    let file = config_file_from_args(args)?;
+    let cfg = fed_config_from(file.as_ref(), args)?;
     let fleet = FleetConfig {
         profile: FleetProfile::parse(&args.str_or("fleet-profile", "mobile"))?,
         overselect: args.f64_or("overselect", 0.0)?,
@@ -217,6 +253,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         bail!("--overselect must be a non-negative factor (e.g. 0.3)");
     }
 
+    // Parse (and validate) the aggregation flags up front: a bad --agg
+    // must fail fast on the sim-only path too, not be silently ignored.
+    let agg = agg_config_from(file.as_ref(), args)?;
+
     let have_artifacts = Engine::default_dir().join("manifest.json").exists();
     if args.has("sim-only") || !have_artifacts {
         if !args.has("sim-only") {
@@ -225,6 +265,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                  (event-queue schedule + accounting only)",
                 Engine::default_dir()
             );
+        }
+        for f in ["agg", "server-lr", "server-momentum", "prox-mu"] {
+            if args.has(f) {
+                println!(
+                    "note: --{f} only applies to training runs; the training-free \
+                     simulation schedules rounds without an aggregation step"
+                );
+            }
         }
         return cmd_fleet_sim(args, &cfg, &fleet);
     }
@@ -245,6 +293,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         eval_cap: Some(args.usize_or("eval-cap", 1000)?),
         fleet: fleet.clone(),
         transport: transport_from_args(args)?,
+        agg,
         ..Default::default()
     };
     let name = args.str_or("name", &format!("fleet-{}", cfg.label().replace(' ', "_")));
@@ -431,6 +480,9 @@ USAGE:
   fedavg table4 [--scale F] [--rounds N]
   fedavg comm   [--codecs c1,c2,..] [--down delta|dense|legacy] [--target A]
              [--model M] [--scale F] [--rounds N]
+  fedavg agg    [--aggs a1,a2,..] [--corrupt FRAC] [--partitions iid,noniid]
+             [--target A] [--model M] [--scale F] [--rounds N]
+             [--server-lr F] [--server-momentum B] [--prox-mu MU]
   fedavg figure <N|all> [--scale F] [--rounds N]
   fedavg run [--config FILE] [--model M] [--c F] [--e N] [--b N|inf]
              [--lr F] [--rounds N] [--partition iid|noniid|unbalanced|natural]
@@ -438,6 +490,7 @@ USAGE:
              [--dp-sigma S --dp-clip C] [--secure-agg]
              [--codec SPEC] [--down-codec SPEC]
              [--topk FRAC] [--quant-bits B]
+             [--agg RULE] [--server-lr F] [--server-momentum B] [--prox-mu MU]
   fedavg fleet [--fleet-profile uniform|mobile|flaky] [--overselect RHO]
              [--deadline SECONDS] [--workers N] [--clients K] [--sim-only]
              [--step-cost S] [--model-bytes B] [--steps U] [+ run flags]
@@ -450,6 +503,18 @@ overwrite patch vs the client's acked model version), `topk:<count|frac>`,
 prices every link from the same pipeline that encodes it; per-round
 up_bytes/down_bytes/codec land in runs/<name>/curve.csv. `comm` sweeps
 codecs and prints rounds-to-target x bytes-per-round.
+
+Aggregation RULEs come from the federated::aggregate registry: `fedavg`
+(the paper's weighted averaging, the default), `fedavgm[:beta]` (server
+momentum), `fedadam[:tau]` (server Adam over the mean delta), and the
+robust `trimmed:<frac>` / `median` (coordinate-wise, for corrupted or
+noisy cohorts; these need individual updates, so they refuse
+--secure-agg and --dp-sigma) — e.g. --agg trimmed:0.1 --server-lr 0.5.
+--server-lr left unset resolves per rule (1.0; 0.01 for fedadam's
+Adam-normalized steps). `--prox-mu MU` adds FedProx's proximal term to
+every ClientUpdate. The rule + server
+optimizer state norms land in runs/<name>/curve.csv; `agg` sweeps rules
+across IID/non-IID partitions with label-corrupted clients.
 
 `fleet` trains through the fleet coordinator: persistent device profiles
 (bandwidth/compute/diurnal availability), over-selection with straggler

@@ -4,7 +4,10 @@
 //! vector (L2 ravels the pytree), so the server-side FedAvg update
 //! `w_{t+1} = Σ_k (n_k/n) w^k` is a weighted mean of plain vectors.
 //! These routines are written to stay memory-bandwidth-bound: single
-//! pass, chunk-unrolled so LLVM auto-vectorizes them.
+//! pass, chunk-unrolled so LLVM auto-vectorizes them. The order-statistic
+//! kernels ([`trimmed_mean`], [`median`]) under the robust aggregators
+//! (`federated::aggregate`, DESIGN.md §7) are the exception: they sort
+//! per coordinate, O(dim · m log m) for an m-client cohort.
 
 /// A model's parameters (or a gradient) as a flat dense vector.
 pub type ParamVec = Vec<f32>;
@@ -86,6 +89,73 @@ pub fn mean(items: &[&[f32]]) -> ParamVec {
     weighted_mean(&weighted)
 }
 
+/// Shared scaffold of the coordinate-wise order-statistic reducers:
+/// gather column `j` across all vectors into a scratch buffer, sort it
+/// with `total_cmp` (total order ⇒ the result is independent of input
+/// order), and reduce the sorted column to one value.
+fn columnwise_sorted(
+    items: &[&[f32]],
+    what: &str,
+    mut reduce: impl FnMut(&[f32]) -> f32,
+) -> ParamVec {
+    assert!(!items.is_empty(), "{what} of nothing");
+    let dim = items[0].len();
+    for x in items {
+        assert_eq!(x.len(), dim, "{what}: length mismatch");
+    }
+    let mut col = vec![0.0f32; items.len()];
+    let mut out = vec![0.0f32; dim];
+    for (j, o) in out.iter_mut().enumerate() {
+        for (slot, x) in col.iter_mut().zip(items) {
+            *slot = x[j];
+        }
+        col.sort_unstable_by(f32::total_cmp);
+        *o = reduce(&col);
+    }
+    out
+}
+
+/// Coordinate-wise β-trimmed mean over client vectors (unweighted).
+///
+/// For each coordinate `j`, sort the m client values, drop the
+/// `t = min(⌊β·m⌋, ⌈m/2⌉-1)` smallest and `t` largest, and average the
+/// rest (f64 accumulation). `β ∈ [0, 0.5)`; `β = 0` is the plain
+/// unweighted mean, and the clamp on `t` keeps at least one value per
+/// coordinate however small the cohort gets (straggler drops shrink `m`
+/// round to round). Yin et al.'s Byzantine-robust rule: up to `t`
+/// arbitrarily corrupted clients per coordinate cannot move the result
+/// outside the honest values' range.
+///
+/// Panics if `items` is empty, lengths mismatch, or `β ∉ [0, 0.5)`.
+pub fn trimmed_mean(items: &[&[f32]], trim_frac: f64) -> ParamVec {
+    assert!(
+        (0.0..0.5).contains(&trim_frac),
+        "trimmed_mean: trim fraction must be in [0, 0.5), got {trim_frac}"
+    );
+    let m = items.len();
+    let t = ((m as f64 * trim_frac) as usize).min(m.saturating_sub(1) / 2);
+    columnwise_sorted(items, "trimmed_mean", |col| {
+        let kept = &col[t..m - t];
+        (kept.iter().map(|&v| v as f64).sum::<f64>() / kept.len() as f64) as f32
+    })
+}
+
+/// Coordinate-wise median over client vectors (unweighted): the maximal
+/// trim, tolerating just under half the cohort being corrupted. Even
+/// cohorts average the two middle values.
+///
+/// Panics if `items` is empty or lengths mismatch.
+pub fn median(items: &[&[f32]]) -> ParamVec {
+    let m = items.len();
+    columnwise_sorted(items, "median", |col| {
+        if m % 2 == 1 {
+            col[m / 2]
+        } else {
+            ((col[m / 2 - 1] as f64 + col[m / 2] as f64) / 2.0) as f32
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,5 +214,49 @@ mod tests {
     fn norms() {
         assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
         assert!((l2_dist(&[1.0, 1.0], &[4.0, 5.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_tails() {
+        // 5 clients, one wildly corrupted: β=0.2 trims exactly the
+        // extremes, leaving the honest middle three
+        let vs: Vec<Vec<f32>> = vec![
+            vec![1.0, -9000.0],
+            vec![2.0, 1.0],
+            vec![3.0, 2.0],
+            vec![4.0, 3.0],
+            vec![1e6, 9000.0],
+        ];
+        let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+        let tm = trimmed_mean(&refs, 0.2);
+        assert_eq!(tm, vec![3.0, 2.0]);
+        // β=0 is the plain unweighted mean
+        let m0 = trimmed_mean(&refs[..4], 0.0);
+        assert!((m0[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn trimmed_mean_tiny_cohorts_keep_a_value() {
+        // m=1 and m=2: the trim clamp must leave at least one value
+        let a = vec![5.0f32];
+        let b = vec![7.0f32];
+        assert_eq!(trimmed_mean(&[&a[..]], 0.4), vec![5.0]);
+        assert_eq!(trimmed_mean(&[&a[..], &b[..]], 0.4), vec![6.0]);
+    }
+
+    #[test]
+    fn median_odd_even_and_outlier() {
+        let vs: Vec<Vec<f32>> = vec![vec![1.0], vec![2.0], vec![1e9]];
+        let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(median(&refs), vec![2.0]); // odd: middle, outlier gone
+        assert_eq!(median(&refs[..2]), vec![1.5]); // even: mean of middles
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn robust_kernels_reject_mismatch() {
+        let a = vec![1.0f32; 3];
+        let b = vec![1.0f32; 4];
+        median(&[&a[..], &b[..]]);
     }
 }

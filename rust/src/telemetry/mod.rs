@@ -43,6 +43,13 @@ pub struct RoundRecord<'a> {
     pub dropped: usize,
     /// Round deadlines missed since the previous record.
     pub deadline_misses: usize,
+    /// Active aggregation rule, the canonical registry label
+    /// (`"fedavg"`, `"fedavgm:0.9"`, `"trimmed:0.1"`, …).
+    pub agg: &'a str,
+    /// Server-optimizer state norms as `;`-joined `name=l2` pairs
+    /// (`federated::aggregate::fmt_state_norms`); empty for stateless
+    /// rules like plain FedAvg.
+    pub server_state: &'a str,
 }
 
 /// Sanitize `name` and create `<root>/<name>/`. Shared by both writers.
@@ -69,7 +76,7 @@ impl RunWriter {
         };
         writeln!(
             w.curve,
-            "round,test_accuracy,test_loss,train_loss,clients,lr,up_bytes,down_bytes,codec,sim_seconds,dropped,deadline_misses"
+            "round,test_accuracy,test_loss,train_loss,clients,lr,up_bytes,down_bytes,codec,sim_seconds,dropped,deadline_misses,agg,server_state"
         )?;
         Ok(w)
     }
@@ -81,7 +88,7 @@ impl RunWriter {
     pub fn record(&mut self, r: &RoundRecord<'_>) -> Result<()> {
         writeln!(
             self.curve,
-            "{},{:.6},{:.6},{},{},{:.6},{},{},{},{:.3},{},{}",
+            "{},{:.6},{:.6},{},{},{:.6},{},{},{},{:.3},{},{},{},{}",
             r.round,
             r.test_accuracy,
             r.test_loss,
@@ -93,7 +100,9 @@ impl RunWriter {
             r.codec,
             r.sim_seconds,
             r.dropped,
-            r.deadline_misses
+            r.deadline_misses,
+            r.agg,
+            r.server_state
         )?;
         if !self.quiet {
             let tl = r
@@ -223,6 +232,8 @@ mod tests {
             sim_seconds: 4.5,
             dropped: 0,
             deadline_misses: 0,
+            agg: "fedavg",
+            server_state: "",
         })
         .unwrap();
         w.record(&RoundRecord {
@@ -238,6 +249,8 @@ mod tests {
             sim_seconds: 9.0,
             dropped: 3,
             deadline_misses: 1,
+            agg: "fedavgm:0.9",
+            server_state: "momentum=1.000000e0",
         })
         .unwrap();
         let summary = w
@@ -246,12 +259,13 @@ mod tests {
         let csv = std::fs::read_to_string(dir.join("curve.csv")).unwrap();
         assert!(csv.starts_with("round,"));
         assert!(csv.lines().next().unwrap().contains("up_bytes,down_bytes,codec"));
-        assert!(csv.lines().next().unwrap().ends_with("dropped,deadline_misses"));
+        assert!(csv.lines().next().unwrap().ends_with("dropped,deadline_misses,agg,server_state"));
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.contains("2,0.600000"));
         assert!(csv.contains("123,999,dense/dense"));
         assert!(csv.contains("456,888,topk:0.01|q8/delta"));
-        assert!(csv.lines().nth(2).unwrap().ends_with(",3,1"));
+        assert!(csv.lines().nth(1).unwrap().ends_with(",0,0,fedavg,"));
+        assert!(csv.lines().nth(2).unwrap().ends_with(",3,1,fedavgm:0.9,momentum=1.000000e0"));
         let json = std::fs::read_to_string(summary).unwrap();
         let parsed = crate::util::json::Json::parse(&json).unwrap();
         assert_eq!(parsed.get("rounds").unwrap().as_usize().unwrap(), 2);

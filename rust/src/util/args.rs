@@ -73,6 +73,19 @@ impl Args {
         }
     }
 
+    /// Like [`f64_or`](Self::f64_or) but with no default: `Ok(None)`
+    /// when the flag is absent (for knobs whose default is resolved
+    /// downstream, e.g. the per-rule `--server-lr`).
+    pub fn f64_opt(&self, key: &str) -> Result<Option<f64>> {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow!("--{key}: bad number {v:?}")),
+        }
+    }
+
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -122,5 +135,13 @@ mod tests {
     fn bad_number_errors() {
         let a = parse("--rounds ten");
         assert!(a.usize_or("rounds", 1).is_err());
+    }
+
+    #[test]
+    fn f64_opt_absent_present_bad() {
+        let a = parse("--server-lr 0.5");
+        assert_eq!(a.f64_opt("server-lr").unwrap(), Some(0.5));
+        assert_eq!(a.f64_opt("absent").unwrap(), None);
+        assert!(parse("--server-lr fast").f64_opt("server-lr").is_err());
     }
 }

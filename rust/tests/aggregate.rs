@@ -1,0 +1,188 @@
+//! Aggregation-subsystem invariants (artifact-free).
+//!
+//! The load-bearing guarantee: the default [`AggConfig`] (`fedavg`,
+//! η_s = 1) reproduces the pre-subsystem server update — an inlined
+//! `params::weighted_mean` followed by `axpy(θ, 1.0, Δ̄)` — **bit for
+//! bit**, so extracting the rule behind the `Aggregator` trait changed
+//! no trajectory and no byte accounting. Plus the rule-specific maths:
+//! momentum/Adam recurrences, robust rules ignoring weights and killing
+//! outliers, and FedProx's proximal step.
+
+use fedavg::data::rng::Rng;
+use fedavg::federated::aggregate::{AggConfig, Aggregator as _};
+use fedavg::params;
+
+fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.gauss_f32() * scale).collect()
+}
+
+/// The seed's inlined server update, verbatim: weighted mean + axpy.
+fn legacy_update(theta: &mut [f32], deltas: &[(f32, &[f32])]) {
+    let avg = params::weighted_mean(deltas);
+    params::axpy(theta, 1.0, &avg);
+}
+
+#[test]
+fn default_aggconfig_is_bit_identical_to_the_legacy_update() {
+    for case in 0..50u64 {
+        let mut rng = Rng::new(case);
+        let dim = 1 + rng.below(500);
+        let m = 1 + rng.below(12);
+        let vecs: Vec<Vec<f32>> = (0..m).map(|_| rand_vec(&mut rng, dim, 1.5)).collect();
+        let ws: Vec<f32> = (0..m).map(|_| 1.0 + rng.f32() * 600.0).collect();
+        let deltas: Vec<(f32, &[f32])> =
+            ws.iter().zip(&vecs).map(|(w, v)| (*w, v.as_slice())).collect();
+        let mut theta_legacy = rand_vec(&mut rng, dim, 1.0);
+        let mut theta_new = theta_legacy.clone();
+
+        legacy_update(&mut theta_legacy, &deltas);
+
+        let mut agg = AggConfig::default().build().unwrap();
+        assert_eq!(agg.label(), "fedavg");
+        let combined = agg.combine(&deltas).unwrap();
+        let step = agg.step(case, combined).unwrap();
+        params::axpy(&mut theta_new, 1.0, &step);
+
+        for (i, (a, b)) in theta_legacy.iter().zip(&theta_new).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "case {case}: coord {i} diverged from the legacy update"
+            );
+        }
+        assert!(agg.state_norms().is_empty(), "fedavg must stay stateless");
+    }
+}
+
+#[test]
+fn fedavg_server_lr_scales_the_step() {
+    let cfg = AggConfig {
+        server_lr: Some(0.5),
+        ..Default::default()
+    };
+    let mut agg = cfg.build().unwrap();
+    let d = vec![2.0f32, -4.0, 0.0];
+    let step = agg.step(1, d).unwrap();
+    assert_eq!(step, vec![1.0, -2.0, 0.0]);
+}
+
+#[test]
+fn fedadam_unset_server_lr_resolves_to_adam_scaled_default() {
+    // unset η_s is per-rule: 1.0 for the mean/robust rules, 0.01 for
+    // fedadam (whose step is ~±η_s per coordinate once u warms up) — so
+    // the plain CLI `--agg fedadam` trains instead of diverging
+    let mut adam = AggConfig {
+        spec: "fedadam".into(),
+        ..Default::default()
+    }
+    .build()
+    .unwrap();
+    // m = 0.1, u = 0.01·1, step = η_s·0.1/(0.1 + 0.001) ≈ 0.99·η_s
+    let s = adam.step(1, vec![1.0f32]).unwrap();
+    assert!(
+        s[0] > 0.005 && s[0] < 0.05,
+        "η_s default not Adam-scaled: step {}",
+        s[0]
+    );
+    // the mean rules keep the bit-identical η_s = 1 default
+    let mut avg = AggConfig::default().build().unwrap();
+    let d = vec![0.25f32, -1.5];
+    assert_eq!(avg.step(1, d.clone()).unwrap(), d);
+}
+
+#[test]
+fn fedavgm_momentum_recurrence() {
+    // v_t = β·v_{t-1} + Δ̄_t ; step = η_s·v_t — checked over two rounds
+    let cfg = AggConfig {
+        spec: "fedavgm:0.5".into(),
+        server_lr: Some(2.0),
+        ..Default::default()
+    };
+    let mut agg = cfg.build().unwrap();
+    assert_eq!(agg.label(), "fedavgm:0.5");
+    assert!(agg.state_norms().is_empty(), "no state before the first step");
+
+    // round 1: v = d1, step = 2·d1
+    let s1 = agg.step(1, vec![1.0, -2.0]).unwrap();
+    assert_eq!(s1, vec![2.0, -4.0]);
+    // round 2: v = 0.5·d1 + d2 = [0.5+3, -1+1] = [3.5, 0.0], step = 2·v
+    let s2 = agg.step(2, vec![3.0, 1.0]).unwrap();
+    assert_eq!(s2, vec![7.0, 0.0]);
+
+    let norms = agg.state_norms();
+    assert_eq!(norms.len(), 1);
+    assert_eq!(norms[0].0, "momentum");
+    assert!((norms[0].1 - 3.5).abs() < 1e-6, "‖v‖ = {}", norms[0].1);
+}
+
+#[test]
+fn fedadam_moment_recurrence() {
+    // m = β1·m + (1-β1)·d ; u = β2·u + (1-β2)·d² ; step = η·m/(√u + τ)
+    let cfg = AggConfig {
+        spec: "fedadam:0.1".into(), // τ = 0.1 for easy arithmetic
+        server_lr: Some(1.0),
+        server_momentum: 0.5, // β1
+        ..Default::default()
+    };
+    let mut agg = cfg.build().unwrap();
+    assert_eq!(agg.label(), "fedadam:0.1");
+    let s1 = agg.step(1, vec![1.0f32]).unwrap();
+    // m = 0.5, u = 0.01·1 = 0.01, step = 0.5/(0.1 + 0.1) = 2.5
+    assert!((s1[0] - 2.5).abs() < 1e-5, "{}", s1[0]);
+    let norms = agg.state_norms();
+    assert_eq!(norms.len(), 2);
+    assert_eq!((norms[0].0, norms[1].0), ("m", "u"));
+    assert!((norms[0].1 - 0.5).abs() < 1e-6);
+    assert!((norms[1].1 - 0.01).abs() < 1e-7);
+    // adaptivity: a second identical delta grows u, shrinking nothing
+    // catastrophically — step stays finite and sign-correct
+    let s2 = agg.step(2, vec![1.0f32]).unwrap();
+    assert!(s2[0].is_finite() && s2[0] > 0.0);
+}
+
+#[test]
+fn robust_rules_ignore_weights_and_survive_a_byzantine_client() {
+    // 9 honest clients report Δ = 1 per coordinate; one Byzantine client
+    // reports 1e6 with a huge claimed n_k. FedAvg is destroyed; the
+    // robust order statistics are untouched.
+    let honest = vec![1.0f32; 4];
+    let evil = vec![1e6f32; 4];
+    let mut deltas: Vec<(f32, &[f32])> = (0..9).map(|_| (1.0, honest.as_slice())).collect();
+    deltas.push((1000.0, evil.as_slice()));
+
+    let fedavg = AggConfig::default().build().unwrap();
+    let broken = fedavg.combine(&deltas).unwrap();
+    assert!(broken[0] > 1e5, "weighted mean should be dominated: {}", broken[0]);
+
+    for spec in ["trimmed:0.1", "median"] {
+        let agg = AggConfig {
+            spec: spec.into(),
+            ..Default::default()
+        }
+        .build()
+        .unwrap();
+        let robust = agg.combine(&deltas).unwrap();
+        for (j, v) in robust.iter().enumerate() {
+            assert_eq!(*v, 1.0, "{spec}: coord {j} moved by the Byzantine client");
+        }
+    }
+}
+
+#[test]
+fn robust_rules_tolerate_variable_cohort_size() {
+    // straggler drops shrink m round to round; the trim must re-derive
+    // from the realized cohort and never empty it
+    let agg = AggConfig {
+        spec: "trimmed:0.4".into(),
+        ..Default::default()
+    }
+    .build()
+    .unwrap();
+    for m in 1..=7 {
+        let vecs: Vec<Vec<f32>> = (0..m).map(|i| vec![i as f32]).collect();
+        let deltas: Vec<(f32, &[f32])> = vecs.iter().map(|v| (1.0, v.as_slice())).collect();
+        let out = agg.combine(&deltas).unwrap();
+        assert!(out[0].is_finite(), "m={m}");
+        assert!(out[0] >= 0.0 && out[0] <= (m - 1) as f32, "m={m}: {}", out[0]);
+    }
+}

@@ -7,6 +7,7 @@
 use fedavg::baselines::oneshot;
 use fedavg::comms::TransportConfig;
 use fedavg::config::{BatchSize, FedConfig, Partition};
+use fedavg::federated::AggConfig;
 use fedavg::exper::mnist_fed;
 use fedavg::federated::{self, ServerOptions};
 use fedavg::runtime::Engine;
@@ -239,6 +240,76 @@ fn mismatched_model_and_dataset_rejected() {
         ..base_cfg()
     };
     assert!(federated::run(&eng, &fed, &cfg, opts()).is_err());
+}
+
+#[test]
+fn aggregation_rules_default_bit_identical_variants_run() {
+    let Some(eng) = engine() else { return };
+    let fed = mnist_fed(0.05, Partition::Iid, 30);
+    let mut cfg = base_cfg();
+    cfg.rounds = 4;
+
+    // regression: an explicit --agg fedavg (the default AggConfig) must
+    // reproduce the default-options run bit-for-bit — trajectory AND
+    // byte accounting
+    let plain = federated::run(&eng, &fed, &cfg, opts()).unwrap();
+    let mut o = opts();
+    o.agg = AggConfig {
+        spec: "fedavg".into(),
+        ..Default::default()
+    };
+    let explicit = federated::run(&eng, &fed, &cfg, o).unwrap();
+    assert_eq!(plain.final_theta, explicit.final_theta, "trajectory diverged");
+    assert_eq!(plain.accuracy.points(), explicit.accuracy.points());
+    assert_eq!(plain.comm.bytes_up, explicit.comm.bytes_up);
+    assert_eq!(plain.comm.bytes_down, explicit.comm.bytes_down);
+
+    // every registry rule trains to a finite model and actually learns
+    // on the clean IID workload, each on its unset-η_s default (fedadam
+    // resolves to its Adam-scaled 0.01 automatically)
+    for spec in ["fedavgm", "fedadam", "trimmed:0.2", "median"] {
+        let mut o = opts();
+        o.agg.spec = spec.into();
+        let res = federated::run(&eng, &fed, &cfg, o).unwrap();
+        assert!(
+            res.final_theta.iter().all(|v| v.is_finite()),
+            "{spec}: non-finite parameters"
+        );
+        assert!(
+            res.accuracy.best_value().unwrap() > 0.15,
+            "{spec}: no learning ({:.3})",
+            res.accuracy.best_value().unwrap()
+        );
+        assert_ne!(res.final_theta, plain.final_theta, "{spec}: rule had no effect");
+    }
+
+    // FedProx: μ > 0 anchors the trajectory (different from plain) and
+    // stays finite
+    let mut o = opts();
+    o.agg.prox_mu = 0.1;
+    let prox = federated::run(&eng, &fed, &cfg, o).unwrap();
+    assert!(prox.final_theta.iter().all(|v| v.is_finite()));
+    assert_ne!(prox.final_theta, plain.final_theta);
+
+    // robust rules need individual updates: rejected under secure agg
+    let mut o = opts();
+    o.secure_agg = true;
+    o.agg.spec = "median".into();
+    assert!(federated::run(&eng, &fed, &cfg, o).is_err());
+    // ...and reject mean-calibrated DP noise (order-statistic combines
+    // have O(clip) sensitivity, not clip/m)
+    let mut o = opts();
+    o.dp = Some(fedavg::federated::server::DpConfig {
+        clip_norm: 1.0,
+        sigma: 0.5,
+    });
+    o.agg.spec = "trimmed:0.2".into();
+    assert!(federated::run(&eng, &fed, &cfg, o).is_err());
+    // ...but the server optimizers compose with it (mean-combine)
+    let mut o = opts();
+    o.secure_agg = true;
+    o.agg.spec = "fedavgm".into();
+    assert!(federated::run(&eng, &fed, &cfg, o).is_ok());
 }
 
 #[test]

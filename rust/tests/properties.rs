@@ -79,6 +79,72 @@ fn prop_interpolate_linearity() {
     }
 }
 
+// ------------------------------------------- robust-aggregation invariants
+
+#[test]
+fn prop_trimmed_mean_and_median_permutation_invariant() {
+    // the aggregate must not depend on the order clients report in
+    // (finish order varies with scheduling) — bitwise, thanks to the
+    // total_cmp sort inside the kernels
+    for case in 0..CASES {
+        let mut rng = Rng::new(10_000 + case);
+        let dim = 1 + rng.below(100);
+        let m = 2 + rng.below(12);
+        let vecs: Vec<Vec<f32>> = (0..m).map(|_| rand_vec(&mut rng, dim, 3.0)).collect();
+        let frac = rng.f64() * 0.49;
+        let mut order: Vec<usize> = (0..m).collect();
+        rng.shuffle(&mut order);
+        let a: Vec<&[f32]> = vecs.iter().map(|v| v.as_slice()).collect();
+        let b: Vec<&[f32]> = order.iter().map(|&i| vecs[i].as_slice()).collect();
+        for (x, y) in params::trimmed_mean(&a, frac).iter().zip(&params::trimmed_mean(&b, frac)) {
+            assert_eq!(x.to_bits(), y.to_bits(), "case {case}: trimmed not perm-invariant");
+        }
+        for (x, y) in params::median(&a).iter().zip(&params::median(&b)) {
+            assert_eq!(x.to_bits(), y.to_bits(), "case {case}: median not perm-invariant");
+        }
+    }
+}
+
+#[test]
+fn prop_trimmed_mean_and_median_bounded_by_client_extremes() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(11_000 + case);
+        let dim = 1 + rng.below(80);
+        let m = 1 + rng.below(15);
+        let vecs: Vec<Vec<f32>> = (0..m).map(|_| rand_vec(&mut rng, dim, 5.0)).collect();
+        let refs: Vec<&[f32]> = vecs.iter().map(|v| v.as_slice()).collect();
+        let frac = rng.f64() * 0.49;
+        let tm = params::trimmed_mean(&refs, frac);
+        let med = params::median(&refs);
+        for d in 0..dim {
+            let lo = vecs.iter().map(|v| v[d]).fold(f32::INFINITY, f32::min);
+            let hi = vecs.iter().map(|v| v[d]).fold(f32::NEG_INFINITY, f32::max);
+            for (tag, v) in [("trimmed", tm[d]), ("median", med[d])] {
+                assert!(
+                    v >= lo - 1e-4 && v <= hi + 1e-4,
+                    "case {case} {tag}: coord {d} = {v} outside [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_trimmed_zero_equals_unweighted_mean() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(12_000 + case);
+        let dim = 1 + rng.below(60);
+        let m = 1 + rng.below(10);
+        let vecs: Vec<Vec<f32>> = (0..m).map(|_| rand_vec(&mut rng, dim, 2.0)).collect();
+        let refs: Vec<&[f32]> = vecs.iter().map(|v| v.as_slice()).collect();
+        let tm = params::trimmed_mean(&refs, 0.0);
+        let mean = params::mean(&refs);
+        for d in 0..dim {
+            assert!((tm[d] - mean[d]).abs() < 1e-4, "case {case} coord {d}");
+        }
+    }
+}
+
 // ---------------------------------------------------- partition invariants
 
 #[test]

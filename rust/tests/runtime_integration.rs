@@ -233,6 +233,7 @@ fn worker_pool_runs_client_updates_with_per_thread_engines() {
                 epochs: 1,
                 batch: BatchSize::Fixed(10),
                 lr: 0.05,
+                prox_mu: 0.0,
                 shuffle_seed: client as u64,
             };
             let res = local_update(&model, &data2, &idxs, &theta2, &spec).unwrap();
