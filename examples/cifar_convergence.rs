@@ -87,7 +87,7 @@ fn main() -> fedavg::Result<()> {
         ),
     ] {
         let opts = ServerOptions {
-            telemetry: Some(fedavg::telemetry::RunWriter::create(
+            telemetry: Some(fedavg::telemetry::RunWriter::create_overwrite(
                 "runs",
                 &format!("cifar-{name}"),
             )?),

@@ -57,7 +57,7 @@ fn main() -> fedavg::Result<()> {
             b.label()
         );
         let opts = ServerOptions {
-            telemetry: Some(fedavg::telemetry::RunWriter::create(
+            telemetry: Some(fedavg::telemetry::RunWriter::create_overwrite(
                 "runs",
                 &format!("mnist-federated-{name}"),
             )?),

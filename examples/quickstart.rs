@@ -41,7 +41,7 @@ fn main() -> fedavg::Result<()> {
 
     // 4. run, with telemetry under runs/quickstart/
     let opts = ServerOptions {
-        telemetry: Some(fedavg::telemetry::RunWriter::create("runs", "quickstart")?),
+        telemetry: Some(fedavg::telemetry::RunWriter::create_overwrite("runs", "quickstart")?),
         eval_cap: Some(600),
         ..Default::default()
     };

@@ -54,7 +54,7 @@ fn main() -> fedavg::Result<()> {
                 ..Default::default()
             };
             let opts = ServerOptions {
-                telemetry: Some(fedavg::telemetry::RunWriter::create(
+                telemetry: Some(fedavg::telemetry::RunWriter::create_overwrite(
                     "runs",
                     &format!("shakespeare-{tag}-{algo}"),
                 )?),

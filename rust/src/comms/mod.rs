@@ -19,10 +19,10 @@
 pub mod transport;
 pub mod wire;
 
-pub use transport::{ModelStore, Transport, TransportConfig};
+pub use transport::{ModelStore, Transport, TransportConfig, TransportState};
 pub use wire::Pipeline;
 
-use crate::data::rng::{hash3_unit, Rng};
+use crate::data::rng::{hash3_unit, Rng, RngState};
 
 /// Network model for the synchronous-round protocol.
 #[derive(Debug, Clone)]
@@ -50,7 +50,7 @@ impl Default for CommModel {
 }
 
 /// Running totals over a training run.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CommTotals {
     pub rounds: u64,
     pub bytes_up: u64,
@@ -152,6 +152,31 @@ impl CommSim {
     pub fn totals(&self) -> CommTotals {
         self.totals
     }
+
+    /// Capture the simulator's mutable state — running totals plus the
+    /// jitter stream position — for a run-state snapshot (DESIGN.md §8).
+    /// The [`CommModel`] itself is config, rebuilt from flags on resume.
+    pub fn state_save(&self) -> CommState {
+        CommState {
+            totals: self.totals,
+            rng: self.rng.state(),
+        }
+    }
+
+    /// Restore the state captured by [`state_save`](Self::state_save):
+    /// subsequent rounds draw the same jitter and extend the same totals
+    /// bit-for-bit.
+    pub fn state_load(&mut self, st: CommState) {
+        self.totals = st.totals;
+        self.rng = Rng::from_state(st.rng);
+    }
+}
+
+/// [`CommSim`]'s snapshot payload (`crate::runstate`, DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommState {
+    pub totals: CommTotals,
+    pub rng: RngState,
 }
 
 /// Bytes on the wire for a model of `param_count` f32 parameters.

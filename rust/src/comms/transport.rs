@@ -31,9 +31,27 @@ use std::collections::VecDeque;
 
 use crate::comms::wire::Pipeline;
 use crate::compression::ErrorFeedback;
-use crate::data::rng::Rng;
+use crate::data::rng::{Rng, RngState};
 use crate::params::ParamVec;
 use crate::Result;
+
+/// The transport's complete inter-round mutable state, as captured by a
+/// run-state snapshot (`crate::runstate`, DESIGN.md §8): the quantizer's
+/// stochastic-rounding stream, every client's error-feedback residual,
+/// and the model store's retained version ring + per-client acks.
+/// Within-round scratch (pending delta bases, the per-round measure
+/// memo) is intentionally absent: snapshots are taken between rounds,
+/// where it is dead state that the next `downlink` call rebuilds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransportState {
+    pub rng: RngState,
+    /// Per-client uplink residual (empty vec = pristine, no feedback yet).
+    pub feedback: Vec<Vec<f32>>,
+    /// Retained `(version, model)` ring, oldest first.
+    pub versions: Vec<(u64, ParamVec)>,
+    /// Per-client last-acked version (0 = never contacted).
+    pub acked: Vec<u64>,
+}
 
 /// Ring of recently published model versions plus per-client ack state —
 /// what makes the delta downlink possible.
@@ -347,6 +365,66 @@ impl Transport {
     pub fn residual_norm(&self, client: usize) -> f64 {
         self.feedback[client].residual_norm()
     }
+
+    /// Capture the endpoint's inter-round mutable state for a run-state
+    /// snapshot (DESIGN.md §8).
+    pub fn state_save(&self) -> TransportState {
+        TransportState {
+            rng: self.rng.state(),
+            feedback: self
+                .feedback
+                .iter()
+                .map(|f| f.residual().to_vec())
+                .collect(),
+            versions: self.store.versions.iter().cloned().collect(),
+            acked: self.store.acked.clone(),
+        }
+    }
+
+    /// Restore the state captured by [`state_save`](Self::state_save),
+    /// validating every dimension against this endpoint's configuration
+    /// before touching anything — a mismatched snapshot is rejected
+    /// whole, never half-applied.
+    pub fn state_load(&mut self, st: TransportState) -> Result<()> {
+        let n = self.feedback.len();
+        anyhow::ensure!(
+            st.feedback.len() == n && st.acked.len() == n,
+            "transport snapshot is for {} clients, endpoint has {n}",
+            st.feedback.len().max(st.acked.len())
+        );
+        for (c, r) in st.feedback.iter().enumerate() {
+            anyhow::ensure!(
+                r.is_empty() || r.len() == self.dim,
+                "client {c}: residual dim {} != model dim {}",
+                r.len(),
+                self.dim
+            );
+        }
+        anyhow::ensure!(
+            st.versions.len() <= self.store.cap,
+            "snapshot retains {} model versions, store cap is {}",
+            st.versions.len(),
+            self.store.cap
+        );
+        let mut prev = 0u64;
+        for (v, theta) in &st.versions {
+            anyhow::ensure!(
+                *v > prev && theta.len() == self.dim,
+                "corrupt model-store ring: version {v} after {prev}, dim {}",
+                theta.len()
+            );
+            prev = *v;
+        }
+        self.rng = Rng::from_state(st.rng);
+        self.feedback = st.feedback.into_iter().map(ErrorFeedback::from_residual).collect();
+        self.store.versions = st.versions.into();
+        self.store.acked = st.acked;
+        // within-round scratch: reset; the next downlink() rebuilds it
+        self.pending_base = vec![0; n];
+        self.cache_version = 0;
+        self.measure_cache.clear();
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -434,6 +512,38 @@ mod tests {
     fn uplink_delta_stage_rejected() {
         assert!(TransportConfig::parse(Some("delta|q8"), None).is_err());
         assert!(TransportConfig::parse(Some("topk:0.01|q8"), Some("delta")).is_ok());
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_bit_identically() {
+        let cfg = TransportConfig::parse(Some("topk:20|q8"), Some("delta")).unwrap();
+        let mk = || Transport::new(cfg.clone(), 3, 400, 9);
+        let mut live = mk();
+        let drive = |t: &mut Transport, round: u64| -> (u64, Vec<f32>) {
+            let th = theta(400, round);
+            t.publish(round, &th);
+            let down = t.downlink((round % 3) as usize, round, &th);
+            let mut d: Vec<f32> = (0..400).map(|i| ((i as u64 + round) as f32).cos()).collect();
+            let up = t.encode_up((round % 3) as usize, &mut d).unwrap();
+            (down + up, d)
+        };
+        for round in 1..=5 {
+            drive(&mut live, round);
+        }
+        let st = live.state_save();
+        assert_eq!(st, live.state_save(), "state_save not pure");
+        let mut resumed = mk();
+        resumed.state_load(st.clone()).unwrap();
+        for round in 6..=10 {
+            let a = drive(&mut live, round);
+            let b = drive(&mut resumed, round);
+            assert_eq!(a, b, "round {round}: resumed transport diverged");
+        }
+        // validation: wrong client count / dim rejected whole
+        let mut wrong_n = Transport::new(cfg.clone(), 4, 400, 9);
+        assert!(wrong_n.state_load(st.clone()).is_err());
+        let mut wrong_dim = Transport::new(cfg.clone(), 3, 200, 9);
+        assert!(wrong_dim.state_load(st).is_err());
     }
 
     #[test]

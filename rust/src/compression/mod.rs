@@ -6,9 +6,14 @@
 //! Two schemes, both with exact byte accounting:
 //!
 //! * [`top_k`] — magnitude sparsification: keep the k largest-|·|
-//!   coordinates (indices + values on the wire). With server-side
-//!   *error feedback* ([`ErrorFeedback`]) the dropped mass re-enters the
-//!   next round's delta, the standard fix for sparsification bias.
+//!   coordinates (indices + values on the wire). With *error feedback*
+//!   ([`ErrorFeedback`]) the dropped mass re-enters the next round's
+//!   delta, the standard fix for sparsification bias. Since the
+//!   transport subsystem landed, the feedback residual is **per-client
+//!   uplink state owned by [`comms::transport`](crate::comms::transport)**
+//!   (one residual per client, advanced only when that client's update
+//!   is actually encoded — DESIGN.md §6), and it is captured by run-state
+//!   snapshots so resumed runs replay it exactly (DESIGN.md §8).
 //! * [`quantize`] — uniform stochastic quantization to b bits with
 //!   per-chunk scale (unbiased: E[deq(q(x))] = x).
 //!
@@ -87,14 +92,27 @@ pub fn top_k(update: &[f32], k: usize) -> SparseUpdate {
     }
 }
 
-/// Server-side error feedback: accumulates what compression dropped and
-/// folds it into the next round's update (per client or globally).
-#[derive(Debug, Clone, Default)]
+/// Error feedback: accumulates what compression dropped and folds it
+/// into the next update. Each instance is one client's uplink residual,
+/// keyed and owned by [`comms::transport`](crate::comms::transport)
+/// (DESIGN.md §6) and included in run-state snapshots (DESIGN.md §8).
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ErrorFeedback {
     residual: Vec<f32>,
 }
 
 impl ErrorFeedback {
+    /// Rebuild a residual captured by [`residual`](Self::residual) — the
+    /// snapshot-restore path. An empty vector is the pristine state.
+    pub fn from_residual(residual: Vec<f32>) -> Self {
+        Self { residual }
+    }
+
+    /// The raw residual (empty until the first fold/record).
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
     /// `update += residual`; call before compressing.
     pub fn fold_in(&mut self, update: &mut [f32]) {
         if self.residual.is_empty() {

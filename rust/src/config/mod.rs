@@ -207,6 +207,12 @@ impl ConfigFile {
         }
     }
 
+    /// The [`FedConfig`]-shaped keys. Keys owned by other subsystems are
+    /// ignored here and read by their own consumers: the aggregation
+    /// keys (`agg`, `server_lr`, `server_momentum`, `prox_mu`) by
+    /// `AggConfig::from_config`, the checkpoint keys (`checkpoint_every`,
+    /// `checkpoint_keep` — see `crate::runstate`, DESIGN.md §8) by the
+    /// CLI layer, and dataset keys by the harness.
     pub fn fed_config(&self) -> Result<FedConfig> {
         let mut cfg = FedConfig::default();
         for (k, v) in &self.values {

@@ -86,7 +86,10 @@ impl FleetConfig {
 }
 
 /// Run-level fleet accounting, reported in
-/// [`RunResult`](crate::federated::RunResult) and the run summary.
+/// [`RunResult`](crate::federated::RunResult) and the run summary, and
+/// captured by run-state snapshots (`crate::runstate`, DESIGN.md §8) —
+/// unlike the [`Fleet`] itself, whose device profiles and diurnal clock
+/// are pure functions of `(seed, client, round)` and need no snapshot.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FleetTotals {
     /// Clients the server dispatched the model to (incl. over-selection).

@@ -50,6 +50,17 @@ impl SplitMix64 {
     }
 }
 
+/// The complete mutable state of an [`Rng`] — what a run-state snapshot
+/// captures so a resumed run replays the *same* stream from the same
+/// position (`crate::runstate`, DESIGN.md §8). `gauss_spare` matters:
+/// Box–Muller caches its second deviate, so two generators with equal
+/// `s` but different spares diverge on the very next [`Rng::gauss`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RngState {
+    pub s: [u64; 4],
+    pub gauss_spare: Option<f64>,
+}
+
 /// Xoshiro256** — the workhorse generator.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -64,6 +75,24 @@ impl Rng {
         Self {
             s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
             gauss_spare: None,
+        }
+    }
+
+    /// Snapshot the generator's full state (position in the stream).
+    pub fn state(&self) -> RngState {
+        RngState {
+            s: self.s,
+            gauss_spare: self.gauss_spare,
+        }
+    }
+
+    /// Rebuild a generator at an exact stream position captured by
+    /// [`state`](Self::state) — the resume half of the snapshot contract:
+    /// `Rng::from_state(r.state())` continues bit-identically to `r`.
+    pub fn from_state(st: RngState) -> Rng {
+        Rng {
+            s: st.s,
+            gauss_spare: st.gauss_spare,
         }
     }
 
@@ -196,6 +225,30 @@ mod tests {
         let n = 10_000;
         let mean: f64 = (0..n).map(|i| hash3_unit(42, i, 0)).sum::<f64>() / n as f64;
         assert!((mean - 0.5).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn state_roundtrip_continues_bit_identically() {
+        let mut a = Rng::new(99);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        a.gauss(); // leave a cached Box–Muller spare in the state
+        let st = a.state();
+        assert!(st.gauss_spare.is_some(), "expected a cached spare");
+        let mut b = Rng::from_state(st);
+        for _ in 0..50 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        assert_eq!(a.gauss(), b.gauss()); // both consume the spare
+        assert_eq!(a.gauss(), b.gauss()); // ...and the fresh pair after it
+        // the spare is part of the state: dropping it must be visible
+        let mut full = Rng::from_state(st);
+        let mut bare = Rng::from_state(RngState {
+            gauss_spare: None,
+            ..st
+        });
+        assert_ne!(full.gauss(), bare.gauss());
     }
 
     #[test]

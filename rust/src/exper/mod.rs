@@ -178,7 +178,7 @@ pub fn run_one(
         cfg.target_accuracy = Some(t);
     }
     let mut sopts = opts.server_options();
-    sopts.telemetry = Some(crate::telemetry::RunWriter::create(
+    sopts.telemetry = Some(crate::telemetry::RunWriter::create_overwrite(
         &opts.out_root,
         run_name,
     )?);

@@ -115,7 +115,7 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
                 agg: rule_cfg(spec),
                 ..opts.server_options()
             };
-            sopts.telemetry = Some(crate::telemetry::RunWriter::create(
+            sopts.telemetry = Some(crate::telemetry::RunWriter::create_overwrite(
                 &opts.out_root,
                 &format!("agg-{}-{spec}", part.label()),
             )?);

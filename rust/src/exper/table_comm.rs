@@ -80,7 +80,7 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
             transport: tcfg,
             ..opts.server_options()
         };
-        sopts.telemetry = Some(crate::telemetry::RunWriter::create(
+        sopts.telemetry = Some(crate::telemetry::RunWriter::create_overwrite(
             &opts.out_root,
             &format!("comm-{label}"),
         )?);

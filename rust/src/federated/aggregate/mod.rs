@@ -35,6 +35,7 @@
 
 use crate::config::ConfigFile;
 use crate::params::{self, ParamVec};
+use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::Result;
 
 // ---------------------------------------------------------------- trait
@@ -109,6 +110,31 @@ pub trait Aggregator {
     /// telemetry (empty when stateless, and before the first step).
     fn state_norms(&self) -> Vec<(&'static str, f64)> {
         Vec::new()
+    }
+
+    /// Serialize the rule's internal optimizer state for a run-state
+    /// snapshot (`crate::runstate`, DESIGN.md §8) — an opaque blob whose
+    /// layout only [`state_load`](Self::state_load) needs to understand.
+    /// Configuration knobs (η_s, β, τ) are *not* state: they come back
+    /// from the `--agg` spec on resume, and the snapshot's rule label is
+    /// checked against it. Default: no state (stateless rules).
+    fn state_save(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore the state written by [`state_save`](Self::state_save),
+    /// erroring on any mismatch (a stateless rule must receive an empty
+    /// blob; a stateful one must find its exact moment layout). A
+    /// successful load makes the rule's future steps bit-identical to
+    /// the run that wrote the snapshot.
+    fn state_load(&mut self, bytes: &[u8]) -> Result<()> {
+        anyhow::ensure!(
+            bytes.is_empty(),
+            "aggregator {} is stateless but the snapshot carries {} state bytes",
+            self.label(),
+            bytes.len()
+        );
+        Ok(())
     }
 }
 
@@ -202,6 +228,18 @@ impl Aggregator for FedAvgM {
             vec![("momentum", params::l2_norm(&self.v))]
         }
     }
+
+    fn state_save(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_f32s(&self.v);
+        w.into_inner()
+    }
+
+    fn state_load(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(bytes);
+        self.v = r.f32s()?;
+        r.expect_end()
+    }
 }
 
 /// `fedadam[:τ]` — server Adam (Reddi et al., arXiv:2003.00295),
@@ -258,6 +296,31 @@ impl Aggregator for FedAdam {
         } else {
             vec![("m", params::l2_norm(&self.m)), ("u", params::l2_norm(&self.u))]
         }
+    }
+
+    fn state_save(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_f32s(&self.m);
+        w.put_f32s(&self.u);
+        w.into_inner()
+    }
+
+    fn state_load(&mut self, bytes: &[u8]) -> Result<()> {
+        // decode fully before assigning: a rejected blob must leave the
+        // moments untouched, never half-applied
+        let mut r = ByteReader::new(bytes);
+        let m = r.f32s()?;
+        let u = r.f32s()?;
+        r.expect_end()?;
+        anyhow::ensure!(
+            m.len() == u.len(),
+            "fedadam snapshot: m/u moment dims differ ({} vs {})",
+            m.len(),
+            u.len()
+        );
+        self.m = m;
+        self.u = u;
+        Ok(())
     }
 }
 
@@ -609,6 +672,48 @@ mod tests {
         let s = fmt_state_norms(&[("momentum", 0.25), ("u", 1.0)]);
         assert_eq!(s, "momentum=2.500000e-1;u=1.000000e0");
         assert!(!s.contains(','), "must stay CSV-safe");
+    }
+
+    #[test]
+    fn state_save_load_roundtrips_and_resumes_bit_identically() {
+        // run a stateful rule for a few steps, snapshot, run a fresh
+        // instance restored from the snapshot: steps must match exactly
+        for spec in ["fedavgm:0.7", "fedadam:0.01"] {
+            let cfg = AggConfig {
+                spec: spec.into(),
+                ..Default::default()
+            };
+            let mut live = cfg.build().unwrap();
+            let deltas: Vec<ParamVec> = (0..6)
+                .map(|r| (0..8).map(|i| ((r * 8 + i) as f32).sin()).collect())
+                .collect();
+            for (r, d) in deltas[..3].iter().enumerate() {
+                live.step(r as u64 + 1, d.clone()).unwrap();
+            }
+            let blob = live.state_save();
+            assert!(!blob.is_empty(), "{spec}: no state after 3 steps");
+            let mut resumed = cfg.build().unwrap();
+            resumed.state_load(&blob).unwrap();
+            for (r, d) in deltas[3..].iter().enumerate() {
+                let a = live.step(r as u64 + 4, d.clone()).unwrap();
+                let b = resumed.step(r as u64 + 4, d.clone()).unwrap();
+                assert_eq!(a, b, "{spec}: diverged after state_load");
+            }
+            // truncated blobs are rejected, never half-loaded
+            let mut bad = cfg.build().unwrap();
+            assert!(bad.state_load(&blob[..blob.len() - 1]).is_err(), "{spec}");
+        }
+        // stateless rules: empty blob round-trips, junk is rejected
+        for spec in ["fedavg", "median", "trimmed:0.1"] {
+            let cfg = AggConfig {
+                spec: spec.into(),
+                ..Default::default()
+            };
+            let mut agg = cfg.build().unwrap();
+            assert!(agg.state_save().is_empty(), "{spec}");
+            agg.state_load(&[]).unwrap();
+            assert!(agg.state_load(&[1, 2, 3]).is_err(), "{spec}");
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! explicit online pool via [`ClientSampler::sample_from`].
 
 use crate::comms::Availability;
-use crate::data::rng::Rng;
+use crate::data::rng::{Rng, RngState};
 
 pub struct ClientSampler {
     root: Rng,
@@ -28,6 +28,23 @@ impl ClientSampler {
     pub fn with_availability(mut self, p_online: f64, seed: u64) -> Self {
         self.availability = Some(Availability::new(p_online, seed));
         self
+    }
+
+    /// Snapshot the selection stream's RNG state (`crate::runstate`,
+    /// DESIGN.md §8). The availability coin is a stateless hash and is
+    /// reconstructed from config on resume, so it is not part of this.
+    ///
+    /// Today the root stream never advances (each round derives a child),
+    /// making this reconstructible from the seed — but the snapshot
+    /// captures it anyway so a future sampler that *does* consume root
+    /// draws cannot silently break the resume bit-identity guarantee.
+    pub fn state(&self) -> RngState {
+        self.root.state()
+    }
+
+    /// Restore the selection stream captured by [`state`](Self::state).
+    pub fn restore_state(&mut self, st: RngState) {
+        self.root = Rng::from_state(st);
     }
 
     /// Sample `m` distinct clients out of `k` for `round`.

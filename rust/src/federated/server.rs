@@ -19,6 +19,7 @@
 //! selected by [`ServerOptions::agg`]. The default `fedavg` rule at
 //! `η_s = 1` is the paper's rule, bit-for-bit.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::comms::{CommModel, CommSim, CommTotals, Transport, TransportConfig};
@@ -33,6 +34,9 @@ use crate::federated::sampler::ClientSampler;
 use crate::metrics::LearningCurve;
 use crate::params::ParamVec;
 use crate::privacy::{clip, GaussianMechanism, SecureAggregator};
+use crate::runstate::{
+    checkpoint_dir, AggState, CheckpointConfig, FleetState, ResumeFrom, RunMeta, Snapshot,
+};
 use crate::runtime::Engine;
 use crate::telemetry::{RoundRecord, RunWriter};
 use crate::Result;
@@ -77,6 +81,18 @@ pub struct ServerOptions {
     /// knobs + client-side FedProx μ). The default is Algorithm 1's
     /// weighted averaging, bit-for-bit.
     pub agg: AggConfig,
+    /// write a run-state snapshot every N rounds under the telemetry run
+    /// dir (`--checkpoint-every`; needs `telemetry`). See
+    /// [`runstate`](crate::runstate) / DESIGN.md §8.
+    pub checkpoint: Option<CheckpointConfig>,
+    /// restored snapshot to continue from (`--resume`): the run starts
+    /// at `snapshot.round + 1` with every stateful subsystem rewound,
+    /// and the resulting trajectory — including `curve.csv` — is
+    /// bit-identical to a run that never stopped. The snapshot's config
+    /// fingerprint must match this invocation; only then does the
+    /// server reopen (and truncate) the run dir's curve, so `telemetry`
+    /// must be left `None` here.
+    pub resume: Option<ResumeFrom>,
 }
 
 impl Default for ServerOptions {
@@ -92,6 +108,8 @@ impl Default for ServerOptions {
             transport: TransportConfig::default(),
             fleet: FleetConfig::default(),
             agg: AggConfig::default(),
+            checkpoint: None,
+            resume: None,
         }
     }
 }
@@ -244,7 +262,128 @@ pub fn run(
             .collect()
     };
 
-    for round in 1..=cfg.rounds as u64 {
+    // Configuration fingerprint stamped into every snapshot and checked
+    // on resume: a checkpoint must not silently continue under different
+    // flags (DESIGN.md §8). Dataset shape is covered by the client count
+    // and parameter dim; every other trajectory-affecting knob —
+    // availability, DP clip/σ, fleet shape, eval caps, the comm model —
+    // rides in the harness string (Debug-formatted, so any value change
+    // is caught). `fleet.workers` is deliberately absent: worker count
+    // is bit-identical by design, so resuming at a different parallelism
+    // is legitimate.
+    let meta = RunMeta {
+        label: cfg.label(),
+        agg: agg_label.clone(),
+        codec: codec_label.clone(),
+        seed: cfg.seed,
+        clients: k as u64,
+        dim: model.param_count() as u64,
+        lr_decay: cfg.lr_decay,
+        eval_every: cfg.eval_every as u64,
+        harness: format!(
+            "availability={:?} dp={:?} secure_agg={} prox_mu={:?} \
+             fleet=({},{:?},{:?},{:?},{:?},{:?}) eval_cap={:?} train_eval_cap={} \
+             comm=({:?},{:?},{:?},{:?})",
+            opts.availability,
+            opts.dp.map(|d| (d.clip_norm, d.sigma)),
+            opts.secure_agg,
+            opts.agg.prox_mu,
+            opts.fleet.profile.label(),
+            opts.fleet.overselect,
+            opts.fleet.deadline_s,
+            opts.fleet.step_cost_s,
+            opts.fleet.diurnal_period,
+            opts.fleet.latency_s,
+            opts.eval_cap,
+            opts.train_eval_cap,
+            opts.comm_model.up_bps,
+            opts.comm_model.down_bps,
+            opts.comm_model.latency_s,
+            opts.comm_model.jitter,
+        ),
+    };
+
+    // Resume: validate the fingerprint FIRST — only a request that will
+    // actually be honored may touch the run dir (reopening truncates
+    // curve.csv past the checkpoint; a refused resume must leave the
+    // original run's telemetry untouched). Then rewind every stateful
+    // subsystem. Each state_load validates before it applies, and any
+    // failure aborts the run before training starts, so a partial
+    // restore can never yield a silently-wrong trajectory.
+    let mut start_round = 1u64;
+    if let Some(ResumeFrom { snapshot: snap, run_dir }) = opts.resume.take() {
+        anyhow::ensure!(
+            opts.telemetry.is_none(),
+            "resume opens the run dir's own telemetry; leave ServerOptions.telemetry unset"
+        );
+        anyhow::ensure!(
+            snap.meta == meta,
+            "--resume: the checkpoint was written by a different configuration\n  \
+             checkpoint: {:?}\n  this run:   {:?}",
+            snap.meta,
+            meta
+        );
+        anyhow::ensure!(
+            (snap.round as usize) < cfg.rounds,
+            "--resume: checkpoint is already at round {} — raise --rounds past it \
+             (got {})",
+            snap.round,
+            cfg.rounds
+        );
+        anyhow::ensure!(
+            snap.dp.is_some() == opts.dp.is_some(),
+            "--resume: checkpoint {} DP state but this run {} --dp-sigma",
+            if snap.dp.is_some() { "carries" } else { "has no" },
+            if opts.dp.is_some() { "sets" } else { "does not set" },
+        );
+        anyhow::ensure!(
+            snap.curves.train_loss.is_some() == cfg.track_train_loss,
+            "--resume: checkpoint and --track-train-loss disagree"
+        );
+        anyhow::ensure!(
+            snap.theta.len() == model.param_count(),
+            "--resume: model dim changed ({} vs {})",
+            snap.theta.len(),
+            model.param_count()
+        );
+        // All checks passed: this resume WILL run. Only now reopen the
+        // run's curve, truncated back to the checkpointed round.
+        opts.telemetry = Some(RunWriter::reopen(&run_dir, snap.round)?);
+        theta = snap.theta;
+        sampler.restore_state(snap.sampler);
+        aggregator.state_load(&snap.agg.bytes)?;
+        transport.state_load(snap.transport)?;
+        comms.state_load(snap.comms);
+        if let (Some(m), Some(st)) = (mech.as_mut(), snap.dp) {
+            m.state_load(st);
+        }
+        accuracy = LearningCurve::from_points(snap.curves.accuracy)?;
+        test_loss = LearningCurve::from_points(snap.curves.test_loss)?;
+        if let Some(pts) = snap.curves.train_loss {
+            train_loss_curve = Some(LearningCurve::from_points(pts)?);
+        }
+        client_steps = snap.client_steps;
+        rounds_run = snap.round;
+        fleet_totals = snap.fleet.totals;
+        dropped_since_eval = snap.fleet.dropped_since_eval as usize;
+        misses_since_eval = snap.fleet.misses_since_eval as usize;
+        start_round = snap.round + 1;
+    }
+
+    // Resolved after the resume block: a resumed run's writer is the
+    // reopened run dir.
+    let ckpt_dir: Option<PathBuf> = match (&opts.checkpoint, &opts.telemetry) {
+        (Some(ck), Some(w)) => {
+            ck.validate()?;
+            Some(checkpoint_dir(w.dir()))
+        }
+        (Some(_), None) => anyhow::bail!(
+            "checkpointing needs a run directory to write under — enable telemetry"
+        ),
+        (None, _) => None,
+    };
+
+    for round in start_round..=cfg.rounds as u64 {
         rounds_run = round;
         let m = cfg.clients_per_round(k);
         // Publish this round's model to the version store (no-op without
@@ -419,6 +558,7 @@ pub fn run(
             }
         };
 
+        let mut hit_target = false;
         if round % cfg.eval_every as u64 == 0 || round == cfg.rounds as u64 {
             let sums = model.eval_dataset(&theta, &fed.test, eval_idxs.as_deref())?;
             accuracy.push(round, sums.accuracy());
@@ -452,10 +592,44 @@ pub fn run(
                 misses_since_eval = 0;
             }
             if let Some(target) = cfg.target_accuracy {
-                if sums.accuracy() >= target {
-                    break;
-                }
+                hit_target = sums.accuracy() >= target;
             }
+        }
+
+        // Snapshot AFTER the round's telemetry so curve.csv and the
+        // checkpoint agree on "state as of round r"; resume truncates
+        // the curve to this round and continues at r+1 (DESIGN.md §8).
+        if let (Some(ck), Some(dir)) = (&opts.checkpoint, &ckpt_dir) {
+            if round % ck.every == 0 {
+                let snap = Snapshot {
+                    round,
+                    meta: meta.clone(),
+                    theta: theta.clone(),
+                    client_steps,
+                    sampler: sampler.state(),
+                    agg: AggState {
+                        label: agg_label.clone(),
+                        bytes: aggregator.state_save(),
+                    },
+                    transport: transport.state_save(),
+                    comms: comms.state_save(),
+                    fleet: FleetState {
+                        totals: fleet_totals,
+                        dropped_since_eval: dropped_since_eval as u64,
+                        misses_since_eval: misses_since_eval as u64,
+                    },
+                    curves: crate::runstate::CurveState {
+                        accuracy: accuracy.points().to_vec(),
+                        test_loss: test_loss.points().to_vec(),
+                        train_loss: train_loss_curve.as_ref().map(|c| c.points().to_vec()),
+                    },
+                    dp: mech.as_ref().map(|m| m.state_save()),
+                };
+                snap.write(dir, ck.keep)?;
+            }
+        }
+        if hit_target {
+            break;
         }
     }
 

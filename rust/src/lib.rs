@@ -38,6 +38,8 @@
 //!   byte/wall-clock cost model with availability traces.
 //! * [`compression`], [`privacy`] — sparsification/quantization
 //!   primitives under the codecs, DP + secure aggregation.
+//! * [`runstate`] — checkpoint/resume: versioned run-state snapshots
+//!   with a bit-identical resume guarantee (crash-safe long runs).
 //! * [`runtime`] — PJRT engine over the AOT artifacts + worker pool.
 //! * [`config`], [`metrics`], [`telemetry`], [`sweep`], [`util`] —
 //!   harness plumbing; [`exper`] — the paper's tables and figures.
@@ -52,6 +54,7 @@ pub mod federated;
 pub mod metrics;
 pub mod params;
 pub mod privacy;
+pub mod runstate;
 pub mod runtime;
 pub mod sweep;
 pub mod telemetry;

@@ -12,15 +12,16 @@
 //! under `runs/`. `--scale 1.0` is the paper-sized configuration; defaults
 //! are scaled for this single-core testbed.
 
-use anyhow::bail;
+use anyhow::{anyhow, bail};
 
 use fedavg::baselines::oneshot;
 use fedavg::config::{BatchSize, ConfigFile, FedConfig, Partition};
 use fedavg::coordinator::{FleetConfig, FleetProfile, FleetSim};
-use fedavg::federated::AggConfig;
+use fedavg::federated::{AggConfig, ServerOptions};
 use fedavg::exper::{self};
+use fedavg::runstate::{CheckpointConfig, Snapshot};
 use fedavg::runtime::Engine;
-use fedavg::telemetry::{FleetRoundRecord, FleetWriter};
+use fedavg::telemetry::{FleetRoundRecord, FleetWriter, RunWriter};
 use fedavg::util::args::Args;
 use fedavg::Result;
 
@@ -65,7 +66,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         "target", "partition", "scale", "eval-cap", "seed", "out", "availability",
         "track-train-loss", "name", "dp-clip", "dp-sigma", "secure-agg", "topk",
         "quant-bits", "codec", "down-codec", "agg", "server-lr", "server-momentum",
-        "prox-mu",
+        "prox-mu", "checkpoint-every", "checkpoint-keep", "resume", "overwrite",
     ])?;
     let file = config_file_from_args(args)?;
     let cfg = fed_config_from(file.as_ref(), args)?;
@@ -95,11 +96,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     opts.secure_agg = args.has("secure-agg");
     opts.transport = transport_from_args(args)?;
     opts.agg = agg_config_from(file.as_ref(), args)?;
-    let name = args.str_or("name", &format!("run-{}", cfg.label().replace(' ', "_")));
-    opts.telemetry = Some(fedavg::telemetry::RunWriter::create(
-        args.str_or("out", "runs"),
-        &name,
-    )?);
+    let default_name = format!("run-{}", cfg.label().replace(' ', "_"));
+    let ckpt = checkpoint_from(file.as_ref(), args)?;
+    attach_run_outputs(args, ckpt, &mut opts, &default_name)?;
 
     println!(
         "run: {} on {} ({} clients, {} train / {} test examples)",
@@ -157,6 +156,90 @@ fn transport_from_args(args: &Args) -> Result<fedavg::comms::TransportConfig> {
         }
     }
     fedavg::comms::TransportConfig::parse(up.as_deref(), args.str_opt("down-codec"))
+}
+
+/// Checkpoint cadence shared by `run` and `fleet`: `--checkpoint-every N`
+/// (config key `checkpoint_every`) turns on run-state snapshots under
+/// `runs/<name>/checkpoints/`, rotated to the newest `--checkpoint-keep`
+/// (default 3). See DESIGN.md §8.
+fn checkpoint_from(file: Option<&ConfigFile>, args: &Args) -> Result<Option<CheckpointConfig>> {
+    let cf_every: Option<u64> = match file {
+        Some(cf) => cf.get_parse("checkpoint_every")?,
+        None => None,
+    };
+    let every = match args.str_opt("checkpoint-every") {
+        Some(v) => Some(
+            v.parse::<u64>()
+                .map_err(|_| anyhow!("--checkpoint-every: bad integer {v:?}"))?,
+        ),
+        None => cf_every,
+    };
+    let cf_keep: Option<usize> = match file {
+        Some(cf) => cf.get_parse("checkpoint_keep")?,
+        None => None,
+    };
+    let keep = args.usize_or("checkpoint-keep", cf_keep.unwrap_or(3))?;
+    match every {
+        None => {
+            if args.has("checkpoint-keep") {
+                bail!("--checkpoint-keep needs --checkpoint-every");
+            }
+            Ok(None)
+        }
+        Some(every) => {
+            let ck = CheckpointConfig { every, keep };
+            ck.validate()?;
+            Ok(Some(ck))
+        }
+    }
+}
+
+/// Telemetry + checkpoint/resume wiring shared by `run` and `fleet`.
+/// `--resume <run-dir>` loads the newest valid snapshot and hands it to
+/// the server, which truncates/reopens the run's curve.csv only after
+/// the config fingerprint is verified (a refused resume must not touch
+/// the original telemetry); otherwise a fresh run dir is created
+/// (refusing to clobber an existing one unless `--overwrite`).
+fn attach_run_outputs(
+    args: &Args,
+    checkpoint: Option<CheckpointConfig>,
+    opts: &mut ServerOptions,
+    default_name: &str,
+) -> Result<()> {
+    opts.checkpoint = checkpoint;
+    if let Some(rdir) = args.str_opt("resume") {
+        for f in ["name", "out", "overwrite"] {
+            if args.has(f) {
+                bail!("--{f} conflicts with --resume (which names an existing run dir)");
+            }
+        }
+        let run_dir = std::path::Path::new(rdir);
+        let (path, snap) = Snapshot::load_latest(run_dir)?.ok_or_else(|| {
+            anyhow!(
+                "--resume {rdir}: no checkpoints under {:?} — was the run started \
+                 with --checkpoint-every?",
+                fedavg::runstate::checkpoint_dir(run_dir)
+            )
+        })?;
+        println!(
+            "resuming {rdir} from {:?} (state after round {})",
+            path.file_name().unwrap_or_default(),
+            snap.round
+        );
+        opts.resume = Some(fedavg::runstate::ResumeFrom {
+            snapshot: snap,
+            run_dir: run_dir.to_path_buf(),
+        });
+    } else {
+        let name = args.str_or("name", default_name);
+        let out = args.str_or("out", "runs");
+        opts.telemetry = Some(if args.has("overwrite") {
+            RunWriter::create_overwrite(&out, &name)?
+        } else {
+            RunWriter::create(&out, &name)?
+        });
+    }
+    Ok(())
 }
 
 /// Load `--config FILE` once; `run`/`fleet` layer both the FedConfig
@@ -225,7 +308,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "track-train-loss", "fleet-profile", "overselect", "deadline", "workers",
         "step-cost", "clients", "sim-only", "model-bytes", "steps", "codec",
         "down-codec", "topk", "quant-bits", "agg", "server-lr", "server-momentum",
-        "prox-mu",
+        "prox-mu", "checkpoint-every", "checkpoint-keep", "resume", "overwrite",
     ])?;
     let file = config_file_from_args(args)?;
     let cfg = fed_config_from(file.as_ref(), args)?;
@@ -253,12 +336,22 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         bail!("--overselect must be a non-negative factor (e.g. 0.3)");
     }
 
-    // Parse (and validate) the aggregation flags up front: a bad --agg
-    // must fail fast on the sim-only path too, not be silently ignored.
+    // Parse (and validate) the aggregation + checkpoint config up front:
+    // a bad --agg, and checkpoint/resume settings from EITHER the flags
+    // or the config-file keys, must fail fast on the sim-only path too,
+    // not be silently ignored.
     let agg = agg_config_from(file.as_ref(), args)?;
+    let ckpt = checkpoint_from(file.as_ref(), args)?;
 
     let have_artifacts = Engine::default_dir().join("manifest.json").exists();
     if args.has("sim-only") || !have_artifacts {
+        if args.has("resume") || ckpt.is_some() {
+            bail!(
+                "checkpoint/resume applies to training runs; the training-free \
+                 simulation needs no checkpoints — each round is a pure function \
+                 of the seed, so rerunning it IS resuming it (DESIGN.md §8)"
+            );
+        }
         if !args.has("sim-only") {
             println!(
                 "no artifacts at {:?} — running the fleet simulation without training \
@@ -296,11 +389,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         agg,
         ..Default::default()
     };
-    let name = args.str_or("name", &format!("fleet-{}", cfg.label().replace(' ', "_")));
-    opts.telemetry = Some(fedavg::telemetry::RunWriter::create(
-        args.str_or("out", "runs"),
-        &name,
-    )?);
+    let default_name = format!("fleet-{}", cfg.label().replace(' ', "_"));
+    attach_run_outputs(args, ckpt, &mut opts, &default_name)?;
 
     println!(
         "fleet run: {} on {} — {} clients, profile {}, overselect {:.0}%, deadline {}, workers {}",
@@ -349,7 +439,12 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
     }
     let mut sim = FleetSim::new(fleet, k, m, model_bytes, steps, cfg.seed)?;
     let name = args.str_or("name", &format!("fleet-sim-{}-k{k}", fleet.profile.label()));
-    let mut w = FleetWriter::create(args.str_or("out", "runs"), &name)?;
+    let out = args.str_or("out", "runs");
+    let mut w = if args.has("overwrite") {
+        FleetWriter::create_overwrite(&out, &name)?
+    } else {
+        FleetWriter::create(&out, &name)?
+    };
     println!(
         "fleet sim: {} clients ({} profile), m={m} +{:.0}% over-selection, deadline {}, \
          model {:.1} MB, {} local steps, {} rounds",
@@ -491,6 +586,8 @@ USAGE:
              [--codec SPEC] [--down-codec SPEC]
              [--topk FRAC] [--quant-bits B]
              [--agg RULE] [--server-lr F] [--server-momentum B] [--prox-mu MU]
+             [--checkpoint-every N] [--checkpoint-keep K] [--overwrite]
+  fedavg run --resume runs/<name> [--rounds N] [+ the original run's flags]
   fedavg fleet [--fleet-profile uniform|mobile|flaky] [--overselect RHO]
              [--deadline SECONDS] [--workers N] [--clients K] [--sim-only]
              [--step-cost S] [--model-bytes B] [--steps U] [+ run flags]
@@ -521,6 +618,15 @@ across IID/non-IID partitions with label-corrupted clients.
 drops, round deadlines, and parallel client updates. Without artifacts
 (or with --sim-only) it runs the training-free event-queue simulation —
 10k clients by default, 100k+ fine.
+
+Crash safety: --checkpoint-every N snapshots the complete run state
+(model, optimizer moments, RNG streams, error-feedback residuals, model
+store, byte totals, curves) every N rounds under runs/<name>/checkpoints/
+(atomic writes, newest --checkpoint-keep retained). `--resume runs/<name>`
+— with the original flags and a larger --rounds — continues from the
+newest snapshot; the resumed trajectory and curve.csv are bit-identical
+to a run that never stopped (DESIGN.md §8). Run dirs are never silently
+reused: a colliding --name errors unless --overwrite (or --resume).
 
 Defaults are scaled to this single-core testbed (--scale 0.05);
 --scale 1.0 reproduces the paper-sized workloads. Curves land in runs/.

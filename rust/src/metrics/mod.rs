@@ -27,6 +27,21 @@ impl LearningCurve {
         self.points.push((round, value));
     }
 
+    /// Rebuild a curve from points captured by [`points`](Self::points) —
+    /// the run-state snapshot restore path (DESIGN.md §8). Validates the
+    /// strictly-increasing-rounds invariant `push` enforces.
+    pub fn from_points(points: Vec<(u64, f64)>) -> crate::Result<LearningCurve> {
+        for w in points.windows(2) {
+            anyhow::ensure!(
+                w[1].0 > w[0].0,
+                "corrupt curve: round {} after {}",
+                w[1].0,
+                w[0].0
+            );
+        }
+        Ok(LearningCurve { points })
+    }
+
     pub fn points(&self) -> &[(u64, f64)] {
         &self.points
     }

@@ -16,8 +16,18 @@
 //! server's per-update order, clipping runs *before* the uplink codec
 //! pipeline (DESIGN.md §6) — codecs see already-clipped deltas.
 
-use crate::data::rng::Rng;
+use crate::data::rng::{Rng, RngState};
 use crate::params::ParamVec;
+
+/// [`GaussianMechanism`]'s snapshot payload (`crate::runstate`,
+/// DESIGN.md §8): the noise stream position and the rounds-applied
+/// counter the ε accounting multiplies over. Dropping either on resume
+/// would silently re-use noise or under-report the privacy spend.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MechState {
+    pub rng: RngState,
+    pub rounds_applied: u64,
+}
 
 /// L2-clip an update in place; returns the pre-clip norm.
 pub fn clip(update: &mut [f32], max_norm: f64) -> f64 {
@@ -78,6 +88,23 @@ impl GaussianMechanism {
 
     pub fn rounds_applied(&self) -> u64 {
         self.rounds_applied
+    }
+
+    /// Capture the mechanism's mutable state for a run-state snapshot.
+    pub fn state_save(&self) -> MechState {
+        MechState {
+            rng: self.rng.state(),
+            rounds_applied: self.rounds_applied,
+        }
+    }
+
+    /// Restore the state captured by [`state_save`](Self::state_save);
+    /// the noise stream and ε accounting continue exactly where the
+    /// checkpointed run left off. `clip_norm`/`sigma` are config and
+    /// come back from the `--dp-*` flags (verified by the caller).
+    pub fn state_load(&mut self, st: MechState) {
+        self.rng = Rng::from_state(st.rng);
+        self.rounds_applied = st.rounds_applied;
     }
 }
 

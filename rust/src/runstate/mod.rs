@@ -1,0 +1,90 @@
+//! Run-state checkpointing — crash-safe training with a bit-identical
+//! resume guarantee (DESIGN.md §8).
+//!
+//! The paper's experiments run hundreds to thousands of communication
+//! rounds; a production federated system (Bonawitz et al., "Towards
+//! Federated Learning at Scale") treats server restarts as routine, not
+//! fatal. This module makes a training run durable: at a configurable
+//! round cadence the server serializes **all** of its mutable round
+//! state into a [`Snapshot`] — a versioned, checksummed binary file
+//! written atomically under `runs/<name>/checkpoints/` — and a later
+//! invocation with `--resume` continues the run as if it had never
+//! stopped.
+//!
+//! The contract is strict **bit-identity**: running `2R` rounds yields
+//! byte-for-byte the same `curve.csv` as running `R` rounds,
+//! checkpointing, and resuming for `R` more (regression-tested in
+//! `rust/tests/runstate.rs`). That only holds because the snapshot
+//! covers every stateful subsystem the round loop touches:
+//!
+//! | state | lives in | snapshot section |
+//! |-------|----------|------------------|
+//! | global model θ, round index, client-step counter | `federated::server` | `MODEL`, `SCHED` |
+//! | client-selection RNG stream | [`ClientSampler`] | `SAMPLER` |
+//! | server-optimizer moments (fedavgm/fedadam) | [`Aggregator::state_save`] | `AGG` |
+//! | error-feedback residuals, model-store ring + acks, quantizer RNG | [`Transport`] | `TRANSPORT` |
+//! | byte/wall-clock totals + jitter RNG | [`CommSim`] | `COMMS` |
+//! | fleet totals + pending telemetry counters | `coordinator` | `FLEET` |
+//! | learning curves (accuracy/loss) | `metrics` | `CURVES` |
+//! | DP noise stream + ε accounting | [`GaussianMechanism`] | `DP` |
+//!
+//! What is deliberately *not* captured: anything that is a pure function
+//! of config — device profiles and the diurnal clock
+//! ([`Fleet`](crate::coordinator::Fleet) rebuilds from `(seed, client)`
+//! hashes), the availability coin, the secure-aggregation masks (session
+//! seed), the lr schedule (function of the round index) — and anything
+//! mid-round: checkpoints are taken only at round boundaries, so a kill
+//! mid-round replays that round from its start (mid-round preemption is
+//! a ROADMAP open item).
+//!
+//! On resume the snapshot's [`RunMeta`] fingerprint is checked against
+//! the current invocation (model/C/E/B/lr label, aggregation rule, codec
+//! pair, seed, client count, parameter count, lr decay, eval cadence) so
+//! a checkpoint cannot be silently resumed under a different
+//! configuration, and [`RunWriter::reopen`](crate::telemetry::RunWriter::reopen)
+//! truncates `curve.csv` back to the checkpointed round so the curve
+//! never contains rows from a lost future.
+//!
+//! [`ClientSampler`]: crate::federated::ClientSampler
+//! [`Aggregator::state_save`]: crate::federated::aggregate::Aggregator::state_save
+//! [`Transport`]: crate::comms::Transport
+//! [`CommSim`]: crate::comms::CommSim
+//! [`GaussianMechanism`]: crate::privacy::GaussianMechanism
+
+mod snapshot;
+
+pub use snapshot::{
+    checkpoint_dir, AggState, CurveState, FleetState, RunMeta, Snapshot, MAGIC, SNAP_VERSION,
+};
+
+/// A resume request carried in
+/// [`ServerOptions`](crate::federated::ServerOptions): the loaded
+/// snapshot plus the run directory it came from. The server opens the
+/// run's telemetry itself — **after** the fingerprint checks pass — via
+/// [`RunWriter::reopen`](crate::telemetry::RunWriter::reopen), so a
+/// refused resume (wrong flags, stale `--rounds`) never truncates the
+/// original run's curve.
+#[derive(Debug)]
+pub struct ResumeFrom {
+    pub snapshot: Snapshot,
+    pub run_dir: std::path::PathBuf,
+}
+
+/// Checkpoint cadence knobs (`--checkpoint-every` / `--checkpoint-keep`),
+/// carried in [`ServerOptions`](crate::federated::ServerOptions).
+#[derive(Debug, Clone, Copy)]
+pub struct CheckpointConfig {
+    /// Write a snapshot every `every` rounds (≥ 1).
+    pub every: u64,
+    /// Retain the newest `keep` snapshots (≥ 1); older ones are deleted
+    /// after each successful write.
+    pub keep: usize,
+}
+
+impl CheckpointConfig {
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.every >= 1, "--checkpoint-every must be >= 1");
+        anyhow::ensure!(self.keep >= 1, "--checkpoint-keep must be >= 1");
+        Ok(())
+    }
+}

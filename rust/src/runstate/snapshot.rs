@@ -1,0 +1,561 @@
+//! The snapshot file format + atomic write / validated read / rotation.
+//!
+//! Layout (all little-endian, DESIGN.md §8), mirroring the frame
+//! discipline of [`comms::wire`](crate::comms::wire): a fixed
+//! self-describing header, then a payload of tagged sections.
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  "FCKP"
+//!      4     1  format version (1)
+//!      5     3  reserved (zero)
+//!      8     8  round the snapshot was taken after
+//!     16     8  payload length in bytes
+//!     24     8  FNV-1a 64 checksum of the payload
+//!     32     …  payload: sections of (id:u16, len:u64, body)
+//! ```
+//!
+//! A reader validates magic, version, *exact* length (truncation and
+//! trailing garbage both fail), and checksum before decoding a single
+//! section; section bodies are decoded with bounds-checked reads and
+//! must consume exactly their declared length. Unknown section ids are
+//! skipped, so older readers tolerate additive format growth. The result
+//! is the property the resume path depends on: a snapshot either loads
+//! completely or not at all.
+//!
+//! Writes go to `<file>.tmp` first, are fsynced, and are renamed into
+//! place — a crash mid-write leaves at worst a stale `.tmp` that the
+//! loader never looks at. After each successful write the oldest
+//! snapshots beyond the keep-last-K budget are deleted.
+
+use std::fs::File;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context as _;
+
+use crate::comms::{CommState, TransportState};
+use crate::coordinator::FleetTotals;
+use crate::data::rng::RngState;
+use crate::params::ParamVec;
+use crate::privacy::MechState;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::Result;
+
+/// Snapshot magic: `b"FCKP"` read as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"FCKP");
+/// Current snapshot-format version.
+pub const SNAP_VERSION: u8 = 1;
+/// Fixed header size.
+const HEADER_BYTES: usize = 32;
+
+// Section ids (u16). Additive: new sections get new ids; readers skip
+// ids they do not know.
+const SEC_META: u16 = 1;
+const SEC_MODEL: u16 = 2;
+const SEC_SCHED: u16 = 3;
+const SEC_SAMPLER: u16 = 4;
+const SEC_AGG: u16 = 5;
+const SEC_TRANSPORT: u16 = 6;
+const SEC_COMMS: u16 = 7;
+const SEC_FLEET: u16 = 8;
+const SEC_CURVES: u16 = 9;
+const SEC_DP: u16 = 10;
+
+/// Configuration fingerprint stamped into every snapshot and verified on
+/// resume: a checkpoint must not silently continue under a different
+/// model, rule, codec, seed, or cohort.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunMeta {
+    /// `FedConfig::label()` — model, C, E, B, lr.
+    pub label: String,
+    /// Canonical aggregation-rule label (`Aggregator::label`).
+    pub agg: String,
+    /// Transport codec label (`"<up>/<down>"`).
+    pub codec: String,
+    pub seed: u64,
+    /// Client population size K.
+    pub clients: u64,
+    /// Model parameter count.
+    pub dim: u64,
+    /// Per-round lr decay (not part of the label, but part of the
+    /// trajectory).
+    pub lr_decay: f64,
+    /// Eval cadence — determines which rounds produce curve rows.
+    pub eval_every: u64,
+    /// Harness knobs that alter the trajectory without their own
+    /// sections: availability probability, DP clip/σ (Debug-formatted
+    /// by the server — any difference on resume is a refusal).
+    pub harness: String,
+}
+
+/// Opaque per-rule aggregator state plus the rule label it belongs to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AggState {
+    pub label: String,
+    pub bytes: Vec<u8>,
+}
+
+/// The learning curves accumulated so far (RunResult + summary inputs).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CurveState {
+    pub accuracy: Vec<(u64, f64)>,
+    pub test_loss: Vec<(u64, f64)>,
+    pub train_loss: Option<Vec<(u64, f64)>>,
+}
+
+/// Fleet accounting: run totals plus the since-last-eval telemetry
+/// counters (checkpoints are allowed between eval rounds, where these
+/// are mid-flight).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FleetState {
+    pub totals: FleetTotals,
+    pub dropped_since_eval: u64,
+    pub misses_since_eval: u64,
+}
+
+/// One complete run-state snapshot — everything `federated::server::run`
+/// needs to continue a run bit-identically (see the module docs for the
+/// state inventory and what is deliberately excluded).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// The round this state is *after* (resume continues at `round + 1`).
+    pub round: u64,
+    pub meta: RunMeta,
+    pub theta: ParamVec,
+    pub client_steps: u64,
+    pub sampler: RngState,
+    pub agg: AggState,
+    pub transport: TransportState,
+    pub comms: CommState,
+    pub fleet: FleetState,
+    pub curves: CurveState,
+    pub dp: Option<MechState>,
+}
+
+/// Where a run's snapshots live: `<run-dir>/checkpoints/`.
+pub fn checkpoint_dir(run_dir: impl AsRef<Path>) -> PathBuf {
+    run_dir.as_ref().join("checkpoints")
+}
+
+/// FNV-1a 64 over the payload — cheap, dependency-free corruption check
+/// (bit flips, torn writes the length test cannot see).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn put_rng(w: &mut ByteWriter, st: &RngState) {
+    for s in st.s {
+        w.put_u64(s);
+    }
+    match st.gauss_spare {
+        None => w.put_u8(0),
+        Some(v) => {
+            w.put_u8(1);
+            w.put_f64(v);
+        }
+    }
+}
+
+fn get_rng(r: &mut ByteReader<'_>) -> Result<RngState> {
+    let s = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+    let gauss_spare = match r.u8()? {
+        0 => None,
+        1 => Some(r.f64()?),
+        other => anyhow::bail!("corrupt RNG state: spare flag {other}"),
+    };
+    Ok(RngState { s, gauss_spare })
+}
+
+fn put_curve(w: &mut ByteWriter, pts: &[(u64, f64)]) {
+    w.put_u64(pts.len() as u64);
+    for &(r, v) in pts {
+        w.put_u64(r);
+        w.put_f64(v);
+    }
+}
+
+fn get_curve(r: &mut ByteReader<'_>) -> Result<Vec<(u64, f64)>> {
+    let n = r.u64()? as usize;
+    anyhow::ensure!(
+        n.checked_mul(16).map_or(false, |b| b <= r.remaining()),
+        "corrupt curve length {n}"
+    );
+    (0..n).map(|_| Ok((r.u64()?, r.f64()?))).collect()
+}
+
+impl Snapshot {
+    // ------------------------------------------------------------ encode
+
+    fn section(out: &mut ByteWriter, id: u16, body: ByteWriter) {
+        out.put_u16(id);
+        out.put_bytes(&body.into_inner());
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut out = ByteWriter::new();
+
+        let mut w = ByteWriter::new();
+        w.put_str(&self.meta.label);
+        w.put_str(&self.meta.agg);
+        w.put_str(&self.meta.codec);
+        w.put_u64(self.meta.seed);
+        w.put_u64(self.meta.clients);
+        w.put_u64(self.meta.dim);
+        w.put_f64(self.meta.lr_decay);
+        w.put_u64(self.meta.eval_every);
+        w.put_str(&self.meta.harness);
+        Self::section(&mut out, SEC_META, w);
+
+        let mut w = ByteWriter::new();
+        w.put_f32s(&self.theta);
+        Self::section(&mut out, SEC_MODEL, w);
+
+        let mut w = ByteWriter::new();
+        w.put_u64(self.round);
+        w.put_u64(self.client_steps);
+        Self::section(&mut out, SEC_SCHED, w);
+
+        let mut w = ByteWriter::new();
+        put_rng(&mut w, &self.sampler);
+        Self::section(&mut out, SEC_SAMPLER, w);
+
+        let mut w = ByteWriter::new();
+        w.put_str(&self.agg.label);
+        w.put_bytes(&self.agg.bytes);
+        Self::section(&mut out, SEC_AGG, w);
+
+        let mut w = ByteWriter::new();
+        put_rng(&mut w, &self.transport.rng);
+        w.put_u64(self.transport.feedback.len() as u64);
+        for resid in &self.transport.feedback {
+            w.put_f32s(resid);
+        }
+        w.put_u64(self.transport.versions.len() as u64);
+        for (v, theta) in &self.transport.versions {
+            w.put_u64(*v);
+            w.put_f32s(theta);
+        }
+        w.put_u64s(&self.transport.acked);
+        Self::section(&mut out, SEC_TRANSPORT, w);
+
+        let mut w = ByteWriter::new();
+        w.put_u64(self.comms.totals.rounds);
+        w.put_u64(self.comms.totals.bytes_up);
+        w.put_u64(self.comms.totals.bytes_down);
+        w.put_f64(self.comms.totals.sim_seconds);
+        put_rng(&mut w, &self.comms.rng);
+        Self::section(&mut out, SEC_COMMS, w);
+
+        let mut w = ByteWriter::new();
+        w.put_u64(self.fleet.totals.dispatched);
+        w.put_u64(self.fleet.totals.completed);
+        w.put_u64(self.fleet.totals.dropped_stragglers);
+        w.put_u64(self.fleet.totals.deadline_misses);
+        w.put_u64(self.fleet.dropped_since_eval);
+        w.put_u64(self.fleet.misses_since_eval);
+        Self::section(&mut out, SEC_FLEET, w);
+
+        let mut w = ByteWriter::new();
+        put_curve(&mut w, &self.curves.accuracy);
+        put_curve(&mut w, &self.curves.test_loss);
+        match &self.curves.train_loss {
+            None => w.put_u8(0),
+            Some(c) => {
+                w.put_u8(1);
+                put_curve(&mut w, c);
+            }
+        }
+        Self::section(&mut out, SEC_CURVES, w);
+
+        if let Some(dp) = &self.dp {
+            let mut w = ByteWriter::new();
+            put_rng(&mut w, &dp.rng);
+            w.put_u64(dp.rounds_applied);
+            Self::section(&mut out, SEC_DP, w);
+        }
+
+        out.into_inner()
+    }
+
+    /// Serialize to the full on-disk byte image (header + payload).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payload = self.encode_payload();
+        let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.push(SNAP_VERSION);
+        out.extend_from_slice(&[0u8; 3]);
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    // ------------------------------------------------------------ decode
+
+    /// Parse and fully validate a snapshot image. Any defect — short
+    /// file, trailing bytes, checksum mismatch, missing section,
+    /// malformed section body — fails the whole load; no partial state
+    /// ever escapes.
+    pub fn from_bytes(buf: &[u8]) -> Result<Snapshot> {
+        anyhow::ensure!(
+            buf.len() >= HEADER_BYTES,
+            "snapshot truncated: {} bytes, header alone is {HEADER_BYTES}",
+            buf.len()
+        );
+        let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+        anyhow::ensure!(magic == MAGIC, "bad snapshot magic {magic:#010x}");
+        let version = buf[4];
+        anyhow::ensure!(
+            version == SNAP_VERSION,
+            "unsupported snapshot version {version} (this build reads {SNAP_VERSION})"
+        );
+        let round = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+        let payload_len = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
+        let stored_sum = u64::from_le_bytes(buf[24..32].try_into().unwrap());
+        anyhow::ensure!(
+            buf.len() - HEADER_BYTES == payload_len,
+            "snapshot length mismatch: header declares {payload_len} payload bytes, file has {}",
+            buf.len() - HEADER_BYTES
+        );
+        let payload = &buf[HEADER_BYTES..];
+        let sum = fnv1a(payload);
+        anyhow::ensure!(
+            sum == stored_sum,
+            "snapshot checksum mismatch ({sum:#018x} vs {stored_sum:#018x}): corrupt file"
+        );
+
+        let mut meta = None;
+        let mut theta = None;
+        let mut sched = None;
+        let mut sampler = None;
+        let mut agg = None;
+        let mut transport = None;
+        let mut comms = None;
+        let mut fleet = None;
+        let mut curves = None;
+        let mut dp = None;
+
+        let mut r = ByteReader::new(payload);
+        while !r.is_empty() {
+            let id = r.u16()?;
+            let body = r.bytes()?;
+            let mut b = ByteReader::new(body);
+            match id {
+                SEC_META => {
+                    meta = Some(RunMeta {
+                        label: b.str()?,
+                        agg: b.str()?,
+                        codec: b.str()?,
+                        seed: b.u64()?,
+                        clients: b.u64()?,
+                        dim: b.u64()?,
+                        lr_decay: b.f64()?,
+                        eval_every: b.u64()?,
+                        harness: b.str()?,
+                    });
+                    b.expect_end()?;
+                }
+                SEC_MODEL => {
+                    theta = Some(b.f32s()?);
+                    b.expect_end()?;
+                }
+                SEC_SCHED => {
+                    let r_in = b.u64()?;
+                    anyhow::ensure!(
+                        r_in == round,
+                        "snapshot round disagrees with header: {r_in} vs {round}"
+                    );
+                    sched = Some(b.u64()?);
+                    b.expect_end()?;
+                }
+                SEC_SAMPLER => {
+                    sampler = Some(get_rng(&mut b)?);
+                    b.expect_end()?;
+                }
+                SEC_AGG => {
+                    agg = Some(AggState {
+                        label: b.str()?,
+                        bytes: b.bytes()?.to_vec(),
+                    });
+                    b.expect_end()?;
+                }
+                SEC_TRANSPORT => {
+                    let rng = get_rng(&mut b)?;
+                    let n = b.u64()? as usize;
+                    anyhow::ensure!(
+                        n.checked_mul(8).map_or(false, |x| x <= b.remaining()),
+                        "corrupt feedback count {n}"
+                    );
+                    let feedback = (0..n).map(|_| b.f32s()).collect::<Result<Vec<_>>>()?;
+                    let nv = b.u64()? as usize;
+                    anyhow::ensure!(
+                        nv.checked_mul(16).map_or(false, |x| x <= b.remaining()),
+                        "corrupt version count {nv}"
+                    );
+                    let versions = (0..nv)
+                        .map(|_| Ok((b.u64()?, b.f32s()?)))
+                        .collect::<Result<Vec<_>>>()?;
+                    let acked = b.u64s()?;
+                    transport = Some(TransportState {
+                        rng,
+                        feedback,
+                        versions,
+                        acked,
+                    });
+                    b.expect_end()?;
+                }
+                SEC_COMMS => {
+                    let totals = crate::comms::CommTotals {
+                        rounds: b.u64()?,
+                        bytes_up: b.u64()?,
+                        bytes_down: b.u64()?,
+                        sim_seconds: b.f64()?,
+                    };
+                    comms = Some(CommState {
+                        totals,
+                        rng: get_rng(&mut b)?,
+                    });
+                    b.expect_end()?;
+                }
+                SEC_FLEET => {
+                    fleet = Some(FleetState {
+                        totals: FleetTotals {
+                            dispatched: b.u64()?,
+                            completed: b.u64()?,
+                            dropped_stragglers: b.u64()?,
+                            deadline_misses: b.u64()?,
+                        },
+                        dropped_since_eval: b.u64()?,
+                        misses_since_eval: b.u64()?,
+                    });
+                    b.expect_end()?;
+                }
+                SEC_CURVES => {
+                    let accuracy = get_curve(&mut b)?;
+                    let test_loss = get_curve(&mut b)?;
+                    let train_loss = match b.u8()? {
+                        0 => None,
+                        1 => Some(get_curve(&mut b)?),
+                        other => anyhow::bail!("corrupt train-loss flag {other}"),
+                    };
+                    curves = Some(CurveState {
+                        accuracy,
+                        test_loss,
+                        train_loss,
+                    });
+                    b.expect_end()?;
+                }
+                SEC_DP => {
+                    dp = Some(MechState {
+                        rng: get_rng(&mut b)?,
+                        rounds_applied: b.u64()?,
+                    });
+                    b.expect_end()?;
+                }
+                _ => {} // unknown section: skip (additive format growth)
+            }
+        }
+
+        let missing = |what: &str| anyhow::anyhow!("snapshot is missing its {what} section");
+        Ok(Snapshot {
+            round,
+            meta: meta.ok_or_else(|| missing("META"))?,
+            theta: theta.ok_or_else(|| missing("MODEL"))?,
+            client_steps: sched.ok_or_else(|| missing("SCHED"))?,
+            sampler: sampler.ok_or_else(|| missing("SAMPLER"))?,
+            agg: agg.ok_or_else(|| missing("AGG"))?,
+            transport: transport.ok_or_else(|| missing("TRANSPORT"))?,
+            comms: comms.ok_or_else(|| missing("COMMS"))?,
+            fleet: fleet.ok_or_else(|| missing("FLEET"))?,
+            curves: curves.ok_or_else(|| missing("CURVES"))?,
+            dp,
+        })
+    }
+
+    // --------------------------------------------------------------- io
+
+    /// Write the snapshot atomically into `ckpt_dir` as
+    /// `ckpt-<round>.bin` (tmp + fsync + rename), then prune to the
+    /// newest `keep` snapshots. Returns the final path.
+    pub fn write(&self, ckpt_dir: &Path, keep: usize) -> Result<PathBuf> {
+        anyhow::ensure!(keep >= 1, "checkpoint rotation must keep >= 1");
+        std::fs::create_dir_all(ckpt_dir).with_context(|| format!("mkdir {ckpt_dir:?}"))?;
+        let bytes = self.to_bytes();
+        let path = ckpt_dir.join(format!("ckpt-{:010}.bin", self.round));
+        let tmp = ckpt_dir.join(format!("ckpt-{:010}.bin.tmp", self.round));
+        {
+            let mut f = File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+            f.write_all(&bytes)?;
+            f.sync_all().with_context(|| format!("fsync {tmp:?}"))?;
+        }
+        std::fs::rename(&tmp, &path).with_context(|| format!("rename into {path:?}"))?;
+        for (_, old) in list(ckpt_dir)?.iter().rev().skip(keep) {
+            std::fs::remove_file(old).ok(); // best-effort prune
+        }
+        Ok(path)
+    }
+
+    /// Read and validate one snapshot file.
+    pub fn read(path: &Path) -> Result<Snapshot> {
+        let buf = std::fs::read(path).with_context(|| format!("reading snapshot {path:?}"))?;
+        Self::from_bytes(&buf).with_context(|| format!("snapshot {path:?}"))
+    }
+
+    /// Load the newest valid snapshot under `<run_dir>/checkpoints/`.
+    /// A corrupt newest file (e.g. the disk filled mid-rename cycle)
+    /// falls back to the next-newest with a warning — that is what the
+    /// keep-last-K budget is for. `Ok(None)` when no snapshots exist;
+    /// `Err` when snapshots exist but none validates.
+    pub fn load_latest(run_dir: &Path) -> Result<Option<(PathBuf, Snapshot)>> {
+        let dir = checkpoint_dir(run_dir);
+        if !dir.is_dir() {
+            return Ok(None);
+        }
+        let files = list(&dir)?;
+        if files.is_empty() {
+            return Ok(None);
+        }
+        let mut last_err = None;
+        for (_, path) in files.iter().rev() {
+            match Self::read(path) {
+                Ok(snap) => return Ok(Some((path.clone(), snap))),
+                Err(e) => {
+                    eprintln!("warning: skipping unreadable snapshot: {e:#}");
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.unwrap().context(format!(
+            "no valid snapshot among {} candidates in {dir:?}",
+            files.len()
+        )))
+    }
+}
+
+/// `(round, path)` of every `ckpt-*.bin` in `dir`, sorted by round.
+fn list(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("listing {dir:?}"))? {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        let Some(round) = name
+            .strip_prefix("ckpt-")
+            .and_then(|s| s.strip_suffix(".bin"))
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            continue; // .tmp leftovers, foreign files
+        };
+        out.push((round, path));
+    }
+    out.sort_unstable_by_key(|(r, _)| *r);
+    Ok(out)
+}

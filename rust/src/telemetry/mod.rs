@@ -2,6 +2,19 @@
 //! `runs/<name>/`, plus a console progress logger. Everything the
 //! experiment harnesses print is also persisted so figures can be
 //! re-plotted without re-running.
+//!
+//! Durability rules (DESIGN.md §8):
+//!
+//! * every record is flushed to the OS as it is written, so a killed run
+//!   keeps its whole curve up to the last completed eval — telemetry
+//!   must never lose more than the row being written;
+//! * [`RunWriter::create`] / [`FleetWriter::create`] refuse to reuse a
+//!   run directory that already holds a curve (two run names can
+//!   sanitize to the same directory — e.g. `C=0.1` and `C 0.1` — and
+//!   truncating silently destroys the first run's data); reruns opt in
+//!   via [`RunWriter::create_overwrite`] (`--overwrite`), resumed runs
+//!   via [`RunWriter::reopen`] (`--resume`), which truncates the curve
+//!   back to the checkpointed round and appends from there.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
@@ -63,10 +76,49 @@ fn run_dir(root: impl AsRef<Path>, name: &str) -> Result<PathBuf> {
     Ok(dir)
 }
 
+/// The curve.csv header row (also the schema table in README.md).
+const CURVE_HEADER: &str = "round,test_accuracy,test_loss,train_loss,clients,lr,up_bytes,down_bytes,codec,sim_seconds,dropped,deadline_misses,agg,server_state";
+
+/// Refuse to clobber an existing curve file: sanitized run names can
+/// collide, and `File::create` would silently truncate the loser.
+fn refuse_existing(dir: &Path, file: &str) -> Result<()> {
+    let path = dir.join(file);
+    anyhow::ensure!(
+        !path.exists(),
+        "run dir {dir:?} already holds {file} — pick a fresh --name, rerun \
+         with --overwrite, or continue it with --resume {dir:?}"
+    );
+    Ok(())
+}
+
 impl RunWriter {
-    /// Create `runs/<name>/` (name sanitized) and open curve.csv.
+    /// Create `runs/<name>/` (name sanitized) and open a fresh curve.csv.
+    /// Errors if the directory already holds one (see the module docs);
+    /// use [`create_overwrite`](Self::create_overwrite) to replace it or
+    /// [`reopen`](Self::reopen) to resume it.
     pub fn create(root: impl AsRef<Path>, name: &str) -> Result<Self> {
         let dir = run_dir(root, name)?;
+        refuse_existing(&dir, "curve.csv")?;
+        Self::open_fresh(dir)
+    }
+
+    /// Like [`create`](Self::create), but knowingly replaces any
+    /// existing curve (experiment harness reruns, scratch writers).
+    /// Also removes a stale `checkpoints/` dir from the replaced run:
+    /// its higher-round snapshots would otherwise win the keep-last-K
+    /// rotation (deleting the new run's own snapshots as "oldest") and
+    /// hijack a later `--resume` (DESIGN.md §8).
+    pub fn create_overwrite(root: impl AsRef<Path>, name: &str) -> Result<Self> {
+        let dir = run_dir(root, name)?;
+        let ckpts = dir.join("checkpoints");
+        if ckpts.exists() {
+            std::fs::remove_dir_all(&ckpts)
+                .with_context(|| format!("clearing stale {ckpts:?}"))?;
+        }
+        Self::open_fresh(dir)
+    }
+
+    fn open_fresh(dir: PathBuf) -> Result<Self> {
         let curve = BufWriter::new(File::create(dir.join("curve.csv"))?);
         let mut w = Self {
             dir,
@@ -74,11 +126,67 @@ impl RunWriter {
             started: Instant::now(),
             quiet: std::env::var("FEDAVG_QUIET").is_ok(),
         };
-        writeln!(
-            w.curve,
-            "round,test_accuracy,test_loss,train_loss,clients,lr,up_bytes,down_bytes,codec,sim_seconds,dropped,deadline_misses,agg,server_state"
-        )?;
+        writeln!(w.curve, "{CURVE_HEADER}")?;
+        w.curve.flush()?;
         Ok(w)
+    }
+
+    /// Reopen an existing run directory to resume it: truncate curve.csv
+    /// back to rows with `round <= last_round` (atomically, tmp+rename —
+    /// rows past the checkpoint belong to a future the resumed run will
+    /// re-create, possibly differently if flags changed) and append from
+    /// there. The resume path of `crate::runstate` (DESIGN.md §8).
+    ///
+    /// The file is append-only with rows flushed whole, so the only
+    /// damage a crash can leave is a torn **final** row (SIGKILL between
+    /// the partial write and the flush). Any row that is short, fails to
+    /// parse, or breaks the strictly-increasing round order is therefore
+    /// treated — together with everything after it — as the lost future
+    /// and dropped, not kept verbatim or turned into a hard error.
+    pub fn reopen(run_dir: impl AsRef<Path>, last_round: u64) -> Result<Self> {
+        let dir = run_dir.as_ref().to_path_buf();
+        let path = dir.join("curve.csv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("resume: reading {path:?}"))?;
+        let n_fields = CURVE_HEADER.split(',').count();
+        let mut kept = String::new();
+        let mut prev_round = 0u64;
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 {
+                anyhow::ensure!(
+                    line == CURVE_HEADER,
+                    "resume: {path:?} has an unrecognized header (different \
+                     telemetry schema?): {line:?}"
+                );
+            } else {
+                let round = line.split(',').next().unwrap_or("").parse::<u64>();
+                match round {
+                    Ok(r) if line.split(',').count() == n_fields && r > prev_round => {
+                        if r > last_round {
+                            break; // rounds increase: all later rows are future too
+                        }
+                        prev_round = r;
+                    }
+                    _ => break, // torn/corrupt tail
+                }
+            }
+            kept.push_str(line);
+            kept.push('\n');
+        }
+        anyhow::ensure!(
+            !kept.is_empty(),
+            "resume: {path:?} is empty — not a run this writer produced"
+        );
+        let tmp = dir.join("curve.csv.tmp");
+        std::fs::write(&tmp, &kept)?;
+        std::fs::rename(&tmp, &path)?;
+        let curve = BufWriter::new(File::options().append(true).open(&path)?);
+        Ok(Self {
+            dir,
+            curve,
+            started: Instant::now(),
+            quiet: std::env::var("FEDAVG_QUIET").is_ok(),
+        })
     }
 
     pub fn dir(&self) -> &Path {
@@ -104,6 +212,9 @@ impl RunWriter {
             r.agg,
             r.server_state
         )?;
+        // durability: a crashed run must keep every completed row — a
+        // row-per-eval stream buffered until finish() loses everything
+        self.curve.flush()?;
         if !self.quiet {
             let tl = r
                 .train_loss
@@ -174,13 +285,27 @@ pub struct FleetWriter {
 }
 
 impl FleetWriter {
+    /// Create `runs/<name>/` and a fresh fleet.csv, refusing to clobber
+    /// an existing one (same collision rule as [`RunWriter::create`]).
     pub fn create(root: impl AsRef<Path>, name: &str) -> Result<Self> {
         let dir = run_dir(root, name)?;
+        refuse_existing(&dir, "fleet.csv")?;
+        Self::open_fresh(dir)
+    }
+
+    /// Like [`create`](Self::create), but knowingly replaces any
+    /// existing fleet.csv.
+    pub fn create_overwrite(root: impl AsRef<Path>, name: &str) -> Result<Self> {
+        Self::open_fresh(run_dir(root, name)?)
+    }
+
+    fn open_fresh(dir: PathBuf) -> Result<Self> {
         let mut csv = BufWriter::new(File::create(dir.join("fleet.csv"))?);
         writeln!(
             csv,
             "round,online,dispatched,completed,dropped,deadline_miss,round_seconds"
         )?;
+        csv.flush()?;
         Ok(Self { dir, csv })
     }
 
@@ -195,6 +320,7 @@ impl FleetWriter {
             r.round, r.online, r.dispatched, r.completed, r.dropped, r.deadline_miss as u8,
             r.round_seconds
         )?;
+        self.csv.flush()?; // same crash-durability rule as RunWriter
         Ok(())
     }
 
@@ -205,10 +331,10 @@ impl FleetWriter {
 }
 
 /// Null telemetry sink for benches/tests (writes to a temp-ish dir under
-/// target/).
+/// target/; overwrites — the same tag may be reused within a process).
 pub fn scratch_writer(tag: &str) -> Result<RunWriter> {
     let pid = std::process::id();
-    RunWriter::create("target/test-runs", &format!("{tag}-{pid}"))
+    RunWriter::create_overwrite("target/test-runs", &format!("{tag}-{pid}"))
 }
 
 #[cfg(test)]
@@ -273,11 +399,151 @@ mod tests {
         std::fs::remove_dir_all(dir).ok();
     }
 
+    fn record(round: u64) -> RoundRecord<'static> {
+        RoundRecord {
+            round,
+            test_accuracy: 0.5,
+            test_loss: 1.2,
+            train_loss: None,
+            clients: 10,
+            lr: 0.1,
+            up_bytes: 1,
+            down_bytes: 2,
+            codec: "dense/dense",
+            sim_seconds: 1.0,
+            dropped: 0,
+            deadline_misses: 0,
+            agg: "fedavg",
+            server_state: "",
+        }
+    }
+
+    #[test]
+    fn rows_survive_drop_without_finish() {
+        // regression: records used to sit in the BufWriter until
+        // finish(), so a crashed/killed run lost its entire curve
+        let mut w = scratch_writer("telemetry-drop-test").unwrap();
+        let dir = w.dir().to_path_buf();
+        w.record(&record(1)).unwrap();
+        w.record(&record(2)).unwrap();
+        drop(w); // no finish(): simulate a killed process
+        let csv = std::fs::read_to_string(dir.join("curve.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 3, "rows lost on drop:\n{csv}");
+        assert!(csv.lines().nth(2).unwrap().starts_with("2,"));
+        assert!(!dir.join("summary.json").exists());
+
+        let pid = std::process::id();
+        let name = format!("fleet-drop-test-{pid}");
+        let mut fw = FleetWriter::create_overwrite("target/test-runs", &name).unwrap();
+        let fdir = fw.dir().to_path_buf();
+        fw.record(&FleetRoundRecord {
+            round: 1,
+            online: 5,
+            dispatched: 2,
+            completed: 2,
+            dropped: 0,
+            deadline_miss: false,
+            round_seconds: 1.0,
+        })
+        .unwrap();
+        drop(fw);
+        let csv = std::fs::read_to_string(fdir.join("fleet.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 2, "fleet rows lost on drop:\n{csv}");
+        std::fs::remove_dir_all(dir).ok();
+        std::fs::remove_dir_all(fdir).ok();
+    }
+
+    #[test]
+    fn colliding_run_names_refused_not_truncated() {
+        let pid = std::process::id();
+        let root = format!("target/test-runs/collide-{pid}");
+        std::fs::remove_dir_all(&root).ok(); // leftovers from a failed run
+        // "C=0.1" and "C 0.1" both sanitize to "C_0.1" — the second run
+        // would silently truncate the first's curve
+        let mut w = RunWriter::create(&root, "C=0.1").unwrap();
+        w.record(&record(1)).unwrap();
+        let dir = w.dir().to_path_buf();
+        drop(w);
+        let before = std::fs::read_to_string(dir.join("curve.csv")).unwrap();
+        let err = RunWriter::create(&root, "C 0.1").unwrap_err();
+        assert!(format!("{err:#}").contains("--overwrite"), "{err:#}");
+        // the first run's data is untouched by the refused create
+        let after = std::fs::read_to_string(dir.join("curve.csv")).unwrap();
+        assert_eq!(before, after, "refused create still destroyed data");
+        // explicit overwrite is allowed — and clears a stale checkpoints
+        // dir, whose higher-round snapshots would otherwise win the
+        // keep-last-K rotation against the new run's own snapshots
+        std::fs::create_dir_all(dir.join("checkpoints")).unwrap();
+        std::fs::write(dir.join("checkpoints/ckpt-0000000900.bin"), b"stale").unwrap();
+        RunWriter::create_overwrite(&root, "C 0.1").unwrap();
+        assert!(
+            !dir.join("checkpoints").exists(),
+            "--overwrite left stale checkpoints behind"
+        );
+        // fleet writer: same rule
+        let mut fw = FleetWriter::create(&root, "sim").unwrap();
+        fw.record(&FleetRoundRecord {
+            round: 1,
+            online: 1,
+            dispatched: 1,
+            completed: 1,
+            dropped: 0,
+            deadline_miss: false,
+            round_seconds: 0.1,
+        })
+        .unwrap();
+        drop(fw);
+        assert!(FleetWriter::create(&root, "sim").is_err());
+        std::fs::remove_dir_all(root).ok();
+    }
+
+    #[test]
+    fn reopen_truncates_to_round_and_appends() {
+        let pid = std::process::id();
+        let root = format!("target/test-runs/reopen-{pid}");
+        std::fs::remove_dir_all(&root).ok(); // leftovers from a failed run
+        let mut w = RunWriter::create(&root, "r").unwrap();
+        let dir = w.dir().to_path_buf();
+        for round in 1..=5 {
+            w.record(&record(round)).unwrap();
+        }
+        drop(w);
+        // resume from round 3: rows 4 and 5 belong to a lost future
+        let mut w = RunWriter::reopen(&dir, 3).unwrap();
+        let truncated = std::fs::read_to_string(dir.join("curve.csv")).unwrap();
+        assert_eq!(truncated.lines().count(), 4, "{truncated}");
+        assert!(truncated.lines().last().unwrap().starts_with("3,"));
+        w.record(&record(4)).unwrap();
+        w.finish(&[("rounds", "4".into())]).unwrap();
+        let full = std::fs::read_to_string(dir.join("curve.csv")).unwrap();
+        assert_eq!(full.lines().count(), 5);
+        assert_eq!(full.lines().next().unwrap(), CURVE_HEADER);
+        assert!(full.lines().last().unwrap().starts_with("4,"));
+
+        // a SIGKILL mid-write leaves a torn final row; reopen must drop
+        // it as lost future — even when its fragment parses as a small
+        // round ("1" torn from "12,...") — not keep it or hard-error
+        for torn in ["1", "12,0.51", ",0.5,junk"] {
+            let mut contents = full.clone();
+            contents.push_str(torn); // no trailing newline: mid-write kill
+            std::fs::write(dir.join("curve.csv"), &contents).unwrap();
+            let w = RunWriter::reopen(&dir, 4).unwrap();
+            drop(w);
+            let after = std::fs::read_to_string(dir.join("curve.csv")).unwrap();
+            assert_eq!(after, full, "torn row {torn:?} survived reopen");
+        }
+
+        // reopening a directory with no curve is an error, not a create
+        assert!(RunWriter::reopen(dir.join("nope"), 1).is_err());
+        std::fs::remove_dir_all(root).ok();
+    }
+
     #[test]
     fn fleet_writer_csv_and_summary() {
         let pid = std::process::id();
         let mut w =
-            FleetWriter::create("target/test-runs", &format!("fleet-test-{pid}")).unwrap();
+            FleetWriter::create_overwrite("target/test-runs", &format!("fleet-test-{pid}"))
+                .unwrap();
         let dir = w.dir().to_path_buf();
         w.record(&FleetRoundRecord {
             round: 1,

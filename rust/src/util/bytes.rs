@@ -1,0 +1,243 @@
+//! Little-endian byte encoding primitives (offline image: no serde).
+//!
+//! Shared by the run-state snapshot format ([`crate::runstate`]) and the
+//! opaque per-subsystem state blobs it embeds (e.g. the server-optimizer
+//! moments behind [`Aggregator::state_save`]). Writes are infallible;
+//! every read is bounds-checked and returns an error — never a panic —
+//! on truncated input, which is what lets a torn snapshot be *rejected*
+//! instead of half-loaded (DESIGN.md §8).
+//!
+//! [`Aggregator::state_save`]: crate::federated::aggregate::Aggregator::state_save
+
+use anyhow::ensure;
+
+use crate::Result;
+
+/// Append-only little-endian encoder.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Length-prefixed raw bytes (u64 count + payload).
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    /// Length-prefixed f32 vector (u64 count + LE f32 payload).
+    pub fn put_f32s(&mut self, v: &[f32]) {
+        self.put_u64(v.len() as u64);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed u64 vector.
+    pub fn put_u64s(&mut self, v: &[u64]) {
+        self.put_u64(v.len() as u64);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Bounds-checked little-endian decoder over a borrowed buffer.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Borrow the next `n` bytes, erroring (not panicking) past the end.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "truncated buffer: wanted {n} bytes at offset {}, {} left",
+            self.pos,
+            self.remaining()
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Length-prefixed count, sanity-bounded so a corrupt length cannot
+    /// drive an allocation past the buffer it claims to describe.
+    fn len_prefix(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        ensure!(
+            n.checked_mul(elem_bytes).map_or(false, |b| b <= self.remaining()),
+            "corrupt length prefix: {n} x {elem_bytes}B elements but only {} bytes left",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.len_prefix(1)?;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let b = self.bytes()?;
+        Ok(std::str::from_utf8(b)
+            .map_err(|e| anyhow::anyhow!("non-UTF-8 string in buffer: {e}"))?
+            .to_string())
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_prefix(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.len_prefix(8)?;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Assert the buffer is fully consumed — trailing garbage means the
+    /// encoder and decoder disagree, which must fail loudly.
+    pub fn expect_end(&self) -> Result<()> {
+        ensure!(
+            self.is_empty(),
+            "{} trailing bytes after decode",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_primitives() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u16(65535);
+        w.put_u64(u64::MAX - 1);
+        w.put_f64(-0.125);
+        w.put_bytes(b"blob");
+        w.put_str("naïve");
+        w.put_f32s(&[1.5, -2.25, 0.0]);
+        w.put_u64s(&[9, 8]);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 65535);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f64().unwrap(), -0.125);
+        assert_eq!(r.bytes().unwrap(), b"blob");
+        assert_eq!(r.str().unwrap(), "naïve");
+        assert_eq!(r.f32s().unwrap(), vec![1.5, -2.25, 0.0]);
+        assert_eq!(r.u64s().unwrap(), vec![9, 8]);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn truncation_errors_instead_of_panicking() {
+        let mut w = ByteWriter::new();
+        w.put_f32s(&[1.0, 2.0, 3.0]);
+        let buf = w.into_inner();
+        // every proper prefix must fail cleanly
+        for cut in 0..buf.len() {
+            let mut r = ByteReader::new(&buf[..cut]);
+            assert!(r.f32s().is_err(), "prefix of {cut} bytes decoded");
+        }
+        // a lying length prefix is caught before allocation
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::MAX); // claims 2^64-1 elements
+        let buf = w.into_inner();
+        assert!(ByteReader::new(&buf).f32s().is_err());
+    }
+
+    #[test]
+    fn expect_end_rejects_trailing_garbage() {
+        let mut w = ByteWriter::new();
+        w.put_u8(1);
+        w.put_u8(2);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        r.u8().unwrap();
+        assert!(r.expect_end().is_err());
+        r.u8().unwrap();
+        r.expect_end().unwrap();
+    }
+}

@@ -1,6 +1,8 @@
 //! In-tree utilities replacing crates unavailable in this offline image
-//! (serde → [`json`], clap → [`args`], criterion → [`bench`]).
+//! (serde → [`json`] for output, [`bytes`] for binary state; clap →
+//! [`args`], criterion → [`bench`]).
 
 pub mod args;
 pub mod bench;
+pub mod bytes;
 pub mod json;

@@ -1,0 +1,591 @@
+//! Checkpoint/resume regression suite (DESIGN.md §8).
+//!
+//! The core guarantee under test is **bit-identity**: running `2R`
+//! rounds produces byte-for-byte the same `curve.csv` as running `R`
+//! rounds, checkpointing, and resuming for `R` more. Two engine-free
+//! harnesses drive the real stateful subsystems (sampler, transport
+//! with top-k error feedback + delta downlink, stateful aggregators,
+//! comm simulator, fleet scheduler, DP mechanism) through a synthetic
+//! round loop that mirrors `federated::server::run` minus training —
+//! so the whole save/restore surface is exercised without artifacts —
+//! plus an artifact-gated test over the full training stack. The format
+//! tests pin the atomicity/validation contract: torn, corrupt, or
+//! mismatched snapshots are rejected whole, never half-loaded.
+
+use std::path::PathBuf;
+
+use fedavg::comms::{CommModel, CommSim, Transport, TransportConfig};
+use fedavg::coordinator::{plan_round, Fleet, FleetConfig, FleetProfile, FleetTotals};
+use fedavg::data::rng::hash3_unit;
+use fedavg::federated::aggregate::{fmt_state_norms, AggConfig, Aggregator};
+use fedavg::federated::ClientSampler;
+use fedavg::metrics::LearningCurve;
+use fedavg::params;
+use fedavg::privacy::{clip, GaussianMechanism};
+use fedavg::runstate::{
+    checkpoint_dir, AggState, CurveState, FleetState, ResumeFrom, RunMeta, Snapshot,
+};
+use fedavg::telemetry::{RoundRecord, RunWriter};
+
+// odd on purpose: an odd dim leaves the DP mechanism's Box–Muller pair
+// half-consumed at round end, so the snapshot must carry the cached
+// spare deviate for the resume to stay bit-identical
+const DIM: usize = 301;
+const K: usize = 12;
+const M: usize = 4;
+const SEED: u64 = 21;
+
+fn test_root(tag: &str) -> PathBuf {
+    let root = PathBuf::from(format!(
+        "target/test-runs/runstate-{tag}-{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&root).ok();
+    root
+}
+
+/// Deterministic stand-in for a client's local update: a function of
+/// (round, client, θ) so state errors propagate into every later round.
+fn synth_delta(round: u64, client: usize, theta: &[f32]) -> Vec<f32> {
+    (0..DIM)
+        .map(|i| {
+            (hash3_unit(round, client as u64, i as u64) as f32 - 0.5) * 0.1
+                - 0.01 * theta[i]
+        })
+        .collect()
+}
+
+/// Fake evaluation: a smooth function of ‖θ‖ (no model involved).
+fn fake_eval(theta: &[f32]) -> (f64, f64) {
+    let n = params::l2_norm(theta);
+    (1.0 / (1.0 + n), n)
+}
+
+/// One synthetic run's live state — the same inventory
+/// `federated::server::run` snapshots.
+struct Harness {
+    fleet: Option<Fleet>,
+    fleet_cfg: FleetConfig,
+    theta: Vec<f32>,
+    sampler: ClientSampler,
+    transport: Transport,
+    comms: CommSim,
+    agg: Box<dyn Aggregator>,
+    mech: Option<GaussianMechanism>,
+    accuracy: LearningCurve,
+    test_loss: LearningCurve,
+    client_steps: u64,
+    fleet_totals: FleetTotals,
+    dropped_since_eval: usize,
+    misses_since_eval: usize,
+    eval_every: u64,
+    meta: RunMeta,
+}
+
+/// `fleet: true` → mobile device profiles, over-selection + deadline
+/// (straggler drops), delta downlink, top-k|q8 uplink, fedavgm.
+/// `fleet: false` → legacy jitter path with availability, q8 uplink,
+/// fedadam, and DP noise.
+fn harness(fleet: bool) -> Harness {
+    let fleet_cfg = FleetConfig {
+        profile: if fleet { FleetProfile::Mobile } else { FleetProfile::Legacy },
+        overselect: 0.5,
+        deadline_s: Some(0.5),
+        ..FleetConfig::default()
+    };
+    let transport_cfg = if fleet {
+        TransportConfig::parse(Some("topk:30|q8"), Some("delta")).unwrap()
+    } else {
+        TransportConfig::parse(Some("q8"), None).unwrap()
+    };
+    let agg_cfg = AggConfig {
+        spec: if fleet { "fedavgm:0.8".into() } else { "fedadam:0.01".into() },
+        ..Default::default()
+    };
+    let transport = Transport::new(transport_cfg, K, DIM, SEED);
+    let agg = agg_cfg.build().unwrap();
+    let mut sampler = ClientSampler::new(SEED);
+    if !fleet {
+        sampler = sampler.with_availability(0.7, SEED ^ 0xAB1E);
+    }
+    let meta = RunMeta {
+        label: format!("synthetic fleet={fleet}"),
+        agg: agg.label(),
+        codec: transport.codec_label(),
+        seed: SEED,
+        clients: K as u64,
+        dim: DIM as u64,
+        lr_decay: 1.0,
+        eval_every: 2,
+        harness: format!("fleet={fleet}"),
+    };
+    Harness {
+        fleet: fleet.then(|| Fleet::build(&fleet_cfg, K, SEED)),
+        fleet_cfg,
+        theta: (0..DIM).map(|i| (i as f32 * 0.01).sin()).collect(),
+        sampler,
+        transport,
+        comms: CommSim::new(CommModel::default(), SEED),
+        agg,
+        mech: (!fleet).then(|| GaussianMechanism::new(1.0, 0.5, SEED ^ 0xD11F)),
+        accuracy: LearningCurve::new(),
+        test_loss: LearningCurve::new(),
+        client_steps: 0,
+        fleet_totals: FleetTotals::default(),
+        dropped_since_eval: 0,
+        misses_since_eval: 0,
+        eval_every: 2,
+        meta,
+    }
+}
+
+impl Harness {
+    /// One synchronous round, mirroring the server loop's state flow.
+    fn round(&mut self, round: u64, last: u64, w: &mut RunWriter) {
+        self.transport.publish(round, &self.theta);
+        let est_up = self.transport.up_plan_bytes();
+        let mut down_total = 0u64;
+        let (picks, round_seconds) = match &self.fleet {
+            Some(fl) => {
+                let transport = &mut self.transport;
+                let theta = &self.theta;
+                let (_online, plan) = plan_round(
+                    fl,
+                    &mut self.sampler,
+                    round,
+                    M,
+                    self.fleet_cfg.overselect,
+                    self.fleet_cfg.deadline_s,
+                    |c| {
+                        let down = transport.downlink(c, round, theta);
+                        down_total += down;
+                        (down, est_up)
+                    },
+                    |_| 5.0,
+                );
+                self.fleet_totals.dispatched += plan.dispatched.len() as u64;
+                self.fleet_totals.completed += plan.completed.len() as u64;
+                self.fleet_totals.dropped_stragglers += plan.dropped.len() as u64;
+                self.fleet_totals.deadline_misses += plan.deadline_miss as u64;
+                self.dropped_since_eval += plan.dropped.len();
+                self.misses_since_eval += plan.deadline_miss as usize;
+                (plan.completed.clone(), plan.round_seconds)
+            }
+            None => {
+                let picks = self.sampler.sample(round, K, M);
+                for &c in &picks {
+                    down_total += self.transport.downlink(c, round, &self.theta);
+                }
+                (picks, 0.0)
+            }
+        };
+        let mut wire_up = 0u64;
+        let mut deltas: Vec<(f32, Vec<f32>)> = Vec::new();
+        for &ck in &picks {
+            self.client_steps += 5;
+            let mut delta = synth_delta(round, ck, &self.theta);
+            if self.mech.is_some() {
+                clip(&mut delta, 1.0);
+            }
+            wire_up += self.transport.encode_up(ck, &mut delta).unwrap();
+            deltas.push(((ck % 3 + 1) as f32, delta));
+        }
+        let refs: Vec<(f32, &[f32])> = deltas.iter().map(|(w, d)| (*w, d.as_slice())).collect();
+        let mut agg_delta = self.agg.combine(&refs).unwrap();
+        if let Some(mech) = self.mech.as_mut() {
+            mech.apply(&mut agg_delta, picks.len());
+        }
+        let step = self.agg.step(round, agg_delta).unwrap();
+        params::axpy(&mut self.theta, 1.0, &step);
+        let rc = match &self.fleet {
+            Some(_) => self.comms.ingest(wire_up, down_total, round_seconds),
+            None => {
+                let links: Vec<(u64, u64)> =
+                    picks.iter().map(|_| (down_total / picks.len() as u64, est_up)).collect();
+                self.comms.round_links(&links)
+            }
+        };
+        if round % self.eval_every == 0 || round == last {
+            let (acc, loss) = fake_eval(&self.theta);
+            self.accuracy.push(round, acc);
+            self.test_loss.push(round, loss);
+            let server_state = fmt_state_norms(&self.agg.state_norms());
+            w.record(&RoundRecord {
+                round,
+                test_accuracy: acc,
+                test_loss: loss,
+                train_loss: None,
+                clients: picks.len(),
+                lr: 0.1,
+                up_bytes: rc.bytes_up,
+                down_bytes: rc.bytes_down,
+                codec: &self.meta.codec,
+                sim_seconds: self.comms.totals().sim_seconds,
+                dropped: self.dropped_since_eval,
+                deadline_misses: self.misses_since_eval,
+                agg: &self.meta.agg,
+                server_state: &server_state,
+            })
+            .unwrap();
+            self.dropped_since_eval = 0;
+            self.misses_since_eval = 0;
+        }
+    }
+
+    fn snapshot(&self, round: u64) -> Snapshot {
+        Snapshot {
+            round,
+            meta: self.meta.clone(),
+            theta: self.theta.clone(),
+            client_steps: self.client_steps,
+            sampler: self.sampler.state(),
+            agg: AggState {
+                label: self.agg.label(),
+                bytes: self.agg.state_save(),
+            },
+            transport: self.transport.state_save(),
+            comms: self.comms.state_save(),
+            fleet: FleetState {
+                totals: self.fleet_totals,
+                dropped_since_eval: self.dropped_since_eval as u64,
+                misses_since_eval: self.misses_since_eval as u64,
+            },
+            curves: CurveState {
+                accuracy: self.accuracy.points().to_vec(),
+                test_loss: self.test_loss.points().to_vec(),
+                train_loss: None,
+            },
+            dp: self.mech.as_ref().map(|m| m.state_save()),
+        }
+    }
+
+    /// The exact restore sequence `federated::server::run` performs.
+    fn restore(&mut self, snap: Snapshot) {
+        assert_eq!(snap.meta, self.meta, "config fingerprint mismatch");
+        self.theta = snap.theta;
+        self.sampler.restore_state(snap.sampler);
+        assert_eq!(snap.agg.label, self.agg.label());
+        self.agg.state_load(&snap.agg.bytes).unwrap();
+        self.transport.state_load(snap.transport).unwrap();
+        self.comms.state_load(snap.comms);
+        if let (Some(m), Some(dp)) = (self.mech.as_mut(), snap.dp) {
+            m.state_load(dp);
+        }
+        self.accuracy = LearningCurve::from_points(snap.curves.accuracy).unwrap();
+        self.test_loss = LearningCurve::from_points(snap.curves.test_loss).unwrap();
+        self.client_steps = snap.client_steps;
+        self.fleet_totals = snap.fleet.totals;
+        self.dropped_since_eval = snap.fleet.dropped_since_eval as usize;
+        self.misses_since_eval = snap.fleet.misses_since_eval as usize;
+    }
+}
+
+/// The tentpole regression: `2R` straight vs `R` + checkpoint + resume
+/// `R` must produce byte-identical curve.csv files, across a stateful
+/// aggregator, a codec with error feedback, and a fleet profile — and
+/// the checkpoint round (5) deliberately misses the eval cadence (2) so
+/// mid-flight telemetry counters and curve truncation are exercised too.
+fn bit_identity_scenario(fleet: bool) {
+    let tag = if fleet { "fleet" } else { "legacy" };
+    let root = test_root(&format!("bitident-{tag}"));
+    let (r1, r2) = (6u64, 12u64);
+    let ckpt_round = 5u64;
+
+    // reference: one uninterrupted run of 2R rounds
+    let mut full = harness(fleet);
+    let mut w = RunWriter::create(&root, "full").unwrap();
+    let full_dir = w.dir().to_path_buf();
+    for round in 1..=r2 {
+        full.round(round, r2, &mut w);
+    }
+    w.finish(&[("rounds", r2.to_string())]).unwrap();
+
+    // crashed run: R rounds, snapshots every round up to ckpt_round,
+    // then rows past the checkpoint are "lost future" to be truncated
+    let mut part = harness(fleet);
+    let mut w = RunWriter::create(&root, "resumed").unwrap();
+    let part_dir = w.dir().to_path_buf();
+    let ckpts = checkpoint_dir(&part_dir);
+    for round in 1..=r1 {
+        part.round(round, r2, &mut w);
+        if round <= ckpt_round {
+            part.snapshot(round).write(&ckpts, 2).unwrap();
+        }
+    }
+    drop(w); // kill: no finish()
+
+    // keep-last-K rotation: only the newest 2 snapshots remain
+    let remaining: Vec<_> = std::fs::read_dir(&ckpts)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    assert_eq!(remaining.len(), 2, "{remaining:?}");
+
+    // resume: newest snapshot, truncate the curve, rerun to 2R
+    let (_, snap) = Snapshot::load_latest(&part_dir).unwrap().expect("snapshots exist");
+    assert_eq!(snap.round, ckpt_round);
+    let mut resumed = harness(fleet);
+    resumed.restore(snap);
+    let mut w = RunWriter::reopen(&part_dir, ckpt_round).unwrap();
+    for round in ckpt_round + 1..=r2 {
+        resumed.round(round, r2, &mut w);
+    }
+    w.finish(&[("rounds", r2.to_string())]).unwrap();
+
+    let a = std::fs::read(full_dir.join("curve.csv")).unwrap();
+    let b = std::fs::read(part_dir.join("curve.csv")).unwrap();
+    assert!(!a.is_empty() && a == b, "{tag}: resumed curve.csv != uninterrupted curve.csv");
+    std::fs::remove_dir_all(root).ok();
+}
+
+#[test]
+fn resume_bit_identity_fleet_fedavgm_topk() {
+    bit_identity_scenario(true);
+}
+
+#[test]
+fn resume_bit_identity_legacy_fedadam_dp() {
+    bit_identity_scenario(false);
+}
+
+// ------------------------------------------------------- format contract
+
+/// A snapshot with every section populated (incl. optional DP). `tag`
+/// keeps concurrently-running tests out of each other's scratch dirs.
+fn rich_snapshot(tag: &str, round: u64) -> Snapshot {
+    let mut h = harness(true);
+    let root = test_root(&format!("rich-{tag}-{round}"));
+    let mut w = RunWriter::create(&root, "scratch").unwrap();
+    for r in 1..=round {
+        h.round(r, round, &mut w);
+    }
+    let mut snap = h.snapshot(round);
+    snap.dp = Some({
+        let mut mech = GaussianMechanism::new(1.0, 0.5, 7);
+        let mut v = vec![0.0f32; 7]; // odd: leaves a cached gauss spare
+        mech.apply(&mut v, 4);
+        mech.state_save()
+    });
+    snap.curves.train_loss = Some(vec![(2, 1.5), (4, 1.25)]);
+    std::fs::remove_dir_all(root).ok();
+    snap
+}
+
+#[test]
+fn snapshot_bytes_roundtrip_exactly() {
+    for round in [1u64, 3, 6] {
+        let snap = rich_snapshot("roundtrip", round);
+        let bytes = snap.to_bytes();
+        let back = Snapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back, snap, "round {round}: decode(encode(s)) != s");
+        // and through the filesystem (atomic write path)
+        let root = test_root(&format!("roundtrip-{round}"));
+        let dir = checkpoint_dir(&root);
+        let path = snap.write(&dir, 3).unwrap();
+        assert!(path.file_name().unwrap().to_str().unwrap().ends_with(".bin"));
+        assert!(!path.to_str().unwrap().ends_with(".tmp"));
+        assert_eq!(Snapshot::read(&path).unwrap(), snap);
+        std::fs::remove_dir_all(root).ok();
+    }
+}
+
+#[test]
+fn truncated_snapshots_rejected_at_every_length() {
+    let snap = rich_snapshot("trunc", 3);
+    let bytes = snap.to_bytes();
+    // every strict prefix must be rejected whole — sample densely at the
+    // start (header validation) and stride through the payload
+    let mut cuts: Vec<usize> = (0..48.min(bytes.len())).collect();
+    cuts.extend((48..bytes.len()).step_by(97));
+    for cut in cuts {
+        assert!(
+            Snapshot::from_bytes(&bytes[..cut]).is_err(),
+            "truncated snapshot of {cut}/{} bytes loaded",
+            bytes.len()
+        );
+    }
+    // trailing garbage is a length mismatch, not silently ignored
+    let mut long = bytes.clone();
+    long.push(0);
+    assert!(Snapshot::from_bytes(&long).is_err());
+}
+
+#[test]
+fn corrupted_snapshots_rejected() {
+    let snap = rich_snapshot("corrupt", 3);
+    let bytes = snap.to_bytes();
+    // bad magic
+    let mut b = bytes.clone();
+    b[0] ^= 0xFF;
+    assert!(format!("{:#}", Snapshot::from_bytes(&b).unwrap_err()).contains("magic"));
+    // unsupported version
+    let mut b = bytes.clone();
+    b[4] = 99;
+    assert!(format!("{:#}", Snapshot::from_bytes(&b).unwrap_err()).contains("version"));
+    // payload bit flips → checksum mismatch (stride through the payload)
+    for i in (32..bytes.len()).step_by(211) {
+        let mut b = bytes.clone();
+        b[i] ^= 0x40;
+        let err = Snapshot::from_bytes(&b).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("checksum"),
+            "flip at {i}: {err:#}"
+        );
+    }
+    // header round field is covered by the SCHED cross-check
+    let mut b = bytes.clone();
+    b[8] ^= 0x01;
+    assert!(Snapshot::from_bytes(&b).is_err());
+}
+
+#[test]
+fn load_latest_skips_corrupt_newest_and_reports_none_when_empty() {
+    let root = test_root("loadlatest");
+    // no checkpoints dir at all
+    assert!(Snapshot::load_latest(&root).unwrap().is_none());
+    let dir = checkpoint_dir(&root);
+    std::fs::create_dir_all(&dir).unwrap();
+    // empty dir
+    assert!(Snapshot::load_latest(&root).unwrap().is_none());
+    // two valid snapshots; newest wins
+    rich_snapshot("latest", 2).write(&dir, 5).unwrap();
+    let s3 = rich_snapshot("latest", 3);
+    let p3 = s3.write(&dir, 5).unwrap();
+    let (path, snap) = Snapshot::load_latest(&root).unwrap().unwrap();
+    assert_eq!((path, snap.round), (p3.clone(), 3));
+    // truncate the newest (torn write survivor): falls back to round 2
+    let full = std::fs::read(&p3).unwrap();
+    std::fs::write(&p3, &full[..full.len() / 2]).unwrap();
+    let (_, snap) = Snapshot::load_latest(&root).unwrap().unwrap();
+    assert_eq!(snap.round, 2);
+    // every snapshot corrupt → error, not None
+    for e in std::fs::read_dir(&dir).unwrap() {
+        std::fs::write(e.unwrap().path(), b"FCKPgarbage").unwrap();
+    }
+    assert!(Snapshot::load_latest(&root).is_err());
+    // a stale .tmp from a crash mid-write is never considered
+    std::fs::remove_dir_all(&dir).unwrap();
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("ckpt-0000000009.bin.tmp"), b"torn").unwrap();
+    assert!(Snapshot::load_latest(&root).unwrap().is_none());
+    std::fs::remove_dir_all(root).ok();
+}
+
+#[test]
+fn restore_rejects_mismatched_configurations() {
+    let mut h = harness(true);
+    let root = test_root("mismatch");
+    let mut w = RunWriter::create(&root, "scratch").unwrap();
+    for r in 1..=3 {
+        h.round(r, 3, &mut w);
+    }
+    let snap = h.snapshot(3);
+    // wrong aggregator for the recorded state blob
+    let mut other = AggConfig {
+        spec: "fedavg".into(),
+        ..Default::default()
+    }
+    .build()
+    .unwrap();
+    assert!(other.state_load(&snap.agg.bytes).is_err());
+    // wrong transport shape (client count, dim)
+    let cfg = TransportConfig::parse(Some("topk:30|q8"), Some("delta")).unwrap();
+    assert!(Transport::new(cfg.clone(), K + 1, DIM, SEED)
+        .state_load(snap.transport.clone())
+        .is_err());
+    assert!(Transport::new(cfg, K, DIM / 2, SEED)
+        .state_load(snap.transport.clone())
+        .is_err());
+    std::fs::remove_dir_all(root).ok();
+}
+
+// ------------------------------------- full-stack (artifact-gated) test
+
+#[test]
+fn server_resume_bit_identity_over_artifacts() {
+    use fedavg::config::{BatchSize, FedConfig, Partition};
+    use fedavg::federated::{self, ServerOptions};
+    use fedavg::runstate::CheckpointConfig;
+    use fedavg::runtime::Engine;
+
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return;
+    }
+    let eng = Engine::load(dir).expect("engine");
+    let fed = fedavg::exper::mnist_fed(0.05, Partition::Iid, 40);
+    let cfg = |rounds| FedConfig {
+        model: "mnist_2nn".into(),
+        c: 0.3,
+        e: 1,
+        b: BatchSize::Fixed(10),
+        lr: 0.1,
+        rounds,
+        eval_every: 1,
+        seed: 40,
+        ..Default::default()
+    };
+    let opts = |telemetry: Option<RunWriter>| ServerOptions {
+        eval_cap: Some(200),
+        telemetry,
+        transport: TransportConfig::parse(Some("topk:0.02|q8"), Some("delta")).unwrap(),
+        agg: AggConfig {
+            spec: "fedavgm:0.9".into(),
+            ..Default::default()
+        },
+        fleet: FleetConfig {
+            profile: FleetProfile::Mobile,
+            overselect: 0.3,
+            ..FleetConfig::default()
+        },
+        ..Default::default()
+    };
+    let root = test_root("server");
+
+    // uninterrupted 6-round reference
+    let w = RunWriter::create(&root, "full").unwrap();
+    let full_dir = w.dir().to_path_buf();
+    let full = federated::run(&eng, &fed, &cfg(6), opts(Some(w))).unwrap();
+
+    // 3 rounds with checkpointing, then resume to 6
+    let w = RunWriter::create(&root, "resumed").unwrap();
+    let part_dir = w.dir().to_path_buf();
+    let mut o = opts(Some(w));
+    o.checkpoint = Some(CheckpointConfig { every: 3, keep: 2 });
+    federated::run(&eng, &fed, &cfg(3), o).unwrap();
+    let (_, snap) = Snapshot::load_latest(&part_dir).unwrap().expect("checkpoint written");
+    assert_eq!(snap.round, 3);
+    let mut o = opts(None);
+    o.resume = Some(ResumeFrom {
+        snapshot: snap,
+        run_dir: part_dir.clone(),
+    });
+    let resumed = federated::run(&eng, &fed, &cfg(6), o).unwrap();
+
+    assert_eq!(full.final_theta, resumed.final_theta, "trajectory diverged");
+    assert_eq!(full.accuracy.points(), resumed.accuracy.points());
+    assert_eq!(full.comm.bytes_up, resumed.comm.bytes_up);
+    assert_eq!(full.comm.bytes_down, resumed.comm.bytes_down);
+    let a = std::fs::read(full_dir.join("curve.csv")).unwrap();
+    let b = std::fs::read(part_dir.join("curve.csv")).unwrap();
+    assert_eq!(a, b, "resumed curve.csv != uninterrupted curve.csv");
+
+    // a mismatched configuration must be refused — and the refusal must
+    // leave the run dir's telemetry byte-identical (no truncation)
+    let (_, snap) = Snapshot::load_latest(&part_dir).unwrap().unwrap();
+    let before = std::fs::read(part_dir.join("curve.csv")).unwrap();
+    let mut o = opts(None);
+    o.agg.spec = "fedavg".into(); // different rule than the checkpoint
+    o.resume = Some(ResumeFrom {
+        snapshot: snap,
+        run_dir: part_dir.clone(),
+    });
+    assert!(federated::run(&eng, &fed, &cfg(6), o).is_err());
+    assert_eq!(
+        before,
+        std::fs::read(part_dir.join("curve.csv")).unwrap(),
+        "a refused resume truncated the original run's curve"
+    );
+    std::fs::remove_dir_all(root).ok();
+}
