@@ -1,0 +1,131 @@
+//! Grid-engine kill/resume smoke drill (engine-free) — the CI `grid-smoke`
+//! job's workhorse (DESIGN.md §9).
+//!
+//! Runs a tiny 2×2 grid of synthetic cells. With `--kill-after N` the
+//! process calls `exit(42)` the moment a cell starts while ≥ N cells are
+//! already durably recorded — a real mid-grid kill, not a simulated
+//! error. CI runs:
+//!
+//! ```bash
+//! cargo run --release --example grid_smoke -- --out runs/a --workers 2 --kill-after 1  # dies
+//! cargo run --release --example grid_smoke -- --out runs/a --workers 2                 # resumes
+//! cargo run --release --example grid_smoke -- --out runs/b --workers 2                 # clean ref
+//! diff -r runs/a/cells runs/b/cells && diff runs/a/grid-*/manifest.json runs/b/grid-*/manifest.json
+//! ```
+//!
+//! and asserts the resumed grid's manifest and every cell artifact are
+//! byte-identical to the uninterrupted run's.
+
+use std::path::PathBuf;
+
+use fedavg::exper::grid::{self, CellCtx, CellOutcome, CellWork, GridDef, GridOptions, Series};
+use fedavg::runstate::atomic_write;
+use fedavg::runtime::Engine;
+use fedavg::util::args::Args;
+use fedavg::Result;
+
+struct SmokeCell {
+    a: u64,
+    b: u64,
+    /// exit(42) when a cell starts with this many cells already
+    /// recorded — the harness's kill switch, not part of the spec.
+    kill_after: Option<usize>,
+    cells_root: PathBuf,
+}
+
+fn recorded_cells(cells_root: &std::path::Path) -> usize {
+    let Ok(rd) = std::fs::read_dir(cells_root) else {
+        return 0;
+    };
+    rd.filter(|e| {
+        e.as_ref()
+            .map(|e| e.path().join("cell.json").exists())
+            .unwrap_or(false)
+    })
+    .count()
+}
+
+impl CellWork for SmokeCell {
+    fn spec(&self) -> String {
+        format!("smoke a={} b={}", self.a, self.b)
+    }
+
+    fn needs_engine(&self) -> bool {
+        false
+    }
+
+    fn run(&self, _engine: Option<&Engine>, ctx: &CellCtx) -> Result<CellOutcome> {
+        // a little simulated work so parallel workers overlap — and so
+        // that by the kill check below, earlier finishers' records have
+        // durably landed on disk
+        std::thread::sleep(std::time::Duration::from_millis(120));
+        if let Some(k) = self.kill_after {
+            if recorded_cells(&self.cells_root) >= k {
+                eprintln!(
+                    "smoke: {k} cell(s) recorded — killing the process mid-grid (exit 42)"
+                );
+                std::process::exit(42);
+            }
+        }
+        std::fs::create_dir_all(&ctx.dir)?;
+        let mut csv = String::from("round,value\n");
+        let mut pts: Series = Vec::new();
+        for r in 1..=8u64 {
+            let v = (self.a * 1000 + self.b * 100 + r) as f64 / 7.0;
+            csv.push_str(&format!("{r},{v}\n"));
+            pts.push((r as f64, v));
+        }
+        atomic_write(&ctx.dir.join("curve.csv"), csv.as_bytes())?;
+        let mut out = CellOutcome::default();
+        out.put("a", self.a);
+        out.put("b", self.b);
+        out.put("final", pts.last().unwrap().1);
+        out.curves.push(("series".into(), pts));
+        Ok(out)
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    args.check_known(&["out", "workers", "kill-after"])?;
+    let out = args.str_or("out", "runs/grid-smoke");
+    let workers = args.usize_or("workers", 2)?;
+    let kill_after = match args.str_opt("kill-after") {
+        Some(v) => Some(v.parse::<usize>()?),
+        None => None,
+    };
+    let cells_root = PathBuf::from(&out).join("cells");
+
+    let mut def = GridDef::new("smoke-2x2");
+    for a in 1..=2u64 {
+        for b in 1..=2u64 {
+            def.cell(
+                format!("smoke-a{a}-b{b}"),
+                SmokeCell {
+                    a,
+                    b,
+                    kill_after,
+                    cells_root: cells_root.clone(),
+                },
+            );
+        }
+    }
+    let opts = GridOptions {
+        out_root: out.clone(),
+        workers,
+        ..Default::default()
+    };
+    let Some(report) = grid::run(def, None, &opts)? else {
+        return Ok(());
+    };
+    println!("grid smoke: 2x2 complete — {} executed, {} reused", report.executed, report.cache_hits);
+    for (i, o) in report.outcomes.iter().enumerate() {
+        println!(
+            "  cell {i}: a={} b={} final={}",
+            o.get("a").unwrap_or("?"),
+            o.get("b").unwrap_or("?"),
+            o.get("final").unwrap_or("?")
+        );
+    }
+    Ok(())
+}

@@ -290,6 +290,24 @@ impl FleetSim {
     pub fn totals(&self) -> SimTotals {
         self.totals
     }
+
+    /// Fast-forward so the next [`step`](Self::step) executes
+    /// `start_round`: rounds `1..start_round` are folded into the totals
+    /// without emitting per-round reports (no telemetry rows, no
+    /// printing). Every round is a pure function of `(seed, round)` —
+    /// profiles, the diurnal clock, and the per-round selection stream
+    /// carry no history — so the recomputed schedule is exactly what a
+    /// full replay would have produced, and `fast_forward(r)` followed
+    /// by stepping is bit-identical to stepping from round 1
+    /// (regression-tested below). Behind `fedavg fleet --sim-only
+    /// --start-round`, where multi-day 100k-client sims skip re-emitting
+    /// a lost run's prefix.
+    pub fn fast_forward(&mut self, start_round: u64) -> SimTotals {
+        while self.round + 1 < start_round {
+            self.step();
+        }
+        self.totals
+    }
 }
 
 #[cfg(test)]
@@ -410,5 +428,54 @@ mod tests {
     #[test]
     fn sim_rejects_legacy_profile() {
         assert!(FleetSim::new(&FleetConfig::default(), 10, 2, 1000, 1.0, 1).is_err());
+    }
+
+    #[test]
+    fn fast_forward_equals_full_replay() {
+        let cfg = FleetConfig {
+            profile: FleetProfile::Flaky, // small online pools stress selection
+            overselect: 0.4,
+            deadline_s: Some(40.0),
+            ..Default::default()
+        };
+        let mk = || FleetSim::new(&cfg, 400, 12, 700_000, 30.0, 13).unwrap();
+        let (start, last) = (21u64, 30u64);
+
+        // reference: full replay of rounds 1..=last
+        let mut full = mk();
+        let mut tail = Vec::new();
+        for r in 1..=last {
+            let sr = full.step();
+            assert_eq!(sr.round, r);
+            if r >= start {
+                tail.push(sr);
+            }
+        }
+
+        // fast-forwarded: totals folded for 1..start without reports
+        let mut ff = mk();
+        ff.fast_forward(start);
+        for want in &tail {
+            let got = ff.step();
+            assert_eq!(got.round, want.round);
+            assert_eq!(got.online, want.online);
+            assert_eq!(got.plan.dispatched, want.plan.dispatched);
+            assert_eq!(got.plan.completed, want.plan.completed);
+            assert_eq!(got.plan.dropped, want.plan.dropped);
+            assert_eq!(got.plan.deadline_miss, want.plan.deadline_miss);
+            assert_eq!(got.plan.round_seconds, want.plan.round_seconds);
+        }
+        let (a, b) = (full.totals(), ff.totals());
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.fleet, b.fleet);
+        assert_eq!(a.bytes_up, b.bytes_up);
+        assert_eq!(a.bytes_down, b.bytes_down);
+        assert_eq!(a.sim_seconds, b.sim_seconds);
+
+        // degenerate targets: 0 and 1 are both "start at round 1"
+        let mut z = mk();
+        z.fast_forward(1);
+        assert_eq!(z.totals().rounds, 0);
+        assert_eq!(z.step().round, 1);
     }
 }

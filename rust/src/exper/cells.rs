@@ -1,0 +1,562 @@
+//! The library's grid cells — the work units every sweep driver declares
+//! into the [grid engine](super::grid) (DESIGN.md §9).
+//!
+//! A cell is plain, `Send` data: it names its *workload* (dataset +
+//! partition, built in-thread on whichever worker executes it) and its
+//! complete run configuration, and its [`CellWork::spec`] string is the
+//! fingerprint input — every knob that can change the cell's outputs
+//! appears in it. Three kinds cover the paper's whole evaluation:
+//!
+//! * [`FedCell`] — one [`federated::run`]: the unit behind every table
+//!   row and figure series. Owns the per-cell crash story: a done cell
+//!   is finalized from its terminal snapshot without replay, an
+//!   in-flight cell resumes through the ordinary checkpoint machinery
+//!   (DESIGN.md §8), anything else restarts fresh (deterministic, so a
+//!   restart reproduces the same bytes).
+//! * [`SgdCell`] — the sequential-SGD baseline (Table 3, Figure 9).
+//! * [`InterpCell`] — Figure 1's parameter-averaging interpolation
+//!   study.
+
+use std::path::Path;
+
+use crate::baselines::sgd::{self, SgdConfig};
+use crate::comms::{CommTotals, TransportConfig};
+use crate::config::{BatchSize, FedConfig, Partition};
+use crate::data::{corrupt_clients, Federated};
+use crate::federated::aggregate::{fmt_state_norms, AggConfig};
+use crate::federated::{self, local_update, LocalSpec, ServerOptions};
+use crate::metrics::LearningCurve;
+use crate::params::interpolate;
+use crate::runstate::{atomic_write, ResumeFrom, Snapshot};
+use crate::runtime::Engine;
+use crate::telemetry::{write_summary, RunWriter};
+use crate::Result;
+
+use super::grid::{CellCtx, CellOutcome, CellWork, Series};
+
+/// A federated workload, declared as data and built in-thread by
+/// whichever worker runs the cell (datasets are synthetic and seeded, so
+/// construction is cheap and deterministic).
+#[derive(Debug, Clone)]
+pub enum Workload {
+    Mnist { scale: f64, part: Partition, seed: u64 },
+    Cifar { scale: f64, seed: u64 },
+    Shakespeare { scale: f64, natural: bool, seed: u64 },
+    Social { scale: f64, seed: u64 },
+}
+
+impl Workload {
+    pub fn build(&self) -> Federated {
+        match *self {
+            Workload::Mnist { scale, part, seed } => super::mnist_fed(scale, part, seed),
+            Workload::Cifar { scale, seed } => super::cifar_fed(scale, seed),
+            Workload::Shakespeare {
+                scale,
+                natural,
+                seed,
+            } => super::shakespeare_fed(scale, natural, seed),
+            Workload::Social { scale, seed } => super::social_fed(scale, seed),
+        }
+    }
+
+    /// Canonical sub-spec (`{:?}` on f64 prints round-trip values).
+    pub fn spec(&self) -> String {
+        format!("{self:?}")
+    }
+}
+
+fn to_series(pts: &[(u64, f64)]) -> Series {
+    pts.iter().map(|&(x, y)| (x as f64, y)).collect()
+}
+
+/// Per-run curve/accounting bundle shared by the fresh-run and
+/// finalize-from-snapshot paths of [`FedCell`].
+struct RunStats {
+    accuracy: Vec<(u64, f64)>,
+    test_loss: Vec<(u64, f64)>,
+    train_loss: Option<Vec<(u64, f64)>>,
+    comm: CommTotals,
+    rounds_run: u64,
+    client_steps: u64,
+}
+
+/// Workload shape recorded into every outcome row (formatters derive
+/// `u = E·(n/K)/B` and cohort sizes from it instead of rebuilding data).
+struct Population {
+    clients: usize,
+    examples: usize,
+    corrupted: usize,
+}
+
+/// How a cell dir's prior state maps onto this execution.
+enum Prior {
+    Fresh,
+    Resume(Box<Snapshot>),
+    Finished(Box<Snapshot>),
+}
+
+/// One [`federated::run`] as a grid cell.
+#[derive(Debug, Clone)]
+pub struct FedCell {
+    pub workload: Workload,
+    pub cfg: FedConfig,
+    pub eval_cap: usize,
+    pub agg: AggConfig,
+    pub transport: TransportConfig,
+    /// Fraction of label-corrupted clients (`fedavg agg`); 0 = none.
+    pub corrupt: f64,
+}
+
+impl FedCell {
+    pub fn new(workload: Workload, cfg: FedConfig, eval_cap: usize) -> FedCell {
+        FedCell {
+            workload,
+            cfg,
+            eval_cap,
+            agg: AggConfig::default(),
+            transport: TransportConfig::default(),
+            corrupt: 0.0,
+        }
+    }
+
+    fn codec_spec(&self) -> String {
+        let name = |p: &Option<crate::comms::wire::Pipeline>| {
+            p.as_ref()
+                .map(|p| p.spec().to_string())
+                .unwrap_or_else(|| "legacy".into())
+        };
+        format!(
+            "{}/{}@{}",
+            name(&self.transport.up),
+            name(&self.transport.down),
+            self.transport.store_cap
+        )
+    }
+
+    /// Classify the cell dir's checkpoints. The dir is already keyed by
+    /// this cell's fingerprint, but belt-and-braces: a snapshot that
+    /// does not match the config restarts the cell instead of resuming
+    /// into a wrong trajectory (the server re-verifies the full
+    /// fingerprint on any actual resume).
+    fn classify(&self, dir: &Path, clients: usize, dim: usize) -> Prior {
+        let snap = match Snapshot::load_latest(dir) {
+            Ok(Some((_, s))) => s,
+            Ok(None) => return Prior::Fresh,
+            Err(e) => {
+                eprintln!(
+                    "warning: {}: no usable checkpoint ({e:#}); cell restarts fresh",
+                    dir.display()
+                );
+                return Prior::Fresh;
+            }
+        };
+        let cfg = &self.cfg;
+        if snap.meta.label != cfg.label()
+            || snap.meta.seed != cfg.seed
+            || snap.meta.clients != clients as u64
+            || snap.meta.dim != dim as u64
+            || snap.meta.lr_decay != cfg.lr_decay
+            || snap.meta.eval_every != cfg.eval_every as u64
+        {
+            return Prior::Fresh;
+        }
+        // both continuation paths reopen the run's telemetry; without a
+        // curve to reopen (externally deleted), restart from scratch
+        if !dir.join("curve.csv").exists() {
+            return Prior::Fresh;
+        }
+        // early stop counts as finished: the terminal snapshot's curve
+        // already crossed the target, and blindly resuming would train
+        // past the stop and change the curve
+        let target_hit = cfg
+            .target_accuracy
+            .map_or(false, |t| snap.curves.accuracy.iter().any(|&(_, v)| v >= t));
+        if snap.round >= cfg.rounds as u64 || target_hit {
+            return Prior::Finished(Box::new(snap));
+        }
+        Prior::Resume(Box::new(snap))
+    }
+
+    /// A run that already finished (terminal snapshot, DESIGN.md §8) but
+    /// whose done record was lost — e.g. the grid was killed between the
+    /// server finishing and the manifest update. Recover the outcome
+    /// from the snapshot without replaying: truncate any lost-future
+    /// rows, then close out summary.json the way the server would have.
+    fn finalize(&self, snap: Snapshot, ctx: &CellCtx, pop: Population) -> Result<CellOutcome> {
+        let mut w = RunWriter::reopen(&ctx.dir, snap.round)?;
+        w.set_quiet(true);
+        let mut aggr = self.agg.build()?;
+        aggr.state_load(&snap.agg.bytes)?;
+        let totals = snap.comms.totals;
+        let final_acc = snap.curves.accuracy.last().map(|&(_, v)| v).unwrap_or(0.0);
+        let mut fields = vec![
+            ("model", self.cfg.model.clone()),
+            ("label", self.cfg.label()),
+            ("rounds_run", snap.round.to_string()),
+            ("client_steps", snap.client_steps.to_string()),
+            ("final_accuracy", format!("{final_acc:.6}")),
+            ("bytes_up", totals.bytes_up.to_string()),
+            ("bytes_down", totals.bytes_down.to_string()),
+            ("codec", snap.meta.codec.clone()),
+            ("sim_seconds", format!("{:.1}", totals.sim_seconds)),
+            ("agg", snap.meta.agg.clone()),
+        ];
+        let server_state = fmt_state_norms(&aggr.state_norms());
+        if !server_state.is_empty() {
+            fields.push(("server_state", server_state));
+        }
+        w.finish(&fields)?;
+        let stats = RunStats {
+            accuracy: snap.curves.accuracy,
+            test_loss: snap.curves.test_loss,
+            train_loss: snap.curves.train_loss,
+            comm: totals,
+            rounds_run: snap.round,
+            client_steps: snap.client_steps,
+        };
+        Ok(self.outcome(stats, pop))
+    }
+
+    fn outcome(&self, stats: RunStats, pop: Population) -> CellOutcome {
+        let curve = LearningCurve::from_points(stats.accuracy.clone())
+            .expect("server curves are strictly increasing in rounds");
+        let rtt = self
+            .cfg
+            .target_accuracy
+            .and_then(|t| curve.rounds_to_target(t));
+        let mut out = CellOutcome::default();
+        out.put("final_acc", curve.last_value().unwrap_or(0.0));
+        out.put("best_acc", curve.best_value().unwrap_or(0.0));
+        out.put("rtt", rtt.map(|r| r.to_string()).unwrap_or_default());
+        out.put("rounds_run", stats.rounds_run);
+        out.put("client_steps", stats.client_steps);
+        out.put("bytes_up", stats.comm.bytes_up);
+        out.put("bytes_down", stats.comm.bytes_down);
+        out.put("sim_seconds", stats.comm.sim_seconds);
+        out.put("clients_total", pop.clients);
+        out.put("examples_total", pop.examples);
+        out.put("corrupted", pop.corrupted);
+        out.curves.push(("accuracy".into(), to_series(&stats.accuracy)));
+        out.curves
+            .push(("test_loss".into(), to_series(&stats.test_loss)));
+        if let Some(tl) = &stats.train_loss {
+            out.curves.push(("train_loss".into(), to_series(tl)));
+        }
+        out
+    }
+}
+
+impl CellWork for FedCell {
+    fn spec(&self) -> String {
+        format!(
+            "fed {} seed={} lr_decay={} rounds={} eval_every={} target={:?} \
+             train_loss={} | {} | eval_cap={} agg={} server_lr={:?} \
+             server_momentum={} prox_mu={} codec={} corrupt={}",
+            self.cfg.label(),
+            self.cfg.seed,
+            self.cfg.lr_decay,
+            self.cfg.rounds,
+            self.cfg.eval_every,
+            self.cfg.target_accuracy,
+            self.cfg.track_train_loss,
+            self.workload.spec(),
+            self.eval_cap,
+            self.agg.spec,
+            self.agg.server_lr,
+            self.agg.server_momentum,
+            self.agg.prox_mu,
+            self.codec_spec(),
+            self.corrupt,
+        )
+    }
+
+    fn run(&self, engine: Option<&Engine>, ctx: &CellCtx) -> Result<CellOutcome> {
+        let engine =
+            engine.ok_or_else(|| anyhow::anyhow!("federated cell needs the PJRT engine"))?;
+        let mut fed = self.workload.build();
+        let corrupted = if self.corrupt > 0.0 {
+            corrupt_clients(&mut fed, self.corrupt, self.cfg.seed ^ 0xC0881).len()
+        } else {
+            0
+        };
+        let pop = Population {
+            clients: fed.num_clients(),
+            examples: fed.total_examples(),
+            corrupted,
+        };
+        let dim = engine.model(&self.cfg.model)?.param_count();
+        let mut sopts = ServerOptions {
+            eval_cap: Some(self.eval_cap),
+            transport: self.transport.clone(),
+            agg: self.agg.clone(),
+            checkpoint: ctx.checkpoint,
+            // covers the resume path, whose writer the server reopens
+            // itself; the fresh path's writer is quieted below
+            quiet_rounds: ctx.quiet,
+            ..Default::default()
+        };
+        match self.classify(&ctx.dir, pop.clients, dim) {
+            Prior::Finished(snap) => return self.finalize(*snap, ctx, pop),
+            Prior::Resume(snap) => {
+                eprintln!(
+                    "  resuming {} from its round-{} checkpoint",
+                    ctx.dir.display(),
+                    snap.round
+                );
+                sopts.resume = Some(ResumeFrom {
+                    snapshot: *snap,
+                    run_dir: ctx.dir.clone(),
+                });
+            }
+            Prior::Fresh => {
+                let mut w = RunWriter::create_dir_overwrite(&ctx.dir)?;
+                w.set_quiet(ctx.quiet);
+                sopts.telemetry = Some(w);
+            }
+        }
+        let res = federated::run(engine, &fed, &self.cfg, sopts)?;
+        let stats = RunStats {
+            accuracy: res.accuracy.points().to_vec(),
+            test_loss: res.test_loss.points().to_vec(),
+            train_loss: res.train_loss.as_ref().map(|c| c.points().to_vec()),
+            comm: res.comm,
+            rounds_run: res.rounds_run,
+            client_steps: res.client_steps,
+        };
+        Ok(self.outcome(stats, pop))
+    }
+}
+
+/// The sequential-SGD baseline as a grid cell (Table 3, Figure 9): the
+/// pooled training set, learning curve keyed by minibatch updates. No
+/// mid-run checkpointing — an interrupted SGD cell restarts fresh, which
+/// reproduces identical bytes (the run is a pure function of its spec).
+#[derive(Debug, Clone)]
+pub struct SgdCell {
+    pub workload: Workload,
+    pub cfg: SgdConfig,
+    pub eval_cap: usize,
+}
+
+impl CellWork for SgdCell {
+    fn spec(&self) -> String {
+        let c = &self.cfg;
+        format!(
+            "sgd model={} batch={} lr={} lr_decay={} updates={} eval_every={} \
+             target={:?} seed={} | {} | eval_cap={}",
+            c.model,
+            c.batch,
+            c.lr,
+            c.lr_decay,
+            c.updates,
+            c.eval_every,
+            c.target_accuracy,
+            c.seed,
+            self.workload.spec(),
+            self.eval_cap,
+        )
+    }
+
+    fn run(&self, engine: Option<&Engine>, ctx: &CellCtx) -> Result<CellOutcome> {
+        let engine = engine.ok_or_else(|| anyhow::anyhow!("SGD cell needs the PJRT engine"))?;
+        let fed = self.workload.build();
+        let res = sgd::run(engine, &fed.train, &fed.test, &self.cfg, Some(self.eval_cap))?;
+        std::fs::create_dir_all(&ctx.dir)?;
+        let mut csv = String::from("update,test_accuracy,test_loss\n");
+        for (&(u, acc), &(_, loss)) in res.accuracy.points().iter().zip(res.test_loss.points()) {
+            csv.push_str(&format!("{u},{acc},{loss}\n"));
+        }
+        atomic_write(&ctx.dir.join("sgd.csv"), csv.as_bytes())?;
+        write_summary(
+            &ctx.dir,
+            &[
+                ("model", self.cfg.model.clone()),
+                ("updates_run", res.updates_run.to_string()),
+                (
+                    "final_accuracy",
+                    format!("{:.6}", res.accuracy.last_value().unwrap_or(0.0)),
+                ),
+            ],
+        )?;
+        let mut out = CellOutcome::default();
+        out.put("final_acc", res.accuracy.last_value().unwrap_or(0.0));
+        out.put("best_acc", res.accuracy.best_value().unwrap_or(0.0));
+        out.put("updates_run", res.updates_run);
+        out.curves
+            .push(("accuracy".into(), to_series(res.accuracy.points())));
+        out.curves
+            .push(("test_loss".into(), to_series(res.test_loss.points())));
+        Ok(out)
+    }
+}
+
+/// Figure 1's interpolation study as a grid cell: train two MNIST 2NN
+/// models from shared vs independent initializations on disjoint shards,
+/// then trace the training loss of `θ·w + (1−θ)·w'` across mixing
+/// weights (the averaging-works phenomenon the whole paper rests on).
+#[derive(Debug, Clone)]
+pub struct InterpCell {
+    pub scale: f64,
+    pub seed: u64,
+}
+
+impl CellWork for InterpCell {
+    fn spec(&self) -> String {
+        format!("interp scale={} seed={}", self.scale, self.seed)
+    }
+
+    fn run(&self, engine: Option<&Engine>, ctx: &CellCtx) -> Result<CellOutcome> {
+        let engine =
+            engine.ok_or_else(|| anyhow::anyhow!("interpolation cell needs the PJRT engine"))?;
+        let model = engine.model("mnist_2nn")?;
+        let fed = super::mnist_fed(self.scale.max(0.02), Partition::Iid, self.seed);
+        // two disjoint "clients": the paper trained on 600-example shards
+        let a_idx = &fed.clients[0];
+        let b_idx = &fed.clients[1 % fed.num_clients()];
+        // paper: SGD lr=0.1, 240 updates of batch 50 (E=20 over 600)
+        let train = |theta0: &[f32], idxs: &[usize], seed: u64| -> Result<Vec<f32>> {
+            let spec = LocalSpec {
+                epochs: (240 * 50 / idxs.len().max(1)).max(1),
+                batch: BatchSize::Fixed(50),
+                lr: 0.1,
+                prox_mu: 0.0,
+                shuffle_seed: seed,
+            };
+            Ok(local_update(&model, &fed.train, idxs, theta0, &spec)?.theta)
+        };
+        // loss over the *full* training set, as in the paper
+        let full: Vec<usize> = (0..fed.train.len()).collect();
+        let loss_of = |theta: &[f32]| -> Result<f64> {
+            Ok(model
+                .eval_dataset(theta, &fed.train, Some(&full))?
+                .mean_loss())
+        };
+
+        let mut out = CellOutcome::default();
+        for (tag, seed_a, seed_b) in [("independent", 100, 200), ("shared", 300, 300)] {
+            let wa = train(&model.init(seed_a)?, a_idx, 1)?;
+            let wb = train(&model.init(seed_b)?, b_idx, 2)?;
+            let parent_best = loss_of(&wa)?.min(loss_of(&wb)?);
+            let mut pts: Series = Vec::with_capacity(50);
+            let mut min_mix = f64::INFINITY;
+            for i in 0..50 {
+                let theta = -0.2 + 1.4 * (i as f64 / 49.0);
+                let mixed = interpolate(&wb, &wa, theta as f32); // θ on w (=wa)
+                let l = loss_of(&mixed)?;
+                min_mix = min_mix.min(l);
+                pts.push((theta, l));
+            }
+            out.put(&format!("{tag}_parent_best"), parent_best);
+            out.put(&format!("{tag}_best_mix"), min_mix);
+            out.curves.push((tag.to_string(), pts));
+        }
+        std::fs::create_dir_all(&ctx.dir)?;
+        Ok(out)
+    }
+}
+
+/// The one work type every driver declares: federated runs, the SGD
+/// baseline, and the interpolation study.
+#[derive(Debug, Clone)]
+pub enum GridCell {
+    Fed(FedCell),
+    Sgd(SgdCell),
+    Interp(InterpCell),
+}
+
+impl CellWork for GridCell {
+    fn spec(&self) -> String {
+        match self {
+            GridCell::Fed(c) => c.spec(),
+            GridCell::Sgd(c) => c.spec(),
+            GridCell::Interp(c) => c.spec(),
+        }
+    }
+
+    fn run(&self, engine: Option<&Engine>, ctx: &CellCtx) -> Result<CellOutcome> {
+        match self {
+            GridCell::Fed(c) => c.run(engine, ctx),
+            GridCell::Sgd(c) => c.run(engine, ctx),
+            GridCell::Interp(c) => c.run(engine, ctx),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fed_cell() -> FedCell {
+        FedCell::new(
+            Workload::Mnist {
+                scale: 0.05,
+                part: Partition::Iid,
+                seed: 42,
+            },
+            FedConfig::default(),
+            600,
+        )
+    }
+
+    #[test]
+    fn fed_spec_covers_every_knob() {
+        let base = fed_cell();
+        let mut tweaked: Vec<FedCell> = Vec::new();
+        let tweaks: [fn(&mut FedCell); 13] = [
+            |c: &mut FedCell| c.cfg.lr = 0.2,
+            |c: &mut FedCell| c.cfg.seed = 43,
+            |c: &mut FedCell| c.cfg.rounds += 1,
+            |c: &mut FedCell| c.cfg.eval_every = 2,
+            |c: &mut FedCell| c.cfg.lr_decay = 0.99,
+            |c: &mut FedCell| c.cfg.target_accuracy = Some(0.5),
+            |c: &mut FedCell| c.cfg.track_train_loss = true,
+            |c: &mut FedCell| c.eval_cap = 601,
+            |c: &mut FedCell| c.agg.spec = "fedavgm".into(),
+            |c: &mut FedCell| c.agg.prox_mu = 0.1,
+            |c: &mut FedCell| c.corrupt = 0.2,
+            |c: &mut FedCell| {
+                c.workload = Workload::Mnist {
+                    scale: 0.05,
+                    part: Partition::Pathological(2),
+                    seed: 42,
+                }
+            },
+            |c: &mut FedCell| {
+                c.transport = TransportConfig::parse(Some("q8"), None).unwrap()
+            },
+        ];
+        for f in tweaks {
+            let mut c = fed_cell();
+            f(&mut c);
+            tweaked.push(c);
+        }
+        let mut specs: Vec<String> = tweaked.iter().map(|c| c.spec()).collect();
+        specs.push(base.spec());
+        let n = specs.len();
+        specs.sort();
+        specs.dedup();
+        assert_eq!(specs.len(), n, "two distinct configs share a spec");
+    }
+
+    #[test]
+    fn workload_specs_distinguish_shapes() {
+        let a = Workload::Mnist {
+            scale: 0.05,
+            part: Partition::Iid,
+            seed: 1,
+        };
+        let b = Workload::Mnist {
+            scale: 0.05,
+            part: Partition::Unbalanced,
+            seed: 1,
+        };
+        let c = Workload::Shakespeare {
+            scale: 0.05,
+            natural: true,
+            seed: 1,
+        };
+        assert_ne!(a.spec(), b.spec());
+        assert_ne!(a.spec(), c.spec());
+        assert_eq!(a.spec(), a.spec());
+    }
+}

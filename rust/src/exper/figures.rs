@@ -1,19 +1,21 @@
 //! Figure drivers — regenerate the data series behind every figure in the
-//! paper (1-10). Each writes CSVs under `runs/figN-*/` and prints a
-//! compact summary; DESIGN.md §3 maps figure → experiment.
+//! paper (1-10). Each figure declares its cells into one shared grid
+//! (`fedavg figure all` runs everything in one restartable, parallel
+//! sweep — DESIGN.md §9), then writes CSVs under `runs/figN-*/` and
+//! prints a compact summary; DESIGN.md §3 maps figure → experiment.
+//! Series files are assembled from the cells' recorded curves, so a
+//! resumed grid reproduces them byte-for-byte.
 
-use crate::baselines::sgd::{self, SgdConfig};
+use crate::baselines::sgd::SgdConfig;
 use crate::config::{BatchSize, FedConfig, Partition};
-use crate::data::Federated;
-use crate::federated::{self, updates_per_round, LocalSpec};
-use crate::params::interpolate;
+use crate::federated::updates_per_round;
 use crate::runtime::Engine;
 use crate::util::args::Args;
 use crate::Result;
 
-use super::{
-    cifar_fed, mnist_fed, run_one, shakespeare_fed, social_fed, ExpOptions, COMMON_FLAGS,
-};
+use super::cells::{FedCell, GridCell, InterpCell, SgdCell, Workload};
+use super::grid::{self, CellOutcome, GridDef};
+use super::{ExpOptions, COMMON_FLAGS};
 
 pub fn run(engine: &Engine, args: &Args) -> Result<()> {
     args.check_known(&[COMMON_FLAGS, &["e-values"]].concat())?;
@@ -28,22 +30,184 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
     } else {
         vec![which.parse()?]
     };
-    for f in figs {
-        match f {
-            1 => figure1(engine, &opts)?,
-            2 => figure2(engine, &opts)?,
-            3 => figure3(engine, &opts, args)?,
-            4 => figure4(engine, &opts)?,
-            5 => figure5(engine, &opts)?,
-            6 => figure6(engine, &opts)?,
-            7 => figure7(engine, &opts)?,
-            8 => figure8(engine, &opts, args)?,
-            9 => figure9(engine, &opts)?,
-            10 => figure10(engine, &opts)?,
-            other => anyhow::bail!("no figure {other}"),
-        }
+
+    // one grid for the whole invocation: cells across figures dedupe
+    // against each other and the shared pool, and run in parallel
+    let mut def = GridDef::new(format!("figures-{which}"));
+    let mut plan: Vec<(u32, usize)> = Vec::new();
+    let mut social_k: Option<usize> = None;
+    for &f in &figs {
+        let before = def.len();
+        declare(f, &mut def, engine, &opts, args, &mut social_k)?;
+        plan.push((f, def.len() - before));
+    }
+    let Some(report) = grid::run(def, Some(engine), &opts.grid_options())? else {
+        return Ok(()); // --dry-run
+    };
+    let mut off = 0;
+    for (f, n) in plan {
+        format_figure(f, &report.outcomes[off..off + n], &opts, args)?;
+        off += n;
     }
     Ok(())
+}
+
+/// Client count of the Social workload, built at most once per
+/// invocation — Figures 5 and 10 both need K for `C = 200/K`, and the
+/// fingerprinted configs must be identical whether or not the cells are
+/// cached, so even `--dry-run` pays (one) build when they are declared.
+fn social_clients(opts: &ExpOptions, memo: &mut Option<usize>) -> usize {
+    *memo.get_or_insert_with(|| {
+        Workload::Social {
+            scale: opts.scale,
+            seed: opts.seed,
+        }
+        .build()
+        .num_clients()
+    })
+}
+
+fn declare(
+    f: u32,
+    def: &mut GridDef<GridCell>,
+    engine: &Engine,
+    opts: &ExpOptions,
+    args: &Args,
+    social_k: &mut Option<usize>,
+) -> Result<()> {
+    match f {
+        1 => def.cell(
+            "fig1-interp",
+            GridCell::Interp(InterpCell {
+                scale: opts.scale,
+                seed: opts.seed,
+            }),
+        ),
+        2 => {
+            for (label, workload, cfg) in fig2_list(opts) {
+                def.cell(
+                    format!("fig2-{label}"),
+                    GridCell::Fed(FedCell::new(workload, cfg, opts.eval_cap)),
+                );
+            }
+        }
+        3 => {
+            for (e, cfg) in fig3_list(opts, args)? {
+                def.cell(
+                    format!("fig3-E{e}"),
+                    GridCell::Fed(FedCell::new(
+                        Workload::Shakespeare {
+                            scale: opts.scale,
+                            natural: true,
+                            seed: opts.seed,
+                        },
+                        cfg,
+                        opts.eval_cap,
+                    )),
+                );
+            }
+        }
+        4 => {
+            for (label, cfg) in fig4_list(opts) {
+                def.cell(
+                    format!("fig4-{label}"),
+                    GridCell::Fed(FedCell::new(
+                        Workload::Cifar {
+                            scale: opts.scale,
+                            seed: opts.seed,
+                        },
+                        cfg,
+                        opts.eval_cap,
+                    )),
+                );
+            }
+        }
+        5 => {
+            if word_lstm_ready(engine) {
+                let k = social_clients(opts, social_k);
+                for (label, cfg) in fig5_list(opts, k) {
+                    def.cell(
+                        format!("fig5-{label}"),
+                        GridCell::Fed(FedCell::new(
+                            Workload::Social {
+                                scale: opts.scale,
+                                seed: opts.seed,
+                            },
+                            cfg,
+                            opts.eval_cap,
+                        )),
+                    );
+                }
+            }
+        }
+        6 | 7 | 8 => {
+            for (pname, part, label, cfg) in mnist_series_list(f, opts, args)? {
+                def.cell(
+                    format!("fig{f}-{pname}-{label}"),
+                    GridCell::Fed(FedCell::new(
+                        Workload::Mnist {
+                            scale: opts.scale,
+                            part,
+                            seed: opts.seed,
+                        },
+                        cfg,
+                        opts.eval_cap,
+                    )),
+                );
+            }
+        }
+        9 => {
+            let (sgd_cfg, fed_cfgs) = fig9_list(opts);
+            def.cell(
+                "fig9-sgd",
+                GridCell::Sgd(SgdCell {
+                    workload: Workload::Cifar {
+                        scale: opts.scale,
+                        seed: opts.seed,
+                    },
+                    cfg: sgd_cfg,
+                    eval_cap: opts.eval_cap,
+                }),
+            );
+            for (c, e, cfg) in fed_cfgs {
+                def.cell(
+                    format!("fig9-C{c}-E{e}"),
+                    GridCell::Fed(FedCell::new(
+                        Workload::Cifar {
+                            scale: opts.scale,
+                            seed: opts.seed,
+                        },
+                        cfg,
+                        opts.eval_cap,
+                    )),
+                );
+            }
+        }
+        10 => {
+            if word_lstm_ready(engine) {
+                let k = social_clients(opts, social_k);
+                for (e, cfg) in fig10_list(opts, k) {
+                    def.cell(
+                        format!("fig10-E{e}"),
+                        GridCell::Fed(FedCell::new(
+                            Workload::Social {
+                                scale: opts.scale,
+                                seed: opts.seed,
+                            },
+                            cfg,
+                            opts.eval_cap,
+                        )),
+                    );
+                }
+            }
+        }
+        other => anyhow::bail!("no figure {other}"),
+    }
+    Ok(())
+}
+
+fn word_lstm_ready(engine: &Engine) -> bool {
+    engine.manifest().model("word_lstm").is_ok()
 }
 
 fn curve_csv(opts: &ExpOptions, name: &str, header: &str, rows: &[String]) -> Result<()> {
@@ -61,72 +225,26 @@ fn curve_csv(opts: &ExpOptions, name: &str, header: &str, rows: &[String]) -> Re
     Ok(())
 }
 
-/// Figure 1 — loss of θ·w + (1−θ)·w' for models trained from shared vs
-/// independent initialization (the averaging-works phenomenon).
-pub fn figure1(engine: &Engine, opts: &ExpOptions) -> Result<()> {
-    println!("\n== Figure 1 — parameter-averaging interpolation ==");
-    let model = engine.model("mnist_2nn")?;
-    let fed = mnist_fed(opts.scale.max(0.02), Partition::Iid, opts.seed);
-    // two disjoint "clients": paper trained on 600-example IID shards
-    let a_idx = &fed.clients[0];
-    let b_idx = &fed.clients[1 % fed.num_clients()];
-    // paper: SGD lr=0.1, 240 updates of batch 50 (E=20 over 600 examples)
-    let train = |theta0: &[f32], idxs: &[usize], seed: u64| -> Result<Vec<f32>> {
-        let spec = LocalSpec {
-            epochs: (240 * 50 / idxs.len().max(1)).max(1),
-            batch: BatchSize::Fixed(50),
-            lr: 0.1,
-            prox_mu: 0.0,
-            shuffle_seed: seed,
-        };
-        Ok(federated::local_update(&model, &fed.train, idxs, theta0, &spec)?.theta)
-    };
-    // loss over the *full* training set, as in the paper
-    let full: Vec<usize> = (0..fed.train.len()).collect();
-    let loss_of = |theta: &[f32]| -> Result<f64> {
-        Ok(model
-            .eval_dataset(theta, &fed.train, Some(&full))?
-            .mean_loss())
-    };
+// ------------------------------------------------------- cell list builders
+// Each list is built identically by the declaration and formatting
+// passes, so outcome slices line up with labels by construction.
 
-    let mut rows = Vec::new();
-    for (tag, seed_a, seed_b) in [("independent", 100, 200), ("shared", 300, 300)] {
-        let wa = train(&model.init(seed_a)?, a_idx, 1)?;
-        let wb = train(&model.init(seed_b)?, b_idx, 2)?;
-        let parent_best = loss_of(&wa)?.min(loss_of(&wb)?);
-        let mut min_mix = f64::INFINITY;
-        for i in 0..50 {
-            let theta = -0.2 + 1.4 * (i as f64 / 49.0);
-            let mixed = interpolate(&wb, &wa, theta as f32); // θ on w (=wa)
-            let l = loss_of(&mixed)?;
-            min_mix = min_mix.min(l);
-            rows.push(format!("{tag},{theta:.4},{l:.6}"));
-        }
-        println!(
-            "  {tag:<12} parents' best loss {parent_best:.4}; best mixture {min_mix:.4} {}",
-            if min_mix < parent_best {
-                "(averaging helps ✓)"
-            } else {
-                "(averaging hurts)"
-            }
-        );
-    }
-    curve_csv(opts, "fig1-interpolation", "init,theta,train_loss", &rows)
-}
-
-/// Figure 2 — test accuracy vs rounds, MNIST CNN (IID + non-IID) and
-/// Shakespeare LSTM (IID + by-role), C=0.1.
-pub fn figure2(engine: &Engine, opts: &ExpOptions) -> Result<()> {
-    println!("\n== Figure 2 — accuracy vs communication rounds ==");
-    let mut runs: Vec<(&str, Federated, FedConfig)> = Vec::new();
+/// Figure 2 — MNIST CNN (IID + non-IID) and Shakespeare LSTM (IID +
+/// by-role), FedSGD vs FedAvg(E=5, B=10), C=0.1.
+fn fig2_list(opts: &ExpOptions) -> Vec<(String, Workload, FedConfig)> {
+    let mut runs = Vec::new();
     for (pname, part) in [("iid", Partition::Iid), ("noniid", Partition::Pathological(2))] {
         for (e, b, label) in [
             (1usize, BatchSize::Full, "fedsgd"),
             (5, BatchSize::Fixed(10), "fedavg-E5-B10"),
         ] {
             runs.push((
-                Box::leak(format!("cnn-{pname}-{label}").into_boxed_str()),
-                mnist_fed(opts.scale, part, opts.seed),
+                format!("cnn-{pname}-{label}"),
+                Workload::Mnist {
+                    scale: opts.scale,
+                    part,
+                    seed: opts.seed,
+                },
                 FedConfig {
                     model: "mnist_cnn".into(),
                     c: 0.1,
@@ -146,8 +264,12 @@ pub fn figure2(engine: &Engine, opts: &ExpOptions) -> Result<()> {
             (5, BatchSize::Fixed(10), "fedavg-E5-B10"),
         ] {
             runs.push((
-                Box::leak(format!("lstm-{pname}-{label}").into_boxed_str()),
-                shakespeare_fed(opts.scale, natural, opts.seed),
+                format!("lstm-{pname}-{label}"),
+                Workload::Shakespeare {
+                    scale: opts.scale,
+                    natural,
+                    seed: opts.seed,
+                },
                 FedConfig {
                     model: "shakespeare_lstm".into(),
                     c: 0.1,
@@ -161,50 +283,36 @@ pub fn figure2(engine: &Engine, opts: &ExpOptions) -> Result<()> {
             ));
         }
     }
-    for (name, fed, cfg) in &runs {
-        let (res, _) = run_one(engine, fed, cfg, opts, &format!("fig2-{name}"))?;
-        println!(
-            "  {name:<24} final acc {:.3} (best {:.3})",
-            res.final_accuracy(),
-            res.accuracy.best_value().unwrap_or(0.0)
-        );
-    }
-    Ok(())
+    runs
 }
 
 /// Figure 3 — many local epochs on the Shakespeare LSTM (B=10, C=0.1,
-/// fixed η): large E can plateau or diverge.
-pub fn figure3(engine: &Engine, opts: &ExpOptions, args: &Args) -> Result<()> {
-    println!("\n== Figure 3 — effect of large E (Shakespeare LSTM) ==");
+/// fixed η = 1.47, the paper's rate for this figure).
+fn fig3_list(opts: &ExpOptions, args: &Args) -> Result<Vec<(usize, FedConfig)>> {
     let evals = args.str_or("e-values", "1,5,20,50");
-    let fed = shakespeare_fed(opts.scale, true, opts.seed);
-    let mut rows = Vec::new();
-    for e in evals.split(',') {
-        let e: usize = e.parse()?;
-        let cfg = FedConfig {
-            model: "shakespeare_lstm".into(),
-            c: 0.1,
-            e,
-            b: BatchSize::Fixed(10),
-            lr: 1.47, // the paper's fixed rate for this figure
-            rounds: opts.rounds,
-            seed: opts.seed,
-            ..Default::default()
-        };
-        let (res, _) = run_one(engine, &fed, &cfg, opts, &format!("fig3-E{e}"))?;
-        for &(r, v) in res.accuracy.points() {
-            rows.push(format!("{e},{r},{v:.5}"));
-        }
-        println!("  E={e:<4} final acc {:.3}", res.final_accuracy());
-    }
-    curve_csv(opts, "fig3-large-E", "E,round,test_accuracy", &rows)
+    evals
+        .split(',')
+        .map(|e| {
+            let e: usize = e.parse()?;
+            Ok((
+                e,
+                FedConfig {
+                    model: "shakespeare_lstm".into(),
+                    c: 0.1,
+                    e,
+                    b: BatchSize::Fixed(10),
+                    lr: 1.47,
+                    rounds: opts.rounds,
+                    seed: opts.seed,
+                    ..Default::default()
+                },
+            ))
+        })
+        .collect()
 }
 
-/// Figure 4 — CIFAR accuracy vs rounds: FedAvg(E=5,B=50,decay .99) vs
-/// FedSGD(decay .9934).
-pub fn figure4(engine: &Engine, opts: &ExpOptions) -> Result<()> {
-    println!("\n== Figure 4 — CIFAR FedAvg vs FedSGD ==");
-    let fed = cifar_fed(opts.scale, opts.seed);
+/// Figure 4 — CIFAR FedAvg(E=5,B=50,decay .99) vs FedSGD(decay .9934).
+fn fig4_list(opts: &ExpOptions) -> Vec<(&'static str, FedConfig)> {
     let fedsgd = FedConfig {
         model: "cifar_cnn".into(),
         c: 0.1,
@@ -226,26 +334,12 @@ pub fn figure4(engine: &Engine, opts: &ExpOptions) -> Result<()> {
         seed: opts.seed,
         ..Default::default()
     };
-    let (r1, _) = run_one(engine, &fed, &fedsgd, opts, "fig4-fedsgd")?;
-    let (r2, _) = run_one(engine, &fed, &fedavg, opts, "fig4-fedavg")?;
-    println!(
-        "  FedSGD final {:.3}; FedAvg final {:.3}",
-        r1.final_accuracy(),
-        r2.final_accuracy()
-    );
-    Ok(())
+    vec![("fedsgd", fedsgd), ("fedavg", fedavg)]
 }
 
-/// Figure 5 — large-scale word LM: FedAvg vs FedSGD at their best rates
-/// (paper: FedSGD η=18, FedAvg η=9, 200 clients/round, E=1, B=8).
-pub fn figure5(engine: &Engine, opts: &ExpOptions) -> Result<()> {
-    println!("\n== Figure 5 — large-scale word-LSTM ==");
-    if engine.manifest().model("word_lstm").is_err() {
-        println!("  SKIP: word_lstm artifacts missing — run `make artifacts-full`");
-        return Ok(());
-    }
-    let fed = social_fed(opts.scale, opts.seed);
-    let k = fed.num_clients();
+/// Figure 5 — large-scale word LM at the paper's best rates (FedSGD
+/// η=18, FedAvg η=9, 200 clients/round, E=1, B=8).
+fn fig5_list(opts: &ExpOptions, k: usize) -> Vec<(&'static str, FedConfig)> {
     let c = (200.0 / k as f64).min(1.0); // paper: 200 clients/round
     let fedsgd = FedConfig {
         model: "word_lstm".into(),
@@ -268,119 +362,72 @@ pub fn figure5(engine: &Engine, opts: &ExpOptions) -> Result<()> {
         seed: opts.seed,
         ..Default::default()
     };
-    let (r1, _) = run_one(engine, &fed, &fedsgd, opts, "fig5-fedsgd")?;
-    let (r2, _) = run_one(engine, &fed, &fedavg, opts, "fig5-fedavg")?;
-    println!(
-        "  FedSGD final {:.4}; FedAvg final {:.4}",
-        r1.final_accuracy(),
-        r2.final_accuracy()
-    );
-    Ok(())
+    vec![("fedsgd", fedsgd), ("fedavg", fedavg)]
 }
 
-/// Figure 6 — MNIST CNN *training loss* vs rounds (log-y in the paper).
-pub fn figure6(engine: &Engine, opts: &ExpOptions) -> Result<()> {
-    println!("\n== Figure 6 — training-loss convergence (MNIST CNN) ==");
-    let mut rows = Vec::new();
+/// Figures 6/7/8 — the MNIST series: per-partition FedSGD/FedAvg curves
+/// (6: CNN train loss; 7: 2NN accuracy; 8: CNN large-E train loss).
+type MnistSeries = (&'static str, Partition, String, FedConfig);
+
+fn mnist_series_list(f: u32, opts: &ExpOptions, args: &Args) -> Result<Vec<MnistSeries>> {
+    let mut out = Vec::new();
     for (pname, part) in [("iid", Partition::Iid), ("noniid", Partition::Pathological(2))] {
-        for (e, b, label) in [
-            (1usize, BatchSize::Full, "fedsgd"),
-            (5, BatchSize::Fixed(10), "fedavg-E5-B10"),
-        ] {
-            let fed = mnist_fed(opts.scale, part, opts.seed);
-            let cfg = FedConfig {
-                model: "mnist_cnn".into(),
-                c: 0.1,
-                e,
-                b,
-                lr: 0.1,
-                rounds: opts.rounds,
-                track_train_loss: true,
-                seed: opts.seed,
-                ..Default::default()
-            };
-            let (res, _) = run_one(engine, &fed, &cfg, opts, &format!("fig6-{pname}-{label}"))?;
-            let tl = res.train_loss.as_ref().expect("tracked");
-            for &(r, v) in tl.points() {
-                rows.push(format!("{pname}-{label},{r},{v:.6}"));
+        match f {
+            6 | 7 => {
+                let (model, alt): (&str, (usize, BatchSize, &str)) = if f == 6 {
+                    ("mnist_cnn", (5, BatchSize::Fixed(10), "fedavg-E5-B10"))
+                } else {
+                    ("mnist_2nn", (10, BatchSize::Fixed(10), "fedavg-E10-B10"))
+                };
+                for (e, b, label) in [(1usize, BatchSize::Full, "fedsgd"), alt] {
+                    out.push((
+                        pname,
+                        part,
+                        label.to_string(),
+                        FedConfig {
+                            model: model.into(),
+                            c: 0.1,
+                            e,
+                            b,
+                            lr: 0.1,
+                            rounds: opts.rounds,
+                            track_train_loss: f == 6,
+                            seed: opts.seed,
+                            ..Default::default()
+                        },
+                    ));
+                }
             }
-            println!(
-                "  {pname}-{label:<14} final train loss {:.4}",
-                tl.last_value().unwrap_or(f64::NAN)
-            );
-        }
-    }
-    curve_csv(opts, "fig6-train-loss", "series,round,train_loss", &rows)
-}
-
-/// Figure 7 — 2NN accuracy curves, IID and non-IID (appendix).
-pub fn figure7(engine: &Engine, opts: &ExpOptions) -> Result<()> {
-    println!("\n== Figure 7 — MNIST 2NN curves ==");
-    for (pname, part) in [("iid", Partition::Iid), ("noniid", Partition::Pathological(2))] {
-        for (e, b, label) in [
-            (1usize, BatchSize::Full, "fedsgd"),
-            (10, BatchSize::Fixed(10), "fedavg-E10-B10"),
-        ] {
-            let fed = mnist_fed(opts.scale, part, opts.seed);
-            let cfg = FedConfig {
-                model: "mnist_2nn".into(),
-                c: 0.1,
-                e,
-                b,
-                lr: 0.1,
-                rounds: opts.rounds,
-                seed: opts.seed,
-                ..Default::default()
-            };
-            let (res, _) = run_one(engine, &fed, &cfg, opts, &format!("fig7-{pname}-{label}"))?;
-            println!("  {pname}-{label:<15} final acc {:.3}", res.final_accuracy());
-        }
-    }
-    Ok(())
-}
-
-/// Figure 8 — large-E training loss for the MNIST CNN (appendix).
-pub fn figure8(engine: &Engine, opts: &ExpOptions, args: &Args) -> Result<()> {
-    println!("\n== Figure 8 — effect of large E (MNIST CNN, train loss) ==");
-    let evals = args.str_or("e-values", "1,5,20,50");
-    let mut rows = Vec::new();
-    for (pname, part) in [("iid", Partition::Iid), ("noniid", Partition::Pathological(2))] {
-        let fed = mnist_fed(opts.scale, part, opts.seed);
-        for e in evals.split(',') {
-            let e: usize = e.parse()?;
-            let cfg = FedConfig {
-                model: "mnist_cnn".into(),
-                c: 0.1,
-                e,
-                b: BatchSize::Fixed(10),
-                lr: 0.1,
-                rounds: opts.rounds,
-                track_train_loss: true,
-                seed: opts.seed,
-                ..Default::default()
-            };
-            let (res, _) =
-                run_one(engine, &fed, &cfg, opts, &format!("fig8-{pname}-E{e}"))?;
-            let tl = res.train_loss.as_ref().expect("tracked");
-            for &(r, v) in tl.points() {
-                rows.push(format!("{pname},{e},{r},{v:.6}"));
+            8 => {
+                let evals = args.str_or("e-values", "1,5,20,50");
+                for e in evals.split(',') {
+                    let e: usize = e.parse()?;
+                    out.push((
+                        pname,
+                        part,
+                        format!("E{e}"),
+                        FedConfig {
+                            model: "mnist_cnn".into(),
+                            c: 0.1,
+                            e,
+                            b: BatchSize::Fixed(10),
+                            lr: 0.1,
+                            rounds: opts.rounds,
+                            track_train_loss: true,
+                            seed: opts.seed,
+                            ..Default::default()
+                        },
+                    ));
+                }
             }
-            println!(
-                "  {pname} E={e:<4} final train loss {:.4}",
-                tl.last_value().unwrap_or(f64::NAN)
-            );
+            _ => unreachable!("mnist series covers figures 6-8"),
         }
     }
-    curve_csv(opts, "fig8-large-E-cnn", "partition,E,round,train_loss", &rows)
+    Ok(out)
 }
 
-/// Figure 9 — accuracy vs number of minibatch gradient computations
-/// (B=50): sequential SGD vs FedAvg at various (C, E).
-pub fn figure9(engine: &Engine, opts: &ExpOptions) -> Result<()> {
-    println!("\n== Figure 9 — progress per minibatch computation (CIFAR) ==");
-    let fed = cifar_fed(opts.scale, opts.seed);
-    let mut rows = Vec::new();
-
+/// Figure 9 — progress per minibatch gradient computation (B=50).
+fn fig9_list(opts: &ExpOptions) -> (SgdConfig, Vec<(f64, usize, FedConfig)>) {
     let sgd_cfg = SgdConfig {
         model: "cifar_cnn".into(),
         batch: 50,
@@ -391,77 +438,254 @@ pub fn figure9(engine: &Engine, opts: &ExpOptions) -> Result<()> {
         target_accuracy: None,
         seed: opts.seed,
     };
-    let sgd_res = sgd::run(engine, &fed.train, &fed.test, &sgd_cfg, Some(opts.eval_cap))?;
-    for &(u, v) in sgd_res.accuracy.points() {
+    let fed_cfgs = [(0.0, 1usize), (0.1, 1), (0.1, 5)]
+        .into_iter()
+        .map(|(c, e)| {
+            (
+                c,
+                e,
+                FedConfig {
+                    model: "cifar_cnn".into(),
+                    c,
+                    e,
+                    b: BatchSize::Fixed(50),
+                    lr: 0.1,
+                    rounds: opts.rounds,
+                    seed: opts.seed,
+                    ..Default::default()
+                },
+            )
+        })
+        .collect();
+    (sgd_cfg, fed_cfgs)
+}
+
+/// Figure 10 — word-LSTM E=1 vs E=5.
+fn fig10_list(opts: &ExpOptions, k: usize) -> Vec<(usize, FedConfig)> {
+    [1usize, 5]
+        .into_iter()
+        .map(|e| {
+            (
+                e,
+                FedConfig {
+                    model: "word_lstm".into(),
+                    c: (200.0 / k as f64).min(1.0),
+                    e,
+                    b: BatchSize::Fixed(8),
+                    lr: 9.0,
+                    rounds: opts.rounds,
+                    eval_every: 2, // paper evaluates every 20 rounds at full scale
+                    seed: opts.seed,
+                    ..Default::default()
+                },
+            )
+        })
+        .collect()
+}
+
+// -------------------------------------------------------------- formatters
+
+fn format_figure(f: u32, outs: &[CellOutcome], opts: &ExpOptions, args: &Args) -> Result<()> {
+    match f {
+        1 => format_fig1(outs, opts),
+        2 => format_fig2(outs, opts),
+        3 => format_fig3(outs, opts, args),
+        4 => format_fig4(outs),
+        5 => format_fig5(outs),
+        6 => format_fig6(outs, opts, args),
+        7 => format_fig7(outs, opts, args),
+        8 => format_fig8(outs, opts, args),
+        9 => format_fig9(outs, opts),
+        10 => format_fig10(outs, opts),
+        other => anyhow::bail!("no figure {other}"),
+    }
+}
+
+/// Figure 1 — loss of θ·w + (1−θ)·w' for models trained from shared vs
+/// independent initialization (the averaging-works phenomenon).
+fn format_fig1(outs: &[CellOutcome], opts: &ExpOptions) -> Result<()> {
+    println!("\n== Figure 1 — parameter-averaging interpolation ==");
+    let out = &outs[0];
+    let mut rows = Vec::new();
+    for tag in ["independent", "shared"] {
+        let parent_best = out.num(&format!("{tag}_parent_best")).unwrap_or(f64::NAN);
+        let min_mix = out.num(&format!("{tag}_best_mix")).unwrap_or(f64::NAN);
+        for &(theta, l) in out.curve(tag).unwrap_or(&[]) {
+            rows.push(format!("{tag},{theta:.4},{l:.6}"));
+        }
+        println!(
+            "  {tag:<12} parents' best loss {parent_best:.4}; best mixture {min_mix:.4} {}",
+            if min_mix < parent_best {
+                "(averaging helps ✓)"
+            } else {
+                "(averaging hurts)"
+            }
+        );
+    }
+    curve_csv(opts, "fig1-interpolation", "init,theta,train_loss", &rows)
+}
+
+fn format_fig2(outs: &[CellOutcome], opts: &ExpOptions) -> Result<()> {
+    println!("\n== Figure 2 — accuracy vs communication rounds ==");
+    for ((label, _, _), out) in fig2_list(opts).iter().zip(outs) {
+        println!(
+            "  {label:<24} final acc {:.3} (best {:.3})",
+            out.num("final_acc").unwrap_or(0.0),
+            out.num("best_acc").unwrap_or(0.0)
+        );
+    }
+    Ok(())
+}
+
+fn format_fig3(outs: &[CellOutcome], opts: &ExpOptions, args: &Args) -> Result<()> {
+    println!("\n== Figure 3 — effect of large E (Shakespeare LSTM) ==");
+    let mut rows = Vec::new();
+    for ((e, _), out) in fig3_list(opts, args)?.iter().zip(outs) {
+        for &(r, v) in out.curve("accuracy").unwrap_or(&[]) {
+            rows.push(format!("{e},{r},{v:.5}"));
+        }
+        println!(
+            "  E={e:<4} final acc {:.3}",
+            out.num("final_acc").unwrap_or(0.0)
+        );
+    }
+    curve_csv(opts, "fig3-large-E", "E,round,test_accuracy", &rows)
+}
+
+fn format_fig4(outs: &[CellOutcome]) -> Result<()> {
+    println!("\n== Figure 4 — CIFAR FedAvg vs FedSGD ==");
+    println!(
+        "  FedSGD final {:.3}; FedAvg final {:.3}",
+        outs[0].num("final_acc").unwrap_or(0.0),
+        outs[1].num("final_acc").unwrap_or(0.0)
+    );
+    Ok(())
+}
+
+fn format_fig5(outs: &[CellOutcome]) -> Result<()> {
+    println!("\n== Figure 5 — large-scale word-LSTM ==");
+    if outs.is_empty() {
+        println!("  SKIP: word_lstm artifacts missing — run `make artifacts-full`");
+        return Ok(());
+    }
+    println!(
+        "  FedSGD final {:.4}; FedAvg final {:.4}",
+        outs[0].num("final_acc").unwrap_or(0.0),
+        outs[1].num("final_acc").unwrap_or(0.0)
+    );
+    Ok(())
+}
+
+/// Figure 6 — MNIST CNN *training loss* vs rounds (log-y in the paper).
+fn format_fig6(outs: &[CellOutcome], opts: &ExpOptions, args: &Args) -> Result<()> {
+    println!("\n== Figure 6 — training-loss convergence (MNIST CNN) ==");
+    let mut rows = Vec::new();
+    for ((pname, _, label, _), out) in mnist_series_list(6, opts, args)?.iter().zip(outs) {
+        let tl = out.curve("train_loss").unwrap_or(&[]);
+        for &(r, v) in tl {
+            rows.push(format!("{pname}-{label},{r},{v:.6}"));
+        }
+        println!(
+            "  {pname}-{label:<14} final train loss {:.4}",
+            tl.last().map(|&(_, v)| v).unwrap_or(f64::NAN)
+        );
+    }
+    curve_csv(opts, "fig6-train-loss", "series,round,train_loss", &rows)
+}
+
+/// Figure 7 — 2NN accuracy curves, IID and non-IID (appendix).
+fn format_fig7(outs: &[CellOutcome], opts: &ExpOptions, args: &Args) -> Result<()> {
+    println!("\n== Figure 7 — MNIST 2NN curves ==");
+    for ((pname, _, label, _), out) in mnist_series_list(7, opts, args)?.iter().zip(outs) {
+        println!(
+            "  {pname}-{label:<15} final acc {:.3}",
+            out.num("final_acc").unwrap_or(0.0)
+        );
+    }
+    Ok(())
+}
+
+/// Figure 8 — large-E training loss for the MNIST CNN (appendix).
+fn format_fig8(outs: &[CellOutcome], opts: &ExpOptions, args: &Args) -> Result<()> {
+    println!("\n== Figure 8 — effect of large E (MNIST CNN, train loss) ==");
+    let mut rows = Vec::new();
+    for ((pname, _, label, _), out) in mnist_series_list(8, opts, args)?.iter().zip(outs) {
+        let e = label.trim_start_matches('E');
+        let tl = out.curve("train_loss").unwrap_or(&[]);
+        for &(r, v) in tl {
+            rows.push(format!("{pname},{e},{r},{v:.6}"));
+        }
+        println!(
+            "  {pname} E={e:<4} final train loss {:.4}",
+            tl.last().map(|&(_, v)| v).unwrap_or(f64::NAN)
+        );
+    }
+    curve_csv(opts, "fig8-large-E-cnn", "partition,E,round,train_loss", &rows)
+}
+
+/// Figure 9 — accuracy vs number of minibatch gradient computations
+/// (B=50): sequential SGD vs FedAvg at various (C, E).
+fn format_fig9(outs: &[CellOutcome], opts: &ExpOptions) -> Result<()> {
+    println!("\n== Figure 9 — progress per minibatch computation (CIFAR) ==");
+    let (_sgd_cfg, fed_cfgs) = fig9_list(opts);
+    let mut rows = Vec::new();
+
+    let sgd = &outs[0];
+    for &(u, v) in sgd.curve("accuracy").unwrap_or(&[]) {
         rows.push(format!("sgd,{u},{v:.5}"));
     }
     println!(
         "  SGD: final acc {:.3} after {} updates",
-        sgd_res.accuracy.last_value().unwrap_or(0.0),
-        sgd_res.updates_run
+        sgd.num("final_acc").unwrap_or(0.0),
+        sgd.int("updates_run").unwrap_or(0)
     );
 
-    let nk = fed.total_examples() / fed.num_clients();
-    for (c, e) in [(0.0, 1usize), (0.1, 1), (0.1, 5)] {
-        let cfg = FedConfig {
-            model: "cifar_cnn".into(),
-            c,
-            e,
-            b: BatchSize::Fixed(50),
-            lr: 0.1,
-            rounds: opts.rounds,
-            seed: opts.seed,
-            ..Default::default()
-        };
-        let (res, _) = run_one(engine, &fed, &cfg, opts, &format!("fig9-C{c}-E{e}"))?;
-        // x-axis: minibatch grads = round * m * u_k
-        let m = cfg.clients_per_round(fed.num_clients());
-        let per_round = updates_per_round(e, nk, cfg.b) * m as f64;
-        for &(r, v) in res.accuracy.points() {
-            rows.push(format!("fedavg-C{c}-E{e},{:.0},{v:.5}", r as f64 * per_round));
+    for ((c, e, cfg), out) in fed_cfgs.iter().zip(&outs[1..]) {
+        // x-axis: minibatch grads = round * m * u_k, with n/K and m from
+        // the cell's recorded population (exact integers)
+        let k = out.int("clients_total").unwrap_or(1).max(1) as usize;
+        let nk = out.int("examples_total").unwrap_or(0) as usize / k;
+        let m = cfg.clients_per_round(k);
+        let per_round = updates_per_round(*e, nk, cfg.b) * m as f64;
+        for &(r, v) in out.curve("accuracy").unwrap_or(&[]) {
+            rows.push(format!("fedavg-C{c}-E{e},{:.0},{v:.5}", r * per_round));
         }
         println!(
-            "  FedAvg C={c} E={e}: final acc {:.3} ({:.0} grads/round)",
-            res.final_accuracy(),
-            per_round
+            "  FedAvg C={c} E={e}: final acc {:.3} ({per_round:.0} grads/round)",
+            out.num("final_acc").unwrap_or(0.0)
         );
     }
     curve_csv(opts, "fig9-minibatch-grads", "series,minibatch_grads,test_accuracy", &rows)
 }
 
 /// Figure 10 — word-LSTM: E=1 vs E=5 and accuracy variance over rounds.
-pub fn figure10(engine: &Engine, opts: &ExpOptions) -> Result<()> {
+fn format_fig10(outs: &[CellOutcome], opts: &ExpOptions) -> Result<()> {
     println!("\n== Figure 10 — word-LSTM E=1 vs E=5 ==");
-    if engine.manifest().model("word_lstm").is_err() {
+    if outs.is_empty() {
         println!("  SKIP: word_lstm artifacts missing — run `make artifacts-full`");
         return Ok(());
     }
-    let fed = social_fed(opts.scale, opts.seed);
-    let k = fed.num_clients();
     let mut rows = Vec::new();
-    for e in [1usize, 5] {
-        let cfg = FedConfig {
-            model: "word_lstm".into(),
-            c: (200.0 / k as f64).min(1.0),
-            e,
-            b: BatchSize::Fixed(8),
-            lr: 9.0,
-            rounds: opts.rounds,
-            eval_every: 2, // paper evaluates every 20 rounds at full scale
-            seed: opts.seed,
-            ..Default::default()
-        };
-        let (res, _) = run_one(engine, &fed, &cfg, opts, &format!("fig10-E{e}"))?;
-        // variance of accuracy across eval points after warmup
-        let pts: Vec<f64> = res.accuracy.points().iter().map(|&(_, v)| v).collect();
+    // plain E values — fig10_list would rebuild the whole Social corpus
+    // just to fill a config field this pass never reads
+    for (&e, out) in [1usize, 5].iter().zip(outs) {
+        let pts: Vec<f64> = out
+            .curve("accuracy")
+            .unwrap_or(&[])
+            .iter()
+            .map(|&(_, v)| v)
+            .collect();
         let tail = &pts[pts.len() / 2..];
         let mean = tail.iter().sum::<f64>() / tail.len().max(1) as f64;
-        let var = tail.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
-            / tail.len().max(1) as f64;
-        for &(r, v) in res.accuracy.points() {
+        let var =
+            tail.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / tail.len().max(1) as f64;
+        for &(r, v) in out.curve("accuracy").unwrap_or(&[]) {
             rows.push(format!("E{e},{r},{v:.5}"));
         }
-        println!("  E={e}: final acc {:.4}, tail var {var:.2e}", res.final_accuracy());
+        println!(
+            "  E={e}: final acc {:.4}, tail var {var:.2e}",
+            out.num("final_acc").unwrap_or(0.0)
+        );
     }
     curve_csv(opts, "fig10-word-lstm", "series,round,test_accuracy", &rows)
 }

@@ -1,0 +1,828 @@
+//! The grid engine — restartable, parallel experiment sweeps
+//! (DESIGN.md §9).
+//!
+//! The paper's evaluation is a wall of grids: Tables 1–4 and the figure
+//! sweeps each vary (E, B, C, partition, model) and report
+//! rounds-to-target. Every `fedavg` sweep driver (`table1`–`table4`,
+//! `agg`, `comm`, `figure`, `sweep`) declares its grid as data and hands
+//! execution to this engine, which makes the multi-hour grids
+//!
+//! * **crash-safe** — a JSON *manifest* under
+//!   `<out>/grid-<name>/manifest.json` tracks per-cell status
+//!   (pending/running/done + the summary row), rewritten atomically
+//!   ([`runstate::atomic_write`](crate::runstate::atomic_write)) after
+//!   every cell completion. Rerunning the same command skips done cells
+//!   and resumes in-flight ones from their per-cell checkpoints; the
+//!   finished tables and every cell's `curve.csv` are byte-identical to
+//!   an uninterrupted run (regression-tested in
+//!   `rust/tests/grid_resume.rs`);
+//! * **parallel** — `--workers N` executes cells over a pool of threads,
+//!   each owning its own PJRT [`Engine`] (engines are not `Send`; the
+//!   same per-thread-engine topology as
+//!   [`coordinator::exec`](crate::coordinator::exec)). `--workers 1`
+//!   runs cells inline on the caller's engine, in declaration order —
+//!   exactly the pre-grid serial drivers;
+//! * **deduplicated** — a cell is a named, *fingerprinted* run
+//!   config: [`fnv1a64`] over the work's canonical spec string. Cell
+//!   run dirs live in a pool shared by all grids
+//!   (`<out>/cells/<fingerprint>/`), so identical cells across grids —
+//!   or within one — run once and are reused as cache hits.
+//!
+//! The resume protocol, in order of authority: a cell dir's `cell.json`
+//! (written atomically after the cell finishes, carrying the spec,
+//! fingerprint, summary, and result curves) marks a cell **done** — any
+//! grid that declares the same spec reuses it, and a record whose
+//! spec/fingerprint disagrees with the declaration is *refused*, never
+//! silently reused. A cell without a done record but with run-state
+//! snapshots under its dir is **in-flight** and resumes through the
+//! ordinary checkpoint machinery (DESIGN.md §8). Everything else runs
+//! fresh. The manifest itself is fingerprinted over the declared cell
+//! set, so a changed command refuses a stale manifest instead of mixing
+//! two sweeps (`--overwrite` replaces the manifest; cached cells, keyed
+//! by their own fingerprints, survive).
+//!
+//! Progress goes to **stderr**; stdout stays reserved for the drivers'
+//! paper-formatted tables, which are assembled from the outcome rows
+//! after the grid completes — so table output is independent of cell
+//! completion order.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context as _;
+
+use crate::metrics::LearningCurve;
+use crate::runstate::{atomic_write, fnv1a64, CheckpointConfig};
+use crate::runtime::pool::WorkerPool;
+use crate::runtime::Engine;
+use crate::telemetry::sanitize_name;
+use crate::util::json::{escape, Json};
+use crate::Result;
+
+/// One unit of grid work. Implementations are plain data (`Send`): with
+/// `--workers N` cells execute on pool threads, each building its own
+/// engine. The library ships [`GridCell`](super::cells::GridCell) (the
+/// federated/SGD/interpolation cells behind every driver); tests and
+/// examples implement their own engine-free cells.
+pub trait CellWork: Send + Sync + 'static {
+    /// Canonical config spec — the fingerprint input. Must cover every
+    /// knob that affects the cell's outputs: two cells with equal specs
+    /// are assumed interchangeable and share one run dir. (For
+    /// engine-dependent cells the engine appends the artifacts identity
+    /// itself, so a rebuilt model invalidates the cache.)
+    fn spec(&self) -> String;
+
+    /// Whether [`run`](Self::run) needs a PJRT engine (workload cells
+    /// do; synthetic/test cells do not).
+    fn needs_engine(&self) -> bool {
+        true
+    }
+
+    /// Execute the cell: produce its artifacts under `ctx.dir` and
+    /// return the outcome row. Called with an engine exactly when
+    /// [`needs_engine`](Self::needs_engine) — on a worker thread the
+    /// engine is the thread's own.
+    fn run(&self, engine: Option<&Engine>, ctx: &CellCtx) -> Result<CellOutcome>;
+}
+
+/// Execution context handed to [`CellWork::run`].
+#[derive(Debug, Clone)]
+pub struct CellCtx {
+    /// The cell's run dir (`<out>/cells/<fingerprint>/`) — telemetry,
+    /// checkpoints, and the done record all land here.
+    pub dir: PathBuf,
+    /// Per-cell checkpoint cadence (`--checkpoint-every`), `None` = off.
+    pub checkpoint: Option<CheckpointConfig>,
+    /// Silence per-round console output (parallel grids interleave).
+    pub quiet: bool,
+}
+
+/// A named result curve's points (x is a round/update index or an
+/// interpolation coordinate; y the measured value).
+pub type Series = Vec<(f64, f64)>;
+
+/// What a finished cell reports: an ordered summary row (the table
+/// material) plus named result curves (the figure material). Values are
+/// round-trip formatted (`{}` on `f64` prints the shortest string that
+/// parses back bit-exactly), so a reloaded outcome formats identically
+/// to a fresh one — the grid's byte-identity guarantee leans on this.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CellOutcome {
+    pub summary: Vec<(String, String)>,
+    pub curves: Vec<(String, Series)>,
+}
+
+impl CellOutcome {
+    pub fn put(&mut self, key: &str, value: impl std::fmt::Display) {
+        self.summary.push((key.to_string(), value.to_string()));
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.summary
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse a summary value back to the exact `f64` it was formatted
+    /// from (`None` when absent or empty — e.g. an unreached target).
+    pub fn num(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn int(&self, key: &str) -> Option<u64> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn curve(&self, name: &str) -> Option<&[(f64, f64)]> {
+        self.curves
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, pts)| pts.as_slice())
+    }
+
+    /// A round-keyed curve as a [`LearningCurve`] (x values are integral
+    /// rounds/updates by construction).
+    pub fn learning_curve(&self, name: &str) -> Result<LearningCurve> {
+        let pts = self
+            .curve(name)
+            .ok_or_else(|| anyhow::anyhow!("outcome has no {name:?} curve"))?;
+        LearningCurve::from_points(pts.iter().map(|&(x, y)| (x as u64, y)).collect())
+    }
+}
+
+/// A declared grid: a name plus cells in declaration order. The order is
+/// the contract formatters rely on — `GridReport::outcomes[i]` belongs
+/// to the i-th declared cell regardless of execution order.
+pub struct GridDef<W> {
+    name: String,
+    cells: Vec<(String, W)>,
+}
+
+impl<W: CellWork> GridDef<W> {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            cells: Vec::new(),
+        }
+    }
+
+    /// Declare a cell. Names must be unique within the grid (checked at
+    /// [`run`]); equal *specs* may repeat — aliases share one execution.
+    pub fn cell(&mut self, name: impl Into<String>, work: W) {
+        self.cells.push((name.into(), work));
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+}
+
+/// Engine knobs, parsed uniformly from every sweep subcommand
+/// (`ExpOptions::grid_options`).
+#[derive(Debug, Clone)]
+pub struct GridOptions {
+    /// Root under which `grid-<name>/` and the shared `cells/` pool live.
+    pub out_root: String,
+    /// Cell-execution threads (1 = inline on the caller's engine).
+    pub workers: usize,
+    /// Require an existing manifest (`--resume`); without it, a
+    /// compatible manifest is continued automatically when present.
+    pub resume: bool,
+    /// Replace a manifest written by a *different* cell set
+    /// (`--overwrite`). Cached cell results are never deleted — they are
+    /// keyed by their own fingerprints.
+    pub overwrite: bool,
+    /// List the cells and their cached status without running anything.
+    pub dry_run: bool,
+    /// Per-cell run-state checkpoint cadence (DESIGN.md §8).
+    pub checkpoint: Option<CheckpointConfig>,
+}
+
+impl Default for GridOptions {
+    fn default() -> Self {
+        Self {
+            out_root: "runs".into(),
+            workers: 1,
+            resume: false,
+            overwrite: false,
+            dry_run: false,
+            checkpoint: None,
+        }
+    }
+}
+
+/// A completed grid: outcomes in declaration order plus accounting.
+pub struct GridReport {
+    pub outcomes: Vec<CellOutcome>,
+    /// Cells actually executed this invocation.
+    pub executed: usize,
+    /// Cells satisfied from done records (earlier runs, other grids) or
+    /// in-grid aliases of an identical spec.
+    pub cache_hits: usize,
+    pub manifest_path: PathBuf,
+}
+
+/// A cell's identity: [`fnv1a64`] over its canonical spec.
+pub fn cell_fingerprint(spec: &str) -> u64 {
+    fnv1a64(spec.as_bytes())
+}
+
+/// The grid's identity: hash of its name and every declared cell's name
+/// and fingerprint, in order. A changed command (different cells, rows,
+/// flags) produces a different grid fingerprint and refuses a stale
+/// manifest.
+fn grid_fingerprint(name: &str, cells: &[(String, u64)]) -> u64 {
+    let mut acc = String::new();
+    acc.push_str(name);
+    for (cell, fp) in cells {
+        acc.push('\n');
+        acc.push_str(cell);
+        acc.push('\t');
+        acc.push_str(&format!("{fp:016x}"));
+    }
+    fnv1a64(acc.as_bytes())
+}
+
+// --------------------------------------------------------------- records
+
+const STATUS: [&str; 3] = ["pending", "running", "done"];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CellStatus {
+    Pending,
+    Running,
+    Done,
+}
+
+impl CellStatus {
+    fn label(self) -> &'static str {
+        STATUS[self as usize]
+    }
+}
+
+fn fmt_pairs(out: &mut String, pairs: &[(String, String)]) {
+    out.push('[');
+    for (i, (k, v)) in pairs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('[');
+        out.push_str(&escape(k));
+        out.push(',');
+        out.push_str(&escape(v));
+        out.push(']');
+    }
+    out.push(']');
+}
+
+/// One curve value as JSON. `{}` on f64 is shortest-round-trip, so
+/// parsing the record back yields the exact value and resumed
+/// formatting stays byte-identical. Non-finite values (a diverging
+/// run's loss curve — exactly what Figures 3/8 study) are not valid
+/// JSON numbers and go through strings (`"NaN"`, `"inf"`, `"-inf"`),
+/// which `f64::from_str` round-trips.
+fn fmt_curve_val(out: &mut String, v: f64) {
+    if v.is_finite() {
+        out.push_str(&format!("{v}"));
+    } else {
+        out.push_str(&escape(&v.to_string()));
+    }
+}
+
+fn parse_curve_val(j: &Json) -> Result<f64> {
+    match j {
+        Json::Str(s) => s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad curve value {s:?}")),
+        _ => j.as_f64(),
+    }
+}
+
+fn fmt_curves(out: &mut String, curves: &[(String, Series)]) {
+    out.push('[');
+    for (i, (name, pts)) in curves.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('[');
+        out.push_str(&escape(name));
+        out.push_str(",[");
+        for (j, (x, y)) in pts.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push('[');
+            fmt_curve_val(out, *x);
+            out.push(',');
+            fmt_curve_val(out, *y);
+            out.push(']');
+        }
+        out.push_str("]]");
+    }
+    out.push(']');
+}
+
+fn parse_pairs(j: &Json) -> Result<Vec<(String, String)>> {
+    j.as_arr()?
+        .iter()
+        .map(|pair| {
+            let p = pair.as_arr()?;
+            anyhow::ensure!(p.len() == 2, "summary pair with {} elements", p.len());
+            Ok((p[0].as_str()?.to_string(), p[1].as_str()?.to_string()))
+        })
+        .collect()
+}
+
+fn parse_curves(j: &Json) -> Result<Vec<(String, Series)>> {
+    j.as_arr()?
+        .iter()
+        .map(|c| {
+            let c = c.as_arr()?;
+            anyhow::ensure!(c.len() == 2, "curve entry with {} elements", c.len());
+            let pts = c[1]
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr()?;
+                    anyhow::ensure!(p.len() == 2, "curve point with {} elements", p.len());
+                    Ok((parse_curve_val(&p[0])?, parse_curve_val(&p[1])?))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok((c[0].as_str()?.to_string(), pts))
+        })
+        .collect()
+}
+
+/// Write a cell's done record (`cell.json`) atomically.
+fn write_cell_record(
+    dir: &Path,
+    name: &str,
+    fp: u64,
+    spec: &str,
+    outcome: &CellOutcome,
+) -> Result<()> {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"name\": {},\n", escape(name)));
+    out.push_str(&format!("  \"fingerprint\": \"{fp:016x}\",\n"));
+    out.push_str(&format!("  \"spec\": {},\n", escape(spec)));
+    out.push_str("  \"status\": \"done\",\n");
+    out.push_str("  \"summary\": ");
+    fmt_pairs(&mut out, &outcome.summary);
+    out.push_str(",\n  \"curves\": ");
+    fmt_curves(&mut out, &outcome.curves);
+    out.push_str("\n}\n");
+    std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+    atomic_write(&dir.join("cell.json"), out.as_bytes())
+}
+
+/// Load a cell dir's done record. `Ok(None)` when absent; an error when
+/// a record exists but its fingerprint or spec disagrees with the
+/// declared cell — a mismatched dir is refused, never silently reused.
+/// Only a *missing* record maps to `Ok(None)`: any other read failure
+/// (permissions on the shared pool, flaky filesystem) propagates rather
+/// than silently re-executing — and overwriting — a dir that may hold a
+/// valid result.
+fn load_cell_record(dir: &Path, fp: u64, spec: &str) -> Result<Option<CellOutcome>> {
+    let path = dir.join("cell.json");
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(anyhow::anyhow!("reading cell record {path:?}: {e}")),
+    };
+    let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+    let rec_fp = u64::from_str_radix(j.get("fingerprint")?.as_str()?, 16)
+        .map_err(|_| anyhow::anyhow!("{path:?}: malformed fingerprint"))?;
+    let rec_spec = j.get("spec")?.as_str()?;
+    anyhow::ensure!(
+        rec_fp == fp && rec_spec == spec,
+        "refusing to reuse cell dir {dir:?}: its record was written by a \
+         different configuration\n  recorded: {rec_spec}\n  declared: {spec}"
+    );
+    if j.get("status")?.as_str()? != "done" {
+        return Ok(None);
+    }
+    Ok(Some(CellOutcome {
+        summary: parse_pairs(j.get("summary")?)?,
+        curves: parse_curves(j.get("curves")?)?,
+    }))
+}
+
+struct ManifestRow {
+    name: String,
+    fp: u64,
+    spec: String,
+    dir: String,
+    status: CellStatus,
+    summary: Vec<(String, String)>,
+}
+
+/// Write the grid manifest atomically. Deterministic: declaration order,
+/// no timestamps — the manifest of a killed-and-rerun grid is
+/// byte-identical to an uninterrupted one.
+fn write_manifest(path: &Path, grid: &str, grid_fp: u64, rows: &[ManifestRow]) -> Result<()> {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"grid\": {},\n", escape(grid)));
+    out.push_str(&format!("  \"fingerprint\": \"{grid_fp:016x}\",\n"));
+    out.push_str("  \"cells\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str("    {");
+        out.push_str(&format!("\"name\": {}, ", escape(&r.name)));
+        out.push_str(&format!("\"fingerprint\": \"{:016x}\", ", r.fp));
+        out.push_str(&format!("\"spec\": {}, ", escape(&r.spec)));
+        out.push_str(&format!("\"dir\": {}, ", escape(&r.dir)));
+        out.push_str(&format!("\"status\": \"{}\", ", r.status.label()));
+        out.push_str("\"summary\": ");
+        fmt_pairs(&mut out, &r.summary);
+        out.push('}');
+        out.push_str(if i + 1 == rows.len() { "\n" } else { ",\n" });
+    }
+    out.push_str("  ]\n}\n");
+    atomic_write(path, out.as_bytes())
+}
+
+/// Read an existing manifest's grid fingerprint.
+fn manifest_fingerprint(path: &Path) -> Result<u64> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading manifest {path:?}"))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing manifest {path:?}"))?;
+    u64::from_str_radix(j.get("fingerprint")?.as_str()?, 16)
+        .map_err(|_| anyhow::anyhow!("manifest {path:?}: malformed fingerprint"))
+}
+
+// -------------------------------------------------------------- executor
+
+/// Run a declared grid. Returns `None` for `--dry-run` (the cell listing
+/// is printed, nothing executes); drivers skip their formatting pass.
+pub fn run<W: CellWork>(
+    grid: GridDef<W>,
+    engine: Option<&Engine>,
+    opts: &GridOptions,
+) -> Result<Option<GridReport>> {
+    anyhow::ensure!(opts.workers >= 1, "--workers must be >= 1");
+    anyhow::ensure!(
+        !(opts.resume && opts.overwrite),
+        "--resume continues a manifest; --overwrite replaces it — pick one"
+    );
+    let grid_name = grid.name;
+    let n = grid.cells.len();
+    let mut names = Vec::with_capacity(n);
+    let mut works: Vec<Option<W>> = Vec::with_capacity(n);
+    for (name, w) in grid.cells {
+        anyhow::ensure!(
+            !names.contains(&name),
+            "grid {grid_name}: duplicate cell name {name:?}"
+        );
+        names.push(name);
+        works.push(Some(w));
+    }
+    // Engine-dependent cells fold the artifacts identity (hash of the
+    // AOT manifest) into their spec: rebuilt artifacts change every
+    // fingerprint, so stale cached results from the previous build are
+    // never silently reused — the spec really does cover every knob
+    // that can change a cell's outputs.
+    let artifacts_fp: Option<u64> = match engine {
+        Some(e) => {
+            let path = e.dir().join("manifest.json");
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("hashing artifacts manifest {path:?}"))?;
+            Some(fnv1a64(&bytes))
+        }
+        None => None,
+    };
+    let specs: Vec<String> = works
+        .iter()
+        .map(|w| {
+            let w = w.as_ref().expect("declared");
+            let s = w.spec();
+            if !w.needs_engine() {
+                return Ok(s);
+            }
+            let a = artifacts_fp.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "grid {grid_name}: cells need the PJRT engine but none was provided"
+                )
+            })?;
+            Ok(format!("{s} | artifacts={a:016x}"))
+        })
+        .collect::<Result<_>>()?;
+    let fps: Vec<u64> = specs.iter().map(|s| cell_fingerprint(s)).collect();
+    let named: Vec<(String, u64)> = names.iter().cloned().zip(fps.iter().copied()).collect();
+    let grid_fp = grid_fingerprint(&grid_name, &named);
+
+    let out_root = PathBuf::from(&opts.out_root);
+    let grid_dir = out_root.join(format!("grid-{}", sanitize_name(&grid_name)));
+    let manifest_path = grid_dir.join("manifest.json");
+    let cells_root = out_root.join("cells");
+    let rel_dir = |i: usize| format!("cells/{:016x}", fps[i]);
+    let cell_dir = |i: usize| cells_root.join(format!("{:016x}", fps[i]));
+
+    // Manifest compatibility: continue a matching manifest, refuse a
+    // mismatched one (unless --overwrite), require one under --resume.
+    if manifest_path.exists() {
+        let have = manifest_fingerprint(&manifest_path)?;
+        if have != grid_fp && !opts.overwrite {
+            anyhow::bail!(
+                "grid {grid_name}: manifest {manifest_path:?} was written by a \
+                 different cell set (fingerprint {have:016x}, this command is \
+                 {grid_fp:016x}) — rerun with --overwrite to replace it (cached \
+                 cell results are keyed by their own fingerprints and survive), \
+                 or point --out elsewhere"
+            );
+        }
+    } else if opts.resume {
+        anyhow::bail!("--resume: no manifest at {manifest_path:?} to continue");
+    }
+
+    // Reconcile cached state: a done record in the shared cell pool
+    // satisfies the cell, whatever grid produced it.
+    let mut outcomes: Vec<Option<CellOutcome>> = vec![None; n];
+    let mut cache_hits = 0usize;
+    for i in 0..n {
+        if let Some(out) = load_cell_record(&cell_dir(i), fps[i], &specs[i])? {
+            outcomes[i] = Some(out);
+            cache_hits += 1;
+        }
+    }
+
+    // In-grid aliases: identical specs execute once; later occurrences
+    // copy the representative's outcome.
+    let mut rep_of: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut aliases: Vec<(usize, usize)> = Vec::new(); // (alias, representative)
+    let mut run_list: Vec<usize> = Vec::new();
+    for i in 0..n {
+        if outcomes[i].is_some() {
+            rep_of.entry(fps[i]).or_insert(i);
+            continue;
+        }
+        match rep_of.get(&fps[i]) {
+            Some(&r) => aliases.push((i, r)),
+            None => {
+                rep_of.insert(fps[i], i);
+                run_list.push(i);
+            }
+        }
+    }
+    cache_hits += aliases.len();
+
+    if opts.dry_run {
+        eprintln!(
+            "grid {grid_name}: {n} cells, {} to run, {cache_hits} cached/aliased \
+             (dry run — nothing executed)",
+            run_list.len()
+        );
+        for i in 0..n {
+            let status = if outcomes[i].is_some() {
+                "done (cached)"
+            } else if run_list.contains(&i) {
+                "pending"
+            } else {
+                "alias"
+            };
+            eprintln!("  {:016x}  {:<13} {}", fps[i], status, names[i]);
+        }
+        return Ok(None);
+    }
+
+    let needs_engine = run_list
+        .iter()
+        .any(|&i| works[i].as_ref().expect("declared").needs_engine());
+    if needs_engine {
+        anyhow::ensure!(
+            engine.is_some(),
+            "grid {grid_name}: cells need the PJRT engine but none was provided"
+        );
+    }
+
+    let mut rows: Vec<ManifestRow> = (0..n)
+        .map(|i| ManifestRow {
+            name: names[i].clone(),
+            fp: fps[i],
+            spec: specs[i].clone(),
+            dir: rel_dir(i),
+            status: if outcomes[i].is_some() {
+                CellStatus::Done
+            } else {
+                CellStatus::Pending
+            },
+            summary: outcomes[i]
+                .as_ref()
+                .map(|o| o.summary.clone())
+                .unwrap_or_default(),
+        })
+        .collect();
+    std::fs::create_dir_all(&grid_dir).with_context(|| format!("mkdir {grid_dir:?}"))?;
+    write_manifest(&manifest_path, &grid_name, grid_fp, &rows)?;
+    eprintln!(
+        "grid {grid_name}: {n} cells — {} to run ({cache_hits} cached/aliased), \
+         workers {}, manifest {}",
+        run_list.len(),
+        opts.workers,
+        manifest_path.display()
+    );
+
+    let executed = run_list.len();
+    let mut done_count = 0usize;
+    let mut record_done = |i: usize,
+                           out: CellOutcome,
+                           rows: &mut Vec<ManifestRow>,
+                           outcomes: &mut Vec<Option<CellOutcome>>|
+     -> Result<()> {
+        write_cell_record(&cell_dir(i), &names[i], fps[i], &specs[i], &out)?;
+        rows[i].status = CellStatus::Done;
+        rows[i].summary = out.summary.clone();
+        outcomes[i] = Some(out);
+        done_count += 1;
+        eprintln!("  [{done_count}/{executed}] {} done", names[i]);
+        write_manifest(&manifest_path, &grid_name, grid_fp, rows)?;
+        Ok(())
+    };
+
+    let mut failures: Vec<(usize, String)> = Vec::new();
+    if opts.workers == 1 {
+        for &i in &run_list {
+            // the running mark is a monitoring surface (an observer
+            // tailing the manifest sees which cell a serial grid is
+            // on), not crash-state — resume reconciles from cell.json
+            // records; its cost is one small fsync per cell
+            rows[i].status = CellStatus::Running;
+            write_manifest(&manifest_path, &grid_name, grid_fp, &rows)?;
+            let ctx = CellCtx {
+                dir: cell_dir(i),
+                checkpoint: opts.checkpoint,
+                quiet: false,
+            };
+            let w = works[i].as_ref().expect("declared");
+            match w.run(engine.filter(|_| w.needs_engine()), &ctx) {
+                Ok(out) => record_done(i, out, &mut rows, &mut outcomes)?,
+                Err(e) => {
+                    failures.push((i, format!("{e:#}")));
+                    break; // inline: stop at the first failure
+                }
+            }
+        }
+    } else if !run_list.is_empty() {
+        // Per-thread engines, like coordinator::exec. No pre-validation
+        // load here: the caller's engine was loaded from this very dir
+        // in-process (its manifest was hashed above), so per-worker
+        // loads are expected to succeed.
+        let artifacts: Option<PathBuf> = if needs_engine {
+            Some(engine.expect("checked above").dir().to_path_buf())
+        } else {
+            None
+        };
+        type Out = (usize, std::result::Result<CellOutcome, String>);
+        let pool: WorkerPool<(usize, W, CellCtx), Out> = WorkerPool::new(
+            opts.workers,
+            move |_id| {
+                Ok(match &artifacts {
+                    Some(d) => Some(Engine::load(d)?),
+                    None => None,
+                })
+            },
+            |eng: &mut Option<Engine>, (i, w, ctx): (usize, W, CellCtx)| {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || -> Result<CellOutcome> {
+                        w.run(eng.as_ref().filter(|_| w.needs_engine()), &ctx)
+                    },
+                ));
+                let out = match out {
+                    Ok(r) => r.map_err(|e| format!("{e:#}")),
+                    Err(panic) => Err(match panic.downcast_ref::<&str>() {
+                        Some(s) => format!("cell panicked: {s}"),
+                        None => match panic.downcast_ref::<String>() {
+                            Some(s) => format!("cell panicked: {s}"),
+                            None => "cell panicked".to_string(),
+                        },
+                    }),
+                };
+                (i, out)
+            },
+        )?;
+        for &i in &run_list {
+            rows[i].status = CellStatus::Running;
+        }
+        write_manifest(&manifest_path, &grid_name, grid_fp, &rows)?;
+        for &i in &run_list {
+            let ctx = CellCtx {
+                dir: cell_dir(i),
+                checkpoint: opts.checkpoint,
+                quiet: true,
+            };
+            pool.submit((i, works[i].take().expect("declared"), ctx))?;
+        }
+        for _ in 0..run_list.len() {
+            let (i, res) = pool.recv()?;
+            match res {
+                Ok(out) => record_done(i, out, &mut rows, &mut outcomes)?,
+                Err(e) => failures.push((i, e)),
+            }
+        }
+    }
+
+    if !failures.is_empty() {
+        let list: Vec<String> = failures
+            .iter()
+            .map(|(i, e)| format!("  {}: {e}", names[*i]))
+            .collect();
+        anyhow::bail!(
+            "grid {grid_name}: {} of {} cells failed (completed cells are \
+             recorded — rerun the same command to continue):\n{}",
+            failures.len(),
+            n,
+            list.join("\n")
+        );
+    }
+
+    // Aliases inherit their representative's outcome (shared cell dir).
+    for &(a, r) in &aliases {
+        let out = outcomes[r].clone().expect("representative completed");
+        rows[a].status = CellStatus::Done;
+        rows[a].summary = out.summary.clone();
+        outcomes[a] = Some(out);
+    }
+    if !aliases.is_empty() {
+        write_manifest(&manifest_path, &grid_name, grid_fp, &rows)?;
+    }
+
+    let outcomes: Vec<CellOutcome> = outcomes
+        .into_iter()
+        .map(|o| o.expect("every cell done"))
+        .collect();
+    eprintln!(
+        "grid {grid_name}: complete — {executed} executed, {cache_hits} reused"
+    );
+    Ok(Some(GridReport {
+        outcomes,
+        executed,
+        cache_hits,
+        manifest_path,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprints_are_spec_functions() {
+        assert_eq!(cell_fingerprint("a"), cell_fingerprint("a"));
+        assert_ne!(cell_fingerprint("a"), cell_fingerprint("b"));
+        let cells = vec![("x".to_string(), 1u64), ("y".to_string(), 2u64)];
+        assert_eq!(grid_fingerprint("g", &cells), grid_fingerprint("g", &cells));
+        assert_ne!(grid_fingerprint("g", &cells), grid_fingerprint("h", &cells));
+        let renamed = vec![("x2".to_string(), 1u64), ("y".to_string(), 2u64)];
+        assert_ne!(grid_fingerprint("g", &cells), grid_fingerprint("g", &renamed));
+    }
+
+    #[test]
+    fn cell_record_roundtrips_exactly() {
+        let dir = PathBuf::from(format!(
+            "target/test-runs/grid-record-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut out = CellOutcome::default();
+        out.put("final_acc", 0.1f64 + 0.2f64); // 0.30000000000000004
+        out.put("rtt", "");
+        out.curves.push((
+            "accuracy".into(),
+            vec![(1.0, 0.5), (2.0, 1.0 / 3.0), (3.0, 1e-7)],
+        ));
+        let spec = "synth id=1 \"quoted\"";
+        let fp = cell_fingerprint(spec);
+        write_cell_record(&dir, "c1", fp, spec, &out).unwrap();
+        let back = load_cell_record(&dir, fp, spec).unwrap().expect("done");
+        assert_eq!(back, out, "record must round-trip bit-exactly");
+        // exact f64 recovery through the JSON
+        assert_eq!(back.num("final_acc"), Some(0.1f64 + 0.2f64));
+        assert_eq!(back.curve("accuracy").unwrap()[2].1, 1e-7);
+        // a mismatched declaration refuses the dir
+        assert!(load_cell_record(&dir, fp, "synth id=2").is_err());
+        assert!(load_cell_record(&dir, fp ^ 1, spec).is_err());
+
+        // non-finite curve values (a diverging run's loss — Figures 3/8
+        // territory) must round-trip instead of poisoning the cache
+        // with JSON the reader cannot parse
+        let mut div = CellOutcome::default();
+        div.curves.push((
+            "loss".into(),
+            vec![(1.0, f64::INFINITY), (2.0, f64::NEG_INFINITY), (3.0, f64::NAN)],
+        ));
+        let ddir = dir.join("diverged");
+        let dfp = cell_fingerprint("synth diverged");
+        write_cell_record(&ddir, "c2", dfp, "synth diverged", &div).unwrap();
+        let back = load_cell_record(&ddir, dfp, "synth diverged")
+            .unwrap()
+            .expect("done");
+        let pts = back.curve("loss").unwrap();
+        assert_eq!(pts[0].1, f64::INFINITY);
+        assert_eq!(pts[1].1, f64::NEG_INFINITY);
+        assert!(pts[2].1.is_nan());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -3,15 +3,32 @@
 //! [`table_comm`], the codec sweep behind `fedavg comm` (the
 //! communication-efficiency framing the paper's footnote 7 points at),
 //! and [`table_agg`], the aggregation-rule sweep behind `fedavg agg`
-//! (server optimizers + robust rules, DESIGN.md §7). Shared here:
-//! scaled workload builders and run helpers.
+//! (server optimizers + robust rules, DESIGN.md §7).
+//!
+//! Every driver is a **grid declaration**: it lists its cells (named,
+//! fingerprinted run configs — [`cells`]) into the [`grid`] engine,
+//! which executes them restartably and in parallel, then formats the
+//! paper's table/series from the outcome rows (DESIGN.md §9). The
+//! per-table round loops of the pre-grid drivers are gone; what remains
+//! in each `tableN.rs` is the declaration plus a row formatter. All
+//! sweep subcommands therefore share one flag surface:
+//! `--workers N` (parallel cells over per-thread engines), `--resume`
+//! (continue an interrupted grid), `--dry-run` (list cells + cached
+//! status), `--overwrite` (replace a stale manifest), and
+//! `--checkpoint-every`/`--checkpoint-keep` (per-cell run-state
+//! snapshots, DESIGN.md §8). Killing a grid and rerunning the same
+//! command reproduces byte-identical tables and per-cell `curve.csv`
+//! files versus an uninterrupted run.
 //!
 //! Every driver accepts `--scale` (default well below 1.0 — this testbed
 //! is a single CPU core; `--scale 1.0` is the paper-sized configuration)
 //! plus `--rounds`, `--target`, `--eval-cap` overrides, and prints a
-//! paper-formatted table/series while persisting curves under `runs/`.
+//! paper-formatted table/series while persisting per-cell curves under
+//! `runs/cells/`.
 
+pub mod cells;
 pub mod figures;
+pub mod grid;
 pub mod table1;
 pub mod table2;
 pub mod table3;
@@ -19,14 +36,14 @@ pub mod table4;
 pub mod table_agg;
 pub mod table_comm;
 
-use crate::config::{FedConfig, Partition, ScaleProfile};
+use crate::config::{Partition, ScaleProfile};
 use crate::data::rng::Rng;
 use crate::data::{cifar_like, mnist_like, partition, shakespeare_like, social_like, Federated};
-use crate::federated::{self, RunResult, ServerOptions};
-use crate::runtime::Engine;
+use crate::runstate::CheckpointConfig;
 use crate::Result;
 
-/// Harness-wide options parsed from the CLI.
+/// Harness-wide options parsed from the CLI — uniform across all sweep
+/// subcommands (`table1`–`table4`, `comm`, `agg`, `figure`, `sweep`).
 #[derive(Debug, Clone)]
 pub struct ExpOptions {
     pub scale: f64,
@@ -38,6 +55,16 @@ pub struct ExpOptions {
     pub target: Option<f64>,
     pub seed: u64,
     pub out_root: String,
+    /// grid-cell worker threads (`--workers`, one engine per thread).
+    pub workers: usize,
+    /// require an existing grid manifest (`--resume`).
+    pub resume: bool,
+    /// replace a manifest from a different cell set (`--overwrite`).
+    pub overwrite: bool,
+    /// list cells + cached status, run nothing (`--dry-run`).
+    pub dry_run: bool,
+    /// per-cell run-state checkpoint cadence (`--checkpoint-every`).
+    pub checkpoint: Option<CheckpointConfig>,
 }
 
 impl Default for ExpOptions {
@@ -49,6 +76,11 @@ impl Default for ExpOptions {
             target: None,
             seed: 42,
             out_root: "runs".into(),
+            workers: 1,
+            resume: false,
+            overwrite: false,
+            dry_run: false,
+            checkpoint: None,
         }
     }
 }
@@ -56,6 +88,26 @@ impl Default for ExpOptions {
 impl ExpOptions {
     pub fn from_args(args: &crate::util::args::Args) -> Result<Self> {
         let d = Self::default();
+        let checkpoint = match args.str_opt("checkpoint-every") {
+            None => {
+                anyhow::ensure!(
+                    !args.has("checkpoint-keep"),
+                    "--checkpoint-keep needs --checkpoint-every"
+                );
+                None
+            }
+            Some(v) => {
+                let every: u64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--checkpoint-every: bad integer {v:?}"))?;
+                let ck = CheckpointConfig {
+                    every,
+                    keep: args.usize_or("checkpoint-keep", 3)?,
+                };
+                ck.validate()?;
+                Some(ck)
+            }
+        };
         Ok(Self {
             scale: args.f64_or("scale", d.scale)?,
             rounds: args.usize_or("rounds", d.rounds)?,
@@ -66,20 +118,44 @@ impl ExpOptions {
             },
             seed: args.u64_or("seed", d.seed)?,
             out_root: args.str_or("out", &d.out_root),
+            workers: args.usize_or("workers", 1)?,
+            resume: args.has("resume"),
+            overwrite: args.has("overwrite"),
+            dry_run: args.has("dry-run"),
+            checkpoint,
         })
     }
 
-    pub fn server_options(&self) -> ServerOptions {
-        ServerOptions {
-            eval_cap: Some(self.eval_cap),
-            ..Default::default()
+    /// The grid-engine knobs these options carry (DESIGN.md §9).
+    pub fn grid_options(&self) -> grid::GridOptions {
+        grid::GridOptions {
+            out_root: self.out_root.clone(),
+            workers: self.workers,
+            resume: self.resume,
+            overwrite: self.overwrite,
+            dry_run: self.dry_run,
+            checkpoint: self.checkpoint,
         }
     }
 }
 
-/// Flags shared by the table/figure drivers.
+/// Flags shared by the table/figure/sweep drivers.
 pub const COMMON_FLAGS: &[&str] = &[
-    "scale", "rounds", "eval-cap", "target", "seed", "out", "rows", "lr", "quiet",
+    "scale",
+    "rounds",
+    "eval-cap",
+    "target",
+    "seed",
+    "out",
+    "rows",
+    "lr",
+    "quiet",
+    "workers",
+    "resume",
+    "overwrite",
+    "dry-run",
+    "checkpoint-every",
+    "checkpoint-keep",
 ];
 
 // ---------------------------------------------------------------- workloads
@@ -162,33 +238,6 @@ pub fn social_fed(scale: f64, seed: u64) -> Federated {
 
 // ------------------------------------------------------------------ helpers
 
-/// Run one config (with harness caps applied) and return the result plus
-/// its rounds-to-target under `target`.
-pub fn run_one(
-    engine: &Engine,
-    fed: &Federated,
-    cfg: &FedConfig,
-    opts: &ExpOptions,
-    run_name: &str,
-) -> Result<(RunResult, Option<f64>)> {
-    let mut cfg = cfg.clone();
-    cfg.rounds = cfg.rounds.min(opts.rounds);
-    if let Some(t) = cfg.target_accuracy {
-        // keep running past target only if eval cadence might overshoot
-        cfg.target_accuracy = Some(t);
-    }
-    let mut sopts = opts.server_options();
-    sopts.telemetry = Some(crate::telemetry::RunWriter::create_overwrite(
-        &opts.out_root,
-        run_name,
-    )?);
-    let res = federated::run(engine, fed, &cfg, sopts)?;
-    let rtt = cfg
-        .target_accuracy
-        .and_then(|t| res.accuracy.rounds_to_target(t));
-    Ok((res, rtt))
-}
-
 /// Render a markdown-ish table row list with an aligned header.
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     println!("\n== {title} ==");
@@ -260,5 +309,36 @@ mod tests {
         assert_eq!(o.scale, 0.1);
         assert_eq!(o.rounds, 9);
         assert_eq!(o.target, Some(0.5));
+        assert_eq!(o.workers, 1);
+        assert!(!o.resume && !o.overwrite && !o.dry_run);
+        assert!(o.checkpoint.is_none());
+    }
+
+    #[test]
+    fn exp_options_parse_grid_flags() {
+        let args = crate::util::args::Args::parse_from(
+            [
+                "--workers", "4", "--resume", "--dry-run", "--checkpoint-every", "10",
+                "--checkpoint-keep", "2",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let o = ExpOptions::from_args(&args).unwrap();
+        assert_eq!(o.workers, 4);
+        assert!(o.resume && o.dry_run && !o.overwrite);
+        let ck = o.checkpoint.expect("cadence set");
+        assert_eq!((ck.every, ck.keep), (10, 2));
+        let g = o.grid_options();
+        assert_eq!(g.workers, 4);
+        assert!(g.resume && g.dry_run);
+
+        // --checkpoint-keep without a cadence is a config error
+        let args = crate::util::args::Args::parse_from(
+            ["--checkpoint-keep", "2"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(ExpOptions::from_args(&args).is_err());
     }
 }

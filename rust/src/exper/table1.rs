@@ -4,6 +4,10 @@
 //! and CNN (E=5), sweeping C ∈ {0, 0.1, 0.2, 0.5, 1.0} with B ∈ {∞, 10},
 //! on the IID and pathological non-IID partitions; speedups are relative
 //! to the C=0 row.
+//!
+//! A grid declaration (DESIGN.md §9): one [`FedCell`] per
+//! (model, C, partition, B), executed by the grid engine, then formatted
+//! from the outcome rows in declaration order.
 
 use crate::config::{BatchSize, FedConfig, Partition};
 use crate::metrics::format_cell;
@@ -11,7 +15,9 @@ use crate::runtime::Engine;
 use crate::util::args::Args;
 use crate::Result;
 
-use super::{mnist_fed, print_table, run_one, ExpOptions, COMMON_FLAGS};
+use super::cells::{FedCell, GridCell, Workload};
+use super::grid::{self, GridDef};
+use super::{print_table, ExpOptions, COMMON_FLAGS};
 
 const CS: [f64; 5] = [0.0, 0.1, 0.2, 0.5, 1.0];
 
@@ -25,58 +31,104 @@ fn default_targets(model: &str) -> (f64, f64) {
     }
 }
 
+/// Per-model table parameters resolved once, shared by the declaration
+/// and formatting passes (both iterate the identical cell order).
+struct ModelPlan {
+    model: String,
+    e: usize,
+    t_iid: f64,
+    t_non: f64,
+    lr: f64,
+}
+
+fn plans(args: &Args, opts: &ExpOptions) -> Result<Vec<ModelPlan>> {
+    let models = args.str_or("models", "mnist_2nn,mnist_cnn");
+    models
+        .split(',')
+        .map(|model| {
+            let e = if model == "mnist_2nn" { 1 } else { 5 };
+            let (t_iid, t_non) = default_targets(model);
+            Ok(ModelPlan {
+                model: model.to_string(),
+                e,
+                t_iid: opts.target.unwrap_or(t_iid),
+                t_non: args.f64_or("target-noniid", t_non)?,
+                lr: args.f64_or("lr", 0.1)?,
+            })
+        })
+        .collect()
+}
+
 pub fn run(engine: &Engine, args: &Args) -> Result<()> {
     args.check_known(&[COMMON_FLAGS, &["models", "bs", "target-noniid"]].concat())?;
     let opts = ExpOptions::from_args(args)?;
-    let models = args.str_or("models", "mnist_2nn,mnist_cnn");
+    let plans = plans(args, &opts)?;
     let bs = args.str_or("bs", "inf,10");
-    let batches: Vec<BatchSize> = bs
-        .split(',')
-        .map(BatchSize::parse)
-        .collect::<Result<_>>()?;
+    let batches: Vec<BatchSize> = bs.split(',').map(BatchSize::parse).collect::<Result<_>>()?;
 
-    for model in models.split(',') {
-        let e = if model == "mnist_2nn" { 1 } else { 5 };
-        let (t_iid, t_non) = default_targets(model);
-        let t_iid = opts.target.unwrap_or(t_iid);
-        let t_non = args.f64_or("target-noniid", t_non)?;
-        let lr = args.f64_or("lr", 0.1)?;
-        let mut rows = Vec::new();
+    let mut def = GridDef::new("table1");
+    for plan in &plans {
         for &c in &CS {
-            let mut cells = vec![format!("{c:.1}")];
             for (part, target) in [
-                (Partition::Iid, t_iid),
-                (Partition::Pathological(2), t_non),
+                (Partition::Iid, plan.t_iid),
+                (Partition::Pathological(2), plan.t_non),
             ] {
-                let fed = mnist_fed(opts.scale, part, opts.seed);
                 for &b in &batches {
                     let cfg = FedConfig {
-                        model: model.to_string(),
+                        model: plan.model.clone(),
                         c,
-                        e,
+                        e: plan.e,
                         b,
-                        lr,
+                        lr: plan.lr,
                         rounds: opts.rounds,
                         target_accuracy: Some(target),
                         seed: opts.seed,
                         ..Default::default()
                     };
                     let name = format!(
-                        "table1-{model}-{}-B{}-C{c}",
+                        "table1-{}-{}-B{}-C{c}",
+                        plan.model,
                         part.label(),
                         b.label()
                     );
-                    let (res, rtt) = run_one(engine, &fed, &cfg, &opts, &name)?;
-                    // baseline = this column's C=0 row
-                    cells.push(format!(
+                    def.cell(
+                        name,
+                        GridCell::Fed(FedCell::new(
+                            Workload::Mnist {
+                                scale: opts.scale,
+                                part,
+                                seed: opts.seed,
+                            },
+                            cfg,
+                            opts.eval_cap,
+                        )),
+                    );
+                }
+            }
+        }
+    }
+    let Some(report) = grid::run(def, Some(engine), &opts.grid_options())? else {
+        return Ok(()); // --dry-run
+    };
+
+    let mut it = report.outcomes.iter();
+    for plan in &plans {
+        let mut rows = Vec::new();
+        for c in &CS {
+            let mut row_cells = vec![format!("{c:.1}")];
+            for _part in 0..2 {
+                for _b in &batches {
+                    let out = it.next().expect("outcome per declared cell");
+                    row_cells.push(format!(
                         "{} [acc {:.3}]",
-                        rtt.map(|r| format!("{:.0}", r.ceil()))
+                        out.num("rtt")
+                            .map(|r| format!("{:.0}", r.ceil()))
                             .unwrap_or_else(|| "—".into()),
-                        res.final_accuracy()
+                        out.num("final_acc").unwrap_or(0.0)
                     ));
                 }
             }
-            rows.push(cells);
+            rows.push(row_cells);
         }
         // add speedups vs C=0 per column
         annotate_speedups(&mut rows);
@@ -88,8 +140,12 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
         }
         print_table(
             &format!(
-                "Table 1 — {model} (E={e}), targets {:.0}%/{:.0}% (IID/non-IID), scale {}",
-                t_iid * 100.0, t_non * 100.0, opts.scale
+                "Table 1 — {} (E={}), targets {:.0}%/{:.0}% (IID/non-IID), scale {}",
+                plan.model,
+                plan.e,
+                plan.t_iid * 100.0,
+                plan.t_non * 100.0,
+                opts.scale
             ),
             &header,
             &rows,

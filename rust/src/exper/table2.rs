@@ -1,6 +1,10 @@
 //! Table 2 (and Table 4 shares the machinery) — increasing computation
 //! per client: rounds to target for an (E, B) grid at fixed C=0.1,
 //! ordered by `u = E·n/(K·B)`, FedSGD (E=1, B=∞) as the baseline row.
+//!
+//! Declared as a grid (DESIGN.md §9): one [`FedCell`] per
+//! (model, partition, E, B); the printed table is assembled from the
+//! outcome rows, so `--workers N` changes nothing but wall-clock.
 
 use crate::config::{BatchSize, FedConfig, Partition};
 use crate::federated::updates_per_round;
@@ -9,7 +13,9 @@ use crate::runtime::Engine;
 use crate::util::args::Args;
 use crate::Result;
 
-use super::{mnist_fed, print_table, run_one, shakespeare_fed, ExpOptions, COMMON_FLAGS};
+use super::cells::{FedCell, GridCell, Workload};
+use super::grid::{self, CellOutcome, GridDef};
+use super::{print_table, ExpOptions, COMMON_FLAGS};
 
 /// The paper's Table 2 CNN rows: (E, B); first row is FedSGD.
 pub const CNN_ROWS: [(usize, BatchSize); 9] = [
@@ -51,6 +57,7 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
     let opts = ExpOptions::from_args(args)?;
     let models = args.str_or("models", "mnist_cnn,shakespeare_lstm");
 
+    let mut specs = Vec::new();
     for model in models.split(',') {
         let spec = match model {
             "mnist_cnn" => GridSpec {
@@ -72,43 +79,60 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
         let mut spec = spec;
         let nrows = args.usize_or("rows", spec.rows.len())?;
         spec.rows = &spec.rows[..nrows.min(spec.rows.len())];
-        run_grid(engine, &opts, &spec)?;
+        specs.push(spec);
+    }
+    run_specs(engine, &opts, "table2", &specs)
+}
+
+/// Declare, execute, and print one or more model specs as a single grid
+/// (the Table 4 driver reuses this with its own rows and grid name).
+pub fn run_specs(
+    engine: &Engine,
+    opts: &ExpOptions,
+    grid_name: &str,
+    specs: &[GridSpec<'_>],
+) -> Result<()> {
+    let mut def = GridDef::new(grid_name);
+    for spec in specs {
+        declare(&mut def, opts, spec);
+    }
+    let Some(report) = grid::run(def, Some(engine), &opts.grid_options())? else {
+        return Ok(()); // --dry-run
+    };
+    let mut it = report.outcomes.iter();
+    for spec in specs {
+        let n = spec.rows.len() * 2;
+        let block: Vec<&CellOutcome> = (&mut it).take(n).collect();
+        format_table(opts, spec, &block);
     }
     Ok(())
 }
 
-pub fn run_grid(engine: &Engine, opts: &ExpOptions, spec: &GridSpec<'_>) -> Result<()> {
+/// Both partitions per (E, B) row, like the paper's IID / Non-IID
+/// columns. The declaration order here is the contract `format_table`
+/// consumes.
+fn declare(def: &mut GridDef<GridCell>, opts: &ExpOptions, spec: &GridSpec<'_>) {
     let is_lstm = spec.model == "shakespeare_lstm";
-    // both partitions, like the paper's IID / Non-IID columns
-    let feds = if is_lstm {
-        [
-            ("IID", shakespeare_fed(opts.scale, false, opts.seed)),
-            ("Non-IID", shakespeare_fed(opts.scale, true, opts.seed)),
-        ]
-    } else {
-        [
-            ("IID", mnist_fed(opts.scale, Partition::Iid, opts.seed)),
-            (
-                "Non-IID",
-                mnist_fed(opts.scale, Partition::Pathological(2), opts.seed),
-            ),
-        ]
-    };
-    let mean_nk = feds[0].1.total_examples() as f64 / feds[0].1.num_clients() as f64;
-
-    let mut rows_out = Vec::new();
-    let mut baselines: [Option<f64>; 2] = [None, None];
-    for (i, &(e, b)) in spec.rows.iter().enumerate() {
-        let u = updates_per_round(e, mean_nk.round() as usize, b);
-        let algo = if i == 0 { "FedSGD" } else { "FedAvg" };
-        let mut cells = vec![
-            algo.to_string(),
-            e.to_string(),
-            b.label(),
-            format!("{u:.1}"),
-        ];
-        for (col, (pname, fed)) in feds.iter().enumerate() {
+    for &(e, b) in spec.rows {
+        for (col, pname) in ["iid", "noniid"].iter().enumerate() {
             let col_target = if col == 0 { spec.target } else { spec.target_noniid };
+            let workload = if is_lstm {
+                Workload::Shakespeare {
+                    scale: opts.scale,
+                    natural: col == 1,
+                    seed: opts.seed,
+                }
+            } else {
+                Workload::Mnist {
+                    scale: opts.scale,
+                    part: if col == 0 {
+                        Partition::Iid
+                    } else {
+                        Partition::Pathological(2)
+                    },
+                    seed: opts.seed,
+                }
+            };
             let cfg = FedConfig {
                 model: spec.model.to_string(),
                 c: 0.1,
@@ -120,23 +144,49 @@ pub fn run_grid(engine: &Engine, opts: &ExpOptions, spec: &GridSpec<'_>) -> Resu
                 seed: opts.seed,
                 ..Default::default()
             };
-            let name = format!(
-                "table2-{}-{}-E{e}-B{}",
-                spec.model,
-                pname.to_lowercase().replace('-', ""),
-                b.label()
+            let name = format!("table2-{}-{pname}-E{e}-B{}", spec.model, b.label());
+            def.cell(
+                name,
+                GridCell::Fed(FedCell::new(workload, cfg, opts.eval_cap)),
             );
-            let (res, rtt) = run_one(engine, fed, &cfg, opts, &name)?;
+        }
+    }
+}
+
+fn format_table(opts: &ExpOptions, spec: &GridSpec<'_>, block: &[&CellOutcome]) {
+    // mean examples per client, from the IID cell's recorded population
+    // (all cells of a model share the workload shape)
+    let mean_nk = block
+        .first()
+        .map(|o| {
+            o.num("examples_total").unwrap_or(0.0) / o.num("clients_total").unwrap_or(1.0).max(1.0)
+        })
+        .unwrap_or(0.0);
+
+    let mut rows_out = Vec::new();
+    let mut baselines: [Option<f64>; 2] = [None, None];
+    for (i, &(e, b)) in spec.rows.iter().enumerate() {
+        let u = updates_per_round(e, mean_nk.round() as usize, b);
+        let algo = if i == 0 { "FedSGD" } else { "FedAvg" };
+        let mut row_cells = vec![
+            algo.to_string(),
+            e.to_string(),
+            b.label(),
+            format!("{u:.1}"),
+        ];
+        for col in 0..2 {
+            let out = block[i * 2 + col];
+            let rtt = out.num("rtt");
             if i == 0 {
                 baselines[col] = rtt;
             }
-            cells.push(format!(
+            row_cells.push(format!(
                 "{} acc={:.3}",
                 format_cell(rtt, baselines[col]),
-                res.final_accuracy()
+                out.num("final_acc").unwrap_or(0.0)
             ));
         }
-        rows_out.push(cells);
+        rows_out.push(row_cells);
     }
     print_table(
         &format!(
@@ -149,7 +199,6 @@ pub fn run_grid(engine: &Engine, opts: &ExpOptions, spec: &GridSpec<'_>) -> Resu
         &["algo", "E", "B", "u", "IID", "Non-IID"],
         &rows_out,
     );
-    Ok(())
 }
 
 #[cfg(test)]

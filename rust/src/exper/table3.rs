@@ -1,15 +1,20 @@
 //! Table 3 — CIFAR: rounds (minibatch updates for the SGD baseline) to
 //! reach target accuracies, for SGD / FedSGD / FedAvg(E=5, B=50), C=0.1,
 //! with tuned lr decay (paper: FedSGD 0.9934, FedAvg 0.99 per round).
+//!
+//! Three grid cells — an [`SgdCell`] baseline plus two [`FedCell`]s —
+//! formatted against each target from the recorded accuracy curves.
 
-use crate::baselines::sgd::{self, SgdConfig};
+use crate::baselines::sgd::SgdConfig;
 use crate::config::{BatchSize, FedConfig};
 use crate::metrics::format_cell;
 use crate::runtime::Engine;
 use crate::util::args::Args;
 use crate::Result;
 
-use super::{cifar_fed, print_table, run_one, ExpOptions, COMMON_FLAGS};
+use super::cells::{FedCell, GridCell, SgdCell, Workload};
+use super::grid::{self, GridDef};
+use super::{print_table, ExpOptions, COMMON_FLAGS};
 
 pub fn run(engine: &Engine, args: &Args) -> Result<()> {
     args.check_known(&[COMMON_FLAGS, &["targets", "sgd-updates"]].concat())?;
@@ -21,29 +26,32 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
         .map(|t| t.parse::<f64>())
         .collect::<std::result::Result<_, _>>()?;
     let lr = args.f64_or("lr", 0.1)?;
-    let fed = cifar_fed(opts.scale, opts.seed);
     let max_target = targets.iter().cloned().fold(0.0, f64::max);
-
-    // --- sequential SGD baseline (each update = one "round")
-    let sgd_updates = args.usize_or("sgd-updates", opts.rounds * 10)?;
-    let sgd_cfg = SgdConfig {
-        model: "cifar_cnn".into(),
-        batch: 100,
-        lr,
-        lr_decay: 0.9995,
-        updates: sgd_updates,
-        eval_every: (sgd_updates / 40).max(1),
-        target_accuracy: Some(max_target),
+    let workload = Workload::Cifar {
+        scale: opts.scale,
         seed: opts.seed,
     };
-    let sgd_res = sgd::run(
-        engine,
-        &fed.train,
-        &fed.test,
-        &sgd_cfg,
-        Some(opts.eval_cap),
-    )?;
 
+    let sgd_updates = args.usize_or("sgd-updates", opts.rounds * 10)?;
+    let mut def = GridDef::new("table3");
+    // --- sequential SGD baseline (each update = one "round")
+    def.cell(
+        "table3-sgd",
+        GridCell::Sgd(SgdCell {
+            workload: workload.clone(),
+            cfg: SgdConfig {
+                model: "cifar_cnn".into(),
+                batch: 100,
+                lr,
+                lr_decay: 0.9995,
+                updates: sgd_updates,
+                eval_every: (sgd_updates / 40).max(1),
+                target_accuracy: Some(max_target),
+                seed: opts.seed,
+            },
+            eval_cap: opts.eval_cap,
+        }),
+    );
     // --- FedSGD (lr decay per round, paper 0.9934)
     let fedsgd_cfg = FedConfig {
         model: "cifar_cnn".into(),
@@ -56,8 +64,10 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
         ..Default::default()
     }
     .fedsgd();
-    let (fedsgd_res, _) = run_one(engine, &fed, &fedsgd_cfg, &opts, "table3-fedsgd")?;
-
+    def.cell(
+        "table3-fedsgd",
+        GridCell::Fed(FedCell::new(workload.clone(), fedsgd_cfg, opts.eval_cap)),
+    );
     // --- FedAvg (E=5, B=50, decay 0.99)
     let fedavg_cfg = FedConfig {
         model: "cifar_cnn".into(),
@@ -71,25 +81,35 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
         seed: opts.seed,
         ..Default::default()
     };
-    let (fedavg_res, _) = run_one(engine, &fed, &fedavg_cfg, &opts, "table3-fedavg")?;
+    def.cell(
+        "table3-fedavg",
+        GridCell::Fed(FedCell::new(workload, fedavg_cfg, opts.eval_cap)),
+    );
 
+    let Some(report) = grid::run(def, Some(engine), &opts.grid_options())? else {
+        return Ok(()); // --dry-run
+    };
+    let [sgd_out, fedsgd_out, fedavg_out] = &report.outcomes[..] else {
+        anyhow::bail!("table3: expected 3 outcomes");
+    };
+
+    let sgd_curve = sgd_out.learning_curve("accuracy")?;
+    let curves = [
+        ("SGD", sgd_curve.clone()),
+        ("FedSGD", fedsgd_out.learning_curve("accuracy")?),
+        ("FedAvg", fedavg_out.learning_curve("accuracy")?),
+    ];
     let mut rows = Vec::new();
-    for (name, curve) in [
-        ("SGD", &sgd_res.accuracy),
-        ("FedSGD", &fedsgd_res.accuracy),
-        ("FedAvg", &fedavg_res.accuracy),
-    ] {
-        let mut cells = vec![name.to_string()];
+    for (name, curve) in &curves {
+        let mut row = vec![name.to_string()];
         for &t in &targets {
             let rtt = curve.rounds_to_target(t);
-            let base = sgd_res.accuracy.rounds_to_target(t);
-            cells.push(format_cell(rtt, base));
+            let base = sgd_curve.rounds_to_target(t);
+            row.push(format_cell(rtt, base));
         }
-        rows.push(cells);
+        rows.push(row);
     }
-    let header: Vec<&str> = std::iter::once("Acc.")
-        .chain(targets_s.split(','))
-        .collect();
+    let header: Vec<&str> = std::iter::once("Acc.").chain(targets_s.split(',')).collect();
     print_table(
         &format!(
             "Table 3 — CIFAR rounds to target (scale {}, SGD B=100, FedAvg E=5 B=50 C=0.1)",
@@ -100,10 +120,10 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
     );
     println!(
         "final acc — SGD {:.3} ({} updates), FedSGD {:.3}, FedAvg {:.3}",
-        sgd_res.accuracy.best_value().unwrap_or(0.0),
-        sgd_res.updates_run,
-        fedsgd_res.accuracy.best_value().unwrap_or(0.0),
-        fedavg_res.accuracy.best_value().unwrap_or(0.0),
+        sgd_out.num("best_acc").unwrap_or(0.0),
+        sgd_out.int("updates_run").unwrap_or(0),
+        fedsgd_out.num("best_acc").unwrap_or(0.0),
+        fedavg_out.num("best_acc").unwrap_or(0.0),
     );
     Ok(())
 }

@@ -1,12 +1,15 @@
 //! Table 4 (appendix) — the 2NN (E, B) grid at C=0.1, same methodology
-//! as Table 2 but for the MNIST 2NN at its own target accuracy.
+//! as Table 2 but for the MNIST 2NN at its own target accuracy. Declared
+//! through [`table2::run_specs`](super::table2::run_specs) as its own
+//! grid (`grid-table4`), so Table 2 and Table 4 cells cache
+//! independently while still sharing the cell pool.
 
 use crate::config::BatchSize;
 use crate::runtime::Engine;
 use crate::util::args::Args;
 use crate::Result;
 
-use super::table2::{run_grid, GridSpec};
+use super::table2::{run_specs, GridSpec};
 use super::{ExpOptions, COMMON_FLAGS};
 
 /// Paper Table 4 rows (E, B); first row is FedSGD.
@@ -25,12 +28,15 @@ pub const ROWS_2NN: [(usize, BatchSize); 9] = [
 pub fn run(engine: &Engine, args: &Args) -> Result<()> {
     args.check_known(&[COMMON_FLAGS, &["lr", "target-noniid"]].concat())?;
     let opts = ExpOptions::from_args(args)?;
+    let mut rows: &[(usize, BatchSize)] = &ROWS_2NN;
+    let nrows = args.usize_or("rows", rows.len())?;
+    rows = &rows[..nrows.min(rows.len())];
     let spec = GridSpec {
         model: "mnist_2nn",
-        rows: &ROWS_2NN,
+        rows,
         target: opts.target.unwrap_or(0.80),
         target_noniid: args.f64_or("target-noniid", 0.55)?,
         lr: args.f64_or("lr", 0.1)?,
     };
-    run_grid(engine, &opts, &spec)
+    run_specs(engine, &opts, "table4", &[spec])
 }

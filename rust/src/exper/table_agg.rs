@@ -4,23 +4,23 @@
 //!
 //! The scenario complement to [`super::table_comm`]: where the codec
 //! sweep varies *what crosses the wire*, this sweep varies *what the
-//! server does with it* (DESIGN.md §7). Each row runs the same federated
-//! workload through [`federated::run`] with a different `--agg` registry
-//! rule; with `--corrupt F`, `⌊F·K⌋` clients flip every label
+//! server does with it* (DESIGN.md §7). Each row is a grid cell running
+//! the same federated workload with a different `--agg` registry rule;
+//! with `--corrupt F`, `⌊F·K⌋` clients flip every label
 //! ([`crate::data::corrupt_clients`]) — the regime where plain FedAvg
 //! degrades and the coordinate-wise trimmed mean / median hold, while on
 //! clean partitions the server optimizers (FedAvgM, FedAdam) chase
 //! fewer rounds-to-target per communication round.
 
 use crate::config::{BatchSize, FedConfig, Partition};
-use crate::data::corrupt_clients;
 use crate::federated::aggregate::{registry_help, AggConfig};
-use crate::federated::{self, ServerOptions};
 use crate::runtime::Engine;
 use crate::util::args::Args;
 use crate::Result;
 
-use super::{mnist_fed, print_table, ExpOptions, COMMON_FLAGS};
+use super::cells::{FedCell, GridCell, Workload};
+use super::grid::{self, GridDef};
+use super::{print_table, ExpOptions, COMMON_FLAGS};
 
 /// Default rule sweep: the paper's baseline, both server optimizers,
 /// then the robust order statistics. The trim fraction must exceed the
@@ -106,32 +106,47 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
         registry_help(),
     );
 
-    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut def = GridDef::new("agg");
     for part in &parts {
-        let mut fed = mnist_fed(opts.scale, *part, opts.seed);
-        let bad = corrupt_clients(&mut fed, corrupt, opts.seed ^ 0xC0881);
         for spec in &specs {
-            let mut sopts = ServerOptions {
-                agg: rule_cfg(spec),
-                ..opts.server_options()
-            };
-            sopts.telemetry = Some(crate::telemetry::RunWriter::create_overwrite(
-                &opts.out_root,
-                &format!("agg-{}-{spec}", part.label()),
-            )?);
-            let res = federated::run(engine, &fed, &cfg, sopts)?;
-            let rtt = opts
-                .target
-                .and_then(|t| res.accuracy.rounds_to_target(t))
+            let mut cell = FedCell::new(
+                Workload::Mnist {
+                    scale: opts.scale,
+                    part: *part,
+                    seed: opts.seed,
+                },
+                cfg.clone(),
+                opts.eval_cap,
+            );
+            cell.agg = rule_cfg(spec);
+            cell.corrupt = corrupt;
+            def.cell(format!("agg-{}-{spec}", part.label()), GridCell::Fed(cell));
+        }
+    }
+    let Some(report) = grid::run(def, Some(engine), &opts.grid_options())? else {
+        return Ok(()); // --dry-run
+    };
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut it = report.outcomes.iter();
+    for part in &parts {
+        for spec in &specs {
+            let out = it.next().expect("outcome per declared cell");
+            let rtt = out
+                .num("rtt")
                 .map(|r| format!("{r:.0}"))
                 .unwrap_or_else(|| "-".into());
             rows.push(vec![
                 spec.to_string(),
                 part.label().to_string(),
-                format!("{}/{}", bad.len(), fed.num_clients()),
+                format!(
+                    "{}/{}",
+                    out.int("corrupted").unwrap_or(0),
+                    out.int("clients_total").unwrap_or(0)
+                ),
                 rtt,
-                format!("{:.4}", res.final_accuracy()),
-                format!("{:.4}", res.accuracy.best_value().unwrap_or(0.0)),
+                format!("{:.4}", out.num("final_acc").unwrap_or(0.0)),
+                format!("{:.4}", out.num("best_acc").unwrap_or(0.0)),
             ]);
         }
     }
@@ -149,8 +164,9 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
     );
     println!(
         "(rules resolved by the federated::aggregate registry; per-round \
-         agg/server_state in {}/agg-*/curve.csv)",
-        opts.out_root
+         agg/server_state in {}/cells/<fingerprint>/curve.csv — the manifest \
+         under {}/grid-agg/ maps rows to cells)",
+        opts.out_root, opts.out_root
     );
     Ok(())
 }

@@ -6,20 +6,21 @@
 //! pipelines (footnote 7's compressed-updates direction, Konečný et al.)
 //! multiply in a per-round byte reduction on top — sparsified/quantized
 //! uplinks and delta downlinks — while the table tracks what that costs
-//! in rounds to the accuracy target. Every row runs the same federated
-//! workload through `federated::run` with a different
-//! [`TransportConfig`]; bytes come from the transport's single metering
-//! path, so the table's numbers equal the telemetry CSVs under `runs/`.
+//! in rounds to the accuracy target. Every row is a grid cell running
+//! the same federated workload with a different [`TransportConfig`];
+//! bytes come from the transport's single metering path, so the table's
+//! numbers equal the telemetry CSVs under `runs/cells/`.
 
 use crate::comms::transport::TransportConfig;
 use crate::comms::wire::registry_help;
 use crate::config::{BatchSize, FedConfig, Partition};
-use crate::federated::{self, ServerOptions};
 use crate::runtime::Engine;
 use crate::util::args::Args;
 use crate::Result;
 
-use super::{mnist_fed, print_table, shakespeare_fed, ExpOptions, COMMON_FLAGS};
+use super::cells::{FedCell, GridCell, Workload};
+use super::grid::{self, GridDef};
+use super::{print_table, ExpOptions, COMMON_FLAGS};
 
 /// Default codec sweep: the legacy dense baseline, framed dense, then
 /// increasingly aggressive uplink pipelines.
@@ -35,10 +36,20 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
     let down_spec = args.str_or("down", "delta");
     let part = Partition::parse(&args.str_or("partition", "iid"))?;
 
-    let fed = match model.as_str() {
-        "mnist_2nn" | "mnist_cnn" => mnist_fed(opts.scale, part, opts.seed),
-        "shakespeare_lstm" => shakespeare_fed(opts.scale, part == Partition::Natural, opts.seed),
-        other => anyhow::bail!("comm: unsupported model {other} (mnist_2nn|mnist_cnn|shakespeare_lstm)"),
+    let workload = match model.as_str() {
+        "mnist_2nn" | "mnist_cnn" => Workload::Mnist {
+            scale: opts.scale,
+            part,
+            seed: opts.seed,
+        },
+        "shakespeare_lstm" => Workload::Shakespeare {
+            scale: opts.scale,
+            natural: part == Partition::Natural,
+            seed: opts.seed,
+        },
+        other => anyhow::bail!(
+            "comm: unsupported model {other} (mnist_2nn|mnist_cnn|shakespeare_lstm)"
+        ),
     };
     let cfg = FedConfig {
         model: model.clone(),
@@ -51,18 +62,11 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
         seed: opts.seed,
         ..Default::default()
     };
-    println!(
-        "comm sweep: {} on {} ({} clients), downlink codec {:?}, codecs: {}\nregistry stages:\n{}",
-        cfg.label(),
-        fed.train.name,
-        fed.num_clients(),
-        down_spec,
-        codecs,
-        registry_help(),
-    );
 
-    let mut rows: Vec<Vec<String>> = Vec::new();
-    let mut baseline_per_round: Option<f64> = None;
+    // parse every codec spec up front (a bad --codecs entry fails before
+    // any training), preserving row order for the table
+    let mut labels: Vec<String> = Vec::new();
+    let mut def = GridDef::new("comm");
     for spec in codecs.split(',') {
         let spec = spec.trim();
         if spec.is_empty() {
@@ -76,19 +80,29 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
             let down = (down_spec != "legacy").then_some(down_spec.as_str());
             (TransportConfig::parse(Some(spec), down)?, spec.to_string())
         };
-        let mut sopts = ServerOptions {
-            transport: tcfg,
-            ..opts.server_options()
-        };
-        sopts.telemetry = Some(crate::telemetry::RunWriter::create_overwrite(
-            &opts.out_root,
-            &format!("comm-{label}"),
-        )?);
-        let res = federated::run(engine, &fed, &cfg, sopts)?;
+        let mut cell = FedCell::new(workload.clone(), cfg.clone(), opts.eval_cap);
+        cell.transport = tcfg;
+        def.cell(format!("comm-{label}"), GridCell::Fed(cell));
+        labels.push(label);
+    }
+    println!(
+        "comm sweep: {} ({} rows), downlink codec {:?}, codecs: {}\nregistry stages:\n{}",
+        cfg.label(),
+        labels.len(),
+        down_spec,
+        codecs,
+        registry_help(),
+    );
+    let Some(report) = grid::run(def, Some(engine), &opts.grid_options())? else {
+        return Ok(()); // --dry-run
+    };
 
-        let rounds = res.rounds_run.max(1);
-        let up_pr = res.comm.bytes_up as f64 / rounds as f64;
-        let down_pr = res.comm.bytes_down as f64 / rounds as f64;
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut baseline_per_round: Option<f64> = None;
+    for (label, out) in labels.into_iter().zip(&report.outcomes) {
+        let rounds = out.int("rounds_run").unwrap_or(0).max(1);
+        let up_pr = out.num("bytes_up").unwrap_or(0.0) / rounds as f64;
+        let down_pr = out.num("bytes_down").unwrap_or(0.0) / rounds as f64;
         let per_round = up_pr + down_pr;
         let reduction = match baseline_per_round {
             None => {
@@ -97,19 +111,22 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
             }
             Some(base) => base / per_round.max(1.0),
         };
-        let rtt = opts
-            .target
-            .and_then(|t| res.accuracy.rounds_to_target(t))
+        let rtt = out
+            .num("rtt")
             .map(|r| format!("{r:.0}"))
             .unwrap_or_else(|| "-".into());
+        // sum in u64 first — matches CommTotals::gigabytes bit-for-bit
+        let gigabytes = (out.int("bytes_up").unwrap_or(0) + out.int("bytes_down").unwrap_or(0))
+            as f64
+            / 1e9;
         rows.push(vec![
             label,
             format!("{:.1}", up_pr / 1e3),
             format!("{:.1}", down_pr / 1e3),
             format!("{reduction:.1}x"),
             rtt,
-            format!("{:.4}", res.final_accuracy()),
-            format!("{:.4}", res.comm.gigabytes()),
+            format!("{:.4}", out.num("final_acc").unwrap_or(0.0)),
+            format!("{gigabytes:.4}"),
         ]);
     }
     print_table(
@@ -124,8 +141,9 @@ pub fn run(engine: &Engine, args: &Args) -> Result<()> {
     );
     println!(
         "(uplink codec per row; downlink {} for all non-legacy rows — \
-         per-round details in {}/comm-*/curve.csv)",
-        down_spec, opts.out_root
+         per-round details in {}/cells/<fingerprint>/curve.csv, rows mapped \
+         by {}/grid-comm/manifest.json)",
+        down_spec, opts.out_root, opts.out_root
     );
     Ok(())
 }

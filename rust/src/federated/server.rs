@@ -93,6 +93,10 @@ pub struct ServerOptions {
     /// server reopen (and truncate) the run dir's curve, so `telemetry`
     /// must be left `None` here.
     pub resume: Option<ResumeFrom>,
+    /// Silence the per-round console line on a writer the server opens
+    /// itself (the resume path) — parallel grid cells would interleave
+    /// their chatter on stdout. Rows still land in curve.csv.
+    pub quiet_rounds: bool,
 }
 
 impl Default for ServerOptions {
@@ -110,6 +114,7 @@ impl Default for ServerOptions {
             agg: AggConfig::default(),
             checkpoint: None,
             resume: None,
+            quiet_rounds: false,
         }
     }
 }
@@ -348,7 +353,9 @@ pub fn run(
         );
         // All checks passed: this resume WILL run. Only now reopen the
         // run's curve, truncated back to the checkpointed round.
-        opts.telemetry = Some(RunWriter::reopen(&run_dir, snap.round)?);
+        let mut w = RunWriter::reopen(&run_dir, snap.round)?;
+        w.set_quiet(opts.quiet_rounds);
+        opts.telemetry = Some(w);
         theta = snap.theta;
         sampler.restore_state(snap.sampler);
         aggregator.state_load(&snap.agg.bytes)?;
@@ -599,8 +606,13 @@ pub fn run(
         // Snapshot AFTER the round's telemetry so curve.csv and the
         // checkpoint agree on "state as of round r"; resume truncates
         // the curve to this round and continues at r+1 (DESIGN.md §8).
+        // The last executed round (final round or early stop) snapshots
+        // even off-cadence — the terminal snapshot is what lets a
+        // finished run be *extended* (`--resume` with a larger
+        // `--rounds`) without replaying anything.
         if let (Some(ck), Some(dir)) = (&opts.checkpoint, &ckpt_dir) {
-            if round % ck.every == 0 {
+            let terminal = hit_target || round == cfg.rounds as u64;
+            if round % ck.every == 0 || terminal {
                 let snap = Snapshot {
                     round,
                     meta: meta.clone(),

@@ -41,8 +41,12 @@
 //! * [`runstate`] — checkpoint/resume: versioned run-state snapshots
 //!   with a bit-identical resume guarantee (crash-safe long runs).
 //! * [`runtime`] — PJRT engine over the AOT artifacts + worker pool.
-//! * [`config`], [`metrics`], [`telemetry`], [`sweep`], [`util`] —
-//!   harness plumbing; [`exper`] — the paper's tables and figures.
+//! * [`exper`] — the paper's tables and figures, declared as cells into
+//!   the restartable, parallel grid engine ([`exper::grid`] +
+//!   [`exper::cells`], DESIGN.md §9); [`sweep`] — the lr-grid
+//!   methodology on the same engine.
+//! * [`config`], [`metrics`], [`telemetry`], [`util`] — harness
+//!   plumbing.
 
 pub mod baselines;
 pub mod comms;

@@ -42,6 +42,7 @@ fn real_main() -> Result<()> {
         "table4" => exper::table4::run(&engine()?, &args),
         "comm" => exper::table_comm::run(&engine()?, &args),
         "agg" => exper::table_agg::run(&engine()?, &args),
+        "sweep" => fedavg::sweep::run_cli(&engine()?, &args),
         "figure" | "figures" => exper::figures::run(&engine()?, &args),
         "run" => cmd_run(&args),
         "fleet" => cmd_fleet(&args),
@@ -306,7 +307,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "config", "model", "c", "e", "b", "lr", "lr-decay", "rounds", "eval-every",
         "target", "partition", "scale", "eval-cap", "seed", "out", "name",
         "track-train-loss", "fleet-profile", "overselect", "deadline", "workers",
-        "step-cost", "clients", "sim-only", "model-bytes", "steps", "codec",
+        "step-cost", "clients", "sim-only", "start-round", "model-bytes", "steps", "codec",
         "down-codec", "topk", "quant-bits", "agg", "server-lr", "server-momentum",
         "prox-mu", "checkpoint-every", "checkpoint-keep", "resume", "overwrite",
     ])?;
@@ -370,6 +371,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         return cmd_fleet_sim(args, &cfg, &fleet);
     }
 
+    if args.has("start-round") {
+        bail!(
+            "--start-round fast-forwards the training-free simulation only \
+             (--sim-only); a training run continues from a checkpoint via --resume"
+        );
+    }
     for f in ["clients", "model-bytes", "steps"] {
         if args.has(f) {
             println!(
@@ -437,6 +444,13 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
     if !steps.is_finite() || steps < 0.0 {
         bail!("--steps must be a non-negative local step count");
     }
+    let start_round = args.u64_or("start-round", 1)?;
+    if start_round < 1 || start_round > cfg.rounds as u64 {
+        bail!(
+            "--start-round must be in 1..={} (the sim's --rounds), got {start_round}",
+            cfg.rounds
+        );
+    }
     let mut sim = FleetSim::new(fleet, k, m, model_bytes, steps, cfg.seed)?;
     let name = args.str_or("name", &format!("fleet-sim-{}-k{k}", fleet.profile.label()));
     let out = args.str_or("out", "runs");
@@ -459,7 +473,21 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
         steps,
         cfg.rounds,
     );
-    for _ in 0..cfg.rounds {
+    if start_round > 1 {
+        // each sim round is a pure function of (seed, round): scheduling
+        // for the skipped prefix is recomputed into the totals, but
+        // nothing is re-recorded or re-printed (DESIGN.md §8)
+        let t = sim.fast_forward(start_round);
+        println!(
+            "fast-forwarded rounds 1..{start_round}: {} dispatched, {} aggregated, \
+             {} dropped, sim {:.1}h",
+            t.fleet.dispatched,
+            t.fleet.completed,
+            t.fleet.dropped_stragglers,
+            t.sim_seconds / 3600.0,
+        );
+    }
+    for _ in start_round..=cfg.rounds as u64 {
         let r = sim.step();
         w.record(&FleetRoundRecord {
             round: r.round,
@@ -578,7 +606,12 @@ USAGE:
   fedavg agg    [--aggs a1,a2,..] [--corrupt FRAC] [--partitions iid,noniid]
              [--target A] [--model M] [--scale F] [--rounds N]
              [--server-lr F] [--server-momentum B] [--prox-mu MU]
+  fedavg sweep  [--center F] [--points N] [--res 3|6] [--model M]
+             [--partition P] [--c F] [--e N] [--b N|inf] [--target A]
   fedavg figure <N|all> [--scale F] [--rounds N]
+    every sweep subcommand above also takes the uniform grid flags:
+             [--workers N] [--resume] [--dry-run] [--overwrite]
+             [--checkpoint-every N] [--checkpoint-keep K]
   fedavg run [--config FILE] [--model M] [--c F] [--e N] [--b N|inf]
              [--lr F] [--rounds N] [--partition iid|noniid|unbalanced|natural]
              [--availability P] [--target A] [--track-train-loss]
@@ -590,7 +623,8 @@ USAGE:
   fedavg run --resume runs/<name> [--rounds N] [+ the original run's flags]
   fedavg fleet [--fleet-profile uniform|mobile|flaky] [--overselect RHO]
              [--deadline SECONDS] [--workers N] [--clients K] [--sim-only]
-             [--step-cost S] [--model-bytes B] [--steps U] [+ run flags]
+             [--start-round R] [--step-cost S] [--model-bytes B] [--steps U]
+             [+ run flags]
   fedavg oneshot [--model M] [--e N]
   fedavg info
 
@@ -617,7 +651,22 @@ across IID/non-IID partitions with label-corrupted clients.
 (bandwidth/compute/diurnal availability), over-selection with straggler
 drops, round deadlines, and parallel client updates. Without artifacts
 (or with --sim-only) it runs the training-free event-queue simulation —
-10k clients by default, 100k+ fine.
+10k clients by default, 100k+ fine. `--start-round R` fast-forwards the
+simulation: rounds 1..R fold into the totals without being re-recorded
+(each round is a pure function of the seed).
+
+Sweeps run on the grid engine (DESIGN.md S9): every cell (one table row
+x partition, one figure series, one lr point) is a fingerprinted config
+with its own run dir under runs/cells/<fingerprint>/, tracked by an
+atomically-updated manifest under runs/grid-<name>/. Killing a sweep and
+rerunning the same command skips finished cells and resumes in-flight
+ones (with --checkpoint-every, mid-cell); the reprinted tables and every
+curve.csv are byte-identical to an uninterrupted run. Identical cells
+across sweeps run once and are reused as cache hits. --workers N runs
+cells in parallel (one PJRT engine per worker thread; tables are
+assembled after completion, so output is order-independent). --dry-run
+lists cells and their cached status; --resume requires the manifest to
+exist; --overwrite replaces a manifest left by a different command.
 
 Crash safety: --checkpoint-every N snapshots the complete run state
 (model, optimizer moments, RNG streams, error-feedback residuals, model

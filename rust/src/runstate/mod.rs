@@ -37,6 +37,11 @@
 //! mid-round replays that round from its start (mid-round preemption is
 //! a ROADMAP open item).
 //!
+//! Snapshots follow the `--checkpoint-every` cadence, **plus** a
+//! terminal snapshot at the last executed round (final round or early
+//! stop): a finished run can be *extended* — `--resume` with a larger
+//! `--rounds` — without replaying a single round.
+//!
 //! On resume the snapshot's [`RunMeta`] fingerprint is checked against
 //! the current invocation (model/C/E/B/lr label, aggregation rule, codec
 //! pair, seed, client count, parameter count, lr decay, eval cadence) so
@@ -44,6 +49,11 @@
 //! configuration, and [`RunWriter::reopen`](crate::telemetry::RunWriter::reopen)
 //! truncates `curve.csv` back to the checkpointed round so the curve
 //! never contains rows from a lost future.
+//!
+//! The building blocks are shared: [`atomic_write`] (tmp + fsync +
+//! rename) and the [`fnv1a64`] fingerprint hash also back the grid
+//! engine's sweep manifests ([`exper::grid`](crate::exper::grid),
+//! DESIGN.md §9).
 //!
 //! [`ClientSampler`]: crate::federated::ClientSampler
 //! [`Aggregator::state_save`]: crate::federated::aggregate::Aggregator::state_save
@@ -54,7 +64,8 @@
 mod snapshot;
 
 pub use snapshot::{
-    checkpoint_dir, AggState, CurveState, FleetState, RunMeta, Snapshot, MAGIC, SNAP_VERSION,
+    atomic_write, checkpoint_dir, fnv1a64, AggState, CurveState, FleetState, RunMeta, Snapshot,
+    MAGIC, SNAP_VERSION,
 };
 
 /// A resume request carried in

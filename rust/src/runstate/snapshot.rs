@@ -7,7 +7,7 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic  "FCKP"
-//!      4     1  format version (1)
+//!      4     1  format version (2)
 //!      5     3  reserved (zero)
 //!      8     8  round the snapshot was taken after
 //!     16     8  payload length in bytes
@@ -23,10 +23,23 @@
 //! is the property the resume path depends on: a snapshot either loads
 //! completely or not at all.
 //!
+//! Format v2 shrinks the TRANSPORT section: the model-store ring used to
+//! hold up to `store_cap` *dense* θ copies; now only the newest retained
+//! version is stored dense (as a self-describing wire frame), and every
+//! older version ships as an overwrite patch against it through the
+//! transport's own delta machinery ([`comms::wire`](crate::comms::wire)),
+//! with a dense fallback when the patch would not be smaller. Patches
+//! carry raw f32 replacement values, so reconstruction is bit-exact
+//! (regression-tested in `rust/tests/runstate.rs`). v1 snapshots are
+//! refused — they are crash-recovery artifacts, not archives, and the
+//! next checkpoint cadence rewrites them.
+//!
 //! Writes go to `<file>.tmp` first, are fsynced, and are renamed into
-//! place — a crash mid-write leaves at worst a stale `.tmp` that the
-//! loader never looks at. After each successful write the oldest
-//! snapshots beyond the keep-last-K budget are deleted.
+//! place ([`atomic_write`]) — a crash mid-write leaves at worst a stale
+//! `.tmp` that the loader never looks at. After each successful write
+//! the oldest snapshots beyond the keep-last-K budget are deleted. The
+//! same [`atomic_write`] + [`fnv1a64`] machinery backs the grid engine's
+//! manifest and cell records ([`exper::grid`](crate::exper::grid)).
 
 use std::fs::File;
 use std::io::Write as _;
@@ -34,9 +47,10 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Context as _;
 
+use crate::comms::wire::{decode_frame, FrameHeader, Pipeline, Repr};
 use crate::comms::{CommState, TransportState};
 use crate::coordinator::FleetTotals;
-use crate::data::rng::RngState;
+use crate::data::rng::{Rng, RngState};
 use crate::params::ParamVec;
 use crate::privacy::MechState;
 use crate::util::bytes::{ByteReader, ByteWriter};
@@ -44,8 +58,8 @@ use crate::Result;
 
 /// Snapshot magic: `b"FCKP"` read as a little-endian u32.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"FCKP");
-/// Current snapshot-format version.
-pub const SNAP_VERSION: u8 = 1;
+/// Current snapshot-format version (2 = delta-encoded model ring).
+pub const SNAP_VERSION: u8 = 2;
 /// Fixed header size.
 const HEADER_BYTES: usize = 32;
 
@@ -138,15 +152,36 @@ pub fn checkpoint_dir(run_dir: impl AsRef<Path>) -> PathBuf {
     run_dir.as_ref().join("checkpoints")
 }
 
-/// FNV-1a 64 over the payload — cheap, dependency-free corruption check
-/// (bit flips, torn writes the length test cannot see).
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// FNV-1a 64 — cheap, dependency-free hash shared by the snapshot
+/// payload checksum (bit flips, torn writes the length test cannot see)
+/// and the grid engine's config fingerprints
+/// ([`exper::grid`](crate::exper::grid)).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }
     h
+}
+
+/// Write `bytes` to `path` atomically: `<path>.tmp` + fsync + rename. A
+/// crash mid-write leaves at worst a stale `.tmp` that readers never
+/// consider. Shared by the snapshot writer and the grid engine's
+/// manifest/cell records.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".tmp");
+        PathBuf::from(os)
+    };
+    {
+        let mut f = File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        f.write_all(bytes)?;
+        f.sync_all().with_context(|| format!("fsync {tmp:?}"))?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("rename into {path:?}"))?;
+    Ok(())
 }
 
 fn put_rng(w: &mut ByteWriter, st: &RngState) {
@@ -187,6 +222,64 @@ fn get_curve(r: &mut ByteReader<'_>) -> Result<Vec<(u64, f64)>> {
         "corrupt curve length {n}"
     );
     (0..n).map(|_| Ok((r.u64()?, r.f64()?))).collect()
+}
+
+/// Encode the model-store ring (oldest first): each entry is its version
+/// plus a self-describing wire frame — the newest dense, older versions
+/// as overwrite patches against it via the transport's `delta` stage,
+/// falling back to dense when the patch would not be smaller (the same
+/// rule the delta downlink applies). Snapshot size then scales with
+/// round-to-round model change, not `store_cap · dim`.
+fn encode_ring(w: &mut ByteWriter, versions: &[(u64, ParamVec)]) {
+    w.put_u64(versions.len() as u64);
+    let Some((newest_v, newest)) = versions.last() else {
+        return;
+    };
+    let delta = Pipeline::parse("delta").expect("registry `delta` stage");
+    // the delta/dense stages are deterministic and never draw from the
+    // stream; the pipeline API just threads one through for `q<b>`
+    let mut rng = Rng::new(0);
+    let dense_bytes = Repr::dense(newest).wire_bytes();
+    for (v, theta) in versions {
+        w.put_u64(*v);
+        let patch_wins = v != newest_v
+            && delta
+                .measure(theta, Some(newest.as_slice()))
+                .map_or(false, |b| b < dense_bytes);
+        let frame = if patch_wins {
+            delta
+                .run(theta, Some((*newest_v, newest.as_slice())), &mut rng)
+                .expect("ring invariant: retained versions share the model dim")
+                .to_frame()
+        } else {
+            Repr::dense(theta).to_frame()
+        };
+        w.put_bytes(&frame.bytes);
+    }
+}
+
+/// Decode [`encode_ring`]'s layout: the newest (last) entry must be a
+/// dense frame; older entries decode against it, their patch base
+/// version cross-checked. Bit-exact by construction — patches carry raw
+/// f32 replacement values.
+fn decode_ring(raw: &[(u64, &[u8])]) -> Result<Vec<(u64, ParamVec)>> {
+    let Some((newest_v, newest_bytes)) = raw.last() else {
+        return Ok(Vec::new());
+    };
+    let newest =
+        decode_frame(newest_bytes, None).context("model ring: newest frame must be dense")?;
+    let mut out = Vec::with_capacity(raw.len());
+    for (v, bytes) in &raw[..raw.len() - 1] {
+        let h = FrameHeader::parse(bytes)?;
+        anyhow::ensure!(
+            !h.delta || h.base_version == *newest_v,
+            "model ring: version {v} patches base {}, newest is {newest_v}",
+            h.base_version
+        );
+        out.push((*v, decode_frame(bytes, Some(newest.as_slice()))?));
+    }
+    out.push((*newest_v, newest));
+    Ok(out)
 }
 
 impl Snapshot {
@@ -236,11 +329,7 @@ impl Snapshot {
         for resid in &self.transport.feedback {
             w.put_f32s(resid);
         }
-        w.put_u64(self.transport.versions.len() as u64);
-        for (v, theta) in &self.transport.versions {
-            w.put_u64(*v);
-            w.put_f32s(theta);
-        }
+        encode_ring(&mut w, &self.transport.versions);
         w.put_u64s(&self.transport.acked);
         Self::section(&mut out, SEC_TRANSPORT, w);
 
@@ -292,7 +381,7 @@ impl Snapshot {
         out.extend_from_slice(&[0u8; 3]);
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-        out.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
         out.extend_from_slice(&payload);
         out
     }
@@ -325,7 +414,7 @@ impl Snapshot {
             buf.len() - HEADER_BYTES
         );
         let payload = &buf[HEADER_BYTES..];
-        let sum = fnv1a(payload);
+        let sum = fnv1a64(payload);
         anyhow::ensure!(
             sum == stored_sum,
             "snapshot checksum mismatch ({sum:#018x} vs {stored_sum:#018x}): corrupt file"
@@ -399,9 +488,10 @@ impl Snapshot {
                         nv.checked_mul(16).map_or(false, |x| x <= b.remaining()),
                         "corrupt version count {nv}"
                     );
-                    let versions = (0..nv)
-                        .map(|_| Ok((b.u64()?, b.f32s()?)))
+                    let raw = (0..nv)
+                        .map(|_| Ok((b.u64()?, b.bytes()?)))
                         .collect::<Result<Vec<_>>>()?;
+                    let versions = decode_ring(&raw)?;
                     let acked = b.u64s()?;
                     transport = Some(TransportState {
                         rng,
@@ -482,20 +572,13 @@ impl Snapshot {
     // --------------------------------------------------------------- io
 
     /// Write the snapshot atomically into `ckpt_dir` as
-    /// `ckpt-<round>.bin` (tmp + fsync + rename), then prune to the
-    /// newest `keep` snapshots. Returns the final path.
+    /// `ckpt-<round>.bin` ([`atomic_write`]: tmp + fsync + rename), then
+    /// prune to the newest `keep` snapshots. Returns the final path.
     pub fn write(&self, ckpt_dir: &Path, keep: usize) -> Result<PathBuf> {
         anyhow::ensure!(keep >= 1, "checkpoint rotation must keep >= 1");
         std::fs::create_dir_all(ckpt_dir).with_context(|| format!("mkdir {ckpt_dir:?}"))?;
-        let bytes = self.to_bytes();
         let path = ckpt_dir.join(format!("ckpt-{:010}.bin", self.round));
-        let tmp = ckpt_dir.join(format!("ckpt-{:010}.bin.tmp", self.round));
-        {
-            let mut f = File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
-            f.write_all(&bytes)?;
-            f.sync_all().with_context(|| format!("fsync {tmp:?}"))?;
-        }
-        std::fs::rename(&tmp, &path).with_context(|| format!("rename into {path:?}"))?;
+        atomic_write(&path, &self.to_bytes())?;
         for (_, old) in list(ckpt_dir)?.iter().rev().skip(keep) {
             std::fs::remove_file(old).ok(); // best-effort prune
         }

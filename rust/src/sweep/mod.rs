@@ -4,15 +4,26 @@
 //! picking the best rate per configuration and *checking the optimum is
 //! interior to the grid*.
 //!
-//! Used standalone (`examples/lr_sweep.rs`) or under the experiment
-//! drivers in [`exper`](crate::exper); each grid point is a full
-//! [`federated::run`](crate::federated::run), so sweeps inherit every
-//! harness feature (telemetry, fleet, transport codecs).
+//! Two entry points share the [`LrGrid`] and selection rule:
+//!
+//! * [`run_cli`] — the `fedavg sweep` subcommand: each η is a
+//!   fingerprinted cell in the [grid engine](crate::exper::grid), so the
+//!   sweep is restartable (`--resume`), parallel (`--workers`), and
+//!   deduplicated against every other grid's cells (DESIGN.md §9);
+//! * [`sweep_lr`] — the in-process library path (`examples/lr_sweep.rs`)
+//!   over an already-built [`Federated`] workload, for callers composing
+//!   their own harness. Each grid point is a full
+//!   [`federated::run`](crate::federated::run), so both paths inherit
+//!   every harness feature (telemetry, fleet, transport codecs).
 
-use crate::config::FedConfig;
+use crate::config::{BatchSize, FedConfig, Partition};
 use crate::data::Federated;
+use crate::exper::cells::{FedCell, GridCell, Workload};
+use crate::exper::grid::{self, GridDef};
+use crate::exper::{print_table, ExpOptions, COMMON_FLAGS};
 use crate::federated::{self, RunResult, ServerOptions};
 use crate::runtime::Engine;
+use crate::util::args::Args;
 use crate::Result;
 
 /// A multiplicative learning-rate grid centered at `center`.
@@ -49,6 +60,116 @@ pub struct SweepResult {
     /// true iff the best lr is strictly interior to the grid (the paper's
     /// sanity check that the grid was wide enough).
     pub interior: bool,
+}
+
+/// `fedavg sweep` — the lr grid as a restartable, parallel grid of
+/// cells: `--center/--points/--res` shape the multiplicative grid,
+/// `--model/--partition/--c/--e/--b` the configuration under tune, and
+/// the uniform sweep flags (`--workers/--resume/--dry-run/...`) come
+/// from [`ExpOptions`].
+pub fn run_cli(engine: &Engine, args: &Args) -> Result<()> {
+    args.check_known(
+        &[COMMON_FLAGS, &["center", "points", "res", "model", "partition", "c", "e", "b"]]
+            .concat(),
+    )?;
+    let opts = ExpOptions::from_args(args)?;
+    let center = args.f64_or("center", 0.1)?;
+    let points = args.usize_or("points", 5)?;
+    let res_den = args.usize_or("res", 3)? as u32;
+    anyhow::ensure!(points >= 1 && res_den >= 1, "--points and --res must be >= 1");
+    let model = args.str_or("model", "mnist_2nn");
+    let part = Partition::parse(&args.str_or("partition", "iid"))?;
+    let workload = match model.as_str() {
+        "mnist_2nn" | "mnist_cnn" => Workload::Mnist {
+            scale: opts.scale,
+            part,
+            seed: opts.seed,
+        },
+        "cifar_cnn" => Workload::Cifar {
+            scale: opts.scale,
+            seed: opts.seed,
+        },
+        "shakespeare_lstm" => Workload::Shakespeare {
+            scale: opts.scale,
+            natural: part == Partition::Natural,
+            seed: opts.seed,
+        },
+        "word_lstm" => Workload::Social {
+            scale: opts.scale,
+            seed: opts.seed,
+        },
+        other => anyhow::bail!("sweep: unknown model {other}"),
+    };
+    let base = FedConfig {
+        model: model.clone(),
+        c: args.f64_or("c", 0.1)?,
+        e: args.usize_or("e", 1)?,
+        b: BatchSize::parse(&args.str_or("b", "10"))?,
+        rounds: opts.rounds,
+        target_accuracy: opts.target,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let lr_grid = LrGrid::new(center, res_den, points);
+    println!(
+        "lr sweep: {} — η over {:?} (10^(1/{res_den}) grid, paper §3 methodology)",
+        base.label(),
+        lr_grid
+            .values
+            .iter()
+            .map(|v| format!("{v:.4}"))
+            .collect::<Vec<_>>()
+    );
+
+    // per-model grid name: tuning several models in sequence must not
+    // trip the stale-manifest refusal (cells dedupe via the shared pool
+    // regardless)
+    let mut def = GridDef::new(format!("sweep-{model}"));
+    for &lr in &lr_grid.values {
+        let cfg = FedConfig { lr, ..base.clone() };
+        def.cell(
+            format!("sweep-{model}-lr{lr}"),
+            GridCell::Fed(FedCell::new(workload.clone(), cfg, opts.eval_cap)),
+        );
+    }
+    let Some(report) = grid::run(def, Some(engine), &opts.grid_options())? else {
+        return Ok(()); // --dry-run
+    };
+
+    let mut rows = Vec::new();
+    let mut best: Option<(usize, (Option<f64>, f64))> = None;
+    for (i, (&lr, out)) in lr_grid.values.iter().zip(&report.outcomes).enumerate() {
+        let rtt = out.num("rtt");
+        let fin = out.num("final_acc").unwrap_or(0.0);
+        rows.push(vec![
+            format!("{lr:.4}"),
+            rtt.map(|r| format!("{r:.1}")).unwrap_or_else(|| "—".into()),
+            format!("{fin:.4}"),
+        ]);
+        if best.map_or(true, |(_, b)| better((rtt, fin), b)) {
+            best = Some((i, (rtt, fin)));
+        }
+    }
+    let (bi, (_, best_fin)) = best.expect("at least one grid point");
+    print_table(
+        &format!(
+            "LR sweep — {} (target {}, scale {})",
+            base.label(),
+            opts.target
+                .map(|t| format!("{:.0}%", t * 100.0))
+                .unwrap_or_else(|| "none".into()),
+            opts.scale
+        ),
+        &["lr", "rds-to-target", "final acc"],
+        &rows,
+    );
+    let interior = bi > 0 && bi + 1 < lr_grid.values.len();
+    println!(
+        "best η = {:.4} (final acc {best_fin:.4}); optimum interior to grid: {}",
+        lr_grid.values[bi],
+        if interior { "yes ✓" } else { "NO — widen the grid" }
+    );
+    Ok(())
 }
 
 /// Score used for selection: fewest rounds to target if a target is set

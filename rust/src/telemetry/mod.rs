@@ -65,13 +65,18 @@ pub struct RoundRecord<'a> {
     pub server_state: &'a str,
 }
 
+/// Sanitize a run/grid name for use as a directory component — the one
+/// rule shared by the run writers and the grid engine's grid dirs
+/// (`exper::grid`).
+pub fn sanitize_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_alphanumeric() || c == '-' || c == '_' || c == '.' { c } else { '_' })
+        .collect()
+}
+
 /// Sanitize `name` and create `<root>/<name>/`. Shared by both writers.
 fn run_dir(root: impl AsRef<Path>, name: &str) -> Result<PathBuf> {
-    let safe: String = name
-        .chars()
-        .map(|c| if c.is_alphanumeric() || c == '-' || c == '_' || c == '.' { c } else { '_' })
-        .collect();
-    let dir = root.as_ref().join(safe);
+    let dir = root.as_ref().join(sanitize_name(name));
     std::fs::create_dir_all(&dir).with_context(|| format!("mkdir {dir:?}"))?;
     Ok(dir)
 }
@@ -116,6 +121,29 @@ impl RunWriter {
                 .with_context(|| format!("clearing stale {ckpts:?}"))?;
         }
         Self::open_fresh(dir)
+    }
+
+    /// Open `dir` itself as a fresh run dir — for callers that key run
+    /// dirs directly (the grid engine's fingerprint-keyed cell dirs,
+    /// `exper::grid`). Overwrite semantics of
+    /// [`create_overwrite`](Self::create_overwrite): a stale curve is
+    /// replaced and leftover checkpoints are cleared.
+    pub fn create_dir_overwrite(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).with_context(|| format!("mkdir {dir:?}"))?;
+        let ckpts = dir.join("checkpoints");
+        if ckpts.exists() {
+            std::fs::remove_dir_all(&ckpts)
+                .with_context(|| format!("clearing stale {ckpts:?}"))?;
+        }
+        Self::open_fresh(dir)
+    }
+
+    /// Silence the per-round console line (parallel grid cells would
+    /// interleave); rows still land in curve.csv. Additive with the
+    /// `FEDAVG_QUIET` env var — neither can unmute the other.
+    pub fn set_quiet(&mut self, quiet: bool) {
+        self.quiet = self.quiet || quiet;
     }
 
     fn open_fresh(dir: PathBuf) -> Result<Self> {

@@ -1,0 +1,258 @@
+//! Grid-engine resume regression suite (DESIGN.md §9).
+//!
+//! The core guarantee under test: **killing a grid mid-run and rerunning
+//! the same command produces byte-identical outputs** — the manifest,
+//! every cell's artifacts, and the outcome rows the drivers format
+//! tables from — versus a grid that was never interrupted. The cells
+//! here are synthetic (engine-free) so the whole engine surface runs
+//! under plain `cargo test`: execution, the shared cell cache, in-grid
+//! aliases, worker pools, dry runs, and the two refusal paths (a stale
+//! manifest from a different command; a cell dir whose record does not
+//! match the declared fingerprint/spec).
+
+use std::path::{Path, PathBuf};
+
+use fedavg::exper::grid::{self, CellCtx, CellOutcome, CellWork, GridDef, GridOptions, Series};
+use fedavg::runstate::atomic_write;
+use fedavg::runtime::Engine;
+use fedavg::Result;
+
+/// Deterministic engine-free cell: writes a curve.csv derived from its
+/// id and reports a summary + series. `fail` injects a crash for the
+/// kill-mid-grid scenarios — deliberately *not* part of the spec, the
+/// same way a real SIGKILL is not part of a training config.
+struct SynthCell {
+    id: u64,
+    fail: bool,
+}
+
+impl SynthCell {
+    fn ok(id: u64) -> SynthCell {
+        SynthCell { id, fail: false }
+    }
+}
+
+impl CellWork for SynthCell {
+    fn spec(&self) -> String {
+        format!("synth id={}", self.id)
+    }
+
+    fn needs_engine(&self) -> bool {
+        false
+    }
+
+    fn run(&self, _engine: Option<&Engine>, ctx: &CellCtx) -> Result<CellOutcome> {
+        anyhow::ensure!(!self.fail, "injected mid-grid crash (cell {})", self.id);
+        std::fs::create_dir_all(&ctx.dir)?;
+        let mut csv = String::from("round,value\n");
+        let mut pts: Series = Vec::new();
+        for r in 1..=5u64 {
+            let v = (self.id * 100 + r) as f64 * 0.5;
+            csv.push_str(&format!("{r},{v}\n"));
+            pts.push((r as f64, v));
+        }
+        atomic_write(&ctx.dir.join("curve.csv"), csv.as_bytes())?;
+        let mut out = CellOutcome::default();
+        out.put("id", self.id);
+        out.put("final", pts.last().unwrap().1);
+        out.curves.push(("series".into(), pts));
+        Ok(out)
+    }
+}
+
+fn test_root(tag: &str) -> PathBuf {
+    let root = PathBuf::from(format!("target/test-runs/grid-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    root
+}
+
+fn opts(root: &Path, workers: usize) -> GridOptions {
+    GridOptions {
+        out_root: root.to_str().unwrap().to_string(),
+        workers,
+        ..Default::default()
+    }
+}
+
+fn def_of(ids: &[(u64, bool)]) -> GridDef<SynthCell> {
+    let mut def = GridDef::new("smoke");
+    for &(id, fail) in ids {
+        def.cell(format!("cell-{id}"), SynthCell { id, fail });
+    }
+    def
+}
+
+/// Every artifact the byte-identity guarantee covers, as bytes.
+fn artifacts(root: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut out = vec![(
+        "manifest".to_string(),
+        std::fs::read(root.join("grid-smoke/manifest.json")).expect("manifest"),
+    )];
+    let mut dirs: Vec<PathBuf> = std::fs::read_dir(root.join("cells"))
+        .expect("cells pool")
+        .map(|e| e.unwrap().path())
+        .collect();
+    dirs.sort();
+    for d in dirs {
+        for f in ["cell.json", "curve.csv"] {
+            out.push((
+                format!("{}/{f}", d.file_name().unwrap().to_str().unwrap()),
+                std::fs::read(d.join(f)).unwrap_or_else(|_| panic!("missing {f} in {d:?}")),
+            ));
+        }
+    }
+    out
+}
+
+#[test]
+fn killed_grid_rerun_is_byte_identical() {
+    let ids: Vec<(u64, bool)> = (1..=4).map(|i| (i, false)).collect();
+
+    // reference: one uninterrupted run
+    let clean = test_root("clean");
+    let report = grid::run(def_of(&ids), None, &opts(&clean, 1))
+        .unwrap()
+        .expect("not a dry run");
+    assert_eq!(report.executed, 4);
+    assert_eq!(report.cache_hits, 0);
+
+    // killed: cell 3 crashes; inline execution stops there with cells
+    // 1-2 recorded durably
+    let killed = test_root("killed");
+    let mut broken = ids.clone();
+    broken[2].1 = true;
+    let err = grid::run(def_of(&broken), None, &opts(&killed, 1)).unwrap_err();
+    assert!(format!("{err:#}").contains("injected"), "{err:#}");
+    assert!(killed.join("grid-smoke/manifest.json").exists());
+
+    // rerun the same command: done cells skip, the rest executes
+    let report = grid::run(def_of(&ids), None, &opts(&killed, 1))
+        .unwrap()
+        .expect("not a dry run");
+    assert_eq!(report.executed, 2, "cells 3 and 4 remained");
+    assert_eq!(report.cache_hits, 2, "cells 1 and 2 were reused");
+
+    // byte-identity: manifest + every cell's record and curve
+    let a = artifacts(&clean);
+    let b = artifacts(&killed);
+    assert_eq!(a.len(), b.len());
+    for ((name, bytes_a), (_, bytes_b)) in a.iter().zip(&b) {
+        assert_eq!(bytes_a, bytes_b, "{name} differs between clean and resumed grids");
+    }
+
+    // and the outcome rows (the table inputs) match a fresh run's
+    let again = grid::run(def_of(&ids), None, &opts(&clean, 1))
+        .unwrap()
+        .expect("not a dry run");
+    assert_eq!(again.executed, 0, "fully cached rerun");
+    assert_eq!(again.outcomes, report.outcomes);
+    std::fs::remove_dir_all(clean).ok();
+    std::fs::remove_dir_all(killed).ok();
+}
+
+#[test]
+fn parallel_workers_match_serial_bytes() {
+    let ids: Vec<(u64, bool)> = (1..=6).map(|i| (i, false)).collect();
+    let serial = test_root("serial");
+    let parallel = test_root("parallel");
+    let rs = grid::run(def_of(&ids), None, &opts(&serial, 1))
+        .unwrap()
+        .expect("not a dry run");
+    let rp = grid::run(def_of(&ids), None, &opts(&parallel, 3))
+        .unwrap()
+        .expect("not a dry run");
+    // outcomes come back in declaration order regardless of completion
+    assert_eq!(rs.outcomes, rp.outcomes);
+    for (i, out) in rp.outcomes.iter().enumerate() {
+        assert_eq!(out.get("id"), Some(format!("{}", i + 1).as_str()));
+    }
+    let a = artifacts(&serial);
+    let b = artifacts(&parallel);
+    for ((name, bytes_a), (_, bytes_b)) in a.iter().zip(&b) {
+        assert_eq!(bytes_a, bytes_b, "{name} differs between workers=1 and workers=3");
+    }
+    std::fs::remove_dir_all(serial).ok();
+    std::fs::remove_dir_all(parallel).ok();
+}
+
+#[test]
+fn mismatched_cell_record_refused() {
+    let root = test_root("cellfp");
+    let ids = [(7u64, false)];
+    grid::run(def_of(&ids), None, &opts(&root, 1)).unwrap();
+    // doctor the record's fingerprint: the dir no longer matches what
+    // the declaration expects
+    let dir = std::fs::read_dir(root.join("cells"))
+        .unwrap()
+        .next()
+        .unwrap()
+        .unwrap()
+        .path();
+    let record = dir.join("cell.json");
+    let doctored = std::fs::read_to_string(&record)
+        .unwrap()
+        .replace("synth id=7", "synth id=8");
+    std::fs::write(&record, doctored).unwrap();
+    let err = grid::run(def_of(&ids), None, &opts(&root, 1)).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("refusing to reuse"),
+        "wanted a reuse refusal, got: {err:#}"
+    );
+    std::fs::remove_dir_all(root).ok();
+}
+
+#[test]
+fn stale_manifest_refused_unless_overwritten() {
+    let root = test_root("manifest");
+    grid::run(def_of(&[(1, false), (2, false)]), None, &opts(&root, 1)).unwrap();
+    // same grid name, different cell set: a different command
+    let changed = [(1u64, false), (3u64, false)];
+    let err = grid::run(def_of(&changed), None, &opts(&root, 1)).unwrap_err();
+    assert!(format!("{err:#}").contains("--overwrite"), "{err:#}");
+    // --overwrite replaces the manifest; cached cell 1 still hits
+    let mut o = opts(&root, 1);
+    o.overwrite = true;
+    let report = grid::run(def_of(&changed), None, &o)
+        .unwrap()
+        .expect("not a dry run");
+    assert_eq!(report.executed, 1, "only the new cell runs");
+    assert_eq!(report.cache_hits, 1, "cell 1 reused across commands");
+    std::fs::remove_dir_all(root).ok();
+}
+
+#[test]
+fn resume_requires_manifest_and_dry_run_is_readonly() {
+    let root = test_root("flags");
+    let mut o = opts(&root, 1);
+    o.resume = true;
+    let err = grid::run(def_of(&[(1, false)]), None, &o).unwrap_err();
+    assert!(format!("{err:#}").contains("no manifest"), "{err:#}");
+
+    let mut o = opts(&root, 1);
+    o.dry_run = true;
+    let report = grid::run(def_of(&[(1, false)]), None, &o).unwrap();
+    assert!(report.is_none(), "dry run returns no report");
+    assert!(!root.join("cells").exists(), "dry run created cell dirs");
+    assert!(
+        !root.join("grid-smoke").exists(),
+        "dry run touched the manifest"
+    );
+    std::fs::remove_dir_all(root).ok();
+}
+
+#[test]
+fn identical_specs_alias_to_one_execution() {
+    let root = test_root("alias");
+    let mut def = GridDef::new("smoke");
+    def.cell("first", SynthCell::ok(9));
+    def.cell("second", SynthCell::ok(9)); // same spec, different name
+    def.cell("third", SynthCell::ok(10));
+    let report = grid::run(def, None, &opts(&root, 1))
+        .unwrap()
+        .expect("not a dry run");
+    assert_eq!(report.executed, 2, "the duplicate spec must not re-run");
+    assert_eq!(report.cache_hits, 1);
+    assert_eq!(report.outcomes[0], report.outcomes[1]);
+    assert_ne!(report.outcomes[0], report.outcomes[2]);
+    std::fs::remove_dir_all(root).ok();
+}

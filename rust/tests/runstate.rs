@@ -499,6 +499,187 @@ fn restore_rejects_mismatched_configurations() {
     std::fs::remove_dir_all(root).ok();
 }
 
+// ------------------------------------------------- ring delta encoding
+
+/// Snapshot format v2: the model-store ring keeps only the newest θ
+/// dense; older retained versions ship as overwrite patches against it
+/// through the transport's own delta machinery. Reload must be
+/// bit-exact, and a ring whose versions differ sparsely must shrink the
+/// snapshot substantially versus dense-divergent versions (which take
+/// the dense fallback).
+#[test]
+fn snapshot_ring_delta_is_bit_exact_and_smaller() {
+    let dim = 4000usize;
+    let base: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.01).sin()).collect();
+    let sparse_version = |v: u64, changed: usize| -> Vec<f32> {
+        let mut t = base.clone();
+        for j in 0..changed {
+            t[(j * 37) % dim] = v as f32 + j as f32 * 0.5;
+        }
+        t
+    };
+
+    // sparse ring: old versions differ from the newest on ~1% of coords
+    let mut snap = rich_snapshot("ringdelta", 3);
+    snap.transport.versions = vec![
+        (1, sparse_version(1, 40)),
+        (2, sparse_version(2, 60)),
+        (3, base.clone()),
+    ];
+    let sparse_bytes = snap.to_bytes();
+    assert_eq!(
+        Snapshot::from_bytes(&sparse_bytes).unwrap(),
+        snap,
+        "delta-encoded ring must reload bit-exactly"
+    );
+
+    // dense-divergent ring: every coordinate differs from the newest, so
+    // the patch would be *larger* than dense — the fallback must kick in
+    // and still roundtrip exactly
+    let mut dense_snap = snap.clone();
+    dense_snap.transport.versions = vec![
+        (1, (0..dim).map(|i| i as f32).collect()),
+        (2, (0..dim).map(|i| i as f32 + 0.5).collect()),
+        (3, base.clone()),
+    ];
+    let dense_bytes = dense_snap.to_bytes();
+    assert_eq!(Snapshot::from_bytes(&dense_bytes).unwrap(), dense_snap);
+
+    let ratio = sparse_bytes.len() as f64 / dense_bytes.len() as f64;
+    println!(
+        "snapshot ring delta: sparse ring {} bytes vs dense-divergent {} bytes \
+         (size ratio {ratio:.3})",
+        sparse_bytes.len(),
+        dense_bytes.len()
+    );
+    assert!(
+        ratio < 0.5,
+        "sparse ring should shrink the snapshot: ratio {ratio:.3}"
+    );
+
+    // degenerate rings: empty and single-version both roundtrip
+    let mut s = rich_snapshot("ringdelta-empty", 2);
+    s.transport.versions.clear();
+    assert_eq!(Snapshot::from_bytes(&s.to_bytes()).unwrap(), s);
+    s.transport.versions = vec![(2, base)];
+    assert_eq!(Snapshot::from_bytes(&s.to_bytes()).unwrap(), s);
+}
+
+// -------------------------------------------------- terminal snapshots
+
+/// A run that completed rounds `1..=R` and wrote its terminal snapshot
+/// (DESIGN.md §8) can be *extended* to `2R` without replaying anything:
+/// the extended curve is byte-identical to a straight `2R` run. The
+/// harness mirrors the server's terminal-snapshot flow engine-free; the
+/// artifact-gated test below drives the real server path.
+#[test]
+fn terminal_snapshot_extends_finished_run() {
+    let root = test_root("extend");
+    let (r1, r2) = (6u64, 12u64); // even: eval cadence 2 sees no extra rows
+
+    let mut full = harness(true);
+    let mut w = RunWriter::create(&root, "full").unwrap();
+    let full_dir = w.dir().to_path_buf();
+    for round in 1..=r2 {
+        full.round(round, r2, &mut w);
+    }
+    w.finish(&[]).unwrap();
+
+    // the "finished" run: its whole budget was r1 rounds, terminal
+    // snapshot written at the final round
+    let mut part = harness(true);
+    let mut w = RunWriter::create(&root, "extended").unwrap();
+    let part_dir = w.dir().to_path_buf();
+    for round in 1..=r1 {
+        part.round(round, r1, &mut w);
+    }
+    part.snapshot(r1)
+        .write(&checkpoint_dir(&part_dir), 2)
+        .unwrap();
+    drop(w);
+
+    // extend: resume from the terminal snapshot with a larger budget
+    let (_, snap) = Snapshot::load_latest(&part_dir).unwrap().expect("terminal snapshot");
+    assert_eq!(snap.round, r1);
+    let mut resumed = harness(true);
+    resumed.restore(snap);
+    let mut w = RunWriter::reopen(&part_dir, r1).unwrap();
+    for round in r1 + 1..=r2 {
+        resumed.round(round, r2, &mut w);
+    }
+    w.finish(&[]).unwrap();
+
+    let a = std::fs::read(full_dir.join("curve.csv")).unwrap();
+    let b = std::fs::read(part_dir.join("curve.csv")).unwrap();
+    assert!(!a.is_empty() && a == b, "extended curve.csv != straight-run curve.csv");
+    std::fs::remove_dir_all(root).ok();
+}
+
+/// The server writes the terminal snapshot even when the cadence never
+/// fires, and `--resume` with a larger `--rounds` continues bit-exactly
+/// (artifact-gated).
+#[test]
+fn server_terminal_checkpoint_extends_over_artifacts() {
+    use fedavg::config::{BatchSize, FedConfig, Partition};
+    use fedavg::federated::{self, ServerOptions};
+    use fedavg::runstate::CheckpointConfig;
+    use fedavg::runtime::Engine;
+
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return;
+    }
+    let eng = Engine::load(dir).expect("engine");
+    let fed = fedavg::exper::mnist_fed(0.05, Partition::Iid, 51);
+    let cfg = |rounds| FedConfig {
+        model: "mnist_2nn".into(),
+        c: 0.3,
+        e: 1,
+        b: BatchSize::Fixed(10),
+        lr: 0.1,
+        rounds,
+        eval_every: 1,
+        seed: 51,
+        ..Default::default()
+    };
+    let opts = |telemetry: Option<RunWriter>| ServerOptions {
+        eval_cap: Some(200),
+        telemetry,
+        ..Default::default()
+    };
+    let root = test_root("server-extend");
+
+    let w = RunWriter::create(&root, "full").unwrap();
+    let full_dir = w.dir().to_path_buf();
+    let full = federated::run(&eng, &fed, &cfg(6), opts(Some(w))).unwrap();
+
+    // cadence 100 never fires in 3 rounds — only the terminal snapshot
+    let w = RunWriter::create(&root, "extended").unwrap();
+    let part_dir = w.dir().to_path_buf();
+    let mut o = opts(Some(w));
+    o.checkpoint = Some(CheckpointConfig { every: 100, keep: 2 });
+    federated::run(&eng, &fed, &cfg(3), o).unwrap();
+    let (_, snap) = Snapshot::load_latest(&part_dir)
+        .unwrap()
+        .expect("terminal snapshot written off-cadence");
+    assert_eq!(snap.round, 3);
+
+    let mut o = opts(None);
+    o.checkpoint = Some(CheckpointConfig { every: 100, keep: 2 });
+    o.resume = Some(ResumeFrom {
+        snapshot: snap,
+        run_dir: part_dir.clone(),
+    });
+    let resumed = federated::run(&eng, &fed, &cfg(6), o).unwrap();
+
+    assert_eq!(full.final_theta, resumed.final_theta, "extension diverged");
+    let a = std::fs::read(full_dir.join("curve.csv")).unwrap();
+    let b = std::fs::read(part_dir.join("curve.csv")).unwrap();
+    assert_eq!(a, b, "extended curve.csv != straight-run curve.csv");
+    std::fs::remove_dir_all(root).ok();
+}
+
 // ------------------------------------- full-stack (artifact-gated) test
 
 #[test]
