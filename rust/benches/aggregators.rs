@@ -4,54 +4,16 @@
 //! weighted mean is memory-bandwidth-bound; the robust order statistics
 //! sort per coordinate (O(dim·m log m)) and must stay cheap next to m
 //! ClientUpdates. Run with `cargo bench --bench aggregators`.
+//!
+//! Thin wrapper — the body lives in `fedavg::obs::bench`, and the
+//! canonical entry point is `fedavg bench`, which also records the
+//! committed `BENCH_aggregators.json` snapshot (DESIGN.md §10).
 
-use fedavg::data::rng::Rng;
-use fedavg::federated::aggregate::{AggConfig, Aggregator as _};
+use fedavg::obs::bench;
 use fedavg::util::bench::Bencher;
 
-fn main() {
+fn main() -> fedavg::Result<()> {
     let mut b = Bencher::default();
     println!("aggregators — combine/step at 2NN size (199,210 params), m=50 clients\n");
-
-    let dim = 199_210; // MNIST 2NN parameter count
-    let m = 50;
-    let mut rng = Rng::new(3);
-    let deltas: Vec<Vec<f32>> = (0..m)
-        .map(|_| (0..dim).map(|_| rng.gauss_f32() * 0.01).collect())
-        .collect();
-    let refs: Vec<(f32, &[f32])> = deltas.iter().map(|d| (600.0, d.as_slice())).collect();
-
-    for spec in ["fedavg", "trimmed:0.1", "median"] {
-        let agg = AggConfig {
-            spec: spec.into(),
-            ..Default::default()
-        }
-        .build()
-        .unwrap();
-        b.bench_elems(&format!("combine/{spec}"), dim as f64, || {
-            std::hint::black_box(agg.combine(&refs).unwrap());
-        });
-    }
-
-    // stateful server steps at CNN size (the heavyweight image model).
-    // step() consumes its input, so feed the returned buffer back in —
-    // no per-iteration clone polluting the measurement (the values drift
-    // as the optimizer reprocesses its own output; only timing matters).
-    let big = 1_663_370;
-    let delta: Vec<f32> = (0..big).map(|_| rng.gauss_f32() * 0.01).collect();
-    for spec in ["fedavgm", "fedadam"] {
-        let mut agg = AggConfig {
-            spec: spec.into(),
-            ..Default::default()
-        }
-        .build()
-        .unwrap();
-        let mut round = 0u64;
-        let mut buf = delta.clone();
-        b.bench_elems(&format!("step/{spec} (1.66M params)"), big as f64, || {
-            round += 1;
-            buf = agg.step(round, std::mem::take(&mut buf)).unwrap();
-            std::hint::black_box(buf.len());
-        });
-    }
+    bench::aggregators(&mut b)
 }

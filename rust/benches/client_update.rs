@@ -3,81 +3,19 @@
 //! an apply, and a full E=1 ClientUpdate through the PJRT executables.
 //!
 //! Requires `make artifacts`; skips cleanly otherwise.
+//!
+//! Thin wrapper — the body lives in `fedavg::obs::bench`, and the
+//! canonical entry point is `fedavg bench`, which also records the
+//! committed `BENCH_client_update.json` snapshot (DESIGN.md §10).
 
-use fedavg::config::BatchSize;
-use fedavg::data::{Dataset, Examples};
-use fedavg::federated::{local_update, LocalSpec};
-use fedavg::runtime::Engine;
+use fedavg::obs::bench::{self, AreaStatus};
 use fedavg::util::bench::Bencher;
 
-fn toy_image(n: usize, dim: usize) -> Dataset {
-    let mut rng = fedavg::data::rng::Rng::new(5);
-    Dataset {
-        name: "bench".into(),
-        examples: Examples::Image {
-            x: (0..n * dim).map(|_| rng.f32()).collect(),
-            y: (0..n).map(|_| rng.below(10) as i32).collect(),
-            dim,
-        },
-    }
-}
-
-fn main() {
-    let dir = Engine::default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: no artifacts — run `make artifacts`");
-        return;
-    }
-    let engine = Engine::load(dir).expect("engine");
+fn main() -> fedavg::Result<()> {
     let mut b = Bencher::quick();
     println!("client_update — per-executable and per-ClientUpdate latency\n");
-
-    for (mname, dim) in [("mnist_2nn", 784usize), ("mnist_cnn", 784)] {
-        let model = engine.model(mname).expect("model");
-        let theta = model.init(1).expect("init");
-        let data = toy_image(60, dim);
-        let idxs: Vec<usize> = (0..60).collect();
-
-        let batch10 = data.padded_batch(&idxs[..10], 10);
-        b.bench(&format!("{mname}/step_b10"), || {
-            std::hint::black_box(model.step(&theta, &batch10, 0.05).unwrap());
-        });
-
-        let cap = model.meta().acc_batch;
-        let batch_acc = data.padded_batch(&idxs[..cap.min(60)], cap);
-        b.bench(&format!("{mname}/gradacc_b{cap}"), || {
-            std::hint::black_box(model.gradacc(&theta, &batch_acc).unwrap());
-        });
-
-        let g = vec![0.01f32; theta.len()];
-        b.bench(&format!("{mname}/apply"), || {
-            std::hint::black_box(model.apply(&theta, &g, 0.05).unwrap());
-        });
-
-        b.bench(&format!("{mname}/eval_b{cap}"), || {
-            std::hint::black_box(model.eval_batch(&theta, &batch_acc).unwrap());
-        });
-
-        // one full ClientUpdate: E=1, B=10 over 60 examples (6 steps)
-        let spec = LocalSpec {
-            epochs: 1,
-            batch: BatchSize::Fixed(10),
-            lr: 0.05,
-            prox_mu: 0.0,
-            shuffle_seed: 3,
-        };
-        b.bench(&format!("{mname}/client_update_E1_B10_n60"), || {
-            std::hint::black_box(local_update(&model, &data, &idxs, &theta, &spec).unwrap());
-        });
+    if let AreaStatus::Skipped(why) = bench::client_update(&mut b)? {
+        eprintln!("SKIP: {why}");
     }
-
-    let stats = engine.stats();
-    println!(
-        "\nengine: {} steps / {} gradaccs / {} evals, compile {:.1}s, execute {:.1}s",
-        stats.steps,
-        stats.gradaccs,
-        stats.evals,
-        stats.compile_ms as f64 / 1e3,
-        stats.execute_ms as f64 / 1e3
-    );
+    Ok(())
 }

@@ -3,47 +3,16 @@
 //! The transport runs once per aggregated client per round, on the
 //! server's critical path; it must stay cheap next to ClientUpdate. Run
 //! with `cargo bench --bench codec_pipeline`.
+//!
+//! Thin wrapper — the body lives in `fedavg::obs::bench`, and the
+//! canonical entry point is `fedavg bench`, which also records the
+//! committed `BENCH_codec_pipeline.json` snapshot (DESIGN.md §10).
 
-use fedavg::comms::wire::Pipeline;
-use fedavg::data::rng::Rng;
+use fedavg::obs::bench;
 use fedavg::util::bench::Bencher;
 
-fn main() {
+fn main() -> fedavg::Result<()> {
     let mut b = Bencher::default();
     println!("codec_pipeline — encode/measure/decode at CNN size (1.66M params)\n");
-
-    let dim = 1_663_370; // MNIST CNN parameter count
-    let mut rng = Rng::new(3);
-    let base: Vec<f32> = (0..dim).map(|_| rng.gauss_f32() * 0.1).collect();
-    let mut theta = base.clone();
-    for i in (0..dim).step_by(100) {
-        theta[i] += 0.05; // ~1% round-to-round change
-    }
-
-    for spec in ["q8", "topk:0.01", "topk:0.01|q8"] {
-        let p = Pipeline::parse(spec).unwrap();
-        let mut enc_rng = Rng::new(7);
-        b.bench_elems(&format!("run/{spec}"), dim as f64, || {
-            std::hint::black_box(p.run(&theta, None, &mut enc_rng).unwrap());
-        });
-    }
-
-    // delta downlink: measure (pricing pass, no allocation of the frame)
-    // vs full encode+serialize
-    let delta = Pipeline::parse("delta").unwrap();
-    b.bench_elems("measure/delta", dim as f64, || {
-        std::hint::black_box(delta.measure(&theta, Some(&base)).unwrap());
-    });
-    let mut enc_rng = Rng::new(9);
-    b.bench_elems("encode/delta", dim as f64, || {
-        std::hint::black_box(delta.encode(&theta, Some((1, &base)), &mut enc_rng).unwrap());
-    });
-
-    // frame round-trip at the wire level
-    let p = Pipeline::parse("topk:0.01|q8").unwrap();
-    let frame = p.encode(&theta, None, &mut Rng::new(11)).unwrap();
-    println!("\n  topk:0.01|q8 frame: {} bytes (dense {})", frame.wire_bytes(), 4 * dim);
-    b.bench_elems("decode/topk:0.01|q8", dim as f64, || {
-        std::hint::black_box(frame.decode(None).unwrap());
-    });
+    bench::codec_pipeline(&mut b)
 }

@@ -3,38 +3,16 @@
 //! stay negligible next to a round's training work — this pins the
 //! select → over-select → schedule → account pipeline at 1k / 10k / 100k
 //! simulated clients.
+//!
+//! Thin wrapper — the body lives in `fedavg::obs::bench`, and the
+//! canonical entry point is `fedavg bench`, which also records the
+//! committed `BENCH_fleet_round.json` snapshot (DESIGN.md §10).
 
-use fedavg::coordinator::{schedule_round, FleetConfig, FleetProfile, FleetSim};
+use fedavg::obs::bench;
 use fedavg::util::bench::Bencher;
 
-fn main() {
+fn main() -> fedavg::Result<()> {
     let mut b = Bencher::default();
     println!("fleet_round — coordinator overhead per round\n");
-
-    // full round pipeline: diurnal online scan + sample + schedule
-    for k in [1_000usize, 10_000, 100_000] {
-        let cfg = FleetConfig {
-            profile: FleetProfile::Mobile,
-            overselect: 0.3,
-            deadline_s: Some(90.0),
-            ..Default::default()
-        };
-        let m = (k / 100).max(1); // C = 0.01
-        let mut sim =
-            FleetSim::new(&cfg, k, m, 6_653_480, 300.0, 7).expect("sim");
-        b.bench_elems(&format!("fleet_round/k={k}"), k as f64, || {
-            std::hint::black_box(sim.step());
-        });
-    }
-
-    // scheduler alone: the event queue at growing dispatch sizes
-    for n in [1_000usize, 10_000, 100_000] {
-        let mut rng = fedavg::data::rng::Rng::new(11);
-        let durations: Vec<(usize, f64)> =
-            (0..n).map(|c| (c, 1.0 + 99.0 * rng.f64())).collect();
-        let m = n * 3 / 4;
-        b.bench_elems(&format!("schedule_round/n={n}"), n as f64, || {
-            std::hint::black_box(schedule_round(m, Some(80.0), &durations));
-        });
-    }
+    bench::fleet_round(&mut b)
 }

@@ -2,60 +2,16 @@
 //! axpy, interpolation) across the paper's model sizes. Target: memory-
 //! bandwidth bound (GB/s scale), so FedAvg's server step never dominates
 //! a round (§Perf L3).
+//!
+//! Thin wrapper — the body lives in `fedavg::obs::bench`, and the
+//! canonical entry point is `fedavg bench`, which also records the
+//! committed `BENCH_params_hot_path.json` snapshot (DESIGN.md §10).
 
-use fedavg::params;
+use fedavg::obs::bench;
 use fedavg::util::bench::Bencher;
 
 fn main() {
     let mut b = Bencher::default();
     println!("params_hot_path — model-size param vectors\n");
-
-    // paper model sizes: 2NN, char-LSTM, CIFAR CNN, MNIST CNN, word-LSTM
-    for (name, p) in [
-        ("2nn_199k", 199_210usize),
-        ("lstm_820k", 820_522),
-        ("cifar_1.07m", 1_068_298),
-        ("cnn_1.66m", 1_663_370),
-        ("word_4.36m", 4_359_120),
-    ] {
-        let vecs: Vec<Vec<f32>> = (0..10)
-            .map(|i| (0..p).map(|j| ((i * j) % 97) as f32 * 0.01).collect())
-            .collect();
-        let weighted: Vec<(f32, &[f32])> = vecs
-            .iter()
-            .enumerate()
-            .map(|(i, v)| (1.0 + i as f32, v.as_slice()))
-            .collect();
-
-        b.bench_elems(
-            &format!("weighted_mean/10clients/{name}"),
-            (10 * p) as f64,
-            || {
-                std::hint::black_box(params::weighted_mean(&weighted));
-            },
-        );
-
-        let mut acc = vec![0.0f32; p];
-        b.bench_elems(&format!("axpy/{name}"), p as f64, || {
-            params::axpy(&mut acc, 0.5, &vecs[0]);
-            std::hint::black_box(&acc);
-        });
-
-        b.bench_elems(&format!("interpolate/{name}"), p as f64, || {
-            std::hint::black_box(params::interpolate(&vecs[0], &vecs[1], 0.37));
-        });
-    }
-
-    // GB/s summary for the averaging loop (reads 10 vecs + writes out per accumulate)
-    if let Some(r) = b
-        .results()
-        .iter()
-        .find(|r| r.name == "weighted_mean/10clients/cnn_1.66m")
-    {
-        let bytes = (2 * 10) as f64 * 1_663_370.0 * 4.0; // read acc+src per axpy
-        println!(
-            "\nweighted_mean(cnn) effective bandwidth: {:.2} GB/s",
-            bytes / (r.mean_ns / 1e9) / 1e9
-        );
-    }
+    bench::params_hot_path(&mut b);
 }

@@ -366,6 +366,22 @@ impl Transport {
         self.feedback[client].residual_norm()
     }
 
+    /// Total error-feedback residual mass across the fleet: the L2 norm
+    /// of the concatenated per-client residuals. Feeds the
+    /// `transport.ef_residual_l2` gauge when tracing is on (DESIGN.md
+    /// §10); 0.0 without a sparsifying uplink codec. Full fleet scan —
+    /// call at eval cadence, not per round.
+    pub fn residual_l2_total(&self) -> f64 {
+        self.feedback
+            .iter()
+            .map(|f| {
+                let n = f.residual_norm();
+                n * n
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
     /// Capture the endpoint's inter-round mutable state for a run-state
     /// snapshot (DESIGN.md §8).
     pub fn state_save(&self) -> TransportState {

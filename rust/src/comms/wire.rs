@@ -19,7 +19,11 @@
 //! [`Repr::wire_bytes`] (post-stage accounting), and the serialized
 //! [`Frame`]'s actual length. The scheduler prices a transfer from the
 //! same pipeline that later encodes it, so estimate and actual can never
-//! drift.
+//! drift. At run scope the same byte streams feed the
+//! `wire.up_bytes`/`wire.down_bytes` counters of the
+//! [`obs`](crate::obs) metrics registry and the byte labels on
+//! `--trace` spans (DESIGN.md §10) — observation rides the one source
+//! of truth rather than re-metering.
 //!
 //! Decoding needs no pipeline object: frames are self-describing, and
 //! [`decode_frame`] inverts any stage composition from the header alone

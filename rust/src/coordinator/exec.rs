@@ -18,6 +18,7 @@ use anyhow::anyhow;
 
 use crate::data::Dataset;
 use crate::federated::client::{local_update, LocalResult, LocalSpec};
+use crate::obs::Tracer;
 use crate::params::ParamVec;
 use crate::runtime::pool::WorkerPool;
 use crate::runtime::Engine;
@@ -27,6 +28,8 @@ use crate::Result;
 pub struct ClientJob {
     /// Dispatch slot — the reduction position of this result.
     pub slot: usize,
+    /// Round this job belongs to (trace span labelling only).
+    pub round: u64,
     /// Client index into the federated partition.
     pub client: usize,
     /// Global parameters at the start of the round.
@@ -44,13 +47,18 @@ pub struct ParallelExec {
 impl ParallelExec {
     /// Spawn `workers` threads, each loading its own engine from
     /// `artifacts_dir` and serving `model` over the shared `train` set
-    /// and client partition.
+    /// and client partition. `trace` (usually disabled) emits a
+    /// `local_train` span per job, tagged with client + worker ids —
+    /// span *records* interleave by completion time, but the span
+    /// multiset is identical to the serial path's (the determinism the
+    /// trace tests pin).
     pub fn new(
         workers: usize,
         artifacts_dir: PathBuf,
         model: String,
         train: Arc<Dataset>,
         clients: Arc<Vec<Vec<usize>>>,
+        trace: Tracer,
     ) -> Result<Self> {
         anyhow::ensure!(workers >= 1, "exec pool needs >= 1 worker");
         // Fail fast with the real error: a worker thread's factory
@@ -61,18 +69,22 @@ impl ParallelExec {
             .map_err(|e| e.context(format!("exec pool cannot load engine from {artifacts_dir:?}")))?;
         let pool = WorkerPool::new(
             workers,
-            move |_id| Engine::load(&artifacts_dir),
-            move |eng: &mut Engine, job: ClientJob| {
+            move |id| Engine::load(&artifacts_dir).map(|eng| (eng, id)),
+            move |(eng, wid): &mut (Engine, usize), job: ClientJob| {
                 // A panic here would unwind one worker while the rest keep
                 // the pool alive, deadlocking map()'s result count — catch
                 // it and report as a failed round instead.
                 let slot = job.slot;
+                let sp = trace
+                    .begin(job.round, "local_train", 2)
+                    .map(|s| s.client(job.client as u64).worker(*wid as u64));
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                     || -> Result<LocalResult> {
                         let model = eng.model(&model)?;
                         local_update(&model, &train, &clients[job.client], &job.theta, &job.spec)
                     },
                 ));
+                trace.end(sp);
                 let out = match out {
                     Ok(r) => r.map_err(|e| format!("{e:#}")),
                     Err(panic) => Err(match panic.downcast_ref::<&str>() {

@@ -26,6 +26,7 @@ use crate::data::{corrupt_clients, Federated};
 use crate::federated::aggregate::{fmt_state_norms, AggConfig};
 use crate::federated::{self, local_update, LocalSpec, ServerOptions};
 use crate::metrics::LearningCurve;
+use crate::obs::Tracer;
 use crate::params::interpolate;
 use crate::runstate::{atomic_write, ResumeFrom, Snapshot};
 use crate::runtime::Engine;
@@ -295,6 +296,12 @@ impl CellWork for FedCell {
             quiet_rounds: ctx.quiet,
             ..Default::default()
         };
+        if ctx.trace {
+            // Trace is an observation channel, not a config knob: it is
+            // absent from spec(), so a traced cell lands in the same
+            // fingerprint-keyed dir as its untraced twin.
+            sopts.trace = Tracer::to_file(&ctx.dir.join("trace.jsonl"))?;
+        }
         match self.classify(&ctx.dir, pop.clients, dim) {
             Prior::Finished(snap) => return self.finalize(*snap, ctx, pop),
             Prior::Resume(snap) => {

@@ -95,6 +95,11 @@ pub struct CellCtx {
     pub checkpoint: Option<CheckpointConfig>,
     /// Silence per-round console output (parallel grids interleave).
     pub quiet: bool,
+    /// Span-trace this cell into `<dir>/trace.jsonl` (`--trace`,
+    /// DESIGN.md §10). Deliberately NOT part of [`CellWork::spec`]:
+    /// tracing cannot change a cell's outputs, so traced and untraced
+    /// executions share a fingerprint (and cache slot).
+    pub trace: bool,
 }
 
 /// A named result curve's points (x is a round/update index or an
@@ -201,6 +206,8 @@ pub struct GridOptions {
     pub dry_run: bool,
     /// Per-cell run-state checkpoint cadence (DESIGN.md §8).
     pub checkpoint: Option<CheckpointConfig>,
+    /// Span-trace executed cells into their cell dirs (DESIGN.md §10).
+    pub trace: bool,
 }
 
 impl Default for GridOptions {
@@ -212,6 +219,7 @@ impl Default for GridOptions {
             overwrite: false,
             dry_run: false,
             checkpoint: None,
+            trace: false,
         }
     }
 }
@@ -225,6 +233,65 @@ pub struct GridReport {
     /// in-grid aliases of an identical spec.
     pub cache_hits: usize,
     pub manifest_path: PathBuf,
+}
+
+/// Running totals over cached cells' recorded counters, for the
+/// `--dry-run` "what did the cache save" line. Cells that never
+/// recorded a counter (synthetic cells, non-fed grids) contribute zero.
+#[derive(Default)]
+struct CachedTally {
+    cells: usize,
+    rounds: u64,
+    steps: u64,
+    bytes: u64,
+    sim_s: f64,
+}
+
+impl CachedTally {
+    fn absorb(&mut self, out: &CellOutcome) {
+        self.cells += 1;
+        self.rounds += out.int("rounds_run").unwrap_or(0);
+        self.steps += out.int("client_steps").unwrap_or(0);
+        self.bytes += out.int("bytes_up").unwrap_or(0) + out.int("bytes_down").unwrap_or(0);
+        self.sim_s += out.num("sim_seconds").unwrap_or(0.0);
+    }
+}
+
+/// One-line view of a cached cell's recorded summary: the counters a
+/// reader most wants first (accuracy, rounds-to-target, cost), falling
+/// back to the first few recorded fields for cells that use other keys.
+fn summary_brief(out: &CellOutcome) -> String {
+    const PREFERRED: &[&str] = &[
+        "final_acc",
+        "best_acc",
+        "rtt",
+        "rounds_run",
+        "client_steps",
+        "sim_seconds",
+        "bytes_up",
+    ];
+    let mut parts: Vec<String> = PREFERRED
+        .iter()
+        .filter_map(|k| {
+            out.get(k)
+                .filter(|v| !v.is_empty())
+                .map(|v| format!("{k}={v}"))
+        })
+        .collect();
+    if parts.is_empty() {
+        parts = out
+            .summary
+            .iter()
+            .filter(|(_, v)| !v.is_empty())
+            .take(4)
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+    }
+    if parts.is_empty() {
+        "(no summary recorded)".to_string()
+    } else {
+        parts.join("  ")
+    }
 }
 
 /// A cell's identity: [`fnv1a64`] over its canonical spec.
@@ -575,6 +642,10 @@ pub fn run<W: CellWork>(
              (dry run — nothing executed)",
             run_list.len()
         );
+        // Cached cells carry the summary counters their original run
+        // recorded — surface them here so a resumed grid shows what the
+        // cache saved, instead of a bare status word.
+        let mut cached = CachedTally::default();
         for i in 0..n {
             let status = if outcomes[i].is_some() {
                 "done (cached)"
@@ -584,6 +655,21 @@ pub fn run<W: CellWork>(
                 "alias"
             };
             eprintln!("  {:016x}  {:<13} {}", fps[i], status, names[i]);
+            if let Some(out) = &outcomes[i] {
+                eprintln!("                      {}", summary_brief(out));
+                cached.absorb(out);
+            }
+        }
+        if cached.cells > 0 {
+            eprintln!(
+                "  cached work on record: {} cells, {} rounds, {} client steps, \
+                 {:.3} GB wire, sim {:.0} s",
+                cached.cells,
+                cached.rounds,
+                cached.steps,
+                cached.bytes as f64 / 1e9,
+                cached.sim_s
+            );
         }
         return Ok(None);
     }
@@ -654,6 +740,7 @@ pub fn run<W: CellWork>(
             let ctx = CellCtx {
                 dir: cell_dir(i),
                 checkpoint: opts.checkpoint,
+                trace: opts.trace,
                 quiet: false,
             };
             let w = works[i].as_ref().expect("declared");
@@ -711,6 +798,7 @@ pub fn run<W: CellWork>(
             let ctx = CellCtx {
                 dir: cell_dir(i),
                 checkpoint: opts.checkpoint,
+                trace: opts.trace,
                 quiet: true,
             };
             pool.submit((i, works[i].take().expect("declared"), ctx))?;

@@ -65,6 +65,10 @@ pub struct ExpOptions {
     pub dry_run: bool,
     /// per-cell run-state checkpoint cadence (`--checkpoint-every`).
     pub checkpoint: Option<CheckpointConfig>,
+    /// per-cell span tracing into each cell dir's trace.jsonl
+    /// (`--trace`, DESIGN.md §10). Never part of a cell's fingerprint:
+    /// tracing cannot change outputs.
+    pub trace: bool,
 }
 
 impl Default for ExpOptions {
@@ -81,6 +85,7 @@ impl Default for ExpOptions {
             overwrite: false,
             dry_run: false,
             checkpoint: None,
+            trace: false,
         }
     }
 }
@@ -123,6 +128,7 @@ impl ExpOptions {
             overwrite: args.has("overwrite"),
             dry_run: args.has("dry-run"),
             checkpoint,
+            trace: args.has("trace"),
         })
     }
 
@@ -135,6 +141,7 @@ impl ExpOptions {
             overwrite: self.overwrite,
             dry_run: self.dry_run,
             checkpoint: self.checkpoint,
+            trace: self.trace,
         }
     }
 }
@@ -156,6 +163,7 @@ pub const COMMON_FLAGS: &[&str] = &[
     "dry-run",
     "checkpoint-every",
     "checkpoint-keep",
+    "trace",
 ];
 
 // ---------------------------------------------------------------- workloads
@@ -310,7 +318,7 @@ mod tests {
         assert_eq!(o.rounds, 9);
         assert_eq!(o.target, Some(0.5));
         assert_eq!(o.workers, 1);
-        assert!(!o.resume && !o.overwrite && !o.dry_run);
+        assert!(!o.resume && !o.overwrite && !o.dry_run && !o.trace);
         assert!(o.checkpoint.is_none());
     }
 
@@ -318,8 +326,8 @@ mod tests {
     fn exp_options_parse_grid_flags() {
         let args = crate::util::args::Args::parse_from(
             [
-                "--workers", "4", "--resume", "--dry-run", "--checkpoint-every", "10",
-                "--checkpoint-keep", "2",
+                "--workers", "4", "--resume", "--dry-run", "--trace",
+                "--checkpoint-every", "10", "--checkpoint-keep", "2",
             ]
             .iter()
             .map(|s| s.to_string()),
@@ -330,9 +338,10 @@ mod tests {
         assert!(o.resume && o.dry_run && !o.overwrite);
         let ck = o.checkpoint.expect("cadence set");
         assert_eq!((ck.every, ck.keep), (10, 2));
+        assert!(o.trace);
         let g = o.grid_options();
         assert_eq!(g.workers, 4);
-        assert!(g.resume && g.dry_run);
+        assert!(g.resume && g.dry_run && g.trace);
 
         // --checkpoint-keep without a cadence is a config error
         let args = crate::util::args::Args::parse_from(

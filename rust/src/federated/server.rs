@@ -32,6 +32,7 @@ use crate::federated::aggregate::{fmt_state_norms, AggConfig, Aggregator as _};
 use crate::federated::client::{local_update, updates_per_round, LocalResult, LocalSpec};
 use crate::federated::sampler::ClientSampler;
 use crate::metrics::LearningCurve;
+use crate::obs::{Metrics, Tracer};
 use crate::params::ParamVec;
 use crate::privacy::{clip, GaussianMechanism, SecureAggregator};
 use crate::runstate::{
@@ -97,6 +98,16 @@ pub struct ServerOptions {
     /// itself (the resume path) — parallel grid cells would interleave
     /// their chatter on stdout. Rows still land in curve.csv.
     pub quiet_rounds: bool,
+    /// span tracer (`--trace`, DESIGN.md §10). The default is disabled:
+    /// [`Tracer::begin`] returns `None` without reading the clock, so
+    /// the untraced round loop is byte-identical and overhead-free.
+    pub trace: Tracer,
+    /// metrics registry (DESIGN.md §10). The server feeds its round
+    /// counters (wire bytes, drops, deadline misses, client SGD steps)
+    /// here; curve.csv reads the same values back out, and resume
+    /// re-seeds them from the snapshot's existing sections. Pass a
+    /// shared handle to read them after the run.
+    pub metrics: Metrics,
 }
 
 impl Default for ServerOptions {
@@ -115,6 +126,8 @@ impl Default for ServerOptions {
             checkpoint: None,
             resume: None,
             quiet_rounds: false,
+            trace: Tracer::default(),
+            metrics: Metrics::default(),
         }
     }
 }
@@ -227,15 +240,18 @@ pub fn run(
             cfg.model.clone(),
             Arc::new(fed.train.clone()),
             Arc::new(fed.clients.clone()),
+            opts.trace.clone(),
         )?)
     } else {
         None
     };
-    let mut fleet_totals = FleetTotals::default();
-    // fleet events accumulated since the last telemetry record (the
-    // curve is written at eval cadence, drops happen every round)
-    let mut dropped_since_eval = 0usize;
-    let mut misses_since_eval = 0usize;
+    // Round accounting lives in the metrics registry (DESIGN.md §10):
+    // cumulative counters, with the counter *mark* standing in for the
+    // old "events since the last telemetry record" locals (the curve is
+    // written at eval cadence, drops happen every round). The registry
+    // produces the same u64 arithmetic the locals did, so curve.csv is
+    // byte-identical.
+    let metrics = opts.metrics.clone();
 
     let mut accuracy = LearningCurve::new();
     let mut test_loss = LearningCurve::new();
@@ -244,7 +260,6 @@ pub fn run(
     } else {
         None
     };
-    let mut client_steps = 0u64;
     let mut rounds_run = 0u64;
     let mut mech = opts
         .dp
@@ -369,11 +384,30 @@ pub fn run(
         if let Some(pts) = snap.curves.train_loss {
             train_loss_curve = Some(LearningCurve::from_points(pts)?);
         }
-        client_steps = snap.client_steps;
         rounds_run = snap.round;
-        fleet_totals = snap.fleet.totals;
-        dropped_since_eval = snap.fleet.dropped_since_eval as usize;
-        misses_since_eval = snap.fleet.misses_since_eval as usize;
+        // Re-seed the metrics registry from the snapshot's existing
+        // sections — cumulative totals ride the state_save/state_load
+        // surface without a snapshot-format change (DESIGN.md §8/§10).
+        // marked = the portion already written to curve.csv, so pending()
+        // resumes exactly where the since-eval accumulation stopped.
+        let totals = comms.totals();
+        metrics.seed_counter("wire.up_bytes", totals.bytes_up, totals.bytes_up);
+        metrics.seed_counter("wire.down_bytes", totals.bytes_down, totals.bytes_down);
+        metrics.seed_counter("client.steps", snap.client_steps, snap.client_steps);
+        metrics.seed_counter("rounds", snap.round, snap.round);
+        let ft = snap.fleet.totals;
+        metrics.seed_counter("fleet.dispatched", ft.dispatched, ft.dispatched);
+        metrics.seed_counter("fleet.completed", ft.completed, ft.completed);
+        metrics.seed_counter(
+            "fleet.dropped",
+            ft.dropped_stragglers,
+            ft.dropped_stragglers.saturating_sub(snap.fleet.dropped_since_eval),
+        );
+        metrics.seed_counter(
+            "fleet.deadline_misses",
+            ft.deadline_misses,
+            ft.deadline_misses.saturating_sub(snap.fleet.misses_since_eval),
+        );
         start_round = snap.round + 1;
     }
 
@@ -390,14 +424,21 @@ pub fn run(
         (None, _) => None,
     };
 
+    let tr = opts.trace.clone();
     for round in start_round..=cfg.rounds as u64 {
+        let sp_round = tr.begin(round, "round", 0);
         rounds_run = round;
+        metrics.inc("rounds");
         let m = cfg.clients_per_round(k);
         // Publish this round's model to the version store (no-op without
         // a delta downlink codec) before any client is priced against it.
+        let sp = tr.begin(round, "publish", 1);
         transport.publish(round, &theta);
-        // Fleet path: Σ downlink bytes over every client the model is
-        // sent to (dispatched, incl. stragglers later dropped).
+        tr.end(sp);
+        // Σ downlink bytes over every client the model is sent to
+        // (fleet path: dispatched, incl. stragglers later dropped; the
+        // legacy path's comm accounting sums its own links, so there
+        // this total only labels the sample span).
         let mut down_bytes_round = 0u64;
         // Legacy path: per-pick (down, up) wire bytes for the jitter
         // model (which sums its own totals).
@@ -409,11 +450,14 @@ pub fn run(
         // client's links are priced by the transport (delta downlinks
         // differ per client). Legacy path: uniform sample over the
         // (optionally availability-filtered) population.
+        let sp = tr.begin(round, "sample", 1);
         let (picks, plan): (Vec<usize>, Option<RoundPlan>) = match &fleet {
             None => {
                 let picks = sampler.sample(round, k, m);
                 for &c in &picks {
-                    links.push((transport.downlink(c, round, &theta), est_up_bytes));
+                    let down = transport.downlink(c, round, &theta);
+                    down_bytes_round += down;
+                    links.push((down, est_up_bytes));
                 }
                 (picks, None)
             }
@@ -435,21 +479,25 @@ pub fn run(
                 (plan.completed.clone(), Some(plan))
             }
         };
+        tr.end(sp.map(|s| s.bytes(down_bytes_round)));
         let lr = (cfg.lr * cfg.lr_decay.powi(round as i32 - 1)) as f32;
 
         // The model each aggregated client actually starts from: `None`
         // (= theta, zero copies) unless a lossy downlink codec means the
         // client reconstructs an approximation.
+        let sp = tr.begin(round, "broadcast", 1);
         let mut start_models: Vec<Option<ParamVec>> = picks
             .iter()
             .map(|&c| transport.downlink_model(c, &theta))
             .collect::<Result<_>>()?;
+        tr.end(sp);
 
         // ClientUpdate for every aggregating client — inline, or fanned
         // out over the worker pool (per-thread engines; reduction in
         // dispatch-slot order keeps parallel runs bit-identical to
         // sequential). Dropped stragglers never execute: their simulated
         // work is wasted, not ours.
+        let sp_dispatch = tr.begin(round, "dispatch", 1);
         let specs: Vec<LocalSpec> = picks
             .iter()
             .map(|&ck| LocalSpec {
@@ -471,6 +519,7 @@ pub fn run(
                     .enumerate()
                     .map(|(slot, (&client, spec))| ClientJob {
                         slot,
+                        round,
                         client,
                         theta: match start_models[slot].take() {
                             Some(start) => Arc::new(start),
@@ -487,10 +536,16 @@ pub fn run(
                 .enumerate()
                 .map(|(slot, (&ck, spec))| {
                     let start = start_models[slot].as_deref().unwrap_or(&theta);
-                    local_update(&model, &fed.train, &fed.clients[ck], start, spec)
+                    let sp = tr
+                        .begin(round, "local_train", 2)
+                        .map(|s| s.client(ck as u64));
+                    let res = local_update(&model, &fed.train, &fed.clients[ck], start, spec);
+                    tr.end(sp);
+                    res
                 })
                 .collect::<Result<_>>()?,
         };
+        tr.end(sp_dispatch);
 
         // Server-side post-processing per update, in slot order.
         // Updates travel as DELTAS (θ_k − θ_t): identical average, and the
@@ -499,10 +554,11 @@ pub fn run(
         // clients never encode, so their error-feedback residuals stay
         // put (the dropped mass was never delivered — re-injecting it
         // later would double-count).
+        let sp = tr.begin(round, "encode_up", 1);
         let mut deltas: Vec<(f32, ParamVec)> = Vec::with_capacity(picks.len());
         let mut wire_up_bytes = 0u64;
         for (&ck, res) in picks.iter().zip(results) {
-            client_steps += res.steps;
+            metrics.add("client.steps", res.steps);
             let mut delta = res.theta;
             for (d, t) in delta.iter_mut().zip(&theta) {
                 *d -= *t;
@@ -513,10 +569,12 @@ pub fn run(
             wire_up_bytes += transport.encode_up(ck, &mut delta)?;
             deltas.push((res.weight as f32, delta));
         }
+        tr.end(sp.map(|s| s.bytes(wire_up_bytes)));
 
         // w_{t+1} ← w_t + step(combine({(n_k, Δ^k)})) — the pluggable
         // server update (DESIGN.md §7). Default: combine = weighted mean
         // Σ (n_k/n) Δ^k, step = identity — Algorithm 1 bit-for-bit.
+        let sp = tr.begin(round, "combine", 1);
         let mut agg_delta: ParamVec = if let Some(agg) = &sec_agg {
             // clients upload masked fixed-point (w·Δ ‖ w); server only
             // ever sees the modular sum — i.e. the weighted mean. Only
@@ -542,31 +600,38 @@ pub fn run(
                 .collect();
             aggregator.combine(&refs)?
         };
+        tr.end(sp);
         // DP noise lands on the combined delta, *before* the stateful
         // server step: the optimizer moments then only ever see the
         // privatized aggregate (post-processing preserves the guarantee).
+        let sp = tr.begin(round, "step", 1);
         if let Some(mech) = mech.as_mut() {
             mech.apply(&mut agg_delta, picks.len());
         }
         let step = aggregator.step(round, agg_delta)?;
         crate::params::axpy(&mut theta, 1.0, &step);
+        tr.end(sp);
+        let sp = tr.begin(round, "account", 1);
         let rc = match &plan {
             None => comms.round_links(&links),
             Some(p) => {
-                fleet_totals.dispatched += p.dispatched.len() as u64;
-                fleet_totals.completed += p.completed.len() as u64;
-                fleet_totals.dropped_stragglers += p.dropped.len() as u64;
-                fleet_totals.deadline_misses += p.deadline_miss as u64;
-                dropped_since_eval += p.dropped.len();
-                misses_since_eval += p.deadline_miss as usize;
+                metrics.add("fleet.dispatched", p.dispatched.len() as u64);
+                metrics.add("fleet.completed", p.completed.len() as u64);
+                metrics.add("fleet.dropped", p.dropped.len() as u64);
+                metrics.add("fleet.deadline_misses", p.deadline_miss as u64);
                 // every dispatched client downloaded the model (dropped
                 // stragglers waste downlink); only completed uplinks land
                 comms.ingest(wire_up_bytes, down_bytes_round, p.round_seconds)
             }
         };
+        metrics.add("wire.up_bytes", rc.bytes_up);
+        metrics.add("wire.down_bytes", rc.bytes_down);
+        metrics.observe("round.seconds", rc.transfer_s);
+        tr.end(sp);
 
         let mut hit_target = false;
         if round % cfg.eval_every as u64 == 0 || round == cfg.rounds as u64 {
+            let sp = tr.begin(round, "eval", 1);
             let sums = model.eval_dataset(&theta, &fed.test, eval_idxs.as_deref())?;
             accuracy.push(round, sums.accuracy());
             test_loss.push(round, sums.mean_loss());
@@ -577,6 +642,11 @@ pub fn run(
             } else {
                 None
             };
+            // EF residual mass is a full scan over per-client residuals,
+            // so the gauge is only refreshed when someone will read it.
+            if tr.enabled() {
+                metrics.gauge("transport.ef_residual_l2", transport.residual_l2_total());
+            }
             if let Some(w) = opts.telemetry.as_mut() {
                 let server_state = fmt_state_norms(&aggregator.state_norms());
                 w.record(&RoundRecord {
@@ -590,17 +660,18 @@ pub fn run(
                     down_bytes: rc.bytes_down,
                     codec: &codec_label,
                     sim_seconds: comms.totals().sim_seconds,
-                    dropped: dropped_since_eval,
-                    deadline_misses: misses_since_eval,
+                    dropped: metrics.pending("fleet.dropped") as usize,
+                    deadline_misses: metrics.pending("fleet.deadline_misses") as usize,
                     agg: &agg_label,
                     server_state: &server_state,
                 })?;
-                dropped_since_eval = 0;
-                misses_since_eval = 0;
+                metrics.mark("fleet.dropped");
+                metrics.mark("fleet.deadline_misses");
             }
             if let Some(target) = cfg.target_accuracy {
                 hit_target = sums.accuracy() >= target;
             }
+            tr.end(sp);
         }
 
         // Snapshot AFTER the round's telemetry so curve.csv and the
@@ -613,11 +684,12 @@ pub fn run(
         if let (Some(ck), Some(dir)) = (&opts.checkpoint, &ckpt_dir) {
             let terminal = hit_target || round == cfg.rounds as u64;
             if round % ck.every == 0 || terminal {
+                let sp = tr.begin(round, "checkpoint", 1);
                 let snap = Snapshot {
                     round,
                     meta: meta.clone(),
                     theta: theta.clone(),
-                    client_steps,
+                    client_steps: metrics.counter("client.steps"),
                     sampler: sampler.state(),
                     agg: AggState {
                         label: agg_label.clone(),
@@ -626,9 +698,9 @@ pub fn run(
                     transport: transport.state_save(),
                     comms: comms.state_save(),
                     fleet: FleetState {
-                        totals: fleet_totals,
-                        dropped_since_eval: dropped_since_eval as u64,
-                        misses_since_eval: misses_since_eval as u64,
+                        totals: fleet_totals(&metrics),
+                        dropped_since_eval: metrics.pending("fleet.dropped"),
+                        misses_since_eval: metrics.pending("fleet.deadline_misses"),
                     },
                     curves: crate::runstate::CurveState {
                         accuracy: accuracy.points().to_vec(),
@@ -638,10 +710,21 @@ pub fn run(
                     dp: mech.as_ref().map(|m| m.state_save()),
                 };
                 snap.write(dir, ck.keep)?;
+                tr.end(sp);
             }
         }
+        tr.end(sp_round.map(|s| s.bytes(rc.bytes_up + rc.bytes_down).sim(rc.transfer_s)));
         if hit_target {
             break;
+        }
+    }
+
+    // Trace epilogue: flush trace.jsonl (surfacing any deferred write
+    // error) and print the per-round phase breakdown + metrics registry.
+    // Wall-clock numbers stop here — nothing below touches curve.csv.
+    if let Some(table) = tr.finish(&metrics)? {
+        if !opts.quiet_rounds {
+            eprint!("{table}");
         }
     }
 
@@ -651,7 +734,7 @@ pub fn run(
             ("model", cfg.model.clone()),
             ("label", cfg.label()),
             ("rounds_run", rounds_run.to_string()),
-            ("client_steps", client_steps.to_string()),
+            ("client_steps", metrics.counter("client.steps").to_string()),
             ("final_accuracy", format!("{:.6}", accuracy.last_value().unwrap_or(0.0))),
             ("bytes_up", totals.bytes_up.to_string()),
             ("bytes_down", totals.bytes_down.to_string()),
@@ -664,11 +747,12 @@ pub fn run(
             fields.push(("server_state", server_state));
         }
         if fleet.is_some() {
+            let ft = fleet_totals(&metrics);
             fields.push(("fleet_profile", opts.fleet.profile.label().to_string()));
-            fields.push(("dispatched", fleet_totals.dispatched.to_string()));
-            fields.push(("completed", fleet_totals.completed.to_string()));
-            fields.push(("dropped_stragglers", fleet_totals.dropped_stragglers.to_string()));
-            fields.push(("deadline_misses", fleet_totals.deadline_misses.to_string()));
+            fields.push(("dispatched", ft.dispatched.to_string()));
+            fields.push(("completed", ft.completed.to_string()));
+            fields.push(("dropped_stragglers", ft.dropped_stragglers.to_string()));
+            fields.push(("deadline_misses", ft.deadline_misses.to_string()));
         }
         w.finish(&fields)?;
     }
@@ -680,8 +764,19 @@ pub fn run(
         train_loss: train_loss_curve,
         comm: comms.totals(),
         final_theta: theta,
-        client_steps,
+        client_steps: metrics.counter("client.steps"),
         rounds_run,
-        fleet: fleet_totals,
+        fleet: fleet_totals(&metrics),
     })
+}
+
+/// The fleet accounting view of the metrics registry (the counters the
+/// round loop feeds under `fleet.*`).
+fn fleet_totals(metrics: &Metrics) -> FleetTotals {
+    FleetTotals {
+        dispatched: metrics.counter("fleet.dispatched"),
+        completed: metrics.counter("fleet.completed"),
+        dropped_stragglers: metrics.counter("fleet.dropped"),
+        deadline_misses: metrics.counter("fleet.deadline_misses"),
+    }
 }

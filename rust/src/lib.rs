@@ -45,6 +45,9 @@
 //!   the restartable, parallel grid engine ([`exper::grid`] +
 //!   [`exper::cells`], DESIGN.md §9); [`sweep`] — the lr-grid
 //!   methodology on the same engine.
+//! * [`obs`] — observability: the `--trace` span tracer, the metrics
+//!   registry, and the `fedavg bench` trajectory harness (DESIGN.md
+//!   §10).
 //! * [`config`], [`metrics`], [`telemetry`], [`util`] — harness
 //!   plumbing.
 
@@ -56,6 +59,7 @@ pub mod coordinator;
 pub mod data;
 pub mod federated;
 pub mod metrics;
+pub mod obs;
 pub mod params;
 pub mod privacy;
 pub mod runstate;

@@ -19,6 +19,7 @@ use fedavg::config::{BatchSize, ConfigFile, FedConfig, Partition};
 use fedavg::coordinator::{FleetConfig, FleetProfile, FleetSim};
 use fedavg::federated::{AggConfig, ServerOptions};
 use fedavg::exper::{self};
+use fedavg::obs::{Metrics, Tracer};
 use fedavg::runstate::{CheckpointConfig, Snapshot};
 use fedavg::runtime::Engine;
 use fedavg::telemetry::{FleetRoundRecord, FleetWriter, RunWriter};
@@ -46,6 +47,7 @@ fn real_main() -> Result<()> {
         "figure" | "figures" => exper::figures::run(&engine()?, &args),
         "run" => cmd_run(&args),
         "fleet" => cmd_fleet(&args),
+        "bench" => cmd_bench(&args),
         "oneshot" => cmd_oneshot(&args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
@@ -67,7 +69,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         "target", "partition", "scale", "eval-cap", "seed", "out", "availability",
         "track-train-loss", "name", "dp-clip", "dp-sigma", "secure-agg", "topk",
         "quant-bits", "codec", "down-codec", "agg", "server-lr", "server-momentum",
-        "prox-mu", "checkpoint-every", "checkpoint-keep", "resume", "overwrite",
+        "prox-mu", "checkpoint-every", "checkpoint-keep", "resume", "overwrite", "trace",
     ])?;
     let file = config_file_from_args(args)?;
     let cfg = fed_config_from(file.as_ref(), args)?;
@@ -200,7 +202,9 @@ fn checkpoint_from(file: Option<&ConfigFile>, args: &Args) -> Result<Option<Chec
 /// the server, which truncates/reopens the run's curve.csv only after
 /// the config fingerprint is verified (a refused resume must not touch
 /// the original telemetry); otherwise a fresh run dir is created
-/// (refusing to clobber an existing one unless `--overwrite`).
+/// (refusing to clobber an existing one unless `--overwrite`). `--trace`
+/// opens `runs/<name>/trace.jsonl` through the span tracer (DESIGN.md
+/// §10; truncated each run — wall-clock data is never resumed).
 fn attach_run_outputs(
     args: &Args,
     checkpoint: Option<CheckpointConfig>,
@@ -227,6 +231,9 @@ fn attach_run_outputs(
             path.file_name().unwrap_or_default(),
             snap.round
         );
+        if args.has("trace") {
+            opts.trace = Tracer::to_file(&run_dir.join("trace.jsonl"))?;
+        }
         opts.resume = Some(fedavg::runstate::ResumeFrom {
             snapshot: snap,
             run_dir: run_dir.to_path_buf(),
@@ -234,11 +241,15 @@ fn attach_run_outputs(
     } else {
         let name = args.str_or("name", default_name);
         let out = args.str_or("out", "runs");
-        opts.telemetry = Some(if args.has("overwrite") {
+        let w = if args.has("overwrite") {
             RunWriter::create_overwrite(&out, &name)?
         } else {
             RunWriter::create(&out, &name)?
-        });
+        };
+        if args.has("trace") {
+            opts.trace = Tracer::to_file(&w.dir().join("trace.jsonl"))?;
+        }
+        opts.telemetry = Some(w);
     }
     Ok(())
 }
@@ -309,7 +320,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "track-train-loss", "fleet-profile", "overselect", "deadline", "workers",
         "step-cost", "clients", "sim-only", "start-round", "model-bytes", "steps", "codec",
         "down-codec", "topk", "quant-bits", "agg", "server-lr", "server-momentum",
-        "prox-mu", "checkpoint-every", "checkpoint-keep", "resume", "overwrite",
+        "prox-mu", "checkpoint-every", "checkpoint-keep", "resume", "overwrite", "trace",
     ])?;
     let file = config_file_from_args(args)?;
     let cfg = fed_config_from(file.as_ref(), args)?;
@@ -459,6 +470,16 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
     } else {
         FleetWriter::create(&out, &name)?
     };
+    // --trace on the training-free path: spans around the event-queue
+    // schedule + the telemetry write, fleet counters in the registry.
+    // fleet.csv itself stays byte-identical (wall-clock only ever lands
+    // in trace.jsonl, DESIGN.md §10).
+    let tracer = if args.has("trace") {
+        Tracer::to_file(&w.dir().join("trace.jsonl"))?
+    } else {
+        Tracer::default()
+    };
+    let metrics = Metrics::default();
     println!(
         "fleet sim: {} clients ({} profile), m={m} +{:.0}% over-selection, deadline {}, \
          model {:.1} MB, {} local steps, {} rounds",
@@ -487,8 +508,18 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
             t.sim_seconds / 3600.0,
         );
     }
-    for _ in start_round..=cfg.rounds as u64 {
+    for round in start_round..=cfg.rounds as u64 {
+        let sp_round = tracer.begin(round, "sim_round", 0);
+        let sp = tracer.begin(round, "schedule", 1);
         let r = sim.step();
+        tracer.end(sp);
+        metrics.inc("rounds");
+        metrics.add("fleet.dispatched", r.plan.dispatched.len() as u64);
+        metrics.add("fleet.completed", r.plan.completed.len() as u64);
+        metrics.add("fleet.dropped", r.plan.dropped.len() as u64);
+        metrics.add("fleet.deadline_misses", r.plan.deadline_miss as u64);
+        metrics.observe("round.seconds", r.plan.round_seconds);
+        let sp = tracer.begin(round, "record", 1);
         w.record(&FleetRoundRecord {
             round: r.round,
             online: r.online,
@@ -511,6 +542,11 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
                 r.plan.round_seconds,
             );
         }
+        tracer.end(sp);
+        tracer.end(sp_round.map(|s| s.sim(r.plan.round_seconds)));
+    }
+    if let Some(table) = tracer.finish(&metrics)? {
+        eprint!("{table}");
     }
     let t = sim.totals();
     w.finish(&[
@@ -534,6 +570,72 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
         t.fleet.deadline_misses,
         t.bytes_up as f64 / 1e9,
         t.sim_seconds / 3600.0,
+    );
+    Ok(())
+}
+
+/// `fedavg bench` — the bench trajectory harness (DESIGN.md §10): run
+/// the bench areas and record committed `BENCH_<area>.json` snapshots
+/// (median/p10/p90 ns per case, machine-tagged; see `BENCH_schema.md`).
+/// `--check` runs every case once on a millisecond budget into
+/// `target/bench-check/` and validates the emitted JSON — the CI smoke
+/// mode. Wall-clock numbers belong in these snapshots (and trace.jsonl)
+/// only, never in curve.csv or grid manifests.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use fedavg::obs::bench::{self, AreaStatus};
+    use fedavg::util::bench::Bencher;
+    args.check_known(&["areas", "out", "check", "quick"])?;
+    let areas: Vec<String> = match args.str_opt("areas") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => bench::AREAS.iter().map(|s| s.to_string()).collect(),
+    };
+    anyhow::ensure!(!areas.is_empty(), "--areas: empty area list");
+    let check = args.has("check");
+    let out = args.str_or("out", if check { "target/bench-check" } else { "." });
+    let out = std::path::Path::new(&out);
+    println!(
+        "bench harness — {} area(s), {} profile, snapshots under {}\n",
+        areas.len(),
+        if check {
+            "--check (single-shot)"
+        } else if args.has("quick") {
+            "quick"
+        } else {
+            "full"
+        },
+        out.display()
+    );
+    let mut recorded = 0usize;
+    for area in &areas {
+        // fresh bencher per area: each snapshot holds only its own cases
+        let mut b = if check {
+            bench::check_bencher()
+        } else if args.has("quick") || area == "client_update" {
+            // client_update drives PJRT end-to-end; the quick profile is
+            // its standalone default too
+            Bencher::quick()
+        } else {
+            Bencher::default()
+        };
+        println!("== {area} ==");
+        if let AreaStatus::Skipped(why) = bench::run_area(area, &mut b)? {
+            println!("SKIP {area}: {why}\n");
+            continue;
+        }
+        let path = out.join(format!("BENCH_{area}.json"));
+        bench::write_snapshot(&path, area, b.results())?;
+        let cases = bench::validate_snapshot(&std::fs::read_to_string(&path)?)?;
+        println!("wrote {} ({cases} cases)\n", path.display());
+        recorded += 1;
+    }
+    println!(
+        "bench: {recorded}/{} areas recorded, snapshots validated against {:?}",
+        areas.len(),
+        bench::BENCH_SCHEMA
     );
     Ok(())
 }
@@ -611,7 +713,7 @@ USAGE:
   fedavg figure <N|all> [--scale F] [--rounds N]
     every sweep subcommand above also takes the uniform grid flags:
              [--workers N] [--resume] [--dry-run] [--overwrite]
-             [--checkpoint-every N] [--checkpoint-keep K]
+             [--checkpoint-every N] [--checkpoint-keep K] [--trace]
   fedavg run [--config FILE] [--model M] [--c F] [--e N] [--b N|inf]
              [--lr F] [--rounds N] [--partition iid|noniid|unbalanced|natural]
              [--availability P] [--target A] [--track-train-loss]
@@ -620,11 +722,13 @@ USAGE:
              [--topk FRAC] [--quant-bits B]
              [--agg RULE] [--server-lr F] [--server-momentum B] [--prox-mu MU]
              [--checkpoint-every N] [--checkpoint-keep K] [--overwrite]
+             [--trace]
   fedavg run --resume runs/<name> [--rounds N] [+ the original run's flags]
   fedavg fleet [--fleet-profile uniform|mobile|flaky] [--overselect RHO]
              [--deadline SECONDS] [--workers N] [--clients K] [--sim-only]
              [--start-round R] [--step-cost S] [--model-bytes B] [--steps U]
-             [+ run flags]
+             [--trace] [+ run flags]
+  fedavg bench [--areas a1,a2,..] [--out DIR] [--check] [--quick]
   fedavg oneshot [--model M] [--e N]
   fedavg info
 
@@ -667,6 +771,17 @@ cells in parallel (one PJRT engine per worker thread; tables are
 assembled after completion, so output is order-independent). --dry-run
 lists cells and their cached status; --resume requires the manifest to
 exist; --overwrite replaces a manifest left by a different command.
+
+Observability (DESIGN.md §10): --trace wraps every round phase (sample,
+dispatch, per-worker local training, codec encode, combine/step, eval,
+checkpoint) in wall-clock spans appended to runs/<name>/trace.jsonl and
+prints a per-round phase breakdown + the metrics registry at run end.
+Tracing off is the default and costs nothing — untraced runs produce
+byte-identical curve.csv/manifests (wall-clock lives only in trace.jsonl
+and BENCH files). `fedavg bench` runs the bench areas (params_hot_path,
+codec_pipeline, fleet_round, aggregators, client_update) and records
+committed BENCH_<area>.json snapshots — median/p10/p90 ns per case,
+machine-tagged (schema: BENCH_schema.md); --check is the CI smoke mode.
 
 Crash safety: --checkpoint-every N snapshots the complete run state
 (model, optimizer moments, RNG streams, error-feedback residuals, model

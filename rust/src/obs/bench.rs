@@ -1,0 +1,493 @@
+//! The bench trajectory harness (DESIGN.md §10): the five bench areas as
+//! library functions, plus the committed `BENCH_<area>.json` snapshot
+//! format they record into.
+//!
+//! `cargo bench` still works — each file under `rust/benches/` is now a
+//! thin wrapper over the corresponding function here — but the canonical
+//! entry point is **`fedavg bench`**, which runs the areas and writes
+//! machine-tagged snapshots (median/p10/p90 ns per case) meant to be
+//! committed at the repo root, seeding the perf trajectory the README
+//! tracks. `fedavg bench --check` runs every case exactly once on a
+//! millisecond budget and validates the emitted JSON against
+//! [`validate_snapshot`] — the CI smoke mode. See `BENCH_schema.md`.
+//!
+//! Wall-clock numbers live only in these snapshots (and trace.jsonl) —
+//! never in curve.csv or grid manifests (DESIGN.md §8/§9).
+
+use std::path::Path;
+use std::time::{Duration, SystemTime};
+
+use crate::comms::wire::Pipeline;
+use crate::config::BatchSize;
+use crate::coordinator::{schedule_round, FleetConfig, FleetProfile, FleetSim};
+use crate::data::rng::Rng;
+use crate::data::{Dataset, Examples};
+use crate::federated::aggregate::{AggConfig, Aggregator as _};
+use crate::federated::{local_update, LocalSpec};
+use crate::params;
+use crate::runstate::atomic_write;
+use crate::runtime::Engine;
+use crate::util::bench::{BenchResult, Bencher};
+use crate::util::json::{escape, Json};
+use crate::Result;
+
+/// Snapshot schema identifier (`BENCH_schema.md`).
+pub const BENCH_SCHEMA: &str = "fedavg-bench-v1";
+
+/// The five recorded areas, in canonical order.
+pub const AREAS: &[&str] = &[
+    "params_hot_path",
+    "codec_pipeline",
+    "fleet_round",
+    "aggregators",
+    "client_update",
+];
+
+/// Whether an area produced results worth snapshotting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AreaStatus {
+    Recorded,
+    /// Cleanly skipped (e.g. `client_update` without AOT artifacts) —
+    /// no snapshot is written.
+    Skipped(&'static str),
+}
+
+/// A `--check`-profile bencher: one warmup iteration, ~1 ms budget per
+/// case — every case executes at least once, nothing is measured
+/// meaningfully. CI smoke material.
+pub fn check_bencher() -> Bencher {
+    Bencher::new(Duration::ZERO, Duration::from_millis(1))
+}
+
+/// Run one named area into `b`.
+pub fn run_area(area: &str, b: &mut Bencher) -> Result<AreaStatus> {
+    match area {
+        "params_hot_path" => {
+            params_hot_path(b);
+            Ok(AreaStatus::Recorded)
+        }
+        "codec_pipeline" => codec_pipeline(b).map(|_| AreaStatus::Recorded),
+        "fleet_round" => fleet_round(b).map(|_| AreaStatus::Recorded),
+        "aggregators" => aggregators(b).map(|_| AreaStatus::Recorded),
+        "client_update" => client_update(b),
+        other => anyhow::bail!("unknown bench area {other:?} (known: {})", AREAS.join(", ")),
+    }
+}
+
+/// The server's parameter-vector hot path (weighted averaging, axpy,
+/// interpolation) across the paper's model sizes (§Perf L3).
+pub fn params_hot_path(b: &mut Bencher) {
+    // paper model sizes: 2NN, char-LSTM, CIFAR CNN, MNIST CNN, word-LSTM
+    for (name, p) in [
+        ("2nn_199k", 199_210usize),
+        ("lstm_820k", 820_522),
+        ("cifar_1.07m", 1_068_298),
+        ("cnn_1.66m", 1_663_370),
+        ("word_4.36m", 4_359_120),
+    ] {
+        let vecs: Vec<Vec<f32>> = (0..10)
+            .map(|i| (0..p).map(|j| ((i * j) % 97) as f32 * 0.01).collect())
+            .collect();
+        let weighted: Vec<(f32, &[f32])> = vecs
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (1.0 + i as f32, v.as_slice()))
+            .collect();
+
+        b.bench_elems(
+            &format!("weighted_mean/10clients/{name}"),
+            (10 * p) as f64,
+            || {
+                std::hint::black_box(params::weighted_mean(&weighted));
+            },
+        );
+
+        let mut acc = vec![0.0f32; p];
+        b.bench_elems(&format!("axpy/{name}"), p as f64, || {
+            params::axpy(&mut acc, 0.5, &vecs[0]);
+            std::hint::black_box(&acc);
+        });
+
+        b.bench_elems(&format!("interpolate/{name}"), p as f64, || {
+            std::hint::black_box(params::interpolate(&vecs[0], &vecs[1], 0.37));
+        });
+    }
+
+    // GB/s summary for the averaging loop (reads 10 vecs + writes out per accumulate)
+    if let Some(r) = b
+        .results()
+        .iter()
+        .find(|r| r.name == "weighted_mean/10clients/cnn_1.66m")
+    {
+        let bytes = (2 * 10) as f64 * 1_663_370.0 * 4.0; // read acc+src per axpy
+        println!(
+            "\nweighted_mean(cnn) effective bandwidth: {:.2} GB/s",
+            bytes / (r.mean_ns / 1e9) / 1e9
+        );
+    }
+}
+
+/// Codec-pipeline encode/measure/decode throughput at CNN size (1.66M
+/// params) — the transport runs once per aggregated client per round on
+/// the server's critical path.
+pub fn codec_pipeline(b: &mut Bencher) -> Result<()> {
+    let dim = 1_663_370; // MNIST CNN parameter count
+    let mut rng = Rng::new(3);
+    let base: Vec<f32> = (0..dim).map(|_| rng.gauss_f32() * 0.1).collect();
+    let mut theta = base.clone();
+    for i in (0..dim).step_by(100) {
+        theta[i] += 0.05; // ~1% round-to-round change
+    }
+
+    for spec in ["q8", "topk:0.01", "topk:0.01|q8"] {
+        let p = Pipeline::parse(spec)?;
+        let mut enc_rng = Rng::new(7);
+        b.bench_elems(&format!("run/{spec}"), dim as f64, || {
+            std::hint::black_box(p.run(&theta, None, &mut enc_rng).unwrap());
+        });
+    }
+
+    // delta downlink: measure (pricing pass, no allocation of the frame)
+    // vs full encode+serialize
+    let delta = Pipeline::parse("delta")?;
+    b.bench_elems("measure/delta", dim as f64, || {
+        std::hint::black_box(delta.measure(&theta, Some(&base)).unwrap());
+    });
+    let mut enc_rng = Rng::new(9);
+    b.bench_elems("encode/delta", dim as f64, || {
+        std::hint::black_box(delta.encode(&theta, Some((1, &base)), &mut enc_rng).unwrap());
+    });
+
+    // frame round-trip at the wire level
+    let p = Pipeline::parse("topk:0.01|q8")?;
+    let frame = p.encode(&theta, None, &mut Rng::new(11))?;
+    println!(
+        "\n  topk:0.01|q8 frame: {} bytes (dense {})",
+        frame.wire_bytes(),
+        4 * dim
+    );
+    b.bench_elems("decode/topk:0.01|q8", dim as f64, || {
+        std::hint::black_box(frame.decode(None).unwrap());
+    });
+    Ok(())
+}
+
+/// Event-queue scheduling overhead at fleet scale: the select →
+/// over-select → schedule → account pipeline at 1k/10k/100k clients.
+pub fn fleet_round(b: &mut Bencher) -> Result<()> {
+    // full round pipeline: diurnal online scan + sample + schedule
+    for k in [1_000usize, 10_000, 100_000] {
+        let cfg = FleetConfig {
+            profile: FleetProfile::Mobile,
+            overselect: 0.3,
+            deadline_s: Some(90.0),
+            ..Default::default()
+        };
+        let m = (k / 100).max(1); // C = 0.01
+        let mut sim = FleetSim::new(&cfg, k, m, 6_653_480, 300.0, 7)?;
+        b.bench_elems(&format!("fleet_round/k={k}"), k as f64, || {
+            std::hint::black_box(sim.step());
+        });
+    }
+
+    // scheduler alone: the event queue at growing dispatch sizes
+    for n in [1_000usize, 10_000, 100_000] {
+        let mut rng = Rng::new(11);
+        let durations: Vec<(usize, f64)> = (0..n).map(|c| (c, 1.0 + 99.0 * rng.f64())).collect();
+        let m = n * 3 / 4;
+        b.bench_elems(&format!("schedule_round/n={n}"), n as f64, || {
+            std::hint::black_box(schedule_round(m, Some(80.0), &durations));
+        });
+    }
+    Ok(())
+}
+
+/// Aggregation rules at paper-model sizes: combine (weighted mean vs the
+/// robust order statistics) and the stateful server-optimizer steps.
+pub fn aggregators(b: &mut Bencher) -> Result<()> {
+    let dim = 199_210; // MNIST 2NN parameter count
+    let m = 50;
+    let mut rng = Rng::new(3);
+    let deltas: Vec<Vec<f32>> = (0..m)
+        .map(|_| (0..dim).map(|_| rng.gauss_f32() * 0.01).collect())
+        .collect();
+    let refs: Vec<(f32, &[f32])> = deltas.iter().map(|d| (600.0, d.as_slice())).collect();
+
+    for spec in ["fedavg", "trimmed:0.1", "median"] {
+        let agg = AggConfig {
+            spec: spec.into(),
+            ..Default::default()
+        }
+        .build()?;
+        b.bench_elems(&format!("combine/{spec}"), dim as f64, || {
+            std::hint::black_box(agg.combine(&refs).unwrap());
+        });
+    }
+
+    // stateful server steps at CNN size (the heavyweight image model).
+    // step() consumes its input, so feed the returned buffer back in —
+    // no per-iteration clone polluting the measurement (the values drift
+    // as the optimizer reprocesses its own output; only timing matters).
+    let big = 1_663_370;
+    let delta: Vec<f32> = (0..big).map(|_| rng.gauss_f32() * 0.01).collect();
+    for spec in ["fedavgm", "fedadam"] {
+        let mut agg = AggConfig {
+            spec: spec.into(),
+            ..Default::default()
+        }
+        .build()?;
+        let mut round = 0u64;
+        let mut buf = delta.clone();
+        b.bench_elems(&format!("step/{spec} (1.66M params)"), big as f64, || {
+            round += 1;
+            buf = agg.step(round, std::mem::take(&mut buf)).unwrap();
+            std::hint::black_box(buf.len());
+        });
+    }
+    Ok(())
+}
+
+fn toy_image(n: usize, dim: usize) -> Dataset {
+    let mut rng = Rng::new(5);
+    Dataset {
+        name: "bench".into(),
+        examples: Examples::Image {
+            x: (0..n * dim).map(|_| rng.f32()).collect(),
+            y: (0..n).map(|_| rng.below(10) as i32).collect(),
+            dim,
+        },
+    }
+}
+
+/// ClientUpdate latency per model/batch-size — one local SGD step, a
+/// full-batch gradient, an apply, and a full E=1 ClientUpdate through
+/// the PJRT executables. Skips cleanly without `make artifacts`.
+pub fn client_update(b: &mut Bencher) -> Result<AreaStatus> {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        return Ok(AreaStatus::Skipped("no artifacts — run `make artifacts`"));
+    }
+    let engine = Engine::load(dir)?;
+
+    for (mname, dim) in [("mnist_2nn", 784usize), ("mnist_cnn", 784)] {
+        let model = engine.model(mname)?;
+        let theta = model.init(1)?;
+        let data = toy_image(60, dim);
+        let idxs: Vec<usize> = (0..60).collect();
+
+        let batch10 = data.padded_batch(&idxs[..10], 10);
+        b.bench(&format!("{mname}/step_b10"), || {
+            std::hint::black_box(model.step(&theta, &batch10, 0.05).unwrap());
+        });
+
+        let cap = model.meta().acc_batch;
+        let batch_acc = data.padded_batch(&idxs[..cap.min(60)], cap);
+        b.bench(&format!("{mname}/gradacc_b{cap}"), || {
+            std::hint::black_box(model.gradacc(&theta, &batch_acc).unwrap());
+        });
+
+        let g = vec![0.01f32; theta.len()];
+        b.bench(&format!("{mname}/apply"), || {
+            std::hint::black_box(model.apply(&theta, &g, 0.05).unwrap());
+        });
+
+        b.bench(&format!("{mname}/eval_b{cap}"), || {
+            std::hint::black_box(model.eval_batch(&theta, &batch_acc).unwrap());
+        });
+
+        // one full ClientUpdate: E=1, B=10 over 60 examples (6 steps)
+        let spec = LocalSpec {
+            epochs: 1,
+            batch: BatchSize::Fixed(10),
+            lr: 0.05,
+            prox_mu: 0.0,
+            shuffle_seed: 3,
+        };
+        b.bench(&format!("{mname}/client_update_E1_B10_n60"), || {
+            std::hint::black_box(local_update(&model, &data, &idxs, &theta, &spec).unwrap());
+        });
+    }
+
+    let stats = engine.stats();
+    println!(
+        "\nengine: {} steps / {} gradaccs / {} evals, compile {:.1}s, execute {:.1}s",
+        stats.steps,
+        stats.gradaccs,
+        stats.evals,
+        stats.compile_ms as f64 / 1e3,
+        stats.execute_ms as f64 / 1e3
+    );
+    Ok(AreaStatus::Recorded)
+}
+
+// -------------------------------------------------------------- snapshots
+
+/// `os-arch[-hostname]` — enough to tell trajectories from different
+/// machines apart without leaking anything else.
+pub fn machine_tag() -> String {
+    let mut tag = format!("{}-{}", std::env::consts::OS, std::env::consts::ARCH);
+    if let Ok(host) = std::env::var("HOSTNAME") {
+        if !host.is_empty() {
+            tag.push('-');
+            tag.push_str(&host);
+        }
+    }
+    tag
+}
+
+fn fmt_case(r: &BenchResult) -> String {
+    let elems = match r.elems_per_iter {
+        Some(e) => format!("{e}"),
+        None => "null".into(),
+    };
+    format!(
+        "    {{\"name\": {}, \"iters\": {}, \"mean_ns\": {}, \"median_ns\": {}, \
+         \"p10_ns\": {}, \"p90_ns\": {}, \"elems_per_iter\": {}}}",
+        escape(&r.name),
+        r.iters,
+        r.mean_ns,
+        r.p50_ns,
+        r.p10_ns,
+        r.p90_ns,
+        elems
+    )
+}
+
+/// Render one area's snapshot JSON (`BENCH_schema.md`).
+pub fn snapshot_json(
+    area: &str,
+    machine: &str,
+    recorded_unix_s: u64,
+    results: &[BenchResult],
+) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"schema\": {},\n", escape(BENCH_SCHEMA)));
+    out.push_str(&format!("  \"area\": {},\n", escape(area)));
+    out.push_str(&format!("  \"machine\": {},\n", escape(machine)));
+    out.push_str(&format!("  \"recorded_unix_s\": {recorded_unix_s},\n"));
+    out.push_str("  \"cases\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        out.push_str(&fmt_case(r));
+        out.push_str(if i + 1 == results.len() { "\n" } else { ",\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write `BENCH_<area>.json` atomically, self-validating the emitted
+/// text against the schema first (a malformed snapshot must fail the
+/// recording run, not the next reader).
+pub fn write_snapshot(path: &Path, area: &str, results: &[BenchResult]) -> Result<()> {
+    anyhow::ensure!(!results.is_empty(), "area {area}: no cases to snapshot");
+    let now = SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let text = snapshot_json(area, &machine_tag(), now, results);
+    validate_snapshot(&text)?;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    atomic_write(path, text.as_bytes())
+}
+
+/// Validate snapshot text against the `fedavg-bench-v1` schema. Returns
+/// the case count.
+pub fn validate_snapshot(text: &str) -> Result<usize> {
+    let j = Json::parse(text)?;
+    let schema = j.get("schema")?.as_str()?;
+    anyhow::ensure!(schema == BENCH_SCHEMA, "schema {schema:?}, expected {BENCH_SCHEMA:?}");
+    let area = j.get("area")?.as_str()?;
+    anyhow::ensure!(!area.is_empty(), "empty area");
+    anyhow::ensure!(!j.get("machine")?.as_str()?.is_empty(), "empty machine tag");
+    j.get("recorded_unix_s")?.as_usize()?;
+    let cases = j.get("cases")?.as_arr()?;
+    anyhow::ensure!(!cases.is_empty(), "area {area}: no cases");
+    let mut names = Vec::with_capacity(cases.len());
+    for c in cases {
+        let name = c.get("name")?.as_str()?;
+        anyhow::ensure!(!name.is_empty(), "case with empty name");
+        anyhow::ensure!(!names.contains(&name), "duplicate case {name:?}");
+        names.push(name);
+        anyhow::ensure!(c.get("iters")?.as_usize()? >= 1, "case {name:?}: zero iters");
+        let mut ns = [0.0; 4];
+        for (slot, k) in ["mean_ns", "median_ns", "p10_ns", "p90_ns"].iter().enumerate() {
+            let v = c.get(k)?.as_f64()?;
+            anyhow::ensure!(v.is_finite() && v >= 0.0, "case {name:?}: bad {k} {v}");
+            ns[slot] = v;
+        }
+        anyhow::ensure!(
+            ns[2] <= ns[1] && ns[1] <= ns[3],
+            "case {name:?}: p10/median/p90 out of order"
+        );
+        match c.get("elems_per_iter")? {
+            Json::Null => {}
+            v => {
+                let e = v.as_f64()?;
+                anyhow::ensure!(e.is_finite() && e > 0.0, "case {name:?}: bad elems {e}");
+            }
+        }
+    }
+    Ok(names.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(name: &str) -> BenchResult {
+        BenchResult {
+            name: name.into(),
+            iters: 100,
+            mean_ns: 1500.0,
+            p50_ns: 1400.0,
+            p95_ns: 2000.0,
+            p10_ns: 1200.0,
+            p90_ns: 1900.0,
+            elems_per_iter: Some(199_210.0),
+        }
+    }
+
+    #[test]
+    fn snapshot_validates_and_rejects() {
+        let good = snapshot_json("params_hot_path", "linux-x86_64", 1, &[result("axpy")]);
+        assert_eq!(validate_snapshot(&good).unwrap(), 1);
+
+        let wrong_schema = good.replace(BENCH_SCHEMA, "fedavg-bench-v0");
+        assert!(validate_snapshot(&wrong_schema).is_err());
+
+        let empty = snapshot_json("params_hot_path", "m", 1, &[]);
+        assert!(validate_snapshot(&empty).is_err());
+
+        let dup = snapshot_json("a", "m", 1, &[result("x"), result("x")]);
+        assert!(validate_snapshot(&dup).is_err());
+
+        let mut bad = result("y");
+        bad.p10_ns = 9999.0; // p10 > median
+        let out_of_order = snapshot_json("a", "m", 1, &[bad]);
+        assert!(validate_snapshot(&out_of_order).is_err());
+    }
+
+    #[test]
+    fn write_snapshot_roundtrips_on_disk() {
+        let path = std::path::PathBuf::from(format!(
+            "target/test-runs/bench-snap-{}/BENCH_test.json",
+            std::process::id()
+        ));
+        let mut r = result("weighted_mean/10clients/2nn_199k");
+        r.elems_per_iter = None;
+        write_snapshot(&path, "params_hot_path", &[r]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(validate_snapshot(&text).unwrap(), 1);
+        assert!(text.contains("\"elems_per_iter\": null"));
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn unknown_area_is_refused() {
+        let mut b = check_bencher();
+        assert!(run_area("nope", &mut b).is_err());
+    }
+}

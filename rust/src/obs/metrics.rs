@@ -1,0 +1,361 @@
+//! The metrics registry (DESIGN.md §10): counters, gauges, and
+//! histograms behind one cloneable [`Metrics`] handle.
+//!
+//! This absorbs the ad-hoc counters that used to live as locals in the
+//! server round loop (`wire_bytes`, `dropped`, `deadline_misses`, fleet
+//! dispatch totals, client SGD steps) and the grid engine's cache-hit
+//! accounting. Counters carry a **mark**: `pending()` returns the growth
+//! since the last `mark()`, which is exactly the "events since the last
+//! telemetry record" semantics the curve's `dropped`/`deadline_misses`
+//! columns need — the registry produces the same u64 arithmetic the old
+//! locals did, so curve.csv stays byte-identical.
+//!
+//! Resume: the server re-seeds its counters from the snapshot's existing
+//! `FleetState`/`CommState`/`client_steps` sections ([`Metrics::
+//! seed_counter`]) — cumulative totals ride the `state_save/state_load`
+//! surface of DESIGN.md §8 without a snapshot-format change. The
+//! registry also serializes wholesale ([`Metrics::state_save`]) for
+//! callers that own their persistence.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::Result;
+
+/// Histogram summary: count/sum/min/max plus coarse log2 buckets
+/// covering ~1e-9 .. ~5e2 (seconds-scale observations; anything outside
+/// clamps to the end buckets).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hist {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    buckets: Vec<u64>,
+}
+
+const HIST_BUCKETS: usize = 40;
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: vec![0; HIST_BUCKETS],
+        }
+    }
+}
+
+impl Hist {
+    fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        let idx = (v.max(1e-9).log2().floor() as i64 + 30).clamp(0, HIST_BUCKETS as i64 - 1);
+        self.buckets[idx as usize] += 1;
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Metric {
+    Counter { value: u64, marked: u64 },
+    Gauge(f64),
+    Hist(Hist),
+}
+
+/// A metric's public view ([`Metrics::snapshot`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricValue {
+    Counter { value: u64, marked: u64 },
+    Gauge(f64),
+    Hist { count: u64, sum: f64, min: f64, max: f64 },
+}
+
+/// Cloneable, thread-safe registry handle. `Metrics::default()` is an
+/// empty registry; clones share storage.
+#[derive(Clone, Default)]
+pub struct Metrics(Arc<Mutex<BTreeMap<String, Metric>>>);
+
+impl std::fmt::Debug for Metrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Metrics({} entries)", self.0.lock().expect("metrics poisoned").len())
+    }
+}
+
+impl Metrics {
+    /// Add `n` to counter `name` (created at zero).
+    pub fn add(&self, name: &str, n: u64) {
+        let mut m = self.0.lock().expect("metrics poisoned");
+        match m
+            .entry(name.to_string())
+            .or_insert(Metric::Counter { value: 0, marked: 0 })
+        {
+            Metric::Counter { value, .. } => *value += n,
+            other => panic!("metric {name:?} is not a counter: {other:?}"),
+        }
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Current counter value (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.0.lock().expect("metrics poisoned").get(name) {
+            Some(Metric::Counter { value, .. }) => *value,
+            _ => 0,
+        }
+    }
+
+    /// Counter growth since the last [`mark`](Self::mark) — the
+    /// "since the last telemetry record" view.
+    pub fn pending(&self, name: &str) -> u64 {
+        match self.0.lock().expect("metrics poisoned").get(name) {
+            Some(Metric::Counter { value, marked }) => value - marked,
+            _ => 0,
+        }
+    }
+
+    /// Consume the pending growth: the next [`pending`](Self::pending)
+    /// counts from here.
+    pub fn mark(&self, name: &str) {
+        if let Some(Metric::Counter { value, marked }) =
+            self.0.lock().expect("metrics poisoned").get_mut(name)
+        {
+            *marked = *value;
+        }
+    }
+
+    /// Install a counter at an absolute state (resume seeding): `value`
+    /// cumulative, `marked` the portion already recorded to telemetry.
+    pub fn seed_counter(&self, name: &str, value: u64, marked: u64) {
+        assert!(marked <= value, "metric {name:?}: marked {marked} > value {value}");
+        self.0
+            .lock()
+            .expect("metrics poisoned")
+            .insert(name.to_string(), Metric::Counter { value, marked });
+    }
+
+    /// Set gauge `name`.
+    pub fn gauge(&self, name: &str, v: f64) {
+        self.0
+            .lock()
+            .expect("metrics poisoned")
+            .insert(name.to_string(), Metric::Gauge(v));
+    }
+
+    /// Last gauge value, if set.
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        match self.0.lock().expect("metrics poisoned").get(name) {
+            Some(Metric::Gauge(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Record one observation into histogram `name`.
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut m = self.0.lock().expect("metrics poisoned");
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Hist(Hist::default()))
+        {
+            Metric::Hist(h) => h.observe(v),
+            other => panic!("metric {name:?} is not a histogram: {other:?}"),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.lock().expect("metrics poisoned").is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.lock().expect("metrics poisoned").len()
+    }
+
+    /// Name-ordered view of every metric (the registry section of the
+    /// trace table; deterministic by BTreeMap order).
+    pub fn snapshot(&self) -> Vec<(String, MetricValue)> {
+        self.0
+            .lock()
+            .expect("metrics poisoned")
+            .iter()
+            .map(|(k, v)| {
+                let mv = match v {
+                    Metric::Counter { value, marked } => MetricValue::Counter {
+                        value: *value,
+                        marked: *marked,
+                    },
+                    Metric::Gauge(g) => MetricValue::Gauge(*g),
+                    Metric::Hist(h) => MetricValue::Hist {
+                        count: h.count,
+                        sum: h.sum,
+                        min: h.min,
+                        max: h.max,
+                    },
+                };
+                (k.clone(), mv)
+            })
+            .collect()
+    }
+
+    /// Serialize the whole registry (tagged entries; the same additive
+    /// byte discipline as the snapshot sections of DESIGN.md §8).
+    pub fn state_save(&self) -> Vec<u8> {
+        let m = self.0.lock().expect("metrics poisoned");
+        let mut w = ByteWriter::new();
+        w.put_u8(1); // registry format version
+        w.put_u64(m.len() as u64);
+        for (name, v) in m.iter() {
+            w.put_str(name);
+            match v {
+                Metric::Counter { value, marked } => {
+                    w.put_u8(0);
+                    w.put_u64(*value);
+                    w.put_u64(*marked);
+                }
+                Metric::Gauge(g) => {
+                    w.put_u8(1);
+                    w.put_f64(*g);
+                }
+                Metric::Hist(h) => {
+                    w.put_u8(2);
+                    w.put_u64(h.count);
+                    w.put_f64(h.sum);
+                    w.put_f64(h.min);
+                    w.put_f64(h.max);
+                    w.put_u64s(&h.buckets);
+                }
+            }
+        }
+        w.into_inner()
+    }
+
+    /// Replace the registry's contents from [`state_save`](Self::state_save) bytes.
+    pub fn state_load(&self, bytes: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let ver = r.u8()?;
+        anyhow::ensure!(ver == 1, "metrics registry: unknown format version {ver}");
+        let n = r.u64()?;
+        let mut loaded = BTreeMap::new();
+        for _ in 0..n {
+            let name = r.str()?;
+            let metric = match r.u8()? {
+                0 => {
+                    let value = r.u64()?;
+                    let marked = r.u64()?;
+                    anyhow::ensure!(marked <= value, "metric {name:?}: marked > value");
+                    Metric::Counter { value, marked }
+                }
+                1 => Metric::Gauge(r.f64()?),
+                2 => {
+                    let count = r.u64()?;
+                    let sum = r.f64()?;
+                    let min = r.f64()?;
+                    let max = r.f64()?;
+                    let buckets = r.u64s()?;
+                    anyhow::ensure!(
+                        buckets.len() == HIST_BUCKETS,
+                        "metric {name:?}: {} histogram buckets",
+                        buckets.len()
+                    );
+                    Metric::Hist(Hist { count, sum, min, max, buckets })
+                }
+                t => anyhow::bail!("metric {name:?}: unknown tag {t}"),
+            };
+            loaded.insert(name, metric);
+        }
+        r.expect_end()?;
+        *self.0.lock().expect("metrics poisoned") = loaded;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_mark_and_pend() {
+        let m = Metrics::default();
+        m.add("drops", 3);
+        m.inc("drops");
+        assert_eq!(m.counter("drops"), 4);
+        assert_eq!(m.pending("drops"), 4);
+        m.mark("drops");
+        assert_eq!(m.pending("drops"), 0);
+        m.add("drops", 2);
+        assert_eq!((m.counter("drops"), m.pending("drops")), (6, 2));
+        assert_eq!(m.counter("absent"), 0);
+        assert_eq!(m.pending("absent"), 0);
+    }
+
+    #[test]
+    fn seed_counter_restores_resume_state() {
+        let m = Metrics::default();
+        // cumulative 10 drops, 7 of them already written to curve.csv
+        m.seed_counter("drops", 10, 7);
+        assert_eq!(m.counter("drops"), 10);
+        assert_eq!(m.pending("drops"), 3);
+        m.add("drops", 1);
+        assert_eq!(m.pending("drops"), 4);
+    }
+
+    #[test]
+    fn gauges_and_hists() {
+        let m = Metrics::default();
+        m.gauge("ef", 1.25);
+        assert_eq!(m.gauge_value("ef"), Some(1.25));
+        m.gauge("ef", 2.5);
+        assert_eq!(m.gauge_value("ef"), Some(2.5));
+        for v in [0.5, 1.0, 8.0] {
+            m.observe("round_s", v);
+        }
+        match m.snapshot().iter().find(|(k, _)| k == "round_s").map(|(_, v)| v.clone()) {
+            Some(MetricValue::Hist { count, sum, min, max }) => {
+                assert_eq!(count, 3);
+                assert_eq!(sum, 9.5);
+                assert_eq!((min, max), (0.5, 8.0));
+            }
+            other => panic!("expected histogram, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn state_roundtrips_bit_exactly() {
+        let m = Metrics::default();
+        m.add("a.count", 42);
+        m.mark("a.count");
+        m.add("a.count", 5);
+        m.gauge("b.gauge", -0.125);
+        m.observe("c.hist", 3.5);
+        m.observe("c.hist", 0.25);
+        let bytes = m.state_save();
+
+        let back = Metrics::default();
+        back.add("stale", 1); // replaced wholesale by load
+        back.state_load(&bytes).unwrap();
+        assert_eq!(back.snapshot(), m.snapshot());
+        assert_eq!(back.counter("a.count"), 47);
+        assert_eq!(back.pending("a.count"), 5);
+        assert_eq!(back.counter("stale"), 0);
+        // and the reserialization is byte-identical
+        assert_eq!(back.state_save(), bytes);
+    }
+
+    #[test]
+    fn state_load_rejects_garbage() {
+        let m = Metrics::default();
+        assert!(m.state_load(&[9]).is_err());
+        assert!(m.state_load(&[]).is_err());
+        let mut good = Metrics::default();
+        good.add("x", 1);
+        let mut bytes = good.state_save();
+        bytes.push(0); // trailing garbage
+        good = Metrics::default();
+        assert!(good.state_load(&bytes).is_err());
+    }
+}

@@ -1,0 +1,30 @@
+//! Observability (DESIGN.md §10): span tracing, the metrics registry,
+//! and the bench trajectory harness.
+//!
+//! Three parts, one constraint:
+//!
+//! - [`trace`] — a hierarchical span tracer around every round phase.
+//!   Enabled with `--trace` on `run`/`fleet`/grid subcommands; appends
+//!   structured records to `runs/<name>/trace.jsonl` and prints a
+//!   per-round phase breakdown table (plus the metrics registry) at run
+//!   end.
+//! - [`metrics`] — counters/gauges/histograms behind one cloneable
+//!   [`Metrics`] handle, absorbing the ad-hoc counters the server and
+//!   grid engine used to carry as locals; counters survive
+//!   checkpoint/resume via the snapshot's existing sections.
+//! - [`bench`] — the five bench areas as library functions plus the
+//!   committed `BENCH_<area>.json` snapshot format (`fedavg bench`,
+//!   `BENCH_schema.md`).
+//!
+//! The constraint: with tracing disabled the hot path is byte-identical
+//! and overhead-free — a disabled [`Tracer`] is a `None` and
+//! [`Tracer::begin`] never reads the clock. Wall-clock numbers live
+//! ONLY in trace.jsonl and BENCH files, never in curve.csv or grid
+//! manifests, preserving the byte-identity guarantees of §8/§9.
+
+pub mod bench;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{MetricValue, Metrics};
+pub use trace::{read_trace, Span, TraceRecord, Tracer};

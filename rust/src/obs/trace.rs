@@ -1,0 +1,398 @@
+//! Hierarchical span tracer (DESIGN.md §10).
+//!
+//! A [`Tracer`] is a cheap, cloneable handle shared by the server round
+//! loop, the worker pool, and the fleet simulator. Disabled (the
+//! default), [`Tracer::begin`] returns `None` without ever reading the
+//! clock — the hot path is overhead-free and byte-identical to a
+//! tracer-less build. Enabled (`--trace`), every finished span appends
+//! one JSONL record to `trace.jsonl` under the run dir:
+//!
+//! ```json
+//! {"seq":17,"round":3,"phase":"local_train","depth":2,"wall_ns":81233,
+//!  "client":12,"worker":1,"bytes":796680}
+//! ```
+//!
+//! `seq` is the record's append order (a tie-breaker for tooling; wall
+//! ordering under `--workers N` is nondeterministic by nature), `depth`
+//! the structural nesting (0 = the round itself, 1 = a round phase,
+//! 2 = per-client work inside a phase). `bytes` and `sim_s` carry the
+//! span's wire bytes and simulated seconds where they apply. Wall-clock
+//! values live **only** here — never in curve.csv or grid manifests —
+//! preserving the byte-identity guarantees of DESIGN.md §8/§9.
+//!
+//! [`Tracer::finish`] renders the per-phase breakdown table printed at
+//! run end, including the coverage line (what share of measured round
+//! wall time the depth-1 phases account for — the §10 acceptance bar is
+//! ≥ 90%).
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::obs::metrics::{MetricValue, Metrics};
+use crate::util::bench::fmt_ns;
+use crate::util::json::Json;
+use crate::Result;
+
+/// An in-flight span: started by [`Tracer::begin`], finished by
+/// [`Tracer::end`]. Builder methods attach optional fields; the clock
+/// was read at `begin`, so attaching fields costs nothing extra.
+#[derive(Debug)]
+pub struct Span {
+    round: u64,
+    phase: &'static str,
+    depth: u8,
+    client: Option<u64>,
+    worker: Option<u64>,
+    bytes: Option<u64>,
+    sim_s: Option<f64>,
+    t0: Instant,
+}
+
+impl Span {
+    pub fn client(mut self, client: u64) -> Self {
+        self.client = Some(client);
+        self
+    }
+
+    pub fn worker(mut self, worker: u64) -> Self {
+        self.worker = Some(worker);
+        self
+    }
+
+    pub fn bytes(mut self, bytes: u64) -> Self {
+        self.bytes = Some(bytes);
+        self
+    }
+
+    pub fn sim(mut self, sim_s: f64) -> Self {
+        self.sim_s = Some(sim_s);
+        self
+    }
+}
+
+/// Per-(depth, phase) aggregate for the end-of-run table.
+#[derive(Debug, Default, Clone, Copy)]
+struct PhaseAgg {
+    spans: u64,
+    total_ns: u128,
+}
+
+struct TraceState {
+    out: BufWriter<File>,
+    seq: u64,
+    agg: BTreeMap<(u8, &'static str), PhaseAgg>,
+    /// First write error, surfaced by [`Tracer::finish`] — span ends on
+    /// the hot path stay infallible.
+    error: Option<String>,
+}
+
+struct Inner {
+    path: PathBuf,
+    state: Mutex<TraceState>,
+}
+
+/// Cloneable tracer handle. `Tracer::default()` is disabled: `begin`
+/// returns `None`, `end(None)` is a no-op, and no file is touched.
+#[derive(Clone, Default)]
+pub struct Tracer(Option<Arc<Inner>>);
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            None => write!(f, "Tracer(off)"),
+            Some(i) => write!(f, "Tracer({:?})", i.path),
+        }
+    }
+}
+
+impl Tracer {
+    /// Enabled tracer appending JSONL records to `path` (truncated; the
+    /// parent directory is created).
+    pub fn to_file(path: &Path) -> Result<Tracer> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = File::create(path)?;
+        Ok(Tracer(Some(Arc::new(Inner {
+            path: path.to_path_buf(),
+            state: Mutex::new(TraceState {
+                out: BufWriter::new(file),
+                seq: 0,
+                agg: BTreeMap::new(),
+                error: None,
+            }),
+        }))))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// The trace file's path (enabled tracers only).
+    pub fn path(&self) -> Option<&Path> {
+        self.0.as_ref().map(|i| i.path.as_path())
+    }
+
+    /// Start a span. Disabled: returns `None` without reading the clock
+    /// — callers attach expensive fields via `.map(|s| s.bytes(..))` so
+    /// the disabled path computes nothing.
+    pub fn begin(&self, round: u64, phase: &'static str, depth: u8) -> Option<Span> {
+        self.0.as_ref()?;
+        Some(Span {
+            round,
+            phase,
+            depth,
+            client: None,
+            worker: None,
+            bytes: None,
+            sim_s: None,
+            t0: Instant::now(),
+        })
+    }
+
+    /// Finish a span: append its record and fold it into the table
+    /// aggregates. Infallible on the hot path — the first write error is
+    /// remembered and surfaced by [`finish`](Self::finish).
+    pub fn end(&self, span: Option<Span>) {
+        let (inner, sp) = match (self.0.as_ref(), span) {
+            (Some(i), Some(s)) => (i, s),
+            _ => return,
+        };
+        let wall_ns = sp.t0.elapsed().as_nanos();
+        let mut line = format!(
+            "{{\"seq\":@,\"round\":{},\"phase\":\"{}\",\"depth\":{},\"wall_ns\":{}",
+            sp.round, sp.phase, sp.depth, wall_ns
+        );
+        if let Some(c) = sp.client {
+            line.push_str(&format!(",\"client\":{c}"));
+        }
+        if let Some(w) = sp.worker {
+            line.push_str(&format!(",\"worker\":{w}"));
+        }
+        if let Some(b) = sp.bytes {
+            line.push_str(&format!(",\"bytes\":{b}"));
+        }
+        if let Some(s) = sp.sim_s {
+            line.push_str(&format!(",\"sim_s\":{s}"));
+        }
+        line.push_str("}\n");
+        let mut st = inner.state.lock().expect("tracer poisoned");
+        let line = line.replacen('@', &st.seq.to_string(), 1);
+        st.seq += 1;
+        let a = st.agg.entry((sp.depth, sp.phase)).or_default();
+        a.spans += 1;
+        a.total_ns += wall_ns;
+        let res = st.out.write_all(line.as_bytes()).and_then(|_| {
+            // round records (depth 0) close a durable unit: flush so a
+            // killed run's trace is readable up to its last full round
+            if sp.depth == 0 {
+                st.out.flush()
+            } else {
+                Ok(())
+            }
+        });
+        if let (Err(e), None) = (res, st.error.as_ref()) {
+            st.error = Some(e.to_string());
+        }
+    }
+
+    /// Flush the trace and render the per-phase breakdown table
+    /// (`None` when disabled). Any write error deferred from the hot
+    /// path surfaces here. Counters/gauges from `metrics` are appended
+    /// as a registry section when the registry is non-empty.
+    pub fn finish(&self, metrics: &Metrics) -> Result<Option<String>> {
+        let inner = match self.0.as_ref() {
+            Some(i) => i,
+            None => return Ok(None),
+        };
+        let mut st = inner.state.lock().expect("tracer poisoned");
+        st.out.flush()?;
+        if let Some(e) = st.error.take() {
+            anyhow::bail!("trace {:?}: deferred write error: {e}", inner.path);
+        }
+        let mut out = format!("\n-- trace: per-phase breakdown ({}) --\n", inner.path.display());
+        let root_ns: u128 = st
+            .agg
+            .iter()
+            .filter(|((d, _), _)| *d == 0)
+            .map(|(_, a)| a.total_ns)
+            .sum();
+        let phase_ns: u128 = st
+            .agg
+            .iter()
+            .filter(|((d, _), _)| *d == 1)
+            .map(|(_, a)| a.total_ns)
+            .sum();
+        out.push_str(&format!(
+            "{:<26} {:>5} {:>8} {:>12} {:>12} {:>8}\n",
+            "phase", "depth", "spans", "total", "mean", "share"
+        ));
+        for (&(depth, phase), a) in &st.agg {
+            let mean = a.total_ns as f64 / a.spans.max(1) as f64;
+            let share = if root_ns > 0 {
+                100.0 * a.total_ns as f64 / root_ns as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{:<26} {:>5} {:>8} {:>12} {:>12} {:>7.1}%\n",
+                format!("{}{}", "  ".repeat(depth as usize), phase),
+                depth,
+                a.spans,
+                fmt_ns(a.total_ns as f64),
+                fmt_ns(mean),
+                share,
+            ));
+        }
+        if root_ns > 0 {
+            out.push_str(&format!(
+                "coverage: depth-1 phases account for {:.1}% of measured round wall time\n",
+                100.0 * phase_ns as f64 / root_ns as f64
+            ));
+        }
+        let snap = metrics.snapshot();
+        if !snap.is_empty() {
+            out.push_str("-- metrics registry --\n");
+            for (name, v) in snap {
+                match v {
+                    MetricValue::Counter { value, .. } => {
+                        out.push_str(&format!("{name:<34} {value}\n"));
+                    }
+                    MetricValue::Gauge(g) => out.push_str(&format!("{name:<34} {g:.6}\n")),
+                    MetricValue::Hist {
+                        count,
+                        sum,
+                        min,
+                        max,
+                    } => {
+                        let mean = if count > 0 { sum / count as f64 } else { 0.0 };
+                        out.push_str(&format!(
+                            "{name:<34} n={count} mean={mean:.6} min={min:.6} max={max:.6}\n"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(Some(out))
+    }
+}
+
+/// One parsed `trace.jsonl` record (tests + tooling).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    pub seq: u64,
+    pub round: u64,
+    pub phase: String,
+    pub depth: u8,
+    pub wall_ns: u64,
+    pub client: Option<u64>,
+    pub worker: Option<u64>,
+    pub bytes: Option<u64>,
+    pub sim_s: Option<f64>,
+}
+
+impl TraceRecord {
+    /// The wall-clock-free identity of a span: what `--workers N` must
+    /// reproduce exactly (worker ids and append order legitimately
+    /// differ across schedules; the work itself must not).
+    pub fn key(&self) -> (u64, String, u8, Option<u64>, Option<u64>) {
+        (self.round, self.phase.clone(), self.depth, self.client, self.bytes)
+    }
+
+    pub fn parse(line: &str) -> Result<TraceRecord> {
+        let j = Json::parse(line)?;
+        let num = |k: &str| -> Result<u64> { Ok(j.get(k)?.as_f64()? as u64) };
+        let opt = |k: &str| -> Option<u64> {
+            j.get(k).ok().and_then(|v| v.as_f64().ok()).map(|v| v as u64)
+        };
+        Ok(TraceRecord {
+            seq: num("seq")?,
+            round: num("round")?,
+            phase: j.get("phase")?.as_str()?.to_string(),
+            depth: num("depth")? as u8,
+            wall_ns: num("wall_ns")?,
+            client: opt("client"),
+            worker: opt("worker"),
+            bytes: opt("bytes"),
+            sim_s: j.get("sim_s").ok().and_then(|v| v.as_f64().ok()),
+        })
+    }
+}
+
+/// Read and parse a whole trace file.
+pub fn read_trace(path: &Path) -> Result<Vec<TraceRecord>> {
+    let text = std::fs::read_to_string(path)?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(TraceRecord::parse)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_path(tag: &str) -> PathBuf {
+        PathBuf::from(format!("target/test-runs/trace-{tag}-{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        let tr = Tracer::default();
+        assert!(!tr.enabled());
+        assert!(tr.begin(1, "round", 0).is_none());
+        tr.end(None);
+        let mx = Metrics::default();
+        assert!(tr.finish(&mx).unwrap().is_none());
+    }
+
+    #[test]
+    fn records_roundtrip_through_jsonl() {
+        let path = test_path("roundtrip");
+        let tr = Tracer::to_file(&path).unwrap();
+        let root = tr.begin(1, "round", 0);
+        let sp = tr.begin(1, "local_train", 2).map(|s| s.client(3).worker(0).bytes(128));
+        tr.end(sp);
+        tr.end(root.map(|s| s.bytes(256).sim(12.5)));
+        let mx = Metrics::default();
+        mx.add("wire.up_bytes", 128);
+        let table = tr.finish(&mx).unwrap().expect("enabled");
+        assert!(table.contains("coverage:"), "{table}");
+        assert!(table.contains("wire.up_bytes"), "{table}");
+
+        let recs = read_trace(&path).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].phase, "local_train");
+        assert_eq!(recs[0].client, Some(3));
+        assert_eq!(recs[0].bytes, Some(128));
+        assert_eq!(recs[1].phase, "round");
+        assert_eq!(recs[1].depth, 0);
+        assert_eq!(recs[1].sim_s, Some(12.5));
+        assert_eq!(recs[0].seq + 1, recs[1].seq);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn span_keys_ignore_schedule_noise() {
+        let a = TraceRecord {
+            seq: 0,
+            round: 2,
+            phase: "local_train".into(),
+            depth: 2,
+            wall_ns: 10,
+            client: Some(1),
+            worker: Some(0),
+            bytes: Some(64),
+            sim_s: None,
+        };
+        let mut b = a.clone();
+        b.seq = 99;
+        b.wall_ns = 77_000;
+        b.worker = Some(3);
+        assert_eq!(a.key(), b.key());
+    }
+}

@@ -42,6 +42,13 @@
 //! stop): a finished run can be *extended* — `--resume` with a larger
 //! `--rounds` — without replaying a single round.
 //!
+//! The [`obs`](crate::obs) metrics registry (DESIGN.md §10) adds no
+//! section of its own: on resume the server re-seeds its counters (wire
+//! bytes, client steps, fleet drops/misses, rounds) from the
+//! `SCHED`/`COMMS`/`FLEET` sections that already carry the same totals,
+//! so resumed runs report cumulative metrics with an unchanged snapshot
+//! format.
+//!
 //! On resume the snapshot's [`RunMeta`] fingerprint is checked against
 //! the current invocation (model/C/E/B/lr label, aggregation rule, codec
 //! pair, seed, client count, parameter count, lr decay, eval cadence) so

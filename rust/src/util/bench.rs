@@ -13,6 +13,10 @@ pub struct BenchResult {
     pub mean_ns: f64,
     pub p50_ns: f64,
     pub p95_ns: f64,
+    /// tail quantiles recorded into `BENCH_<area>.json` snapshots
+    /// (DESIGN.md §10)
+    pub p10_ns: f64,
+    pub p90_ns: f64,
     /// throughput hint: elements (or bytes) per iteration, if set
     pub elems_per_iter: Option<f64>,
 }
@@ -125,15 +129,16 @@ impl Bencher {
         }
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-        let p50 = samples[samples.len() / 2];
-        let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
-        let p95 = samples[p95_idx];
+        let quantile =
+            |frac: f64| samples[((samples.len() as f64 * frac) as usize).min(samples.len() - 1)];
         let res = BenchResult {
             name: name.to_string(),
             iters,
             mean_ns: mean,
-            p50_ns: p50,
-            p95_ns: p95,
+            p50_ns: samples[samples.len() / 2],
+            p95_ns: quantile(0.95),
+            p10_ns: quantile(0.10),
+            p90_ns: quantile(0.90),
             elems_per_iter: elems,
         };
         println!("{}", res.report());
@@ -165,6 +170,7 @@ mod tests {
         assert!(r.iters > 0);
         assert!(r.mean_ns > 0.0);
         assert!(r.p95_ns >= r.p50_ns * 0.5);
+        assert!(r.p10_ns <= r.p50_ns && r.p50_ns <= r.p90_ns);
     }
 
     #[test]

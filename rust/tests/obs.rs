@@ -1,0 +1,324 @@
+//! Observability regression suite (DESIGN.md §10).
+//!
+//! Three guarantees under test. (1) **Span determinism**: the span
+//! *multiset* — every record minus wall clock, worker id, and append
+//! order — is identical under `--workers N` and the serial path.
+//! (2) **Metrics continuity**: registry counters ride the existing
+//! snapshot sections, so a resumed run reports the same cumulative
+//! totals as one that never stopped. (3) **Byte-identity**: with
+//! tracing off nothing changes, and with tracing *on* the run's
+//! curve.csv is still byte-identical — observation must never perturb
+//! the trajectory. Engine-free tests drive the tracer/registry/bench
+//! layers directly; artifact-gated tests drive the real server.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use fedavg::config::{BatchSize, FedConfig, Partition};
+use fedavg::federated::{self, ServerOptions};
+use fedavg::obs::bench::{check_bencher, params_hot_path, validate_snapshot, write_snapshot};
+use fedavg::obs::{read_trace, Metrics, Tracer};
+use fedavg::runstate::{CheckpointConfig, ResumeFrom, Snapshot};
+use fedavg::runtime::pool::WorkerPool;
+use fedavg::runtime::Engine;
+use fedavg::telemetry::RunWriter;
+
+fn test_root(tag: &str) -> PathBuf {
+    let root = PathBuf::from(format!("target/test-runs/obs-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    root
+}
+
+/// Multiset of schedule-independent span identities.
+fn key_multiset(recs: &[fedavg::obs::TraceRecord]) -> BTreeMap<String, usize> {
+    let mut m = BTreeMap::new();
+    for r in recs {
+        *m.entry(format!("{:?}", r.key())).or_insert(0) += 1;
+    }
+    m
+}
+
+// ------------------------------------------------------- engine-free
+
+/// A worker pool emitting `local_train` spans must produce the same
+/// span multiset whatever the worker count — only worker ids, wall
+/// times, and append order may differ between schedules.
+#[test]
+fn pool_span_multiset_matches_serial() {
+    let root = test_root("pool");
+    let trace_of = |workers: usize| -> Vec<fedavg::obs::TraceRecord> {
+        let path = root.join(format!("w{workers}.jsonl"));
+        let tracer = Tracer::to_file(&path).unwrap();
+        for round in 1..=3u64 {
+            let root_sp = tracer.begin(round, "round", 0);
+            let tr = tracer.clone();
+            let pool: WorkerPool<(u64, u64), u64> = WorkerPool::new(
+                workers,
+                Ok,
+                move |wid: &mut usize, (r, client): (u64, u64)| {
+                    let sp = tr
+                        .begin(r, "local_train", 2)
+                        .map(|s| s.client(client).worker(*wid as u64).bytes(client * 64));
+                    // simulated work so spans have nonzero wall time
+                    std::hint::black_box((0..500u64).sum::<u64>());
+                    tr.end(sp);
+                    client
+                },
+            )
+            .unwrap();
+            let jobs: Vec<(u64, u64)> = (0..8).map(|c| (round, c)).collect();
+            let mut outs = pool.map(jobs).unwrap();
+            outs.sort_unstable();
+            assert_eq!(outs, (0..8).collect::<Vec<u64>>());
+            tracer.end(root_sp);
+        }
+        tracer.finish(&Metrics::default()).unwrap().expect("enabled");
+        read_trace(&path).unwrap()
+    };
+
+    let serial = trace_of(1);
+    let parallel = trace_of(4);
+    assert_eq!(serial.len(), parallel.len());
+    assert_eq!(
+        key_multiset(&serial),
+        key_multiset(&parallel),
+        "span multiset depends on the schedule"
+    );
+    // seq is the append order: dense from 0 in both traces
+    for (i, r) in parallel.iter().enumerate() {
+        assert_eq!(r.seq, i as u64);
+    }
+    std::fs::remove_dir_all(root).ok();
+}
+
+/// The server's resume path re-seeds the registry from snapshot
+/// sections with `marked = value` (nothing pending at the checkpoint
+/// boundary unless the snapshot says so). Replaying the same increments
+/// split across a save/seed boundary must land on the same totals and
+/// the same pending remainder as an uninterrupted sequence.
+#[test]
+fn metrics_reseed_matches_uninterrupted() {
+    // uninterrupted: 6 "rounds" of accounting, curve row every 2 rounds
+    let full = Metrics::default();
+    let mut full_rows: Vec<(u64, u64)> = Vec::new();
+    for round in 1..=6u64 {
+        full.add("fleet.dropped", round % 2);
+        full.add("wire.up_bytes", 100);
+        if round % 2 == 0 {
+            full_rows.push((round, full.pending("fleet.dropped")));
+            full.mark("fleet.dropped");
+        }
+    }
+
+    // interrupted at round 3 (off the eval cadence — drops are pending)
+    let part = Metrics::default();
+    let mut part_rows: Vec<(u64, u64)> = Vec::new();
+    for round in 1..=3u64 {
+        part.add("fleet.dropped", round % 2);
+        part.add("wire.up_bytes", 100);
+        if round % 2 == 0 {
+            part_rows.push((round, part.pending("fleet.dropped")));
+            part.mark("fleet.dropped");
+        }
+    }
+    let (saved_total, saved_pending) =
+        (part.counter("fleet.dropped"), part.pending("fleet.dropped"));
+    let saved_bytes = part.counter("wire.up_bytes");
+
+    // "resume": fresh registry seeded exactly as federated::server does
+    let resumed = Metrics::default();
+    resumed.seed_counter("fleet.dropped", saved_total, saved_total - saved_pending);
+    resumed.seed_counter("wire.up_bytes", saved_bytes, saved_bytes);
+    for round in 4..=6u64 {
+        resumed.add("fleet.dropped", round % 2);
+        resumed.add("wire.up_bytes", 100);
+        if round % 2 == 0 {
+            part_rows.push((round, resumed.pending("fleet.dropped")));
+            resumed.mark("fleet.dropped");
+        }
+    }
+
+    assert_eq!(full_rows, part_rows, "per-row drop counts diverged across resume");
+    assert_eq!(resumed.counter("fleet.dropped"), full.counter("fleet.dropped"));
+    assert_eq!(resumed.counter("wire.up_bytes"), full.counter("wire.up_bytes"));
+
+    // and the registry's own byte format round-trips the lot
+    let reloaded = Metrics::default();
+    reloaded.state_load(&resumed.state_save()).unwrap();
+    assert_eq!(reloaded.snapshot(), resumed.snapshot());
+}
+
+/// `fedavg bench --check` end-to-end for one cheap area: run it on the
+/// minimal-budget bencher, write the snapshot, re-validate from disk.
+#[test]
+fn bench_snapshot_records_and_validates() {
+    let root = test_root("bench");
+    let mut b = check_bencher();
+    params_hot_path(&mut b);
+    assert!(!b.results().is_empty());
+    let path = root.join("BENCH_params_hot_path.json");
+    write_snapshot(&path, "params_hot_path", b.results()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let cases = validate_snapshot(&text).unwrap();
+    assert_eq!(cases, b.results().len());
+    std::fs::remove_dir_all(root).ok();
+}
+
+// ------------------------------------------------- artifact-gated
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine"))
+}
+
+fn base_cfg() -> FedConfig {
+    FedConfig {
+        model: "mnist_2nn".into(),
+        c: 0.4,
+        e: 1,
+        b: BatchSize::Fixed(10),
+        lr: 0.1,
+        rounds: 4,
+        eval_every: 2,
+        seed: 91,
+        ..Default::default()
+    }
+}
+
+fn base_opts(telemetry: Option<RunWriter>) -> ServerOptions {
+    ServerOptions {
+        eval_cap: Some(200),
+        telemetry,
+        ..Default::default()
+    }
+}
+
+/// The §10 acceptance bar: a traced run writes the same curve.csv as an
+/// untraced one (observation never perturbs the trajectory), its trace
+/// is well-formed, and the depth-1 phases account for ≥ 90% of measured
+/// round wall time.
+#[test]
+fn traced_run_is_byte_identical_and_covered() {
+    let Some(eng) = engine() else { return };
+    let fed = fedavg::exper::mnist_fed(0.05, Partition::Iid, 91);
+    let cfg = base_cfg();
+    let root = test_root("bytes");
+
+    let w = RunWriter::create(&root, "plain").unwrap();
+    let plain_dir = w.dir().to_path_buf();
+    let plain = federated::run(&eng, &fed, &cfg, base_opts(Some(w))).unwrap();
+
+    let w = RunWriter::create(&root, "traced").unwrap();
+    let traced_dir = w.dir().to_path_buf();
+    let mut opts = base_opts(Some(w));
+    let trace_path = traced_dir.join("trace.jsonl");
+    opts.trace = Tracer::to_file(&trace_path).unwrap();
+    let metrics = Metrics::default();
+    opts.metrics = metrics.clone();
+    let traced = federated::run(&eng, &fed, &cfg, opts).unwrap();
+
+    assert_eq!(plain.final_theta, traced.final_theta, "tracing changed the trajectory");
+    let a = std::fs::read(plain_dir.join("curve.csv")).unwrap();
+    let b = std::fs::read(traced_dir.join("curve.csv")).unwrap();
+    assert!(!a.is_empty() && a == b, "traced curve.csv != untraced curve.csv");
+
+    let recs = read_trace(&trace_path).unwrap();
+    let rounds: Vec<&fedavg::obs::TraceRecord> =
+        recs.iter().filter(|r| r.depth == 0).collect();
+    assert_eq!(rounds.len(), cfg.rounds, "one depth-0 span per round");
+    let root_ns: u64 = rounds.iter().map(|r| r.wall_ns).sum();
+    let phase_ns: u64 = recs.iter().filter(|r| r.depth == 1).map(|r| r.wall_ns).sum();
+    assert!(
+        phase_ns as f64 >= 0.90 * root_ns as f64,
+        "depth-1 coverage {:.1}% < 90%",
+        100.0 * phase_ns as f64 / root_ns as f64
+    );
+    // the registry absorbed the run's accounting
+    assert_eq!(metrics.counter("rounds"), cfg.rounds as u64);
+    assert_eq!(metrics.counter("wire.up_bytes"), traced.comm.bytes_up);
+    assert_eq!(metrics.counter("wire.down_bytes"), traced.comm.bytes_down);
+    assert_eq!(metrics.counter("client.steps"), traced.client_steps);
+    std::fs::remove_dir_all(root).ok();
+}
+
+/// `--workers 2 --trace` must reproduce the serial trace's span
+/// multiset (and the serial trajectory) exactly.
+#[test]
+fn worker_trace_matches_serial_over_artifacts() {
+    let Some(eng) = engine() else { return };
+    let fed = fedavg::exper::mnist_fed(0.05, Partition::Iid, 92);
+    let mut cfg = base_cfg();
+    cfg.seed = 92;
+    let root = test_root("workers");
+
+    let run_with = |workers: usize| {
+        let path = root.join(format!("w{workers}.jsonl"));
+        let mut opts = base_opts(None);
+        opts.fleet.workers = workers;
+        opts.trace = Tracer::to_file(&path).unwrap();
+        let res = federated::run(&eng, &fed, &cfg, opts).unwrap();
+        (res, read_trace(&path).unwrap())
+    };
+    let (serial, serial_recs) = run_with(1);
+    let (parallel, parallel_recs) = run_with(2);
+
+    assert_eq!(serial.final_theta, parallel.final_theta, "--workers 2 diverged");
+    assert_eq!(
+        key_multiset(&serial_recs),
+        key_multiset(&parallel_recs),
+        "span multiset depends on worker count"
+    );
+    // the pool path labels local_train spans with client AND worker ids
+    let lt = parallel_recs.iter().find(|r| r.phase == "local_train").unwrap();
+    assert!(lt.client.is_some() && lt.worker.is_some());
+    std::fs::remove_dir_all(root).ok();
+}
+
+/// Registry counters ride the snapshot: a resumed run's registry must
+/// report the same cumulative totals as an uninterrupted run's.
+#[test]
+fn resumed_metrics_are_cumulative_over_artifacts() {
+    let Some(eng) = engine() else { return };
+    let fed = fedavg::exper::mnist_fed(0.05, Partition::Iid, 93);
+    let cfg = |rounds| FedConfig {
+        rounds,
+        seed: 93,
+        ..base_cfg()
+    };
+    let root = test_root("resume");
+
+    let w = RunWriter::create(&root, "full").unwrap();
+    let full_metrics = Metrics::default();
+    let mut o = base_opts(Some(w));
+    o.metrics = full_metrics.clone();
+    federated::run(&eng, &fed, &cfg(6), o).unwrap();
+
+    let w = RunWriter::create(&root, "resumed").unwrap();
+    let part_dir = w.dir().to_path_buf();
+    let mut o = base_opts(Some(w));
+    o.checkpoint = Some(CheckpointConfig { every: 3, keep: 2 });
+    federated::run(&eng, &fed, &cfg(3), o).unwrap();
+    let (_, snap) = Snapshot::load_latest(&part_dir).unwrap().expect("checkpoint");
+    let resumed_metrics = Metrics::default();
+    let mut o = base_opts(None);
+    o.metrics = resumed_metrics.clone();
+    o.checkpoint = Some(CheckpointConfig { every: 3, keep: 2 });
+    o.resume = Some(ResumeFrom {
+        snapshot: snap,
+        run_dir: part_dir,
+    });
+    federated::run(&eng, &fed, &cfg(6), o).unwrap();
+
+    for name in ["rounds", "wire.up_bytes", "wire.down_bytes", "client.steps"] {
+        assert_eq!(
+            resumed_metrics.counter(name),
+            full_metrics.counter(name),
+            "{name}: resumed registry total != uninterrupted total"
+        );
+    }
+    std::fs::remove_dir_all(root).ok();
+}
