@@ -134,8 +134,17 @@ impl Repr {
         HEADER_BYTES + idx_bytes + self.vals.payload_bytes()
     }
 
-    /// Serialize to the frame layout (DESIGN.md §6).
+    /// Serialize to the frame layout (DESIGN.md §6) at tier 0 — the
+    /// client↔server tier every pre-hierarchy frame belongs to.
     pub fn to_frame(&self) -> Frame {
+        self.to_frame_tagged(0)
+    }
+
+    /// Serialize with an explicit aggregation-tier tag in header byte 7
+    /// (formerly reserved-zero, so tier-0 frames are byte-identical to
+    /// the untagged format and old frames parse as tier 0). Tier 1 =
+    /// edge↔root frames of hierarchical aggregation (DESIGN.md §11).
+    pub fn to_frame_tagged(&self, tier: u8) -> Frame {
         let mut b = Vec::with_capacity(self.wire_bytes() as usize);
         b.extend_from_slice(&MAGIC.to_le_bytes());
         b.push(WIRE_VERSION);
@@ -144,7 +153,7 @@ impl Repr {
             Vals::Quantized(q) => q.bits,
             Vals::F32(_) => 0,
         });
-        b.push(0); // reserved
+        b.push(tier);
         b.extend_from_slice(&(self.dim as u32).to_le_bytes());
         let k = if self.kind == ReprKind::Dense {
             self.dim
@@ -246,6 +255,11 @@ pub struct FrameHeader {
     pub k: usize,
     /// Delta base version (0 when `!delta`).
     pub base_version: u64,
+    /// Aggregation tier (header byte 7): 0 = client↔server, 1 =
+    /// edge↔root (hierarchical aggregation, DESIGN.md §11). Frames
+    /// written before the tag existed carry the reserved zero and parse
+    /// as tier 0.
+    pub tier: u8,
 }
 
 fn rd_u32(b: &[u8], off: usize) -> u32 {
@@ -294,6 +308,7 @@ impl FrameHeader {
             dim,
             k,
             base_version,
+            tier: bytes[7],
         })
     }
 
@@ -981,6 +996,34 @@ mod tests {
             assert_eq!(p.plan_bytes(x.len()), frame.wire_bytes(), "{spec}");
             assert_eq!(p.measure(&x, None).unwrap(), frame.wire_bytes(), "{spec}");
             assert_eq!(frame.header().unwrap().expect_bytes(), frame.wire_bytes(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn tier_tag_rides_the_reserved_byte() {
+        let x = gauss(800, 12);
+        let repr = Repr::dense(&x);
+        // untagged and tier-0 are the same bytes — old frames parse as tier 0
+        let plain = repr.to_frame();
+        let t0 = repr.to_frame_tagged(0);
+        assert_eq!(plain.bytes, t0.bytes);
+        assert_eq!(plain.header().unwrap().tier, 0);
+        // a tier-1 frame differs only at header byte 7 and decodes bit-exactly
+        let t1 = repr.to_frame_tagged(1);
+        assert_eq!(t1.header().unwrap().tier, 1);
+        assert_eq!(t1.wire_bytes(), plain.wire_bytes());
+        let diff: Vec<usize> = plain
+            .bytes
+            .iter()
+            .zip(&t1.bytes)
+            .enumerate()
+            .filter(|(_, (a, b))| a != b)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(diff, vec![7]);
+        let back = t1.decode(None).unwrap();
+        for (a, b) in x.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

@@ -33,12 +33,14 @@
 pub mod exec;
 pub mod fleet;
 pub mod scheduler;
+pub mod shards;
 
 pub use exec::{ClientJob, ParallelExec};
 pub use fleet::{DeviceProfile, Fleet, FleetProfile};
 pub use scheduler::{
     overselect_count, plan_round, schedule_round, FleetSim, RoundPlan, SimRound, SimTotals,
 };
+pub use shards::{shard_ranges, tier_transfer_seconds, TierLink};
 
 /// Knobs for fleet-aware round execution, carried in
 /// [`ServerOptions`](crate::federated::ServerOptions). The default is the
@@ -61,6 +63,9 @@ pub struct FleetConfig {
     pub diurnal_period: f64,
     /// Fixed per-transfer latency (seconds), as in `CommModel`.
     pub latency_s: f64,
+    /// Edge-aggregator count for hierarchical aggregation (`--shards S`);
+    /// 0 = flat single-tier aggregation (DESIGN.md §11).
+    pub shards: usize,
 }
 
 impl Default for FleetConfig {
@@ -73,6 +78,7 @@ impl Default for FleetConfig {
             step_cost_s: 0.02,
             diurnal_period: 48.0,
             latency_s: 0.1,
+            shards: 0,
         }
     }
 }

@@ -1,0 +1,118 @@
+//! Shard assignment and tier-1 link timing for hierarchical (edge-tier)
+//! aggregation (`--shards S`, DESIGN.md §11).
+//!
+//! The cohort selected for a round is split across S edge aggregators by
+//! **contiguous dispatch-slot ranges**: shard `j` owns slots
+//! `[⌊j·m/S⌋, ⌊(j+1)·m/S⌋)`. Contiguity is what makes the edge tier
+//! bit-identical to flat aggregation — the root walks shards in index
+//! order and each shard folds its slots in slot order, so the global f32
+//! accumulation sequence is exactly the flat path's (see
+//! [`params::weighted_fold`](crate::params::weighted_fold)). When
+//! `S > m` the trailing shards receive empty ranges; they ship no frames
+//! and fold nothing.
+//!
+//! Tier-1 (edge↔root) transfers are timed with a **deterministic** fixed
+//! latency-plus-bandwidth formula — deliberately *not* the jittered
+//! [`CommModel`](crate::comms::CommModel) draw, which would consume RNG
+//! state and desync every subsequent client-link draw, breaking the
+//! flat-vs-sharded bit-identity the suite in `rust/tests/shards.rs`
+//! pins. Tier-1 bytes/seconds are reported via `obs::metrics`
+//! (`tier.*`) and the run summary, never into curve.csv rows.
+
+use std::ops::Range;
+
+/// Deterministic tier-1 link parameters (edge↔root backhaul). Edge
+/// aggregators sit on provisioned links, so the defaults are an order of
+/// magnitude faster than the client-tier [`CommModel`](crate::comms::CommModel).
+#[derive(Debug, Clone, Copy)]
+pub struct TierLink {
+    /// Link bandwidth, bytes/second (both directions; backhaul links are
+    /// symmetric, unlike client last-mile links).
+    pub bps: f64,
+    /// Fixed per-transfer latency, seconds.
+    pub latency_s: f64,
+}
+
+impl Default for TierLink {
+    fn default() -> Self {
+        Self {
+            bps: 12.5e6, // 100 Mbit/s backhaul
+            latency_s: 0.02,
+        }
+    }
+}
+
+/// Seconds for one tier-1 transfer of `bytes`: `latency + bytes/bps`.
+/// No RNG, no jitter — see the module docs for why.
+pub fn tier_transfer_seconds(link: &TierLink, bytes: u64) -> f64 {
+    link.latency_s + bytes as f64 / link.bps
+}
+
+/// Contiguous slot ranges assigning `n` dispatch slots to `s` shards:
+/// shard `j` gets `[⌊j·n/s⌋, ⌊(j+1)·n/s⌋)`. Ranges tile `0..n` in order;
+/// sizes differ by at most one; `s > n` leaves the tail empty.
+///
+/// Panics if `s == 0` — shard count 0 means "flat", which has no
+/// assignment to compute.
+pub fn shard_ranges(n: usize, s: usize) -> Vec<Range<usize>> {
+    assert!(s > 0, "shard_ranges: shard count must be >= 1");
+    (0..s)
+        .map(|j| (j * n / s)..((j + 1) * n / s))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_tile_in_order_with_balanced_sizes() {
+        for n in [0usize, 1, 2, 7, 10, 100, 101] {
+            for s in [1usize, 2, 3, 7, 32] {
+                let ranges = shard_ranges(n, s);
+                assert_eq!(ranges.len(), s);
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next, "gap/overlap at n={n} s={s}");
+                    assert!(r.end >= r.start);
+                    next = r.end;
+                }
+                assert_eq!(next, n, "ranges do not cover 0..{n}");
+                let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(max - min <= 1, "unbalanced: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_owns_everything() {
+        assert_eq!(shard_ranges(17, 1), vec![0..17]);
+    }
+
+    #[test]
+    fn more_shards_than_slots_leaves_empty_tails() {
+        let ranges = shard_ranges(3, 7);
+        let non_empty: Vec<_> = ranges.iter().filter(|r| !r.is_empty()).collect();
+        assert_eq!(non_empty.len(), 3);
+        assert_eq!(ranges.iter().map(|r| r.len()).sum::<usize>(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "shard count")]
+    fn zero_shards_is_a_caller_bug() {
+        shard_ranges(5, 0);
+    }
+
+    #[test]
+    fn transfer_seconds_is_deterministic_latency_plus_bandwidth() {
+        let link = TierLink { bps: 1e6, latency_s: 0.5 };
+        assert_eq!(tier_transfer_seconds(&link, 0), 0.5);
+        assert_eq!(tier_transfer_seconds(&link, 2_000_000), 2.5);
+        // same inputs, same answer — no hidden state
+        assert_eq!(
+            tier_transfer_seconds(&link, 1234),
+            tier_transfer_seconds(&link, 1234)
+        );
+    }
+}

@@ -38,6 +38,10 @@ use crate::params::{self, ParamVec};
 use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::Result;
 
+pub mod shards;
+
+pub use shards::{combine_sharded, ShardCombine, EDGE_TIER};
+
 // ---------------------------------------------------------------- trait
 
 /// One server-side aggregation rule: how a round's client updates become

@@ -1,0 +1,198 @@
+//! Hierarchical (two-tier) aggregation: the `--shards S` combine path
+//! (DESIGN.md §11).
+//!
+//! The cohort's dispatch slots are split across S edge aggregators by
+//! contiguous ranges ([`shard_ranges`]). The root then runs a
+//! **cascade**: it walks the non-empty shards in index order, handing
+//! each the current running accumulator as a tier-1 dense wire frame;
+//! the edge folds its slot range onto the accumulator with
+//! [`params::weighted_fold`] — per-item scales taken from the *global*
+//! f64 weight total, the shard-weight bookkeeping — and returns the
+//! updated accumulator as a tier-1 frame. The final up frame decodes to
+//! the combined delta.
+//!
+//! Why a cascade and not independent per-shard partial means? f32
+//! addition is not associative: independently-reduced partials can never
+//! be bit-identical to [`params::weighted_mean`]'s strictly sequential
+//! fold. The cascade *relocates* the flat fold across shard boundaries
+//! without reordering a single operation — and dense f32 frames
+//! round-trip bit-exactly — so sharded combine equals flat combine
+//! bit-for-bit, for any S (property-tested in `rust/tests/shards.rs`).
+//!
+//! Tier-1 frames are always **dense** (lossless): a lossy codec between
+//! tiers would break the identity. Client-tier codecs (`topk`/`q<b>`)
+//! are unaffected — they run before aggregation on either path.
+//!
+//! Robust rules (`trimmed:<β>`, `median`) are refused: coordinate-wise
+//! order statistics do not compose across tiers (the median of shard
+//! medians is not the cohort median), so only
+//! [`Aggregator::mean_combine`] rules may shard.
+
+use crate::comms::wire::Repr;
+use crate::coordinator::shards::{shard_ranges, tier_transfer_seconds, TierLink};
+use crate::params::{self, ParamVec};
+use crate::Result;
+
+use super::Aggregator;
+
+/// Tier tag stamped into edge↔root frame headers (byte 7).
+pub const EDGE_TIER: u8 = 1;
+
+/// The combined delta plus the edge tier's transfer accounting.
+#[derive(Debug, Clone)]
+pub struct ShardCombine {
+    /// The aggregate delta — bit-identical to `agg.combine(deltas)`.
+    pub delta: ParamVec,
+    /// Shards that received at least one slot (≤ S; `S > m` leaves
+    /// trailing shards empty, with no frames and no fold).
+    pub shards_used: usize,
+    /// Edge→root bytes (one dense frame per non-empty shard).
+    pub up_bytes: u64,
+    /// Root→edge bytes (`shards_used - 1` frames: the first shard starts
+    /// from the zero accumulator and receives nothing).
+    pub down_bytes: u64,
+    /// Total tier-1 frames shipped.
+    pub frames: u64,
+    /// Deterministic tier-1 transfer time ([`tier_transfer_seconds`];
+    /// the cascade serializes the exchanges, so times sum).
+    pub seconds: f64,
+}
+
+/// Run `agg`'s combine hierarchically over `shards` edge aggregators.
+/// `deltas` are the round's weighted client deltas in dispatch-slot
+/// order — the same slice the flat path hands to
+/// [`Aggregator::combine`]. Errors if the rule is not mean-family, the
+/// cohort is empty, or `shards == 0` (callers gate on `shards > 0`).
+pub fn combine_sharded(
+    agg: &dyn Aggregator,
+    deltas: &[(f32, &[f32])],
+    shards: usize,
+    link: &TierLink,
+) -> Result<ShardCombine> {
+    anyhow::ensure!(shards >= 1, "combine_sharded: --shards must be >= 1");
+    anyhow::ensure!(
+        agg.mean_combine(),
+        "--agg {} cannot run under --shards: coordinate-wise order statistics \
+         do not compose across aggregation tiers — only mean-family rules \
+         (fedavg/fedavgm/fedadam) shard (DESIGN.md §11)",
+        agg.label()
+    );
+    anyhow::ensure!(!deltas.is_empty(), "combine_sharded: empty cohort");
+    let dim = deltas[0].1.len();
+    let total = params::weight_total(deltas);
+    anyhow::ensure!(total > 0.0, "combine_sharded: non-positive total weight");
+
+    let mut acc = vec![0.0f32; dim];
+    let mut out = ShardCombine {
+        delta: Vec::new(),
+        shards_used: 0,
+        up_bytes: 0,
+        down_bytes: 0,
+        frames: 0,
+        seconds: 0.0,
+    };
+    for range in shard_ranges(deltas.len(), shards) {
+        if range.is_empty() {
+            continue;
+        }
+        if out.shards_used > 0 {
+            // root → edge: ship the running accumulator through a real
+            // tier-1 frame (dense f32 round-trips bit-exactly)
+            let frame = Repr::dense(&acc).to_frame_tagged(EDGE_TIER);
+            out.down_bytes += frame.wire_bytes();
+            out.frames += 1;
+            out.seconds += tier_transfer_seconds(link, frame.wire_bytes());
+            acc = frame.decode(None)?;
+        }
+        params::weighted_fold(&mut acc, &deltas[range], total);
+        // edge → root: the updated accumulator comes back the same way
+        let frame = Repr::dense(&acc).to_frame_tagged(EDGE_TIER);
+        out.up_bytes += frame.wire_bytes();
+        out.frames += 1;
+        out.seconds += tier_transfer_seconds(link, frame.wire_bytes());
+        acc = frame.decode(None)?;
+        out.shards_used += 1;
+    }
+    out.delta = acc;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::wire::HEADER_BYTES;
+    use crate::federated::aggregate::AggConfig;
+
+    fn cohort(m: usize, dim: usize) -> Vec<(f32, Vec<f32>)> {
+        (0..m)
+            .map(|c| {
+                let v: Vec<f32> = (0..dim)
+                    .map(|i| ((c * 131 + i * 17) % 251) as f32 * 0.004 - 0.5)
+                    .collect();
+                ((c % 5 + 1) as f32 * 60.0, v)
+            })
+            .collect()
+    }
+
+    fn refs(cohort: &[(f32, Vec<f32>)]) -> Vec<(f32, &[f32])> {
+        cohort.iter().map(|(w, d)| (*w, d.as_slice())).collect()
+    }
+
+    #[test]
+    fn sharded_combine_is_bit_identical_to_flat_for_any_s() {
+        let link = TierLink::default();
+        for spec in ["fedavg", "fedavgm:0.9", "fedadam"] {
+            let agg = AggConfig { spec: spec.into(), ..Default::default() }.build().unwrap();
+            for (m, dim) in [(1usize, 33usize), (4, 301), (10, 128), (23, 77)] {
+                let c = cohort(m, dim);
+                let r = refs(&c);
+                let flat = agg.combine(&r).unwrap();
+                for s in [1usize, 2, 3, 7, 16, 64] {
+                    let sharded = combine_sharded(agg.as_ref(), &r, s, &link).unwrap();
+                    let same = flat
+                        .iter()
+                        .zip(&sharded.delta)
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(same, "{spec} m={m} dim={dim} S={s}: sharded != flat");
+                    assert_eq!(sharded.shards_used, s.min(m));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tier_accounting_counts_dense_frames() {
+        let agg = AggConfig::default().build().unwrap();
+        let link = TierLink { bps: 1e6, latency_s: 0.5 };
+        let (m, dim, s) = (10usize, 64usize, 4usize);
+        let c = cohort(m, dim);
+        let out = combine_sharded(agg.as_ref(), &refs(&c), s, &link).unwrap();
+        let frame_bytes = HEADER_BYTES + 4 * dim as u64;
+        assert_eq!(out.shards_used, 4);
+        assert_eq!(out.up_bytes, 4 * frame_bytes);
+        assert_eq!(out.down_bytes, 3 * frame_bytes);
+        assert_eq!(out.frames, 7);
+        let per = tier_transfer_seconds(&link, frame_bytes);
+        assert!((out.seconds - 7.0 * per).abs() < 1e-12);
+        // S > m: empty shards ship nothing
+        let out = combine_sharded(agg.as_ref(), &refs(&c[..2]), 7, &link).unwrap();
+        assert_eq!(out.shards_used, 2);
+        assert_eq!(out.frames, 3, "2 up + 1 down");
+    }
+
+    #[test]
+    fn robust_rules_and_degenerate_inputs_are_refused() {
+        let link = TierLink::default();
+        let c = cohort(4, 16);
+        for spec in ["trimmed:0.1", "median"] {
+            let agg = AggConfig { spec: spec.into(), ..Default::default() }.build().unwrap();
+            let err = combine_sharded(agg.as_ref(), &refs(&c), 2, &link).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("order statistics"), "{spec}: {msg}");
+            assert!(msg.contains("DESIGN.md"), "{spec}: {msg}");
+        }
+        let agg = AggConfig::default().build().unwrap();
+        assert!(combine_sharded(agg.as_ref(), &refs(&c), 0, &link).is_err());
+        assert!(combine_sharded(agg.as_ref(), &[], 2, &link).is_err());
+    }
+}

@@ -25,10 +25,10 @@ use std::sync::Arc;
 use crate::comms::{CommModel, CommSim, CommTotals, Transport, TransportConfig};
 use crate::config::FedConfig;
 use crate::coordinator::{
-    plan_round, ClientJob, Fleet, FleetConfig, FleetTotals, ParallelExec, RoundPlan,
+    plan_round, ClientJob, Fleet, FleetConfig, FleetTotals, ParallelExec, RoundPlan, TierLink,
 };
 use crate::data::Federated;
-use crate::federated::aggregate::{fmt_state_norms, AggConfig, Aggregator as _};
+use crate::federated::aggregate::{combine_sharded, fmt_state_norms, AggConfig, Aggregator as _};
 use crate::federated::client::{local_update, updates_per_round, LocalResult, LocalSpec};
 use crate::federated::sampler::ClientSampler;
 use crate::metrics::LearningCurve;
@@ -37,6 +37,7 @@ use crate::params::ParamVec;
 use crate::privacy::{clip, GaussianMechanism, SecureAggregator};
 use crate::runstate::{
     checkpoint_dir, AggState, CheckpointConfig, FleetState, ResumeFrom, RunMeta, Snapshot,
+    TierState,
 };
 use crate::runtime::Engine;
 use crate::telemetry::{RoundRecord, RunWriter};
@@ -189,6 +190,25 @@ pub fn run(
              analysis (DESIGN.md §7)"
         );
     }
+    // Hierarchical aggregation composes only for mean-family rules
+    // (combine_sharded re-checks per call, but a bad pairing must fail
+    // before any work happens), and is incompatible with secure
+    // aggregation: pairwise masks cancel only over the full cohort's
+    // modular sum, never over per-shard partials (DESIGN.md §11).
+    if opts.fleet.shards > 0 {
+        anyhow::ensure!(
+            aggregator.mean_combine(),
+            "--agg {agg_label} cannot run under --shards: coordinate-wise \
+             order statistics do not compose across aggregation tiers — only \
+             mean-family rules (fedavg/fedavgm/fedadam) shard (DESIGN.md §11)"
+        );
+        anyhow::ensure!(
+            !opts.secure_agg,
+            "--secure-agg cannot run under --shards: pairwise masks only \
+             cancel over the full cohort, not per-shard partial sums \
+             (DESIGN.md §11)"
+        );
+    }
     let prox_mu = opts.agg.prox_mu as f32;
 
     let model = engine.model(&cfg.model)?;
@@ -252,6 +272,14 @@ pub fn run(
     // produces the same u64 arithmetic the locals did, so curve.csv is
     // byte-identical.
     let metrics = opts.metrics.clone();
+    // Edge-tier accounting (`--shards S`, DESIGN.md §11): cumulative
+    // totals mirrored into `tier.*` metrics. Seconds need the local f64
+    // (registry counters are u64); the whole struct rides snapshots —
+    // per-round frame counts depend on cohort size, so resume cannot
+    // recompute them. Tier-1 bytes/seconds stay out of `comms.ingest`
+    // and curve.csv: the curve is pinned byte-identical to a flat run.
+    let tier_link = TierLink::default();
+    let mut tier = (opts.fleet.shards > 0).then(TierState::default);
 
     let mut accuracy = LearningCurve::new();
     let mut test_loss = LearningCurve::new();
@@ -290,7 +318,10 @@ pub fn run(
     // rides in the harness string (Debug-formatted, so any value change
     // is caught). `fleet.workers` is deliberately absent: worker count
     // is bit-identical by design, so resuming at a different parallelism
-    // is legitimate.
+    // is legitimate. `fleet.shards` IS present even though sharding is
+    // also bit-identical: the snapshot carries cumulative tier-1 byte
+    // totals, and continuing under a different S would silently blend
+    // two topologies' accounting (DESIGN.md §11).
     let meta = RunMeta {
         label: cfg.label(),
         agg: agg_label.clone(),
@@ -302,8 +333,8 @@ pub fn run(
         eval_every: cfg.eval_every as u64,
         harness: format!(
             "availability={:?} dp={:?} secure_agg={} prox_mu={:?} \
-             fleet=({},{:?},{:?},{:?},{:?},{:?}) eval_cap={:?} train_eval_cap={} \
-             comm=({:?},{:?},{:?},{:?})",
+             fleet=({},{:?},{:?},{:?},{:?},{:?}) shards={} eval_cap={:?} \
+             train_eval_cap={} comm=({:?},{:?},{:?},{:?})",
             opts.availability,
             opts.dp.map(|d| (d.clip_norm, d.sigma)),
             opts.secure_agg,
@@ -314,6 +345,7 @@ pub fn run(
             opts.fleet.step_cost_s,
             opts.fleet.diurnal_period,
             opts.fleet.latency_s,
+            opts.fleet.shards,
             opts.eval_cap,
             opts.train_eval_cap,
             opts.comm_model.up_bps,
@@ -408,6 +440,16 @@ pub fn run(
             ft.deadline_misses,
             ft.deadline_misses.saturating_sub(snap.fleet.misses_since_eval),
         );
+        // Sharded runs: restore the edge-tier totals (the meta check
+        // above guarantees the checkpoint's shard count matches, so a
+        // sharded run's snapshot always carries the TIER section).
+        if let Some(t) = tier.as_mut() {
+            let ts = snap.tier.unwrap_or_default();
+            *t = ts;
+            metrics.seed_counter("tier.edge_up_bytes", ts.up_bytes, ts.up_bytes);
+            metrics.seed_counter("tier.edge_down_bytes", ts.down_bytes, ts.down_bytes);
+            metrics.seed_counter("tier.edge_frames", ts.frames, ts.frames);
+        }
         start_round = snap.round + 1;
     }
 
@@ -598,7 +640,30 @@ pub fn run(
                 .iter()
                 .map(|(w, d)| (*w, d.as_slice()))
                 .collect();
-            aggregator.combine(&refs)?
+            match tier.as_mut() {
+                // hierarchical path (--shards S): cascade the combine
+                // across S edge aggregators — bit-identical to the flat
+                // fold below (pinned in rust/tests/shards.rs). Tier-1
+                // transfers land in `tier.*`, never in curve.csv.
+                Some(t) => {
+                    let sc = combine_sharded(
+                        aggregator.as_ref(),
+                        &refs,
+                        opts.fleet.shards,
+                        &tier_link,
+                    )?;
+                    t.up_bytes += sc.up_bytes;
+                    t.down_bytes += sc.down_bytes;
+                    t.frames += sc.frames;
+                    t.seconds += sc.seconds;
+                    metrics.add("tier.edge_up_bytes", sc.up_bytes);
+                    metrics.add("tier.edge_down_bytes", sc.down_bytes);
+                    metrics.add("tier.edge_frames", sc.frames);
+                    metrics.observe("tier.seconds", sc.seconds);
+                    sc.delta
+                }
+                None => aggregator.combine(&refs)?,
+            }
         };
         tr.end(sp);
         // DP noise lands on the combined delta, *before* the stateful
@@ -708,6 +773,7 @@ pub fn run(
                         train_loss: train_loss_curve.as_ref().map(|c| c.points().to_vec()),
                     },
                     dp: mech.as_ref().map(|m| m.state_save()),
+                    tier,
                 };
                 snap.write(dir, ck.keep)?;
                 tr.end(sp);
@@ -753,6 +819,13 @@ pub fn run(
             fields.push(("completed", ft.completed.to_string()));
             fields.push(("dropped_stragglers", ft.dropped_stragglers.to_string()));
             fields.push(("deadline_misses", ft.deadline_misses.to_string()));
+        }
+        if let Some(t) = &tier {
+            fields.push(("shards", opts.fleet.shards.to_string()));
+            fields.push(("tier_up_bytes", t.up_bytes.to_string()));
+            fields.push(("tier_down_bytes", t.down_bytes.to_string()));
+            fields.push(("tier_frames", t.frames.to_string()));
+            fields.push(("tier_seconds", format!("{:.3}", t.seconds)));
         }
         w.finish(&fields)?;
     }

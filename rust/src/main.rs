@@ -16,13 +16,15 @@ use anyhow::{anyhow, bail};
 
 use fedavg::baselines::oneshot;
 use fedavg::config::{BatchSize, ConfigFile, FedConfig, Partition};
-use fedavg::coordinator::{FleetConfig, FleetProfile, FleetSim};
+use fedavg::coordinator::{
+    shard_ranges, tier_transfer_seconds, FleetConfig, FleetProfile, FleetSim, TierLink,
+};
 use fedavg::federated::{AggConfig, ServerOptions};
 use fedavg::exper::{self};
 use fedavg::obs::{Metrics, Tracer};
 use fedavg::runstate::{CheckpointConfig, Snapshot};
 use fedavg::runtime::Engine;
-use fedavg::telemetry::{FleetRoundRecord, FleetWriter, RunWriter};
+use fedavg::telemetry::{FleetRoundRecord, FleetWriter, RunWriter, TierRecord, TierWriter};
 use fedavg::util::args::Args;
 use fedavg::Result;
 
@@ -317,7 +319,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "model", "c", "e", "b", "lr", "lr-decay", "rounds", "eval-every",
         "target", "partition", "scale", "eval-cap", "seed", "out", "name",
-        "track-train-loss", "fleet-profile", "overselect", "deadline", "workers",
+        "track-train-loss", "fleet-profile", "overselect", "deadline", "workers", "shards",
         "step-cost", "clients", "sim-only", "start-round", "model-bytes", "steps", "codec",
         "down-codec", "topk", "quant-bits", "agg", "server-lr", "server-momentum",
         "prox-mu", "checkpoint-every", "checkpoint-keep", "resume", "overwrite", "trace",
@@ -339,6 +341,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         },
         workers: args.usize_or("workers", 1)?,
         step_cost_s: args.f64_or("step-cost", FleetConfig::default().step_cost_s)?,
+        shards: args.usize_or("shards", 0)?,
         ..FleetConfig::default()
     };
     if !fleet.step_cost_s.is_finite() || fleet.step_cost_s < 0.0 {
@@ -353,6 +356,20 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     // or the config-file keys, must fail fast on the sim-only path too,
     // not be silently ignored.
     let agg = agg_config_from(file.as_ref(), args)?;
+    // A robust rule cannot shard (order statistics do not compose across
+    // aggregation tiers) — refuse the pairing at startup on every path,
+    // the sim-only one included (DESIGN.md §11).
+    if fleet.shards > 0 {
+        let rule = agg.build()?;
+        if !rule.mean_combine() {
+            bail!(
+                "--agg {} cannot run under --shards: coordinate-wise order \
+                 statistics do not compose across aggregation tiers — only \
+                 mean-family rules (fedavg/fedavgm/fedadam) shard (DESIGN.md §11)",
+                rule.label()
+            );
+        }
+    }
     let ckpt = checkpoint_from(file.as_ref(), args)?;
 
     let have_artifacts = Engine::default_dir().join("manifest.json").exists();
@@ -438,6 +455,35 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run totals of the sim's edge-tier (tier-1) accounting — the summary's
+/// `tier1_*` fields.
+#[derive(Default)]
+struct TierTotals {
+    up_bytes: u64,
+    down_bytes: u64,
+    frames: u64,
+    seconds: f64,
+}
+
+/// One sim round's tier-1 cascade accounting, mirroring
+/// `federated::aggregate::combine_sharded`'s frame pattern: each of the
+/// `non_empty` edges ships one dense up frame, and every edge after the
+/// first receives one down frame. Returns
+/// `(non_empty, up_bytes, down_bytes, frames, seconds)`.
+fn tier1_round(
+    shards: usize,
+    completed: usize,
+    frame_bytes: u64,
+    link: &TierLink,
+) -> (usize, u64, u64, u64, f64) {
+    let non_empty = shards.min(completed); // the scheduler guarantees >= 1
+    let frames = (2 * non_empty - 1) as u64;
+    let up = non_empty as u64 * frame_bytes;
+    let down = (non_empty as u64 - 1) * frame_bytes;
+    let seconds = frames as f64 * tier_transfer_seconds(link, frame_bytes);
+    (non_empty, up, down, frames, seconds)
+}
+
 /// Training-free fleet simulation — scales to fleets far beyond what
 /// training can touch (10k clients by default, 100k+ fine).
 fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()> {
@@ -480,6 +526,18 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
         Tracer::default()
     };
     let metrics = Metrics::default();
+    // Hierarchical aggregation (--shards S): tier-0 client links are
+    // partitioned across the S edges (per-shard bytes sum exactly to the
+    // flat totals), and the edge↔root cascade ships dense tier-1 frames
+    // (wire header + model payload). Rows land in tiers.csv; fleet.csv
+    // stays byte-identical to a flat run (DESIGN.md §11).
+    let shards = fleet.shards;
+    let tier_frame_bytes = fedavg::comms::wire::HEADER_BYTES + model_bytes;
+    let tier_link = TierLink::default();
+    let mut tiers = (shards > 0)
+        .then(|| TierWriter::create_in(w.dir()))
+        .transpose()?;
+    let mut tier_totals = TierTotals::default();
     println!(
         "fleet sim: {} clients ({} profile), m={m} +{:.0}% over-selection, deadline {}, \
          model {:.1} MB, {} local steps, {} rounds",
@@ -494,11 +552,34 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
         steps,
         cfg.rounds,
     );
+    if shards > 0 {
+        println!(
+            "hierarchical aggregation: {shards} edge shards, {:.1} MB dense tier-1 \
+             frames (tiers.csv; fleet.csv stays flat-identical)",
+            tier_frame_bytes as f64 / 1e6,
+        );
+    }
     if start_round > 1 {
         // each sim round is a pure function of (seed, round): scheduling
         // for the skipped prefix is recomputed into the totals, but
         // nothing is re-recorded or re-printed (DESIGN.md §8)
-        let t = sim.fast_forward(start_round);
+        let t = if shards > 0 {
+            // tier-1 totals need each skipped round's cohort size, so
+            // step the prefix explicitly; per-round rows are still not
+            // re-emitted (the same rule fast_forward applies to fleet.csv)
+            for _ in 1..start_round {
+                let r = sim.step();
+                let (_, up, down, frames, secs) =
+                    tier1_round(shards, r.plan.completed.len(), tier_frame_bytes, &tier_link);
+                tier_totals.up_bytes += up;
+                tier_totals.down_bytes += down;
+                tier_totals.frames += frames;
+                tier_totals.seconds += secs;
+            }
+            sim.totals()
+        } else {
+            sim.fast_forward(start_round)
+        };
         println!(
             "fast-forwarded rounds 1..{start_round}: {} dispatched, {} aggregated, \
              {} dropped, sim {:.1}h",
@@ -529,6 +610,45 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
             deadline_miss: r.plan.deadline_miss,
             round_seconds: r.plan.round_seconds,
         })?;
+        if let Some(tw) = tiers.as_mut() {
+            // edge j serves the j-th contiguous slice of each cohort:
+            // aggregated clients for the uplink, dispatched (incl.
+            // later-dropped stragglers) for the downlink — shard_ranges
+            // tiles each cohort, so per-shard bytes sum exactly to the
+            // flat run's totals
+            let up = shard_ranges(r.plan.completed.len(), shards);
+            let down = shard_ranges(r.plan.dispatched.len(), shards);
+            for j in 0..shards {
+                tw.record(&TierRecord {
+                    round: r.round,
+                    tier: 0,
+                    shard: j,
+                    clients: up[j].len(),
+                    up_bytes: up[j].len() as u64 * model_bytes,
+                    down_bytes: down[j].len() as u64 * model_bytes,
+                    seconds: r.plan.round_seconds,
+                })?;
+            }
+            let (non_empty, t1_up, t1_down, frames, secs) =
+                tier1_round(shards, r.plan.completed.len(), tier_frame_bytes, &tier_link);
+            tw.record(&TierRecord {
+                round: r.round,
+                tier: 1,
+                shard: 0,
+                clients: non_empty,
+                up_bytes: t1_up,
+                down_bytes: t1_down,
+                seconds: secs,
+            })?;
+            metrics.add("tier.edge_up_bytes", t1_up);
+            metrics.add("tier.edge_down_bytes", t1_down);
+            metrics.add("tier.edge_frames", frames);
+            metrics.observe("tier.seconds", secs);
+            tier_totals.up_bytes += t1_up;
+            tier_totals.down_bytes += t1_down;
+            tier_totals.frames += frames;
+            tier_totals.seconds += secs;
+        }
         if r.round % cfg.eval_every as u64 == 0 || r.round == cfg.rounds as u64 {
             println!(
                 "round {:>5}: online {:>6}  dispatched {:>5}  aggregated {:>5}  \
@@ -549,7 +669,7 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
         eprint!("{table}");
     }
     let t = sim.totals();
-    w.finish(&[
+    let mut fields = vec![
         ("fleet_profile", fleet.profile.label().to_string()),
         ("clients", k.to_string()),
         ("rounds", t.rounds.to_string()),
@@ -559,7 +679,19 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
         ("deadline_misses", t.fleet.deadline_misses.to_string()),
         ("bytes_up", t.bytes_up.to_string()),
         ("sim_seconds", format!("{:.1}", t.sim_seconds)),
-    ])?;
+    ];
+    if shards > 0 {
+        // tier-0 totals ARE the flat run's wire totals — sharding
+        // repartitions the client links without adding a byte to them
+        fields.push(("shards", shards.to_string()));
+        fields.push(("tier0_up_bytes", t.bytes_up.to_string()));
+        fields.push(("tier0_down_bytes", t.bytes_down.to_string()));
+        fields.push(("tier1_up_bytes", tier_totals.up_bytes.to_string()));
+        fields.push(("tier1_down_bytes", tier_totals.down_bytes.to_string()));
+        fields.push(("tier1_frames", tier_totals.frames.to_string()));
+        fields.push(("tier1_seconds", format!("{:.3}", tier_totals.seconds)));
+    }
+    w.finish(&fields)?;
     println!(
         "done: {} rounds — {} dispatched, {} aggregated, {} stragglers dropped, \
          {} deadline misses, {:.2} GB up, sim {:.1}h",
@@ -571,6 +703,17 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
         t.bytes_up as f64 / 1e9,
         t.sim_seconds / 3600.0,
     );
+    if shards > 0 {
+        println!(
+            "tiers: {} edge shards — tier-1 {:.3} GB over {} frames, {:.1}s backhaul \
+             (tier-0 client bytes unchanged: {:.2} GB up)",
+            shards,
+            (tier_totals.up_bytes + tier_totals.down_bytes) as f64 / 1e9,
+            tier_totals.frames,
+            tier_totals.seconds,
+            t.bytes_up as f64 / 1e9,
+        );
+    }
     Ok(())
 }
 
@@ -725,9 +868,9 @@ USAGE:
              [--trace]
   fedavg run --resume runs/<name> [--rounds N] [+ the original run's flags]
   fedavg fleet [--fleet-profile uniform|mobile|flaky] [--overselect RHO]
-             [--deadline SECONDS] [--workers N] [--clients K] [--sim-only]
-             [--start-round R] [--step-cost S] [--model-bytes B] [--steps U]
-             [--trace] [+ run flags]
+             [--deadline SECONDS] [--workers N] [--shards S] [--clients K]
+             [--sim-only] [--start-round R] [--step-cost S] [--model-bytes B]
+             [--steps U] [--trace] [+ run flags]
   fedavg bench [--areas a1,a2,..] [--out DIR] [--check] [--quick]
   fedavg oneshot [--model M] [--e N]
   fedavg info
@@ -757,7 +900,11 @@ drops, round deadlines, and parallel client updates. Without artifacts
 (or with --sim-only) it runs the training-free event-queue simulation —
 10k clients by default, 100k+ fine. `--start-round R` fast-forwards the
 simulation: rounds 1..R fold into the totals without being re-recorded
-(each round is a pure function of the seed).
+(each round is a pure function of the seed). `--shards S` aggregates
+hierarchically through S edge aggregators — bit-identical to flat
+aggregation for the mean-family rules (robust rules refuse it, DESIGN.md
+§11); edge<->root bytes/latency land in tiers.csv, tier.* metrics, and
+the summary, never in curve.csv or fleet.csv.
 
 Sweeps run on the grid engine (DESIGN.md S9): every cell (one table row
 x partition, one figure series, one lr point) is a fingerprinted config

@@ -19,10 +19,10 @@ use std::time::{Duration, SystemTime};
 
 use crate::comms::wire::Pipeline;
 use crate::config::BatchSize;
-use crate::coordinator::{schedule_round, FleetConfig, FleetProfile, FleetSim};
+use crate::coordinator::{schedule_round, FleetConfig, FleetProfile, FleetSim, TierLink};
 use crate::data::rng::Rng;
 use crate::data::{Dataset, Examples};
-use crate::federated::aggregate::{AggConfig, Aggregator as _};
+use crate::federated::aggregate::{combine_sharded, AggConfig, Aggregator as _};
 use crate::federated::{local_update, LocalSpec};
 use crate::params;
 use crate::runstate::atomic_write;
@@ -198,6 +198,31 @@ pub fn fleet_round(b: &mut Bencher) -> Result<()> {
         b.bench_elems(&format!("schedule_round/n={n}"), n as f64, || {
             std::hint::black_box(schedule_round(m, Some(80.0), &durations));
         });
+    }
+
+    // hierarchical combine (DESIGN.md §11): the sharded cascade's
+    // overhead over flat weighted averaging at 2NN size — S extra dense
+    // frame round-trips per combine, same arithmetic
+    let dim = 199_210usize;
+    let m = 50usize;
+    let mut rng = Rng::new(13);
+    let deltas: Vec<Vec<f32>> = (0..m)
+        .map(|_| (0..dim).map(|_| rng.gauss_f32() * 0.01).collect())
+        .collect();
+    let refs: Vec<(f32, &[f32])> = deltas.iter().map(|d| (600.0, d.as_slice())).collect();
+    let agg = AggConfig::default().build()?;
+    let link = TierLink::default();
+    b.bench_elems("combine_flat/50clients/2nn_199k", (m * dim) as f64, || {
+        std::hint::black_box(agg.combine(&refs).unwrap());
+    });
+    for s in [1usize, 8] {
+        b.bench_elems(
+            &format!("combine_sharded/s={s}/50clients/2nn_199k"),
+            (m * dim) as f64,
+            || {
+                std::hint::black_box(combine_sharded(agg.as_ref(), &refs, s, &link).unwrap());
+            },
+        );
     }
     Ok(())
 }

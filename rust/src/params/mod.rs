@@ -19,15 +19,36 @@ pub type ParamVec = Vec<f32>;
 pub fn weighted_mean(items: &[(f32, &[f32])]) -> ParamVec {
     assert!(!items.is_empty(), "weighted_mean of nothing");
     let dim = items[0].1.len();
-    let total: f64 = items.iter().map(|(w, _)| *w as f64).sum();
+    let total: f64 = weight_total(items);
     assert!(total > 0.0, "weighted_mean: non-positive total weight");
     let mut out = vec![0.0f32; dim];
-    for (w, x) in items {
-        assert_eq!(x.len(), dim, "weighted_mean: length mismatch");
-        let scale = (*w as f64 / total) as f32;
-        axpy(&mut out, scale, x);
-    }
+    weighted_fold(&mut out, items, total);
     out
+}
+
+/// Sum of the weights in f64 — the denominator [`weighted_mean`] and
+/// [`weighted_fold`] share. Hierarchical aggregation must compute this
+/// over the *whole* cohort before folding any shard, or the per-item
+/// scales (and therefore the bits) diverge from the flat mean.
+pub fn weight_total(items: &[(f32, &[f32])]) -> f64 {
+    items.iter().map(|(w, _)| *w as f64).sum()
+}
+
+/// Fold `items` onto a running accumulator with the exact per-item
+/// arithmetic of [`weighted_mean`]: each term is scaled by
+/// `(w as f64 / total) as f32` and accumulated via [`axpy`], in slice
+/// order. `weighted_mean(all)` ≡ zeros then `weighted_fold` over any
+/// contiguous partition of `all` folded in order with the global
+/// `total` — the identity hierarchical (sharded) aggregation relies on
+/// (DESIGN.md §11), which holds *by construction* because this is the
+/// same op sequence, merely resumable across shard boundaries.
+pub fn weighted_fold(acc: &mut [f32], items: &[(f32, &[f32])], total: f64) {
+    assert!(total > 0.0, "weighted_fold: non-positive total weight");
+    for (w, x) in items {
+        assert_eq!(x.len(), acc.len(), "weighted_fold: length mismatch");
+        let scale = (*w as f64 / total) as f32;
+        axpy(acc, scale, x);
+    }
 }
 
 /// `y += a * x`, the fused accumulate used by the averaging loop.
@@ -184,6 +205,33 @@ mod tests {
         let a = vec![1.0; 3];
         let b = vec![1.0; 4];
         weighted_mean(&[(1.0, &a[..]), (1.0, &b[..])]);
+    }
+
+    #[test]
+    fn weighted_fold_partition_is_bit_identical_to_mean() {
+        // any contiguous partition, folded in order with the global
+        // total, must reproduce weighted_mean bit-for-bit
+        let m = 9;
+        let dim = 257; // not a multiple of the axpy unroll
+        let vecs: Vec<Vec<f32>> = (0..m)
+            .map(|i| (0..dim).map(|j| ((i * 31 + j * 7) % 113) as f32 * 0.013 - 0.6).collect())
+            .collect();
+        let items: Vec<(f32, &[f32])> = vecs
+            .iter()
+            .enumerate()
+            .map(|(i, v)| ((i % 4 + 1) as f32 * 100.0, v.as_slice()))
+            .collect();
+        let flat = weighted_mean(&items);
+        let total = weight_total(&items);
+        for cuts in [vec![m], vec![4, m], vec![2, 3, 7, m], vec![1, 2, 3, 4, 5, 6, 7, 8, m]] {
+            let mut acc = vec![0.0f32; dim];
+            let mut start = 0;
+            for end in cuts {
+                weighted_fold(&mut acc, &items[start..end], total);
+                start = end;
+            }
+            assert_eq!(acc, flat, "partition diverged from flat mean");
+        }
     }
 
     #[test]

@@ -27,6 +27,7 @@
 //! | fleet totals + pending telemetry counters | `coordinator` | `FLEET` |
 //! | learning curves (accuracy/loss) | `metrics` | `CURVES` |
 //! | DP noise stream + ε accounting | [`GaussianMechanism`] | `DP` |
+//! | edge-tier byte/latency totals (`--shards`) | `federated::server` | `TIER` |
 //!
 //! What is deliberately *not* captured: anything that is a pure function
 //! of config — device profiles and the diurnal clock
@@ -72,7 +73,7 @@ mod snapshot;
 
 pub use snapshot::{
     atomic_write, checkpoint_dir, fnv1a64, AggState, CurveState, FleetState, RunMeta, Snapshot,
-    MAGIC, SNAP_VERSION,
+    TierState, MAGIC, SNAP_VERSION,
 };
 
 /// A resume request carried in

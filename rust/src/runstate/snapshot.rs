@@ -75,6 +75,7 @@ const SEC_COMMS: u16 = 7;
 const SEC_FLEET: u16 = 8;
 const SEC_CURVES: u16 = 9;
 const SEC_DP: u16 = 10;
+const SEC_TIER: u16 = 11;
 
 /// Configuration fingerprint stamped into every snapshot and verified on
 /// resume: a checkpoint must not silently continue under a different
@@ -128,6 +129,22 @@ pub struct FleetState {
     pub misses_since_eval: u64,
 }
 
+/// Edge-tier (tier-1) transfer accounting for hierarchical aggregation
+/// (`--shards S`, DESIGN.md §11). Cumulative totals — they cannot be
+/// recomputed on resume because each round's non-empty shard count
+/// depends on that round's cohort size (fleet completions vary).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TierState {
+    /// Edge→root wire bytes (dense tier-1 frames).
+    pub up_bytes: u64,
+    /// Root→edge wire bytes.
+    pub down_bytes: u64,
+    /// Tier-1 frames shipped.
+    pub frames: u64,
+    /// Deterministic tier-1 transfer seconds (latency + bytes/bps).
+    pub seconds: f64,
+}
+
 /// One complete run-state snapshot — everything `federated::server::run`
 /// needs to continue a run bit-identically (see the module docs for the
 /// state inventory and what is deliberately excluded).
@@ -145,6 +162,9 @@ pub struct Snapshot {
     pub fleet: FleetState,
     pub curves: CurveState,
     pub dp: Option<MechState>,
+    /// Edge-tier accounting; `Some` only for sharded runs (`--shards S`),
+    /// so unsharded snapshot byte-streams are unchanged by the field.
+    pub tier: Option<TierState>,
 }
 
 /// Where a run's snapshots live: `<run-dir>/checkpoints/`.
@@ -369,6 +389,15 @@ impl Snapshot {
             Self::section(&mut out, SEC_DP, w);
         }
 
+        if let Some(tier) = &self.tier {
+            let mut w = ByteWriter::new();
+            w.put_u64(tier.up_bytes);
+            w.put_u64(tier.down_bytes);
+            w.put_u64(tier.frames);
+            w.put_f64(tier.seconds);
+            Self::section(&mut out, SEC_TIER, w);
+        }
+
         out.into_inner()
     }
 
@@ -430,6 +459,7 @@ impl Snapshot {
         let mut fleet = None;
         let mut curves = None;
         let mut dp = None;
+        let mut tier = None;
 
         let mut r = ByteReader::new(payload);
         while !r.is_empty() {
@@ -549,6 +579,15 @@ impl Snapshot {
                     });
                     b.expect_end()?;
                 }
+                SEC_TIER => {
+                    tier = Some(TierState {
+                        up_bytes: b.u64()?,
+                        down_bytes: b.u64()?,
+                        frames: b.u64()?,
+                        seconds: b.f64()?,
+                    });
+                    b.expect_end()?;
+                }
                 _ => {} // unknown section: skip (additive format growth)
             }
         }
@@ -566,6 +605,7 @@ impl Snapshot {
             fleet: fleet.ok_or_else(|| missing("FLEET"))?,
             curves: curves.ok_or_else(|| missing("CURVES"))?,
             dp,
+            tier,
         })
     }
 

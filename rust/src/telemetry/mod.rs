@@ -358,6 +358,55 @@ impl FleetWriter {
     }
 }
 
+/// One aggregation-tier row of a sharded run (`--shards S`, DESIGN.md
+/// §11): tier 0 rows partition the client links across edge aggregators
+/// (one row per shard), tier 1 rows carry the edge↔root cascade frames
+/// (one row per round).
+#[derive(Debug, Clone, Copy)]
+pub struct TierRecord {
+    pub round: u64,
+    /// 0 = client↔edge, 1 = edge↔root (the frame-header tier tag).
+    pub tier: u8,
+    /// Shard index for tier 0 rows; 0 for the single tier-1 (root) row.
+    pub shard: usize,
+    /// Tier 0: aggregated clients in this shard. Tier 1: non-empty
+    /// shards (= edge frames cascaded through the root).
+    pub clients: usize,
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+    /// Tier 0: the round's straggler-bound client wall-clock (shared —
+    /// the synchronous round waits for the slowest tier-0 client). Tier
+    /// 1: the cascade's summed deterministic transfer time.
+    pub seconds: f64,
+}
+
+/// Writer for `runs/<name>/tiers.csv`, opened inside an existing run dir
+/// (the parent [`FleetWriter`]/[`RunWriter`] already settled collision
+/// rules for the directory). Sharded sim runs only; tier bytes NEVER
+/// land in fleet.csv/curve.csv, which stay byte-identical to a flat run.
+pub struct TierWriter {
+    csv: BufWriter<File>,
+}
+
+impl TierWriter {
+    pub fn create_in(dir: &Path) -> Result<Self> {
+        let mut csv = BufWriter::new(File::create(dir.join("tiers.csv"))?);
+        writeln!(csv, "round,tier,shard,clients,up_bytes,down_bytes,seconds")?;
+        csv.flush()?;
+        Ok(Self { csv })
+    }
+
+    pub fn record(&mut self, r: &TierRecord) -> Result<()> {
+        writeln!(
+            self.csv,
+            "{},{},{},{},{},{},{:.3}",
+            r.round, r.tier, r.shard, r.clients, r.up_bytes, r.down_bytes, r.seconds
+        )?;
+        self.csv.flush()?; // same crash-durability rule as RunWriter
+        Ok(())
+    }
+}
+
 /// Null telemetry sink for benches/tests (writes to a temp-ish dir under
 /// target/; overwrites — the same tag may be reused within a process).
 pub fn scratch_writer(tag: &str) -> Result<RunWriter> {
@@ -564,6 +613,40 @@ mod tests {
         // reopening a directory with no curve is an error, not a create
         assert!(RunWriter::reopen(dir.join("nope"), 1).is_err());
         std::fs::remove_dir_all(root).ok();
+    }
+
+    #[test]
+    fn tier_writer_rows() {
+        let pid = std::process::id();
+        let dir = std::path::PathBuf::from(format!("target/test-runs/tiers-{pid}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = TierWriter::create_in(&dir).unwrap();
+        w.record(&TierRecord {
+            round: 1,
+            tier: 0,
+            shard: 2,
+            clients: 25,
+            up_bytes: 100,
+            down_bytes: 130,
+            seconds: 41.5,
+        })
+        .unwrap();
+        w.record(&TierRecord {
+            round: 1,
+            tier: 1,
+            shard: 0,
+            clients: 4,
+            up_bytes: 96,
+            down_bytes: 72,
+            seconds: 0.25,
+        })
+        .unwrap();
+        drop(w); // rows must survive without an explicit finish
+        let csv = std::fs::read_to_string(dir.join("tiers.csv")).unwrap();
+        assert!(csv.starts_with("round,tier,shard,clients,up_bytes,down_bytes,seconds"));
+        assert!(csv.contains("1,0,2,25,100,130,41.500"));
+        assert!(csv.contains("1,1,0,4,96,72,0.250"));
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

@@ -12,7 +12,11 @@
 
 use std::path::{Path, PathBuf};
 
+use fedavg::coordinator::TierLink;
+use fedavg::data::rng::hash3_unit;
 use fedavg::exper::grid::{self, CellCtx, CellOutcome, CellWork, GridDef, GridOptions, Series};
+use fedavg::federated::aggregate::{combine_sharded, AggConfig};
+use fedavg::params;
 use fedavg::runstate::atomic_write;
 use fedavg::runtime::Engine;
 use fedavg::Result;
@@ -238,6 +242,142 @@ fn resume_requires_manifest_and_dry_run_is_readonly() {
         "dry run touched the manifest"
     );
     std::fs::remove_dir_all(root).ok();
+}
+
+// ------------------------------------------- sharded cells (DESIGN.md §11)
+
+/// Engine-free cell that trains a tiny synthetic trajectory through the
+/// real aggregator, flat (`shards == 0`) or via the hierarchical cascade
+/// (`shards >= 1`). The curve rows are pure functions of θ, so the
+/// shard↔flat bit-identity surfaces directly in the grid's byte-compared
+/// artifacts; tier traffic goes only to the cell summary.
+struct ShardCell {
+    id: u64,
+    shards: usize,
+    fail: bool,
+}
+
+impl CellWork for ShardCell {
+    fn spec(&self) -> String {
+        format!("shard id={} s={}", self.id, self.shards)
+    }
+
+    fn needs_engine(&self) -> bool {
+        false
+    }
+
+    fn run(&self, _engine: Option<&Engine>, ctx: &CellCtx) -> Result<CellOutcome> {
+        anyhow::ensure!(!self.fail, "injected mid-grid crash (shard cell {})", self.id);
+        std::fs::create_dir_all(&ctx.dir)?;
+        let agg = AggConfig { spec: "fedavgm:0.8".into(), ..Default::default() }.build()?;
+        let link = TierLink::default();
+        let dim = 64usize;
+        let mut theta = vec![0.0f32; dim];
+        let mut csv = String::from("round,norm\n");
+        let mut tier_up = 0u64;
+        for r in 1..=5u64 {
+            let cohort: Vec<(f32, Vec<f32>)> = (0..6u64)
+                .map(|c| {
+                    let d = (0..dim)
+                        .map(|i| {
+                            (hash3_unit(self.id * 1000 + r, c, i as u64) as f32 - 0.5) * 0.1
+                        })
+                        .collect();
+                    ((c % 3 + 1) as f32, d)
+                })
+                .collect();
+            let refs: Vec<(f32, &[f32])> =
+                cohort.iter().map(|(w, d)| (*w, d.as_slice())).collect();
+            let delta = if self.shards == 0 {
+                agg.combine(&refs)?
+            } else {
+                let sc = combine_sharded(agg.as_ref(), &refs, self.shards, &link)?;
+                tier_up += sc.up_bytes;
+                sc.delta
+            };
+            let step = agg.step(r, delta)?;
+            params::axpy(&mut theta, 1.0, &step);
+            csv.push_str(&format!("{r},{:.9}\n", params::l2_norm(&theta)));
+        }
+        atomic_write(&ctx.dir.join("curve.csv"), csv.as_bytes())?;
+        let mut out = CellOutcome::default();
+        out.put("id", self.id);
+        out.put("shards", self.shards as u64);
+        out.put("final_norm", format!("{:.9}", params::l2_norm(&theta)));
+        if self.shards > 0 {
+            out.put("tier_up_bytes", tier_up);
+        }
+        Ok(out)
+    }
+}
+
+/// Satellite of the §11 suite: a grid sweeping `--shards` killed
+/// mid-flight resumes byte-identically, and every sharded cell's curve
+/// is byte-equal to its flat twin's — the bit-identity guarantee holds
+/// through the grid engine's cache/resume machinery too.
+#[test]
+fn killed_sharded_grid_resumes_and_matches_flat() {
+    let cells = |fail_third: bool| {
+        let mut def = GridDef::new("smoke");
+        def.cell("flat", ShardCell { id: 1, shards: 0, fail: false });
+        def.cell("s2", ShardCell { id: 1, shards: 2, fail: false });
+        def.cell("s7", ShardCell { id: 1, shards: 7, fail: fail_third });
+        def.cell("s3", ShardCell { id: 1, shards: 3, fail: false });
+        def
+    };
+
+    // reference: uninterrupted sweep
+    let clean = test_root("shard-clean");
+    let report = grid::run(cells(false), None, &opts(&clean, 1))
+        .unwrap()
+        .expect("not a dry run");
+    assert_eq!(report.executed, 4);
+    for out in &report.outcomes[1..] {
+        assert_eq!(
+            out.get("final_norm"),
+            report.outcomes[0].get("final_norm"),
+            "sharded outcome diverged from flat"
+        );
+    }
+
+    // killed at the third cell, then rerun the same command
+    let killed = test_root("shard-killed");
+    let err = grid::run(cells(true), None, &opts(&killed, 1)).unwrap_err();
+    assert!(format!("{err:#}").contains("injected"), "{err:#}");
+    let report = grid::run(cells(false), None, &opts(&killed, 1))
+        .unwrap()
+        .expect("not a dry run");
+    assert_eq!(report.executed, 2, "cells s7 and s3 remained");
+    assert_eq!(report.cache_hits, 2, "flat and s2 were reused");
+
+    let a = artifacts(&clean);
+    let b = artifacts(&killed);
+    assert_eq!(a.len(), b.len());
+    for ((name, bytes_a), (_, bytes_b)) in a.iter().zip(&b) {
+        assert_eq!(bytes_a, bytes_b, "{name} differs between clean and resumed grids");
+    }
+
+    // shard↔flat bit-identity across the cached cell pool: the flat
+    // cell's curve bytes equal every sharded cell's
+    let mut flat_curve = None;
+    let mut sharded_curves = Vec::new();
+    for e in std::fs::read_dir(clean.join("cells")).unwrap() {
+        let dir = e.unwrap().path();
+        let record = std::fs::read_to_string(dir.join("cell.json")).unwrap();
+        let curve = std::fs::read(dir.join("curve.csv")).unwrap();
+        if record.contains("s=0") {
+            flat_curve = Some(curve);
+        } else {
+            sharded_curves.push((record, curve));
+        }
+    }
+    let flat_curve = flat_curve.expect("flat cell present");
+    assert_eq!(sharded_curves.len(), 3);
+    for (record, curve) in sharded_curves {
+        assert_eq!(curve, flat_curve, "sharded cell curve != flat: {record}");
+    }
+    std::fs::remove_dir_all(clean).ok();
+    std::fs::remove_dir_all(killed).ok();
 }
 
 #[test]

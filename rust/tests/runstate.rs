@@ -23,7 +23,7 @@ use fedavg::metrics::LearningCurve;
 use fedavg::params;
 use fedavg::privacy::{clip, GaussianMechanism};
 use fedavg::runstate::{
-    checkpoint_dir, AggState, CurveState, FleetState, ResumeFrom, RunMeta, Snapshot,
+    checkpoint_dir, AggState, CurveState, FleetState, ResumeFrom, RunMeta, Snapshot, TierState,
 };
 use fedavg::telemetry::{RoundRecord, RunWriter};
 
@@ -256,6 +256,7 @@ impl Harness {
                 train_loss: None,
             },
             dp: self.mech.as_ref().map(|m| m.state_save()),
+            tier: None,
         }
     }
 
@@ -367,6 +368,12 @@ fn rich_snapshot(tag: &str, round: u64) -> Snapshot {
         mech.state_save()
     });
     snap.curves.train_loss = Some(vec![(2, 1.5), (4, 1.25)]);
+    snap.tier = Some(TierState {
+        up_bytes: 4 * 1228,
+        down_bytes: 3 * 1228,
+        frames: 7,
+        seconds: 0.875,
+    });
     std::fs::remove_dir_all(root).ok();
     snap
 }

@@ -1,0 +1,556 @@
+//! Hierarchical sharded aggregation — shard↔flat bit-identity suite
+//! (DESIGN.md §11).
+//!
+//! The tentpole guarantee under test: `--shards S` routes every round's
+//! combine through S edge aggregators and a root cascade, and the run is
+//! **byte-for-byte identical** to flat aggregation — same θ trajectory,
+//! same `curve.csv` — for every mean-family rule, any shard count, and
+//! any worker count. Tier-1 (edge↔root) bytes and latency land only in
+//! the tier accounting (`tiers.csv`, `tier.*` metrics, summary fields,
+//! snapshot `TIER` section), never in the curve. An engine-free harness
+//! (mirroring `rust/tests/runstate.rs`) drives the real subsystems —
+//! sampler, transport with error feedback, stateful aggregators, comm
+//! simulator, the sharded cascade itself — through a synthetic round
+//! loop; artifact-gated tests repeat the identity over the full training
+//! stack. Robust rules (`trimmed:<β>`, `median`) must refuse to shard:
+//! coordinate-wise order statistics do not compose across tiers.
+
+use std::path::PathBuf;
+
+use fedavg::comms::wire::HEADER_BYTES;
+use fedavg::comms::{CommModel, CommSim, Transport, TransportConfig};
+use fedavg::coordinator::{tier_transfer_seconds, FleetTotals, TierLink};
+use fedavg::data::rng::hash3_unit;
+use fedavg::federated::aggregate::{combine_sharded, fmt_state_norms, AggConfig, Aggregator};
+use fedavg::federated::ClientSampler;
+use fedavg::metrics::LearningCurve;
+use fedavg::params;
+use fedavg::runstate::{
+    checkpoint_dir, AggState, CurveState, FleetState, RunMeta, Snapshot, TierState,
+};
+use fedavg::telemetry::{RoundRecord, RunWriter};
+
+const DIM: usize = 301;
+const K: usize = 12;
+const M: usize = 4;
+const SEED: u64 = 21;
+
+fn test_root(tag: &str) -> PathBuf {
+    let root = PathBuf::from(format!(
+        "target/test-runs/shards-{tag}-{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&root).ok();
+    root
+}
+
+/// Deterministic stand-in for a client's local update (same recipe as
+/// `rust/tests/runstate.rs`): a function of (round, client, θ) so a
+/// single wrong bit in the combine propagates into every later round.
+fn synth_delta(round: u64, client: usize, theta: &[f32]) -> Vec<f32> {
+    (0..DIM)
+        .map(|i| {
+            (hash3_unit(round, client as u64, i as u64) as f32 - 0.5) * 0.1
+                - 0.01 * theta[i]
+        })
+        .collect()
+}
+
+/// Fake evaluation: a smooth function of ‖θ‖ (no model involved).
+fn fake_eval(theta: &[f32]) -> (f64, f64) {
+    let n = params::l2_norm(theta);
+    (1.0 / (1.0 + n), n)
+}
+
+/// One synthetic run whose combine step is either flat
+/// (`Aggregator::combine`, `shards == 0`) or the sharded cascade
+/// ([`combine_sharded`], `shards >= 1`) — everything else identical.
+struct Harness {
+    theta: Vec<f32>,
+    sampler: ClientSampler,
+    transport: Transport,
+    comms: CommSim,
+    agg: Box<dyn Aggregator>,
+    shards: usize,
+    link: TierLink,
+    tier: TierState,
+    accuracy: LearningCurve,
+    test_loss: LearningCurve,
+    client_steps: u64,
+    eval_every: u64,
+    /// Emulate `--workers N`: client updates computed out of dispatch
+    /// order, then sorted back to slot order before encoding — the same
+    /// guarantee `ParallelExec` gives the server loop.
+    scrambled_workers: bool,
+    meta: RunMeta,
+}
+
+fn harness(spec: &str, codec: Option<&str>, shards: usize) -> Harness {
+    let transport_cfg = TransportConfig::parse(codec, codec.map(|_| "delta")).unwrap();
+    let transport = Transport::new(transport_cfg, K, DIM, SEED);
+    let agg = AggConfig { spec: spec.into(), ..Default::default() }.build().unwrap();
+    let meta = RunMeta {
+        label: format!("synthetic shards={shards}"),
+        agg: agg.label(),
+        codec: transport.codec_label(),
+        seed: SEED,
+        clients: K as u64,
+        dim: DIM as u64,
+        lr_decay: 1.0,
+        eval_every: 2,
+        // the shard count is part of the fingerprint (as in the server's
+        // RunMeta): resuming under a different S would blend two
+        // topologies' tier accounting
+        harness: format!("shards={shards}"),
+    };
+    Harness {
+        theta: (0..DIM).map(|i| (i as f32 * 0.01).sin()).collect(),
+        sampler: ClientSampler::new(SEED),
+        transport,
+        comms: CommSim::new(CommModel::default(), SEED),
+        agg,
+        shards,
+        link: TierLink::default(),
+        tier: TierState::default(),
+        accuracy: LearningCurve::new(),
+        test_loss: LearningCurve::new(),
+        client_steps: 0,
+        eval_every: 2,
+        scrambled_workers: false,
+        meta,
+    }
+}
+
+impl Harness {
+    /// One synchronous round, mirroring the server loop's state flow.
+    fn round(&mut self, round: u64, last: u64, w: &mut RunWriter) {
+        self.transport.publish(round, &self.theta);
+        let est_up = self.transport.up_plan_bytes();
+        let picks = self.sampler.sample(round, K, M);
+        let mut down_total = 0u64;
+        for &c in &picks {
+            down_total += self.transport.downlink(c, round, &self.theta);
+        }
+        // "worker pool": compute raw updates in whatever order the pool
+        // finishes them, then restore dispatch-slot order — encode and
+        // aggregate always see the same sequence
+        let mut slots: Vec<(usize, usize, Vec<f32>)> = Vec::new();
+        let order: Vec<usize> = if self.scrambled_workers {
+            (0..picks.len()).rev().collect()
+        } else {
+            (0..picks.len()).collect()
+        };
+        for slot in order {
+            let ck = picks[slot];
+            self.client_steps += 5;
+            slots.push((slot, ck, synth_delta(round, ck, &self.theta)));
+        }
+        slots.sort_by_key(|(slot, _, _)| *slot);
+        let mut wire_up = 0u64;
+        let mut deltas: Vec<(f32, Vec<f32>)> = Vec::new();
+        for (_, ck, mut delta) in slots {
+            wire_up += self.transport.encode_up(ck, &mut delta).unwrap();
+            deltas.push(((ck % 3 + 1) as f32, delta));
+        }
+        let refs: Vec<(f32, &[f32])> = deltas.iter().map(|(w, d)| (*w, d.as_slice())).collect();
+        let agg_delta = if self.shards > 0 {
+            let sc = combine_sharded(self.agg.as_ref(), &refs, self.shards, &self.link).unwrap();
+            self.tier.up_bytes += sc.up_bytes;
+            self.tier.down_bytes += sc.down_bytes;
+            self.tier.frames += sc.frames;
+            self.tier.seconds += sc.seconds;
+            sc.delta
+        } else {
+            self.agg.combine(&refs).unwrap()
+        };
+        let step = self.agg.step(round, agg_delta).unwrap();
+        params::axpy(&mut self.theta, 1.0, &step);
+        // tier-1 seconds stay OUT of the comm simulator: curve.csv's
+        // sim_seconds must match the flat run byte-for-byte
+        let rc = self.comms.ingest(wire_up, down_total, 1.0);
+        if round % self.eval_every == 0 || round == last {
+            let (acc, loss) = fake_eval(&self.theta);
+            self.accuracy.push(round, acc);
+            self.test_loss.push(round, loss);
+            let server_state = fmt_state_norms(&self.agg.state_norms());
+            w.record(&RoundRecord {
+                round,
+                test_accuracy: acc,
+                test_loss: loss,
+                train_loss: None,
+                clients: picks.len(),
+                lr: 0.1,
+                up_bytes: rc.bytes_up,
+                down_bytes: rc.bytes_down,
+                codec: &self.meta.codec,
+                sim_seconds: self.comms.totals().sim_seconds,
+                dropped: 0,
+                deadline_misses: 0,
+                agg: &self.meta.agg,
+                server_state: &server_state,
+            })
+            .unwrap();
+        }
+    }
+
+    fn run(&mut self, rounds: u64, root: &PathBuf, name: &str) -> PathBuf {
+        let mut w = RunWriter::create(root, name).unwrap();
+        let dir = w.dir().to_path_buf();
+        for round in 1..=rounds {
+            self.round(round, rounds, &mut w);
+        }
+        w.finish(&[("rounds", rounds.to_string())]).unwrap();
+        dir
+    }
+
+    fn snapshot(&self, round: u64) -> Snapshot {
+        Snapshot {
+            round,
+            meta: self.meta.clone(),
+            theta: self.theta.clone(),
+            client_steps: self.client_steps,
+            sampler: self.sampler.state(),
+            agg: AggState {
+                label: self.agg.label(),
+                bytes: self.agg.state_save(),
+            },
+            transport: self.transport.state_save(),
+            comms: self.comms.state_save(),
+            fleet: FleetState {
+                totals: FleetTotals::default(),
+                dropped_since_eval: 0,
+                misses_since_eval: 0,
+            },
+            curves: CurveState {
+                accuracy: self.accuracy.points().to_vec(),
+                test_loss: self.test_loss.points().to_vec(),
+                train_loss: None,
+            },
+            dp: None,
+            tier: (self.shards > 0).then_some(self.tier),
+        }
+    }
+
+    /// The exact restore sequence `federated::server::run` performs.
+    fn restore(&mut self, snap: Snapshot) {
+        assert_eq!(snap.meta, self.meta, "config fingerprint mismatch");
+        self.theta = snap.theta;
+        self.sampler.restore_state(snap.sampler);
+        self.agg.state_load(&snap.agg.bytes).unwrap();
+        self.transport.state_load(snap.transport).unwrap();
+        self.comms.state_load(snap.comms);
+        self.accuracy = LearningCurve::from_points(snap.curves.accuracy).unwrap();
+        self.test_loss = LearningCurve::from_points(snap.curves.test_loss).unwrap();
+        self.client_steps = snap.client_steps;
+        self.tier = snap.tier.unwrap_or_default();
+    }
+}
+
+fn read_curve(dir: &PathBuf) -> Vec<u8> {
+    std::fs::read(dir.join("curve.csv")).unwrap()
+}
+
+// ---------------------------------------------------- tentpole identity
+
+/// The headline property: for every mean-family rule × codec × shard
+/// count, S-sharded runs produce byte-identical curve.csv — and
+/// bit-identical θ — versus the flat run, while the tier accounting
+/// records real cascade traffic.
+#[test]
+fn sharded_runs_match_flat_byte_for_byte() {
+    let rounds = 8u64;
+    for spec in ["fedavg", "fedavgm:0.8", "fedadam:0.01"] {
+        for codec in [None, Some("topk:30|q8")] {
+            let tag = format!(
+                "matrix-{}-{}",
+                spec.split(':').next().unwrap(),
+                codec.map(|_| "topk").unwrap_or("dense")
+            );
+            let root = test_root(&tag);
+            let mut flat = harness(spec, codec, 0);
+            let flat_dir = flat.run(rounds, &root, "flat");
+            let flat_curve = read_curve(&flat_dir);
+            assert!(!flat_curve.is_empty());
+            for s in [1usize, 2, 7] {
+                let mut sharded = harness(spec, codec, s);
+                let dir = sharded.run(rounds, &root, &format!("s{s}"));
+                assert_eq!(
+                    read_curve(&dir),
+                    flat_curve,
+                    "{spec} codec={codec:?} S={s}: curve.csv diverged from flat"
+                );
+                let same_theta = flat
+                    .theta
+                    .iter()
+                    .zip(&sharded.theta)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same_theta, "{spec} codec={codec:?} S={s}: θ diverged");
+                assert!(sharded.tier.frames > 0, "S={s}: cascade shipped no frames");
+            }
+            std::fs::remove_dir_all(root).ok();
+        }
+    }
+}
+
+/// Worker-pool completion order must not leak into the sharded result:
+/// updates finish out of order, get slot-sorted, and the curve matches
+/// both the in-order sharded run and the flat run.
+#[test]
+fn worker_completion_order_is_invisible() {
+    let rounds = 8u64;
+    let root = test_root("workers");
+    let mut flat = harness("fedavgm:0.8", Some("topk:30|q8"), 0);
+    let flat_dir = flat.run(rounds, &root, "flat");
+    let mut ordered = harness("fedavgm:0.8", Some("topk:30|q8"), 2);
+    let ordered_dir = ordered.run(rounds, &root, "ordered");
+    let mut scrambled = harness("fedavgm:0.8", Some("topk:30|q8"), 2);
+    scrambled.scrambled_workers = true;
+    let scrambled_dir = scrambled.run(rounds, &root, "scrambled");
+    let flat_curve = read_curve(&flat_dir);
+    assert_eq!(read_curve(&ordered_dir), flat_curve);
+    assert_eq!(read_curve(&scrambled_dir), flat_curve);
+    assert_eq!(ordered.tier, scrambled.tier, "tier accounting must be order-free too");
+    std::fs::remove_dir_all(root).ok();
+}
+
+/// The harness's cumulative tier accounting follows the cascade's frame
+/// arithmetic exactly: per round, `min(S, m)` non-empty shards ship one
+/// dense up-frame each and `non_empty − 1` down-frames, serialized over
+/// the default link.
+#[test]
+fn tier_accounting_is_deterministic() {
+    let rounds = 6u64;
+    let s = 3usize;
+    let root = test_root("accounting");
+    let mut h = harness("fedavg", None, s);
+    h.run(rounds, &root, "acct");
+    let fb = HEADER_BYTES + 4 * DIM as u64;
+    let non_empty = s.min(M) as u64; // sampler returns exactly M picks
+    assert_eq!(h.tier.up_bytes, rounds * non_empty * fb);
+    assert_eq!(h.tier.down_bytes, rounds * (non_empty - 1) * fb);
+    assert_eq!(h.tier.frames, rounds * (2 * non_empty - 1));
+    let per_round = (2.0 * non_empty as f64 - 1.0)
+        * tier_transfer_seconds(&TierLink::default(), fb);
+    assert!((h.tier.seconds - rounds as f64 * per_round).abs() < 1e-9);
+    std::fs::remove_dir_all(root).ok();
+}
+
+// ------------------------------------------------ robust-rule rejection
+
+/// `trimmed`/`median` × shards must fail loudly, not fall back to flat:
+/// the error names the rule and points at the design rationale.
+#[test]
+fn robust_rules_refuse_to_shard() {
+    let link = TierLink::default();
+    let deltas: Vec<(f32, Vec<f32>)> = (0..5)
+        .map(|c| (1.0 + c as f32, vec![0.25f32; 33]))
+        .collect();
+    let refs: Vec<(f32, &[f32])> = deltas.iter().map(|(w, d)| (*w, d.as_slice())).collect();
+    for spec in ["trimmed:0.2", "median"] {
+        let agg = AggConfig { spec: spec.into(), ..Default::default() }.build().unwrap();
+        let err = combine_sharded(agg.as_ref(), &refs, 2, &link).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains(&agg.label()), "{spec}: error must name the rule: {msg}");
+        assert!(msg.contains("order statistics"), "{spec}: {msg}");
+        assert!(msg.contains("DESIGN.md §11"), "{spec}: {msg}");
+    }
+}
+
+// ------------------------------------------------- checkpoint + resume
+
+/// Satellite 3, engine-free: a sharded run checkpointed mid-flight and
+/// resumed is byte-identical to the uninterrupted sharded run — and the
+/// snapshot's `TIER` section restores the cumulative cascade totals, so
+/// the resumed accounting matches too.
+#[test]
+fn sharded_resume_is_bit_identical() {
+    let root = test_root("resume");
+    let (r1, r2) = (6u64, 12u64);
+    let ckpt_round = 5u64; // off the eval cadence, like runstate.rs
+
+    let mut full = harness("fedavgm:0.8", Some("topk:30|q8"), 2);
+    let full_dir = full.run(r2, &root, "full");
+
+    let mut part = harness("fedavgm:0.8", Some("topk:30|q8"), 2);
+    let mut w = RunWriter::create(&root, "resumed").unwrap();
+    let part_dir = w.dir().to_path_buf();
+    let ckpts = checkpoint_dir(&part_dir);
+    for round in 1..=r1 {
+        part.round(round, r2, &mut w);
+        if round <= ckpt_round {
+            part.snapshot(round).write(&ckpts, 2).unwrap();
+        }
+    }
+    drop(w); // kill: no finish()
+
+    let (_, snap) = Snapshot::load_latest(&part_dir).unwrap().expect("snapshots exist");
+    assert_eq!(snap.round, ckpt_round);
+    assert!(snap.tier.is_some(), "sharded snapshot must carry the TIER section");
+    let mut resumed = harness("fedavgm:0.8", Some("topk:30|q8"), 2);
+    resumed.restore(snap);
+    let mut w = RunWriter::reopen(&part_dir, ckpt_round).unwrap();
+    for round in ckpt_round + 1..=r2 {
+        resumed.round(round, r2, &mut w);
+    }
+    w.finish(&[("rounds", r2.to_string())]).unwrap();
+
+    assert_eq!(
+        read_curve(&part_dir),
+        read_curve(&full_dir),
+        "resumed sharded curve.csv != uninterrupted"
+    );
+    assert_eq!(resumed.tier, full.tier, "resumed tier totals != uninterrupted");
+    std::fs::remove_dir_all(root).ok();
+}
+
+/// The shard count is part of the resume fingerprint: a checkpoint taken
+/// under S=2 must not restore into an S=3 (or flat) invocation — the
+/// snapshot carries cumulative tier totals that only mean anything under
+/// the topology that produced them.
+#[test]
+fn resume_refuses_a_different_shard_count() {
+    let root = test_root("refuse");
+    let mut h2 = harness("fedavg", None, 2);
+    let mut w = RunWriter::create(&root, "s2").unwrap();
+    for round in 1..=3 {
+        h2.round(round, 3, &mut w);
+    }
+    let snap = h2.snapshot(3);
+    for other in [0usize, 1, 3] {
+        let h = harness("fedavg", None, other);
+        assert_ne!(
+            snap.meta, h.meta,
+            "S=2 checkpoint fingerprint must differ from S={other}"
+        );
+    }
+    // same S: fingerprint matches and restore goes through
+    let mut back = harness("fedavg", None, 2);
+    back.restore(snap);
+    assert_eq!(back.tier, h2.tier);
+    std::fs::remove_dir_all(root).ok();
+}
+
+// ------------------------------------- full-stack (artifact-gated) tests
+
+/// The identity over the real training stack: `--shards 3 --workers 4`
+/// versus flat sequential, same seed — final θ bit-equal, curve.csv
+/// byte-equal, and the sharded summary carries the tier fields.
+#[test]
+fn server_sharded_bit_identity_over_artifacts() {
+    use fedavg::config::{BatchSize, FedConfig, Partition};
+    use fedavg::coordinator::{FleetConfig, FleetProfile};
+    use fedavg::federated::{self, ServerOptions};
+    use fedavg::runtime::Engine;
+
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return;
+    }
+    let eng = Engine::load(dir).expect("engine");
+    let fed = fedavg::exper::mnist_fed(0.05, Partition::Iid, 77);
+    let cfg = FedConfig {
+        model: "mnist_2nn".into(),
+        c: 0.3,
+        e: 1,
+        b: BatchSize::Fixed(10),
+        lr: 0.1,
+        rounds: 4,
+        eval_every: 1,
+        seed: 77,
+        ..Default::default()
+    };
+    let opts = |telemetry: Option<RunWriter>, shards: usize, workers: usize| ServerOptions {
+        eval_cap: Some(200),
+        telemetry,
+        transport: TransportConfig::parse(Some("topk:0.02|q8"), Some("delta")).unwrap(),
+        agg: AggConfig { spec: "fedavgm:0.9".into(), ..Default::default() },
+        fleet: FleetConfig {
+            profile: FleetProfile::Mobile,
+            overselect: 0.3,
+            shards,
+            workers,
+            ..FleetConfig::default()
+        },
+        ..Default::default()
+    };
+    let root = test_root("server");
+
+    let w = RunWriter::create(&root, "flat").unwrap();
+    let flat_dir = w.dir().to_path_buf();
+    let flat = federated::run(&eng, &fed, &cfg, opts(Some(w), 0, 1)).unwrap();
+
+    let w = RunWriter::create(&root, "sharded").unwrap();
+    let sharded_dir = w.dir().to_path_buf();
+    let sharded = federated::run(&eng, &fed, &cfg, opts(Some(w), 3, 4)).unwrap();
+
+    assert_eq!(flat.final_theta, sharded.final_theta, "sharded θ diverged from flat");
+    assert_eq!(
+        read_curve(&flat_dir),
+        read_curve(&sharded_dir),
+        "sharded curve.csv diverged from flat"
+    );
+    let summary = std::fs::read_to_string(sharded_dir.join("summary.json")).unwrap();
+    assert!(summary.contains("\"shards\": 3"), "{summary}");
+    for field in ["tier_up_bytes", "tier_down_bytes", "tier_frames", "tier_seconds"] {
+        assert!(summary.contains(field), "missing {field}: {summary}");
+    }
+    let flat_summary = std::fs::read_to_string(flat_dir.join("summary.json")).unwrap();
+    assert!(
+        !flat_summary.contains("tier_up_bytes"),
+        "flat run must not report tier fields: {flat_summary}"
+    );
+    std::fs::remove_dir_all(root).ok();
+}
+
+/// Server-level startup rejections (mirroring the PR 3 secure-agg
+/// matrix): robust rules and secure aggregation both refuse `--shards`
+/// before any training happens.
+#[test]
+fn server_rejects_shards_with_robust_rules_and_secure_agg() {
+    use fedavg::config::{BatchSize, FedConfig, Partition};
+    use fedavg::coordinator::FleetConfig;
+    use fedavg::federated::{self, ServerOptions};
+    use fedavg::runtime::Engine;
+
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return;
+    }
+    let eng = Engine::load(dir).expect("engine");
+    let fed = fedavg::exper::mnist_fed(0.05, Partition::Iid, 7);
+    let cfg = FedConfig {
+        model: "mnist_2nn".into(),
+        c: 0.1,
+        e: 1,
+        b: BatchSize::Fixed(10),
+        lr: 0.1,
+        rounds: 1,
+        eval_every: 1,
+        seed: 7,
+        ..Default::default()
+    };
+    let sharded = || ServerOptions {
+        fleet: FleetConfig { shards: 2, ..FleetConfig::default() },
+        ..Default::default()
+    };
+    for spec in ["median", "trimmed:0.2"] {
+        let mut o = sharded();
+        o.agg.spec = spec.into();
+        let err = federated::run(&eng, &fed, &cfg, o).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("order statistics"), "{spec}: {msg}");
+    }
+    let mut o = sharded();
+    o.secure_agg = true;
+    let err = federated::run(&eng, &fed, &cfg, o).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("secure-agg"), "{msg}");
+    assert!(msg.contains("full cohort"), "{msg}");
+    // the same specs run fine flat — the refusal is about sharding
+    let mut o = ServerOptions::default();
+    o.agg.spec = "median".into();
+    o.eval_cap = Some(50);
+    assert!(federated::run(&eng, &fed, &cfg, o).is_ok());
+}
