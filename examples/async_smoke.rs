@@ -1,0 +1,336 @@
+//! Buffered-async kill/resume smoke drill (engine-free) — the CI
+//! `async-smoke` job's workhorse (DESIGN.md §12).
+//!
+//! One seeded buffered-async run over the uniform fleet with synthetic
+//! client deltas, driving the real subsystems: sampler, virtual-clock
+//! wave scheduler, transport (top-k + q8 with error feedback), stateful
+//! server rule, the K-delta staleness buffer, and per-round snapshots.
+//! Two determinism drills, straight from `rust/tests/async_rounds.rs`:
+//!
+//! * `--workers N` only scrambles the order client updates are
+//!   *computed* in (the pool emulation) — the curve must be
+//!   byte-identical for every N, because arrival order is the virtual
+//!   clock's, not the pool's.
+//! * `--kill-after R` calls `exit(42)` right after round R's checkpoint
+//!   — on the uniform fleet with buffer 3 that checkpoint holds a
+//!   part-full buffer, a real mid-buffer kill. Re-running the same
+//!   `--out` resumes from the snapshot and must reproduce the
+//!   uninterrupted curve byte-for-byte.
+//!
+//! ```bash
+//! async_smoke --out runs/a --workers 1
+//! async_smoke --out runs/b --workers 4       # same bytes
+//! async_smoke --out runs/c --kill-after 2    # dies with exit 42
+//! async_smoke --out runs/c                   # resumes
+//! diff runs/a/smoke/curve.csv runs/b/smoke/curve.csv
+//! diff runs/a/smoke/curve.csv runs/c/smoke/curve.csv
+//! ```
+
+use std::path::PathBuf;
+
+use fedavg::comms::{CommModel, CommSim, Transport, TransportConfig};
+use fedavg::coordinator::{plan_async_wave, Fleet, FleetConfig, FleetProfile, FleetTotals};
+use fedavg::data::rng::hash3_unit;
+use fedavg::federated::aggregate::{
+    fmt_state_norms, staleness_scale, staleness_weight, AggConfig, Aggregator,
+};
+use fedavg::federated::ClientSampler;
+use fedavg::metrics::LearningCurve;
+use fedavg::params;
+use fedavg::runstate::{
+    checkpoint_dir, AggState, AsyncState, BufferedDelta, CurveState, FleetState, RunMeta,
+    Snapshot,
+};
+use fedavg::telemetry::{RoundRecord, RunWriter};
+use fedavg::util::args::Args;
+use fedavg::Result;
+
+const DIM: usize = 301;
+const K: usize = 12;
+const M: usize = 4;
+const SEED: u64 = 23;
+const BUFFER: usize = 3;
+const DECAY: f64 = 0.8;
+const STEPS: f64 = 5.0;
+const EVAL_EVERY: u64 = 2;
+
+fn synth_delta(round: u64, client: usize, theta: &[f32]) -> Vec<f32> {
+    (0..DIM)
+        .map(|i| {
+            (hash3_unit(round, client as u64, i as u64) as f32 - 0.5) * 0.1
+                - 0.01 * theta[i]
+        })
+        .collect()
+}
+
+fn fake_eval(theta: &[f32]) -> (f64, f64) {
+    let n = params::l2_norm(theta);
+    (1.0 / (1.0 + n), n)
+}
+
+struct Smoke {
+    theta: Vec<f32>,
+    sampler: ClientSampler,
+    transport: Transport,
+    comms: CommSim,
+    agg: Box<dyn Aggregator>,
+    fleet: Fleet,
+    astate: AsyncState,
+    accuracy: LearningCurve,
+    test_loss: LearningCurve,
+    client_steps: u64,
+    scrambled_workers: bool,
+    meta: RunMeta,
+}
+
+fn smoke() -> Smoke {
+    let cfg = FleetConfig {
+        profile: FleetProfile::Uniform,
+        async_buffer: Some(BUFFER),
+        staleness_decay: DECAY,
+        ..FleetConfig::default()
+    };
+    let transport_cfg = TransportConfig::parse(Some("topk:30|q8"), Some("delta")).unwrap();
+    let transport = Transport::new(transport_cfg, K, DIM, SEED);
+    let agg = AggConfig { spec: "fedavgm:0.8".into(), ..Default::default() }.build().unwrap();
+    let meta = RunMeta {
+        label: "async smoke".into(),
+        agg: agg.label(),
+        codec: transport.codec_label(),
+        seed: SEED,
+        clients: K as u64,
+        dim: DIM as u64,
+        lr_decay: 1.0,
+        eval_every: EVAL_EVERY,
+        harness: format!("async=({BUFFER},{DECAY})"),
+    };
+    Smoke {
+        theta: (0..DIM).map(|i| (i as f32 * 0.01).sin()).collect(),
+        sampler: ClientSampler::new(SEED),
+        transport,
+        comms: CommSim::new(CommModel::default(), SEED),
+        agg,
+        fleet: Fleet::build(&cfg, K, SEED),
+        astate: AsyncState::default(),
+        accuracy: LearningCurve::new(),
+        test_loss: LearningCurve::new(),
+        client_steps: 0,
+        scrambled_workers: false,
+        meta,
+    }
+}
+
+impl Smoke {
+    /// One buffered-async wave — the same state flow as
+    /// `federated::server::run`'s async branch (and the engine-free
+    /// harness in `rust/tests/async_rounds.rs`).
+    fn round(&mut self, round: u64, last: u64, w: &mut RunWriter) -> Result<()> {
+        self.transport.publish(round, &self.theta);
+        let est_up = self.transport.up_plan_bytes();
+        let mut down_total = 0u64;
+        let wv = {
+            let Smoke { ref fleet, ref mut sampler, ref mut transport, ref theta, .. } = *self;
+            let (_, wv) = plan_async_wave(
+                fleet,
+                sampler,
+                round,
+                M,
+                |c| {
+                    let down = transport.downlink(c, round, theta);
+                    down_total += down;
+                    (down, est_up)
+                },
+                |_| STEPS,
+            );
+            wv
+        };
+        let picks = &wv.dispatched;
+
+        let mut slots: Vec<(usize, usize, Vec<f32>)> = Vec::new();
+        let order: Vec<usize> = if self.scrambled_workers {
+            (0..picks.len()).rev().collect()
+        } else {
+            (0..picks.len()).collect()
+        };
+        for slot in order {
+            let ck = picks[slot];
+            self.client_steps += STEPS as u64;
+            slots.push((slot, ck, synth_delta(round, ck, &self.theta)));
+        }
+        slots.sort_by_key(|(slot, _, _)| *slot);
+        let mut wire_up = 0u64;
+        let mut arrived: Vec<Option<(f32, Vec<f32>)>> =
+            (0..picks.len()).map(|_| None).collect();
+        for (slot, ck, mut delta) in slots {
+            wire_up += self.transport.encode_up(ck, &mut delta)?;
+            arrived[slot] = Some(((ck % 3 + 1) as f32, delta));
+        }
+
+        let a = &mut self.astate;
+        for arr in &wv.arrivals {
+            let Some((weight, delta)) = arrived[arr.slot].take() else { continue };
+            a.pending.push(BufferedDelta {
+                dispatch_round: round,
+                slot: arr.slot as u64,
+                client: arr.client as u64,
+                basis: a.applies_done,
+                weight,
+                due_s: 0.0,
+                delta,
+            });
+        }
+        while a.pending.len() >= BUFFER {
+            let mut batch: Vec<BufferedDelta> = a.pending.drain(..BUFFER).collect();
+            batch.sort_by_key(|e| (e.dispatch_round, e.slot));
+            let stale: Vec<(f32, u64)> =
+                batch.iter().map(|e| (e.weight, a.applies_done - e.basis)).collect();
+            let scale = staleness_scale(&stale, DECAY);
+            let mut agg_delta = if scale > 0.0 {
+                let refs: Vec<(f32, &[f32])> = batch
+                    .iter()
+                    .zip(&stale)
+                    .map(|(e, &(wt, s))| (staleness_weight(wt, DECAY, s), e.delta.as_slice()))
+                    .collect();
+                self.agg.combine(&refs)?
+            } else {
+                vec![0.0f32; self.theta.len()]
+            };
+            if scale != 1.0 {
+                for v in agg_delta.iter_mut() {
+                    *v = (*v as f64 * scale) as f32;
+                }
+            }
+            let step = self.agg.step(a.applies_done + 1, agg_delta)?;
+            params::axpy(&mut self.theta, 1.0, &step);
+            a.applies_done += 1;
+            a.deltas_since_eval += BUFFER as u64;
+            for &(_, s) in &stale {
+                a.stale_sum_since_eval += s;
+            }
+        }
+        let rc = self.comms.ingest(wire_up, down_total, wv.round_seconds);
+
+        if round % EVAL_EVERY == 0 || round == last {
+            let (acc, loss) = fake_eval(&self.theta);
+            self.accuracy.push(round, acc);
+            self.test_loss.push(round, loss);
+            let server_state = fmt_state_norms(&self.agg.state_norms());
+            let a = &self.astate;
+            w.record(&RoundRecord {
+                round,
+                test_accuracy: acc,
+                test_loss: loss,
+                train_loss: None,
+                clients: picks.len(),
+                lr: 0.1,
+                up_bytes: rc.bytes_up,
+                down_bytes: rc.bytes_down,
+                codec: &self.meta.codec,
+                sim_seconds: self.comms.totals().sim_seconds,
+                dropped: 0,
+                deadline_misses: 0,
+                agg: &self.meta.agg,
+                server_state: &server_state,
+                staleness_mean: if a.deltas_since_eval > 0 {
+                    a.stale_sum_since_eval as f64 / a.deltas_since_eval as f64
+                } else {
+                    0.0
+                },
+                buffer_fill: a.pending.len(),
+            })?;
+            self.astate.stale_sum_since_eval = 0;
+            self.astate.deltas_since_eval = 0;
+        }
+        Ok(())
+    }
+
+    fn snapshot(&self, round: u64) -> Snapshot {
+        Snapshot {
+            round,
+            meta: self.meta.clone(),
+            theta: self.theta.clone(),
+            client_steps: self.client_steps,
+            sampler: self.sampler.state(),
+            agg: AggState { label: self.agg.label(), bytes: self.agg.state_save() },
+            transport: self.transport.state_save(),
+            comms: self.comms.state_save(),
+            fleet: FleetState {
+                totals: FleetTotals::default(),
+                dropped_since_eval: 0,
+                misses_since_eval: 0,
+            },
+            curves: CurveState {
+                accuracy: self.accuracy.points().to_vec(),
+                test_loss: self.test_loss.points().to_vec(),
+                train_loss: None,
+            },
+            dp: None,
+            tier: None,
+            async_state: Some(self.astate.clone()),
+        }
+    }
+
+    fn restore(&mut self, snap: Snapshot) -> Result<()> {
+        anyhow::ensure!(snap.meta == self.meta, "config fingerprint mismatch");
+        self.theta = snap.theta;
+        self.sampler.restore_state(snap.sampler);
+        self.agg.state_load(&snap.agg.bytes)?;
+        self.transport.state_load(snap.transport)?;
+        self.comms.state_load(snap.comms);
+        self.accuracy = LearningCurve::from_points(snap.curves.accuracy)?;
+        self.test_loss = LearningCurve::from_points(snap.curves.test_loss)?;
+        self.client_steps = snap.client_steps;
+        self.astate = snap.async_state.expect("async smoke snapshot carries ASYNC");
+        Ok(())
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    args.check_known(&["out", "workers", "rounds", "kill-after"])?;
+    let out = PathBuf::from(args.str_or("out", "runs/async-smoke"));
+    let workers = args.usize_or("workers", 1)?;
+    let rounds = args.u64_or("rounds", 10)?;
+    let kill_after = match args.str_opt("kill-after") {
+        Some(v) => Some(v.parse::<u64>()?),
+        None => None,
+    };
+
+    let mut s = smoke();
+    s.scrambled_workers = workers > 1;
+    let run_dir = out.join("smoke");
+
+    // resume if a previous (killed) invocation left checkpoints behind
+    let (mut w, start) = match Snapshot::load_latest(&run_dir)? {
+        Some((_, snap)) => {
+            let at = snap.round;
+            s.restore(snap)?;
+            println!("async smoke: resuming after round {at} (applies {}, {} pending)",
+                s.astate.applies_done, s.astate.pending.len());
+            (RunWriter::reopen(&run_dir, at)?, at + 1)
+        }
+        None => (RunWriter::create(&out, "smoke")?, 1),
+    };
+    let ckpts = checkpoint_dir(&run_dir);
+    for round in start..=rounds {
+        s.round(round, rounds, &mut w)?;
+        s.snapshot(round).write(&ckpts, 2)?;
+        if kill_after == Some(round) {
+            eprintln!(
+                "async smoke: round {round} checkpointed with {} delta(s) mid-buffer — \
+                 killing the process (exit 42)",
+                s.astate.pending.len()
+            );
+            std::process::exit(42);
+        }
+    }
+    w.finish(&[("rounds", rounds.to_string())])?;
+    println!(
+        "async smoke: {rounds} waves, {} buffer applies, {} delta(s) still pending, \
+         mean |θ| {:.4}",
+        s.astate.applies_done,
+        s.astate.pending.len(),
+        params::l2_norm(&s.theta) / (DIM as f64).sqrt()
+    );
+    Ok(())
+}

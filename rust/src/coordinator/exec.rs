@@ -10,6 +10,12 @@
 //! sequential path would — `--workers N` is bit-identical to
 //! `--workers 1` (each ClientUpdate is deterministic given `(θ_t, spec)`
 //! and f32 accumulation order is fixed by the slot sort).
+//!
+//! The buffered-async round mode (DESIGN.md §12) leans on the same
+//! invariant: "arrival order" is the virtual-clock `(t, slot)` sort of a
+//! wave's completions, never the wall-clock order worker threads happen
+//! to finish in, so the K-delta buffer fills — and combine∘step fires —
+//! in a worker-count-independent sequence.
 
 use std::path::PathBuf;
 use std::sync::Arc;

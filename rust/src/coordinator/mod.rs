@@ -38,9 +38,37 @@ pub mod shards;
 pub use exec::{ClientJob, ParallelExec};
 pub use fleet::{DeviceProfile, Fleet, FleetProfile};
 pub use scheduler::{
-    overselect_count, plan_round, schedule_round, FleetSim, RoundPlan, SimRound, SimTotals,
+    fault_of, overselect_count, plan_async_wave, plan_round, schedule_async_wave, schedule_round,
+    Arrival, Fault, FaultConfig, FleetSim, RoundPlan, SimRound, SimTotals, WavePlan,
 };
 pub use shards::{shard_ranges, tier_transfer_seconds, TierLink};
+
+/// What happens to a dispatched straggler that finishes after the round
+/// deadline (DESIGN.md §12). `Drop` is the paper's synchronous barrier;
+/// `Discount` is the semi-sync mode: the late update keeps training,
+/// waits in a queue keyed by its virtual finish time, and joins a later
+/// round's combine with a staleness-discounted weight instead of being
+/// discarded.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum LatePolicy {
+    /// Discard past-deadline updates (the synchronous protocol).
+    #[default]
+    Drop,
+    /// Apply past-deadline updates late, weighted by
+    /// `--staleness-decay` per round of lateness.
+    Discount,
+}
+
+impl LatePolicy {
+    /// Parse the `--late-policy` CLI token.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "drop" => Ok(Self::Drop),
+            "discount" => Ok(Self::Discount),
+            _ => anyhow::bail!("unknown --late-policy {s:?} (want drop|discount)"),
+        }
+    }
+}
 
 /// Knobs for fleet-aware round execution, carried in
 /// [`ServerOptions`](crate::federated::ServerOptions). The default is the
@@ -66,6 +94,17 @@ pub struct FleetConfig {
     /// Edge-aggregator count for hierarchical aggregation (`--shards S`);
     /// 0 = flat single-tier aggregation (DESIGN.md §11).
     pub shards: usize,
+    /// Buffered-async aggregation (`--async-buffer K`): the server runs
+    /// combine∘step whenever K client deltas have arrived, instead of
+    /// waiting out a synchronous cohort. `None` = synchronous rounds
+    /// (DESIGN.md §12).
+    pub async_buffer: Option<usize>,
+    /// Per-apply staleness discount d ∈ (0, 1]: a delta dispatched s
+    /// server applies ago is weighted `n_k·d^s`. 1.0 = no discount (and
+    /// the bit-exact sync-identity guard).
+    pub staleness_decay: f64,
+    /// Semi-sync straggler handling past the deadline (`--late-policy`).
+    pub late_policy: LatePolicy,
 }
 
 impl Default for FleetConfig {
@@ -79,6 +118,9 @@ impl Default for FleetConfig {
             diurnal_period: 48.0,
             latency_s: 0.1,
             shards: 0,
+            async_buffer: None,
+            staleness_decay: 1.0,
+            late_policy: LatePolicy::Drop,
         }
     }
 }

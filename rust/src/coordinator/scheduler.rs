@@ -13,11 +13,12 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use crate::data::rng::hash3_unit;
 use crate::federated::sampler::ClientSampler;
 use crate::Result;
 
 use super::fleet::{Fleet, FleetProfile};
-use super::{FleetConfig, FleetTotals};
+use super::{FleetConfig, FleetTotals, LatePolicy};
 
 /// Over-selection count: `⌈m·(1+ρ)⌉`, capped at the candidate pool.
 pub fn overselect_count(m: usize, rho: f64, pool: usize) -> usize {
@@ -36,6 +37,12 @@ pub struct RoundPlan {
     pub completed: Vec<usize>,
     /// Dispatched clients whose updates were discarded.
     pub dropped: Vec<usize>,
+    /// The past-deadline subset of `dropped`, with each straggler's
+    /// virtual finish time (seconds from round start), in dispatch
+    /// order. Empty without a deadline. Under `--late-policy discount`
+    /// the server moves these from the drop list into the late queue
+    /// (DESIGN.md §12); under the default drop policy they stay dropped.
+    pub late: Vec<(usize, f64)>,
     /// True when the deadline fired before `m` finishers arrived.
     pub deadline_miss: bool,
     /// Straggler-bound simulated wall-clock of the round: the `m`-th
@@ -136,12 +143,159 @@ pub fn schedule_round(
         .filter(|(slot, _)| !done[*slot])
         .map(|(_, &(c, _))| c)
         .collect();
+    // late = dropped ∧ past-deadline: a pure function of the durations,
+    // independent of the event-loop break order (surplus finishers that
+    // beat the deadline but lost the race to m are *not* late)
+    let late: Vec<(usize, f64)> = match deadline_s {
+        Some(d) => durations
+            .iter()
+            .enumerate()
+            .filter(|&(slot, &(_, t))| !done[slot] && t > d)
+            .map(|(_, &(c, t))| (c, t))
+            .collect(),
+        None => Vec::new(),
+    };
     RoundPlan {
         dispatched,
         completed,
         dropped,
+        late,
         deadline_miss,
         round_seconds,
+    }
+}
+
+// -------------------------------------------------- buffered-async waves
+
+/// One client-delta arrival in a buffered-async wave.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    /// Dispatch slot within the wave (the sync reduction order).
+    pub slot: usize,
+    pub client: usize,
+    /// Virtual finish time, seconds from wave start.
+    pub t: f64,
+}
+
+/// One buffered-async wave's outcome: every dispatched client completes
+/// (no deadline, no drops), and the arrivals are totally ordered by
+/// `(t, slot)` — a pure function of the seeded fleet's event times,
+/// never of wall clock or worker scheduling. This order is the sequence
+/// in which deltas enter the server's staleness buffer (DESIGN.md §12).
+#[derive(Debug, Clone)]
+pub struct WavePlan {
+    /// Clients the server sent the model to, in selection order.
+    pub dispatched: Vec<usize>,
+    /// All finishers, sorted by `(finish time, dispatch slot)`.
+    pub arrivals: Vec<Arrival>,
+    /// Virtual wall-clock of the wave: the last arrival's finish time.
+    pub round_seconds: f64,
+}
+
+/// Order one async wave's arrivals. Mirrors [`schedule_round`]'s
+/// validation, but aggregation-free: buffered-async applies are the
+/// server's business, the scheduler only fixes the arrival order.
+pub fn schedule_async_wave(durations: &[(usize, f64)]) -> WavePlan {
+    assert!(!durations.is_empty(), "scheduling an empty dispatch set");
+    let mut arrivals: Vec<Arrival> = durations
+        .iter()
+        .enumerate()
+        .map(|(slot, &(client, t))| {
+            assert!(t.is_finite() && t >= 0.0, "bad duration {t}");
+            Arrival { slot, client, t }
+        })
+        .collect();
+    arrivals.sort_by(|a, b| {
+        a.t.partial_cmp(&b.t)
+            .expect("non-finite finish time")
+            .then(a.slot.cmp(&b.slot))
+    });
+    let round_seconds = arrivals.last().map(|a| a.t).unwrap_or(0.0);
+    WavePlan {
+        dispatched: durations.iter().map(|&(c, _)| c).collect(),
+        arrivals,
+        round_seconds,
+    }
+}
+
+/// Async twin of [`plan_round`]: diurnal online scan, plain `m`-sample
+/// (no over-selection — every dispatched update is eventually applied),
+/// per-client durations, arrival ordering. Returns the online-pool size
+/// alongside the wave plan.
+pub fn plan_async_wave(
+    fleet: &Fleet,
+    sampler: &mut ClientSampler,
+    round: u64,
+    m: usize,
+    mut link_bytes: impl FnMut(usize) -> (u64, u64),
+    steps_of: impl Fn(usize) -> f64,
+) -> (usize, WavePlan) {
+    let online = fleet.online_set(round);
+    let dispatched = sampler.sample_from(round, &online, m.min(online.len()));
+    let durations: Vec<(usize, f64)> = dispatched
+        .iter()
+        .map(|&c| {
+            let (down, up) = link_bytes(c);
+            (c, fleet.client_seconds(c, down, up, steps_of(c)))
+        })
+        .collect();
+    (online.len(), schedule_async_wave(&durations))
+}
+
+// -------------------------------------------------------- fault injection
+
+/// Seeded client-fault model for the virtual-clock simulator and the
+/// async test harness (DESIGN.md §12): per `(round, client)`, a client
+/// may **abort** (its update never arrives; its error-feedback residual
+/// must stay untouched) or **duplicate** (its delta is delivered twice;
+/// the second copy must be refused — applies are idempotent).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// P(abort) per dispatched client per round.
+    pub abort_p: f64,
+    /// P(duplicate delivery) per arriving delta.
+    pub duplicate_p: f64,
+    /// Fault stream seed, independent of the fleet/sampler seeds.
+    pub seed: u64,
+}
+
+impl FaultConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.abort_p) && (0.0..=1.0).contains(&self.duplicate_p),
+            "fault probabilities must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            self.abort_p + self.duplicate_p <= 1.0,
+            "abort_p + duplicate_p must not exceed 1"
+        );
+        Ok(())
+    }
+}
+
+/// What the fault stream does to one `(round, client)` dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    None,
+    Abort,
+    Duplicate,
+}
+
+/// Domain separator so the fault coin never correlates with the
+/// availability coin or the sampler stream at equal seeds.
+const FAULT_SALT: u64 = 0xFA17_5EED_0A5B_11E9;
+
+/// The fault stream: a pure function of `(seed, round, client)` — like
+/// every other source of scheduling randomness, it replays identically
+/// under any worker count and across kill/resume.
+pub fn fault_of(cfg: &FaultConfig, round: u64, client: u64) -> Fault {
+    let u = hash3_unit(cfg.seed ^ FAULT_SALT, round, client);
+    if u < cfg.abort_p {
+        Fault::Abort
+    } else if u < cfg.abort_p + cfg.duplicate_p {
+        Fault::Duplicate
+    } else {
+        Fault::None
     }
 }
 
@@ -195,6 +349,14 @@ pub struct SimTotals {
     pub bytes_up: u64,
     pub bytes_down: u64,
     pub sim_seconds: f64,
+    /// Buffered-async combine∘step applies (0 in sync mode).
+    pub buffer_applies: u64,
+    /// Past-deadline updates applied late under `--late-policy discount`.
+    pub late_applied: u64,
+    /// Injected client aborts (update never arrived; see [`fault_of`]).
+    pub aborted: u64,
+    /// Injected duplicate deliveries refused by the idempotent apply.
+    pub duplicates_refused: u64,
 }
 
 /// One simulated round's report.
@@ -219,6 +381,11 @@ pub struct FleetSim {
     sampler: ClientSampler,
     round: u64,
     totals: SimTotals,
+    faults: Option<FaultConfig>,
+    /// Deltas waiting in the async buffer (buffered-async mode only).
+    pending: usize,
+    /// Semi-sync late queue: `(client, absolute due-time seconds)`.
+    late_queue: Vec<(usize, f64)>,
 }
 
 impl FleetSim {
@@ -238,6 +405,33 @@ impl FleetSim {
             "fleet sim needs a device profile (uniform|mobile|flaky)"
         );
         anyhow::ensure!(k >= 1 && m >= 1 && m <= k, "bad fleet shape k={k} m={m}");
+        if let Some(buf) = cfg.async_buffer {
+            anyhow::ensure!(buf >= 1, "--async-buffer must be at least 1");
+            anyhow::ensure!(
+                cfg.overselect == 0.0 && cfg.deadline_s.is_none(),
+                "--async-buffer replaces the synchronous barrier: \
+                 --overselect/--deadline do not apply (DESIGN.md §12)"
+            );
+            anyhow::ensure!(
+                cfg.late_policy == LatePolicy::Drop,
+                "--async-buffer and --late-policy are alternative round modes \
+                 (DESIGN.md §12)"
+            );
+        }
+        if cfg.late_policy == LatePolicy::Discount {
+            anyhow::ensure!(
+                cfg.deadline_s.is_some(),
+                "--late-policy discount needs --deadline: without one nobody is late \
+                 (DESIGN.md §12)"
+            );
+        }
+        anyhow::ensure!(
+            cfg.staleness_decay.is_finite()
+                && cfg.staleness_decay > 0.0
+                && cfg.staleness_decay <= 1.0,
+            "--staleness-decay must be in (0, 1], got {}",
+            cfg.staleness_decay
+        );
         Ok(Self {
             fleet: Fleet::build(cfg, k, seed),
             cfg: cfg.clone(),
@@ -247,11 +441,49 @@ impl FleetSim {
             sampler: ClientSampler::new(seed),
             round: 0,
             totals: SimTotals::default(),
+            faults: None,
+            pending: 0,
+            late_queue: Vec::new(),
         })
+    }
+
+    /// Attach a seeded fault stream (aborts / duplicate deliveries).
+    pub fn with_faults(mut self, faults: FaultConfig) -> Result<Self> {
+        faults.validate()?;
+        self.faults = Some(faults);
+        Ok(self)
     }
 
     pub fn fleet(&self) -> &Fleet {
         &self.fleet
+    }
+
+    /// Deltas currently waiting in the async buffer (0 in sync mode).
+    pub fn buffer_fill(&self) -> usize {
+        self.pending
+    }
+
+    /// Late stragglers still queued for a future round (semi-sync only).
+    pub fn late_queued(&self) -> usize {
+        self.late_queue.len()
+    }
+
+    /// The fault stream's verdict for one arriving update, folded into
+    /// the totals: `true` iff the update actually lands (duplicates land
+    /// once — the wasted second uplink is billed, the copy refused).
+    fn deliverable(&mut self, round: u64, client: usize) -> bool {
+        match self.faults.as_ref().map(|f| fault_of(f, round, client as u64)) {
+            Some(Fault::Abort) => {
+                self.totals.aborted += 1;
+                false
+            }
+            Some(Fault::Duplicate) => {
+                self.totals.duplicates_refused += 1;
+                self.totals.bytes_up += self.model_bytes;
+                true
+            }
+            _ => true,
+        }
     }
 
     /// Advance one round and fold it into the totals.
@@ -260,24 +492,89 @@ impl FleetSim {
         let round = self.round;
         let steps = self.steps_per_client;
         let mb = self.model_bytes;
-        let (online, plan) = plan_round(
-            &self.fleet,
-            &mut self.sampler,
-            round,
-            self.m,
-            self.cfg.overselect,
-            self.cfg.deadline_s,
-            |_| (mb, mb),
-            |_| steps,
-        );
+        let clock0 = self.totals.sim_seconds;
+
+        let (online, plan) = if let Some(buf) = self.cfg.async_buffer {
+            // buffered-async wave: everyone finishes, arrivals feed the
+            // buffer in (t, slot) order, applies fire as it fills
+            let (online, wave) = plan_async_wave(
+                &self.fleet,
+                &mut self.sampler,
+                round,
+                self.m,
+                |_| (mb, mb),
+                |_| steps,
+            );
+            let mut completed = Vec::new();
+            let mut dropped = Vec::new();
+            for a in &wave.arrivals {
+                if self.deliverable(round, a.client) {
+                    completed.push(a.client);
+                } else {
+                    dropped.push(a.client);
+                }
+            }
+            self.pending += completed.len();
+            self.totals.buffer_applies += (self.pending / buf) as u64;
+            self.pending %= buf;
+            let plan = RoundPlan {
+                dispatched: wave.dispatched,
+                completed,
+                dropped,
+                late: Vec::new(),
+                deadline_miss: false,
+                round_seconds: wave.round_seconds,
+            };
+            (online, plan)
+        } else {
+            let (online, mut plan) = plan_round(
+                &self.fleet,
+                &mut self.sampler,
+                round,
+                self.m,
+                self.cfg.overselect,
+                self.cfg.deadline_s,
+                |_| (mb, mb),
+                |_| steps,
+            );
+            let in_time = std::mem::take(&mut plan.completed);
+            for c in in_time {
+                if self.deliverable(round, c) {
+                    plan.completed.push(c);
+                } else {
+                    plan.dropped.push(c);
+                }
+            }
+            if self.cfg.late_policy == LatePolicy::Discount {
+                // past-deadline stragglers leave the drop list and queue
+                // for a later round, keyed by absolute finish time
+                for &(c, t) in &plan.late {
+                    plan.dropped.retain(|&d| d != c);
+                    if self.deliverable(round, c) {
+                        self.late_queue.push((c, clock0 + t));
+                    }
+                }
+                let cut = clock0 + plan.round_seconds;
+                let due: Vec<usize> = self
+                    .late_queue
+                    .iter()
+                    .filter(|&&(_, t)| t <= cut)
+                    .map(|&(c, _)| c)
+                    .collect();
+                self.late_queue.retain(|&(_, t)| t > cut);
+                self.totals.late_applied += due.len() as u64;
+                plan.completed.extend(due);
+            }
+            (online, plan)
+        };
 
         self.totals.rounds += 1;
         self.totals.fleet.dispatched += plan.dispatched.len() as u64;
         self.totals.fleet.completed += plan.completed.len() as u64;
         self.totals.fleet.dropped_stragglers += plan.dropped.len() as u64;
         self.totals.fleet.deadline_misses += plan.deadline_miss as u64;
-        self.totals.bytes_up += self.model_bytes * plan.completed.len() as u64;
-        self.totals.bytes_down += self.model_bytes * plan.dispatched.len() as u64;
+        self.totals.bytes_up += mb * plan.completed.len() as u64;
+        self.totals.bytes_down += mb * plan.dispatched.len() as u64;
         self.totals.sim_seconds += plan.round_seconds;
 
         SimRound {
@@ -477,5 +774,175 @@ mod tests {
         z.fast_forward(1);
         assert_eq!(z.totals().rounds, 0);
         assert_eq!(z.step().round, 1);
+    }
+
+    // ------------------------------------------- async / semi-sync / faults
+
+    #[test]
+    fn async_wave_orders_arrivals_by_time_then_slot() {
+        let w = schedule_async_wave(&durs(&[5.0, 2.0, 5.0, 1.0]));
+        let order: Vec<(usize, usize)> = w.arrivals.iter().map(|a| (a.slot, a.client)).collect();
+        // 1.0 (slot3), 2.0 (slot1), then the 5.0 tie resolves slot0 < slot2
+        assert_eq!(order, vec![(3, 30), (1, 10), (0, 0), (2, 20)]);
+        assert!((w.round_seconds - 5.0).abs() < 1e-12, "wave ends at the last arrival");
+        assert_eq!(w.dispatched, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn late_stragglers_reported_with_finish_times() {
+        // m=2, deadline 4: 1s and 3s complete; 8s and 9s are late; no surplus
+        let p = schedule_round(2, Some(4.0), &durs(&[1.0, 8.0, 3.0, 9.0]));
+        assert_eq!(p.late, vec![(10, 8.0), (30, 9.0)]);
+        // surplus finisher inside the deadline is dropped but NOT late
+        let p = schedule_round(1, Some(10.0), &durs(&[1.0, 2.0, 20.0]));
+        assert_eq!(p.dropped, vec![10, 20]);
+        assert_eq!(p.late, vec![(20, 20.0)]);
+        // no deadline: nobody is late, whatever the durations
+        let p = schedule_round(1, None, &durs(&[1.0, 99.0]));
+        assert!(p.late.is_empty());
+    }
+
+    #[test]
+    fn fault_stream_is_pure_and_partitioned() {
+        let fc = FaultConfig { abort_p: 0.2, duplicate_p: 0.1, seed: 7 };
+        fc.validate().unwrap();
+        let (mut aborts, mut dups) = (0u32, 0u32);
+        for round in 1..=20u64 {
+            for client in 0..200u64 {
+                let f = fault_of(&fc, round, client);
+                assert_eq!(f, fault_of(&fc, round, client), "fault stream must replay");
+                match f {
+                    Fault::Abort => aborts += 1,
+                    Fault::Duplicate => dups += 1,
+                    Fault::None => {}
+                }
+            }
+        }
+        // 4000 draws: the empirical rates should land near 20% / 10%
+        assert!((600..=1000).contains(&aborts), "aborts={aborts}");
+        assert!((250..=550).contains(&dups), "dups={dups}");
+        // a different seed reshuffles the stream
+        let other = FaultConfig { seed: 8, ..fc };
+        assert!((0..200u64).any(|c| fault_of(&fc, 1, c) != fault_of(&other, 1, c)));
+        assert!(FaultConfig { abort_p: 0.7, duplicate_p: 0.5, seed: 0 }.validate().is_err());
+        assert!(FaultConfig { abort_p: -0.1, duplicate_p: 0.0, seed: 0 }.validate().is_err());
+    }
+
+    #[test]
+    fn async_sim_buffers_and_applies_deterministically() {
+        let cfg = FleetConfig {
+            profile: FleetProfile::Mobile,
+            async_buffer: Some(7),
+            ..Default::default()
+        };
+        let mk = || FleetSim::new(&cfg, 300, 10, 500_000, 40.0, 11).unwrap();
+        let (mut a, mut b) = (mk(), mk());
+        let mut arrived = 0u64;
+        for _ in 0..15 {
+            let ra = a.step();
+            let rb = b.step();
+            assert_eq!(ra.plan.completed, rb.plan.completed, "async sim must replay");
+            assert!(ra.plan.dropped.is_empty(), "async mode never drops without faults");
+            assert!(!ra.plan.deadline_miss);
+            arrived += ra.plan.completed.len() as u64;
+        }
+        let t = a.totals();
+        // the buffer arithmetic: applies ride the cumulative arrival count
+        assert_eq!(t.buffer_applies, arrived / 7);
+        assert_eq!(t.buffer_applies * 7 + a.buffer_fill() as u64, arrived);
+        assert_eq!(t.fleet.completed, arrived);
+        assert_eq!(t.fleet.dispatched, arrived); // everyone finishes
+    }
+
+    #[test]
+    fn semi_sync_sim_requeues_late_stragglers() {
+        let base = FleetConfig {
+            profile: FleetProfile::Mobile,
+            overselect: 0.2,
+            deadline_s: Some(25.0),
+            ..Default::default()
+        };
+        let drop_cfg = base.clone();
+        let disc_cfg = FleetConfig { late_policy: LatePolicy::Discount, ..base };
+        let mut dropper = FleetSim::new(&drop_cfg, 400, 15, 600_000, 50.0, 3).unwrap();
+        let mut semi = FleetSim::new(&disc_cfg, 400, 15, 600_000, 50.0, 3).unwrap();
+        for _ in 0..30 {
+            let d = dropper.step();
+            let s = semi.step();
+            // the schedule itself is shared: same dispatch, same cut
+            assert_eq!(d.plan.dispatched, s.plan.dispatched);
+            assert_eq!(d.plan.round_seconds, s.plan.round_seconds);
+        }
+        let (td, ts) = (dropper.totals(), semi.totals());
+        assert!(ts.late_applied > 0, "deadline 25s over mobile must produce stragglers");
+        assert_eq!(td.late_applied, 0);
+        // every late-applied update left the drop column and joined completed
+        assert!(ts.fleet.dropped_stragglers < td.fleet.dropped_stragglers);
+        assert!(ts.fleet.completed > td.fleet.completed);
+        assert_eq!(ts.fleet.dispatched, td.fleet.dispatched);
+        // conservation: applied + still-dropped + still-queued = dispatched
+        assert_eq!(
+            ts.fleet.completed + ts.fleet.dropped_stragglers + semi.late_queue.len() as u64,
+            ts.fleet.dispatched
+        );
+    }
+
+    #[test]
+    fn sim_faults_abort_and_refuse_duplicates() {
+        let cfg = FleetConfig {
+            profile: FleetProfile::Uniform,
+            async_buffer: Some(5),
+            ..Default::default()
+        };
+        let faults = FaultConfig { abort_p: 0.25, duplicate_p: 0.15, seed: 99 };
+        let mk = || {
+            FleetSim::new(&cfg, 200, 12, 100_000, 20.0, 5)
+                .unwrap()
+                .with_faults(faults)
+                .unwrap()
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..25 {
+            let ra = a.step();
+            let rb = b.step();
+            assert_eq!(ra.plan.completed, rb.plan.completed, "faulty sim must replay too");
+            assert_eq!(ra.plan.dropped, rb.plan.dropped);
+        }
+        let t = a.totals();
+        assert!(t.aborted > 0 && t.duplicates_refused > 0, "{t:?}");
+        // aborted updates never reach the buffer or the byte counters
+        assert_eq!(t.fleet.completed + t.aborted, t.fleet.dispatched);
+        assert_eq!(t.buffer_applies * 5 + a.buffer_fill() as u64, t.fleet.completed);
+        // each duplicate billed one wasted uplink on top of the real ones
+        assert_eq!(
+            t.bytes_up,
+            100_000 * (t.fleet.completed + t.duplicates_refused)
+        );
+    }
+
+    #[test]
+    fn sim_rejects_contradictory_round_modes() {
+        let base = FleetConfig { profile: FleetProfile::Uniform, ..Default::default() };
+        let cases = [
+            FleetConfig { async_buffer: Some(0), ..base.clone() },
+            FleetConfig { async_buffer: Some(4), overselect: 0.3, ..base.clone() },
+            FleetConfig { async_buffer: Some(4), deadline_s: Some(10.0), ..base.clone() },
+            FleetConfig {
+                async_buffer: Some(4),
+                late_policy: LatePolicy::Discount,
+                ..base.clone()
+            },
+            FleetConfig { late_policy: LatePolicy::Discount, ..base.clone() },
+            FleetConfig { staleness_decay: 0.0, ..base.clone() },
+            FleetConfig { staleness_decay: 1.5, ..base.clone() },
+        ];
+        for cfg in cases {
+            assert!(
+                FleetSim::new(&cfg, 50, 5, 1000, 1.0, 1).is_err(),
+                "accepted: {cfg:?}"
+            );
+        }
+        assert!(FleetSim::new(&FleetConfig { async_buffer: Some(4), ..base }, 50, 5, 1000, 1.0, 1)
+            .is_ok());
     }
 }

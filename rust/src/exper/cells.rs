@@ -22,6 +22,7 @@ use std::path::Path;
 use crate::baselines::sgd::{self, SgdConfig};
 use crate::comms::{CommTotals, TransportConfig};
 use crate::config::{BatchSize, FedConfig, Partition};
+use crate::coordinator::FleetConfig;
 use crate::data::{corrupt_clients, Federated};
 use crate::federated::aggregate::{fmt_state_norms, AggConfig};
 use crate::federated::{self, local_update, LocalSpec, ServerOptions};
@@ -106,6 +107,9 @@ pub struct FedCell {
     pub transport: TransportConfig,
     /// Fraction of label-corrupted clients (`fedavg agg`); 0 = none.
     pub corrupt: f64,
+    /// Fleet coordination (profiles, deadlines, round modes); the
+    /// default Legacy profile is the plain synchronous server path.
+    pub fleet: FleetConfig,
 }
 
 impl FedCell {
@@ -117,6 +121,7 @@ impl FedCell {
             agg: AggConfig::default(),
             transport: TransportConfig::default(),
             corrupt: 0.0,
+            fleet: FleetConfig::default(),
         }
     }
 
@@ -249,10 +254,14 @@ impl FedCell {
 
 impl CellWork for FedCell {
     fn spec(&self) -> String {
+        // --workers is deliberately absent: worker parallelism is
+        // bit-invariant (slot-ordered reduction), so a cell's bytes are
+        // a pure function of everything else here.
         format!(
             "fed {} seed={} lr_decay={} rounds={} eval_every={} target={:?} \
              train_loss={} | {} | eval_cap={} agg={} server_lr={:?} \
-             server_momentum={} prox_mu={} codec={} corrupt={}",
+             server_momentum={} prox_mu={} codec={} corrupt={} \
+             fleet=({:?},{:?},{:?},{:?},{},{:?},{:?},{:?})",
             self.cfg.label(),
             self.cfg.seed,
             self.cfg.lr_decay,
@@ -268,6 +277,14 @@ impl CellWork for FedCell {
             self.agg.prox_mu,
             self.codec_spec(),
             self.corrupt,
+            self.fleet.profile,
+            self.fleet.overselect,
+            self.fleet.deadline_s,
+            self.fleet.step_cost_s,
+            self.fleet.shards,
+            self.fleet.async_buffer,
+            self.fleet.staleness_decay,
+            self.fleet.late_policy,
         )
     }
 
@@ -290,6 +307,7 @@ impl CellWork for FedCell {
             eval_cap: Some(self.eval_cap),
             transport: self.transport.clone(),
             agg: self.agg.clone(),
+            fleet: self.fleet.clone(),
             checkpoint: ctx.checkpoint,
             // covers the resume path, whose writer the server reopens
             // itself; the fresh path's writer is quieted below
@@ -509,7 +527,7 @@ mod tests {
     fn fed_spec_covers_every_knob() {
         let base = fed_cell();
         let mut tweaked: Vec<FedCell> = Vec::new();
-        let tweaks: [fn(&mut FedCell); 13] = [
+        let tweaks: [fn(&mut FedCell); 17] = [
             |c: &mut FedCell| c.cfg.lr = 0.2,
             |c: &mut FedCell| c.cfg.seed = 43,
             |c: &mut FedCell| c.cfg.rounds += 1,
@@ -530,6 +548,14 @@ mod tests {
             },
             |c: &mut FedCell| {
                 c.transport = TransportConfig::parse(Some("q8"), None).unwrap()
+            },
+            |c: &mut FedCell| {
+                c.fleet.profile = crate::coordinator::FleetProfile::Mobile
+            },
+            |c: &mut FedCell| c.fleet.async_buffer = Some(4),
+            |c: &mut FedCell| c.fleet.staleness_decay = 0.5,
+            |c: &mut FedCell| {
+                c.fleet.late_policy = crate::coordinator::LatePolicy::Discount
             },
         ];
         for f in tweaks {

@@ -34,6 +34,7 @@ pub mod table2;
 pub mod table3;
 pub mod table4;
 pub mod table_agg;
+pub mod table_async;
 pub mod table_comm;
 
 use crate::config::{Partition, ScaleProfile};

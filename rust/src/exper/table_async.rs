@@ -1,0 +1,234 @@
+//! `fedavg async` — the round-mode sweep: synchronous barrier vs
+//! semi-sync (staleness-discounted stragglers) vs buffered-async
+//! (K-delta buffer) over the fleet device profiles (DESIGN.md §12).
+//!
+//! The scheduling complement to [`super::table_agg`]: where the rule
+//! sweep varies *what the server does with a cohort*, this sweep varies
+//! *what counts as a cohort*. Each cell trains the same federated
+//! workload through the fleet coordinator with a different round mode:
+//!
+//! * `sync` — the barrier baseline: over-selection + a deadline, late
+//!   stragglers dropped (their error-feedback residuals survive).
+//! * `semi` — the same barrier, but `--late-policy discount`: late
+//!   deltas are staleness-discounted into the round they arrive in.
+//! * `async` — no barrier: `--async-buffer K` applies combine∘step
+//!   whenever K deltas have arrived in virtual-clock order.
+//!
+//! Every mode is a pure function of the seeded virtual clock, so each
+//! cell's curve.csv is byte-identical across `--workers N` and the
+//! comparison is a scheduling comparison, not a nondeterminism lottery.
+
+use crate::config::{BatchSize, FedConfig, Partition};
+use crate::coordinator::{FleetConfig, FleetProfile, LatePolicy};
+use crate::runtime::Engine;
+use crate::util::args::Args;
+use crate::Result;
+
+use super::cells::{FedCell, GridCell, Workload};
+use super::grid::{self, GridDef};
+use super::{print_table, ExpOptions, COMMON_FLAGS};
+
+/// Default mode sweep: all three round modes, head to head.
+pub const DEFAULT_MODES: &str = "sync,semi,async";
+/// Default profile sweep: the reference fleet and the heterogeneous one
+/// (flaky's tiny online pools are a stress test, not a comparison axis).
+pub const DEFAULT_PROFILES: &str = "uniform,mobile";
+
+pub fn run(engine: &Engine, args: &Args) -> Result<()> {
+    args.check_known(
+        &[
+            COMMON_FLAGS,
+            &[
+                "model", "modes", "profiles", "buffer", "staleness-decay",
+                "deadline", "overselect", "c", "e", "b",
+            ],
+        ]
+        .concat(),
+    )?;
+    let opts = ExpOptions::from_args(args)?;
+    let model = args.str_or("model", "mnist_2nn");
+    let modes: Vec<String> = args
+        .str_or("modes", DEFAULT_MODES)
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!modes.is_empty(), "--modes lists no round modes");
+    for m in &modes {
+        anyhow::ensure!(
+            matches!(m.as_str(), "sync" | "semi" | "async"),
+            "unknown round mode {m:?} (sync|semi|async)"
+        );
+    }
+    let profiles: Vec<FleetProfile> = args
+        .str_or("profiles", DEFAULT_PROFILES)
+        .split(',')
+        .map(|s| FleetProfile::parse(s.trim()))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(
+        !profiles.iter().any(|p| *p == FleetProfile::Legacy),
+        "async: the round modes schedule on the virtual clock — pick a \
+         device profile (uniform|mobile|flaky)"
+    );
+    let buffer = args.usize_or("buffer", 3)?;
+    anyhow::ensure!(buffer >= 1, "--buffer must be at least 1");
+    let decay = args.f64_or("staleness-decay", 0.9)?;
+    anyhow::ensure!(
+        decay.is_finite() && decay > 0.0 && decay <= 1.0,
+        "--staleness-decay must be in (0, 1], got {decay}"
+    );
+    let deadline = args.f64_or("deadline", 15.0)?;
+    anyhow::ensure!(
+        deadline.is_finite() && deadline > 0.0,
+        "--deadline must be a positive number of virtual seconds"
+    );
+    let overselect = args.f64_or("overselect", 0.3)?;
+    anyhow::ensure!(
+        overselect.is_finite() && overselect >= 0.0,
+        "--overselect must be a non-negative factor"
+    );
+
+    let cfg = FedConfig {
+        model: model.clone(),
+        c: args.f64_or("c", 0.2)?,
+        e: args.usize_or("e", 5)?,
+        b: BatchSize::parse(&args.str_or("b", "10"))?,
+        lr: args.f64_or("lr", 0.1)?,
+        rounds: opts.rounds,
+        target_accuracy: opts.target,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    // One FleetConfig per (mode, profile): the barrier modes share the
+    // over-selection + deadline cohort; async replaces the barrier.
+    let fleet_of = |mode: &str, profile: FleetProfile| -> FleetConfig {
+        let mut f = FleetConfig {
+            profile,
+            ..FleetConfig::default()
+        };
+        match mode {
+            "sync" | "semi" => {
+                f.overselect = overselect;
+                f.deadline_s = Some(deadline);
+                if mode == "semi" {
+                    f.late_policy = LatePolicy::Discount;
+                    f.staleness_decay = decay;
+                }
+            }
+            _ => {
+                f.async_buffer = Some(buffer);
+                f.staleness_decay = decay;
+            }
+        }
+        f
+    };
+    println!(
+        "async sweep: {} — modes: {}, profiles: {}, buffer {buffer}, \
+         staleness decay {decay}, deadline {deadline}s (+{:.0}% over-selection)",
+        cfg.label(),
+        modes.join(","),
+        profiles.iter().map(|p| p.label()).collect::<Vec<_>>().join(","),
+        overselect * 100.0,
+    );
+
+    let mut def = GridDef::new("async");
+    for profile in &profiles {
+        for mode in &modes {
+            let mut cell = FedCell::new(
+                Workload::Mnist {
+                    scale: opts.scale,
+                    part: Partition::Iid,
+                    seed: opts.seed,
+                },
+                cfg.clone(),
+                opts.eval_cap,
+            );
+            cell.fleet = fleet_of(mode, *profile);
+            def.cell(
+                format!("async-{}-{mode}", profile.label()),
+                GridCell::Fed(cell),
+            );
+        }
+    }
+    let Some(report) = grid::run(def, Some(engine), &opts.grid_options())? else {
+        return Ok(()); // --dry-run
+    };
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut it = report.outcomes.iter();
+    for profile in &profiles {
+        for mode in &modes {
+            let out = it.next().expect("outcome per declared cell");
+            let rtt = out
+                .num("rtt")
+                .map(|r| format!("{r:.0}"))
+                .unwrap_or_else(|| "-".into());
+            rows.push(vec![
+                mode.to_string(),
+                profile.label().to_string(),
+                rtt,
+                format!("{:.4}", out.num("final_acc").unwrap_or(0.0)),
+                format!("{:.4}", out.num("best_acc").unwrap_or(0.0)),
+                format!("{:.2}", out.num("sim_seconds").unwrap_or(0.0) / 3600.0),
+                format!("{:.3}", out.num("bytes_up").unwrap_or(0.0) / 1e9),
+            ]);
+        }
+    }
+    print_table(
+        &format!(
+            "Round modes — sync vs semi-sync vs buffered-async on {} \
+             (target {}, scale {})",
+            model,
+            opts.target
+                .map(|t| format!("{:.0}%", t * 100.0))
+                .unwrap_or_else(|| "none".into()),
+            opts.scale
+        ),
+        &["mode", "profile", "rds-to-target", "final acc", "best acc", "sim hours", "GB up"],
+        &rows,
+    );
+    println!(
+        "(per-apply staleness_mean/buffer_fill in {}/cells/<fingerprint>/curve.csv — \
+         the manifest under {}/grid-async/ maps rows to cells; with \
+         --staleness-decay 1.0 and --buffer equal to the cohort size the \
+         async rows reproduce the sync rows byte-for-byte, DESIGN.md §12)",
+        opts.out_root, opts.out_root
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_fleet_configs_pass_server_validation_shape() {
+        // mirror fleet_of: the three modes must produce configs the
+        // server/scheduler validators accept
+        for profile in [FleetProfile::Uniform, FleetProfile::Mobile] {
+            let sync = FleetConfig {
+                profile,
+                overselect: 0.3,
+                deadline_s: Some(15.0),
+                ..FleetConfig::default()
+            };
+            let semi = FleetConfig {
+                late_policy: LatePolicy::Discount,
+                staleness_decay: 0.9,
+                ..sync.clone()
+            };
+            let asynch = FleetConfig {
+                profile,
+                async_buffer: Some(3),
+                staleness_decay: 0.9,
+                ..FleetConfig::default()
+            };
+            for f in [sync, semi, asynch] {
+                assert!(
+                    crate::coordinator::FleetSim::new(&f, 20, 4, 1000, 5.0, 7).is_ok(),
+                    "{f:?}"
+                );
+            }
+        }
+    }
+}

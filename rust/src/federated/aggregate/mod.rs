@@ -152,6 +152,63 @@ pub fn fmt_state_norms(norms: &[(&'static str, f64)]) -> String {
         .join(";")
 }
 
+// ----------------------------------------------- staleness (async rounds)
+
+/// Staleness-discounted aggregation weight for one buffered client delta
+/// (DESIGN.md §12): an update dispatched `staleness` server applies ago
+/// enters the combine with weight `n_k · decay^staleness`.
+///
+/// `staleness == 0` or `decay == 1` return `weight` **unchanged** — the
+/// bit-identity guard (same idiom as `lr_step`'s η_s = 1 short-circuit)
+/// that makes `--staleness-decay 1.0` with a cohort-sized buffer
+/// reproduce the synchronous path byte-for-byte. The power is computed
+/// by exact binary exponentiation, not `powf`, so the discount is a pure
+/// function of `(weight, decay, staleness)` on every platform.
+pub fn staleness_weight(weight: f32, decay: f64, staleness: u64) -> f32 {
+    if staleness == 0 || decay == 1.0 {
+        return weight;
+    }
+    let mut pow = 1.0f64;
+    let mut base = decay;
+    let mut e = staleness;
+    while e > 0 {
+        if e & 1 == 1 {
+            pow *= base;
+        }
+        base *= base;
+        e >>= 1;
+    }
+    (weight as f64 * pow) as f32
+}
+
+/// Overall attenuation of a buffered apply, landed between
+/// [`Aggregator::combine`] and [`Aggregator::step`] — the same seam DP
+/// noise uses: `Σ n_k·decay^s_k / Σ n_k` over the `(weight, staleness)`
+/// pairs of the applied buffer. The combine itself normalizes by the
+/// *discounted* mass (the existing weighted-mean normalization), so this
+/// scale is what makes an all-stale buffer move θ less than a fresh one.
+/// Returns exactly `1.0` when every delta is fresh or `decay == 1`
+/// (bit-identity guard), and `0.0` when the discounted mass underflows —
+/// the caller must then skip the combine (a zero-mass mean is 0/0) and
+/// apply a zero delta, keeping θ finite for any decay in (0, 1].
+pub fn staleness_scale(entries: &[(f32, u64)], decay: f64) -> f64 {
+    if decay == 1.0 || entries.iter().all(|&(_, s)| s == 0) {
+        return 1.0;
+    }
+    let raw: f64 = entries.iter().map(|&(w, _)| w as f64).sum();
+    if !(raw > 0.0) {
+        return 1.0; // degenerate zero-mass buffer: nothing to attenuate
+    }
+    let disc: f64 = entries
+        .iter()
+        .map(|&(w, s)| staleness_weight(w, decay, s) as f64)
+        .sum();
+    if !(disc > 0.0 && disc.is_finite()) {
+        return 0.0;
+    }
+    (disc / raw).min(1.0)
+}
+
 // ----------------------------------------------------------------- rules
 
 /// Shared stateless server step: scale the combined delta by `η_s`.
@@ -717,6 +774,46 @@ mod tests {
             assert!(agg.state_save().is_empty(), "{spec}");
             agg.state_load(&[]).unwrap();
             assert!(agg.state_load(&[1, 2, 3]).is_err(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn staleness_weight_guards_and_decays() {
+        // the bit-identity guards: fresh deltas and decay=1 pass through
+        for w in [0.0f32, 1.0, 3.5, 1e-3] {
+            assert_eq!(staleness_weight(w, 0.5, 0).to_bits(), w.to_bits());
+            assert_eq!(staleness_weight(w, 1.0, 7).to_bits(), w.to_bits());
+        }
+        // exact binary exponentiation: decay^s with no libm involved
+        assert_eq!(staleness_weight(2.0, 0.5, 1), 1.0);
+        assert_eq!(staleness_weight(2.0, 0.5, 3), 0.25);
+        assert_eq!(staleness_weight(1.0, 0.25, 2), 0.0625);
+        // monotone non-increasing in staleness for decay in (0, 1]
+        for decay in [0.1, 0.5, 0.9, 1.0] {
+            let mut prev = staleness_weight(3.0, decay, 0);
+            for s in 1..40u64 {
+                let w = staleness_weight(3.0, decay, s);
+                assert!(w <= prev, "decay={decay} s={s}: {w} > {prev}");
+                assert!(w.is_finite() && w >= 0.0);
+                prev = w;
+            }
+        }
+    }
+
+    #[test]
+    fn staleness_scale_attenuates_between_combine_and_step() {
+        // all-fresh or decay=1: exactly 1.0 (the sync-identity guard)
+        assert_eq!(staleness_scale(&[(2.0, 0), (3.0, 0)], 0.5), 1.0);
+        assert_eq!(staleness_scale(&[(2.0, 5), (3.0, 9)], 1.0), 1.0);
+        // mixed buffer: Σ n_k·d^s_k / Σ n_k
+        let s = staleness_scale(&[(1.0, 0), (1.0, 1)], 0.5);
+        assert!((s - 0.75).abs() < 1e-12, "{s}");
+        // underflowed mass signals "skip the combine"
+        assert_eq!(staleness_scale(&[(1.0, 100_000)], 0.5), 0.0);
+        // scale never exceeds 1 and stays finite for any decay in (0,1]
+        for decay in [0.01, 0.3, 0.999, 1.0] {
+            let s = staleness_scale(&[(5.0, 2), (0.5, 0), (2.0, 17)], decay);
+            assert!((0.0..=1.0).contains(&s) && s.is_finite(), "decay={decay}: {s}");
         }
     }
 

@@ -25,10 +25,14 @@ use std::sync::Arc;
 use crate::comms::{CommModel, CommSim, CommTotals, Transport, TransportConfig};
 use crate::config::FedConfig;
 use crate::coordinator::{
-    plan_round, ClientJob, Fleet, FleetConfig, FleetTotals, ParallelExec, RoundPlan, TierLink,
+    plan_async_wave, plan_round, ClientJob, Fleet, FleetConfig, FleetTotals, LatePolicy,
+    ParallelExec, RoundPlan, TierLink, WavePlan,
 };
 use crate::data::Federated;
-use crate::federated::aggregate::{combine_sharded, fmt_state_norms, AggConfig, Aggregator as _};
+use crate::federated::aggregate::{
+    combine_sharded, fmt_state_norms, staleness_scale, staleness_weight, AggConfig,
+    Aggregator as _,
+};
 use crate::federated::client::{local_update, updates_per_round, LocalResult, LocalSpec};
 use crate::federated::sampler::ClientSampler;
 use crate::metrics::LearningCurve;
@@ -36,8 +40,8 @@ use crate::obs::{Metrics, Tracer};
 use crate::params::ParamVec;
 use crate::privacy::{clip, GaussianMechanism, SecureAggregator};
 use crate::runstate::{
-    checkpoint_dir, AggState, CheckpointConfig, FleetState, ResumeFrom, RunMeta, Snapshot,
-    TierState,
+    checkpoint_dir, AggState, AsyncState, BufferedDelta, CheckpointConfig, FleetState, ResumeFrom,
+    RunMeta, Snapshot, TierState,
 };
 use crate::runtime::Engine;
 use crate::telemetry::{RoundRecord, RunWriter};
@@ -209,6 +213,88 @@ pub fn run(
              (DESIGN.md §11)"
         );
     }
+    // Alternative round modes (DESIGN.md §12): buffered-async applies a
+    // partial cohort whenever K deltas have arrived; semi-sync splices
+    // staleness-discounted stragglers into later cohorts. Both break the
+    // one-full-cohort-per-round premise that robust order statistics,
+    // secure-aggregation masking, and the edge tier all rest on — every
+    // bad pairing is refused here, before any work happens.
+    let async_buf = opts.fleet.async_buffer;
+    let semi_sync = opts.fleet.late_policy == LatePolicy::Discount;
+    let decay = opts.fleet.staleness_decay;
+    if let Some(buf) = async_buf {
+        anyhow::ensure!(buf >= 1, "--async-buffer must be at least 1");
+        anyhow::ensure!(
+            aggregator.mean_combine(),
+            "--agg {agg_label} cannot run under --async-buffer: a K-delta \
+             buffer is a partial cohort, and coordinate-wise order statistics \
+             are only defined over a full round cohort (DESIGN.md §12)"
+        );
+        anyhow::ensure!(
+            !opts.secure_agg,
+            "--secure-agg cannot run under --async-buffer: pairwise masks \
+             cancel only over the full dispatched cohort's modular sum, never \
+             over a K-delta partial buffer (DESIGN.md §12)"
+        );
+        anyhow::ensure!(
+            opts.fleet.shards == 0,
+            "--async-buffer cannot run under --shards: the edge tier frames \
+             one combine per round over that round's cohort, not \
+             buffer-paced partial applies (DESIGN.md §12)"
+        );
+        anyhow::ensure!(
+            opts.fleet.overselect == 0.0 && opts.fleet.deadline_s.is_none(),
+            "--async-buffer replaces the synchronous barrier: \
+             --overselect/--deadline do not apply (DESIGN.md §12)"
+        );
+        anyhow::ensure!(
+            !semi_sync,
+            "--async-buffer and --late-policy are alternative round modes \
+             (DESIGN.md §12)"
+        );
+        anyhow::ensure!(
+            opts.fleet.fleet_active(),
+            "--async-buffer needs a fleet profile: completion order comes \
+             from the per-device virtual clock (--fleet-profile \
+             uniform|mobile|flaky)"
+        );
+    }
+    if semi_sync {
+        anyhow::ensure!(
+            aggregator.mean_combine(),
+            "--agg {agg_label} cannot run under --late-policy discount: \
+             staleness discounting reweights the mean combine; coordinate-wise \
+             order statistics have no per-update weights to discount \
+             (DESIGN.md §12)"
+        );
+        anyhow::ensure!(
+            !opts.secure_agg,
+            "--secure-agg cannot run under --late-policy discount: a late \
+             update joins a later round's cohort, and pairwise masks cancel \
+             only within one round's full cohort (DESIGN.md §12)"
+        );
+        anyhow::ensure!(
+            opts.fleet.shards == 0,
+            "--late-policy discount cannot run under --shards: the edge tier \
+             frames one combine per round over that round's cohort, which the \
+             late queue splices prior-round deltas into (DESIGN.md §12)"
+        );
+        anyhow::ensure!(
+            opts.fleet.fleet_active(),
+            "--late-policy discount needs a fleet profile: lateness is \
+             measured on the fleet's virtual clock (--fleet-profile \
+             uniform|mobile|flaky)"
+        );
+        anyhow::ensure!(
+            opts.fleet.deadline_s.is_some(),
+            "--late-policy discount needs --deadline: without one nobody is \
+             late (DESIGN.md §12)"
+        );
+    }
+    anyhow::ensure!(
+        decay.is_finite() && decay > 0.0 && decay <= 1.0,
+        "--staleness-decay must be in (0, 1], got {decay}"
+    );
     let prox_mu = opts.agg.prox_mu as f32;
 
     let model = engine.model(&cfg.model)?;
@@ -333,7 +419,8 @@ pub fn run(
         eval_every: cfg.eval_every as u64,
         harness: format!(
             "availability={:?} dp={:?} secure_agg={} prox_mu={:?} \
-             fleet=({},{:?},{:?},{:?},{:?},{:?}) shards={} eval_cap={:?} \
+             fleet=({},{:?},{:?},{:?},{:?},{:?}) shards={} \
+             async=({:?},{:?},{:?}) eval_cap={:?} \
              train_eval_cap={} comm=({:?},{:?},{:?},{:?})",
             opts.availability,
             opts.dp.map(|d| (d.clip_norm, d.sigma)),
@@ -346,6 +433,9 @@ pub fn run(
             opts.fleet.diurnal_period,
             opts.fleet.latency_s,
             opts.fleet.shards,
+            opts.fleet.async_buffer,
+            opts.fleet.staleness_decay,
+            opts.fleet.late_policy,
             opts.eval_cap,
             opts.train_eval_cap,
             opts.comm_model.up_bps,
@@ -362,6 +452,13 @@ pub fn run(
     // subsystem. Each state_load validates before it applies, and any
     // failure aborts the run before training starts, so a partial
     // restore can never yield a silently-wrong trajectory.
+    // Buffered-async / semi-sync holding state (DESIGN.md §12): the
+    // apply counter staleness is measured against, the arrival buffer,
+    // and the late queue. `Some` only when one of the alternative round
+    // modes is on, so the synchronous path stays byte-identical.
+    let mut astate: Option<AsyncState> =
+        (async_buf.is_some() || semi_sync).then(AsyncState::default);
+
     let mut start_round = 1u64;
     if let Some(ResumeFrom { snapshot: snap, run_dir }) = opts.resume.take() {
         anyhow::ensure!(
@@ -393,6 +490,13 @@ pub fn run(
             "--resume: checkpoint and --track-train-loss disagree"
         );
         anyhow::ensure!(
+            snap.async_state.is_some() == astate.is_some(),
+            "--resume: checkpoint {} async-round state but this run {} an \
+             async round mode (--async-buffer / --late-policy discount)",
+            if snap.async_state.is_some() { "carries" } else { "has no" },
+            if astate.is_some() { "sets" } else { "does not set" },
+        );
+        anyhow::ensure!(
             snap.theta.len() == model.param_count(),
             "--resume: model dim changed ({} vs {})",
             snap.theta.len(),
@@ -410,6 +514,9 @@ pub fn run(
         comms.state_load(snap.comms);
         if let (Some(m), Some(st)) = (mech.as_mut(), snap.dp) {
             m.state_load(st);
+        }
+        if let Some(a) = snap.async_state {
+            astate = Some(a);
         }
         accuracy = LearningCurve::from_points(snap.curves.accuracy)?;
         test_loss = LearningCurve::from_points(snap.curves.test_loss)?;
@@ -490,9 +597,13 @@ pub fn run(
         // pool, run the event-queue schedule, and aggregate only the
         // first `m` finishers inside the deadline; every dispatched
         // client's links are priced by the transport (delta downlinks
-        // differ per client). Legacy path: uniform sample over the
-        // (optionally availability-filtered) population.
+        // differ per client). Async path: dispatch a barrier-free wave —
+        // every arrival lands in the staleness buffer, ordered purely by
+        // the seeded fleet's event times (DESIGN.md §12). Legacy path:
+        // uniform sample over the (optionally availability-filtered)
+        // population.
         let sp = tr.begin(round, "sample", 1);
+        let mut wave: Option<WavePlan> = None;
         let (picks, plan): (Vec<usize>, Option<RoundPlan>) = match &fleet {
             None => {
                 let picks = sampler.sample(round, k, m);
@@ -501,6 +612,23 @@ pub fn run(
                     down_bytes_round += down;
                     links.push((down, est_up_bytes));
                 }
+                (picks, None)
+            }
+            Some(fl) if async_buf.is_some() => {
+                let (_online, w) = plan_async_wave(
+                    fl,
+                    &mut sampler,
+                    round,
+                    m,
+                    |c| {
+                        let down = transport.downlink(c, round, &theta);
+                        down_bytes_round += down;
+                        (down, est_up_bytes)
+                    },
+                    |c| updates_per_round(cfg.e, fed.clients[c].len(), cfg.b),
+                );
+                let picks = w.dispatched.clone();
+                wave = Some(w);
                 (picks, None)
             }
             Some(fl) => {
@@ -522,13 +650,28 @@ pub fn run(
             }
         };
         tr.end(sp.map(|s| s.bytes(down_bytes_round)));
+        // Virtual clock before this round's transfer time is folded in —
+        // the reference point for semi-sync due times (DESIGN.md §12).
+        let clock0 = comms.totals().sim_seconds;
+        // Semi-sync: past-deadline stragglers keep training this round's
+        // model; their raw deltas queue for a later round's combine
+        // instead of being dropped.
+        let late_now: Vec<(usize, f64)> = match &plan {
+            Some(p) if semi_sync => p.late.clone(),
+            _ => Vec::new(),
+        };
+        let train_list: Vec<usize> = picks
+            .iter()
+            .copied()
+            .chain(late_now.iter().map(|&(c, _)| c))
+            .collect();
         let lr = (cfg.lr * cfg.lr_decay.powi(round as i32 - 1)) as f32;
 
         // The model each aggregated client actually starts from: `None`
         // (= theta, zero copies) unless a lossy downlink codec means the
         // client reconstructs an approximation.
         let sp = tr.begin(round, "broadcast", 1);
-        let mut start_models: Vec<Option<ParamVec>> = picks
+        let mut start_models: Vec<Option<ParamVec>> = train_list
             .iter()
             .map(|&c| transport.downlink_model(c, &theta))
             .collect::<Result<_>>()?;
@@ -540,7 +683,7 @@ pub fn run(
         // sequential). Dropped stragglers never execute: their simulated
         // work is wasted, not ours.
         let sp_dispatch = tr.begin(round, "dispatch", 1);
-        let specs: Vec<LocalSpec> = picks
+        let specs: Vec<LocalSpec> = train_list
             .iter()
             .map(|&ck| LocalSpec {
                 epochs: cfg.e,
@@ -555,7 +698,7 @@ pub fn run(
         let results: Vec<LocalResult> = match &exec {
             Some(pool) => {
                 let theta0 = Arc::new(theta.clone());
-                let jobs: Vec<ClientJob> = picks
+                let jobs: Vec<ClientJob> = train_list
                     .iter()
                     .zip(&specs)
                     .enumerate()
@@ -572,7 +715,7 @@ pub fn run(
                     .collect();
                 pool.run_round(jobs)?
             }
-            None => picks
+            None => train_list
                 .iter()
                 .zip(&specs)
                 .enumerate()
@@ -599,100 +742,255 @@ pub fn run(
         let sp = tr.begin(round, "encode_up", 1);
         let mut deltas: Vec<(f32, ParamVec)> = Vec::with_capacity(picks.len());
         let mut wire_up_bytes = 0u64;
-        for (&ck, res) in picks.iter().zip(results) {
+        for (slot, (&ck, res)) in train_list.iter().zip(results).enumerate() {
             metrics.add("client.steps", res.steps);
             let mut delta = res.theta;
             for (d, t) in delta.iter_mut().zip(&theta) {
                 *d -= *t;
             }
-            if let Some(dp) = &opts.dp {
-                clip(&mut delta, dp.clip_norm);
+            if slot < picks.len() {
+                if let Some(dp) = &opts.dp {
+                    clip(&mut delta, dp.clip_norm);
+                }
+                wire_up_bytes += transport.encode_up(ck, &mut delta)?;
+                deltas.push((res.weight as f32, delta));
+            } else {
+                // semi-sync late straggler: hold the RAW delta — the
+                // clip, the uplink encode, and the error-feedback
+                // advance all happen at the round that applies it, so a
+                // still-queued update has touched no server state
+                let (_, finish_t) = late_now[slot - picks.len()];
+                let a = astate.as_mut().expect("semi-sync allocates state");
+                a.late.push(BufferedDelta {
+                    dispatch_round: round,
+                    slot: slot as u64,
+                    client: ck as u64,
+                    basis: 0,
+                    weight: res.weight as f32,
+                    due_s: clock0 + finish_t,
+                    delta,
+                });
             }
-            wire_up_bytes += transport.encode_up(ck, &mut delta)?;
-            deltas.push((res.weight as f32, delta));
         }
         tr.end(sp.map(|s| s.bytes(wire_up_bytes)));
 
         // w_{t+1} ← w_t + step(combine({(n_k, Δ^k)})) — the pluggable
         // server update (DESIGN.md §7). Default: combine = weighted mean
         // Σ (n_k/n) Δ^k, step = identity — Algorithm 1 bit-for-bit.
-        let sp = tr.begin(round, "combine", 1);
-        let mut agg_delta: ParamVec = if let Some(agg) = &sec_agg {
-            // clients upload masked fixed-point (w·Δ ‖ w); server only
-            // ever sees the modular sum — i.e. the weighted mean. Only
-            // mean-combine rules reach here (checked at startup); their
-            // server-optimizer step still applies below.
-            let total_w: f64 = deltas.iter().map(|(w, _)| *w as f64).sum();
-            let masked: Vec<Vec<u32>> = deltas
-                .iter()
-                .enumerate()
-                .map(|(i, (w, d))| {
-                    let mut payload: Vec<f32> = d.iter().map(|v| v * *w / total_w as f32).collect();
-                    payload.push(*w);
-                    agg.mask(picks[i], &picks, &payload)
-                })
-                .collect();
-            let mut summed = agg.aggregate(&masked);
-            summed.pop(); // total weight slot (available to the server)
-            summed
-        } else {
-            let refs: Vec<(f32, &[f32])> = deltas
-                .iter()
-                .map(|(w, d)| (*w, d.as_slice()))
-                .collect();
-            match tier.as_mut() {
-                // hierarchical path (--shards S): cascade the combine
-                // across S edge aggregators — bit-identical to the flat
-                // fold below (pinned in rust/tests/shards.rs). Tier-1
-                // transfers land in `tier.*`, never in curve.csv.
-                Some(t) => {
-                    let sc = combine_sharded(
-                        aggregator.as_ref(),
-                        &refs,
-                        opts.fleet.shards,
-                        &tier_link,
-                    )?;
-                    t.up_bytes += sc.up_bytes;
-                    t.down_bytes += sc.down_bytes;
-                    t.frames += sc.frames;
-                    t.seconds += sc.seconds;
-                    metrics.add("tier.edge_up_bytes", sc.up_bytes);
-                    metrics.add("tier.edge_down_bytes", sc.down_bytes);
-                    metrics.add("tier.edge_frames", sc.frames);
-                    metrics.observe("tier.seconds", sc.seconds);
-                    sc.delta
+        // Under --async-buffer the same combine∘step fires once per K
+        // buffered arrivals instead of once per round (DESIGN.md §12).
+        let (rc, n_clients) = if let Some(buf) = async_buf {
+            let a = astate.as_mut().expect("async mode allocates state");
+            let w = wave.as_ref().expect("async mode plans a wave");
+            // Arrivals enter the buffer in (finish time, dispatch slot)
+            // order — a pure function of the seeded fleet's event times,
+            // so the buffer sequence is identical under any --workers N.
+            // Encoding already happened in slot order above; transport
+            // state is per-client, so cross-client encode order cannot
+            // change a single bit of any delta.
+            let mut by_slot: Vec<Option<(f32, ParamVec)>> =
+                deltas.into_iter().map(Some).collect();
+            for arr in &w.arrivals {
+                let (weight, delta) = by_slot[arr.slot].take().expect("one arrival per slot");
+                a.pending.push(BufferedDelta {
+                    dispatch_round: round,
+                    slot: arr.slot as u64,
+                    client: arr.client as u64,
+                    basis: a.applies_done,
+                    weight,
+                    due_s: 0.0,
+                    delta,
+                });
+            }
+            while a.pending.len() >= buf {
+                let sp = tr.begin(round, "combine", 1);
+                let mut batch: Vec<BufferedDelta> = a.pending.drain(..buf).collect();
+                // The combine folds in (dispatch round, slot) order —
+                // the synchronous reduction order — so `--async-buffer
+                // m --staleness-decay 1.0` reproduces the synchronous
+                // trajectory bit-for-bit (rust/tests/async_rounds.rs).
+                batch.sort_by_key(|e| (e.dispatch_round, e.slot));
+                let stale: Vec<(f32, u64)> = batch
+                    .iter()
+                    .map(|e| (e.weight, a.applies_done - e.basis))
+                    .collect();
+                let scale = staleness_scale(&stale, decay);
+                let mut agg_delta: ParamVec = if scale > 0.0 {
+                    let refs: Vec<(f32, &[f32])> = batch
+                        .iter()
+                        .zip(&stale)
+                        .map(|(e, &(wt, s))| {
+                            (staleness_weight(wt, decay, s), e.delta.as_slice())
+                        })
+                        .collect();
+                    let mut d = aggregator.combine(&refs)?;
+                    // overall staleness attenuation Σn·dᔆ/Σn at the
+                    // combine∘step seam, before the DP noise — guarded
+                    // so decay 1.0 never rounds through f64
+                    if scale != 1.0 {
+                        for v in d.iter_mut() {
+                            *v = (*v as f64 * scale) as f32;
+                        }
+                    }
+                    d
+                } else {
+                    // the whole batch's discounted mass underflowed:
+                    // contribute nothing, but still run the stateful
+                    // step so the optimizer's clock advances and θ
+                    // stays finite
+                    vec![0.0f32; theta.len()]
+                };
+                tr.end(sp);
+                let sp = tr.begin(round, "step", 1);
+                if let Some(mech) = mech.as_mut() {
+                    mech.apply(&mut agg_delta, buf);
                 }
-                None => aggregator.combine(&refs)?,
+                let step = aggregator.step(a.applies_done + 1, agg_delta)?;
+                crate::params::axpy(&mut theta, 1.0, &step);
+                tr.end(sp);
+                a.applies_done += 1;
+                a.deltas_since_eval += buf as u64;
+                for &(_, s) in &stale {
+                    a.stale_sum_since_eval += s;
+                }
             }
-        };
-        tr.end(sp);
-        // DP noise lands on the combined delta, *before* the stateful
-        // server step: the optimizer moments then only ever see the
-        // privatized aggregate (post-processing preserves the guarantee).
-        let sp = tr.begin(round, "step", 1);
-        if let Some(mech) = mech.as_mut() {
-            mech.apply(&mut agg_delta, picks.len());
-        }
-        let step = aggregator.step(round, agg_delta)?;
-        crate::params::axpy(&mut theta, 1.0, &step);
-        tr.end(sp);
-        let sp = tr.begin(round, "account", 1);
-        let rc = match &plan {
-            None => comms.round_links(&links),
-            Some(p) => {
-                metrics.add("fleet.dispatched", p.dispatched.len() as u64);
-                metrics.add("fleet.completed", p.completed.len() as u64);
-                metrics.add("fleet.dropped", p.dropped.len() as u64);
-                metrics.add("fleet.deadline_misses", p.deadline_miss as u64);
-                // every dispatched client downloaded the model (dropped
-                // stragglers waste downlink); only completed uplinks land
-                comms.ingest(wire_up_bytes, down_bytes_round, p.round_seconds)
+            let sp = tr.begin(round, "account", 1);
+            // barrier-free wave: every dispatched client completes —
+            // there are no stragglers to drop and no deadline to miss
+            metrics.add("fleet.dispatched", picks.len() as u64);
+            metrics.add("fleet.completed", picks.len() as u64);
+            let rc = comms.ingest(wire_up_bytes, down_bytes_round, w.round_seconds);
+            tr.end(sp);
+            (rc, picks.len())
+        } else {
+            // Semi-sync: late-queue entries whose virtual finish time
+            // falls inside this round's window join the combine FIRST,
+            // staleness-discounted by their age in rounds, ahead of the
+            // round's own completions (DESIGN.md §12).
+            let mut due_deltas: Vec<(f32, ParamVec)> = Vec::new();
+            let mut stale: Vec<(f32, u64)> = Vec::new();
+            if let (Some(a), Some(p)) = (astate.as_mut(), &plan) {
+                let cut = clock0 + p.round_seconds;
+                let (due, keep): (Vec<BufferedDelta>, Vec<BufferedDelta>) =
+                    a.late.drain(..).partition(|e| e.due_s <= cut);
+                a.late = keep;
+                for e in due {
+                    let mut d = e.delta;
+                    if let Some(dp) = &opts.dp {
+                        clip(&mut d, dp.clip_norm);
+                    }
+                    wire_up_bytes += transport.encode_up(e.client as usize, &mut d)?;
+                    let s = round - e.dispatch_round;
+                    due_deltas.push((staleness_weight(e.weight, decay, s), d));
+                    stale.push((e.weight, s));
+                    a.late_applied += 1;
+                }
+                for (wt, _) in &deltas {
+                    stale.push((*wt, 0));
+                }
+                a.deltas_since_eval += (due_deltas.len() + deltas.len()) as u64;
+                for &(_, s) in &stale {
+                    a.stale_sum_since_eval += s;
+                }
             }
+            let n_apply = due_deltas.len() + picks.len();
+            let scale = if astate.is_some() {
+                staleness_scale(&stale, decay)
+            } else {
+                1.0
+            };
+            let sp = tr.begin(round, "combine", 1);
+            let mut agg_delta: ParamVec = if let Some(agg) = &sec_agg {
+                // clients upload masked fixed-point (w·Δ ‖ w); server only
+                // ever sees the modular sum — i.e. the weighted mean. Only
+                // mean-combine rules reach here (checked at startup); their
+                // server-optimizer step still applies below.
+                let total_w: f64 = deltas.iter().map(|(w, _)| *w as f64).sum();
+                let masked: Vec<Vec<u32>> = deltas
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (w, d))| {
+                        let mut payload: Vec<f32> =
+                            d.iter().map(|v| v * *w / total_w as f32).collect();
+                        payload.push(*w);
+                        agg.mask(picks[i], &picks, &payload)
+                    })
+                    .collect();
+                let mut summed = agg.aggregate(&masked);
+                summed.pop(); // total weight slot (available to the server)
+                summed
+            } else {
+                let refs: Vec<(f32, &[f32])> = due_deltas
+                    .iter()
+                    .map(|(w, d)| (*w, d.as_slice()))
+                    .chain(deltas.iter().map(|(w, d)| (*w, d.as_slice())))
+                    .collect();
+                match tier.as_mut() {
+                    // hierarchical path (--shards S): cascade the combine
+                    // across S edge aggregators — bit-identical to the flat
+                    // fold below (pinned in rust/tests/shards.rs). Tier-1
+                    // transfers land in `tier.*`, never in curve.csv.
+                    Some(t) => {
+                        let sc = combine_sharded(
+                            aggregator.as_ref(),
+                            &refs,
+                            opts.fleet.shards,
+                            &tier_link,
+                        )?;
+                        t.up_bytes += sc.up_bytes;
+                        t.down_bytes += sc.down_bytes;
+                        t.frames += sc.frames;
+                        t.seconds += sc.seconds;
+                        metrics.add("tier.edge_up_bytes", sc.up_bytes);
+                        metrics.add("tier.edge_down_bytes", sc.down_bytes);
+                        metrics.add("tier.edge_frames", sc.frames);
+                        metrics.observe("tier.seconds", sc.seconds);
+                        sc.delta
+                    }
+                    None => aggregator.combine(&refs)?,
+                }
+            };
+            // overall staleness attenuation at the combine∘step seam,
+            // BEFORE the DP noise — `!= 1.0` guarded so a run with no
+            // late arrivals never rounds through f64 (the bit-identity
+            // pin in rust/tests/async_rounds.rs)
+            if scale != 1.0 {
+                for v in agg_delta.iter_mut() {
+                    *v = (*v as f64 * scale) as f32;
+                }
+            }
+            tr.end(sp);
+            // DP noise lands on the combined delta, *before* the stateful
+            // server step: the optimizer moments then only ever see the
+            // privatized aggregate (post-processing preserves the guarantee).
+            let sp = tr.begin(round, "step", 1);
+            if let Some(mech) = mech.as_mut() {
+                mech.apply(&mut agg_delta, n_apply);
+            }
+            let step = aggregator.step(round, agg_delta)?;
+            crate::params::axpy(&mut theta, 1.0, &step);
+            tr.end(sp);
+            let sp = tr.begin(round, "account", 1);
+            let rc = match &plan {
+                None => comms.round_links(&links),
+                Some(p) => {
+                    metrics.add("fleet.dispatched", p.dispatched.len() as u64);
+                    // late-discounted stragglers leave the drop column at
+                    // dispatch and join completed at their apply round
+                    metrics.add("fleet.completed", n_apply as u64);
+                    metrics.add("fleet.dropped", (p.dropped.len() - late_now.len()) as u64);
+                    metrics.add("fleet.deadline_misses", p.deadline_miss as u64);
+                    // every dispatched client downloaded the model (dropped
+                    // stragglers waste downlink); only completed uplinks land
+                    comms.ingest(wire_up_bytes, down_bytes_round, p.round_seconds)
+                }
+            };
+            tr.end(sp);
+            (rc, n_apply)
         };
         metrics.add("wire.up_bytes", rc.bytes_up);
         metrics.add("wire.down_bytes", rc.bytes_down);
         metrics.observe("round.seconds", rc.transfer_s);
-        tr.end(sp);
 
         let mut hit_target = false;
         if round % cfg.eval_every as u64 == 0 || round == cfg.rounds as u64 {
@@ -714,12 +1012,29 @@ pub fn run(
             }
             if let Some(w) = opts.telemetry.as_mut() {
                 let server_state = fmt_state_norms(&aggregator.state_norms());
+                // per-record staleness stats (DESIGN.md §12): mean
+                // staleness over the deltas applied since the previous
+                // row, and the holding-queue depth as of this row
+                // (async: buffer fill; semi-sync: late-queue length).
+                // The synchronous path writes 0.000/0, which the async
+                // sync-identity tests rely on.
+                let (staleness_mean, buffer_fill) = match astate.as_ref() {
+                    Some(a) => (
+                        if a.deltas_since_eval > 0 {
+                            a.stale_sum_since_eval as f64 / a.deltas_since_eval as f64
+                        } else {
+                            0.0
+                        },
+                        if async_buf.is_some() { a.pending.len() } else { a.late.len() },
+                    ),
+                    None => (0.0, 0),
+                };
                 w.record(&RoundRecord {
                     round,
                     test_accuracy: sums.accuracy(),
                     test_loss: sums.mean_loss(),
                     train_loss: tl,
-                    clients: picks.len(),
+                    clients: n_clients,
                     lr: lr as f64,
                     up_bytes: rc.bytes_up,
                     down_bytes: rc.bytes_down,
@@ -729,9 +1044,15 @@ pub fn run(
                     deadline_misses: metrics.pending("fleet.deadline_misses") as usize,
                     agg: &agg_label,
                     server_state: &server_state,
+                    staleness_mean,
+                    buffer_fill,
                 })?;
                 metrics.mark("fleet.dropped");
                 metrics.mark("fleet.deadline_misses");
+                if let Some(a) = astate.as_mut() {
+                    a.stale_sum_since_eval = 0;
+                    a.deltas_since_eval = 0;
+                }
             }
             if let Some(target) = cfg.target_accuracy {
                 hit_target = sums.accuracy() >= target;
@@ -774,6 +1095,7 @@ pub fn run(
                     },
                     dp: mech.as_ref().map(|m| m.state_save()),
                     tier,
+                    async_state: astate.clone(),
                 };
                 snap.write(dir, ck.keep)?;
                 tr.end(sp);
@@ -826,6 +1148,18 @@ pub fn run(
             fields.push(("tier_down_bytes", t.down_bytes.to_string()));
             fields.push(("tier_frames", t.frames.to_string()));
             fields.push(("tier_seconds", format!("{:.3}", t.seconds)));
+        }
+        if let Some(a) = &astate {
+            if let Some(buf) = async_buf {
+                fields.push(("async_buffer", buf.to_string()));
+                fields.push(("buffer_applies", a.applies_done.to_string()));
+                fields.push(("buffer_fill", a.pending.len().to_string()));
+            } else {
+                fields.push(("late_policy", "discount".to_string()));
+                fields.push(("late_applied", a.late_applied.to_string()));
+                fields.push(("late_queued", a.late.len().to_string()));
+            }
+            fields.push(("staleness_decay", format!("{decay:?}")));
         }
         w.finish(&fields)?;
     }

@@ -17,7 +17,8 @@ use anyhow::{anyhow, bail};
 use fedavg::baselines::oneshot;
 use fedavg::config::{BatchSize, ConfigFile, FedConfig, Partition};
 use fedavg::coordinator::{
-    shard_ranges, tier_transfer_seconds, FleetConfig, FleetProfile, FleetSim, TierLink,
+    shard_ranges, tier_transfer_seconds, FaultConfig, FleetConfig, FleetProfile, FleetSim,
+    LatePolicy, TierLink,
 };
 use fedavg::federated::{AggConfig, ServerOptions};
 use fedavg::exper::{self};
@@ -45,6 +46,7 @@ fn real_main() -> Result<()> {
         "table4" => exper::table4::run(&engine()?, &args),
         "comm" => exper::table_comm::run(&engine()?, &args),
         "agg" => exper::table_agg::run(&engine()?, &args),
+        "async" => exper::table_async::run(&engine()?, &args),
         "sweep" => fedavg::sweep::run_cli(&engine()?, &args),
         "figure" | "figures" => exper::figures::run(&engine()?, &args),
         "run" => cmd_run(&args),
@@ -320,6 +322,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "config", "model", "c", "e", "b", "lr", "lr-decay", "rounds", "eval-every",
         "target", "partition", "scale", "eval-cap", "seed", "out", "name",
         "track-train-loss", "fleet-profile", "overselect", "deadline", "workers", "shards",
+        "async-buffer", "staleness-decay", "late-policy", "abort-p", "duplicate-p",
         "step-cost", "clients", "sim-only", "start-round", "model-bytes", "steps", "codec",
         "down-codec", "topk", "quant-bits", "agg", "server-lr", "server-momentum",
         "prox-mu", "checkpoint-every", "checkpoint-keep", "resume", "overwrite", "trace",
@@ -342,6 +345,15 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         workers: args.usize_or("workers", 1)?,
         step_cost_s: args.f64_or("step-cost", FleetConfig::default().step_cost_s)?,
         shards: args.usize_or("shards", 0)?,
+        async_buffer: match args.str_opt("async-buffer") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<usize>()
+                    .map_err(|_| anyhow!("--async-buffer: bad integer {v:?}"))?,
+            ),
+        },
+        staleness_decay: args.f64_or("staleness-decay", 1.0)?,
+        late_policy: LatePolicy::parse(&args.str_or("late-policy", "drop"))?,
         ..FleetConfig::default()
     };
     if !fleet.step_cost_s.is_finite() || fleet.step_cost_s < 0.0 {
@@ -367,6 +379,34 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                  statistics do not compose across aggregation tiers — only \
                  mean-family rules (fedavg/fedavgm/fedadam) shard (DESIGN.md §11)",
                 rule.label()
+            );
+        }
+    }
+    // The async round modes rescale deltas by staleness, which only a
+    // mean-family combine absorbs — refuse robust rules on every path,
+    // the sim-only one included (DESIGN.md §12).
+    if fleet.async_buffer.is_some() || fleet.late_policy == LatePolicy::Discount {
+        let mode = if fleet.async_buffer.is_some() {
+            "--async-buffer"
+        } else {
+            "--late-policy discount"
+        };
+        let rule = agg.build()?;
+        if !rule.mean_combine() {
+            bail!(
+                "--agg {} cannot run under {mode}: a staleness-weighted partial \
+                 buffer is not a full round cohort, and coordinate-wise order \
+                 statistics are only defined over one — only mean-family rules \
+                 (fedavg/fedavgm/fedadam) run async/semi-sync (DESIGN.md §12)",
+                rule.label()
+            );
+        }
+        if fleet.shards > 0 {
+            bail!(
+                "--shards assumes the synchronous round barrier: a tier-1 \
+                 cascade aggregates one full cohort per round, not a \
+                 staleness-weighted buffer or late arrivals — {mode} cannot \
+                 shard (DESIGN.md §12)"
             );
         }
     }
@@ -405,7 +445,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
              (--sim-only); a training run continues from a checkpoint via --resume"
         );
     }
-    for f in ["clients", "model-bytes", "steps"] {
+    for f in ["clients", "model-bytes", "steps", "abort-p", "duplicate-p"] {
         if args.has(f) {
             println!(
                 "note: --{f} only applies to the training-free simulation \
@@ -509,6 +549,15 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
         );
     }
     let mut sim = FleetSim::new(fleet, k, m, model_bytes, steps, cfg.seed)?;
+    // Seeded fault stream (sim-only): client aborts and duplicate
+    // deliveries drawn from a pure per-(round, client) coin.
+    if args.has("abort-p") || args.has("duplicate-p") {
+        sim = sim.with_faults(FaultConfig {
+            abort_p: args.f64_or("abort-p", 0.0)?,
+            duplicate_p: args.f64_or("duplicate-p", 0.0)?,
+            seed: cfg.seed,
+        })?;
+    }
     let name = args.str_or("name", &format!("fleet-sim-{}-k{k}", fleet.profile.label()));
     let out = args.str_or("out", "runs");
     let mut w = if args.has("overwrite") {
@@ -557,6 +606,18 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
             "hierarchical aggregation: {shards} edge shards, {:.1} MB dense tier-1 \
              frames (tiers.csv; fleet.csv stays flat-identical)",
             tier_frame_bytes as f64 / 1e6,
+        );
+    }
+    if let Some(buf) = fleet.async_buffer {
+        println!(
+            "buffered-async rounds: apply every {buf} deltas, staleness decay {}",
+            fleet.staleness_decay,
+        );
+    } else if fleet.late_policy == LatePolicy::Discount {
+        println!(
+            "semi-sync rounds: late stragglers staleness-discounted (decay {}) \
+             instead of dropped",
+            fleet.staleness_decay,
         );
     }
     if start_round > 1 {
@@ -680,6 +741,21 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
         ("bytes_up", t.bytes_up.to_string()),
         ("sim_seconds", format!("{:.1}", t.sim_seconds)),
     ];
+    if fleet.async_buffer.is_some() {
+        fields.push(("async_buffer", fleet.async_buffer.unwrap().to_string()));
+        fields.push(("buffer_applies", t.buffer_applies.to_string()));
+        fields.push(("buffer_fill", sim.buffer_fill().to_string()));
+        fields.push(("staleness_decay", format!("{:?}", fleet.staleness_decay)));
+    }
+    if fleet.late_policy == LatePolicy::Discount {
+        fields.push(("late_policy", "discount".to_string()));
+        fields.push(("late_applied", t.late_applied.to_string()));
+        fields.push(("staleness_decay", format!("{:?}", fleet.staleness_decay)));
+    }
+    if args.has("abort-p") || args.has("duplicate-p") {
+        fields.push(("aborted", t.aborted.to_string()));
+        fields.push(("duplicates_refused", t.duplicates_refused.to_string()));
+    }
     if shards > 0 {
         // tier-0 totals ARE the flat run's wire totals — sharding
         // repartitions the client links without adding a byte to them
@@ -712,6 +788,26 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
             tier_totals.frames,
             tier_totals.seconds,
             t.bytes_up as f64 / 1e9,
+        );
+    }
+    if fleet.async_buffer.is_some() {
+        println!(
+            "async: {} buffer applies, {} delta(s) still pending",
+            t.buffer_applies,
+            sim.buffer_fill(),
+        );
+    }
+    if fleet.late_policy == LatePolicy::Discount {
+        println!(
+            "semi-sync: {} late update(s) applied with staleness discounts, {} still queued",
+            t.late_applied,
+            sim.late_queued(),
+        );
+    }
+    if t.aborted + t.duplicates_refused > 0 {
+        println!(
+            "faults: {} abort(s), {} duplicate delivery(ies) refused",
+            t.aborted, t.duplicates_refused,
         );
     }
     Ok(())
@@ -851,6 +947,9 @@ USAGE:
   fedavg agg    [--aggs a1,a2,..] [--corrupt FRAC] [--partitions iid,noniid]
              [--target A] [--model M] [--scale F] [--rounds N]
              [--server-lr F] [--server-momentum B] [--prox-mu MU]
+  fedavg async  [--modes sync,semi,async] [--profiles p1,p2,..] [--buffer K]
+             [--staleness-decay D] [--target A] [--model M] [--scale F]
+             [--rounds N]
   fedavg sweep  [--center F] [--points N] [--res 3|6] [--model M]
              [--partition P] [--c F] [--e N] [--b N|inf] [--target A]
   fedavg figure <N|all> [--scale F] [--rounds N]
@@ -869,6 +968,8 @@ USAGE:
   fedavg run --resume runs/<name> [--rounds N] [+ the original run's flags]
   fedavg fleet [--fleet-profile uniform|mobile|flaky] [--overselect RHO]
              [--deadline SECONDS] [--workers N] [--shards S] [--clients K]
+             [--async-buffer K] [--staleness-decay D]
+             [--late-policy drop|discount] [--abort-p P] [--duplicate-p P]
              [--sim-only] [--start-round R] [--step-cost S] [--model-bytes B]
              [--steps U] [--trace] [+ run flags]
   fedavg bench [--areas a1,a2,..] [--out DIR] [--check] [--quick]
@@ -898,7 +999,24 @@ across IID/non-IID partitions with label-corrupted clients.
 (bandwidth/compute/diurnal availability), over-selection with straggler
 drops, round deadlines, and parallel client updates. Without artifacts
 (or with --sim-only) it runs the training-free event-queue simulation —
-10k clients by default, 100k+ fine. `--start-round R` fast-forwards the
+10k clients by default, 100k+ fine.
+
+Async round modes (DESIGN.md §12): `--async-buffer K` replaces the
+synchronous barrier — the server applies combine+step whenever K client
+deltas have arrived (in virtual-clock order), weighting each by
+d^staleness with d = --staleness-decay (default 1.0). `--late-policy
+discount` keeps the barrier but staleness-discounts past-deadline
+stragglers into a later round instead of dropping them (needs
+--deadline). Both modes are a pure function of the seeded virtual clock:
+byte-identical across --workers N, checkpointable between buffer
+applies, and with decay 1.0 + buffer == cohort the async run reproduces
+the synchronous curve.csv byte-for-byte. Robust rules, --secure-agg,
+and --shards refuse both modes; DP composes at the combine+step seam.
+Per-apply staleness_mean/buffer_fill land in curve.csv. The sim-only
+path adds a seeded fault stream: --abort-p / --duplicate-p inject
+client aborts and duplicate deliveries (duplicates are refused
+idempotently, the wasted uplink billed). `fedavg async` sweeps
+sync x semi-sync x async over the fleet profiles on the grid engine. `--start-round R` fast-forwards the
 simulation: rounds 1..R fold into the totals without being re-recorded
 (each round is a pure function of the seed). `--shards S` aggregates
 hierarchically through S edge aggregators — bit-identical to flat

@@ -28,6 +28,7 @@
 //! | learning curves (accuracy/loss) | `metrics` | `CURVES` |
 //! | DP noise stream + ε accounting | [`GaussianMechanism`] | `DP` |
 //! | edge-tier byte/latency totals (`--shards`) | `federated::server` | `TIER` |
+//! | apply counter + async buffer + late queue (`--async-buffer` / `--late-policy`) | `federated::server` | `ASYNC` |
 //!
 //! What is deliberately *not* captured: anything that is a pure function
 //! of config — device profiles and the diurnal clock
@@ -72,8 +73,8 @@
 mod snapshot;
 
 pub use snapshot::{
-    atomic_write, checkpoint_dir, fnv1a64, AggState, CurveState, FleetState, RunMeta, Snapshot,
-    TierState, MAGIC, SNAP_VERSION,
+    atomic_write, checkpoint_dir, fnv1a64, AggState, AsyncState, BufferedDelta, CurveState,
+    FleetState, RunMeta, Snapshot, TierState, MAGIC, SNAP_VERSION,
 };
 
 /// A resume request carried in

@@ -76,6 +76,7 @@ const SEC_FLEET: u16 = 8;
 const SEC_CURVES: u16 = 9;
 const SEC_DP: u16 = 10;
 const SEC_TIER: u16 = 11;
+const SEC_ASYNC: u16 = 12;
 
 /// Configuration fingerprint stamped into every snapshot and verified on
 /// resume: a checkpoint must not silently continue under a different
@@ -145,6 +146,54 @@ pub struct TierState {
     pub seconds: f64,
 }
 
+/// One client delta held by the server between rounds — an async-buffer
+/// entry or a semi-sync late-queue entry (DESIGN.md §12). The delta
+/// vector is stored exactly as it will enter the combine (async: already
+/// codec-encoded, error feedback advanced; semi-sync: raw, encoded only
+/// at application), so a resumed run replays the remaining applies
+/// bit-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BufferedDelta {
+    /// Round the client was dispatched in.
+    pub dispatch_round: u64,
+    /// Dispatch slot within that round (the combine tie-break order).
+    pub slot: u64,
+    pub client: u64,
+    /// Server applies completed when the client was dispatched — the
+    /// baseline its staleness is measured from (async mode; 0 for the
+    /// late queue, which measures staleness in rounds instead).
+    pub basis: u64,
+    /// The client's aggregation weight n_k, pre-discount.
+    pub weight: f32,
+    /// Absolute virtual due time in seconds (semi-sync late queue;
+    /// 0 for async-buffer entries, which are already due).
+    pub due_s: f64,
+    pub delta: ParamVec,
+}
+
+/// Buffered-async / semi-sync server state between two buffer
+/// applications (DESIGN.md §12): the apply counter staleness is measured
+/// against, plus both holding queues. `Some` only when one of the async
+/// round modes is active, so synchronous snapshot byte-streams are
+/// unchanged by the section.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct AsyncState {
+    /// combine∘step applications completed so far.
+    pub applies_done: u64,
+    /// Late-queue entries applied so far (semi-sync run totals).
+    pub late_applied: u64,
+    /// Σ staleness over deltas applied since the last curve row — the
+    /// numerator of the next `staleness_mean` column (checkpoints are
+    /// allowed between eval rounds, where this is mid-flight).
+    pub stale_sum_since_eval: u64,
+    /// Deltas applied since the last curve row (the denominator).
+    pub deltas_since_eval: u64,
+    /// Async-buffer FIFO, in arrival order.
+    pub pending: Vec<BufferedDelta>,
+    /// Semi-sync late queue, in dispatch order.
+    pub late: Vec<BufferedDelta>,
+}
+
 /// One complete run-state snapshot — everything `federated::server::run`
 /// needs to continue a run bit-identically (see the module docs for the
 /// state inventory and what is deliberately excluded).
@@ -165,6 +214,9 @@ pub struct Snapshot {
     /// Edge-tier accounting; `Some` only for sharded runs (`--shards S`),
     /// so unsharded snapshot byte-streams are unchanged by the field.
     pub tier: Option<TierState>,
+    /// Async-round state; `Some` only under `--async-buffer` /
+    /// `--late-policy discount` (DESIGN.md §12).
+    pub async_state: Option<AsyncState>,
 }
 
 /// Where a run's snapshots live: `<run-dir>/checkpoints/`.
@@ -242,6 +294,40 @@ fn get_curve(r: &mut ByteReader<'_>) -> Result<Vec<(u64, f64)>> {
         "corrupt curve length {n}"
     );
     (0..n).map(|_| Ok((r.u64()?, r.f64()?))).collect()
+}
+
+fn put_buffered(w: &mut ByteWriter, entries: &[BufferedDelta]) {
+    w.put_u64(entries.len() as u64);
+    for e in entries {
+        w.put_u64(e.dispatch_round);
+        w.put_u64(e.slot);
+        w.put_u64(e.client);
+        w.put_u64(e.basis);
+        w.put_f64(e.weight as f64);
+        w.put_f64(e.due_s);
+        w.put_f32s(&e.delta);
+    }
+}
+
+fn get_buffered(r: &mut ByteReader<'_>) -> Result<Vec<BufferedDelta>> {
+    let n = r.u64()? as usize;
+    anyhow::ensure!(
+        n.checked_mul(48).map_or(false, |b| b <= r.remaining()),
+        "corrupt buffered-delta count {n}"
+    );
+    (0..n)
+        .map(|_| {
+            Ok(BufferedDelta {
+                dispatch_round: r.u64()?,
+                slot: r.u64()?,
+                client: r.u64()?,
+                basis: r.u64()?,
+                weight: r.f64()? as f32,
+                due_s: r.f64()?,
+                delta: r.f32s()?,
+            })
+        })
+        .collect()
 }
 
 /// Encode the model-store ring (oldest first): each entry is its version
@@ -398,6 +484,17 @@ impl Snapshot {
             Self::section(&mut out, SEC_TIER, w);
         }
 
+        if let Some(a) = &self.async_state {
+            let mut w = ByteWriter::new();
+            w.put_u64(a.applies_done);
+            w.put_u64(a.late_applied);
+            w.put_u64(a.stale_sum_since_eval);
+            w.put_u64(a.deltas_since_eval);
+            put_buffered(&mut w, &a.pending);
+            put_buffered(&mut w, &a.late);
+            Self::section(&mut out, SEC_ASYNC, w);
+        }
+
         out.into_inner()
     }
 
@@ -460,6 +557,7 @@ impl Snapshot {
         let mut curves = None;
         let mut dp = None;
         let mut tier = None;
+        let mut async_state = None;
 
         let mut r = ByteReader::new(payload);
         while !r.is_empty() {
@@ -588,6 +686,17 @@ impl Snapshot {
                     });
                     b.expect_end()?;
                 }
+                SEC_ASYNC => {
+                    async_state = Some(AsyncState {
+                        applies_done: b.u64()?,
+                        late_applied: b.u64()?,
+                        stale_sum_since_eval: b.u64()?,
+                        deltas_since_eval: b.u64()?,
+                        pending: get_buffered(&mut b)?,
+                        late: get_buffered(&mut b)?,
+                    });
+                    b.expect_end()?;
+                }
                 _ => {} // unknown section: skip (additive format growth)
             }
         }
@@ -606,6 +715,7 @@ impl Snapshot {
             curves: curves.ok_or_else(|| missing("CURVES"))?,
             dp,
             tier,
+            async_state,
         })
     }
 

@@ -63,6 +63,13 @@ pub struct RoundRecord<'a> {
     /// (`federated::aggregate::fmt_state_norms`); empty for stateless
     /// rules like plain FedAvg.
     pub server_state: &'a str,
+    /// Mean staleness (in server applies) over the deltas applied since
+    /// the previous record — async round modes (DESIGN.md §12); 0 on the
+    /// synchronous path, where every applied delta is fresh.
+    pub staleness_mean: f64,
+    /// Deltas waiting in the async buffer / semi-sync late queue when the
+    /// record was written; 0 on the synchronous path.
+    pub buffer_fill: usize,
 }
 
 /// Sanitize a run/grid name for use as a directory component — the one
@@ -82,7 +89,7 @@ fn run_dir(root: impl AsRef<Path>, name: &str) -> Result<PathBuf> {
 }
 
 /// The curve.csv header row (also the schema table in README.md).
-const CURVE_HEADER: &str = "round,test_accuracy,test_loss,train_loss,clients,lr,up_bytes,down_bytes,codec,sim_seconds,dropped,deadline_misses,agg,server_state";
+const CURVE_HEADER: &str = "round,test_accuracy,test_loss,train_loss,clients,lr,up_bytes,down_bytes,codec,sim_seconds,dropped,deadline_misses,agg,server_state,staleness_mean,buffer_fill";
 
 /// Refuse to clobber an existing curve file: sanitized run names can
 /// collide, and `File::create` would silently truncate the loser.
@@ -224,7 +231,7 @@ impl RunWriter {
     pub fn record(&mut self, r: &RoundRecord<'_>) -> Result<()> {
         writeln!(
             self.curve,
-            "{},{:.6},{:.6},{},{},{:.6},{},{},{},{:.3},{},{},{},{}",
+            "{},{:.6},{:.6},{},{},{:.6},{},{},{},{:.3},{},{},{},{},{:.3},{}",
             r.round,
             r.test_accuracy,
             r.test_loss,
@@ -238,7 +245,9 @@ impl RunWriter {
             r.dropped,
             r.deadline_misses,
             r.agg,
-            r.server_state
+            r.server_state,
+            r.staleness_mean,
+            r.buffer_fill
         )?;
         // durability: a crashed run must keep every completed row — a
         // row-per-eval stream buffered until finish() loses everything
@@ -437,6 +446,8 @@ mod tests {
             deadline_misses: 0,
             agg: "fedavg",
             server_state: "",
+            staleness_mean: 0.0,
+            buffer_fill: 0,
         })
         .unwrap();
         w.record(&RoundRecord {
@@ -454,6 +465,8 @@ mod tests {
             deadline_misses: 1,
             agg: "fedavgm:0.9",
             server_state: "momentum=1.000000e0",
+            staleness_mean: 1.25,
+            buffer_fill: 4,
         })
         .unwrap();
         let summary = w
@@ -462,13 +475,21 @@ mod tests {
         let csv = std::fs::read_to_string(dir.join("curve.csv")).unwrap();
         assert!(csv.starts_with("round,"));
         assert!(csv.lines().next().unwrap().contains("up_bytes,down_bytes,codec"));
-        assert!(csv.lines().next().unwrap().ends_with("dropped,deadline_misses,agg,server_state"));
+        assert!(csv
+            .lines()
+            .next()
+            .unwrap()
+            .ends_with("dropped,deadline_misses,agg,server_state,staleness_mean,buffer_fill"));
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.contains("2,0.600000"));
         assert!(csv.contains("123,999,dense/dense"));
         assert!(csv.contains("456,888,topk:0.01|q8/delta"));
-        assert!(csv.lines().nth(1).unwrap().ends_with(",0,0,fedavg,"));
-        assert!(csv.lines().nth(2).unwrap().ends_with(",3,1,fedavgm:0.9,momentum=1.000000e0"));
+        assert!(csv.lines().nth(1).unwrap().ends_with(",0,0,fedavg,,0.000,0"));
+        assert!(csv
+            .lines()
+            .nth(2)
+            .unwrap()
+            .ends_with(",3,1,fedavgm:0.9,momentum=1.000000e0,1.250,4"));
         let json = std::fs::read_to_string(summary).unwrap();
         let parsed = crate::util::json::Json::parse(&json).unwrap();
         assert_eq!(parsed.get("rounds").unwrap().as_usize().unwrap(), 2);
@@ -492,6 +513,8 @@ mod tests {
             deadline_misses: 0,
             agg: "fedavg",
             server_state: "",
+            staleness_mean: 0.0,
+            buffer_fill: 0,
         }
     }
 

@@ -1,0 +1,1002 @@
+//! Buffered-async & semi-sync round modes — virtual-clock determinism
+//! and fault-injection suite (DESIGN.md §12).
+//!
+//! The tentpole guarantee under test: both alternative round modes are
+//! **pure functions of the seeded fleet's event times**. `--async-buffer
+//! K` fires combine∘step whenever K staleness-weighted deltas have
+//! arrived in virtual-clock `(finish time, slot)` order; `--late-policy
+//! discount` splices past-deadline stragglers into the round their
+//! upload lands in. Neither consults wall clock or worker scheduling,
+//! so every trajectory is byte-identical across `--workers N`,
+//! checkpointable between any two buffer applications, and — with
+//! `--staleness-decay 1.0` and a buffer equal to the cohort — the async
+//! run collapses to the synchronous path bit-for-bit.
+//!
+//! An engine-free harness (mirroring `rust/tests/shards.rs`) drives the
+//! real subsystems — sampler, fleet scheduler, transport with error
+//! feedback, stateful aggregators, the staleness math itself — through
+//! the same state flow as `federated::server::run`'s async and
+//! semi-sync branches. Seeded abort/duplicate faults ride the
+//! `fault_of` stream: an aborted client's delta never uploads (its
+//! error-feedback residual is untouched), and a duplicate delivery is
+//! refused idempotently. Artifact-gated tests repeat the sync↔async
+//! identity and the startup refusal matrix over the full training
+//! stack.
+
+use std::path::PathBuf;
+
+use fedavg::comms::{CommModel, CommSim, Transport, TransportConfig};
+use fedavg::coordinator::{
+    fault_of, plan_async_wave, plan_round, Fault, FaultConfig, Fleet, FleetConfig,
+    FleetProfile, FleetTotals, LatePolicy, RoundPlan, WavePlan,
+};
+use fedavg::data::rng::hash3_unit;
+use fedavg::federated::aggregate::{
+    fmt_state_norms, staleness_scale, staleness_weight, AggConfig, Aggregator,
+};
+use fedavg::federated::ClientSampler;
+use fedavg::metrics::LearningCurve;
+use fedavg::params;
+use fedavg::runstate::{
+    checkpoint_dir, AggState, AsyncState, BufferedDelta, CurveState, FleetState, RunMeta,
+    Snapshot,
+};
+use fedavg::telemetry::{RoundRecord, RunWriter};
+
+const DIM: usize = 301;
+const K: usize = 12;
+const M: usize = 4;
+const SEED: u64 = 23;
+/// Uniform per-client local step count (the scheduler's `steps_of`).
+const STEPS: f64 = 5.0;
+
+fn test_root(tag: &str) -> PathBuf {
+    let root = PathBuf::from(format!(
+        "target/test-runs/async-{tag}-{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&root).ok();
+    root
+}
+
+/// Deterministic stand-in for a client's local update (same recipe as
+/// `rust/tests/shards.rs`): a function of (round, client, θ) so a single
+/// wrong bit in any combine propagates into every later round.
+fn synth_delta(round: u64, client: usize, theta: &[f32]) -> Vec<f32> {
+    (0..DIM)
+        .map(|i| {
+            (hash3_unit(round, client as u64, i as u64) as f32 - 0.5) * 0.1
+                - 0.01 * theta[i]
+        })
+        .collect()
+}
+
+/// Fake evaluation: a smooth function of ‖θ‖ (no model involved).
+fn fake_eval(theta: &[f32]) -> (f64, f64) {
+    let n = params::l2_norm(theta);
+    (1.0 / (1.0 + n), n)
+}
+
+// ---------------------------------------------------- fleet configs
+
+fn sync_cfg(profile: FleetProfile, overselect: f64, deadline_s: Option<f64>) -> FleetConfig {
+    FleetConfig { profile, overselect, deadline_s, ..FleetConfig::default() }
+}
+
+fn async_cfg(profile: FleetProfile, buffer: usize, decay: f64) -> FleetConfig {
+    FleetConfig {
+        profile,
+        async_buffer: Some(buffer),
+        staleness_decay: decay,
+        ..FleetConfig::default()
+    }
+}
+
+fn semi_cfg(profile: FleetProfile, overselect: f64, deadline: f64, decay: f64) -> FleetConfig {
+    FleetConfig {
+        profile,
+        overselect,
+        deadline_s: Some(deadline),
+        late_policy: LatePolicy::Discount,
+        staleness_decay: decay,
+        ..FleetConfig::default()
+    }
+}
+
+/// One synthetic run whose round loop is the synchronous barrier, the
+/// semi-sync late queue, or the buffered-async wave — the same state
+/// flow as `federated::server::run`'s three selection/apply branches,
+/// with `synth_delta` standing in for ClientUpdate.
+struct Harness {
+    theta: Vec<f32>,
+    sampler: ClientSampler,
+    transport: Transport,
+    comms: CommSim,
+    agg: Box<dyn Aggregator>,
+    fleet: Fleet,
+    cfg: FleetConfig,
+    /// `Some` exactly when an async round mode is active (as in the
+    /// server), so the sync harness snapshots without an ASYNC section.
+    astate: Option<AsyncState>,
+    /// Seeded abort/duplicate stream; `None` = fault-free.
+    faults: Option<FaultConfig>,
+    accuracy: LearningCurve,
+    test_loss: LearningCurve,
+    client_steps: u64,
+    dropped_since_eval: usize,
+    misses_since_eval: usize,
+    /// Run-total Σ staleness over applied deltas — proves a test
+    /// actually exercised stale applies instead of passing vacuously.
+    total_staleness: u64,
+    aborted: u64,
+    duplicates_refused: u64,
+    eval_every: u64,
+    /// Emulate `--workers N`: client updates computed out of dispatch
+    /// order, then sorted back to slot order before encoding — the same
+    /// guarantee `ParallelExec` gives the server loop. Arrival order
+    /// comes from the virtual clock either way (DESIGN.md §12).
+    scrambled_workers: bool,
+    meta: RunMeta,
+}
+
+fn harness(spec: &str, codec: Option<&str>, cfg: FleetConfig) -> Harness {
+    let transport_cfg = TransportConfig::parse(codec, codec.map(|_| "delta")).unwrap();
+    let transport = Transport::new(transport_cfg, K, DIM, SEED);
+    let agg = AggConfig { spec: spec.into(), ..Default::default() }.build().unwrap();
+    let astate = (cfg.async_buffer.is_some() || cfg.late_policy == LatePolicy::Discount)
+        .then(AsyncState::default);
+    let meta = RunMeta {
+        label: "synthetic async".into(),
+        agg: agg.label(),
+        codec: transport.codec_label(),
+        seed: SEED,
+        clients: K as u64,
+        dim: DIM as u64,
+        lr_decay: 1.0,
+        eval_every: 2,
+        // the round-mode knobs are part of the fingerprint (as in the
+        // server's RunMeta): a checkpoint's pending buffer only means
+        // anything under the knobs that filled it
+        harness: format!(
+            "async=({:?},{:?},{:?}) barrier=({:?},{:?})",
+            cfg.async_buffer, cfg.staleness_decay, cfg.late_policy,
+            cfg.overselect, cfg.deadline_s,
+        ),
+    };
+    Harness {
+        theta: (0..DIM).map(|i| (i as f32 * 0.01).sin()).collect(),
+        sampler: ClientSampler::new(SEED),
+        transport,
+        comms: CommSim::new(CommModel::default(), SEED),
+        agg,
+        fleet: Fleet::build(&cfg, K, SEED),
+        cfg,
+        astate,
+        faults: None,
+        accuracy: LearningCurve::new(),
+        test_loss: LearningCurve::new(),
+        client_steps: 0,
+        dropped_since_eval: 0,
+        misses_since_eval: 0,
+        total_staleness: 0,
+        aborted: 0,
+        duplicates_refused: 0,
+        eval_every: 2,
+        scrambled_workers: false,
+        meta,
+    }
+}
+
+enum Sel {
+    Wave(WavePlan),
+    Plan(RoundPlan),
+}
+
+impl Harness {
+    /// One round, mirroring the server loop's async/semi-sync state flow.
+    fn round(&mut self, round: u64, last: u64, w: &mut RunWriter) {
+        self.transport.publish(round, &self.theta);
+        let est_up = self.transport.up_plan_bytes();
+        let decay = self.cfg.staleness_decay;
+        let mut down_total = 0u64;
+        // disjoint field borrows for the link-pricing closure: the
+        // scheduler holds fleet + sampler while the closure meters the
+        // transport (exactly the server's split)
+        let sel = {
+            let Harness { ref fleet, ref mut sampler, ref mut transport, ref theta, .. } =
+                *self;
+            let mut link = |c: usize| {
+                let down = transport.downlink(c, round, theta);
+                down_total += down;
+                (down, est_up)
+            };
+            if self.cfg.async_buffer.is_some() {
+                let (_, wv) =
+                    plan_async_wave(fleet, sampler, round, M, &mut link, |_| STEPS);
+                Sel::Wave(wv)
+            } else {
+                let (_, p) = plan_round(
+                    fleet,
+                    sampler,
+                    round,
+                    M,
+                    self.cfg.overselect,
+                    self.cfg.deadline_s,
+                    &mut link,
+                    |_| STEPS,
+                );
+                Sel::Plan(p)
+            }
+        };
+        let clock0 = self.comms.totals().sim_seconds;
+        let semi = self.cfg.late_policy == LatePolicy::Discount;
+        let (picks, late_now, plan, wave) = match sel {
+            Sel::Wave(wv) => (wv.dispatched.clone(), Vec::new(), None, Some(wv)),
+            Sel::Plan(p) => {
+                let late = if semi { p.late.clone() } else { Vec::new() };
+                (p.completed.clone(), late, Some(p), None)
+            }
+        };
+        // late stragglers keep training on this round's θ — only their
+        // upload lands later
+        let train_list: Vec<usize> = picks
+            .iter()
+            .copied()
+            .chain(late_now.iter().map(|&(c, _)| c))
+            .collect();
+
+        // "worker pool": compute raw updates in whatever order the pool
+        // finishes them, then restore dispatch-slot order
+        let mut slots: Vec<(usize, usize, Vec<f32>)> = Vec::new();
+        let order: Vec<usize> = if self.scrambled_workers {
+            (0..train_list.len()).rev().collect()
+        } else {
+            (0..train_list.len()).collect()
+        };
+        for slot in order {
+            let ck = train_list[slot];
+            self.client_steps += STEPS as u64;
+            slots.push((slot, ck, synth_delta(round, ck, &self.theta)));
+        }
+        slots.sort_by_key(|(slot, _, _)| *slot);
+
+        // encode in slot order; an aborted client's delta never uploads
+        // (error feedback untouched); a semi-sync straggler's raw delta
+        // is queued and encoded only at its apply round
+        let mut wire_up = 0u64;
+        let mut arrived: Vec<Option<(f32, Vec<f32>)>> = (0..picks.len()).map(|_| None).collect();
+        for (slot, ck, mut delta) in slots {
+            if slot < picks.len() {
+                if wave.is_some() {
+                    if let Some(f) = &self.faults {
+                        if fault_of(f, round, ck as u64) == Fault::Abort {
+                            self.aborted += 1;
+                            continue;
+                        }
+                    }
+                }
+                wire_up += self.transport.encode_up(ck, &mut delta).unwrap();
+                arrived[slot] = Some(((ck % 3 + 1) as f32, delta));
+            } else {
+                let (_, finish_t) = late_now[slot - picks.len()];
+                self.astate.as_mut().unwrap().late.push(BufferedDelta {
+                    dispatch_round: round,
+                    slot: slot as u64,
+                    client: ck as u64,
+                    basis: 0,
+                    weight: (ck % 3 + 1) as f32,
+                    due_s: clock0 + finish_t,
+                    delta,
+                });
+            }
+        }
+
+        let (rc, n_clients) = if let Some(wv) = wave {
+            // ---- buffered-async: arrivals feed the FIFO in virtual-clock
+            // order; every K deltas, one combine∘step fires
+            let buf = self.cfg.async_buffer.unwrap();
+            let a = self.astate.as_mut().unwrap();
+            for arr in &wv.arrivals {
+                let Some((weight, delta)) = arrived[arr.slot].take() else { continue };
+                a.pending.push(BufferedDelta {
+                    dispatch_round: round,
+                    slot: arr.slot as u64,
+                    client: arr.client as u64,
+                    basis: a.applies_done,
+                    weight,
+                    due_s: 0.0,
+                    delta,
+                });
+                if let Some(f) = &self.faults {
+                    if fault_of(f, round, arr.client as u64) == Fault::Duplicate {
+                        // second delivery of the same (round, client):
+                        // refused — the buffer already holds one copy
+                        self.duplicates_refused += 1;
+                    }
+                }
+            }
+            while a.pending.len() >= buf {
+                let mut batch: Vec<BufferedDelta> = a.pending.drain(..buf).collect();
+                batch.sort_by_key(|e| (e.dispatch_round, e.slot));
+                let stale: Vec<(f32, u64)> = batch
+                    .iter()
+                    .map(|e| (e.weight, a.applies_done - e.basis))
+                    .collect();
+                let scale = staleness_scale(&stale, decay);
+                let mut agg_delta = if scale > 0.0 {
+                    let refs: Vec<(f32, &[f32])> = batch
+                        .iter()
+                        .zip(&stale)
+                        .map(|(e, &(wt, s))| {
+                            (staleness_weight(wt, decay, s), e.delta.as_slice())
+                        })
+                        .collect();
+                    self.agg.combine(&refs).unwrap()
+                } else {
+                    vec![0.0f32; self.theta.len()]
+                };
+                if scale != 1.0 {
+                    for v in agg_delta.iter_mut() {
+                        *v = (*v as f64 * scale) as f32;
+                    }
+                }
+                let step = self.agg.step(a.applies_done + 1, agg_delta).unwrap();
+                params::axpy(&mut self.theta, 1.0, &step);
+                a.applies_done += 1;
+                a.deltas_since_eval += buf as u64;
+                for &(_, s) in &stale {
+                    a.stale_sum_since_eval += s;
+                    self.total_staleness += s;
+                }
+            }
+            (self.comms.ingest(wire_up, down_total, wv.round_seconds), picks.len())
+        } else {
+            // ---- barrier (sync / semi-sync): due late deltas join this
+            // round's cohort FIRST, staleness-discounted
+            let p = plan.unwrap();
+            let mut due_deltas: Vec<(f32, Vec<f32>)> = Vec::new();
+            let mut stale: Vec<(f32, u64)> = Vec::new();
+            let cur: Vec<(f32, Vec<f32>)> = arrived.into_iter().flatten().collect();
+            if let Some(a) = self.astate.as_mut() {
+                let cut = clock0 + p.round_seconds;
+                let mut keep = Vec::new();
+                for e in a.late.drain(..) {
+                    if e.due_s > cut {
+                        keep.push(e);
+                        continue;
+                    }
+                    let mut d = e.delta;
+                    wire_up += self.transport.encode_up(e.client as usize, &mut d).unwrap();
+                    let s = round - e.dispatch_round;
+                    due_deltas.push((staleness_weight(e.weight, decay, s), d));
+                    stale.push((e.weight, s));
+                    a.late_applied += 1;
+                }
+                a.late = keep;
+                for &(wt, _) in &cur {
+                    stale.push((wt, 0));
+                }
+                a.deltas_since_eval += (due_deltas.len() + cur.len()) as u64;
+                for &(_, s) in &stale {
+                    a.stale_sum_since_eval += s;
+                    self.total_staleness += s;
+                }
+            }
+            let n_apply = due_deltas.len() + picks.len();
+            let scale = match &self.astate {
+                Some(_) => staleness_scale(&stale, decay),
+                None => 1.0,
+            };
+            let refs: Vec<(f32, &[f32])> = due_deltas
+                .iter()
+                .map(|(wt, d)| (*wt, d.as_slice()))
+                .chain(cur.iter().map(|(wt, d)| (*wt, d.as_slice())))
+                .collect();
+            let mut agg_delta = self.agg.combine(&refs).unwrap();
+            if scale != 1.0 {
+                for v in agg_delta.iter_mut() {
+                    *v = (*v as f64 * scale) as f32;
+                }
+            }
+            let step = self.agg.step(round, agg_delta).unwrap();
+            params::axpy(&mut self.theta, 1.0, &step);
+            self.dropped_since_eval += p.dropped.len() - late_now.len();
+            self.misses_since_eval += p.deadline_miss as usize;
+            (self.comms.ingest(wire_up, down_total, p.round_seconds), n_apply)
+        };
+
+        if round % self.eval_every == 0 || round == last {
+            let (acc, loss) = fake_eval(&self.theta);
+            self.accuracy.push(round, acc);
+            self.test_loss.push(round, loss);
+            let server_state = fmt_state_norms(&self.agg.state_norms());
+            let (staleness_mean, buffer_fill) = match &self.astate {
+                Some(a) => (
+                    if a.deltas_since_eval > 0 {
+                        a.stale_sum_since_eval as f64 / a.deltas_since_eval as f64
+                    } else {
+                        0.0
+                    },
+                    if self.cfg.async_buffer.is_some() {
+                        a.pending.len()
+                    } else {
+                        a.late.len()
+                    },
+                ),
+                None => (0.0, 0),
+            };
+            w.record(&RoundRecord {
+                round,
+                test_accuracy: acc,
+                test_loss: loss,
+                train_loss: None,
+                clients: n_clients,
+                lr: 0.1,
+                up_bytes: rc.bytes_up,
+                down_bytes: rc.bytes_down,
+                codec: &self.meta.codec,
+                sim_seconds: self.comms.totals().sim_seconds,
+                dropped: self.dropped_since_eval,
+                deadline_misses: self.misses_since_eval,
+                agg: &self.meta.agg,
+                server_state: &server_state,
+                staleness_mean,
+                buffer_fill,
+            })
+            .unwrap();
+            self.dropped_since_eval = 0;
+            self.misses_since_eval = 0;
+            if let Some(a) = self.astate.as_mut() {
+                a.stale_sum_since_eval = 0;
+                a.deltas_since_eval = 0;
+            }
+        }
+    }
+
+    fn run(&mut self, rounds: u64, root: &PathBuf, name: &str) -> PathBuf {
+        let mut w = RunWriter::create(root, name).unwrap();
+        let dir = w.dir().to_path_buf();
+        for round in 1..=rounds {
+            self.round(round, rounds, &mut w);
+        }
+        w.finish(&[("rounds", rounds.to_string())]).unwrap();
+        dir
+    }
+
+    fn snapshot(&self, round: u64) -> Snapshot {
+        Snapshot {
+            round,
+            meta: self.meta.clone(),
+            theta: self.theta.clone(),
+            client_steps: self.client_steps,
+            sampler: self.sampler.state(),
+            agg: AggState {
+                label: self.agg.label(),
+                bytes: self.agg.state_save(),
+            },
+            transport: self.transport.state_save(),
+            comms: self.comms.state_save(),
+            fleet: FleetState {
+                totals: FleetTotals::default(),
+                dropped_since_eval: self.dropped_since_eval as u64,
+                misses_since_eval: self.misses_since_eval as u64,
+            },
+            curves: CurveState {
+                accuracy: self.accuracy.points().to_vec(),
+                test_loss: self.test_loss.points().to_vec(),
+                train_loss: None,
+            },
+            dp: None,
+            tier: None,
+            async_state: self.astate.clone(),
+        }
+    }
+
+    /// The exact restore sequence `federated::server::run` performs.
+    fn restore(&mut self, snap: Snapshot) {
+        assert_eq!(snap.meta, self.meta, "config fingerprint mismatch");
+        self.theta = snap.theta;
+        self.sampler.restore_state(snap.sampler);
+        self.agg.state_load(&snap.agg.bytes).unwrap();
+        self.transport.state_load(snap.transport).unwrap();
+        self.comms.state_load(snap.comms);
+        self.accuracy = LearningCurve::from_points(snap.curves.accuracy).unwrap();
+        self.test_loss = LearningCurve::from_points(snap.curves.test_loss).unwrap();
+        self.client_steps = snap.client_steps;
+        self.dropped_since_eval = snap.fleet.dropped_since_eval as usize;
+        self.misses_since_eval = snap.fleet.misses_since_eval as usize;
+        self.astate = snap.async_state;
+    }
+
+    fn theta_bits(&self) -> Vec<u32> {
+        self.theta.iter().map(|v| v.to_bits()).collect()
+    }
+}
+
+fn read_curve(dir: &PathBuf) -> Vec<u8> {
+    std::fs::read(dir.join("curve.csv")).unwrap()
+}
+
+// ---------------------------------------------------- tentpole identity
+
+/// The headline property (acceptance criterion): with `--staleness-decay
+/// 1.0` and a buffer equal to the cohort size, the buffered-async run
+/// reproduces the synchronous run **byte-for-byte** — same curve.csv,
+/// bit-identical θ — for every mean-family rule × codec × worker
+/// completion order. On the uniform fleet every wave dispatches exactly
+/// M clients, so each wave fills the buffer exactly once and
+/// `step(applies_done + 1)` sees the same step index as the sync path.
+#[test]
+fn async_equal_buffer_reduces_to_sync_byte_for_byte() {
+    let rounds = 8u64;
+    for spec in ["fedavg", "fedavgm:0.8", "fedadam:0.01"] {
+        for codec in [None, Some("topk:30|q8")] {
+            let tag = format!(
+                "identity-{}-{}",
+                spec.split(':').next().unwrap(),
+                codec.map(|_| "topk").unwrap_or("dense")
+            );
+            let root = test_root(&tag);
+            let mut sync = harness(spec, codec, sync_cfg(FleetProfile::Uniform, 0.0, None));
+            let sync_dir = sync.run(rounds, &root, "sync");
+            let sync_curve = read_curve(&sync_dir);
+            assert!(!sync_curve.is_empty());
+            // the new columns are in every curve header, sync included
+            assert!(
+                sync_curve.starts_with(b"round,")
+                    && String::from_utf8_lossy(&sync_curve)
+                        .lines()
+                        .next()
+                        .unwrap()
+                        .ends_with("staleness_mean,buffer_fill"),
+                "curve header must carry the async columns"
+            );
+            for scrambled in [false, true] {
+                let mut a = harness(spec, codec, async_cfg(FleetProfile::Uniform, M, 1.0));
+                a.scrambled_workers = scrambled;
+                let dir = a.run(rounds, &root, &format!("async-w{}", scrambled as u8 * 3 + 1));
+                assert_eq!(
+                    read_curve(&dir),
+                    sync_curve,
+                    "{spec} codec={codec:?} scrambled={scrambled}: async curve.csv \
+                     diverged from sync"
+                );
+                assert_eq!(
+                    a.theta_bits(),
+                    sync.theta_bits(),
+                    "{spec} codec={codec:?} scrambled={scrambled}: θ diverged"
+                );
+                let a = a.astate.as_ref().unwrap();
+                assert_eq!(a.applies_done, rounds, "one apply per wave");
+                assert!(a.pending.is_empty(), "buffer must drain every wave");
+            }
+            std::fs::remove_dir_all(root).ok();
+        }
+    }
+}
+
+/// Worker completion order must be invisible in a *genuinely* async run
+/// too (buffer smaller than the cohort, decay < 1, carryover between
+/// waves): arrival order is the virtual-clock sort, never the pool's
+/// finish order. On the uniform fleet (4 arrivals/wave, buffer 3) the
+/// buffer carries 1–2 deltas across every wave, so stale applies are
+/// guaranteed, not incidental.
+#[test]
+fn async_worker_completion_order_is_invisible() {
+    let rounds = 10u64;
+    for profile in [FleetProfile::Uniform, FleetProfile::Mobile] {
+        let root = test_root(&format!("workers-{}", profile.label()));
+        let mut ordered = harness("fedavgm:0.8", Some("topk:30|q8"), async_cfg(profile, 3, 0.7));
+        let ordered_dir = ordered.run(rounds, &root, "ordered");
+        let mut scrambled =
+            harness("fedavgm:0.8", Some("topk:30|q8"), async_cfg(profile, 3, 0.7));
+        scrambled.scrambled_workers = true;
+        let scrambled_dir = scrambled.run(rounds, &root, "scrambled");
+        assert_eq!(
+            read_curve(&ordered_dir),
+            read_curve(&scrambled_dir),
+            "{profile:?}: worker order leaked into the async curve"
+        );
+        assert_eq!(ordered.theta_bits(), scrambled.theta_bits(), "{profile:?}: θ diverged");
+        if profile == FleetProfile::Uniform {
+            assert!(
+                ordered.total_staleness > 0,
+                "uniform fleet with buffer 3 must carry stale deltas across waves"
+            );
+        }
+        std::fs::remove_dir_all(root).ok();
+    }
+}
+
+// ------------------------------------------------- checkpoint + resume
+
+/// A buffered-async run checkpointed *between two buffer applications*
+/// — pending deltas in flight — and resumed is byte-identical to the
+/// uninterrupted run. On the uniform fleet (4 arrivals/wave, buffer 3)
+/// the checkpoint after round 5 provably holds 20 mod 3 = 2 pending
+/// deltas, so the ASYNC section is doing real work.
+#[test]
+fn async_checkpoint_resume_is_bit_identical() {
+    let root = test_root("resume");
+    let (r1, r2) = (6u64, 12u64);
+    let ckpt_round = 5u64; // off the eval cadence, like runstate.rs
+    let cfg = || async_cfg(FleetProfile::Uniform, 3, 0.8);
+
+    let mut full = harness("fedavgm:0.8", Some("topk:30|q8"), cfg());
+    let full_dir = full.run(r2, &root, "full");
+
+    let mut part = harness("fedavgm:0.8", Some("topk:30|q8"), cfg());
+    let mut w = RunWriter::create(&root, "resumed").unwrap();
+    let part_dir = w.dir().to_path_buf();
+    let ckpts = checkpoint_dir(&part_dir);
+    for round in 1..=r1 {
+        part.round(round, r2, &mut w);
+        if round <= ckpt_round {
+            part.snapshot(round).write(&ckpts, 2).unwrap();
+        }
+    }
+    drop(w); // kill: no finish()
+
+    let (_, snap) = Snapshot::load_latest(&part_dir).unwrap().expect("snapshots exist");
+    assert_eq!(snap.round, ckpt_round);
+    let a = snap.async_state.as_ref().expect("async snapshot must carry the ASYNC section");
+    assert_eq!(a.pending.len(), 2, "checkpoint must land mid-buffer (20 mod 3)");
+    assert_eq!(a.applies_done, 6, "⌊20 / 3⌋ applies after round 5");
+    assert!(
+        a.stale_sum_since_eval > 0 || a.deltas_since_eval > 0,
+        "ckpt off the eval cadence must carry mid-flight curve accumulators"
+    );
+    let mut resumed = harness("fedavgm:0.8", Some("topk:30|q8"), cfg());
+    resumed.restore(snap);
+    let mut w = RunWriter::reopen(&part_dir, ckpt_round).unwrap();
+    for round in ckpt_round + 1..=r2 {
+        resumed.round(round, r2, &mut w);
+    }
+    w.finish(&[("rounds", r2.to_string())]).unwrap();
+
+    assert_eq!(
+        read_curve(&part_dir),
+        read_curve(&full_dir),
+        "resumed async curve.csv != uninterrupted"
+    );
+    assert_eq!(resumed.theta_bits(), full.theta_bits(), "resumed θ != uninterrupted");
+    assert_eq!(
+        resumed.astate, full.astate,
+        "resumed async state (applies, pending buffer) != uninterrupted"
+    );
+    std::fs::remove_dir_all(root).ok();
+}
+
+/// The round-mode knobs are part of the resume fingerprint: a pending
+/// buffer only means anything under the buffer size / decay / policy
+/// that filled it.
+#[test]
+fn resume_refuses_different_async_knobs() {
+    let mut h = harness("fedavg", None, async_cfg(FleetProfile::Uniform, 3, 0.8));
+    let root = test_root("refuse");
+    let mut w = RunWriter::create(&root, "a3").unwrap();
+    for round in 1..=3 {
+        h.round(round, 3, &mut w);
+    }
+    let snap = h.snapshot(3);
+    for other in [
+        async_cfg(FleetProfile::Uniform, 4, 0.8),
+        async_cfg(FleetProfile::Uniform, 3, 0.5),
+        sync_cfg(FleetProfile::Uniform, 0.0, None),
+        semi_cfg(FleetProfile::Uniform, 0.0, 10.0, 0.8),
+    ] {
+        let o = harness("fedavg", None, other);
+        assert_ne!(snap.meta, o.meta, "fingerprint must differ: {}", o.meta.harness);
+    }
+    let mut back = harness("fedavg", None, async_cfg(FleetProfile::Uniform, 3, 0.8));
+    back.restore(snap);
+    assert_eq!(back.astate, h.astate);
+    std::fs::remove_dir_all(root).ok();
+}
+
+// ------------------------------------------------------------ semi-sync
+
+/// With a deadline nobody misses, `--late-policy discount` is inert: the
+/// late queue stays empty, every staleness weight is the plain weight,
+/// the normalizing scale is exactly 1.0 — byte-identical to the drop
+/// policy (which is itself the plain synchronous path here).
+#[test]
+fn semi_sync_with_zero_late_clients_matches_sync() {
+    let rounds = 8u64;
+    let root = test_root("semi-zero");
+    let mut sync = harness(
+        "fedavgm:0.8",
+        Some("topk:30|q8"),
+        sync_cfg(FleetProfile::Mobile, 0.3, Some(1.0e6)),
+    );
+    let sync_dir = sync.run(rounds, &root, "sync");
+    let mut semi = harness(
+        "fedavgm:0.8",
+        Some("topk:30|q8"),
+        semi_cfg(FleetProfile::Mobile, 0.3, 1.0e6, 0.9),
+    );
+    let semi_dir = semi.run(rounds, &root, "semi");
+    assert_eq!(
+        read_curve(&semi_dir),
+        read_curve(&sync_dir),
+        "zero-late semi-sync curve.csv diverged from sync"
+    );
+    assert_eq!(semi.theta_bits(), sync.theta_bits(), "zero-late semi-sync θ diverged");
+    let a = semi.astate.as_ref().unwrap();
+    assert_eq!(a.late_applied, 0);
+    assert!(a.late.is_empty());
+    std::fs::remove_dir_all(root).ok();
+}
+
+/// With a tight deadline on the heterogeneous fleet, stragglers really
+/// are discounted into later rounds: late deltas apply with staleness
+/// measured in rounds, the trajectory genuinely departs from the drop
+/// policy, and the error-feedback residuals reused at the apply round
+/// keep θ finite.
+#[test]
+fn semi_sync_discounts_late_stragglers() {
+    let rounds = 12u64;
+    let root = test_root("semi-late");
+    let mut drop_h = harness(
+        "fedavg",
+        Some("topk:30|q8"),
+        sync_cfg(FleetProfile::Mobile, 0.0, Some(0.3)),
+    );
+    drop_h.run(rounds, &root, "drop");
+    let mut semi = harness(
+        "fedavg",
+        Some("topk:30|q8"),
+        semi_cfg(FleetProfile::Mobile, 0.0, 0.3, 0.9),
+    );
+    semi.run(rounds, &root, "semi");
+    let a = semi.astate.as_ref().unwrap();
+    assert!(a.late_applied > 0, "tight deadline on mobile fleet must produce late applies");
+    assert!(
+        semi.total_staleness > 0,
+        "late applies must carry round-staleness > 0"
+    );
+    assert!(semi.theta.iter().all(|v| v.is_finite()));
+    assert_ne!(
+        semi.theta_bits(),
+        drop_h.theta_bits(),
+        "discounted stragglers must actually change the trajectory"
+    );
+    std::fs::remove_dir_all(root).ok();
+}
+
+// ------------------------------------------------------ fault injection
+
+/// A seeded abort means the client's delta never uploads: no encode, so
+/// its error-feedback residual is bit-untouched, the buffer does not
+/// advance, and θ is unchanged — while the abort is counted.
+#[test]
+fn aborted_clients_preserve_error_feedback() {
+    let root = test_root("abort");
+    // buffer 2 on the uniform fleet: 4 arrivals/wave drain exactly twice,
+    // so the pending buffer is provably empty between rounds
+    let mut h = harness("fedavg", Some("topk:30|q8"), async_cfg(FleetProfile::Uniform, 2, 0.9));
+    let mut w = RunWriter::create(&root, "abort").unwrap();
+    for round in 1..=2 {
+        h.round(round, 99, &mut w);
+    }
+    let residuals: Vec<u64> = (0..K).map(|c| h.transport.residual_norm(c).to_bits()).collect();
+    assert!(
+        h.transport.residual_l2_total() > 0.0,
+        "top-k uplink must have built residual mass before the faulty round"
+    );
+    let theta_before = h.theta_bits();
+    let applies_before = h.astate.as_ref().unwrap().applies_done;
+
+    h.faults = Some(FaultConfig { abort_p: 1.0, duplicate_p: 0.0, seed: SEED });
+    h.round(3, 99, &mut w);
+
+    assert_eq!(h.aborted, M as u64, "every dispatched client must abort");
+    assert_eq!(
+        (0..K).map(|c| h.transport.residual_norm(c).to_bits()).collect::<Vec<_>>(),
+        residuals,
+        "aborted clients' EF residuals must be bit-untouched"
+    );
+    assert_eq!(h.theta_bits(), theta_before, "no delta arrived, θ must not move");
+    let a = h.astate.as_ref().unwrap();
+    assert_eq!(a.applies_done, applies_before);
+    assert!(a.pending.is_empty());
+    std::fs::remove_dir_all(root).ok();
+}
+
+/// A duplicate delivery is refused idempotently: the buffer holds
+/// exactly one copy per (round, client), so a run where *every* delta is
+/// delivered twice is byte-identical to the fault-free run — the only
+/// trace is the refused counter.
+#[test]
+fn duplicate_deliveries_are_refused_idempotently() {
+    let rounds = 8u64;
+    let root = test_root("dup");
+    let cfg = || async_cfg(FleetProfile::Uniform, 3, 0.9);
+    let mut clean = harness("fedavgm:0.8", Some("topk:30|q8"), cfg());
+    let clean_dir = clean.run(rounds, &root, "clean");
+    let mut dup = harness("fedavgm:0.8", Some("topk:30|q8"), cfg());
+    dup.faults = Some(FaultConfig { abort_p: 0.0, duplicate_p: 1.0, seed: SEED });
+    let dup_dir = dup.run(rounds, &root, "dup");
+    assert_eq!(
+        read_curve(&dup_dir),
+        read_curve(&clean_dir),
+        "refused duplicates must leave the trajectory byte-identical"
+    );
+    assert_eq!(dup.theta_bits(), clean.theta_bits());
+    assert_eq!(
+        dup.duplicates_refused,
+        rounds * M as u64,
+        "every arrival was delivered twice; each second copy refused"
+    );
+    assert_eq!(dup.aborted, 0);
+    std::fs::remove_dir_all(root).ok();
+}
+
+/// The fault stream itself is a pure function of (seed, round, client):
+/// independent of query order, stable across replays, and disjoint
+/// outcomes partition the unit interval.
+#[test]
+fn fault_stream_is_deterministic_and_seeded() {
+    let f = FaultConfig { abort_p: 0.3, duplicate_p: 0.3, seed: 7 };
+    f.validate().unwrap();
+    let draw: Vec<Fault> = (0..50).map(|c| fault_of(&f, 4, c)).collect();
+    let mut replay: Vec<Fault> = (0..50).rev().map(|c| fault_of(&f, 4, c)).collect();
+    replay.reverse();
+    assert_eq!(draw, replay, "fault coin must not depend on query order");
+    let other: Vec<Fault> = (0..50).map(|c| fault_of(&FaultConfig { seed: 8, ..f }, 4, c)).collect();
+    assert_ne!(draw, other, "seed must steer the stream");
+    assert!(
+        FaultConfig { abort_p: 0.7, duplicate_p: 0.7, seed: 0 }.validate().is_err(),
+        "abort_p + duplicate_p > 1 must be refused"
+    );
+}
+
+// ------------------------------------- full-stack (artifact-gated) tests
+
+/// The acceptance identity over the real training stack: `--async-buffer
+/// m --staleness-decay 1.0 --workers 4` versus the plain synchronous
+/// fleet run — final θ bit-equal, curve.csv byte-equal.
+#[test]
+fn server_async_bit_identity_over_artifacts() {
+    use fedavg::config::{BatchSize, FedConfig, Partition};
+    use fedavg::federated::{self, ServerOptions};
+    use fedavg::runtime::Engine;
+
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return;
+    }
+    let eng = Engine::load(dir).expect("engine");
+    let fed = fedavg::exper::mnist_fed(0.05, Partition::Iid, 77);
+    let cfg = FedConfig {
+        model: "mnist_2nn".into(),
+        c: 0.3,
+        e: 1,
+        b: BatchSize::Fixed(10),
+        lr: 0.1,
+        rounds: 4,
+        eval_every: 1,
+        seed: 77,
+        ..Default::default()
+    };
+    let m = (0.3f64 * fed.clients.len() as f64).ceil() as usize;
+    let opts = |telemetry: Option<RunWriter>, fleet: FleetConfig| ServerOptions {
+        eval_cap: Some(200),
+        telemetry,
+        transport: TransportConfig::parse(Some("topk:0.02|q8"), Some("delta")).unwrap(),
+        agg: AggConfig { spec: "fedavgm:0.9".into(), ..Default::default() },
+        fleet,
+        ..Default::default()
+    };
+    let root = test_root("server");
+
+    let w = RunWriter::create(&root, "sync").unwrap();
+    let sync_dir = w.dir().to_path_buf();
+    let sync = federated::run(
+        &eng,
+        &fed,
+        &cfg,
+        opts(Some(w), sync_cfg(FleetProfile::Uniform, 0.0, None)),
+    )
+    .unwrap();
+
+    let w = RunWriter::create(&root, "async").unwrap();
+    let async_dir = w.dir().to_path_buf();
+    let mut fleet = async_cfg(FleetProfile::Uniform, m, 1.0);
+    fleet.workers = 4;
+    let asynced = federated::run(&eng, &fed, &cfg, opts(Some(w), fleet)).unwrap();
+
+    assert_eq!(sync.final_theta, asynced.final_theta, "async θ diverged from sync");
+    assert_eq!(
+        read_curve(&sync_dir),
+        read_curve(&async_dir),
+        "async curve.csv diverged from sync"
+    );
+    std::fs::remove_dir_all(root).ok();
+}
+
+/// Server-level startup refusal matrix (PR 7 convention: name the flag,
+/// say why, point at DESIGN.md §12) — and the one composition that IS
+/// allowed: central DP over either async mode.
+#[test]
+fn server_rejects_async_mode_conflicts() {
+    use fedavg::config::{BatchSize, FedConfig, Partition};
+    use fedavg::federated::server::DpConfig;
+    use fedavg::federated::{self, ServerOptions};
+    use fedavg::runtime::Engine;
+
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return;
+    }
+    let eng = Engine::load(dir).expect("engine");
+    let fed = fedavg::exper::mnist_fed(0.05, Partition::Iid, 7);
+    let cfg = FedConfig {
+        model: "mnist_2nn".into(),
+        c: 0.1,
+        e: 1,
+        b: BatchSize::Fixed(10),
+        lr: 0.1,
+        rounds: 1,
+        eval_every: 1,
+        seed: 7,
+        ..Default::default()
+    };
+    let with_fleet = |fleet: FleetConfig| ServerOptions { fleet, ..Default::default() };
+    let run = |o: ServerOptions| federated::run(&eng, &fed, &cfg, o);
+    let msg_of = |o: ServerOptions| format!("{:#}", run(o).unwrap_err());
+
+    // robust order statistics have no partial-cohort meaning
+    for spec in ["median", "trimmed:0.2"] {
+        let mut o = with_fleet(async_cfg(FleetProfile::Uniform, 3, 0.9));
+        o.agg.spec = spec.into();
+        let msg = msg_of(o);
+        assert!(msg.contains("order statistics"), "{spec}: {msg}");
+        assert!(msg.contains("DESIGN.md §12"), "{spec}: {msg}");
+        let mut o = with_fleet(semi_cfg(FleetProfile::Uniform, 0.0, 5.0, 0.9));
+        o.agg.spec = spec.into();
+        assert!(msg_of(o).contains("order statistics"), "{spec} semi-sync");
+    }
+    // secure-agg masks cancel only over one round's full cohort
+    let mut o = with_fleet(async_cfg(FleetProfile::Uniform, 3, 0.9));
+    o.secure_agg = true;
+    let msg = msg_of(o);
+    assert!(msg.contains("secure-agg"), "{msg}");
+    assert!(msg.contains("partial buffer"), "{msg}");
+    // the edge tier frames one combine per round
+    let mut fleet = async_cfg(FleetProfile::Uniform, 3, 0.9);
+    fleet.shards = 2;
+    assert!(msg_of(with_fleet(fleet)).contains("--shards"));
+    // async replaces the barrier — barrier knobs are refused
+    let mut fleet = async_cfg(FleetProfile::Uniform, 3, 0.9);
+    fleet.overselect = 0.3;
+    assert!(msg_of(with_fleet(fleet)).contains("synchronous barrier"));
+    // the two modes are alternatives, not composable
+    let mut fleet = async_cfg(FleetProfile::Uniform, 3, 0.9);
+    fleet.late_policy = LatePolicy::Discount;
+    fleet.deadline_s = None;
+    assert!(msg_of(with_fleet(fleet)).contains("alternative round modes"));
+    // both modes schedule on the fleet's virtual clock
+    let fleet = async_cfg(FleetProfile::Legacy, 3, 0.9);
+    assert!(msg_of(with_fleet(fleet)).contains("fleet profile"));
+    // lateness needs a deadline to be measured against
+    let mut fleet = semi_cfg(FleetProfile::Uniform, 0.0, 5.0, 0.9);
+    fleet.deadline_s = None;
+    assert!(msg_of(with_fleet(fleet)).contains("nobody is late"));
+    // decay domain
+    let fleet = async_cfg(FleetProfile::Uniform, 3, 1.5);
+    assert!(msg_of(with_fleet(fleet)).contains("--staleness-decay"));
+    // ...and DP composes: clip+noise applies between combine and step,
+    // the same seam the staleness scale uses (DESIGN.md §12)
+    for fleet in [
+        async_cfg(FleetProfile::Uniform, 3, 0.9),
+        semi_cfg(FleetProfile::Uniform, 0.0, 5.0, 0.9),
+    ] {
+        let mut o = with_fleet(fleet);
+        o.dp = Some(DpConfig { clip_norm: 1.0, sigma: 0.01 });
+        o.eval_cap = Some(50);
+        assert!(run(o).is_ok(), "central DP must compose with the async modes");
+    }
+}

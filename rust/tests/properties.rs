@@ -289,6 +289,128 @@ fn prop_updates_per_round_positive_and_scales() {
     }
 }
 
+// ---------------------------------------------------- staleness invariants
+// (async round modes, DESIGN.md §12)
+
+#[test]
+fn prop_staleness_weight_monotone_nonincreasing() {
+    use fedavg::federated::aggregate::staleness_weight;
+    for case in 0..CASES {
+        let mut rng = Rng::new(13_000 + case);
+        let w = 0.5 + rng.f32() * 20.0;
+        let decay = f64::MIN_POSITIVE.max(rng.f64()).min(1.0);
+        // fresh deltas are never discounted, whatever the decay
+        assert_eq!(staleness_weight(w, decay, 0).to_bits(), w.to_bits(), "case {case}");
+        let mut prev = w;
+        for s in 1..=40u64 {
+            let ws = staleness_weight(w, decay, s);
+            assert!(ws.is_finite() && ws >= 0.0, "case {case} s={s}: {ws}");
+            assert!(ws <= prev, "case {case}: weight rose at s={s} ({prev} -> {ws})");
+            // decay 1.0 is the identity at any staleness
+            assert_eq!(staleness_weight(w, 1.0, s).to_bits(), w.to_bits(), "case {case}");
+            prev = ws;
+        }
+    }
+}
+
+#[test]
+fn prop_staleness_scale_normalizes_partial_buffers() {
+    // the scalar applied between combine and step must equal
+    // Σ nᵢ·dˢⁱ / Σ nᵢ — so combine(discounted weights) × scale is the
+    // discounted sum normalized by the *undiscounted* weight mass, and a
+    // buffer of fresh deltas is untouched
+    use fedavg::federated::aggregate::{staleness_scale, staleness_weight};
+    for case in 0..CASES {
+        let mut rng = Rng::new(14_000 + case);
+        let k = 1 + rng.below(10);
+        let decay = 0.05 + rng.f64() * 0.95;
+        let entries: Vec<(f32, u64)> = (0..k)
+            .map(|_| (0.5 + rng.f32() * 10.0, rng.below(30) as u64))
+            .collect();
+        let scale = staleness_scale(&entries, decay);
+        assert!((0.0..=1.0 + 1e-12).contains(&scale), "case {case}: scale {scale}");
+        let num: f64 = entries
+            .iter()
+            .map(|&(n, s)| n as f64 * decay.powi(s as i32))
+            .sum();
+        let den: f64 = entries.iter().map(|&(n, _)| n as f64).sum();
+        // the kernel discounts in f32 (the combine's weight type), so
+        // allow f32 rounding against the f64 reference
+        assert!((scale - num / den).abs() < 1e-5, "case {case}: {scale} vs {}", num / den);
+        // all-fresh buffers and decay 1.0 are exactly unscaled
+        let fresh: Vec<(f32, u64)> = entries.iter().map(|&(n, _)| (n, 0)).collect();
+        assert_eq!(staleness_scale(&fresh, decay), 1.0, "case {case}");
+        assert_eq!(staleness_scale(&entries, 1.0), 1.0, "case {case}");
+        // consistency with the weighted mean: scale × mean(discounted
+        // weights) == Σ nᵢ·dˢⁱ·xᵢ / Σ nᵢ, coordinate-wise
+        let dim = 1 + rng.below(20);
+        let vecs: Vec<Vec<f32>> = (0..k).map(|_| rand_vec(&mut rng, dim, 2.0)).collect();
+        if scale > 0.0 {
+            let refs: Vec<(f32, &[f32])> = entries
+                .iter()
+                .zip(&vecs)
+                .map(|(&(n, s), v)| (staleness_weight(n, decay, s), v.as_slice()))
+                .collect();
+            let mean = params::weighted_mean(&refs);
+            for d in 0..dim {
+                let want: f64 = entries
+                    .iter()
+                    .zip(&vecs)
+                    .map(|(&(n, s), v)| n as f64 * decay.powi(s as i32) * v[d] as f64)
+                    .sum::<f64>()
+                    / den;
+                let got = mean[d] as f64 * scale;
+                assert!(
+                    (got - want).abs() < 1e-3,
+                    "case {case} coord {d}: {got} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_theta_stays_finite_for_any_decay() {
+    // a buffered-async run applies scale·combine(...) every drain; for
+    // any decay in (0, 1] and any staleness pattern the update must stay
+    // finite — tiny decays underflow toward a zero delta, never NaN
+    use fedavg::federated::aggregate::{staleness_scale, staleness_weight};
+    for case in 0..CASES {
+        let mut rng = Rng::new(15_000 + case);
+        let dim = 1 + rng.below(40);
+        let decay = (rng.f64().powi(4)).max(1e-12).min(1.0); // bias toward tiny
+        let mut theta = rand_vec(&mut rng, dim, 1.0);
+        for round in 0..12u64 {
+            let k = 1 + rng.below(6);
+            let entries: Vec<(f32, u64)> = (0..k)
+                .map(|_| (0.5 + rng.f32() * 5.0, rng.below(60) as u64))
+                .collect();
+            let vecs: Vec<Vec<f32>> = (0..k).map(|_| rand_vec(&mut rng, dim, 0.5)).collect();
+            let scale = staleness_scale(&entries, decay);
+            assert!(scale.is_finite(), "case {case} round {round}");
+            let delta = if scale > 0.0 {
+                let refs: Vec<(f32, &[f32])> = entries
+                    .iter()
+                    .zip(&vecs)
+                    .map(|(&(n, s), v)| (staleness_weight(n, decay, s), v.as_slice()))
+                    .collect();
+                let mut d = params::weighted_mean(&refs);
+                for v in d.iter_mut() {
+                    *v = (*v as f64 * scale) as f32;
+                }
+                d
+            } else {
+                vec![0.0f32; dim]
+            };
+            params::axpy(&mut theta, 1.0, &delta);
+            assert!(
+                theta.iter().all(|v| v.is_finite()),
+                "case {case} round {round}: θ went non-finite (decay {decay})"
+            );
+        }
+    }
+}
+
 // ------------------------------------------------------ dataset invariants
 
 #[test]

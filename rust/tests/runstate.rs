@@ -23,7 +23,8 @@ use fedavg::metrics::LearningCurve;
 use fedavg::params;
 use fedavg::privacy::{clip, GaussianMechanism};
 use fedavg::runstate::{
-    checkpoint_dir, AggState, CurveState, FleetState, ResumeFrom, RunMeta, Snapshot, TierState,
+    checkpoint_dir, AggState, AsyncState, BufferedDelta, CurveState, FleetState, ResumeFrom,
+    RunMeta, Snapshot, TierState,
 };
 use fedavg::telemetry::{RoundRecord, RunWriter};
 
@@ -225,6 +226,8 @@ impl Harness {
                 deadline_misses: self.misses_since_eval,
                 agg: &self.meta.agg,
                 server_state: &server_state,
+                staleness_mean: 0.0,
+                buffer_fill: 0,
             })
             .unwrap();
             self.dropped_since_eval = 0;
@@ -257,6 +260,7 @@ impl Harness {
             },
             dp: self.mech.as_ref().map(|m| m.state_save()),
             tier: None,
+            async_state: None,
         }
     }
 
@@ -373,6 +377,23 @@ fn rich_snapshot(tag: &str, round: u64) -> Snapshot {
         down_bytes: 3 * 1228,
         frames: 7,
         seconds: 0.875,
+    });
+    let entry = |r: u64, slot: u64, client: u64, basis: u64, due_s: f64| BufferedDelta {
+        dispatch_round: r,
+        slot,
+        client,
+        basis,
+        weight: 1.0 + slot as f32,
+        due_s,
+        delta: (0..DIM).map(|i| (i as f32 * 0.02 + slot as f32).cos()).collect(),
+    };
+    snap.async_state = Some(AsyncState {
+        applies_done: 5,
+        late_applied: 2,
+        stale_sum_since_eval: 3,
+        deltas_since_eval: 9,
+        pending: vec![entry(round, 0, 4, 5, 0.0), entry(round, 2, 9, 4, 0.0)],
+        late: vec![entry(round.saturating_sub(1), 3, 7, 0, 123.5)],
     });
     std::fs::remove_dir_all(root).ok();
     snap

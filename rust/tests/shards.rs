@@ -188,6 +188,8 @@ impl Harness {
                 deadline_misses: 0,
                 agg: &self.meta.agg,
                 server_state: &server_state,
+                staleness_mean: 0.0,
+                buffer_fill: 0,
             })
             .unwrap();
         }
@@ -228,6 +230,7 @@ impl Harness {
             },
             dp: None,
             tier: (self.shards > 0).then_some(self.tier),
+            async_state: None,
         }
     }
 
