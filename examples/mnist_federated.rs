@@ -15,6 +15,7 @@ use fedavg::federated::{self, ServerOptions};
 use fedavg::runtime::Engine;
 use fedavg::util::args::Args;
 
+#[allow(clippy::disallowed_methods)] // Instant::now: demo prints its own wall time
 fn main() -> fedavg::Result<()> {
     let args = Args::from_env()?;
     args.check_known(&["rounds", "scale", "seed", "eval-cap", "lr", "eval-every"])?;

@@ -11,6 +11,7 @@ use fedavg::runtime::Engine;
 use fedavg::util::bench::Bencher;
 use std::time::Duration;
 
+#[allow(clippy::disallowed_methods)] // Instant::now: this bench measures wall time by design
 fn main() {
     let dir = Engine::default_dir();
     if !dir.join("manifest.json").exists() {

@@ -1,0 +1,87 @@
+//! Where each rule does and does not apply.
+//!
+//! Two scoping mechanisms, both centralized here so the policy is one
+//! diff away from review:
+//!
+//! * **module allowlists** — rules that ban a construct everywhere
+//!   *except* designated modules (wall-clock in observation code,
+//!   float folds in the `params` kernels, ad-hoc RNG in `data::rng`);
+//! * **scope lists** — rules that apply *only* to designated files
+//!   (the panic-surface audit of untrusted decode/load paths).
+//!
+//! Per-site exceptions use the `// lint:allow(<rule>): <justification>`
+//! escape hatch (see [`crate::analysis::scanner`]); this module is the
+//! structural policy that should rarely change.
+
+/// Modules allowed to read the wall clock. Everything here is an
+/// observation surface whose output never feeds telemetry rows, grid
+/// manifests, or training state (DESIGN.md §10/§13):
+/// `util::bench` (bench timing), `obs::*` (tracer, bench snapshots),
+/// `telemetry` (elapsed-seconds progress line on stdout only), and
+/// `runtime` (compile/execute stats, surfaced via `fedavg info`).
+pub const WALL_CLOCK_MODULES: &[&str] = &["util::bench", "obs", "telemetry", "runtime"];
+
+/// The only module allowed to define or import RNG primitives. All
+/// randomness must flow through `data::rng`'s counter-based seeded
+/// generators so every draw is a pure function of (seed, position)
+/// (DESIGN.md §5).
+pub const RNG_MODULES: &[&str] = &["data::rng"];
+
+/// Modules allowed to run unordered float reductions. `params` owns
+/// the canonical accumulation order that the bit-identity guarantees
+/// of DESIGN.md §7/§11/§12 are defined against; a float `.sum()`
+/// anywhere else risks quietly introducing a second, different order.
+pub const FLOAT_FOLD_MODULES: &[&str] = &["params"];
+
+/// Files whose non-test code must be panic-free: they decode untrusted
+/// or on-disk bytes (wire frames, snapshots, config text) and must
+/// reject malformed input with a typed error, never a panic
+/// (DESIGN.md §6/§8).
+pub const PANIC_SURFACE_FILES: &[&str] = &[
+    "comms/wire.rs",
+    "runstate/snapshot.rs",
+    "config/mod.rs",
+    "util/bytes.rs",
+];
+
+/// Identifiers conventionally bound to untrusted/raw buffers in the
+/// panic-surface files; direct indexing on them is audited (a checked
+/// `get` or a `ByteReader` is required instead).
+pub const UNTRUSTED_BUFFER_NAMES: &[&str] = &["b", "buf", "bytes", "payload", "raw", "body"];
+
+/// `module` matches an allowlist entry if it equals the entry or sits
+/// beneath it (`obs` covers `obs::trace`).
+pub fn module_matches(module: &str, list: &[&str]) -> bool {
+    list.iter()
+        .any(|p| module == *p || module.starts_with(&format!("{p}::")))
+}
+
+/// `path` (repo-relative, `/`-separated) matches a scope-list entry by
+/// suffix (`rust/src/comms/wire.rs` matches `comms/wire.rs`).
+pub fn path_in_scope(path: &str, list: &[&str]) -> bool {
+    list.iter()
+        .any(|p| path == *p || path.ends_with(&format!("/{p}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_prefix_matching() {
+        assert!(module_matches("obs", WALL_CLOCK_MODULES));
+        assert!(module_matches("obs::trace", WALL_CLOCK_MODULES));
+        assert!(module_matches("util::bench", WALL_CLOCK_MODULES));
+        assert!(!module_matches("util::bytes", WALL_CLOCK_MODULES));
+        assert!(!module_matches("observer", WALL_CLOCK_MODULES));
+        assert!(!module_matches("coordinator", WALL_CLOCK_MODULES));
+    }
+
+    #[test]
+    fn path_suffix_matching() {
+        assert!(path_in_scope("rust/src/comms/wire.rs", PANIC_SURFACE_FILES));
+        assert!(path_in_scope("comms/wire.rs", PANIC_SURFACE_FILES));
+        assert!(!path_in_scope("rust/src/comms/transport.rs", PANIC_SURFACE_FILES));
+        assert!(!path_in_scope("rust/src/fire.rs", PANIC_SURFACE_FILES));
+    }
+}

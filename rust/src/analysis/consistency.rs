@@ -1,0 +1,459 @@
+//! Cross-file consistency rules — the checks that parse more than one
+//! file and catch the drift a single-file linter cannot:
+//!
+//! * `knob-fingerprint` — every CLI knob `main.rs` accepts is either
+//!   present in the `RunMeta` resume fingerprint (`federated/server.rs`)
+//!   or explicitly exempted here with a reason. A trajectory-changing
+//!   flag that is missing from the fingerprint lets a resumed run
+//!   silently continue under different physics (DESIGN.md §8).
+//! * `snapshot-tags` — every section tag the snapshot writer emits has
+//!   a reader dispatch arm, and no declared tag is dead. An unread tag
+//!   is state that a resume silently drops.
+//! * `curve-schema` — every `curve.csv` column telemetry writes is
+//!   documented in README's schema table.
+//!
+//! Each function takes source text as parameters (not paths) so the
+//! fixture tests can exercise drift scenarios in-memory.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::report::Finding;
+use crate::analysis::scanner::Source;
+
+/// How a CLI knob relates to the `RunMeta` resume fingerprint.
+enum Coverage {
+    /// Fingerprinted: the token must appear in the `let meta = RunMeta
+    /// { … };` construction in `federated/server.rs`.
+    Fp(&'static str),
+    /// Deliberately not fingerprinted; the reason is part of the table
+    /// so review sees the argument, not just the exemption.
+    Exempt(&'static str),
+}
+use Coverage::{Exempt, Fp};
+
+/// The knob classification table. Every flag accepted by a
+/// `check_known(&[…])` list in `main.rs` must have a row; rows for
+/// flags that no longer exist are themselves findings (stale policy).
+const KNOBS: &[(&str, Coverage)] = &[
+    // --- Algorithm 1 knobs: all folded into the config label ---
+    ("model", Fp("cfg.label()")),
+    ("c", Fp("cfg.label()")),
+    ("e", Fp("cfg.label()")),
+    ("b", Fp("cfg.label()")),
+    ("lr", Fp("cfg.label()")),
+    ("lr-decay", Fp("lr_decay")),
+    ("eval-every", Fp("eval_every")),
+    ("seed", Fp("cfg.seed")),
+    // --- dataset shape ---
+    ("partition", Fp("data_fp")),
+    ("scale", Fp("data_fp")),
+    ("eval-cap", Fp("eval_cap")),
+    ("track-train-loss", Fp("track_train_loss")),
+    // --- server-side physics ---
+    ("availability", Fp("opts.availability")),
+    ("dp-clip", Fp("opts.dp")),
+    ("dp-sigma", Fp("opts.dp")),
+    ("secure-agg", Fp("secure_agg")),
+    ("agg", Fp("agg_label")),
+    ("server-lr", Fp("agg_label")),
+    ("server-momentum", Fp("agg_label")),
+    ("prox-mu", Fp("prox_mu")),
+    // --- transport ---
+    ("codec", Fp("codec_label")),
+    ("down-codec", Fp("codec_label")),
+    ("topk", Fp("codec_label")),
+    ("quant-bits", Fp("codec_label")),
+    // --- fleet shape ---
+    ("fleet-profile", Fp("fleet.profile")),
+    ("overselect", Fp("fleet.overselect")),
+    ("deadline", Fp("fleet.deadline_s")),
+    ("step-cost", Fp("fleet.step_cost_s")),
+    ("shards", Fp("fleet.shards")),
+    // --- async round modes ---
+    ("async-buffer", Fp("async_buffer")),
+    ("staleness-decay", Fp("staleness_decay")),
+    ("late-policy", Fp("late_policy")),
+    // --- exempt: cannot change the trajectory prefix ---
+    (
+        "config",
+        Exempt("a file path; the typed knobs it expands into are classified individually"),
+    ),
+    (
+        "rounds",
+        Exempt("stop condition only — resuming with more rounds is a legitimate continuation"),
+    ),
+    (
+        "target",
+        Exempt("early-stop condition only; the trajectory prefix is unchanged"),
+    ),
+    (
+        "workers",
+        Exempt("bit-identical across worker counts by design (DESIGN.md §4); resuming at a different parallelism is legitimate"),
+    ),
+    (
+        "checkpoint-every",
+        Exempt("snapshot cadence; resume is byte-identical regardless of where the checkpoint fell (DESIGN.md §8)"),
+    ),
+    (
+        "checkpoint-keep",
+        Exempt("retention budget for old snapshots; no training effect"),
+    ),
+    // --- exempt: run lifecycle / naming / observation ---
+    ("out", Exempt("run-dir location")),
+    ("name", Exempt("run-dir naming")),
+    ("overwrite", Exempt("run-dir lifecycle control")),
+    ("resume", Exempt("the resume request itself")),
+    (
+        "trace",
+        Exempt("observation only; traced runs are byte-identical (DESIGN.md §10)"),
+    ),
+    // --- exempt: training-free sim path (no snapshots; fast-forward) ---
+    (
+        "clients",
+        Exempt("sim-only population size; trained runs derive K from the dataset and fingerprint it via `clients`"),
+    ),
+    ("sim-only", Exempt("mode selector for the training-free sim")),
+    (
+        "start-round",
+        Exempt("sim fast-forward positioning; the sim path writes no snapshots"),
+    ),
+    ("model-bytes", Exempt("sim-only wire sizing; the sim path writes no snapshots")),
+    ("steps", Exempt("sim-only compute sizing; the sim path writes no snapshots")),
+    (
+        "abort-p",
+        Exempt("sim-only seeded fault stream; the sim path writes no snapshots"),
+    ),
+    (
+        "duplicate-p",
+        Exempt("sim-only seeded fault stream; the sim path writes no snapshots"),
+    ),
+    // --- exempt: non-run subcommand flags (bench / lint harnesses) ---
+    ("areas", Exempt("bench harness selection; no training state")),
+    ("check", Exempt("bench smoke mode; no training state")),
+    ("quick", Exempt("bench profile; no training state")),
+    ("json", Exempt("lint output format")),
+    ("fix-allow", Exempt("lint rewrite mode")),
+];
+
+/// Rule `knob-fingerprint`. `main_src` is scanned for `check_known`
+/// flag lists; `server_src` for the `let meta = RunMeta { … };`
+/// construction. See [`KNOBS`].
+pub fn check_knob_fingerprint(main_path: &str, main_src: &str, server_src: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let knobs = collect_check_known(main_src);
+    let region = runmeta_region(server_src);
+    if knobs.is_empty() {
+        out.push(Finding::new(
+            main_path,
+            1,
+            "knob-fingerprint",
+            "no check_known(&[…]) flag lists found — the knob inventory is empty, \
+             so the fingerprint audit cannot run",
+        ));
+        return out;
+    }
+    let Some(region) = region else {
+        out.push(Finding::new(
+            main_path,
+            1,
+            "knob-fingerprint",
+            "no `let meta = RunMeta {` construction found in federated/server.rs — \
+             the resume fingerprint audit cannot run",
+        ));
+        return out;
+    };
+    let table: BTreeMap<&str, &Coverage> = KNOBS.iter().map(|(k, c)| (*k, c)).collect();
+    for (knob, line) in &knobs {
+        match table.get(knob.as_str()) {
+            None => out.push(Finding::new(
+                main_path,
+                *line,
+                "knob-fingerprint",
+                format!(
+                    "--{knob} is not classified in the fingerprint table \
+                     (analysis::consistency::KNOBS) — add it as fingerprinted or \
+                     exempt-with-reason"
+                ),
+            )),
+            Some(Fp(token)) => {
+                if !region.contains(token) {
+                    out.push(Finding::new(
+                        main_path,
+                        *line,
+                        "knob-fingerprint",
+                        format!(
+                            "--{knob} is classified as fingerprinted via `{token}`, but \
+                             that token does not appear in the RunMeta construction — \
+                             a resume under a different --{knob} would not be refused"
+                        ),
+                    ));
+                }
+            }
+            Some(Exempt(_)) => {}
+        }
+    }
+    for (knob, _) in KNOBS {
+        if !knobs.contains_key(*knob) {
+            out.push(Finding::new(
+                main_path,
+                1,
+                "knob-fingerprint",
+                format!(
+                    "stale fingerprint-table row: --{knob} is classified but no \
+                     check_known list accepts it"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// All quoted flag names inside `check_known(&[ … ])` calls, with the
+/// 1-based line each first appears on. Parses raw text (string literal
+/// contents are the payload here).
+fn collect_check_known(src: &str) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    let mut in_list = false;
+    for (idx, line) in src.lines().enumerate() {
+        if !in_list && line.contains("check_known") {
+            in_list = true;
+        }
+        if in_list {
+            for name in quoted_strings(line) {
+                out.entry(name).or_insert(idx + 1);
+            }
+            if line.contains("])") {
+                in_list = false;
+            }
+        }
+    }
+    out
+}
+
+/// The `let meta = RunMeta { … };` block (raw text, format strings
+/// included — the harness format string is where most knobs live).
+fn runmeta_region(src: &str) -> Option<String> {
+    let lines: Vec<&str> = src.lines().collect();
+    let start = lines
+        .iter()
+        .position(|l| l.contains("let meta = RunMeta {"))?;
+    let mut region = String::new();
+    for line in &lines[start..] {
+        region.push_str(line);
+        region.push('\n');
+        if line.trim() == "};" {
+            return Some(region);
+        }
+    }
+    None
+}
+
+/// Contents of every `"…"` literal on `line` (no escape handling —
+/// flag names are plain idents).
+fn quoted_strings(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = line;
+    while let Some(a) = rest.find('"') {
+        let Some(b) = rest[a + 1..].find('"') else {
+            break;
+        };
+        out.push(rest[a + 1..a + 1 + b].to_string());
+        rest = &rest[a + b + 2..];
+    }
+    out
+}
+
+/// Rule `snapshot-tags`. Parses `runstate/snapshot.rs` (or a fixture):
+/// `const SEC_X: u16 = n;` declarations, `section(…, SEC_X, …)` writer
+/// calls, and `SEC_X =>` reader dispatch arms. Every written tag needs
+/// a reader arm; every declared tag must be both written and read.
+pub fn check_snapshot_tags(path: &str, src_text: &str) -> Vec<Finding> {
+    let src = Source::scan(path, src_text);
+    let mut declared: BTreeMap<String, usize> = BTreeMap::new();
+    let mut written: BTreeMap<String, usize> = BTreeMap::new();
+    let mut read: BTreeMap<String, usize> = BTreeMap::new();
+    for (i, line) in src.lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        let code = line.code.trim();
+        let tags = sec_idents(code);
+        if code.starts_with("const SEC_") {
+            for t in &tags {
+                declared.entry(t.clone()).or_insert(i + 1);
+            }
+        } else if code.contains("section(") && !code.contains("fn section") {
+            for t in &tags {
+                written.entry(t.clone()).or_insert(i + 1);
+            }
+        } else if code.starts_with("SEC_") && code.contains("=>") {
+            for t in &tags {
+                read.entry(t.clone()).or_insert(i + 1);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (tag, line) in &written {
+        if !read.contains_key(tag) {
+            out.push(Finding::new(
+                path,
+                *line,
+                "snapshot-tags",
+                format!(
+                    "section {tag} is written but has no reader dispatch arm — \
+                     a resume would silently drop this state"
+                ),
+            ));
+        }
+    }
+    for (tag, line) in &declared {
+        if !written.contains_key(tag) || !read.contains_key(tag) {
+            out.push(Finding::new(
+                path,
+                *line,
+                "snapshot-tags",
+                format!("section {tag} is declared but not both written and read — dead tag"),
+            ));
+        }
+    }
+    out
+}
+
+/// `SEC_*` identifiers on a code line.
+fn sec_idents(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = code;
+    while let Some(pos) = rest.find("SEC_") {
+        let tail = &rest[pos..];
+        let name: String = tail
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        out.push(name.clone());
+        rest = &rest[pos + name.len().max(4)..];
+    }
+    out
+}
+
+/// Rule `curve-schema`. Extracts the `CURVE_HEADER` literal from
+/// `telemetry/mod.rs` (or a fixture) and requires every column to
+/// appear backtick-quoted in README's schema table.
+pub fn check_curve_schema(telemetry_path: &str, telemetry_src: &str, readme: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some((line, header)) = curve_header(telemetry_src) else {
+        out.push(Finding::new(
+            telemetry_path,
+            1,
+            "curve-schema",
+            "no `const CURVE_HEADER` literal found — the schema audit cannot run",
+        ));
+        return out;
+    };
+    for col in header.split(',') {
+        if !readme.contains(&format!("`{col}`")) {
+            out.push(Finding::new(
+                telemetry_path,
+                line,
+                "curve-schema",
+                format!(
+                    "curve.csv column `{col}` is not documented in README's \
+                     telemetry schema table"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// `(line, literal)` of the `const CURVE_HEADER … = "…";` declaration.
+fn curve_header(src: &str) -> Option<(usize, String)> {
+    for (idx, line) in src.lines().enumerate() {
+        if line.contains("const CURVE_HEADER") {
+            let lit = quoted_strings(line);
+            if let Some(h) = lit.first() {
+                return Some((idx + 1, h.clone()));
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SERVER_OK: &str = "\
+        let meta = RunMeta {\n\
+            label: cfg.label(),\n\
+            agg: agg_label.clone(),\n\
+            codec: codec_label.clone(),\n\
+            seed: cfg.seed,\n\
+            harness: format!(\"x\", data_fp),\n\
+        };\n";
+
+    #[test]
+    fn knob_missing_from_table_is_flagged() {
+        let main = "args.check_known(&[\"model\", \"brand-new-flag\"])?;\n";
+        let f = check_knob_fingerprint("main.rs", main, SERVER_OK);
+        assert!(
+            f.iter()
+                .any(|f| f.message.contains("--brand-new-flag") && f.message.contains("not classified")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn fingerprinted_knob_missing_from_runmeta_is_flagged() {
+        let main = "args.check_known(&[\"model\", \"partition\"])?;\n";
+        let server_without_data_fp = "let meta = RunMeta {\n    label: cfg.label(),\n};\n";
+        let f = check_knob_fingerprint("main.rs", main, server_without_data_fp);
+        assert!(
+            f.iter().any(|f| f.message.contains("--partition") && f.message.contains("data_fp")),
+            "{f:?}"
+        );
+        let ok = check_knob_fingerprint("main.rs", main, SERVER_OK);
+        assert!(
+            !ok.iter().any(|f| f.message.contains("--partition")),
+            "{ok:?}"
+        );
+    }
+
+    #[test]
+    fn stale_table_rows_reported_against_tiny_list() {
+        let main = "args.check_known(&[\"model\"])?;\n";
+        let f = check_knob_fingerprint("main.rs", main, SERVER_OK);
+        assert!(f.iter().any(|f| f.message.contains("stale fingerprint-table row")));
+    }
+
+    #[test]
+    fn snapshot_written_but_unread_tag_is_flagged() {
+        let good = "\
+            const SEC_META: u16 = 1;\n\
+            fn section(out: &mut W, id: u16, body: W) {}\n\
+            Self::section(&mut out, SEC_META, w);\n\
+            SEC_META => { x() }\n";
+        assert!(check_snapshot_tags("snap.rs", good).is_empty());
+        let unread = "\
+            const SEC_META: u16 = 1;\n\
+            Self::section(&mut out, SEC_META, w);\n";
+        let f = check_snapshot_tags("snap.rs", unread);
+        assert!(
+            f.iter().any(|f| f.message.contains("no reader dispatch arm")),
+            "{f:?}"
+        );
+        let dead = "const SEC_GHOST: u16 = 9;\n";
+        let f = check_snapshot_tags("snap.rs", dead);
+        assert!(f.iter().any(|f| f.message.contains("dead tag")), "{f:?}");
+    }
+
+    #[test]
+    fn undocumented_curve_column_is_flagged() {
+        let telem = "const CURVE_HEADER: &str = \"round,lr,brand_new_col\";\n";
+        let readme = "| `round` | x |\n| `lr` | y |\n";
+        let f = check_curve_schema("telemetry/mod.rs", telem, readme);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("brand_new_col"));
+        let readme_full = "| `round` | x |\n| `lr` | y |\n| `brand_new_col` | z |\n";
+        assert!(check_curve_schema("telemetry/mod.rs", telem, readme_full).is_empty());
+    }
+}

@@ -1,0 +1,108 @@
+//! Lint findings and their renderings.
+//!
+//! One finding = one `file:line rule message` row. The text rendering
+//! is the CLI/CI surface; `--json` emits the same rows as a stable
+//! machine-readable array (uploaded as a CI artifact).
+
+use crate::util::json::escape;
+
+/// One lint violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Repo-relative path, `/`-separated.
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Rule id (`wall-clock`, `hash-order`, … `bad-allow`).
+    pub rule: String,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(path: &str, line: usize, rule: &str, message: impl Into<String>) -> Self {
+        Finding {
+            path: path.to_string(),
+            line,
+            rule: rule.to_string(),
+            message: message.into(),
+        }
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{} {} {}",
+            self.path, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Deterministic report order: path, then line, then rule.
+pub fn sort(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule.as_str()).cmp(&(b.path.as_str(), b.line, b.rule.as_str()))
+    });
+}
+
+/// The human/CI rendering: one `file:line rule message` row per finding.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&f.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Stable JSON array of findings (the `--json` CI artifact).
+pub fn render_json(findings: &[Finding]) -> String {
+    let mut out = String::from("[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"path\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+            escape(&f.path),
+            f.line,
+            escape(&f.rule),
+            escape(&f.message)
+        ));
+    }
+    out.push_str(if findings.is_empty() { "]\n" } else { "\n]\n" });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_row_shape() {
+        let f = Finding::new("rust/src/a.rs", 7, "wall-clock", "Instant::now outside obs");
+        assert_eq!(
+            f.to_string(),
+            "rust/src/a.rs:7 wall-clock Instant::now outside obs"
+        );
+    }
+
+    #[test]
+    fn sorted_and_json_parse_back() {
+        let mut fs = vec![
+            Finding::new("b.rs", 2, "hash-order", "x"),
+            Finding::new("a.rs", 9, "wall-clock", "said \"now\""),
+            Finding::new("a.rs", 1, "float-fold", "y"),
+        ];
+        sort(&mut fs);
+        assert_eq!(fs[0].path, "a.rs");
+        assert_eq!(fs[0].line, 1);
+        let json = render_json(&fs);
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].get("message").unwrap().as_str().unwrap(), "said \"now\"");
+        assert_eq!(crate::util::json::Json::parse(&render_json(&[])).unwrap().as_arr().unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,411 @@
+//! The single-file rule families. Each takes a scanned [`Source`] and
+//! returns raw findings; escape-hatch filtering happens centrally in
+//! [`crate::analysis::lint_source`]. Test regions are always exempt —
+//! the rules police shipping code, not assertions about it.
+//!
+//! Every rule is a token heuristic, not a type check: it runs on the
+//! stripped token stream the scanner produces, errs toward flagging
+//! (the `lint:allow` hatch is the pressure valve for deliberate
+//! exceptions), and its exact matching policy is documented inline and
+//! mirrored by the fixture tests in `rust/tests/lint.rs`.
+
+use std::collections::BTreeSet;
+
+use crate::analysis::allowlist::{
+    module_matches, path_in_scope, FLOAT_FOLD_MODULES, PANIC_SURFACE_FILES, RNG_MODULES,
+    UNTRUSTED_BUFFER_NAMES, WALL_CLOCK_MODULES,
+};
+use crate::analysis::report::Finding;
+use crate::analysis::scanner::Source;
+
+/// `tok` occurs in `code` with no identifier character immediately
+/// before it (so `StdRng` does not match `MyStdRng`, `b[` does not
+/// match `verb[`).
+fn has_token(code: &str, tok: &str) -> bool {
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(tok) {
+        let at = from + rel;
+        let prev = code[..at].chars().next_back();
+        if !prev.is_some_and(|c| c.is_alphanumeric() || c == '_') {
+            return true;
+        }
+        from = at + tok.len();
+    }
+    false
+}
+
+/// `name` occurs in `code` as a standalone identifier (non-identifier
+/// characters, or the text boundary, on both sides).
+fn has_ident(code: &str, name: &str) -> bool {
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(name) {
+        let at = from + rel;
+        let prev_ok = !code[..at]
+            .chars()
+            .next_back()
+            .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let next_ok = !code[at + name.len()..]
+            .chars()
+            .next()
+            .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if prev_ok && next_ok {
+            return true;
+        }
+        from = at + name.len();
+    }
+    false
+}
+
+/// Rule `wall-clock`: `Instant::now` / `SystemTime::now` only in the
+/// observation modules ([`WALL_CLOCK_MODULES`]). Anywhere else, a
+/// wall-clock read is a nondeterminism seed — sim time must come from
+/// the virtual clock, telemetry time from `sim_seconds`.
+pub fn wall_clock(src: &Source) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if module_matches(&src.module(), WALL_CLOCK_MODULES) {
+        return out;
+    }
+    for (i, line) in src.lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        for call in ["Instant::now", "SystemTime::now"] {
+            if line.code.contains(call) {
+                out.push(Finding::new(
+                    &src.path,
+                    i + 1,
+                    "wall-clock",
+                    format!(
+                        "{call} outside the observation modules ({}) — deterministic \
+                         code must use the virtual clock",
+                        WALL_CLOCK_MODULES.join(", ")
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Iteration methods whose order a hash map does not define.
+const ITER_TOKENS: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+    ".retain(",
+];
+
+/// Rule `hash-order`: no iteration over `HashMap`/`HashSet` anywhere in
+/// `src/` — construction and keyed lookup are fine; anything that
+/// visits entries in hash order (iter/keys/values/drain/retain/for)
+/// must use a `BTreeMap`/`BTreeSet` or a sorted drain instead.
+///
+/// Heuristic: bindings and struct fields declared on a line mentioning
+/// `HashMap`/`HashSet` are tracked by name for the rest of the file;
+/// iteration tokens on a tracked name (or on a line that itself
+/// mentions the types) are flagged.
+pub fn hash_order(src: &Source) -> Vec<Finding> {
+    let mut names: BTreeSet<String> = BTreeSet::new();
+    for line in &src.lines {
+        if line.is_test || !(line.code.contains("HashMap") || line.code.contains("HashSet")) {
+            continue;
+        }
+        if let Some(name) = binding_name(&line.code) {
+            names.insert(name);
+        }
+    }
+    let mut out = Vec::new();
+    for (i, line) in src.lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        let iterated = ITER_TOKENS.iter().any(|t| line.code.contains(t));
+        let direct = (line.code.contains("HashMap") || line.code.contains("HashSet")) && iterated;
+        // `for … in <expr mentioning a tracked name>` — the loop itself
+        // is the iteration, no method token needed
+        let for_tail = line
+            .code
+            .contains("for ")
+            .then(|| line.code.find(" in ").map(|p| &line.code[p + 4..]))
+            .flatten();
+        let via_name = names.iter().any(|n| {
+            (iterated && has_token(&line.code, &format!("{n}.")))
+                || for_tail.is_some_and(|tail| has_ident(tail, n))
+        });
+        if direct || via_name {
+            out.push(Finding::new(
+                &src.path,
+                i + 1,
+                "hash-order",
+                "iteration over a HashMap/HashSet visits entries in hash order — \
+                 use BTreeMap/BTreeSet or collect-and-sort before iterating",
+            ));
+        }
+    }
+    out
+}
+
+/// `let [mut] NAME` or a struct-field `NAME:` on a line that mentions a
+/// hash type.
+fn binding_name(code: &str) -> Option<String> {
+    let ident = |s: &str| -> Option<String> {
+        let name: String = s
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        (!name.is_empty()).then_some(name)
+    };
+    if let Some(pos) = code.find("let ") {
+        let rest = code[pos + 4..].trim_start();
+        let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+        return ident(rest);
+    }
+    // field form: `[pub] name: …HashMap<…>` (types after the colon)
+    let t = code.trim_start();
+    let t = t.strip_prefix("pub(crate) ").unwrap_or(t);
+    let t = t.strip_prefix("pub ").unwrap_or(t);
+    let name = ident(t)?;
+    let after = t[name.len()..].trim_start();
+    (after.starts_with(':') && !after.starts_with("::")).then_some(name)
+}
+
+/// Rule `seeded-rng`: every random draw must be a pure function of
+/// (seed, position) via `data::rng`'s counter-based generators. Entropy
+/// sources and the `rand` crate family are banned everywhere else.
+pub fn seeded_rng(src: &Source) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if module_matches(&src.module(), RNG_MODULES) {
+        return out;
+    }
+    const BANNED: &[&str] = &[
+        "rand::",
+        "thread_rng",
+        "StdRng",
+        "SmallRng",
+        "RandomState",
+        "from_entropy",
+        "OsRng",
+        "getrandom",
+    ];
+    for (i, line) in src.lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        for tok in BANNED {
+            if has_token(&line.code, tok) {
+                out.push(Finding::new(
+                    &src.path,
+                    i + 1,
+                    "seeded-rng",
+                    format!(
+                        "`{tok}` outside data::rng — randomness must come from the \
+                         seeded counter-based generators"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Rule `panic-surface`: the untrusted decode/load paths
+/// ([`PANIC_SURFACE_FILES`]) must reject malformed bytes with a typed
+/// error — `unwrap`/`expect`/`panic!` and raw indexing on buffer-named
+/// slices are flagged.
+pub fn panic_surface(src: &Source) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !path_in_scope(&src.path, PANIC_SURFACE_FILES) {
+        return out;
+    }
+    const PANICS: &[&str] = &[
+        ".unwrap()",
+        ".expect(",
+        "panic!(",
+        "unreachable!(",
+        "todo!(",
+        "unimplemented!(",
+    ];
+    for (i, line) in src.lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        for tok in PANICS {
+            if line.code.contains(tok) {
+                out.push(Finding::new(
+                    &src.path,
+                    i + 1,
+                    "panic-surface",
+                    format!(
+                        "`{tok}` in a decode/load path — untrusted bytes must fail \
+                         with a typed error, never a panic",
+                    ),
+                ));
+            }
+        }
+        for name in UNTRUSTED_BUFFER_NAMES {
+            if has_token(&line.code, &format!("{name}[")) {
+                out.push(Finding::new(
+                    &src.path,
+                    i + 1,
+                    "panic-surface",
+                    format!(
+                        "raw indexing on untrusted buffer `{name}` — a truncated input \
+                         panics here; use a checked `get` or a ByteReader",
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Rule `float-fold`: unordered float reductions (`.sum()`,
+/// `.product()`, accumulator folds over `f32`/`f64`) only inside the
+/// `params` kernels, which own the canonical accumulation order.
+/// Min/max folds are exempt (order-independent). The float-typedness
+/// check looks at a ±2-line window around the reduction, so turbofish,
+/// `let x: f64 =`, and `as f64` spellings are all caught.
+pub fn float_fold(src: &Source) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if module_matches(&src.module(), FLOAT_FOLD_MODULES) {
+        return out;
+    }
+    for (i, line) in src.lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        let sum = ["\u{2e}sum(", ".sum::<", ".product(", ".product::<"]
+            .iter()
+            .any(|t| line.code.contains(t));
+        let fold = line.code.contains(".fold(");
+        if !sum && !fold {
+            continue;
+        }
+        let lo = i.saturating_sub(2);
+        let hi = (i + 2).min(src.lines.len());
+        let ctx: String = src.lines[lo..hi]
+            .iter()
+            .map(|l| l.code.as_str())
+            .collect::<Vec<_>>()
+            .join("\n");
+        let floaty = ctx.contains("f32") || ctx.contains("f64");
+        if !floaty {
+            continue;
+        }
+        if !sum && ["::min", "::max", ".min(", ".max("].iter().any(|t| ctx.contains(t)) {
+            continue; // min/max folds are order-independent
+        }
+        out.push(Finding::new(
+            &src.path,
+            i + 1,
+            "float-fold",
+            "unordered float reduction outside the params kernels — reduction \
+             order is part of the bit-identity contract; route through params \
+             or document why order cannot matter",
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(path: &str, text: &str) -> Source {
+        Source::scan(path, text)
+    }
+
+    #[test]
+    fn wall_clock_fires_outside_obs_only() {
+        let bad = scan("rust/src/coordinator/exec.rs", "let t = Instant::now();\n");
+        assert_eq!(wall_clock(&bad).len(), 1);
+        let ok = scan("rust/src/obs/trace.rs", "let t = Instant::now();\n");
+        assert!(wall_clock(&ok).is_empty());
+        let test_only = scan(
+            "rust/src/coordinator/exec.rs",
+            "#[cfg(test)]\nmod tests {\n fn t() { let t = Instant::now(); }\n}\n",
+        );
+        assert!(wall_clock(&test_only).is_empty());
+    }
+
+    #[test]
+    fn hash_order_flags_iteration_not_lookup() {
+        let src = scan(
+            "rust/src/x.rs",
+            "let mut m: HashMap<String, u32> = HashMap::new();\n\
+             m.insert(k, v);\n\
+             let v = m.get(&k);\n\
+             for (k, v) in m.iter() {\n\
+             for k in &keys {\n\
+             for k in &m {\n",
+        );
+        let f = hash_order(&src);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert_eq!(f[0].line, 4);
+        assert_eq!(f[1].line, 6);
+    }
+
+    #[test]
+    fn hash_order_tracks_struct_fields() {
+        let src = scan(
+            "rust/src/x.rs",
+            "struct S {\n    cache: RefCell<HashMap<String, u32>>,\n}\n\
+             fn f(s: &S) { for x in s.cache.borrow().keys() {} }\n",
+        );
+        assert_eq!(hash_order(&src).len(), 1);
+    }
+
+    #[test]
+    fn seeded_rng_banned_outside_data_rng() {
+        let bad = scan("rust/src/sweep/mod.rs", "let r = thread_rng();\n");
+        assert_eq!(seeded_rng(&bad).len(), 1);
+        let home = scan("rust/src/data/rng.rs", "use rand::thread_rng;\n");
+        assert!(seeded_rng(&home).is_empty());
+    }
+
+    #[test]
+    fn panic_surface_scoped_to_decode_files() {
+        let bad = scan(
+            "rust/src/comms/wire.rs",
+            "let x = hdr.len.unwrap();\nlet y = buf[0];\n",
+        );
+        assert_eq!(panic_surface(&bad).len(), 2);
+        let elsewhere = scan("rust/src/sweep/mod.rs", "let x = v.unwrap();\n");
+        assert!(panic_surface(&elsewhere).is_empty());
+        let ok = scan(
+            "rust/src/comms/wire.rs",
+            "let x = buf.get(0).ok_or_else(err)?;\nlet s = rebuf[0];\n",
+        );
+        assert!(panic_surface(&ok).is_empty());
+    }
+
+    #[test]
+    fn float_fold_catches_all_spellings_outside_params() {
+        let bad = scan(
+            "rust/src/federated/x.rs",
+            "let a = xs.iter().sum::<f64>();\n\
+             let b: f32 = ys.iter().sum();\n\
+             let c = zs.iter().map(|&v| v as f64)\n    .sum();\n",
+        );
+        assert_eq!(float_fold(&bad).len(), 3);
+        let in_params = scan("rust/src/params/mod.rs", "let a = xs.iter().sum::<f64>();\n");
+        assert!(float_fold(&in_params).is_empty());
+        let minmax = scan(
+            "rust/src/federated/x.rs",
+            "let lo = xs.iter().cloned().fold(f32::INFINITY, f32::min);\n",
+        );
+        assert!(float_fold(&minmax).is_empty());
+        let usize_sum = scan(
+            "rust/src/federated/x.rs",
+            "let n = xs.iter().map(|c| c.len()).sum::<usize>();\n",
+        );
+        assert!(float_fold(&usize_sum).is_empty());
+    }
+}

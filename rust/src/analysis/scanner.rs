@@ -1,0 +1,440 @@
+//! Token-aware Rust source scanner for the lint pass (offline image:
+//! no syn/proc-macro2 — a hand-rolled state machine, pure std).
+//!
+//! The scanner does three things the rules need and plain `grep` cannot:
+//!
+//! 1. **Strips string/char literals and comments** from every line, so a
+//!    rule matching `Instant::now` never fires on a doc comment or an
+//!    error-message string that merely mentions it.
+//! 2. **Tracks `#[cfg(test)]` regions** by brace depth, so test modules
+//!    — where `unwrap()` and wall-clock are idiomatic — are exempt.
+//! 3. **Collects `// lint:allow(<rule>): <justification>` escape
+//!    hatches**, attaching each to the code line it governs. A bare
+//!    `lint:allow` with no rule or no justification is itself reported
+//!    (rule `bad-allow`): the escape hatch must leave an audit trail.
+//!
+//! The model is line-oriented: [`Source::lines`] holds, per input line,
+//! the stripped code text, the line-comment text (for allow parsing),
+//! and whether the line sits inside a test region.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::report::Finding;
+
+/// One scanned input line.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// Source text with comments removed and string/char literal
+    /// *contents* removed (the delimiting quotes remain, so `"a,b"`
+    /// becomes `""` — still a token boundary, never a false match).
+    pub code: String,
+    /// Text of any `//` comment on this line (block comments are
+    /// discarded; `lint:allow` must be a line comment).
+    pub comment: String,
+    /// Inside a `#[cfg(test)]`-gated brace region.
+    pub is_test: bool,
+}
+
+/// A scanned file: stripped lines plus the allow-annotation map.
+#[derive(Debug)]
+pub struct Source {
+    /// Repo-relative path with `/` separators (display + allowlisting).
+    pub path: String,
+    pub lines: Vec<Line>,
+    /// 1-based code line -> rules allowed on that line.
+    allows: BTreeMap<usize, BTreeSet<String>>,
+    /// Malformed escape hatches found while scanning.
+    bad_allows: Vec<Finding>,
+}
+
+impl Source {
+    /// Scan `text`, which lives at repo-relative `path`.
+    pub fn scan(path: &str, text: &str) -> Source {
+        let lines = strip(text);
+        let (allows, bad_allows) = collect_allows(path, &lines);
+        Source {
+            path: path.to_string(),
+            lines,
+            allows,
+            bad_allows,
+        }
+    }
+
+    /// Is `rule` explicitly allowed on 1-based line `line`?
+    pub fn is_allowed(&self, line: usize, rule: &str) -> bool {
+        self.allows
+            .get(&line)
+            .is_some_and(|rules| rules.contains(rule))
+    }
+
+    /// `bad-allow` findings: escape hatches missing a rule name or a
+    /// justification.
+    pub fn bad_allows(&self) -> &[Finding] {
+        &self.bad_allows
+    }
+
+    /// Module path for allowlist matching: `comms/wire.rs` ->
+    /// `comms::wire`, `telemetry/mod.rs` -> `telemetry`, `main.rs` ->
+    /// `main`. The path is taken relative to the last `src/` component
+    /// if present.
+    pub fn module(&self) -> String {
+        let rel = match self.path.rfind("src/") {
+            Some(i) => &self.path[i + 4..],
+            None => self.path.as_str(),
+        };
+        let rel = rel.strip_suffix(".rs").unwrap_or(rel);
+        let rel = rel.strip_suffix("/mod").unwrap_or(rel);
+        if rel == "lib" || rel == "mod" {
+            return String::new();
+        }
+        rel.replace('/', "::")
+    }
+}
+
+/// Lexer state for [`strip`].
+enum State {
+    Code,
+    LineComment,
+    /// Nesting depth (Rust block comments nest).
+    BlockComment(u32),
+    Str,
+    /// `r##"…"##` — number of `#`s to match on close.
+    RawStr(u32),
+    Char,
+}
+
+/// Strip comments and literal contents, preserving line structure.
+fn strip(text: &str) -> Vec<Line> {
+    let mut out: Vec<Line> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    let chars: Vec<char> = text.chars().collect();
+    let mut i = 0;
+    let n = chars.len();
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            // Line comments end at the newline; strings legally span
+            // lines (their contents are dropped either way).
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            out.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                is_test: false,
+            });
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    // raw/byte prefixes: only treat as a raw string when
+                    // the prefix is not part of a longer identifier
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    // r"…", r#"…"#, b"…", br#"…"# — count the hashes
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') && (c == 'r' || j > i + 1) {
+                        code.push('"');
+                        state = State::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // char literal vs lifetime: a literal closes within
+                    // two chars or starts with a backslash escape
+                    if next == Some('\\') || chars.get(i + 2) == Some(&'\'') {
+                        code.push('\'');
+                        state = State::Char;
+                        i += 1;
+                    } else {
+                        code.push('\''); // lifetime tick
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(d) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(d + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if d == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(d - 1)
+                    };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2; // skip the escaped char (may be `"` or `\`)
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes as usize {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        code.push('"');
+                        state = State::Code;
+                        i += 1 + hashes as usize;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            State::Char => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    code.push('\'');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        out.push(Line {
+            code,
+            comment,
+            is_test: false,
+        });
+    }
+    mark_test_regions(&mut out);
+    out
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// Mark every line inside a `#[cfg(test)]`-attributed brace region.
+/// The attribute arms a pending flag; the next `{` opens the region at
+/// the current depth; the matching `}` closes it.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut entry: Option<i64> = None;
+    for line in lines.iter_mut() {
+        if entry.is_none() && line.code.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        let in_test_at_start = entry.is_some() || pending;
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    if pending {
+                        entry = Some(depth);
+                        pending = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if entry == Some(depth) {
+                        entry = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        line.is_test = in_test_at_start || entry.is_some();
+    }
+}
+
+/// Parse `lint:allow(<rule>): <justification>` annotations. A trailing
+/// comment governs its own line; a standalone comment line governs the
+/// next line that carries code. Only plain `//` comments count — doc
+/// comments (`///`, `//!`) are documentation *about* the hatch syntax,
+/// not hatches.
+#[allow(clippy::type_complexity)]
+fn collect_allows(
+    path: &str,
+    lines: &[Line],
+) -> (BTreeMap<usize, BTreeSet<String>>, Vec<Finding>) {
+    let mut allows: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+    let mut bad = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        if line.comment.starts_with('/') || line.comment.starts_with('!') {
+            continue; // doc comment: `///…` or `//!…`
+        }
+        let Some(pos) = line.comment.find("lint:allow") else {
+            continue;
+        };
+        let rest = &line.comment[pos + "lint:allow".len()..];
+        let parsed = parse_allow(rest);
+        let Some(rule) = parsed else {
+            bad.push(Finding::new(
+                path,
+                lineno,
+                "bad-allow",
+                "malformed escape hatch: expected `lint:allow(<rule>): <justification>` \
+                 with a non-empty justification",
+            ));
+            continue;
+        };
+        // Attach to this line if it has code, else to the next code line.
+        let mut target = lineno;
+        if line.code.trim().is_empty() {
+            for (j, later) in lines.iter().enumerate().skip(idx + 1) {
+                if !later.code.trim().is_empty() {
+                    target = j + 1;
+                    break;
+                }
+            }
+        }
+        allows.entry(target).or_default().insert(rule);
+    }
+    (allows, bad)
+}
+
+/// `rest` is the comment text after `lint:allow`; returns the rule name
+/// if the annotation is well-formed (`(<rule>): <justification>`).
+fn parse_allow(rest: &str) -> Option<String> {
+    let rest = rest.strip_prefix('(')?;
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim();
+    if rule.is_empty() || !rule.chars().all(|c| c.is_ascii_alphanumeric() || c == '-') {
+        return None;
+    }
+    let after = rest[close + 1..].trim_start();
+    let just = after.strip_prefix(':')?.trim();
+    if just.is_empty() {
+        return None;
+    }
+    Some(rule.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let src = Source::scan(
+            "x.rs",
+            "let a = \"Instant::now\"; // Instant::now\nlet b = 1; /* SystemTime::now */\n",
+        );
+        assert_eq!(src.lines[0].code, "let a = \"\"; ");
+        assert!(src.lines[0].comment.contains("Instant::now"));
+        assert_eq!(src.lines[1].code, "let b = 1; ");
+    }
+
+    #[test]
+    fn raw_strings_and_chars_and_lifetimes() {
+        let src = Source::scan(
+            "x.rs",
+            "let r = r#\"a \"quoted\" HashMap\"#;\nlet c = '{'; let l: &'static str = \"\";\n",
+        );
+        assert_eq!(src.lines[0].code, "let r = \"\";");
+        assert!(!src.lines[1].code.contains('{'), "{}", src.lines[1].code);
+    }
+
+    #[test]
+    fn escaped_quote_in_string() {
+        let src = Source::scan("x.rs", "let s = \"a\\\"b.unwrap()\"; s.len();\n");
+        assert_eq!(src.lines[0].code, "let s = \"\"; s.len();");
+    }
+
+    #[test]
+    fn test_region_marked_by_brace_depth() {
+        let src = Source::scan(
+            "x.rs",
+            "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { x(); }\n}\nfn c() {}\n",
+        );
+        let flags: Vec<bool> = src.lines.iter().map(|l| l.is_test).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn allow_attaches_to_own_or_next_line() {
+        let src = Source::scan(
+            "x.rs",
+            "x(); // lint:allow(wall-clock): measuring only\n\
+             // lint:allow(panic-surface): length checked above\n\
+             y();\n",
+        );
+        assert!(src.is_allowed(1, "wall-clock"));
+        assert!(src.is_allowed(3, "panic-surface"));
+        assert!(!src.is_allowed(3, "wall-clock"));
+    }
+
+    #[test]
+    fn bare_allow_is_reported() {
+        for bad in [
+            "x(); // lint:allow\n",
+            "x(); // lint:allow(wall-clock)\n",
+            "x(); // lint:allow(wall-clock):   \n",
+            "x(); // lint:allow(): why\n",
+        ] {
+            let src = Source::scan("x.rs", bad);
+            assert_eq!(src.bad_allows().len(), 1, "{bad:?}");
+            assert_eq!(src.bad_allows()[0].rule, "bad-allow");
+        }
+        let ok = Source::scan("x.rs", "x(); // lint:allow(wall-clock): because\n");
+        assert!(ok.bad_allows().is_empty());
+        // doc comments describe the syntax; they are not hatches
+        let doc = Source::scan("x.rs", "/// a bare `lint:allow` is rejected\nfn f() {}\n");
+        assert!(doc.bad_allows().is_empty());
+    }
+
+    #[test]
+    fn module_paths() {
+        for (p, m) in [
+            ("rust/src/comms/wire.rs", "comms::wire"),
+            ("rust/src/telemetry/mod.rs", "telemetry"),
+            ("rust/src/main.rs", "main"),
+            ("rust/src/lib.rs", ""),
+        ] {
+            assert_eq!(Source::scan(p, "").module(), m, "{p}");
+        }
+    }
+}

@@ -378,6 +378,7 @@ impl Transport {
                 let n = f.residual_norm();
                 n * n
             })
+            // lint:allow(float-fold): observability gauge only — never feeds back into the trajectory, and the fold order over client ids is itself fixed.
             .sum::<f64>()
             .sqrt()
     }

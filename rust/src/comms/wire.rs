@@ -262,12 +262,33 @@ pub struct FrameHeader {
     pub tier: u8,
 }
 
-fn rd_u32(b: &[u8], off: usize) -> u32 {
-    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+// Checked little-endian reads: frames are untrusted input, so a
+// truncated or lying buffer must surface as a typed error, never a
+// panic (rule `panic-surface` — DESIGN.md §13).
+
+fn rd_slice<const N: usize>(b: &[u8], off: usize) -> Result<[u8; N]> {
+    let s = b
+        .get(off..off + N)
+        .ok_or_else(|| anyhow::anyhow!("frame truncated: {N} bytes at offset {off}, len {}", b.len()))?;
+    let mut out = [0u8; N];
+    out.copy_from_slice(s);
+    Ok(out)
 }
 
-fn rd_f32(b: &[u8], off: usize) -> f32 {
-    f32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+fn rd_u8(b: &[u8], off: usize) -> Result<u8> {
+    Ok(rd_slice::<1>(b, off)?[0])
+}
+
+fn rd_u32(b: &[u8], off: usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(rd_slice(b, off)?))
+}
+
+fn rd_u64(b: &[u8], off: usize) -> Result<u64> {
+    Ok(u64::from_le_bytes(rd_slice(b, off)?))
+}
+
+fn rd_f32(b: &[u8], off: usize) -> Result<f32> {
+    Ok(f32::from_le_bytes(rd_slice(b, off)?))
 }
 
 impl FrameHeader {
@@ -277,26 +298,25 @@ impl FrameHeader {
             "frame shorter than its header: {} bytes",
             bytes.len()
         );
-        let magic = rd_u32(bytes, 0);
+        let magic = rd_u32(bytes, 0)?;
         anyhow::ensure!(magic == MAGIC, "bad frame magic {magic:#010x}");
-        anyhow::ensure!(bytes[4] == WIRE_VERSION, "unsupported wire version {}", bytes[4]);
-        let flags = bytes[5];
+        let version = rd_u8(bytes, 4)?;
+        anyhow::ensure!(version == WIRE_VERSION, "unsupported wire version {version}");
+        let flags = rd_u8(bytes, 5)?;
         let delta = flags & FLAG_DELTA != 0;
         let sparse = flags & FLAG_SPARSE != 0;
         anyhow::ensure!(!(delta && sparse), "frame flags {flags:#04x}: delta and sparse are exclusive");
         let quant = flags & FLAG_QUANT != 0;
-        let bits = bytes[6];
+        let bits = rd_u8(bytes, 6)?;
         anyhow::ensure!(
             quant == (bits > 0) && bits <= 8,
             "inconsistent quant bits {bits} for flags {flags:#04x}"
         );
-        let dim = rd_u32(bytes, 8) as usize;
-        let k = rd_u32(bytes, 12) as usize;
+        let dim = rd_u32(bytes, 8)? as usize;
+        let k = rd_u32(bytes, 12)? as usize;
         anyhow::ensure!(k <= dim, "frame k {k} exceeds dim {dim}");
         anyhow::ensure!(delta || sparse || k == dim, "dense frame with k {k} != dim {dim}");
-        let base_version = u64::from_le_bytes([
-            bytes[16], bytes[17], bytes[18], bytes[19], bytes[20], bytes[21], bytes[22], bytes[23],
-        ]);
+        let base_version = rd_u64(bytes, 16)?;
         anyhow::ensure!(
             delta == (base_version != 0),
             "base version {base_version} inconsistent with flags {flags:#04x}"
@@ -308,7 +328,7 @@ impl FrameHeader {
             dim,
             k,
             base_version,
-            tier: bytes[7],
+            tier: rd_u8(bytes, 7)?,
         })
     }
 
@@ -341,7 +361,7 @@ pub fn decode_frame(bytes: &[u8], base: Option<&[f32]>) -> Result<Vec<f32>> {
     if h.delta || h.sparse {
         idx.reserve(h.k);
         for i in 0..h.k {
-            let v = rd_u32(bytes, off + 4 * i);
+            let v = rd_u32(bytes, off + 4 * i)?;
             anyhow::ensure!((v as usize) < h.dim, "frame index {v} out of range for dim {}", h.dim);
             idx.push(v);
         }
@@ -351,18 +371,22 @@ pub fn decode_frame(bytes: &[u8], base: Option<&[f32]>) -> Result<Vec<f32>> {
         let n_chunks = (h.k + QCHUNK - 1) / QCHUNK;
         let mut scales = Vec::with_capacity(n_chunks);
         for c in 0..n_chunks {
-            scales.push((rd_f32(bytes, off + 8 * c), rd_f32(bytes, off + 8 * c + 4)));
+            scales.push((rd_f32(bytes, off + 8 * c)?, rd_f32(bytes, off + 8 * c + 4)?));
         }
         off += 8 * n_chunks;
+        let codes = bytes
+            .get(off..)
+            .ok_or_else(|| anyhow::anyhow!("frame truncated: codes at offset {off}, len {}", bytes.len()))?
+            .to_vec();
         dequantize(&QuantizedUpdate {
             dim: h.k,
             bits: h.quant_bits,
             chunk: QCHUNK,
             scales,
-            codes: bytes[off..].to_vec(),
+            codes,
         })
     } else {
-        (0..h.k).map(|i| rd_f32(bytes, off + 4 * i)).collect()
+        (0..h.k).map(|i| rd_f32(bytes, off + 4 * i)).collect::<Result<Vec<f32>>>()?
     };
     if h.delta {
         let base = base.ok_or_else(|| {
@@ -520,6 +544,7 @@ impl Codec for DeltaCodec {
     }
 
     fn plan(&self, mut plan: SizePlan, delta_coords: Option<usize>) -> SizePlan {
+        // lint:allow(panic-surface): encode path — the caller computed the patch itself; a missing count is a local programming error, not untrusted input.
         plan.coords = delta_coords.expect("planning a delta pipeline needs the counted patch size");
         plan.sparse = true;
         plan
@@ -592,6 +617,7 @@ impl Codec for TopKCodec {
                 let change = |e: usize| (vals[e] - base[repr.idx[e] as usize]).abs();
                 let mut order: Vec<usize> = (0..repr.idx.len()).collect();
                 order.select_nth_unstable_by(k - 1, |&a, &b| {
+                    // lint:allow(panic-surface): encode path over locally-trained floats; a NaN here means the trainer diverged and aborting beats shipping a corrupt frame.
                     change(b).partial_cmp(&change(a)).expect("non-finite change")
                 });
                 let mut keep = order[..k].to_vec();
@@ -821,6 +847,7 @@ impl Pipeline {
 
     /// The explicit identity pipeline (`"dense"`).
     pub fn identity() -> Pipeline {
+        // lint:allow(panic-surface): constant spec string, parsed at startup; cannot fail unless the registry itself is broken.
         Pipeline::parse("dense").expect("identity pipeline")
     }
 

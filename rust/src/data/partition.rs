@@ -53,6 +53,7 @@ pub fn unbalanced_zipf(n: usize, k: usize, s: f64, rng: &mut Rng) -> Vec<Vec<usi
     rng.shuffle(&mut idx);
     // raw Zipf weights, normalized to sizes summing to n with min 1
     let raw: Vec<f64> = (1..=k).map(|r| 1.0 / (r as f64).powf(s)).collect();
+    // lint:allow(float-fold): fold over ranks 1..=k in ascending order — a fixed sequence, identical everywhere.
     let total: f64 = raw.iter().sum();
     let mut sizes: Vec<usize> = raw
         .iter()

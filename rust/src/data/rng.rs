@@ -198,6 +198,7 @@ impl Rng {
     /// precomputed weights is overkill for our sizes; rejection-free scan).
     pub fn zipf(&mut self, n: usize, s: f64) -> usize {
         // draw by inverse CDF over H_{n,s}
+        // lint:allow(float-fold): fold over 1..=n in ascending order — a fixed sequence, identical everywhere.
         let h: f64 = (1..=n).map(|k| 1.0 / (k as f64).powf(s)).sum();
         let mut u = self.f64() * h;
         for k in 1..=n {

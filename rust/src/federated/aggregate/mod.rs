@@ -195,6 +195,7 @@ pub fn staleness_scale(entries: &[(f32, u64)], decay: f64) -> f64 {
     if decay == 1.0 || entries.iter().all(|&(_, s)| s == 0) {
         return 1.0;
     }
+    // lint:allow(float-fold): the buffer is drained in canonical arrival order fixed by the semi-sync barrier, so this fold sequence is deterministic.
     let raw: f64 = entries.iter().map(|&(w, _)| w as f64).sum();
     if !(raw > 0.0) {
         return 1.0; // degenerate zero-mass buffer: nothing to attenuate
@@ -202,7 +203,7 @@ pub fn staleness_scale(entries: &[(f32, u64)], decay: f64) -> f64 {
     let disc: f64 = entries
         .iter()
         .map(|&(w, s)| staleness_weight(w, decay, s) as f64)
-        .sum();
+        .sum(); // lint:allow(float-fold): same canonical buffer order as `raw` above.
     if !(disc > 0.0 && disc.is_finite()) {
         return 0.0;
     }

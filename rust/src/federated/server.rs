@@ -396,14 +396,37 @@ pub fn run(
             .collect()
     };
 
+    // Dataset-identity fingerprint: `--partition` and `--scale` change
+    // *which* examples each client holds without moving the client count
+    // or parameter dim, so the coarse shape fields cannot catch them.
+    // Hash the dataset names, the test-set size, and the exact
+    // per-client index assignment (clients are in id order, indices in
+    // their stored order — both deterministic).
+    let data_fp = {
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(fed.train.name.as_bytes());
+        bytes.push(0);
+        bytes.extend_from_slice(fed.test.name.as_bytes());
+        bytes.push(0);
+        bytes.extend_from_slice(&(fed.test.len() as u64).to_le_bytes());
+        for idxs in &fed.clients {
+            bytes.extend_from_slice(&(idxs.len() as u64).to_le_bytes());
+            for &i in idxs {
+                bytes.extend_from_slice(&(i as u64).to_le_bytes());
+            }
+        }
+        crate::runstate::fnv1a64(&bytes)
+    };
+
     // Configuration fingerprint stamped into every snapshot and checked
     // on resume: a checkpoint must not silently continue under different
     // flags (DESIGN.md §8). Dataset shape is covered by the client count
-    // and parameter dim; every other trajectory-affecting knob —
-    // availability, DP clip/σ, fleet shape, eval caps, the comm model —
-    // rides in the harness string (Debug-formatted, so any value change
-    // is caught). `fleet.workers` is deliberately absent: worker count
-    // is bit-identical by design, so resuming at a different parallelism
+    // and parameter dim, dataset *identity* by `data_fp`; every other
+    // trajectory-affecting knob — availability, DP clip/σ, fleet shape,
+    // eval caps, the comm model, train-loss tracking — rides in the
+    // harness string (Debug-formatted, so any value change is caught).
+    // `fleet.workers` is deliberately absent: worker count is
+    // bit-identical by design, so resuming at a different parallelism
     // is legitimate. `fleet.shards` IS present even though sharding is
     // also bit-identical: the snapshot carries cumulative tier-1 byte
     // totals, and continuing under a different S would silently blend
@@ -421,7 +444,8 @@ pub fn run(
             "availability={:?} dp={:?} secure_agg={} prox_mu={:?} \
              fleet=({},{:?},{:?},{:?},{:?},{:?}) shards={} \
              async=({:?},{:?},{:?}) eval_cap={:?} \
-             train_eval_cap={} comm=({:?},{:?},{:?},{:?})",
+             train_eval_cap={} comm=({:?},{:?},{:?},{:?}) \
+             data={data_fp:#018x} track_train_loss={}",
             opts.availability,
             opts.dp.map(|d| (d.clip_norm, d.sigma)),
             opts.secure_agg,
@@ -442,6 +466,7 @@ pub fn run(
             opts.comm_model.down_bps,
             opts.comm_model.latency_s,
             opts.comm_model.jitter,
+            cfg.track_train_loss,
         ),
     };
 
@@ -905,6 +930,7 @@ pub fn run(
                 // ever sees the modular sum — i.e. the weighted mean. Only
                 // mean-combine rules reach here (checked at startup); their
                 // server-optimizer step still applies below.
+                // lint:allow(float-fold): `deltas` is already in canonical client-id order (sorted at collect), so this fold sequence is deterministic.
                 let total_w: f64 = deltas.iter().map(|(w, _)| *w as f64).sum();
                 let masked: Vec<Vec<u32>> = deltas
                     .iter()

@@ -51,6 +51,7 @@
 //! * [`config`], [`metrics`], [`telemetry`], [`util`] — harness
 //!   plumbing.
 
+pub mod analysis;
 pub mod baselines;
 pub mod comms;
 pub mod compression;

@@ -52,6 +52,7 @@ fn real_main() -> Result<()> {
         "run" => cmd_run(&args),
         "fleet" => cmd_fleet(&args),
         "bench" => cmd_bench(&args),
+        "lint" => cmd_lint(&args),
         "oneshot" => cmd_oneshot(&args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
@@ -879,6 +880,37 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fedavg lint` — the invariant catalog as a static-analysis pass
+/// (DESIGN.md §13). Exits nonzero on any finding; `--json` prints the
+/// machine-readable report (the CI artifact); `--fix-allow` inserts
+/// placeholder escape hatches so a burn-down starts from a green tree.
+fn cmd_lint(args: &Args) -> Result<()> {
+    args.check_known(&["json", "fix-allow"])?;
+    let paths = fedavg::analysis::Paths::from_manifest_dir(std::path::Path::new(env!(
+        "CARGO_MANIFEST_DIR"
+    )));
+    let mut findings = fedavg::analysis::lint_tree(&paths)?;
+    if args.has("fix-allow") && !findings.is_empty() {
+        let n = fedavg::analysis::fix_allow(&paths.repo_root, &findings)?;
+        eprintln!(
+            "lint: inserted {n} placeholder lint:allow hatches — replace every \
+             FIXME justification before committing"
+        );
+        findings = fedavg::analysis::lint_tree(&paths)?;
+    }
+    if args.has("json") {
+        print!("{}", fedavg::analysis::render_json(&findings));
+    } else {
+        print!("{}", fedavg::analysis::render_text(&findings));
+    }
+    if findings.is_empty() {
+        eprintln!("lint: clean — every invariant in the catalog holds");
+        Ok(())
+    } else {
+        bail!("lint: {} finding(s)", findings.len())
+    }
+}
+
 fn cmd_oneshot(args: &Args) -> Result<()> {
     args.check_known(&["model", "scale", "e", "lr", "seed", "eval-cap"])?;
     let model = args.str_or("model", "mnist_2nn");
@@ -973,6 +1005,7 @@ USAGE:
              [--sim-only] [--start-round R] [--step-cost S] [--model-bytes B]
              [--steps U] [--trace] [+ run flags]
   fedavg bench [--areas a1,a2,..] [--out DIR] [--check] [--quick]
+  fedavg lint [--json] [--fix-allow]
   fedavg oneshot [--model M] [--e N]
   fedavg info
 

@@ -402,8 +402,10 @@ pub fn snapshot_json(
 /// Write `BENCH_<area>.json` atomically, self-validating the emitted
 /// text against the schema first (a malformed snapshot must fail the
 /// recording run, not the next reader).
+#[allow(clippy::disallowed_methods)] // SystemTime::now: snapshot recorded-at stamp only
 pub fn write_snapshot(path: &Path, area: &str, results: &[BenchResult]) -> Result<()> {
     anyhow::ensure!(!results.is_empty(), "area {area}: no cases to snapshot");
+    // lint:allow(wall-clock): recorded-at metadata in the BENCH_<area>.json header; comparisons key on machine_tag, not this stamp.
     let now = SystemTime::now()
         .duration_since(SystemTime::UNIX_EPOCH)
         .map(|d| d.as_secs())

@@ -140,6 +140,7 @@ impl Tracer {
     /// Start a span. Disabled: returns `None` without reading the clock
     /// — callers attach expensive fields via `.map(|s| s.bytes(..))` so
     /// the disabled path computes nothing.
+    #[allow(clippy::disallowed_methods)] // Instant::now: span timing is observability output only
     pub fn begin(&self, round: u64, phase: &'static str, depth: u8) -> Option<Span> {
         self.0.as_ref()?;
         Some(Span {
@@ -150,6 +151,7 @@ impl Tracer {
             worker: None,
             bytes: None,
             sim_s: None,
+            // lint:allow(wall-clock): span durations land in trace.jsonl for humans; the round loop never branches on them.
             t0: Instant::now(),
         })
     }

@@ -341,6 +341,7 @@ fn encode_ring(w: &mut ByteWriter, versions: &[(u64, ParamVec)]) {
     let Some((newest_v, newest)) = versions.last() else {
         return;
     };
+    // lint:allow(panic-surface): constant spec string against the built-in registry; encode path, not untrusted input.
     let delta = Pipeline::parse("delta").expect("registry `delta` stage");
     // the delta/dense stages are deterministic and never draw from the
     // stream; the pipeline API just threads one through for `q<b>`
@@ -355,6 +356,7 @@ fn encode_ring(w: &mut ByteWriter, versions: &[(u64, ParamVec)]) {
         let frame = if patch_wins {
             delta
                 .run(theta, Some((*newest_v, newest.as_slice())), &mut rng)
+                // lint:allow(panic-surface): encode path — the store only retains same-dim versions, so a mismatch is a local invariant break.
                 .expect("ring invariant: retained versions share the model dim")
                 .to_frame()
         } else {
@@ -369,13 +371,13 @@ fn encode_ring(w: &mut ByteWriter, versions: &[(u64, ParamVec)]) {
 /// version cross-checked. Bit-exact by construction — patches carry raw
 /// f32 replacement values.
 fn decode_ring(raw: &[(u64, &[u8])]) -> Result<Vec<(u64, ParamVec)>> {
-    let Some((newest_v, newest_bytes)) = raw.last() else {
+    let Some(((newest_v, newest_bytes), older)) = raw.split_last() else {
         return Ok(Vec::new());
     };
     let newest =
         decode_frame(newest_bytes, None).context("model ring: newest frame must be dense")?;
     let mut out = Vec::with_capacity(raw.len());
-    for (v, bytes) in &raw[..raw.len() - 1] {
+    for (v, bytes) in older {
         let h = FrameHeader::parse(bytes)?;
         anyhow::ensure!(
             !h.delta || h.base_version == *newest_v,
@@ -519,27 +521,32 @@ impl Snapshot {
     /// malformed section body — fails the whole load; no partial state
     /// ever escapes.
     pub fn from_bytes(buf: &[u8]) -> Result<Snapshot> {
-        anyhow::ensure!(
-            buf.len() >= HEADER_BYTES,
-            "snapshot truncated: {} bytes, header alone is {HEADER_BYTES}",
-            buf.len()
-        );
-        let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+        // Header reads go through the bounds-checked ByteReader so a short
+        // or lying file errors out instead of panicking (rule
+        // `panic-surface` — DESIGN.md §13).
+        let mut hdr = ByteReader::new(buf);
+        let magic = hdr.u32().context("snapshot truncated inside header")?;
         anyhow::ensure!(magic == MAGIC, "bad snapshot magic {magic:#010x}");
-        let version = buf[4];
+        let version = hdr.u8()?;
         anyhow::ensure!(
             version == SNAP_VERSION,
             "unsupported snapshot version {version} (this build reads {SNAP_VERSION})"
         );
-        let round = u64::from_le_bytes(buf[8..16].try_into().unwrap());
-        let payload_len = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
-        let stored_sum = u64::from_le_bytes(buf[24..32].try_into().unwrap());
+        hdr.take(3)?; // pad
+        let round = hdr.u64().context("snapshot truncated inside header")?;
+        let payload_len = hdr.u64()? as usize;
+        let stored_sum = hdr.u64()?;
+        let payload = hdr.take(payload_len).map_err(|_| {
+            anyhow::anyhow!(
+                "snapshot length mismatch: header declares {payload_len} payload bytes, file has {}",
+                buf.len().saturating_sub(HEADER_BYTES)
+            )
+        })?;
         anyhow::ensure!(
-            buf.len() - HEADER_BYTES == payload_len,
-            "snapshot length mismatch: header declares {payload_len} payload bytes, file has {}",
-            buf.len() - HEADER_BYTES
+            hdr.is_empty(),
+            "snapshot length mismatch: {} trailing bytes past the declared payload",
+            hdr.remaining()
         );
-        let payload = &buf[HEADER_BYTES..];
         let sum = fnv1a64(payload);
         anyhow::ensure!(
             sum == stored_sum,
@@ -755,17 +762,17 @@ impl Snapshot {
         if files.is_empty() {
             return Ok(None);
         }
-        let mut last_err = None;
+        let mut last_err = anyhow::anyhow!("empty candidate list");
         for (_, path) in files.iter().rev() {
             match Self::read(path) {
                 Ok(snap) => return Ok(Some((path.clone(), snap))),
                 Err(e) => {
                     eprintln!("warning: skipping unreadable snapshot: {e:#}");
-                    last_err = Some(e);
+                    last_err = e;
                 }
             }
         }
-        Err(last_err.unwrap().context(format!(
+        Err(last_err.context(format!(
             "no valid snapshot among {} candidates in {dir:?}",
             files.len()
         )))

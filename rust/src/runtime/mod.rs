@@ -10,7 +10,7 @@ pub mod manifest;
 pub mod pool;
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
@@ -68,7 +68,10 @@ pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    // BTreeMap rather than HashMap: the cache is keyed lookup only today,
+    // but an ordered map keeps any future iteration deterministic for free
+    // (rule `hash-order` — DESIGN.md §13).
+    cache: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     stats: RefCell<ExecStats>,
 }
 
@@ -83,7 +86,7 @@ impl Engine {
             client,
             dir,
             manifest,
-            cache: RefCell::new(HashMap::new()),
+            cache: RefCell::new(BTreeMap::new()),
             stats: RefCell::new(ExecStats::default()),
         })
     }
@@ -123,6 +126,7 @@ impl Engine {
         Ok(Model { engine: self, meta })
     }
 
+    #[allow(clippy::disallowed_methods)] // Instant::now: compile-time stats only, never trajectory state
     fn executable(
         &self,
         model: &ModelMeta,
@@ -133,6 +137,7 @@ impl Engine {
             return Ok(exe.clone());
         }
         let file = self.dir.join(&model.entry(entry)?.file);
+        // lint:allow(wall-clock): compile-time accounting feeds ExecStats reporting; no trajectory decision reads it.
         let t0 = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
@@ -158,7 +163,9 @@ impl Engine {
         Ok(())
     }
 
+    #[allow(clippy::disallowed_methods)] // Instant::now: execute-time stats only, never trajectory state
     fn run1(&self, exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+        // lint:allow(wall-clock): execute-time accounting feeds ExecStats reporting; no trajectory decision reads it.
         let t0 = std::time::Instant::now();
         let bufs = exe
             .execute::<xla::Literal>(args)

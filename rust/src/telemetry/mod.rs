@@ -153,11 +153,13 @@ impl RunWriter {
         self.quiet = self.quiet || quiet;
     }
 
+    #[allow(clippy::disallowed_methods)] // Instant::now: console elapsed display only
     fn open_fresh(dir: PathBuf) -> Result<Self> {
         let curve = BufWriter::new(File::create(dir.join("curve.csv"))?);
         let mut w = Self {
             dir,
             curve,
+            // lint:allow(wall-clock): feeds only the human console line's elapsed column; curve.csv carries no wall time.
             started: Instant::now(),
             quiet: std::env::var("FEDAVG_QUIET").is_ok(),
         };
@@ -178,6 +180,7 @@ impl RunWriter {
     /// parse, or breaks the strictly-increasing round order is therefore
     /// treated — together with everything after it — as the lost future
     /// and dropped, not kept verbatim or turned into a hard error.
+    #[allow(clippy::disallowed_methods)] // Instant::now: console elapsed display only
     pub fn reopen(run_dir: impl AsRef<Path>, last_round: u64) -> Result<Self> {
         let dir = run_dir.as_ref().to_path_buf();
         let path = dir.join("curve.csv");
@@ -219,6 +222,7 @@ impl RunWriter {
         Ok(Self {
             dir,
             curve,
+            // lint:allow(wall-clock): feeds only the human console line's elapsed column; curve.csv carries no wall time.
             started: Instant::now(),
             quiet: std::env::var("FEDAVG_QUIET").is_ok(),
         })

@@ -99,6 +99,7 @@ impl Bencher {
         self.bench_with_elems(name, Some(elems), &mut f)
     }
 
+    #[allow(clippy::disallowed_methods)] // Instant::now: measuring wall time is this harness's whole job
     fn bench_with_elems(
         &mut self,
         name: &str,
@@ -106,6 +107,7 @@ impl Bencher {
         f: &mut dyn FnMut(),
     ) -> &BenchResult {
         // warmup
+        // lint:allow(wall-clock): the bench harness exists to measure wall time; results go to BENCH_*.json, never into a run.
         let t0 = Instant::now();
         let mut warm_iters = 0u64;
         while t0.elapsed() < self.warmup || warm_iters == 0 {
@@ -128,6 +130,7 @@ impl Bencher {
             iters += batch;
         }
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // lint:allow(float-fold): wall-clock measurement summary — bench reporting never participates in a training trajectory.
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         let quantile =
             |frac: f64| samples[((samples.len() as f64 * frac) as usize).min(samples.len() - 1)];

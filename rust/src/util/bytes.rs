@@ -108,6 +108,7 @@ impl<'a> ByteReader<'a> {
             self.pos,
             self.remaining()
         );
+        // lint:allow(panic-surface): range just proven in-bounds by the ensure! above.
         let out = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(out)
@@ -118,10 +119,17 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn u16(&mut self) -> Result<u16> {
+        // lint:allow(panic-surface): take(2) returned exactly 2 bytes, so the array conversion is infallible.
         Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
+    pub fn u32(&mut self) -> Result<u32> {
+        // lint:allow(panic-surface): take(4) returned exactly 4 bytes, so the array conversion is infallible.
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
     pub fn u64(&mut self) -> Result<u64> {
+        // lint:allow(panic-surface): take(8) returned exactly 8 bytes, so the array conversion is infallible.
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
@@ -158,6 +166,7 @@ impl<'a> ByteReader<'a> {
         let raw = self.take(n * 4)?;
         Ok(raw
             .chunks_exact(4)
+            // lint:allow(panic-surface): chunks_exact(4) yields only 4-byte slices.
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
@@ -167,6 +176,7 @@ impl<'a> ByteReader<'a> {
         let raw = self.take(n * 8)?;
         Ok(raw
             .chunks_exact(8)
+            // lint:allow(panic-surface): chunks_exact(8) yields only 8-byte slices.
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
