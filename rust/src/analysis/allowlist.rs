@@ -49,6 +49,23 @@ pub const PANIC_SURFACE_FILES: &[&str] = &[
 /// `get` or a `ByteReader` is required instead).
 pub const UNTRUSTED_BUFFER_NAMES: &[&str] = &["b", "buf", "bytes", "payload", "raw", "body"];
 
+/// Files whose non-test code sits on the per-round hot path and is
+/// audited for per-call heap churn (DESIGN.md §13/§14): the `params`
+/// kernels, parallel dispatch, the sharded-aggregation cascade, and the
+/// transport round loop. `Vec::new(` / `.to_vec()` / `.clone()` in
+/// these files need a `lint:allow(hot-alloc)` hatch naming the
+/// boundary that makes the copy necessary. Deliberately *not* listed:
+/// `comms/wire.rs` (encode paths construct owned frames by design —
+/// the borrowed-view decode side has no alloc tokens to flag) and
+/// `federated/server.rs` (the round loop allocates once before the
+/// loop; flagging every setup line would drown the signal).
+pub const HOT_ALLOC_FILES: &[&str] = &[
+    "src/params/mod.rs",
+    "src/coordinator/exec.rs",
+    "src/federated/aggregate/shards.rs",
+    "src/comms/transport.rs",
+];
+
 /// `module` matches an allowlist entry if it equals the entry or sits
 /// beneath it (`obs` covers `obs::trace`).
 pub fn module_matches(module: &str, list: &[&str]) -> bool {

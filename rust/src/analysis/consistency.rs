@@ -131,6 +131,8 @@ const KNOBS: &[(&str, Coverage)] = &[
     ("areas", Exempt("bench harness selection; no training state")),
     ("check", Exempt("bench smoke mode; no training state")),
     ("quick", Exempt("bench profile; no training state")),
+    ("compare", Exempt("bench snapshot diff; no training state")),
+    ("tolerance", Exempt("bench regression threshold; no training state")),
     ("json", Exempt("lint output format")),
     ("fix-allow", Exempt("lint rewrite mode")),
 ];

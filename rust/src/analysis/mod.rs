@@ -16,6 +16,7 @@
 //! | `seeded-rng`       | all randomness via `data::rng` |
 //! | `panic-surface`    | decode/load paths return `Result` |
 //! | `float-fold`       | float reduction order owned by `params` |
+//! | `hot-alloc`        | no per-call allocation in audited hot paths |
 //! | `knob-fingerprint` | CLI knobs covered by the resume fingerprint |
 //! | `snapshot-tags`    | written snapshot sections have reader arms |
 //! | `curve-schema`     | curve.csv columns documented in README |
@@ -79,6 +80,7 @@ pub fn lint_source(path: &str, text: &str) -> Vec<Finding> {
     out.extend(rules::seeded_rng(&src));
     out.extend(rules::panic_surface(&src));
     out.extend(rules::float_fold(&src));
+    out.extend(rules::hot_alloc(&src));
     // the hatch silences every rule except complaints about the hatch
     out.retain(|f| f.rule == "bad-allow" || !src.is_allowed(f.line, &f.rule));
     report::sort(&mut out);

@@ -12,8 +12,8 @@
 use std::collections::BTreeSet;
 
 use crate::analysis::allowlist::{
-    module_matches, path_in_scope, FLOAT_FOLD_MODULES, PANIC_SURFACE_FILES, RNG_MODULES,
-    UNTRUSTED_BUFFER_NAMES, WALL_CLOCK_MODULES,
+    module_matches, path_in_scope, FLOAT_FOLD_MODULES, HOT_ALLOC_FILES, PANIC_SURFACE_FILES,
+    RNG_MODULES, UNTRUSTED_BUFFER_NAMES, WALL_CLOCK_MODULES,
 };
 use crate::analysis::report::Finding;
 use crate::analysis::scanner::Source;
@@ -314,6 +314,51 @@ pub fn float_fold(src: &Source) -> Vec<Finding> {
     out
 }
 
+/// Rule `hot-alloc`: the audited hot-path files ([`HOT_ALLOC_FILES`])
+/// must not allocate per call — `Vec::new(`, `.to_vec()`, and
+/// `.clone()` are flagged unless hatched with a justification naming
+/// the ownership boundary (DESIGN.md §14: scratch is hoisted to the
+/// caller and cleared, not reallocated). Token boundaries keep the
+/// heuristic honest: `ParamVec::new(` / `VecDeque::new(` do not match
+/// `Vec::new(`, `.cloned()` does not match `.clone()`, and
+/// `Vec::with_capacity` / `vec![…]` are not tokens at all — sized
+/// one-time setup allocations are the sanctioned pattern.
+pub fn hot_alloc(src: &Source) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !path_in_scope(&src.path, HOT_ALLOC_FILES) {
+        return out;
+    }
+    const ALLOCS: &[&str] = &["Vec::new(", ".to_vec()", ".clone()"];
+    for (i, line) in src.lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        for tok in ALLOCS {
+            // dot-prefixed method tokens are self-delimiting (`.cloned()`
+            // never contains `.clone()`); `Vec::new(` needs the ident
+            // boundary so `ParamVec::new(` does not match
+            let hit = if tok.starts_with('.') {
+                line.code.contains(tok)
+            } else {
+                has_token(&line.code, tok)
+            };
+            if hit {
+                out.push(Finding::new(
+                    &src.path,
+                    i + 1,
+                    "hot-alloc",
+                    format!(
+                        "`{tok}` in an audited hot path — reuse caller-provided \
+                         scratch (DESIGN.md §14), or hatch with the ownership \
+                         boundary that forces the copy",
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -384,6 +429,32 @@ mod tests {
             "let x = buf.get(0).ok_or_else(err)?;\nlet s = rebuf[0];\n",
         );
         assert!(panic_surface(&ok).is_empty());
+    }
+
+    #[test]
+    fn hot_alloc_scoped_with_honest_token_boundaries() {
+        let bad = scan(
+            "rust/src/comms/transport.rs",
+            "let mut v = Vec::new();\nlet w = xs.to_vec();\nlet z = theta.clone();\n",
+        );
+        assert_eq!(hot_alloc(&bad).len(), 3);
+        // sanctioned spellings: sized setup, newtype ctors, iterator clone
+        let ok = scan(
+            "rust/src/comms/transport.rs",
+            "let mut v = Vec::with_capacity(n);\n\
+             let p = ParamVec::new();\n\
+             let q: VecDeque<u8> = VecDeque::new();\n\
+             let a = vec![0.0f32; dim];\n\
+             let it = xs.iter().cloned();\n",
+        );
+        assert!(hot_alloc(&ok).is_empty(), "{:?}", hot_alloc(&ok));
+        let elsewhere = scan("rust/src/federated/server.rs", "let v = Vec::new();\n");
+        assert!(hot_alloc(&elsewhere).is_empty());
+        let in_test = scan(
+            "rust/src/coordinator/exec.rs",
+            "#[cfg(test)]\nmod tests {\n fn t() { let v = xs.to_vec(); }\n}\n",
+        );
+        assert!(hot_alloc(&in_test).is_empty());
     }
 
     #[test]

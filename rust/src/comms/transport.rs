@@ -82,6 +82,7 @@ impl ModelStore {
             version,
             self.latest_version()
         );
+        // lint:allow(hot-alloc): the ModelStore is the one sanctioned owned-conversion boundary — retained versions must outlive the caller's buffer (DESIGN.md §14).
         self.versions.push_back((version, theta.to_vec()));
         while self.versions.len() > self.cap {
             self.versions.pop_front();
@@ -197,6 +198,12 @@ pub struct Transport {
     /// acked version share one O(dim) scan (at most `store_cap` distinct
     /// bases exist per round).
     measure_cache: Vec<(u64, u64)>,
+    /// Uplink decode scratch for [`encode_up`](Self::encode_up): the
+    /// decoded update lands here and is swapped into the caller's
+    /// `delta`, so the hot path reuses one buffer per endpoint instead
+    /// of allocating per aggregated client (DESIGN.md §14). Within-round
+    /// scratch — not part of [`TransportState`].
+    up_scratch: ParamVec,
 }
 
 impl Transport {
@@ -211,7 +218,9 @@ impl Transport {
             rng: Rng::new(seed ^ 0x0_B175),
             pending_base: vec![0; num_clients],
             cache_version: 0,
+            // lint:allow(hot-alloc): one-time endpoint construction, not the round loop.
             measure_cache: Vec::new(),
+            up_scratch: ParamVec::new(),
             cfg,
             dim,
         }
@@ -351,11 +360,14 @@ impl Transport {
         let bytes = repr.wire_bytes();
         debug_assert_eq!(bytes, up.plan_bytes(self.dim), "estimate/actual drift");
         if !up.lossless() {
-            let decoded = repr.decode(None)?;
+            // decode into the endpoint scratch and swap it with `delta`:
+            // the same bits the owned decode produced, without a per-client
+            // allocation (the old `delta` spine becomes next call's scratch)
+            repr.decode_into(None, &mut self.up_scratch)?;
             if use_ef {
-                self.feedback[client].record_dense(delta, &decoded);
+                self.feedback[client].record_dense(delta, &self.up_scratch);
             }
-            *delta = decoded;
+            std::mem::swap(delta, &mut self.up_scratch);
         }
         Ok(bytes)
     }
@@ -391,9 +403,11 @@ impl Transport {
             feedback: self
                 .feedback
                 .iter()
+                // lint:allow(hot-alloc): snapshot capture runs between rounds at checkpoint cadence, never inside the round loop.
                 .map(|f| f.residual().to_vec())
                 .collect(),
             versions: self.store.versions.iter().cloned().collect(),
+            // lint:allow(hot-alloc): snapshot capture runs between rounds at checkpoint cadence, never inside the round loop.
             acked: self.store.acked.clone(),
         }
     }

@@ -28,11 +28,21 @@
 //! Decoding needs no pipeline object: frames are self-describing, and
 //! [`decode_frame`] inverts any stage composition from the header alone
 //! (plus the base model for delta frames).
+//!
+//! Hot paths decode without owning anything: [`FrameRef`] borrows a
+//! frame's bytes, and the `*_into` variants ([`decode_frame_into`],
+//! [`Repr::decode_into`], [`write_dense_frame_into`]) stream straight
+//! into caller-owned scratch — bit-identical to their allocating twins
+//! (pinned in `rust/tests/params_fused.rs`), with owned conversion
+//! deferred to the ModelStore boundary (DESIGN.md §14).
 
 use std::fmt;
 use std::sync::Arc;
 
-use crate::compression::{dequantize, quantize, quantized_value_bytes, QuantizedUpdate, QCHUNK};
+use crate::compression::{
+    dequantize, dequantize_into, dequantize_raw_into, quantize, quantized_value_bytes,
+    QuantizedUpdate, QCHUNK,
+};
 use crate::data::rng::Rng;
 use crate::Result;
 
@@ -65,12 +75,6 @@ impl Vals {
         }
     }
 
-    fn to_f32(&self) -> Vec<f32> {
-        match self {
-            Vals::F32(v) => v.clone(),
-            Vals::Quantized(q) => dequantize(q),
-        }
-    }
 }
 
 /// Coordinate layout of a [`Repr`].
@@ -103,11 +107,17 @@ pub struct Repr {
 impl Repr {
     /// The start of every encode: the dense vector itself.
     pub fn dense(x: &[f32]) -> Repr {
+        Repr::dense_owned(x.to_vec())
+    }
+
+    /// As [`dense`](Self::dense), taking ownership of the vector — the
+    /// zero-copy entry when the caller is done with it.
+    pub fn dense_owned(x: Vec<f32>) -> Repr {
         Repr {
             dim: x.len(),
             kind: ReprKind::Dense,
             idx: Vec::new(),
-            vals: Vals::F32(x.to_vec()),
+            vals: Vals::F32(x),
             base_version: 0,
         }
     }
@@ -189,30 +199,66 @@ impl Repr {
     /// Recover the dense vector this repr describes. `base` is required
     /// for (and only used by) `Patch` reprs.
     pub fn decode(&self, base: Option<&[f32]>) -> Result<Vec<f32>> {
-        let vals = self.vals.to_f32();
+        let mut out = Vec::with_capacity(self.dim);
+        self.decode_into(base, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`decode`](Self::decode) into a caller-owned buffer (cleared,
+    /// reused) — the zero-copy decode→apply path (DESIGN.md §14). Dense
+    /// quantized payloads dequantize straight into `out`; sparse and
+    /// patch payloads seed `out` (zeros / the base) and scatter in the
+    /// same index order as [`decode`](Self::decode), so the produced
+    /// bits cannot differ (twin-tested in `rust/tests/params_fused.rs`).
+    pub fn decode_into(&self, base: Option<&[f32]>, out: &mut Vec<f32>) -> Result<()> {
         match self.kind {
             ReprKind::Dense => {
-                anyhow::ensure!(vals.len() == self.dim, "dense repr with {} of {} values", vals.len(), self.dim);
-                Ok(vals)
+                match &self.vals {
+                    Vals::F32(v) => {
+                        anyhow::ensure!(v.len() == self.dim, "dense repr with {} of {} values", v.len(), self.dim);
+                        out.clear();
+                        out.extend_from_slice(v);
+                    }
+                    Vals::Quantized(q) => {
+                        dequantize_into(q, out);
+                        anyhow::ensure!(out.len() == self.dim, "dense repr with {} of {} values", out.len(), self.dim);
+                    }
+                }
+                Ok(())
             }
             ReprKind::Sparse => {
-                let mut out = vec![0.0f32; self.dim];
-                for (&i, &v) in self.idx.iter().zip(&vals) {
-                    out[i as usize] = v;
-                }
-                Ok(out)
+                out.clear();
+                out.resize(self.dim, 0.0);
+                self.scatter(out);
+                Ok(())
             }
             ReprKind::Patch => {
                 let base = base.ok_or_else(|| {
                     anyhow::anyhow!("patch repr (base version {}) needs the base model", self.base_version)
                 })?;
                 anyhow::ensure!(base.len() == self.dim, "base dim {} != repr dim {}", base.len(), self.dim);
-                let mut out = base.to_vec();
-                for (&i, &v) in self.idx.iter().zip(&vals) {
-                    out[i as usize] = v;
-                }
-                Ok(out)
+                out.clear();
+                out.extend_from_slice(base);
+                self.scatter(out);
+                Ok(())
             }
+        }
+    }
+
+    /// Scatter this repr's `(idx, vals)` pairs into a seeded `out`.
+    /// Quantized sparse values dequantize into one transient buffer —
+    /// the only allocation left on the borrowed decode path.
+    fn scatter(&self, out: &mut [f32]) {
+        let owned;
+        let vals: &[f32] = match &self.vals {
+            Vals::F32(v) => v,
+            Vals::Quantized(q) => {
+                owned = dequantize(q);
+                &owned
+            }
+        };
+        for (&i, &v) in self.idx.iter().zip(vals) {
+            out[i as usize] = v;
         }
     }
 }
@@ -238,6 +284,70 @@ impl Frame {
     pub fn decode(&self, base: Option<&[f32]>) -> Result<Vec<f32>> {
         decode_frame(&self.bytes, base)
     }
+
+    /// [`decode`](Self::decode) into a caller-owned buffer — see
+    /// [`decode_frame_into`].
+    pub fn decode_into(&self, base: Option<&[f32]>, out: &mut Vec<f32>) -> Result<()> {
+        decode_frame_into(&self.bytes, base, out)
+    }
+
+    /// Borrow this frame's bytes as a [`FrameRef`].
+    pub fn view(&self) -> FrameRef<'_> {
+        FrameRef { bytes: &self.bytes }
+    }
+}
+
+/// A borrowed view of a serialized frame — the zero-copy twin of
+/// [`Frame`] for decode→apply paths and the §11 tier cascade, which
+/// re-frame and decode without owning bytes (DESIGN.md §14). Carries no
+/// state beyond the borrowed slice, so it is `Copy` and free to pass
+/// around.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameRef<'a> {
+    pub bytes: &'a [u8],
+}
+
+impl FrameRef<'_> {
+    pub fn wire_bytes(&self) -> u64 {
+        self.bytes.len() as u64
+    }
+
+    pub fn header(&self) -> Result<FrameHeader> {
+        FrameHeader::parse(self.bytes)
+    }
+
+    /// Decode back to an owned dense vector (`base` for delta frames).
+    pub fn decode(&self, base: Option<&[f32]>) -> Result<Vec<f32>> {
+        decode_frame(self.bytes, base)
+    }
+
+    /// Decode into a caller-owned buffer — see [`decode_frame_into`].
+    pub fn decode_into(&self, base: Option<&[f32]>, out: &mut Vec<f32>) -> Result<()> {
+        decode_frame_into(self.bytes, base, out)
+    }
+}
+
+/// Serialize `x` as a dense frame, tier-tagged, straight into `frame`'s
+/// byte buffer (cleared, reused) — byte-identical to
+/// `Repr::dense(x).to_frame_tagged(tier)` without staging a [`Repr`] or
+/// allocating. The §11 cascade re-frames its accumulator with this at
+/// every shard boundary.
+pub fn write_dense_frame_into(x: &[f32], tier: u8, frame: &mut Frame) {
+    let out = &mut frame.bytes;
+    out.clear();
+    out.reserve(HEADER_BYTES as usize + 4 * x.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(WIRE_VERSION);
+    out.push(0); // flags: dense, unquantized
+    out.push(0); // quant bits
+    out.push(tier);
+    out.extend_from_slice(&(x.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(x.len() as u32).to_le_bytes());
+    out.extend_from_slice(&0u64.to_le_bytes());
+    for &v in x {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    debug_assert_eq!(out.len() as u64, HEADER_BYTES + 4 * x.len() as u64);
 }
 
 /// Parsed frame header.
@@ -349,6 +459,19 @@ impl FrameHeader {
 /// self-describing: no pipeline object is needed, only the base model
 /// for delta frames (caller matches [`FrameHeader::base_version`]).
 pub fn decode_frame(bytes: &[u8], base: Option<&[f32]>) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    decode_frame_into(bytes, base, &mut out)?;
+    Ok(out)
+}
+
+/// [`decode_frame`] into a caller-owned buffer (cleared, reused) — the
+/// borrowed decode path: no index staging, no value staging for f32
+/// payloads (values stream from the wire bytes straight into the seeded
+/// destination), and dense quantized payloads unpack directly into
+/// `out`. Validation checks, value order, and scatter order all match
+/// [`decode_frame`]'s staging decoder, so the produced bits cannot
+/// differ (twin-tested in `rust/tests/params_fused.rs`).
+pub fn decode_frame_into(bytes: &[u8], base: Option<&[f32]>, out: &mut Vec<f32>) -> Result<()> {
     let h = FrameHeader::parse(bytes)?;
     anyhow::ensure!(
         bytes.len() as u64 == h.expect_bytes(),
@@ -356,18 +479,28 @@ pub fn decode_frame(bytes: &[u8], base: Option<&[f32]>) -> Result<Vec<f32>> {
         bytes.len(),
         h.expect_bytes()
     );
-    let mut off = HEADER_BYTES as usize;
-    let mut idx: Vec<u32> = Vec::new();
+    let idx_off = HEADER_BYTES as usize;
+    let mut off = idx_off;
     if h.delta || h.sparse {
-        idx.reserve(h.k);
         for i in 0..h.k {
             let v = rd_u32(bytes, off + 4 * i)?;
             anyhow::ensure!((v as usize) < h.dim, "frame index {v} out of range for dim {}", h.dim);
-            idx.push(v);
         }
         off += 4 * h.k;
     }
-    let vals: Vec<f32> = if h.quant_bits > 0 {
+    // seed the destination the values land in
+    if h.delta {
+        let base = base.ok_or_else(|| {
+            anyhow::anyhow!("delta frame (base version {}) needs the base model", h.base_version)
+        })?;
+        anyhow::ensure!(base.len() == h.dim, "base dim {} != frame dim {}", base.len(), h.dim);
+        out.clear();
+        out.extend_from_slice(base);
+    } else if h.sparse {
+        out.clear();
+        out.resize(h.dim, 0.0);
+    }
+    if h.quant_bits > 0 {
         let n_chunks = (h.k + QCHUNK - 1) / QCHUNK;
         let mut scales = Vec::with_capacity(n_chunks);
         for c in 0..n_chunks {
@@ -376,37 +509,32 @@ pub fn decode_frame(bytes: &[u8], base: Option<&[f32]>) -> Result<Vec<f32>> {
         off += 8 * n_chunks;
         let codes = bytes
             .get(off..)
-            .ok_or_else(|| anyhow::anyhow!("frame truncated: codes at offset {off}, len {}", bytes.len()))?
-            .to_vec();
-        dequantize(&QuantizedUpdate {
-            dim: h.k,
-            bits: h.quant_bits,
-            chunk: QCHUNK,
-            scales,
-            codes,
-        })
-    } else {
-        (0..h.k).map(|i| rd_f32(bytes, off + 4 * i)).collect::<Result<Vec<f32>>>()?
-    };
-    if h.delta {
-        let base = base.ok_or_else(|| {
-            anyhow::anyhow!("delta frame (base version {}) needs the base model", h.base_version)
-        })?;
-        anyhow::ensure!(base.len() == h.dim, "base dim {} != frame dim {}", base.len(), h.dim);
-        let mut out = base.to_vec();
-        for (&i, &v) in idx.iter().zip(&vals) {
-            out[i as usize] = v;
+            .ok_or_else(|| anyhow::anyhow!("frame truncated: codes at offset {off}, len {}", bytes.len()))?;
+        if h.delta || h.sparse {
+            // one transient dequantize: quantized values cannot stream
+            let mut vals = Vec::with_capacity(h.k);
+            dequantize_raw_into(h.k, h.quant_bits, QCHUNK, &scales, codes, &mut vals);
+            for (i, &v) in vals.iter().enumerate().take(h.k) {
+                let at = rd_u32(bytes, idx_off + 4 * i)? as usize;
+                out[at] = v;
+            }
+        } else {
+            dequantize_raw_into(h.k, h.quant_bits, QCHUNK, &scales, codes, out);
         }
-        Ok(out)
-    } else if h.sparse {
-        let mut out = vec![0.0f32; h.dim];
-        for (&i, &v) in idx.iter().zip(&vals) {
-            out[i as usize] = v;
+    } else if h.delta || h.sparse {
+        for i in 0..h.k {
+            let v = rd_f32(bytes, off + 4 * i)?;
+            let at = rd_u32(bytes, idx_off + 4 * i)? as usize;
+            out[at] = v;
         }
-        Ok(out)
     } else {
-        Ok(vals)
+        out.clear();
+        out.reserve(h.k);
+        for i in 0..h.k {
+            out.push(rd_f32(bytes, off + 4 * i)?);
+        }
     }
+    Ok(())
 }
 
 // ------------------------------------------------------------ size plan
@@ -1174,6 +1302,71 @@ mod tests {
         let q = Pipeline::parse("delta").unwrap();
         let f = q.encode(&x, Some((1, &x)), &mut rng).unwrap();
         assert!(f.decode(None).is_err());
+    }
+
+    #[test]
+    fn borrowed_decode_matches_owned_bitwise() {
+        // every pipeline shape: Frame::decode vs FrameRef::decode_into
+        // into a stale buffer must agree byte-for-byte
+        let base = gauss(5000, 21);
+        let mut x = base.clone();
+        for i in (0..x.len()).step_by(17) {
+            x[i] += 0.25;
+        }
+        for spec in ["dense", "q8", "topk:300", "topk:300|q4", "delta", "delta|q8"] {
+            let p = Pipeline::parse(spec).unwrap();
+            let needs_base = p.has_delta();
+            let mut rng = Rng::new(23);
+            let frame = p
+                .encode(&x, needs_base.then_some((5, &base[..])), &mut rng)
+                .unwrap();
+            let dec_base = needs_base.then_some(&base[..]);
+            let owned = frame.decode(dec_base).unwrap();
+            let mut borrowed = vec![9.0f32; 17]; // stale scratch
+            frame.view().decode_into(dec_base, &mut borrowed).unwrap();
+            assert_eq!(owned.len(), borrowed.len(), "{spec}");
+            for (i, (a, b)) in owned.iter().zip(&borrowed).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{spec} coord {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn repr_decode_into_matches_decode_bitwise() {
+        let base = gauss(3000, 31);
+        let mut x = base.clone();
+        x[11] = 4.5;
+        for spec in ["dense", "q8", "topk:40", "topk:40|q8", "delta"] {
+            let p = Pipeline::parse(spec).unwrap();
+            let needs_base = p.has_delta();
+            let mut rng = Rng::new(33);
+            let repr = p.run(&x, needs_base.then_some((2, &base[..])), &mut rng).unwrap();
+            let dec_base = needs_base.then_some(&base[..]);
+            let owned = repr.decode(dec_base).unwrap();
+            let mut out = vec![1.0f32; 5];
+            repr.decode_into(dec_base, &mut out).unwrap();
+            assert_eq!(owned.len(), out.len(), "{spec}");
+            for (a, b) in owned.iter().zip(&out) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{spec}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_frame_writer_is_byte_identical_to_repr_path() {
+        let x = gauss(2500, 41);
+        for tier in [0u8, 1] {
+            let staged = Repr::dense(&x).to_frame_tagged(tier);
+            let mut streamed = Frame { bytes: vec![0xAB; 3] }; // stale scratch
+            write_dense_frame_into(&x, tier, &mut streamed);
+            assert_eq!(staged.bytes, streamed.bytes, "tier {tier}");
+        }
+        // reuse across sizes: shrinking payload must not leave a tail
+        let y = gauss(100, 42);
+        let mut f = Frame { bytes: Vec::new() };
+        write_dense_frame_into(&x, 1, &mut f);
+        write_dense_frame_into(&y, 1, &mut f);
+        assert_eq!(f.bytes, Repr::dense(&y).to_frame_tagged(1).bytes);
     }
 
     #[test]

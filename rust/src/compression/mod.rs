@@ -237,25 +237,48 @@ pub fn quantize(update: &[f32], bits: u8, rng: &mut Rng) -> QuantizedUpdate {
 /// Invert [`quantize`] (up to quantization noise).
 pub fn dequantize(q: &QuantizedUpdate) -> Vec<f32> {
     let mut out = Vec::with_capacity(q.dim);
+    dequantize_into(q, &mut out);
+    out
+}
+
+/// [`dequantize`] into a caller-owned buffer (cleared, reused) — the
+/// zero-alloc decode path (DESIGN.md §14). Identical unpack walk, so
+/// the produced bits cannot differ from [`dequantize`]'s.
+pub fn dequantize_into(q: &QuantizedUpdate, out: &mut Vec<f32>) {
+    dequantize_raw_into(q.dim, q.bits, q.chunk, &q.scales, &q.codes, out);
+}
+
+/// The unpack walk behind [`dequantize`], over borrowed scales/codes —
+/// lets frame decoders dequantize wire bytes in place instead of
+/// copying them into an owned [`QuantizedUpdate`] first.
+pub fn dequantize_raw_into(
+    dim: usize,
+    bits: u8,
+    chunk: usize,
+    scales: &[(f32, f32)],
+    codes: &[u8],
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(dim);
     let mut bitpos = 0usize;
-    let mask = (1u32 << q.bits) - 1;
-    for i in 0..q.dim {
+    let mask = (1u32 << bits) - 1;
+    for i in 0..dim {
         let byte = bitpos / 8;
         let off = (bitpos % 8) as u32;
-        let mut raw = q.codes[byte] as u32 >> off;
+        let mut raw = codes[byte] as u32 >> off;
         let mut have = 8 - off;
         let mut next = byte + 1;
-        while have < q.bits as u32 {
-            raw |= (q.codes[next] as u32) << have;
+        while have < bits as u32 {
+            raw |= (codes[next] as u32) << have;
             have += 8;
             next += 1;
         }
         let code = raw & mask;
-        let (lo, step) = q.scales[i / q.chunk];
+        let (lo, step) = scales[i / chunk];
         out.push(lo + code as f32 * step);
-        bitpos += q.bits as usize;
+        bitpos += bits as usize;
     }
-    out
 }
 
 #[cfg(test)]

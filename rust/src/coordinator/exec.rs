@@ -67,12 +67,11 @@ impl ParallelExec {
         trace: Tracer,
     ) -> Result<Self> {
         anyhow::ensure!(workers >= 1, "exec pool needs >= 1 worker");
-        // Fail fast with the real error: a worker thread's factory
-        // failure only logs to stderr (the pool reports it later as an
-        // opaque "workers gone"), so validate the load here first.
-        Engine::load(&artifacts_dir)
-            .map(drop)
-            .map_err(|e| e.context(format!("exec pool cannot load engine from {artifacts_dir:?}")))?;
+        // WorkerPool::new is a readiness barrier: each worker's factory
+        // runs exactly once and a failure comes back from new() with the
+        // real error, so no validate-by-loading probe (and no second
+        // Engine::load per process) is needed here.
+        let dir_label = artifacts_dir.display().to_string();
         let pool = WorkerPool::new(
             workers,
             move |id| Engine::load(&artifacts_dir).map(|eng| (eng, id)),
@@ -103,7 +102,8 @@ impl ParallelExec {
                 };
                 (slot, out)
             },
-        )?;
+        )
+        .map_err(|e| e.context(format!("exec pool cannot load engine from {dir_label}")))?;
         Ok(Self { pool })
     }
 
@@ -114,13 +114,46 @@ impl ParallelExec {
     /// Run all jobs across the pool and return results **sorted by
     /// dispatch slot** (the deterministic reduction order). Any worker
     /// failure fails the round.
-    pub fn run_round(&self, jobs: Vec<ClientJob>) -> Result<Vec<LocalResult>> {
-        let n = jobs.len();
-        let mut outs = self.pool.map(jobs)?;
-        anyhow::ensure!(outs.len() == n, "pool returned {} of {n} results", outs.len());
-        outs.sort_by_key(|(slot, _)| *slot);
-        outs.into_iter()
-            .map(|(slot, r)| r.map_err(|e| anyhow!("client update (slot {slot}): {e}")))
-            .collect()
+    pub fn run_round(&self, mut jobs: Vec<ClientJob>) -> Result<Vec<LocalResult>> {
+        let mut scratch = ExecScratch::default();
+        let mut outs = Vec::with_capacity(jobs.len());
+        self.run_round_into(&mut jobs, &mut scratch, &mut outs)?;
+        Ok(outs)
     }
+
+    /// [`Self::run_round`] through caller-owned buffers — the round
+    /// loop's scratch path (DESIGN.md §14). `jobs` is drained (its spine
+    /// survives for next round), slot-tagged results stage in `scratch`,
+    /// and the sorted [`LocalResult`]s land in `outs`. The slot sort is
+    /// the same reduction order as [`Self::run_round`]: buffer reuse
+    /// changes where results live, never the sequence they fold in.
+    pub fn run_round_into(
+        &self,
+        jobs: &mut Vec<ClientJob>,
+        scratch: &mut ExecScratch,
+        outs: &mut Vec<LocalResult>,
+    ) -> Result<()> {
+        let n = jobs.len();
+        self.pool.map_into(jobs.drain(..), &mut scratch.tagged)?;
+        anyhow::ensure!(
+            scratch.tagged.len() == n,
+            "pool returned {} of {n} results",
+            scratch.tagged.len()
+        );
+        scratch.tagged.sort_by_key(|(slot, _)| *slot);
+        outs.clear();
+        outs.reserve(n);
+        for (slot, r) in scratch.tagged.drain(..) {
+            outs.push(r.map_err(|e| anyhow!("client update (slot {slot}): {e}"))?);
+        }
+        Ok(())
+    }
+}
+
+/// Reusable per-round dispatch buffers for
+/// [`ParallelExec::run_round_into`] — cleared each round, reallocated
+/// never (the scratch-reuse front of DESIGN.md §14).
+#[derive(Default)]
+pub struct ExecScratch {
+    tagged: Vec<Out>,
 }

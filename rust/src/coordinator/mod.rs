@@ -35,7 +35,7 @@ pub mod fleet;
 pub mod scheduler;
 pub mod shards;
 
-pub use exec::{ClientJob, ParallelExec};
+pub use exec::{ClientJob, ExecScratch, ParallelExec};
 pub use fleet::{DeviceProfile, Fleet, FleetProfile};
 pub use scheduler::{
     fault_of, overselect_count, plan_async_wave, plan_round, schedule_async_wave, schedule_round,

@@ -91,6 +91,30 @@ pub trait Aggregator {
     /// [`mean_combine`](Self::mean_combine)).
     fn combine(&self, deltas: &[(f32, &[f32])]) -> Result<ParamVec>;
 
+    /// [`combine`](Self::combine) into a caller-owned buffer — the round
+    /// loop's scratch path (DESIGN.md §14): the server clears and refills
+    /// one aggregate buffer per round instead of allocating. Must fill
+    /// `out` with **bit-identical** contents to what `combine` returns.
+    /// The default routes through `combine`, so custom rules that only
+    /// implement the two required methods keep working unchanged; the
+    /// built-in rules override it with allocation-free kernels.
+    fn combine_into(&self, deltas: &[(f32, &[f32])], out: &mut ParamVec) -> Result<()> {
+        *out = self.combine(deltas)?;
+        Ok(())
+    }
+
+    /// Worker threads the rule may use inside its combine kernels (the
+    /// order-statistic rules split coordinate blocks across threads; see
+    /// `params::trimmed_mean_into`). Purely an execution knob: results
+    /// must stay bit-identical at any worker count, and it is
+    /// deliberately **not** part of [`AggConfig`] — worker counts are
+    /// excluded from the run fingerprint, so a resumed run may use a
+    /// different machine's parallelism. Default: ignored (rules whose
+    /// kernels are inherently sequential).
+    fn set_workers(&mut self, workers: usize) {
+        let _ = workers;
+    }
+
     /// Stage 2 — turn the (possibly DP-noised) aggregate delta into the
     /// increment added to `w_t`. Stateful server optimizers update their
     /// moments here, keyed by `round` only for labeling/debugging — the
@@ -237,6 +261,11 @@ impl Aggregator for FedAvg {
         Ok(params::weighted_mean(deltas))
     }
 
+    fn combine_into(&self, deltas: &[(f32, &[f32])], out: &mut ParamVec) -> Result<()> {
+        params::weighted_mean_into(out, deltas);
+        Ok(())
+    }
+
     fn step(&mut self, _round: u64, delta: ParamVec) -> Result<ParamVec> {
         Ok(lr_step(self.server_lr, delta))
     }
@@ -263,6 +292,11 @@ impl Aggregator for FedAvgM {
 
     fn combine(&self, deltas: &[(f32, &[f32])]) -> Result<ParamVec> {
         Ok(params::weighted_mean(deltas))
+    }
+
+    fn combine_into(&self, deltas: &[(f32, &[f32])], out: &mut ParamVec) -> Result<()> {
+        params::weighted_mean_into(out, deltas);
+        Ok(())
     }
 
     fn step(&mut self, _round: u64, delta: ParamVec) -> Result<ParamVec> {
@@ -331,6 +365,11 @@ impl Aggregator for FedAdam {
         Ok(params::weighted_mean(deltas))
     }
 
+    fn combine_into(&self, deltas: &[(f32, &[f32])], out: &mut ParamVec) -> Result<()> {
+        params::weighted_mean_into(out, deltas);
+        Ok(())
+    }
+
     fn step(&mut self, _round: u64, delta: ParamVec) -> Result<ParamVec> {
         if self.m.is_empty() {
             self.m = vec![0.0; delta.len()];
@@ -393,6 +432,9 @@ impl Aggregator for FedAdam {
 struct TrimmedMean {
     server_lr: f64,
     frac: f64,
+    /// Threads for the blocked per-coordinate kernel (execution knob
+    /// only — bit-identical at any count; see `Aggregator::set_workers`).
+    workers: usize,
 }
 
 impl Aggregator for TrimmedMean {
@@ -401,8 +443,19 @@ impl Aggregator for TrimmedMean {
     }
 
     fn combine(&self, deltas: &[(f32, &[f32])]) -> Result<ParamVec> {
+        let mut out = ParamVec::new();
+        self.combine_into(deltas, &mut out)?;
+        Ok(out)
+    }
+
+    fn combine_into(&self, deltas: &[(f32, &[f32])], out: &mut ParamVec) -> Result<()> {
         let vecs: Vec<&[f32]> = deltas.iter().map(|(_, d)| *d).collect();
-        Ok(params::trimmed_mean(&vecs, self.frac))
+        params::trimmed_mean_into(out, &vecs, self.frac, self.workers);
+        Ok(())
+    }
+
+    fn set_workers(&mut self, workers: usize) {
+        self.workers = workers.max(1);
     }
 
     fn step(&mut self, _round: u64, delta: ParamVec) -> Result<ParamVec> {
@@ -414,6 +467,9 @@ impl Aggregator for TrimmedMean {
 /// `η_s`: the maximal trim, robust to just under half the cohort.
 struct Median {
     server_lr: f64,
+    /// Threads for the blocked per-coordinate kernel (execution knob
+    /// only — bit-identical at any count; see `Aggregator::set_workers`).
+    workers: usize,
 }
 
 impl Aggregator for Median {
@@ -422,8 +478,19 @@ impl Aggregator for Median {
     }
 
     fn combine(&self, deltas: &[(f32, &[f32])]) -> Result<ParamVec> {
+        let mut out = ParamVec::new();
+        self.combine_into(deltas, &mut out)?;
+        Ok(out)
+    }
+
+    fn combine_into(&self, deltas: &[(f32, &[f32])], out: &mut ParamVec) -> Result<()> {
         let vecs: Vec<&[f32]> = deltas.iter().map(|(_, d)| *d).collect();
-        Ok(params::median(&vecs))
+        params::median_into(out, &vecs, self.workers);
+        Ok(())
+    }
+
+    fn set_workers(&mut self, workers: usize) {
+        self.workers = workers.max(1);
     }
 
     fn step(&mut self, _round: u64, delta: ParamVec) -> Result<ParamVec> {
@@ -509,6 +576,7 @@ fn parse_trimmed(tok: &str, cfg: &AggConfig) -> Result<Option<Box<dyn Aggregator
     Ok(Some(Box::new(TrimmedMean {
         server_lr: cfg.lr_or(1.0),
         frac,
+        workers: 1,
     })))
 }
 
@@ -516,6 +584,7 @@ fn parse_median(tok: &str, cfg: &AggConfig) -> Result<Option<Box<dyn Aggregator>
     Ok((tok == "median").then(|| {
         Box::new(Median {
             server_lr: cfg.lr_or(1.0),
+            workers: 1,
         }) as Box<dyn Aggregator>
     }))
 }
@@ -725,6 +794,34 @@ mod tests {
             .build()
             .unwrap();
             assert_eq!(agg.mean_combine(), ok, "{spec}");
+        }
+    }
+
+    #[test]
+    fn combine_into_matches_combine_bitwise_for_every_rule() {
+        let deltas: Vec<(f32, ParamVec)> = (0..7)
+            .map(|c| {
+                let v: ParamVec = (0..33).map(|i| ((c * 31 + i) as f32 * 0.7).sin()).collect();
+                ((c + 1) as f32, v)
+            })
+            .collect();
+        let refs: Vec<(f32, &[f32])> = deltas.iter().map(|(w, d)| (*w, d.as_slice())).collect();
+        for spec in ["fedavg", "fedavgm", "fedadam", "trimmed:0.2", "median"] {
+            for workers in [1usize, 3] {
+                let mut agg = AggConfig {
+                    spec: spec.into(),
+                    ..Default::default()
+                }
+                .build()
+                .unwrap();
+                agg.set_workers(workers); // must never change bits
+                let owned = agg.combine(&refs).unwrap();
+                let mut out = vec![5.0f32; 3]; // stale scratch must be cleared
+                agg.combine_into(&refs, &mut out).unwrap();
+                let same = owned.len() == out.len()
+                    && owned.iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "{spec} workers={workers}: combine_into != combine");
+            }
         }
     }
 

@@ -28,7 +28,7 @@
 //! medians is not the cohort median), so only
 //! [`Aggregator::mean_combine`] rules may shard.
 
-use crate::comms::wire::Repr;
+use crate::comms::wire::{write_dense_frame_into, Frame};
 use crate::coordinator::shards::{shard_ranges, tier_transfer_seconds, TierLink};
 use crate::params::{self, ParamVec};
 use crate::Result;
@@ -83,8 +83,17 @@ pub fn combine_sharded(
     anyhow::ensure!(total > 0.0, "combine_sharded: non-positive total weight");
 
     let mut acc = vec![0.0f32; dim];
+    // One reusable tier-1 frame for every exchange in the cascade: each
+    // hop re-frames the accumulator in place via `write_dense_frame_into`
+    // (byte-identical to `Repr::dense(..).to_frame_tagged`) and decodes
+    // it back into the same accumulator spine, so the whole cascade
+    // touches O(1) buffers instead of allocating per hop (DESIGN.md §14).
+    // The frames are still fully materialized — the byte/second
+    // accounting prices real wire images, not estimates.
+    // lint:allow(hot-alloc): one frame allocation per cascade, reused across all 2S-1 exchanges.
+    let mut frame = Frame { bytes: Vec::new() };
     let mut out = ShardCombine {
-        delta: Vec::new(),
+        delta: ParamVec::new(),
         shards_used: 0,
         up_bytes: 0,
         down_bytes: 0,
@@ -98,19 +107,19 @@ pub fn combine_sharded(
         if out.shards_used > 0 {
             // root → edge: ship the running accumulator through a real
             // tier-1 frame (dense f32 round-trips bit-exactly)
-            let frame = Repr::dense(&acc).to_frame_tagged(EDGE_TIER);
+            write_dense_frame_into(&acc, EDGE_TIER, &mut frame);
             out.down_bytes += frame.wire_bytes();
             out.frames += 1;
             out.seconds += tier_transfer_seconds(link, frame.wire_bytes());
-            acc = frame.decode(None)?;
+            frame.decode_into(None, &mut acc)?;
         }
         params::weighted_fold(&mut acc, &deltas[range], total);
         // edge → root: the updated accumulator comes back the same way
-        let frame = Repr::dense(&acc).to_frame_tagged(EDGE_TIER);
+        write_dense_frame_into(&acc, EDGE_TIER, &mut frame);
         out.up_bytes += frame.wire_bytes();
         out.frames += 1;
         out.seconds += tier_transfer_seconds(link, frame.wire_bytes());
-        acc = frame.decode(None)?;
+        frame.decode_into(None, &mut acc)?;
         out.shards_used += 1;
     }
     out.delta = acc;

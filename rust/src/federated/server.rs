@@ -25,8 +25,8 @@ use std::sync::Arc;
 use crate::comms::{CommModel, CommSim, CommTotals, Transport, TransportConfig};
 use crate::config::FedConfig;
 use crate::coordinator::{
-    plan_async_wave, plan_round, ClientJob, Fleet, FleetConfig, FleetTotals, LatePolicy,
-    ParallelExec, RoundPlan, TierLink, WavePlan,
+    plan_async_wave, plan_round, ClientJob, ExecScratch, Fleet, FleetConfig, FleetTotals,
+    LatePolicy, ParallelExec, RoundPlan, TierLink, WavePlan,
 };
 use crate::data::Federated;
 use crate::federated::aggregate::{
@@ -174,6 +174,10 @@ pub fn run(
     // rule under secure aggregation, which hides the individual updates
     // the order statistics need) must fail before any work happens.
     let mut aggregator = opts.agg.build()?;
+    // Execution knob only — combine kernels are bit-identical at any
+    // worker count, which is why workers stay out of AggConfig and the
+    // RunMeta fingerprint (resume may change machines).
+    aggregator.set_workers(opts.fleet.workers.max(1));
     let agg_label = aggregator.label();
     if opts.secure_agg {
         anyhow::ensure!(
@@ -599,6 +603,15 @@ pub fn run(
     };
 
     let tr = opts.trace.clone();
+    // Per-round scratch (DESIGN.md §14): cleared every round, reallocated
+    // never. Dispatch jobs + the pool's slot-tagged staging + the sorted
+    // results cover the fan-out; `agg_buf` is the combine target, whose
+    // spine round-trips through `Aggregator::step` (stateless steps move
+    // the same vec through) and is reclaimed after the axpy.
+    let mut scratch_jobs: Vec<ClientJob> = Vec::new();
+    let mut exec_scratch = ExecScratch::default();
+    let mut results_buf: Vec<LocalResult> = Vec::new();
+    let mut agg_buf: ParamVec = ParamVec::new();
     for round in start_round..=cfg.rounds as u64 {
         let sp_round = tr.begin(round, "round", 0);
         rounds_run = round;
@@ -720,14 +733,12 @@ pub fn run(
                     ^ (ck as u64).wrapping_mul(0xD1B54A32D192ED03),
             })
             .collect();
-        let results: Vec<LocalResult> = match &exec {
+        match &exec {
             Some(pool) => {
                 let theta0 = Arc::new(theta.clone());
-                let jobs: Vec<ClientJob> = train_list
-                    .iter()
-                    .zip(&specs)
-                    .enumerate()
-                    .map(|(slot, (&client, spec))| ClientJob {
+                scratch_jobs.clear();
+                scratch_jobs.extend(train_list.iter().zip(&specs).enumerate().map(
+                    |(slot, (&client, spec))| ClientJob {
                         slot,
                         round,
                         client,
@@ -736,24 +747,23 @@ pub fn run(
                             None => theta0.clone(),
                         },
                         spec: spec.clone(),
-                    })
-                    .collect();
-                pool.run_round(jobs)?
+                    },
+                ));
+                pool.run_round_into(&mut scratch_jobs, &mut exec_scratch, &mut results_buf)?;
             }
-            None => train_list
-                .iter()
-                .zip(&specs)
-                .enumerate()
-                .map(|(slot, (&ck, spec))| {
+            None => {
+                results_buf.clear();
+                results_buf.reserve(train_list.len());
+                for (slot, (&ck, spec)) in train_list.iter().zip(&specs).enumerate() {
                     let start = start_models[slot].as_deref().unwrap_or(&theta);
                     let sp = tr
                         .begin(round, "local_train", 2)
                         .map(|s| s.client(ck as u64));
                     let res = local_update(&model, &fed.train, &fed.clients[ck], start, spec);
                     tr.end(sp);
-                    res
-                })
-                .collect::<Result<_>>()?,
+                    results_buf.push(res?);
+                }
+            }
         };
         tr.end(sp_dispatch);
 
@@ -767,7 +777,7 @@ pub fn run(
         let sp = tr.begin(round, "encode_up", 1);
         let mut deltas: Vec<(f32, ParamVec)> = Vec::with_capacity(picks.len());
         let mut wire_up_bytes = 0u64;
-        for (slot, (&ck, res)) in train_list.iter().zip(results).enumerate() {
+        for (slot, (&ck, res)) in train_list.iter().zip(results_buf.drain(..)).enumerate() {
             metrics.add("client.steps", res.steps);
             let mut delta = res.theta;
             for (d, t) in delta.iter_mut().zip(&theta) {
@@ -848,7 +858,8 @@ pub fn run(
                             (staleness_weight(wt, decay, s), e.delta.as_slice())
                         })
                         .collect();
-                    let mut d = aggregator.combine(&refs)?;
+                    aggregator.combine_into(&refs, &mut agg_buf)?;
+                    let mut d = std::mem::take(&mut agg_buf);
                     // overall staleness attenuation Σn·dᔆ/Σn at the
                     // combine∘step seam, before the DP noise — guarded
                     // so decay 1.0 never rounds through f64
@@ -872,6 +883,7 @@ pub fn run(
                 }
                 let step = aggregator.step(a.applies_done + 1, agg_delta)?;
                 crate::params::axpy(&mut theta, 1.0, &step);
+                agg_buf = step; // reclaim the spine for the next combine
                 tr.end(sp);
                 a.applies_done += 1;
                 a.deltas_since_eval += buf as u64;
@@ -973,7 +985,10 @@ pub fn run(
                         metrics.observe("tier.seconds", sc.seconds);
                         sc.delta
                     }
-                    None => aggregator.combine(&refs)?,
+                    None => {
+                        aggregator.combine_into(&refs, &mut agg_buf)?;
+                        std::mem::take(&mut agg_buf)
+                    }
                 }
             };
             // overall staleness attenuation at the combine∘step seam,
@@ -995,6 +1010,7 @@ pub fn run(
             }
             let step = aggregator.step(round, agg_delta)?;
             crate::params::axpy(&mut theta, 1.0, &step);
+            agg_buf = step; // reclaim the spine for the next combine
             tr.end(sp);
             let sp = tr.begin(round, "account", 1);
             let rc = match &plan {

@@ -824,7 +824,7 @@ fn cmd_fleet_sim(args: &Args, cfg: &FedConfig, fleet: &FleetConfig) -> Result<()
 fn cmd_bench(args: &Args) -> Result<()> {
     use fedavg::obs::bench::{self, AreaStatus};
     use fedavg::util::bench::Bencher;
-    args.check_known(&["areas", "out", "check", "quick"])?;
+    args.check_known(&["areas", "out", "check", "quick", "compare", "tolerance"])?;
     let areas: Vec<String> = match args.str_opt("areas") {
         Some(list) => list
             .split(',')
@@ -835,7 +835,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
     };
     anyhow::ensure!(!areas.is_empty(), "--areas: empty area list");
     let check = args.has("check");
-    let out = args.str_or("out", if check { "target/bench-check" } else { "." });
+    // --compare: re-measure and diff against committed snapshots instead
+    // of re-recording them. Exit codes split the failure modes for CI:
+    // schema drift (snapshot and code disagree on the case set) is a
+    // hard error (exit 1); timing past --tolerance exits 2, which the
+    // bench-smoke job downgrades to a warning on its noisy runner.
+    let compare = args.str_opt("compare");
+    let tolerance = args.f64_or("tolerance", 10.0)?;
+    anyhow::ensure!(
+        tolerance.is_finite() && tolerance >= 0.0,
+        "--tolerance: want a non-negative percent, got {tolerance}"
+    );
+    let out = args.str_or(
+        "out",
+        // compare mode must not clobber the committed snapshots it reads
+        if check || compare.is_some() { "target/bench-check" } else { "." },
+    );
     let out = std::path::Path::new(&out);
     println!(
         "bench harness — {} area(s), {} profile, snapshots under {}\n",
@@ -850,6 +865,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         out.display()
     );
     let mut recorded = 0usize;
+    let mut regressions = 0usize;
     for area in &areas {
         // fresh bencher per area: each snapshot holds only its own cases
         let mut b = if check {
@@ -871,12 +887,41 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let cases = bench::validate_snapshot(&std::fs::read_to_string(&path)?)?;
         println!("wrote {} ({cases} cases)\n", path.display());
         recorded += 1;
+        if let Some(cmp) = &compare {
+            let cmp_path = std::path::Path::new(cmp);
+            let snap_path = if cmp_path.is_dir() {
+                cmp_path.join(format!("BENCH_{area}.json"))
+            } else {
+                anyhow::ensure!(
+                    areas.len() == 1,
+                    "--compare {cmp}: a single snapshot file compares a single \
+                     area — use --areas <one> or point --compare at a directory"
+                );
+                cmp_path.to_path_buf()
+            };
+            let old = std::fs::read_to_string(&snap_path).map_err(|e| {
+                anyhow::anyhow!("--compare: cannot read {}: {e}", snap_path.display())
+            })?;
+            let (deltas, reg) = bench::compare_snapshot(&old, area, b.results(), tolerance)?;
+            print!("{}", bench::fmt_deltas(area, &deltas, tolerance));
+            println!();
+            if reg {
+                regressions += 1;
+            }
+        }
     }
     println!(
         "bench: {recorded}/{} areas recorded, snapshots validated against {:?}",
         areas.len(),
         bench::BENCH_SCHEMA
     );
+    if regressions > 0 {
+        eprintln!(
+            "bench: {regressions} area(s) slower than the snapshot beyond \
+             --tolerance {tolerance}%"
+        );
+        std::process::exit(2);
+    }
     Ok(())
 }
 
@@ -1005,6 +1050,7 @@ USAGE:
              [--sim-only] [--start-round R] [--step-cost S] [--model-bytes B]
              [--steps U] [--trace] [+ run flags]
   fedavg bench [--areas a1,a2,..] [--out DIR] [--check] [--quick]
+             [--compare PATH] [--tolerance PCT]
   fedavg lint [--json] [--fix-allow]
   fedavg oneshot [--model M] [--e N]
   fedavg info
@@ -1080,6 +1126,12 @@ and BENCH files). `fedavg bench` runs the bench areas (params_hot_path,
 codec_pipeline, fleet_round, aggregators, client_update) and records
 committed BENCH_<area>.json snapshots — median/p10/p90 ns per case,
 machine-tagged (schema: BENCH_schema.md); --check is the CI smoke mode.
+`--compare PATH` (a snapshot file, or a directory holding
+BENCH_<area>.json) re-measures and prints per-case mean/p10/p90 deltas
+against the committed trajectory without touching it (--out defaults to
+target/bench-check): exit 2 when any area's mean regresses past
+--tolerance PCT (default 10), exit 1 on schema drift — a renamed,
+added, or removed case means the snapshot must be re-recorded.
 
 Crash safety: --checkpoint-every N snapshots the complete run state
 (model, optimizer moments, RNG streams, error-feedback residuals, model

@@ -102,6 +102,26 @@ pub fn params_hot_path(b: &mut Bencher) {
             },
         );
 
+        // the recorded before/after pair (DESIGN.md §14): the pre-fusion
+        // two-pass kernel kept in params::reference vs the fused
+        // single-traversal kernel reusing one output buffer
+        b.bench_elems(
+            &format!("ref/weighted_mean/10clients/{name}"),
+            (10 * p) as f64,
+            || {
+                std::hint::black_box(params::reference::weighted_mean(&weighted));
+            },
+        );
+        let mut wm_out = params::ParamVec::new();
+        b.bench_elems(
+            &format!("weighted_mean_into/10clients/{name}"),
+            (10 * p) as f64,
+            || {
+                params::weighted_mean_into(&mut wm_out, &weighted);
+                std::hint::black_box(wm_out.len());
+            },
+        );
+
         let mut acc = vec![0.0f32; p];
         b.bench_elems(&format!("axpy/{name}"), p as f64, || {
             params::axpy(&mut acc, 0.5, &vecs[0]);
@@ -169,6 +189,13 @@ pub fn codec_pipeline(b: &mut Bencher) -> Result<()> {
     b.bench_elems("decode/topk:0.01|q8", dim as f64, || {
         std::hint::black_box(frame.decode(None).unwrap());
     });
+    // the recorded before/after pair (DESIGN.md §14): owned decode above
+    // vs the borrowed-frame view decoding into a reused buffer
+    let mut dec_buf = Vec::new();
+    b.bench_elems("decode_into/topk:0.01|q8", dim as f64, || {
+        frame.view().decode_into(None, &mut dec_buf).unwrap();
+        std::hint::black_box(dec_buf.len());
+    });
     Ok(())
 }
 
@@ -215,6 +242,17 @@ pub fn fleet_round(b: &mut Bencher) -> Result<()> {
     b.bench_elems("combine_flat/50clients/2nn_199k", (m * dim) as f64, || {
         std::hint::black_box(agg.combine(&refs).unwrap());
     });
+    // the recorded before/after pair (DESIGN.md §14): allocating combine
+    // above vs combine_into refilling the round loop's scratch buffer
+    let mut flat_buf = Vec::new();
+    b.bench_elems(
+        "combine_into_flat/50clients/2nn_199k",
+        (m * dim) as f64,
+        || {
+            agg.combine_into(&refs, &mut flat_buf).unwrap();
+            std::hint::black_box(flat_buf.len());
+        },
+    );
     for s in [1usize, 8] {
         b.bench_elems(
             &format!("combine_sharded/s={s}/50clients/2nn_199k"),
@@ -246,6 +284,34 @@ pub fn aggregators(b: &mut Bencher) -> Result<()> {
         .build()?;
         b.bench_elems(&format!("combine/{spec}"), dim as f64, || {
             std::hint::black_box(agg.combine(&refs).unwrap());
+        });
+    }
+
+    // the recorded before/after pairs (DESIGN.md §14): the pre-fusion
+    // kernels kept in params::reference vs the blocked kernels above,
+    // plus the blocked order statistics threaded at 4 workers
+    // (bit-identical at any worker count — speed is the only difference)
+    let vec_refs: Vec<&[f32]> = deltas.iter().map(|d| d.as_slice()).collect();
+    b.bench_elems("ref/combine/fedavg", dim as f64, || {
+        std::hint::black_box(params::reference::weighted_mean(&refs));
+    });
+    b.bench_elems("ref/combine/trimmed:0.1", dim as f64, || {
+        std::hint::black_box(params::reference::trimmed_mean(&vec_refs, 0.1));
+    });
+    b.bench_elems("ref/combine/median", dim as f64, || {
+        std::hint::black_box(params::reference::median(&vec_refs));
+    });
+    for spec in ["trimmed:0.1", "median"] {
+        let mut agg = AggConfig {
+            spec: spec.into(),
+            ..Default::default()
+        }
+        .build()?;
+        agg.set_workers(4);
+        let mut out = params::ParamVec::new();
+        b.bench_elems(&format!("combine_into/{spec}/workers=4"), dim as f64, || {
+            agg.combine_into(&refs, &mut out).unwrap();
+            std::hint::black_box(out.len());
         });
     }
 
@@ -460,6 +526,115 @@ pub fn validate_snapshot(text: &str) -> Result<usize> {
     Ok(names.len())
 }
 
+// --------------------------------------------------------------- compare
+
+/// One case's old-vs-new movement from [`compare_snapshot`].
+#[derive(Debug, Clone)]
+pub struct CaseDelta {
+    pub name: String,
+    /// Mean-time change in percent (positive = slower than the snapshot).
+    pub mean_pct: f64,
+    pub p10_pct: f64,
+    pub p90_pct: f64,
+    pub old_mean_ns: f64,
+    pub new_mean_ns: f64,
+}
+
+/// Compare freshly-measured `results` against a committed snapshot's
+/// text (`fedavg bench --compare`).
+///
+/// **Schema drift is a hard error** (`Err`): a wrong schema id, a
+/// different area, or a case-set mismatch in either direction means the
+/// snapshot and the code no longer describe the same benchmark — the fix
+/// is to re-record, not to compare. **Timing movement is not an error**:
+/// the returned flag is `true` when any case's mean grew by more than
+/// `tolerance_pct`, and the caller decides how loudly to fail (CI's
+/// `bench-smoke` treats it as a warning on the noisy shared runner; see
+/// `.github/workflows/ci.yml`).
+pub fn compare_snapshot(
+    old_text: &str,
+    area: &str,
+    results: &[BenchResult],
+    tolerance_pct: f64,
+) -> Result<(Vec<CaseDelta>, bool)> {
+    validate_snapshot(old_text)?;
+    let j = Json::parse(old_text)?;
+    let old_area = j.get("area")?.as_str()?;
+    anyhow::ensure!(
+        old_area == area,
+        "snapshot is for area {old_area:?}, comparing against {area:?}"
+    );
+    let cases = j.get("cases")?.as_arr()?;
+    let mut old: Vec<(String, f64, f64, f64)> = Vec::with_capacity(cases.len());
+    for c in cases {
+        old.push((
+            c.get("name")?.as_str()?.to_string(),
+            c.get("mean_ns")?.as_f64()?,
+            c.get("p10_ns")?.as_f64()?,
+            c.get("p90_ns")?.as_f64()?,
+        ));
+    }
+    for (name, ..) in &old {
+        anyhow::ensure!(
+            results.iter().any(|r| &r.name == name),
+            "schema drift: snapshot case {name:?} was not measured this run — \
+             re-record the snapshot"
+        );
+    }
+    let mut deltas = Vec::with_capacity(results.len());
+    let mut regressed = false;
+    for r in results {
+        let Some((_, om, op10, op90)) = old.iter().find(|(n, ..)| n == &r.name) else {
+            anyhow::bail!(
+                "schema drift: case {:?} is not in the snapshot — re-record the snapshot",
+                r.name
+            );
+        };
+        let pct = |new: f64, old: f64| {
+            if old > 0.0 {
+                (new - old) / old * 100.0
+            } else {
+                0.0
+            }
+        };
+        let d = CaseDelta {
+            name: r.name.clone(),
+            mean_pct: pct(r.mean_ns, *om),
+            p10_pct: pct(r.p10_ns, *op10),
+            p90_pct: pct(r.p90_ns, *op90),
+            old_mean_ns: *om,
+            new_mean_ns: r.mean_ns,
+        };
+        if d.mean_pct > tolerance_pct {
+            regressed = true;
+        }
+        deltas.push(d);
+    }
+    Ok((deltas, regressed))
+}
+
+/// Render [`compare_snapshot`]'s deltas as an aligned report.
+pub fn fmt_deltas(area: &str, deltas: &[CaseDelta], tolerance_pct: f64) -> String {
+    let mut out = format!("area {area}: change vs snapshot (tolerance {tolerance_pct}%)\n");
+    for d in deltas {
+        out.push_str(&format!(
+            "  {:<44} mean {:>12.1} -> {:>12.1} ns ({:+7.1}%)  p10 {:+7.1}%  p90 {:+7.1}%{}\n",
+            d.name,
+            d.old_mean_ns,
+            d.new_mean_ns,
+            d.mean_pct,
+            d.p10_pct,
+            d.p90_pct,
+            if d.mean_pct > tolerance_pct {
+                "  <-- REGRESSION"
+            } else {
+                ""
+            }
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -516,5 +691,30 @@ mod tests {
     fn unknown_area_is_refused() {
         let mut b = check_bencher();
         assert!(run_area("nope", &mut b).is_err());
+    }
+
+    #[test]
+    fn compare_reports_deltas_and_flags_regressions() {
+        let old = snapshot_json("a", "m", 1, &[result("x")]);
+        // identical timings: zero delta, no regression
+        let (d, reg) = compare_snapshot(&old, "a", &[result("x")], 5.0).unwrap();
+        assert!(!reg);
+        assert!(d[0].mean_pct.abs() < 1e-9, "{:?}", d[0]);
+        // 50% slower mean: flagged above a 5% tolerance...
+        let mut slow = result("x");
+        slow.mean_ns *= 1.5;
+        let (d, reg) = compare_snapshot(&old, "a", &[slow.clone()], 5.0).unwrap();
+        assert!(reg && d[0].mean_pct > 49.0, "{:?}", d[0]);
+        assert!(fmt_deltas("a", &d, 5.0).contains("REGRESSION"));
+        // ...but tolerated at 60%
+        let (_, reg) = compare_snapshot(&old, "a", &[slow], 60.0).unwrap();
+        assert!(!reg);
+        // schema drift is a hard error: wrong area, renamed case, or a
+        // case added/removed on either side
+        assert!(compare_snapshot(&old, "b", &[result("x")], 5.0).is_err());
+        assert!(compare_snapshot(&old, "a", &[result("y")], 5.0).is_err());
+        assert!(compare_snapshot(&old, "a", &[result("x"), result("y")], 5.0).is_err());
+        let two = snapshot_json("a", "m", 1, &[result("x"), result("y")]);
+        assert!(compare_snapshot(&two, "a", &[result("x")], 5.0).is_err());
     }
 }

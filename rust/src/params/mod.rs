@@ -7,23 +7,51 @@
 //! pass, chunk-unrolled so LLVM auto-vectorizes them. The order-statistic
 //! kernels ([`trimmed_mean`], [`median`]) under the robust aggregators
 //! (`federated::aggregate`, DESIGN.md §7) are the exception: they sort
-//! per coordinate, O(dim · m log m) for an m-client cohort.
+//! per coordinate, O(dim · m log m) for an m-client cohort — so they are
+//! blocked for cache locality and can fan out across workers
+//! (coordinates are independent, so threading cannot reorder any float
+//! fold; DESIGN.md §14).
+//!
+//! Every fused or parallel kernel here has an unfused twin in
+//! [`reference`] and a byte-for-byte identity test in
+//! `rust/tests/params_fused.rs`.
 
 /// A model's parameters (or a gradient) as a flat dense vector.
 pub type ParamVec = Vec<f32>;
+
+/// Column-block width for the order-statistic kernels: the m×block slab
+/// keeps gather reads in short contiguous runs per client vector and is
+/// the unit of work handed to each worker.
+const COL_BLOCK: usize = 64;
 
 /// Weighted mean of parameter vectors: `Σ w_i · x_i / Σ w_i`.
 ///
 /// This is Algorithm 1's server update with `w_i = n_k` over the selected
 /// clients. Panics if inputs are empty, lengths mismatch, or `Σ w_i <= 0`.
 pub fn weighted_mean(items: &[(f32, &[f32])]) -> ParamVec {
+    let mut out = Vec::with_capacity(items.first().map_or(0, |(_, x)| x.len()));
+    weighted_mean_into(&mut out, items);
+    out
+}
+
+/// Fused [`weighted_mean`] into a caller-owned buffer (cleared, reused —
+/// the round loop's scratch; DESIGN.md §14). One traversal per input
+/// vector and no zero-fill pass: the first item is folded as
+/// `0.0 + s₀·x₀[j]`, which is exactly the op sequence the reference's
+/// zeros-then-[`axpy`] performs — the explicit `0.0 +` keeps the IEEE
+/// `-0.0 → +0.0` normalisation a bare `s₀·x₀[j]` would lose — and the
+/// remaining items go through the same [`weighted_fold`]. Bit-identical
+/// to [`reference::weighted_mean`] by construction.
+pub fn weighted_mean_into(out: &mut ParamVec, items: &[(f32, &[f32])]) {
     assert!(!items.is_empty(), "weighted_mean of nothing");
-    let dim = items[0].1.len();
     let total: f64 = weight_total(items);
     assert!(total > 0.0, "weighted_mean: non-positive total weight");
-    let mut out = vec![0.0f32; dim];
-    weighted_fold(&mut out, items, total);
-    out
+    let (w0, x0) = items[0];
+    let s0 = (w0 as f64 / total) as f32;
+    out.clear();
+    out.reserve(x0.len());
+    out.extend(x0.iter().map(|&v| 0.0 + s0 * v));
+    weighted_fold(out, &items[1..], total);
 }
 
 /// Sum of the weights in f64 — the denominator [`weighted_mean`] and
@@ -110,30 +138,78 @@ pub fn mean(items: &[&[f32]]) -> ParamVec {
     weighted_mean(&weighted)
 }
 
-/// Shared scaffold of the coordinate-wise order-statistic reducers:
-/// gather column `j` across all vectors into a scratch buffer, sort it
-/// with `total_cmp` (total order ⇒ the result is independent of input
-/// order), and reduce the sorted column to one value.
-fn columnwise_sorted(
+/// Shared scaffold of the coordinate-wise order-statistic reducers,
+/// blocked and optionally parallel. Coordinates are gathered a
+/// [`COL_BLOCK`]-wide slab at a time (each client vector is read in
+/// short contiguous runs instead of one strided element per column),
+/// each column is sorted with `total_cmp` (a total order ⇒ the sorted
+/// column is independent of gather order), and reduced to one value.
+/// Block-aligned coordinate ranges are split across `workers` threads;
+/// per-coordinate results are independent, so neither blocking nor
+/// threading can move a bit relative to [`reference`]'s flat loop.
+fn columnwise_sorted_into(
+    out: &mut ParamVec,
     items: &[&[f32]],
     what: &str,
-    mut reduce: impl FnMut(&[f32]) -> f32,
-) -> ParamVec {
+    workers: usize,
+    reduce: impl Fn(&[f32]) -> f32 + Sync,
+) {
     assert!(!items.is_empty(), "{what} of nothing");
     let dim = items[0].len();
     for x in items {
         assert_eq!(x.len(), dim, "{what}: length mismatch");
     }
-    let mut col = vec![0.0f32; items.len()];
-    let mut out = vec![0.0f32; dim];
-    for (j, o) in out.iter_mut().enumerate() {
-        for (slot, x) in col.iter_mut().zip(items) {
-            *slot = x[j];
-        }
-        col.sort_unstable_by(f32::total_cmp);
-        *o = reduce(&col);
+    out.clear();
+    out.resize(dim, 0.0);
+    let workers = workers.max(1).min(dim.div_ceil(COL_BLOCK).max(1));
+    if workers <= 1 {
+        sorted_block_range(items, 0, out, &reduce);
+        return;
     }
-    out
+    let per = dim.div_ceil(COL_BLOCK).div_ceil(workers) * COL_BLOCK;
+    std::thread::scope(|s| {
+        for (ti, chunk) in out.chunks_mut(per).enumerate() {
+            let reduce = &reduce;
+            s.spawn(move || sorted_block_range(items, ti * per, chunk, reduce));
+        }
+    });
+}
+
+/// One worker's share of [`columnwise_sorted_into`]: columns
+/// `[start, start + out.len())`, gathered block-by-block into an
+/// m×[`COL_BLOCK`] slab, sorted and reduced per column.
+fn sorted_block_range(
+    items: &[&[f32]],
+    start: usize,
+    out: &mut [f32],
+    reduce: &(impl Fn(&[f32]) -> f32 + Sync),
+) {
+    let m = items.len();
+    let mut slab = vec![0.0f32; m * COL_BLOCK.min(out.len().max(1))];
+    for (bi, ob) in out.chunks_mut(COL_BLOCK).enumerate() {
+        let c0 = start + bi * COL_BLOCK;
+        for (r, x) in items.iter().enumerate() {
+            for (c, v) in x[c0..c0 + ob.len()].iter().enumerate() {
+                slab[c * m + r] = *v;
+            }
+        }
+        for (c, o) in ob.iter_mut().enumerate() {
+            let col = &mut slab[c * m..(c + 1) * m];
+            col.sort_unstable_by(f32::total_cmp);
+            *o = reduce(col);
+        }
+    }
+}
+
+/// The trim count `t` shared by [`trimmed_mean`] and its reference
+/// twin: `min(⌊β·m⌋, ⌈m/2⌉-1)`, clamped so at least one value per
+/// coordinate survives however small the cohort gets.
+fn trim_count(m: usize, trim_frac: f64) -> usize {
+    assert!(
+        (0.0..0.5).contains(&trim_frac),
+        "trimmed_mean: trim fraction must be in [0, 0.5), got {trim_frac}"
+    );
+    ((m as f64 * trim_frac) as usize).min(m.saturating_sub(1) / 2)
 }
 
 /// Coordinate-wise β-trimmed mean over client vectors (unweighted).
@@ -149,16 +225,20 @@ fn columnwise_sorted(
 ///
 /// Panics if `items` is empty, lengths mismatch, or `β ∉ [0, 0.5)`.
 pub fn trimmed_mean(items: &[&[f32]], trim_frac: f64) -> ParamVec {
-    assert!(
-        (0.0..0.5).contains(&trim_frac),
-        "trimmed_mean: trim fraction must be in [0, 0.5), got {trim_frac}"
-    );
+    let mut out = Vec::with_capacity(items.first().map_or(0, |x| x.len()));
+    trimmed_mean_into(&mut out, items, trim_frac, 1);
+    out
+}
+
+/// [`trimmed_mean`] into a caller-owned buffer, fanned out across
+/// `workers` threads (1 = serial). Bit-identical at every worker count.
+pub fn trimmed_mean_into(out: &mut ParamVec, items: &[&[f32]], trim_frac: f64, workers: usize) {
     let m = items.len();
-    let t = ((m as f64 * trim_frac) as usize).min(m.saturating_sub(1) / 2);
-    columnwise_sorted(items, "trimmed_mean", |col| {
+    let t = trim_count(m, trim_frac);
+    columnwise_sorted_into(out, items, "trimmed_mean", workers, |col| {
         let kept = &col[t..m - t];
         (kept.iter().map(|&v| v as f64).sum::<f64>() / kept.len() as f64) as f32
-    })
+    });
 }
 
 /// Coordinate-wise median over client vectors (unweighted): the maximal
@@ -167,14 +247,89 @@ pub fn trimmed_mean(items: &[&[f32]], trim_frac: f64) -> ParamVec {
 ///
 /// Panics if `items` is empty or lengths mismatch.
 pub fn median(items: &[&[f32]]) -> ParamVec {
+    let mut out = Vec::with_capacity(items.first().map_or(0, |x| x.len()));
+    median_into(&mut out, items, 1);
+    out
+}
+
+/// [`median`] into a caller-owned buffer, fanned out across `workers`
+/// threads (1 = serial). Bit-identical at every worker count.
+pub fn median_into(out: &mut ParamVec, items: &[&[f32]], workers: usize) {
     let m = items.len();
-    columnwise_sorted(items, "median", |col| {
+    columnwise_sorted_into(out, items, "median", workers, |col| {
         if m % 2 == 1 {
             col[m / 2]
         } else {
             ((col[m / 2 - 1] as f64 + col[m / 2] as f64) / 2.0) as f32
         }
-    })
+    });
+}
+
+/// Unfused, unblocked reference kernels — the pre-fusion implementations
+/// kept verbatim as the "before" side of the bit-identity twin tests
+/// (`rust/tests/params_fused.rs`) and the paired `fedavg bench` cases
+/// that record the trajectory (DESIGN.md §14). Never called on a hot
+/// path.
+pub mod reference {
+    use super::{weight_total, weighted_fold, ParamVec};
+
+    /// Two-pass weighted mean: zero-fill `out`, then fold every item —
+    /// the walk [`super::weighted_mean`] fuses into one traversal.
+    pub fn weighted_mean(items: &[(f32, &[f32])]) -> ParamVec {
+        assert!(!items.is_empty(), "weighted_mean of nothing");
+        let dim = items[0].1.len();
+        let total: f64 = weight_total(items);
+        assert!(total > 0.0, "weighted_mean: non-positive total weight");
+        let mut out = vec![0.0f32; dim];
+        weighted_fold(&mut out, items, total);
+        out
+    }
+
+    /// Flat per-coordinate gather/sort/reduce: one strided pass over the
+    /// whole m×d transpose per coordinate, no blocking, no threading.
+    fn columnwise_sorted(
+        items: &[&[f32]],
+        what: &str,
+        mut reduce: impl FnMut(&[f32]) -> f32,
+    ) -> ParamVec {
+        assert!(!items.is_empty(), "{what} of nothing");
+        let dim = items[0].len();
+        for x in items {
+            assert_eq!(x.len(), dim, "{what}: length mismatch");
+        }
+        let mut col = vec![0.0f32; items.len()];
+        let mut out = vec![0.0f32; dim];
+        for (j, o) in out.iter_mut().enumerate() {
+            for (slot, x) in col.iter_mut().zip(items) {
+                *slot = x[j];
+            }
+            col.sort_unstable_by(f32::total_cmp);
+            *o = reduce(&col);
+        }
+        out
+    }
+
+    /// Unblocked twin of [`super::trimmed_mean`].
+    pub fn trimmed_mean(items: &[&[f32]], trim_frac: f64) -> ParamVec {
+        let m = items.len();
+        let t = super::trim_count(m, trim_frac);
+        columnwise_sorted(items, "trimmed_mean", |col| {
+            let kept = &col[t..m - t];
+            (kept.iter().map(|&v| v as f64).sum::<f64>() / kept.len() as f64) as f32
+        })
+    }
+
+    /// Unblocked twin of [`super::median`].
+    pub fn median(items: &[&[f32]]) -> ParamVec {
+        let m = items.len();
+        columnwise_sorted(items, "median", |col| {
+            if m % 2 == 1 {
+                col[m / 2]
+            } else {
+                ((col[m / 2 - 1] as f64 + col[m / 2] as f64) / 2.0) as f32
+            }
+        })
+    }
 }
 
 #[cfg(test)]
@@ -205,6 +360,44 @@ mod tests {
         let a = vec![1.0; 3];
         let b = vec![1.0; 4];
         weighted_mean(&[(1.0, &a[..]), (1.0, &b[..])]);
+    }
+
+    #[test]
+    fn fused_mean_matches_reference_bitwise() {
+        // includes ±0.0 inputs: the fused first pass must keep the
+        // reference's `0.0 + s·x` op so `-0.0` normalises to `+0.0`
+        for dim in [1usize, 7, 8, 257] {
+            let vecs: Vec<Vec<f32>> = (0..5)
+                .map(|i| {
+                    (0..dim)
+                        .map(|j| match (i + j) % 5 {
+                            0 => 0.0,
+                            1 => -0.0,
+                            k => (i * 13 + j * 7 + k) as f32 * 0.01 - 0.3,
+                        })
+                        .collect()
+                })
+                .collect();
+            let items: Vec<(f32, &[f32])> =
+                vecs.iter().enumerate().map(|(i, v)| ((i + 1) as f32, v.as_slice())).collect();
+            let fused = weighted_mean(&items);
+            let unfused = reference::weighted_mean(&items);
+            let fb: Vec<u32> = fused.iter().map(|v| v.to_bits()).collect();
+            let ub: Vec<u32> = unfused.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(fb, ub, "fused weighted_mean diverged at dim {dim}");
+        }
+    }
+
+    #[test]
+    fn weighted_mean_into_reuses_buffer() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![5.0f32, 6.0, 7.0];
+        let mut out = vec![9.0f32; 40]; // stale, larger than needed
+        weighted_mean_into(&mut out, &[(1.0, &a[..]), (3.0, &b[..])]);
+        assert_eq!(out, vec![4.0, 5.0, 6.0]);
+        weighted_mean_into(&mut out, &[(2.0, &b[..])]);
+        assert_eq!(out.len(), 3);
+        assert!((out[0] - 5.0).abs() < 1e-6);
     }
 
     #[test]
@@ -298,6 +491,30 @@ mod tests {
         let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
         assert_eq!(median(&refs), vec![2.0]); // odd: middle, outlier gone
         assert_eq!(median(&refs[..2]), vec![1.5]); // even: mean of middles
+    }
+
+    #[test]
+    fn blocked_order_stats_match_reference_across_workers() {
+        // dims straddle the block width; workers straddle the block count
+        for dim in [1usize, 63, 64, 65, 200] {
+            let vs: Vec<Vec<f32>> = (0..7)
+                .map(|i| (0..dim).map(|j| ((i * 37 + j * 11) % 101) as f32 * 0.07 - 3.0).collect())
+                .collect();
+            let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+            let tm_ref = reference::trimmed_mean(&refs, 0.2);
+            let md_ref = reference::median(&refs);
+            for workers in [1usize, 2, 3, 8] {
+                let mut tm = Vec::new();
+                let mut md = Vec::new();
+                trimmed_mean_into(&mut tm, &refs, 0.2, workers);
+                median_into(&mut md, &refs, workers);
+                let eq = |a: &[f32], b: &[f32]| {
+                    a.iter().map(|v| v.to_bits()).eq(b.iter().map(|v| v.to_bits()))
+                };
+                assert!(eq(&tm, &tm_ref), "trimmed diverged dim={dim} workers={workers}");
+                assert!(eq(&md, &md_ref), "median diverged dim={dim} workers={workers}");
+            }
+        }
     }
 
     #[test]

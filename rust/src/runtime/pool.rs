@@ -30,6 +30,13 @@ pub struct WorkerPool<J: Send + 'static, O: Send + 'static> {
 impl<J: Send + 'static, O: Send + 'static> WorkerPool<J, O> {
     /// Spawn `workers` threads. `factory(worker_id)` builds the local
     /// state; `run(&mut state, job)` handles one job.
+    ///
+    /// Construction is a readiness barrier: every thread runs its
+    /// factory and acks over a channel before `new` returns, so a
+    /// factory failure surfaces here as the *real* error instead of an
+    /// opaque "workers gone" on the first submit — which also lets
+    /// callers drop their own validate-by-loading probes (the
+    /// `ParallelExec` double-`Engine::load` this replaced).
     pub fn new<W, F, R>(workers: usize, factory: F, run: R) -> Result<Self>
     where
         F: Fn(usize) -> Result<W> + Send + Sync + Clone + 'static,
@@ -39,20 +46,26 @@ impl<J: Send + 'static, O: Send + 'static> WorkerPool<J, O> {
         let (job_tx, job_rx) = mpsc::channel::<J>();
         let job_rx = std::sync::Arc::new(std::sync::Mutex::new(job_rx));
         let (out_tx, out_rx) = mpsc::channel::<O>();
+        let (ack_tx, ack_rx) = mpsc::channel::<std::result::Result<(), String>>();
         let mut handles = Vec::new();
         for id in 0..workers {
             let job_rx = job_rx.clone();
             let out_tx = out_tx.clone();
+            let ack_tx = ack_tx.clone();
             let factory = factory.clone();
             let run = run.clone();
             handles.push(std::thread::spawn(move || {
                 let mut state = match factory(id) {
-                    Ok(s) => s,
+                    Ok(s) => {
+                        let _ = ack_tx.send(Ok(()));
+                        s
+                    }
                     Err(e) => {
-                        eprintln!("worker {id}: factory failed: {e:#}");
+                        let _ = ack_tx.send(Err(format!("{e:#}")));
                         return;
                     }
                 };
+                drop(ack_tx);
                 loop {
                     let job = match job_rx.lock().expect("pool queue poisoned").recv() {
                         Ok(j) => j,
@@ -63,6 +76,19 @@ impl<J: Send + 'static, O: Send + 'static> WorkerPool<J, O> {
                     }
                 }
             }));
+        }
+        drop(ack_tx);
+        for _ in 0..workers {
+            let ack = ack_rx
+                .recv()
+                .map_err(|_| anyhow!("pool worker exited before reporting readiness"));
+            if let Err(e) = ack.and_then(|r| r.map_err(|e| anyhow!("pool worker factory failed: {e}"))) {
+                drop(job_tx); // close the queue so ready workers shut down
+                for h in handles {
+                    let _ = h.join();
+                }
+                return Err(e);
+            }
         }
         Ok(Self {
             job_tx: Some(job_tx),
@@ -92,12 +118,26 @@ impl<J: Send + 'static, O: Send + 'static> WorkerPool<J, O> {
 
     /// Submit all jobs, then collect exactly as many results.
     pub fn map(&self, jobs: impl IntoIterator<Item = J>) -> Result<Vec<O>> {
+        let mut out = Vec::new();
+        self.map_into(jobs, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Self::map`] into a caller-owned buffer (cleared, then filled) —
+    /// the per-round scratch path (DESIGN.md §14): the buffer's spine is
+    /// reused round to round instead of reallocated.
+    pub fn map_into(&self, jobs: impl IntoIterator<Item = J>, out: &mut Vec<O>) -> Result<()> {
+        out.clear();
         let mut n = 0usize;
         for j in jobs {
             self.submit(j)?;
             n += 1;
         }
-        (0..n).map(|_| self.recv()).collect()
+        out.reserve(n);
+        for _ in 0..n {
+            out.push(self.recv()?);
+        }
+        Ok(())
     }
 }
 
@@ -134,6 +174,36 @@ mod tests {
             WorkerPool::new(1, |_| Ok(()), |_, j| j + 1).unwrap();
         let out = pool.map([1, 2, 3]).unwrap();
         assert_eq!(out, vec![2, 3, 4]); // single worker preserves order
+    }
+
+    #[test]
+    fn pool_factory_failure_surfaces_real_error() {
+        // one bad worker out of three: new() must fail with the factory's
+        // own message, and the ready workers must shut down cleanly
+        let r: Result<WorkerPool<u32, u32>> = WorkerPool::new(
+            3,
+            |id| {
+                if id == 1 {
+                    Err(anyhow!("boom on worker 1"))
+                } else {
+                    Ok(())
+                }
+            },
+            |_, j| j,
+        );
+        let err = format!("{:#}", r.err().expect("factory failure must propagate"));
+        assert!(err.contains("boom on worker 1"), "got: {err}");
+    }
+
+    #[test]
+    fn pool_map_into_reuses_buffer() {
+        let pool: WorkerPool<u32, u32> =
+            WorkerPool::new(1, |_| Ok(()), |_, j| j * 10).unwrap();
+        let mut out = vec![7u32; 32]; // stale contents must be cleared
+        pool.map_into([1, 2, 3], &mut out).unwrap();
+        assert_eq!(out, vec![10, 20, 30]);
+        pool.map_into([4], &mut out).unwrap();
+        assert_eq!(out, vec![40]);
     }
 
     #[test]

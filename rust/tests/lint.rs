@@ -144,6 +144,36 @@ fn float_fold_fires_outside_params() {
     assert!(run("rust/src/federated/aggregate/mod.rs", ints).is_empty());
 }
 
+// ------------------------------------------------------------- hot-alloc
+
+#[test]
+fn hot_alloc_fires_in_audited_hot_paths_only() {
+    let bad = "fn combine(&mut self) {\n    let mut acc = Vec::new();\n    let snap = theta.to_vec();\n    let d = delta.clone();\n}\n";
+    assert_eq!(
+        run("rust/src/comms/transport.rs", bad),
+        vec![
+            (2, "hot-alloc".to_string()),
+            (3, "hot-alloc".to_string()),
+            (4, "hot-alloc".to_string()),
+        ]
+    );
+    // the same code outside the audited files: silent
+    assert!(run("rust/src/federated/server.rs", bad).is_empty());
+    assert!(run("rust/src/comms/wire.rs", bad).is_empty());
+    // the scratch-reuse fix: sized setup, newtype ctors, reuse via clear
+    let good = "fn combine(&mut self) {\n    let mut acc = Vec::with_capacity(n);\n    self.scratch.clear();\n    let p = ParamVec::new();\n    let it = xs.iter().cloned();\n}\n";
+    assert!(run("rust/src/comms/transport.rs", good).is_empty());
+    // a justified ownership boundary: silent
+    let hatched = "fn publish(&mut self) {\n    // lint:allow(hot-alloc): retained versions must outlive the caller's buffer\n    self.versions.push_back((v, theta.to_vec()));\n}\n";
+    assert!(run("rust/src/comms/transport.rs", hatched).is_empty());
+}
+
+#[test]
+fn hot_alloc_ignores_test_regions() {
+    let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { let v = xs.to_vec(); }\n}\n";
+    assert!(run("rust/src/params/mod.rs", in_test).is_empty());
+}
+
 // -------------------------------------------------------------- bad-allow
 
 #[test]

@@ -1,0 +1,278 @@
+//! Bit-identity twins for the hot-path program (DESIGN.md §14).
+//!
+//! Every fused, blocked, parallel, or scratch-reusing kernel this PR
+//! introduced has a verbatim "before" implementation still in the tree
+//! (`params::reference`, the owned decode paths, `Aggregator::combine`).
+//! These tests pin the optimization contract: the fast path produces
+//! the *same bits* as the path it replaced — not approximately, not
+//! within epsilon — across dimensions, worker counts, stale scratch
+//! contents, and codec shapes. The artifact-gated finale runs the real
+//! server at `--workers ∈ {1, 3}` and diffs curve.csv byte-for-byte.
+
+use fedavg::comms::wire::{
+    decode_frame, decode_frame_into, write_dense_frame_into, Frame, Pipeline, Repr,
+};
+use fedavg::data::rng::Rng;
+use fedavg::federated::aggregate::{AggConfig, Aggregator as _};
+use fedavg::params::{self, reference, ParamVec};
+
+fn gauss(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.gauss_f32()).collect()
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .map(|v| v.to_bits())
+            .eq(b.iter().map(|v| v.to_bits()))
+}
+
+/// Client vectors with adversarial float content: negative zeros, huge
+/// magnitude spread, denormal-ish tails — anything an op reorder would
+/// betray.
+fn cohort(m: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..m)
+        .map(|i| {
+            let mut v = gauss(dim, seed + i as u64);
+            for (j, x) in v.iter_mut().enumerate() {
+                match (i + j) % 7 {
+                    0 => *x = -0.0,
+                    1 => *x *= 1e8,
+                    2 => *x *= 1e-8,
+                    _ => {}
+                }
+            }
+            v
+        })
+        .collect()
+}
+
+// ------------------------------------------------ fused weighted mean
+
+#[test]
+fn fused_weighted_mean_matches_reference_bitwise() {
+    let mut out = vec![777.0f32; 3]; // stale scratch must not leak through
+    for dim in [1usize, 7, 64, 1000, 4097] {
+        let vs = cohort(9, dim, 41);
+        let items: Vec<(f32, &[f32])> = vs
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (((i % 4) + 1) as f32 * 157.0, v.as_slice()))
+            .collect();
+        let slow = reference::weighted_mean(&items);
+        let fast = params::weighted_mean(&items);
+        assert!(bits_eq(&slow, &fast), "fused mean moved a bit at dim={dim}");
+        params::weighted_mean_into(&mut out, &items);
+        assert!(bits_eq(&slow, &out), "reused buffer moved a bit at dim={dim}");
+    }
+}
+
+#[test]
+fn fused_weighted_mean_normalizes_negative_zero() {
+    // the reference zero-fills then accumulates, so -0.0 inputs land as
+    // +0.0 (0.0 + s·-0.0); the fused first pass must do the same
+    let a = vec![-0.0f32, -0.0, 1.0];
+    let b = vec![-0.0f32, 0.0, 2.0];
+    let items: Vec<(f32, &[f32])> = vec![(1.0, &a), (3.0, &b)];
+    let slow = reference::weighted_mean(&items);
+    let fast = params::weighted_mean(&items);
+    assert!(bits_eq(&slow, &fast));
+    assert_eq!(fast[0].to_bits(), 0.0f32.to_bits(), "-0.0 survived the fold");
+}
+
+// ------------------------------------- blocked/parallel order statistics
+
+#[test]
+fn parallel_order_stats_match_reference_at_every_worker_count() {
+    let mut tm = ParamVec::new();
+    let mut md = ParamVec::new();
+    for (m, dim) in [(3usize, 63usize), (8, 64), (9, 4097), (20, 10_000)] {
+        let vs = cohort(m, dim, 97);
+        let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+        let tm_ref = reference::trimmed_mean(&refs, 0.2);
+        let md_ref = reference::median(&refs);
+        for workers in [1usize, 2, 3, 8] {
+            params::trimmed_mean_into(&mut tm, &refs, 0.2, workers);
+            params::median_into(&mut md, &refs, workers);
+            assert!(
+                bits_eq(&tm, &tm_ref),
+                "trimmed_mean diverged m={m} dim={dim} workers={workers}"
+            );
+            assert!(
+                bits_eq(&md, &md_ref),
+                "median diverged m={m} dim={dim} workers={workers}"
+            );
+        }
+    }
+}
+
+// --------------------------------------------- zero-copy decode paths
+
+const PIPELINES: &[&str] = &["dense", "q8", "topk:0.02", "topk:0.02|q8", "delta", "delta|q8"];
+
+#[test]
+fn borrowed_frame_decode_matches_owned_bitwise() {
+    let dim = 5000;
+    let base = gauss(dim, 5);
+    let x = gauss(dim, 6);
+    for spec in PIPELINES {
+        let p = Pipeline::parse(spec).unwrap();
+        let mut rng = Rng::new(17);
+        let frame = p.encode(&x, Some((3, &base)), &mut rng).unwrap();
+        let dec_base = p.has_delta().then_some(base.as_slice());
+        let owned = frame.decode(dec_base).unwrap();
+        // borrowed view into the same bytes, decoded into stale scratch
+        let mut buf = vec![-3.5f32; 11];
+        frame.view().decode_into(dec_base, &mut buf).unwrap();
+        assert!(bits_eq(&owned, &buf), "{spec}: FrameRef decode moved a bit");
+        // raw-bytes entry points agree too
+        let raw = decode_frame(&frame.bytes, dec_base).unwrap();
+        let mut raw_buf = vec![9.0f32; 2];
+        decode_frame_into(&frame.bytes, dec_base, &mut raw_buf).unwrap();
+        assert!(bits_eq(&owned, &raw), "{spec}: decode_frame diverged");
+        assert!(bits_eq(&owned, &raw_buf), "{spec}: decode_frame_into diverged");
+    }
+}
+
+#[test]
+fn repr_decode_into_matches_decode() {
+    // the seam Transport::encode_up fuses: the lossy uplink decodes the
+    // in-flight Repr into endpoint scratch instead of allocating
+    let dim = 4097;
+    let x = gauss(dim, 23);
+    for spec in ["q8", "topk:0.02", "topk:0.02|q8"] {
+        let p = Pipeline::parse(spec).unwrap();
+        let mut rng = Rng::new(29);
+        let repr = p.run(&x, None, &mut rng).unwrap();
+        let owned = repr.decode(None).unwrap();
+        let mut buf = vec![f32::NAN; 7];
+        repr.decode_into(None, &mut buf).unwrap();
+        assert!(bits_eq(&owned, &buf), "{spec}: Repr::decode_into moved a bit");
+    }
+}
+
+#[test]
+fn write_dense_frame_into_matches_to_frame_tagged() {
+    // the sharded cascade's reused frame vs the owned construction it
+    // replaced — byte-identical, so tier byte accounting is unchanged
+    let mut frame = Frame { bytes: Vec::new() };
+    for dim in [1usize, 64, 5000] {
+        let x = gauss(dim, 31);
+        let owned = Repr::dense(&x).to_frame_tagged(1);
+        write_dense_frame_into(&x, 1, &mut frame);
+        assert_eq!(owned.bytes, frame.bytes, "dim={dim}: reused frame bytes differ");
+    }
+    // shrinking reuse: a smaller write after a larger one must not keep
+    // stale tail bytes
+    let x = gauss(3, 37);
+    let owned = Repr::dense(&x).to_frame_tagged(1);
+    write_dense_frame_into(&x, 1, &mut frame);
+    assert_eq!(owned.bytes, frame.bytes, "shrinking reuse left stale bytes");
+}
+
+// ------------------------------------------------ aggregator scratch
+
+#[test]
+fn combine_into_matches_combine_for_every_registry_rule() {
+    let vs = cohort(9, 5000, 67);
+    let deltas: Vec<(f32, &[f32])> = vs
+        .iter()
+        .enumerate()
+        .map(|(i, v)| (((i % 3) + 1) as f32 * 211.0, v.as_slice()))
+        .collect();
+    for spec in ["fedavg", "fedavgm", "fedadam", "trimmed:0.2", "median"] {
+        let cfg = AggConfig {
+            spec: spec.to_string(),
+            ..Default::default()
+        };
+        let owned = cfg.build().unwrap().combine(&deltas).unwrap();
+        for workers in [1usize, 3] {
+            let mut agg = cfg.build().unwrap();
+            agg.set_workers(workers);
+            let mut out = vec![42.0f32; 13]; // stale scratch
+            agg.combine_into(&deltas, &mut out).unwrap();
+            assert!(
+                bits_eq(&owned, &out),
+                "{spec}: combine_into diverged at workers={workers}"
+            );
+        }
+    }
+}
+
+// --------------------------------------------- artifact-gated (training)
+
+use fedavg::config::{BatchSize, FedConfig, Partition};
+use fedavg::coordinator::{FleetConfig, FleetProfile};
+use fedavg::federated::{self, ServerOptions};
+use fedavg::runtime::Engine;
+use fedavg::telemetry::RunWriter;
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine"))
+}
+
+/// The acceptance bar for the whole program: a fleet run through the
+/// parallel executor, the fused combine, and the transport scratch at
+/// `--workers 3` writes byte-for-byte the curve.csv of the sequential
+/// run.
+#[test]
+fn worker_count_never_moves_a_curve_byte() {
+    let Some(eng) = engine() else { return };
+    let fed = fedavg::exper::mnist_fed(0.05, Partition::Iid, 73);
+    let cfg = FedConfig {
+        model: "mnist_2nn".into(),
+        c: 0.5,
+        e: 1,
+        b: BatchSize::Fixed(10),
+        lr: 0.1,
+        rounds: 3,
+        eval_every: 1,
+        seed: 73,
+        ..Default::default()
+    };
+    let root = std::path::PathBuf::from(format!(
+        "target/test-runs/params-fused-{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&root).ok();
+
+    let run_at = |workers: usize, name: &str| {
+        let w = RunWriter::create(&root, name).unwrap();
+        let dir = w.dir().to_path_buf();
+        let opts = ServerOptions {
+            eval_cap: Some(200),
+            telemetry: Some(w),
+            agg: AggConfig {
+                spec: "trimmed:0.1".into(),
+                ..Default::default()
+            },
+            fleet: FleetConfig {
+                profile: FleetProfile::Mobile,
+                overselect: 0.3,
+                deadline_s: Some(600.0),
+                workers,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let res = federated::run(&eng, &fed, &cfg, opts).unwrap();
+        (res, std::fs::read(dir.join("curve.csv")).unwrap())
+    };
+    let (seq, seq_curve) = run_at(1, "w1");
+    let (par, par_curve) = run_at(3, "w3");
+    assert_eq!(
+        seq.final_theta, par.final_theta,
+        "--workers 3 moved final θ vs sequential"
+    );
+    assert!(
+        !seq_curve.is_empty() && seq_curve == par_curve,
+        "--workers 3 moved a curve.csv byte vs sequential"
+    );
+    std::fs::remove_dir_all(&root).ok();
+}
